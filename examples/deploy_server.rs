@@ -1,0 +1,156 @@
+//! Deployment server — the coordinator as a long-running service.
+//!
+//! A minimal line-oriented TCP protocol (std-only; the build is fully
+//! offline): each request line is
+//!
+//! ```text
+//! DEPLOY <workload> <soc> <strategy>            e.g. DEPLOY vit-base-stage siracusa ftl
+//! ```
+//!
+//! and the response is one JSON line with the deploy report. Worker
+//! threads serve requests concurrently; planning is CPU-bound, so a
+//! thread per connection is the right concurrency model here.
+//!
+//! ```text
+//! cargo run --release --example deploy_server &          # listens on 127.0.0.1:7117
+//! printf 'DEPLOY vit-base-stage siracusa ftl\n' | nc 127.0.0.1 7117
+//! ```
+//!
+//! Pass `--self-test` to spin up the server, fire a batch of client
+//! requests against it, verify the responses, and exit — used as the
+//! runnable demo (and by the integration tests).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::{experiments, Deployer};
+use ftl::tiling::Strategy;
+use ftl::util::json::Json;
+
+fn handle_request(line: &str, served: &AtomicU64) -> Json {
+    match serve(line) {
+        Ok(j) => {
+            served.fetch_add(1, Ordering::Relaxed);
+            j
+        }
+        Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+    }
+}
+
+fn serve(line: &str) -> Result<Json> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        ["DEPLOY", workload, soc, strategy] => {
+            let strategy =
+                Strategy::parse(strategy).ok_or_else(|| anyhow!("bad strategy '{strategy}'"))?;
+            let graph = match *workload {
+                "vit-base-stage" => experiments::vit_mlp_stage(197, 768, 3072),
+                "vit-tiny-stage" => experiments::vit_mlp_stage(197, 192, 768),
+                other => ftl::ir::builder::vit_mlp_preset(other)
+                    .ok_or_else(|| anyhow!("unknown workload '{other}'"))?,
+            };
+            let cfg = DeployConfig::preset(soc, strategy)?;
+            let soc_cfg = cfg.soc.clone();
+            let (_, report) = Deployer::new(graph, cfg).with_workload_name(*workload).deploy()?;
+            Ok(report.to_json(&soc_cfg))
+        }
+        ["PING"] => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
+        _ => bail!("bad request: '{line}' (expected: DEPLOY <workload> <soc> <strategy>)"),
+    }
+}
+
+fn client(conn: TcpStream, served: Arc<AtomicU64>) {
+    let peer = conn.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let reader = BufReader::new(conn.try_clone().expect("clone stream"));
+    let mut writer = conn;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = handle_request(line.trim(), &served);
+        if writeln!(writer, "{}", response.to_string()).is_err() {
+            break;
+        }
+    }
+    eprintln!("[server] {peer} disconnected");
+}
+
+fn run_server(addr: &str) -> Result<(TcpListener, Arc<AtomicU64>)> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let served = Arc::new(AtomicU64::new(0));
+    Ok((listener, served))
+}
+
+fn main() -> Result<()> {
+    let self_test = std::env::args().any(|a| a == "--self-test");
+    let addr = "127.0.0.1:7117";
+    let (listener, served) = run_server(addr)?;
+    println!("[server] listening on {addr} (protocol: DEPLOY <workload> <soc> <strategy>)");
+
+    if self_test {
+        let served2 = served.clone();
+        let local = listener.local_addr()?;
+        std::thread::spawn(move || {
+            for conn in listener.incoming().flatten() {
+                let served = served2.clone();
+                std::thread::spawn(move || client(conn, served));
+            }
+        });
+        // Fire a concurrent batch of requests.
+        let requests = [
+            "DEPLOY vit-base-stage siracusa ftl",
+            "DEPLOY vit-base-stage siracusa baseline",
+            "DEPLOY vit-base-stage cluster-only ftl",
+            "DEPLOY vit-tiny-stage cluster-only baseline",
+            "PING",
+        ];
+        let handles: Vec<_> = requests
+            .iter()
+            .map(|req| {
+                let req = req.to_string();
+                std::thread::spawn(move || -> Result<String> {
+                    let mut conn = TcpStream::connect(local)?;
+                    writeln!(conn, "{req}")?;
+                    let mut line = String::new();
+                    BufReader::new(conn).read_line(&mut line)?;
+                    Ok(line)
+                })
+            })
+            .collect();
+        let mut ftl_cycles = 0i64;
+        let mut base_cycles = 0i64;
+        for (req, h) in requests.iter().zip(handles) {
+            let line = h.join().map_err(|_| anyhow!("client thread panicked"))??;
+            let v = ftl::util::json::parse(line.trim())?;
+            if v.get_opt("error").is_some() {
+                bail!("request '{req}' failed: {line}");
+            }
+            if let Some(sim) = v.get_opt("sim") {
+                let cycles = sim.get("total_cycles")?.as_usize()? as i64;
+                println!("[client] {req} -> {cycles} cycles");
+                if req.contains("siracusa ftl") {
+                    ftl_cycles = cycles;
+                } else if req.contains("siracusa baseline") {
+                    base_cycles = cycles;
+                }
+            } else {
+                println!("[client] {req} -> {}", line.trim());
+            }
+        }
+        assert!(ftl_cycles > 0 && base_cycles > ftl_cycles, "FTL must beat baseline over the wire too");
+        println!("[server] served {} requests; self-test OK", served.load(Ordering::Relaxed));
+        return Ok(());
+    }
+
+    for conn in listener.incoming().flatten() {
+        let served = served.clone();
+        std::thread::spawn(move || client(conn, served));
+    }
+    Ok(())
+}

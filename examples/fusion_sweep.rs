@@ -1,0 +1,72 @@
+//! Fusion-benefit sweep — where does FTL pay off, and by how much?
+//!
+//! Sweeps the MLP hidden dimension across the L2-overflow boundary (the
+//! paper's mechanism) and the fusion chain length on a deep MLP, printing
+//! runtime + DMA volume for baseline vs FTL on both SoC variants.
+//!
+//! ```text
+//! cargo run --release --example fusion_sweep
+//! ```
+
+use anyhow::Result;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::{experiments, Deployer};
+use ftl::ir::builder::deep_mlp;
+use ftl::ir::DType;
+use ftl::metrics::Table;
+use ftl::tiling::{FusionPolicy, Strategy};
+
+fn main() -> Result<()> {
+    // ---- Sweep 1: hidden dim across the L2 overflow boundary ------------
+    println!("== hidden-dim sweep (seq=197, d=768) — L2 overflow crossover ==\n");
+    let hs = [256, 512, 1024, 1536, 2048, 3072, 4096, 6144];
+    for soc in ["cluster-only", "siracusa"] {
+        println!("--- {soc} ---");
+        let mut t = Table::new(&["hidden", "intermediate KiB", "baseline cyc", "ftl cyc", "reduction"]);
+        for (h, base, ftl, red) in experiments::hidden_sweep(197, 768, &hs, soc)? {
+            t.row(&[
+                h.to_string(),
+                format!("{:.0}", (197 * h) as f64 / 1024.0),
+                base.to_string(),
+                ftl.to_string(),
+                format!("{:.1}%", -red),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+
+    // ---- Sweep 2: fusion chain length on a deep MLP ----------------------
+    println!("== fusion chain-length sweep (deep MLP, seq=128, width=1024) ==\n");
+    let mut t = Table::new(&["max_len", "groups", "cycles", "dma bytes"]);
+    for max_len in [1, 2, 4, 8] {
+        let graph = deep_mlp(128, 1024, 4, DType::Int8);
+        let cfg = DeployConfig::preset("siracusa", Strategy::Ftl)?;
+        let dep = Deployer::new(graph, cfg)
+            .with_policy(FusionPolicy { max_len, elementwise_only: true })
+            .with_workload_name("deep-mlp");
+        let (plan, report) = dep.deploy()?;
+        t.row(&[
+            max_len.to_string(),
+            plan.groups.len().to_string(),
+            report.sim.total_cycles.to_string(),
+            report.sim.dma.total_bytes().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- Sweep 3: aggressive (non-elementwise) fusion fallback ----------
+    println!("== aggressive fusion (GEMM->GEMM attempted, solver falls back) ==\n");
+    let graph = ftl::ir::builder::vit_mlp(197, 768, 3072, DType::Int8);
+    let cfg = DeployConfig::preset("siracusa", Strategy::Ftl)?;
+    let dep = Deployer::new(graph, cfg)
+        .with_policy(FusionPolicy { max_len: 8, elementwise_only: false })
+        .with_workload_name("vit-base-mlp-aggressive");
+    let (plan, report) = dep.deploy()?;
+    println!(
+        "requested 1 group of 3 nodes; solver split into {} groups (capacity-driven fallback)",
+        plan.groups.len()
+    );
+    println!("total: {} cycles, {} B DMA", report.sim.total_cycles, report.sim.dma.total_bytes());
+    Ok(())
+}

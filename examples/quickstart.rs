@@ -1,0 +1,54 @@
+//! Quickstart: deploy a small MLP with FTL in ~30 lines.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::Deployer;
+use ftl::ir::{ActKind, DType, GraphBuilder};
+use ftl::runtime::NativeBackend;
+use ftl::tiling::Strategy;
+
+fn main() -> Result<()> {
+    // 1. Describe the network (a small MLP stage: Linear -> GeLU).
+    let mut b = GraphBuilder::new(DType::Int8);
+    let x = b.input("x", &[64, 256]);
+    let fc = b.linear("fc", x, 1024, true);
+    let act = b.act("gelu", ActKind::Gelu, fc);
+    let graph = b.finish(act)?;
+
+    // 2. Pick a target SoC + strategy and deploy.
+    let config = DeployConfig::preset("siracusa", Strategy::Ftl)?;
+    let soc = config.soc.clone();
+    let deployer = Deployer::new(graph, config).with_workload_name("quickstart-mlp");
+    let (plan, report) = deployer.deploy()?;
+
+    // 3. Inspect the result.
+    println!("{}", report.render(&soc));
+    println!(
+        "fused into {} phase(s); peak L1 tile arena: {} B of {} B",
+        plan.groups.len(),
+        plan.solution.peak_l1(),
+        soc.mem.l1.capacity
+    );
+
+    // 4. Prove the tiled plan computes the same numbers as the un-tiled
+    //    network (pure-Rust backend; use `make run-e2e` for PJRT).
+    let worst = deployer.validate_numerics(NativeBackend, 7)?;
+    println!("numerics: max |tiled - oracle| = {worst:.2e}");
+
+    // 5. Compare against the layer-per-layer baseline.
+    let mut base_cfg = DeployConfig::preset("siracusa", Strategy::LayerPerLayer)?;
+    base_cfg.double_buffer = false;
+    let mut bld = GraphBuilder::new(DType::Int8);
+    let x = bld.input("x", &[64, 256]);
+    let fc = bld.linear("fc", x, 1024, true);
+    let act = bld.act("gelu", ActKind::Gelu, fc);
+    let base = Deployer::new(bld.finish(act)?, base_cfg).deploy()?.1;
+    let red = report.sim.runtime_reduction_vs(&base.sim);
+    println!("FTL vs baseline: {:.1}% runtime reduction", red);
+    Ok(())
+}

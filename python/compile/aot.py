@@ -1,0 +1,157 @@
+"""AOT compiler: lower the L2/L1 computations to HLO **text** artifacts.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out ../artifacts [--tiles ../artifacts/tiles.json]
+
+Two-pass build (see Makefile): the Rust planner first runs
+``ftl emit-tiles`` to export the exact (op, tile-shape) signatures its
+schedules will invoke; this module then AOT-compiles one executable per
+signature plus the whole-model oracles, and writes ``manifest.json``. The
+Rust runtime (`rust/src/runtime/pjrt.rs`) loads the manifest and executes
+the tiles via the PJRT C API — Python never runs at request time.
+
+HLO *text* (not ``HloModuleProto.serialize()``) is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import fused, gelu as gelu_k, gemm as gemm_k
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape):
+    """f32 ShapeDtypeStruct."""
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def lower_entry(kind, in_shapes):
+    """Build + lower the jitted function for one tile signature."""
+    specs = [spec(s) for s in in_shapes]
+    if kind == "gemm":
+        if len(in_shapes) == 3:
+            fn = lambda a, b, bias: (gemm_k.gemm(a, b, bias),)  # noqa: E731
+        else:
+            fn = lambda a, b: (gemm_k.gemm(a, b),)  # noqa: E731
+    elif kind == "gelu":
+        fn = lambda x: (gelu_k.gelu(x),)  # noqa: E731
+    elif kind == "relu":
+        fn = lambda x: (gelu_k.relu(x),)  # noqa: E731
+    elif kind == "add":
+        fn = lambda a, b: (gelu_k.add(a, b),)  # noqa: E731
+    elif kind == "gemm_gelu":
+        if len(in_shapes) == 3:
+            fn = lambda a, b, bias: (fused.gemm_gelu(a, b, bias),)  # noqa: E731
+        else:
+            fn = lambda a, b: (fused.gemm_gelu(a, b),)  # noqa: E731
+    else:
+        raise ValueError(f"unknown kind '{kind}'")
+    return jax.jit(fn).lower(*specs)
+
+
+def out_shape_of(lowered):
+    """Output shape of a lowered 1-tuple function."""
+    (out,) = lowered.out_info
+    return list(out.shape)
+
+
+def emit(out_dir: pathlib.Path, name: str, lowered, manifest: list):
+    """Write one artifact + record it in the manifest."""
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    (out_dir / fname).write_text(text)
+    in_shapes = [list(a.shape) for a in jax.tree_util.tree_leaves(lowered.in_avals)]
+    manifest.append(
+        {
+            "name": name,
+            "file": fname,
+            "in_shapes": in_shapes,
+            "out_shape": out_shape_of(lowered),
+        }
+    )
+    print(f"  {name}: {len(text)} chars, in={in_shapes}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--tiles", default=None, help="tiles.json from `ftl emit-tiles`")
+    ap.add_argument("--seq", type=int, default=197)
+    ap.add_argument("--dim", type=int, default=768)
+    ap.add_argument("--hidden", type=int, default=3072)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: list = []
+
+    # --- Tile executables (exact shapes the Rust schedules invoke) -------
+    fused_pairs = set()
+    if args.tiles:
+        tiles = json.loads(pathlib.Path(args.tiles).read_text())
+        wl = tiles.get("workload", {})
+        args.seq = wl.get("seq", args.seq)
+        args.dim = wl.get("dim", args.dim)
+        args.hidden = wl.get("hidden", args.hidden)
+        print(f"compiling {len(tiles['entries'])} tile executables")
+        for e in tiles["entries"]:
+            lowered = lower_entry(e["kind"], e["in_shapes"])
+            emit(out_dir, e["name"], lowered, manifest)
+            # For every biased GEMM tile also emit the fused GEMM+GeLU
+            # variant — the FTL kernel the fused schedule can call.
+            if e["kind"] == "gemm" and len(e["in_shapes"]) == 3:
+                m, k = e["in_shapes"][0]
+                n = e["in_shapes"][1][1]
+                fused_pairs.add((m, k, n))
+    for m, k, n in sorted(fused_pairs):
+        name = f"gemm_gelu_b_m{m}_k{k}_n{n}"
+        lowered = lower_entry("gemm_gelu", [[m, k], [k, n], [n]])
+        emit(out_dir, name, lowered, manifest)
+
+    # --- Whole-model oracles + stage variants (e2e example, benches) -----
+    s, d, h = args.seq, args.dim, args.hidden
+    xs, ws, bs = [s, d], [d, h], [h]
+    print(f"compiling whole-stage models ({s}x{d}->{h})")
+    emit(
+        out_dir,
+        f"stage_ref_{s}x{d}x{h}",
+        jax.jit(lambda x, w, b: (model.mlp_stage_ref(x, w, b),)).lower(spec(xs), spec(ws), spec(bs)),
+        manifest,
+    )
+    emit(
+        out_dir,
+        f"stage_baseline_{s}x{d}x{h}",
+        jax.jit(lambda x, w, b: (model.mlp_stage_baseline(x, w, b),)).lower(spec(xs), spec(ws), spec(bs)),
+        manifest,
+    )
+    emit(
+        out_dir,
+        f"stage_ftl_{s}x{d}x{h}",
+        jax.jit(lambda x, w, b: (model.mlp_stage_ftl(x, w, b),)).lower(spec(xs), spec(ws), spec(bs)),
+        manifest,
+    )
+
+    (out_dir / "manifest.json").write_text(json.dumps({"entries": manifest}, indent=2))
+    print(f"wrote {len(manifest)} artifacts + manifest.json to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: tiled GeLU.
+
+The standalone activation kernel of the *baseline* (layer-per-layer)
+deployment: it reads the materialised intermediate back from HBM (the
+paper's L3 round trip) block by block. Under FTL this kernel disappears
+into :mod:`.fused`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import SQRT_2_OVER_PI
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = 0.5 * x * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gelu(x, *, bm=128, bn=512):
+    """Tiled tanh-GeLU over a 2-D tensor."""
+    m, n = x.shape
+    bm, bn = min(bm, m), min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def relu(x, *, bm=128, bn=512):
+    """Tiled ReLU (used by the extension workloads)."""
+    m, n = x.shape
+    bm, bn = min(bm, m), min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _relu_kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def add(a, b, *, bm=128, bn=512):
+    """Tiled elementwise addition (residual connections)."""
+    m, n = a.shape
+    bm, bn = min(bm, m), min(bn, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _add_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

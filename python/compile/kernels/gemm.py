@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: VMEM-tiled GEMM (+bias).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tiles
+int8 GEMMs into the Siracusa L1 TCDM with explicit DMA; on TPU the same
+schedule is expressed with a Pallas ``BlockSpec`` grid — each grid step
+owns an ``(bm, K) × (K, bn)`` pair of VMEM-resident blocks, mirroring the
+FTL kernel-policy constraint that the reduction dimension K is *not*
+tiled (the paper's int8 requantisation needs the full accumulation; here
+it keeps the MXU pipeline saturated without a scratch accumulator).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that
+both pytest and the Rust runtime can run. Real-TPU performance is
+*estimated* from the VMEM footprint + MXU utilisation in EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _gemm_bias_kernel(a_ref, b_ref, bias_ref, o_ref):
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = acc + bias_ref[...][None, :]
+
+
+def _block(m, n, bm, bn):
+    """Clamp requested block sizes to the problem size."""
+    return min(bm, m), min(bn, n)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gemm(a, b, bias=None, *, bm=128, bn=128):
+    """Tiled ``a @ b (+ bias)`` as a Pallas kernel.
+
+    a: ``[M, K]``, b: ``[K, N]``, bias: ``[N]`` or None. Grid over
+    ``(M/bm, N/bn)``; K whole per block (FTL kernel-policy constraint).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    bm, bn = _block(m, n, bm, bn)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    a_spec = pl.BlockSpec((bm, k), lambda i, j: (i, 0))
+    b_spec = pl.BlockSpec((k, bn), lambda i, j: (0, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    if bias is None:
+        return pl.pallas_call(
+            _gemm_kernel,
+            grid=grid,
+            in_specs=[a_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )(a, b)
+    bias_spec = pl.BlockSpec((bn,), lambda i, j: (j,))
+    return pl.pallas_call(
+        _gemm_bias_kernel,
+        grid=grid,
+        in_specs=[a_spec, b_spec, bias_spec],
+        out_specs=o_spec,
+        out_shape=out_shape,
+        interpret=True,
+    )(a, b, bias)
+
+
+def vmem_bytes(m, k, n, bm, bn, elem=4, double_buffer=True):
+    """Estimated VMEM footprint of one grid step (the L1-capacity analogue
+    the FTL solver enforces; used by the §Perf block-size sweep)."""
+    bm, bn = _block(m, n, bm, bn)
+    tiles = bm * k + k * bn + bm * bn
+    factor = 2 if double_buffer else 1
+    return tiles * elem * factor
+
+
+def mxu_utilization(m, k, n, bm, bn, mxu=(128, 128)):
+    """Fraction of MXU lanes a block keeps busy — 1.0 when bm and bn fill
+    the 128×128 systolic array (edge blocks waste lanes)."""
+    bm, bn = _block(m, n, bm, bn)
+    eff_m = bm / (((bm + mxu[0] - 1) // mxu[0]) * mxu[0])
+    eff_n = bn / (((bn + mxu[1] - 1) // mxu[1]) * mxu[1])
+    return eff_m * eff_n

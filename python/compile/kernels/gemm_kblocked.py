@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: K-blocked GEMM — the §Perf alternative schedule.
+
+The default :mod:`.gemm` keeps K whole per block (FTL kernel policy). For
+very large K the ``(bm, K)`` and ``(K, bn)`` stripes dominate VMEM; this
+variant adds a third grid dimension over K and accumulates into the
+output block across grid steps (``@pl.when(k == 0)`` zero-init), trading
+VMEM footprint for output-block revisits:
+
+    VMEM/step:  (bm·bk + bk·bn + bm·bn) · 4 B   vs  (bm·K + K·bn + bm·bn) · 4 B
+    HBM traffic: out block written grid_k times vs once
+
+Used by the §Perf block-size study in EXPERIMENTS.md; the deployment
+default stays K-whole (the paper's int8 requantisation policy needs the
+full accumulation before requant anyway).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _divisor_at_most(k, bk):
+    """Largest divisor of ``k`` that is ≤ ``bk``.
+
+    The reduction dimension must be covered by *full* blocks: a remainder
+    K block would accumulate the block-padding region (undefined values)
+    into valid outputs. M/N remainders are safe (the padded output region
+    is simply masked on store), so only K is restricted.
+    """
+    bk = min(bk, k)
+    while k % bk != 0:
+        bk -= 1
+    return bk
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gemm_kblocked(a, b, *, bm=128, bn=128, bk=128):
+    """``a @ b`` with a 3-D grid ``(M/bm, N/bn, K/bk)`` and accumulation."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    bm, bn, bk = min(bm, m), min(bn, n), _divisor_at_most(k, bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def vmem_bytes(bm, bn, bk, elem=4, double_buffer=True):
+    """VMEM per grid step — compare with :func:`..gemm.vmem_bytes`."""
+    tiles = bm * bk + bk * bn + bm * bn
+    return tiles * elem * (2 if double_buffer else 1)

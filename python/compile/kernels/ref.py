@@ -1,0 +1,45 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal of the L1 layer: every Pallas
+kernel in this package is pytest-compared against these functions, and
+``rust/src/runtime/reference.rs`` mirrors them exactly (same tanh-GeLU
+constants) so the Rust native backend, the PJRT artifacts, and this file
+all agree to float tolerance.
+"""
+
+import jax.numpy as jnp
+
+SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def gelu(x):
+    """GeLU, tanh approximation (matches ``jax.nn.gelu(approximate=True)``)."""
+    return 0.5 * x * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)))
+
+
+def gemm(a, b, bias=None):
+    """Plain f32 GEMM with optional bias: ``a @ b (+ bias)``."""
+    out = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias
+    return out
+
+
+def gemm_gelu(a, b, bias=None):
+    """The fused MLP stage: ``gelu(a @ b + bias)`` — the paper's benchmark."""
+    return gelu(gemm(a, b, bias))
+
+
+def mlp(x, w1, b1, w2, b2):
+    """Full ViT MLP: ``gelu(x @ w1 + b1) @ w2 + b2``."""
+    return gemm(gemm_gelu(x, w1, b1), w2, b2)
+
+
+def relu(x):
+    """ReLU."""
+    return jnp.maximum(x, 0.0)
+
+
+def add(a, b):
+    """Elementwise addition."""
+    return a + b

@@ -1,0 +1,49 @@
+"""L2 — the JAX compute graph of the paper's workload.
+
+The ViT MLP stage (``gelu(x @ w1 + b1)``) and the full MLP, each in two
+variants:
+
+* ``*_baseline`` — layer-per-layer: the GEMM's output is a materialised
+  array between two separate Pallas calls (the intermediate round-trips
+  through HBM, the L3 analogue);
+* ``*_ftl`` — fused: one Pallas kernel per stage, intermediate confined
+  to VMEM (the L1 analogue).
+
+Everything here is lowered **once** by :mod:`compile.aot` to HLO text and
+executed from Rust via PJRT — Python is never on the request path.
+"""
+
+from .kernels import fused, gelu as gelu_k, gemm as gemm_k, ref
+
+
+def mlp_stage_baseline(x, w1, b1, *, bm=128, bn=128):
+    """GEMM then GeLU as two tiled Pallas calls (intermediate materialised)."""
+    h = gemm_k.gemm(x, w1, b1, bm=bm, bn=bn)
+    return gelu_k.gelu(h, bm=bm, bn=bn)
+
+
+def mlp_stage_ftl(x, w1, b1, *, bm=128, bn=128):
+    """GEMM+GeLU as one fused Pallas kernel (FTL at kernel level)."""
+    return fused.gemm_gelu(x, w1, b1, bm=bm, bn=bn)
+
+
+def mlp_baseline(x, w1, b1, w2, b2, *, bm=128, bn=128):
+    """Full MLP, layer-per-layer."""
+    a = mlp_stage_baseline(x, w1, b1, bm=bm, bn=bn)
+    return gemm_k.gemm(a, w2, b2, bm=bm, bn=bn)
+
+
+def mlp_ftl(x, w1, b1, w2, b2, *, bm=128, bn=128):
+    """Full MLP with the stage fused."""
+    a = mlp_stage_ftl(x, w1, b1, bm=bm, bn=bn)
+    return gemm_k.gemm(a, w2, b2, bm=bm, bn=bn)
+
+
+def mlp_stage_ref(x, w1, b1):
+    """Pure-jnp oracle of the stage."""
+    return ref.gemm_gelu(x, w1, b1)
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Pure-jnp oracle of the full MLP."""
+    return ref.mlp(x, w1, b1, w2, b2)

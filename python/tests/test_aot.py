@@ -1,0 +1,93 @@
+"""AOT path: lowering to HLO text, manifest generation, shape metadata."""
+
+import json
+import sys
+
+import numpy as np
+import pytest
+
+from compile import aot
+
+
+def test_to_hlo_text_contains_entry():
+    lowered = aot.lower_entry("gemm", [[4, 8], [8, 6]])
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[4,8]" in text
+    # return_tuple=True → tuple root
+    assert "(f32[4,6]" in text
+
+
+@pytest.mark.parametrize(
+    "kind,in_shapes,out_shape",
+    [
+        ("gemm", [[4, 8], [8, 6]], [4, 6]),
+        ("gemm", [[4, 8], [8, 6], [6]], [4, 6]),
+        ("gelu", [[5, 7]], [5, 7]),
+        ("relu", [[5, 7]], [5, 7]),
+        ("add", [[3, 9], [3, 9]], [3, 9]),
+        ("gemm_gelu", [[4, 8], [8, 6], [6]], [4, 6]),
+    ],
+)
+def test_lower_entry_shapes(kind, in_shapes, out_shape):
+    lowered = aot.lower_entry(kind, in_shapes)
+    assert aot.out_shape_of(lowered) == out_shape
+
+
+def test_lower_entry_unknown_kind():
+    with pytest.raises(ValueError):
+        aot.lower_entry("warp", [[2, 2]])
+
+
+def test_main_writes_manifest(tmp_path, monkeypatch):
+    tiles = {
+        "workload": {"seq": 8, "dim": 12, "hidden": 16},
+        "entries": [
+            {"name": "gemm_b_m8_k12_n16", "kind": "gemm",
+             "in_shapes": [[8, 12], [12, 16], [16]], "out_shape": [8, 16]},
+            {"name": "gelu_8x16", "kind": "gelu",
+             "in_shapes": [[8, 16]], "out_shape": [8, 16]},
+        ],
+    }
+    tiles_path = tmp_path / "tiles.json"
+    tiles_path.write_text(json.dumps(tiles))
+    out = tmp_path / "artifacts"
+    monkeypatch.setattr(sys, "argv", ["aot", "--out", str(out), "--tiles", str(tiles_path)])
+    aot.main()
+    manifest = json.loads((out / "manifest.json").read_text())
+    names = {e["name"] for e in manifest["entries"]}
+    # tile executables
+    assert "gemm_b_m8_k12_n16" in names
+    assert "gelu_8x16" in names
+    # auto-added fused variant for the biased GEMM
+    assert "gemm_gelu_b_m8_k12_n16" in names
+    # whole-stage models at the tiles.json workload size
+    assert "stage_ref_8x12x16" in names
+    assert "stage_baseline_8x12x16" in names
+    assert "stage_ftl_8x12x16" in names
+    # every entry's file exists and parses as HLO text
+    for e in manifest["entries"]:
+        text = (out / e["file"]).read_text()
+        assert "ENTRY" in text
+
+
+def test_roundtrip_numerics_through_xla_client(tmp_path):
+    """Compile the lowered HLO with the *python* xla_client and compare to
+    the oracle — the same numerics the Rust PJRT client will see."""
+    import jax
+
+    lowered = aot.lower_entry("gemm_gelu", [[6, 10], [10, 8], [8]])
+    compiled = jax.jit(
+        lambda a, b, bias: lowered  # placeholder; recompile directly below
+    )
+    del compiled
+    rng = np.random.default_rng(11)
+    a = rng.standard_normal((6, 10), dtype=np.float32)
+    b = rng.standard_normal((10, 8), dtype=np.float32)
+    bias = rng.standard_normal(8, dtype=np.float32)
+    # Execute the lowered computation via jax's own AOT path.
+    out = lowered.compile()(a, b, bias)[0]
+    from compile.kernels import ref
+
+    want = ref.gemm_gelu(a, b, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,119 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and block sizes — including blocks that don't
+divide the problem (remainder tiles) — which is exactly the regime the
+FTL schedules run in.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused, gelu as gelu_k, gemm as gemm_k, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+dims = st.integers(min_value=1, max_value=96)
+blocks = st.sampled_from([8, 16, 32, 128])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, bm=blocks, bn=blocks, seed=st.integers(0, 2**31 - 1))
+def test_gemm_matches_ref(m, k, n, bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = gemm_k.gemm(a, b, bm=bm, bn=bn)
+    want = ref.gemm(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, bm=blocks, bn=blocks, seed=st.integers(0, 2**31 - 1))
+def test_gemm_bias_matches_ref(m, k, n, bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    a, b, bias = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = gemm_k.gemm(a, b, bias, bm=bm, bn=bn)
+    want = ref.gemm(a, b, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, bm=blocks, bn=blocks, seed=st.integers(0, 2**31 - 1))
+def test_gelu_matches_ref(m, n, bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, n)
+    got = gelu_k.gelu(x, bm=bm, bn=bn)
+    np.testing.assert_allclose(got, ref.gelu(x), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, bm=blocks, bn=blocks, seed=st.integers(0, 2**31 - 1))
+def test_fused_gemm_gelu_matches_ref(m, k, n, bm, bn, seed):
+    rng = np.random.default_rng(seed)
+    a, b, bias = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = fused.gemm_gelu(a, b, bias, bm=bm, bn=bn)
+    want = ref.gemm_gelu(a, b, bias)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_relu_and_add(m, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, m, n), rand(rng, m, n)
+    np.testing.assert_allclose(gelu_k.relu(x), ref.relu(x), rtol=1e-6)
+    np.testing.assert_allclose(gelu_k.add(x, y), ref.add(x, y), rtol=1e-6)
+
+
+def test_gelu_known_values():
+    x = jnp.asarray([[0.0, 1.0, -1.0, 10.0, -10.0]], dtype=jnp.float32)
+    got = np.asarray(gelu_k.gelu(x))
+    assert abs(got[0, 0]) < 1e-7
+    assert abs(got[0, 1] - 0.841192) < 1e-4  # tanh-approx value
+    assert abs(got[0, 3] - 10.0) < 1e-3
+    assert abs(got[0, 4]) < 1e-3
+
+
+def test_fused_equals_two_step_pipeline():
+    """The FTL invariant at kernel level: fusing must not change numerics."""
+    rng = np.random.default_rng(0)
+    a, b, bias = rand(rng, 64, 48), rand(rng, 48, 80), rand(rng, 80)
+    two_step = gelu_k.gelu(gemm_k.gemm(a, b, bias, bm=16, bn=16), bm=16, bn=16)
+    one_step = fused.gemm_gelu(a, b, bias, bm=16, bn=16)
+    np.testing.assert_allclose(one_step, two_step, rtol=1e-5, atol=1e-5)
+
+
+def test_paper_stage_shape():
+    """The paper's exact workload (197x768->3072) at a realistic block."""
+    rng = np.random.default_rng(7)
+    a = rand(rng, 197, 768)
+    b = rand(rng, 768, 3072)
+    bias = rand(rng, 3072)
+    got = fused.gemm_gelu(a, b, bias, bm=128, bn=512)
+    want = ref.gemm_gelu(a, b, bias)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (32, 16), (128, 128)])
+def test_vmem_and_mxu_estimators(bm, bn):
+    v = gemm_k.vmem_bytes(197, 768, 3072, bm, bn)
+    assert v > 0
+    u = gemm_k.mxu_utilization(197, 768, 3072, bm, bn)
+    assert 0.0 < u <= 1.0
+    # full-MXU blocks hit utilisation 1.0
+    assert gemm_k.mxu_utilization(256, 768, 256, 128, 128) == 1.0
+
+
+def test_hbm_traffic_model_fused_smaller():
+    base = fused.hbm_traffic_bytes(197, 768, 3072, 128, 128, fused=False)
+    ftl = fused.hbm_traffic_bytes(197, 768, 3072, 128, 128, fused=True)
+    assert ftl < base
+    # the delta is exactly the intermediate round trip
+    assert base - ftl == 2 * 197 * 3072 * 4

@@ -1,0 +1,48 @@
+"""L2 model correctness: baseline and FTL variants vs the jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+dims = st.integers(min_value=4, max_value=64)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=dims, d=dims, h=dims, seed=st.integers(0, 2**31 - 1))
+def test_stage_variants_match_oracle(s, d, h, seed):
+    rng = np.random.default_rng(seed)
+    x, w1, b1 = rand(rng, s, d), rand(rng, d, h), rand(rng, h)
+    want = model.mlp_stage_ref(x, w1, b1)
+    base = model.mlp_stage_baseline(x, w1, b1, bm=16, bn=16)
+    ftl = model.mlp_stage_ftl(x, w1, b1, bm=16, bn=16)
+    np.testing.assert_allclose(base, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(ftl, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(s=dims, d=dims, h=dims, seed=st.integers(0, 2**31 - 1))
+def test_full_mlp_variants_match_oracle(s, d, h, seed):
+    rng = np.random.default_rng(seed)
+    x, w1, b1 = rand(rng, s, d), rand(rng, d, h), rand(rng, h)
+    w2, b2 = rand(rng, h, d), rand(rng, d)
+    want = model.mlp_ref(x, w1, b1, w2, b2)
+    base = model.mlp_baseline(x, w1, b1, w2, b2, bm=16, bn=16)
+    ftl = model.mlp_ftl(x, w1, b1, w2, b2, bm=16, bn=16)
+    np.testing.assert_allclose(base, want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(ftl, want, rtol=2e-4, atol=2e-4)
+
+
+def test_baseline_and_ftl_bitwise_close():
+    """Fusion must not change the result beyond float reassociation."""
+    rng = np.random.default_rng(3)
+    x, w1, b1 = rand(rng, 32, 24), rand(rng, 24, 40), rand(rng, 40)
+    base = np.asarray(model.mlp_stage_baseline(x, w1, b1, bm=8, bn=8))
+    ftl = np.asarray(model.mlp_stage_ftl(x, w1, b1, bm=8, bn=8))
+    np.testing.assert_allclose(base, ftl, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,65 @@
+//! Bench: **Ext-E** — L2 home-assignment policy ablation.
+//!
+//! `resident` keeps every materialised tensor in L2 for the whole
+//! inference (the calibrated default); `lifetime` is Deeploy-style
+//! lifetime-interval allocation (activations share L2 slots when their
+//! live ranges are disjoint; weights stay resident). The ablation shows
+//! the paper's overflow mechanism is *robust* to the smarter allocator on
+//! the ViT-Base stage — the intermediate's live range overlaps the
+//! resident weights, so it still spills — while the lifetime policy
+//! shrinks the spill window on multi-layer graphs.
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::{experiments, Deployer};
+use ftl::ir::builder::{deep_mlp, vit_mlp};
+use ftl::ir::DType;
+use ftl::metrics::Table;
+use ftl::tiling::{HomesPolicy, Strategy};
+
+fn run(graph: ftl::ir::Graph, strategy: Strategy, homes: HomesPolicy) -> (u64, u64) {
+    let mut cfg = DeployConfig::preset("cluster-only", strategy).unwrap();
+    cfg.homes = homes;
+    let (_, report) = Deployer::new(graph, cfg).deploy().unwrap();
+    (report.sim.total_cycles, report.sim.dma.total_bytes())
+}
+
+fn main() {
+    println!("=== Ext-E: L2 home-assignment policy (resident vs lifetime) ===\n");
+    for (name, mk) in [
+        ("vit-base-stage", 0),
+        ("vit-base-mlp", 1),
+        // 4-layer 768-wide MLP over 512 tokens: resident packing
+        // overflows L2 (weights 2.3 MiB + 6 activations x 384 KiB) but
+        // lifetime packing keeps every activation on-chip (only ~2 live
+        // at once) — the policies diverge here.
+        ("deep-mlp-512x768x4", 2),
+    ] {
+        let graph = || match mk {
+            0 => experiments::vit_mlp_stage(197, 768, 3072),
+            1 => vit_mlp(197, 768, 3072, DType::Int8),
+            _ => deep_mlp(512, 768, 4, DType::Int8),
+        };
+        println!("--- {name} ---");
+        let mut t = Table::new(&["policy", "strategy", "cycles", "dma bytes", "ftl reduction"]);
+        for homes in [HomesPolicy::Resident, HomesPolicy::Lifetime] {
+            let (bc, bb) = run(graph(), Strategy::LayerPerLayer, homes);
+            let (fc, fb) = run(graph(), Strategy::Ftl, homes);
+            let label = match homes {
+                HomesPolicy::Resident => "resident",
+                HomesPolicy::Lifetime => "lifetime",
+            };
+            t.row(&[label.into(), "baseline".into(), bc.to_string(), bb.to_string(), "—".into()]);
+            t.row(&[
+                label.into(),
+                "ftl".into(),
+                fc.to_string(),
+                fb.to_string(),
+                format!("-{:.1}%", 100.0 * (bc as f64 - fc as f64) / bc as f64),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    println!("expected: on the stage, FTL's win survives the lifetime allocator (the");
+    println!("intermediate still overlaps the resident weights); on deeper graphs the");
+    println!("lifetime policy lowers baseline DMA by keeping more activations in L2.");
+}

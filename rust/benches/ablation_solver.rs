@@ -1,0 +1,61 @@
+//! Bench: **Ext-C** — solver ablations.
+//!
+//! (a) performance-constraint class on/off (paper step ②, third class);
+//! (b) candidate-budget sweep (solve quality vs solve time);
+//! (c) solver wall-clock per fusion-group size.
+
+use std::time::Duration;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::{experiments, Deployer};
+use ftl::ir::builder::deep_mlp;
+use ftl::ir::DType;
+use ftl::metrics::Table;
+use ftl::tiling::{fuse_groups, solve_graph, FusionPolicy, SolverOptions, Strategy};
+use ftl::util::bench::bench;
+
+fn main() {
+    let (seq, d, h) = (197, 768, 3072);
+    println!("=== Ext-C: solver ablations ===\n");
+
+    // (a) performance constraints on/off
+    let (with, without) = experiments::perf_constraint_ablation(seq, d, h, "siracusa").expect("ablation");
+    println!("(a) performance-constraint class (step 2, third class):");
+    println!("    with:    {with} cycles");
+    println!("    without: {without} cycles");
+    println!(
+        "    delta:   {:+.2}% (constraints steer tiles to SIMD/PE-width multiples)\n",
+        100.0 * (without as f64 - with as f64) / with as f64
+    );
+
+    // (b) candidate budget sweep
+    println!("(b) candidate budget (solve quality vs. effort):");
+    let mut t = Table::new(&["max_candidates", "est. cycles", "sim cycles"]);
+    for cands in [4, 8, 16, 32, 64, 128] {
+        let graph = experiments::vit_mlp_stage(seq, d, h);
+        let mut cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+        cfg.solver.max_candidates = cands;
+        let dep = Deployer::new(graph, cfg);
+        let (plan, report) = dep.deploy().unwrap();
+        t.row(&[
+            cands.to_string(),
+            plan.solution.estimated_cycles().to_string(),
+            report.sim.total_cycles.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // (c) solver wall-clock
+    println!("(c) solver wall-clock:");
+    let graph = experiments::vit_mlp_stage(seq, d, h);
+    let soc = ftl::soc::siracusa_reduced();
+    bench("solver/stage_ftl_group", Duration::from_secs(2), || {
+        let groups = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
+        let _ = solve_graph(&graph, &soc, groups, &SolverOptions::default(), false).unwrap();
+    });
+    let deep = deep_mlp(128, 512, 6, DType::Int8);
+    bench("solver/deep_mlp_12_nodes", Duration::from_secs(2), || {
+        let groups = fuse_groups(&deep, Strategy::Ftl, FusionPolicy::default());
+        let _ = solve_graph(&deep, &soc, groups, &SolverOptions::default(), false).unwrap();
+    });
+}

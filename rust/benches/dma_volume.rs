@@ -1,0 +1,55 @@
+//! Bench: the paper's inline **−47.1 % DMA** metric — transfer commands
+//! and payload bytes, baseline vs FTL, on both SoC variants, plus a
+//! per-channel breakdown showing where the savings come from (the L3
+//! round trip of the spilled intermediate).
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::{experiments, Deployer};
+use ftl::memory::Level;
+use ftl::metrics::Table;
+use ftl::tiling::Strategy;
+
+fn main() {
+    let (seq, d, h) = (197, 768, 3072);
+    println!("=== DMA volume: ViT MLP stage ({seq}x{d}->{h}) — paper: -47.1% ===\n");
+
+    for soc in ["cluster-only", "siracusa"] {
+        println!("--- {soc} ---");
+        let mut t = Table::new(&["strategy", "commands", "bytes", "L2-ch bytes", "L3-ch bytes", "in", "out"]);
+        let mut base_bytes = 0u64;
+        for strategy in [Strategy::LayerPerLayer, Strategy::Ftl] {
+            let graph = experiments::vit_mlp_stage(seq, d, h);
+            let cfg = DeployConfig::preset(soc, strategy).unwrap();
+            let (_, report) = Deployer::new(graph, cfg).deploy().unwrap();
+            let dma = &report.sim.dma;
+            if strategy == Strategy::LayerPerLayer {
+                base_bytes = dma.total_bytes();
+            }
+            t.row(&[
+                strategy.name().to_string(),
+                dma.total_transfers().to_string(),
+                dma.total_bytes().to_string(),
+                dma.bytes_at(Level::L2).to_string(),
+                dma.bytes_at(Level::L3).to_string(),
+                dma.bytes_in.to_string(),
+                dma.bytes_out.to_string(),
+            ]);
+            if strategy == Strategy::Ftl {
+                let red = 100.0 * (base_bytes as f64 - dma.total_bytes() as f64) / base_bytes as f64;
+                println!("{}", t.render());
+                println!("byte reduction: -{red:.1}% (paper: -47.1%)\n");
+            }
+        }
+    }
+
+    let r = experiments::dma_reduction(seq, d, h, "cluster-only").unwrap();
+    println!(
+        "summary: commands {} -> {} (-{:.1}%), bytes {} -> {} (-{:.1}%)",
+        r.base_transfers,
+        r.ftl_transfers,
+        r.transfer_reduction_pct,
+        r.base_bytes,
+        r.ftl_bytes,
+        r.byte_reduction_pct
+    );
+}

@@ -1,0 +1,33 @@
+//! Bench: **Fig. 3** — MLP-stage runtime, baseline vs FTL, cluster-only
+//! and cluster+NPU. Prints the paper's four bars (simulated cycles) plus
+//! the wall-clock cost of the deployment pipeline itself.
+//!
+//! Paper reference: −28.8 % (cluster), −60.1 % (cluster+NPU).
+
+use std::time::Duration;
+
+use ftl::coordinator::experiments;
+use ftl::util::bench::bench;
+
+fn main() {
+    let (seq, d, h) = (197, 768, 3072);
+    println!("=== Fig. 3: ViT MLP stage ({seq}x{d}->{h}) ===\n");
+    let rows = experiments::fig3(seq, d, h, false).expect("fig3");
+    println!("{}", experiments::fig3_table(&rows));
+
+    let cluster = rows.iter().find(|r| r.config == "cluster" && r.strategy == "ftl").unwrap();
+    let npu = rows.iter().find(|r| r.config == "cluster+npu" && r.strategy == "ftl").unwrap();
+    println!("paper:    cluster -28.8%   cluster+npu -60.1%");
+    println!("measured: cluster -{:.1}%   cluster+npu -{:.1}%\n", cluster.reduction_pct, npu.reduction_pct);
+
+    // Deployment-pipeline wall clock (solver + allocator + schedule + sim).
+    println!("--- deployment pipeline wall-clock ---");
+    bench("fig3/full_pipeline_4way", Duration::from_secs(3), || {
+        let _ = experiments::fig3(seq, d, h, false).unwrap();
+    });
+    bench("fig3/single_deploy_ftl_npu", Duration::from_secs(2), || {
+        let graph = experiments::vit_mlp_stage(seq, d, h);
+        let cfg = ftl::config::DeployConfig::preset("siracusa", ftl::tiling::Strategy::Ftl).unwrap();
+        let _ = ftl::coordinator::Deployer::new(graph, cfg).deploy().unwrap();
+    });
+}

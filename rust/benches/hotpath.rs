@@ -1,0 +1,78 @@
+//! Bench: L3 hot paths — the §Perf targets.
+//!
+//! Micro-benchmarks for every stage of the deployment pipeline plus the
+//! runtime-side tile machinery. These are the numbers tracked in
+//! EXPERIMENTS.md §Perf (before/after each optimisation).
+
+use std::time::Duration;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::{experiments, Deployer};
+use ftl::memory::{AllocRequest, StaticAllocator};
+use ftl::runtime::{reference, HostTensor, NativeBackend, TileExecutor};
+use ftl::schedule::build_schedule;
+use ftl::sim::simulate;
+use ftl::tiling::{assign_homes, fuse_groups, solve_graph, FusionPolicy, SolverOptions, Strategy};
+use ftl::util::bench::bench;
+use ftl::util::prop::Rng;
+
+fn main() {
+    let graph = experiments::vit_mlp_stage(197, 768, 3072);
+    let soc = ftl::soc::siracusa_reduced();
+    let groups = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
+    let (groups, sol) = solve_graph(&graph, &soc, groups.clone(), &SolverOptions::default(), false).unwrap();
+    let sched = build_schedule(&graph, &soc, &sol).unwrap();
+    println!("=== L3 hot paths (EXPERIMENTS.md §Perf) ===\n");
+
+    bench("pipeline/fuse_groups", Duration::from_secs(1), || {
+        let _ = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
+    });
+    bench("pipeline/assign_homes", Duration::from_secs(1), || {
+        let _ = assign_homes(&graph, &groups, &soc);
+    });
+    bench("pipeline/solve_graph", Duration::from_secs(3), || {
+        let g = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
+        let _ = solve_graph(&graph, &soc, g, &SolverOptions::default(), false).unwrap();
+    });
+    bench("pipeline/build_schedule", Duration::from_secs(2), || {
+        let _ = build_schedule(&graph, &soc, &sol).unwrap();
+    });
+    bench("pipeline/simulate", Duration::from_secs(2), || {
+        let _ = simulate(&sched, &soc).unwrap();
+    });
+    bench("pipeline/deploy_end_to_end", Duration::from_secs(3), || {
+        let g = experiments::vit_mlp_stage(197, 768, 3072);
+        let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+        let _ = Deployer::new(g, cfg).deploy().unwrap();
+    });
+
+    // Static allocator under load (many overlapping lifetimes).
+    let mut rng = Rng::new(42);
+    let reqs: Vec<AllocRequest> = (0..512)
+        .map(|i| {
+            let birth = rng.range(0, 200);
+            AllocRequest::new(i, rng.range(64, 8192), birth, birth + rng.range(0, 40))
+        })
+        .collect();
+    let alloc = StaticAllocator::new(16 << 20, 8);
+    bench("memory/static_alloc_512", Duration::from_secs(2), || {
+        let _ = alloc.solve(&reqs).unwrap();
+    });
+
+    // Runtime tile machinery (native backend).
+    let small = experiments::vit_mlp_stage(64, 96, 192);
+    let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+    let dep = Deployer::new(small, cfg);
+    let plan = dep.plan().unwrap();
+    let bindings = reference::random_bindings(dep.graph(), 1);
+    bench("runtime/tile_executor_native_64x96x192", Duration::from_secs(2), || {
+        let mut exec = TileExecutor::new(NativeBackend);
+        let _ = exec.run(dep.graph(), &plan.solution, &bindings).unwrap();
+    });
+
+    // Gather/scatter micro-cost.
+    let big = HostTensor::random(&[1024, 1024], 3);
+    bench("runtime/gather_128x128", Duration::from_secs(1), || {
+        let _ = big.gather(&[512, 512], &[128, 128]);
+    });
+}

@@ -1,0 +1,35 @@
+//! Bench: **Ext-A** — hidden-dimension sweep. Shows the L2-overflow
+//! crossover: FTL's benefit jumps exactly where the intermediate tensor
+//! (seq × hidden) stops fitting in L2 and the baseline starts paying the
+//! L3 round trip (the paper's mechanism, swept over the axis).
+
+use ftl::coordinator::experiments;
+use ftl::metrics::Table;
+use ftl::soc::siracusa_reduced;
+
+fn main() {
+    let (seq, d) = (197, 768);
+    let hs = [256, 512, 1024, 1536, 2048, 2560, 3072, 4096, 6144, 8192];
+    let soc = siracusa_reduced();
+    println!("=== Ext-A: hidden-dim sweep (seq={seq}, d={d}) ===");
+    println!(
+        "L2 = {} B; baseline resident set grows with hidden dim; FTL never materialises the intermediate\n",
+        soc.mem.l2.capacity
+    );
+
+    for preset in ["cluster-only", "siracusa"] {
+        println!("--- {preset} ---");
+        let rows = experiments::hidden_sweep(seq, d, &hs, preset).expect("sweep");
+        let mut t = Table::new(&["hidden", "interm. KiB", "baseline cyc", "ftl cyc", "reduction"]);
+        for (h, base, ftl, red) in rows {
+            t.row(&[
+                h.to_string(),
+                format!("{:.0}", (seq * h) as f64 / 1024.0),
+                base.to_string(),
+                ftl.to_string(),
+                format!("{:.1}%", -red),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+}

@@ -1,0 +1,250 @@
+//! Deployment configuration: what the CLI / launcher feeds the
+//! [`crate::coordinator::Deployer`], plus JSON (de)serialisation for
+//! config files.
+
+use anyhow::{bail, Context, Result};
+
+use crate::dma::DmaCostModel;
+use crate::memory::{LevelSpec, MemoryHierarchy};
+use crate::soc::{ClusterSpec, NpuSpec, SocConfig, SocPreset};
+use crate::tiling::{HomesPolicy, SolverOptions, Strategy};
+use crate::util::json::{parse, Json};
+
+/// Alias kept for API continuity — the strategy enum lives in [`crate::tiling`].
+pub type StrategyKind = Strategy;
+
+/// Everything needed to deploy one network on one SoC.
+#[derive(Debug, Clone)]
+pub struct DeployConfig {
+    /// Target SoC.
+    pub soc: SocConfig,
+    /// Tiling strategy.
+    pub strategy: Strategy,
+    /// Double-buffer streamed tiles (ping/pong) to overlap DMA & compute.
+    pub double_buffer: bool,
+    /// FTL solver options.
+    pub solver: SolverOptions,
+    /// L2 home-assignment policy.
+    pub homes: HomesPolicy,
+}
+
+impl DeployConfig {
+    /// Config from a preset name + strategy, with default solver options.
+    pub fn preset(soc: &str, strategy: Strategy) -> Result<Self> {
+        let preset = SocPreset::parse(soc)
+            .with_context(|| format!("unknown SoC preset '{soc}' (try: siracusa, cluster-only)"))?;
+        Ok(Self { soc: preset.config(), strategy, double_buffer: false, solver: SolverOptions::default(), homes: HomesPolicy::Resident })
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let cfg = Self::from_json(&text)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = parse(text).context("parsing deploy config JSON")?;
+        let soc = soc_from_json(v.get("soc")?)?;
+        let strategy = Strategy::parse(v.get("strategy")?.as_str()?)
+            .context("strategy must be 'ftl' or 'layer-per-layer'")?;
+        let double_buffer = v.get_opt("double_buffer").map(|b| b.as_bool()).transpose()?.unwrap_or(false);
+        let solver = match v.get_opt("solver") {
+            Some(s) => SolverOptions {
+                use_perf_constraints: s
+                    .get_opt("use_perf_constraints")
+                    .map(|b| b.as_bool())
+                    .transpose()?
+                    .unwrap_or(true),
+                max_candidates: s.get_opt("max_candidates").map(|n| n.as_usize()).transpose()?.unwrap_or(64),
+                l1_budget_fraction: s
+                    .get_opt("l1_budget_fraction")
+                    .map(|n| n.as_f64())
+                    .transpose()?
+                    .unwrap_or(1.0),
+            },
+            None => SolverOptions::default(),
+        };
+        let homes = match v.get_opt("homes_policy").map(|h| h.as_str()).transpose()? {
+            None | Some("resident") => HomesPolicy::Resident,
+            Some("lifetime") => HomesPolicy::Lifetime,
+            Some(other) => bail!("unknown homes_policy '{other}' (resident|lifetime)"),
+        };
+        Ok(Self { soc, strategy, double_buffer, solver, homes })
+    }
+
+    /// Serialise to pretty JSON.
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            ("soc", soc_to_json(&self.soc)),
+            ("strategy", Json::str(self.strategy.name())),
+            (
+                "homes_policy",
+                Json::str(match self.homes {
+                    HomesPolicy::Resident => "resident",
+                    HomesPolicy::Lifetime => "lifetime",
+                }),
+            ),
+            ("double_buffer", Json::Bool(self.double_buffer)),
+            (
+                "solver",
+                Json::obj(vec![
+                    ("use_perf_constraints", Json::Bool(self.solver.use_perf_constraints)),
+                    ("max_candidates", Json::int(self.solver.max_candidates)),
+                    ("l1_budget_fraction", Json::Num(self.solver.l1_budget_fraction)),
+                ]),
+            ),
+        ])
+        .pretty()
+    }
+
+    /// Sanity checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.soc.mem.l1.capacity == 0 || self.soc.mem.l2.capacity == 0 {
+            bail!("SoC memory levels must have non-zero capacity");
+        }
+        if self.soc.cluster.cores == 0 {
+            bail!("cluster must have at least one core");
+        }
+        if self.soc.dma_cluster.bytes_per_cycle <= 0.0 || self.soc.dma_io.bytes_per_cycle <= 0.0 {
+            bail!("DMA bandwidths must be positive");
+        }
+        Ok(())
+    }
+}
+
+fn level_to_json(l: &LevelSpec) -> Json {
+    Json::obj(vec![("capacity", Json::int(l.capacity)), ("alignment", Json::int(l.alignment))])
+}
+
+fn level_from_json(v: &Json) -> Result<LevelSpec> {
+    Ok(LevelSpec::new(v.get("capacity")?.as_usize()?, v.get("alignment")?.as_usize()?))
+}
+
+fn dma_to_json(d: &DmaCostModel) -> Json {
+    Json::obj(vec![
+        ("setup_cycles", Json::int(d.setup_cycles as usize)),
+        ("per_row_cycles", Json::int(d.per_row_cycles as usize)),
+        ("bytes_per_cycle", Json::Num(d.bytes_per_cycle)),
+    ])
+}
+
+fn dma_from_json(v: &Json) -> Result<DmaCostModel> {
+    Ok(DmaCostModel {
+        setup_cycles: v.get("setup_cycles")?.as_usize()? as u64,
+        per_row_cycles: v.get("per_row_cycles")?.as_usize()? as u64,
+        bytes_per_cycle: v.get("bytes_per_cycle")?.as_f64()?,
+    })
+}
+
+/// SoC config → JSON.
+pub fn soc_to_json(s: &SocConfig) -> Json {
+    let npu = match &s.npu {
+        None => Json::Null,
+        Some(n) => Json::obj(vec![
+            ("macs_per_cycle", Json::Num(n.macs_per_cycle)),
+            ("efficiency", Json::Num(n.efficiency)),
+            ("job_setup_cycles", Json::int(n.job_setup_cycles as usize)),
+        ]),
+    };
+    Json::obj(vec![
+        ("name", Json::str(&s.name)),
+        ("freq_mhz", Json::Num(s.freq_mhz)),
+        (
+            "mem",
+            Json::obj(vec![
+                ("l1", level_to_json(&s.mem.l1)),
+                ("l2", level_to_json(&s.mem.l2)),
+                ("l3", level_to_json(&s.mem.l3)),
+            ]),
+        ),
+        (
+            "cluster",
+            Json::obj(vec![
+                ("cores", Json::int(s.cluster.cores)),
+                ("macs_per_core_cycle", Json::Num(s.cluster.macs_per_core_cycle)),
+                ("gemm_efficiency", Json::Num(s.cluster.gemm_efficiency)),
+                ("eltwise_per_core_cycle", Json::Num(s.cluster.eltwise_per_core_cycle)),
+                ("kernel_setup_cycles", Json::int(s.cluster.kernel_setup_cycles as usize)),
+            ]),
+        ),
+        ("npu", npu),
+        ("dma_cluster", dma_to_json(&s.dma_cluster)),
+        ("dma_io", dma_to_json(&s.dma_io)),
+    ])
+}
+
+/// JSON → SoC config.
+pub fn soc_from_json(v: &Json) -> Result<SocConfig> {
+    let mem = v.get("mem")?;
+    let cl = v.get("cluster")?;
+    let npu = match v.get_opt("npu") {
+        None | Some(Json::Null) => None,
+        Some(n) => Some(NpuSpec {
+            macs_per_cycle: n.get("macs_per_cycle")?.as_f64()?,
+            efficiency: n.get("efficiency")?.as_f64()?,
+            job_setup_cycles: n.get("job_setup_cycles")?.as_usize()? as u64,
+        }),
+    };
+    Ok(SocConfig {
+        name: v.get("name")?.as_str()?.to_string(),
+        freq_mhz: v.get("freq_mhz")?.as_f64()?,
+        mem: MemoryHierarchy {
+            l1: level_from_json(mem.get("l1")?)?,
+            l2: level_from_json(mem.get("l2")?)?,
+            l3: level_from_json(mem.get("l3")?)?,
+        },
+        cluster: ClusterSpec {
+            cores: cl.get("cores")?.as_usize()?,
+            macs_per_core_cycle: cl.get("macs_per_core_cycle")?.as_f64()?,
+            gemm_efficiency: cl.get("gemm_efficiency")?.as_f64()?,
+            eltwise_per_core_cycle: cl.get("eltwise_per_core_cycle")?.as_f64()?,
+            kernel_setup_cycles: cl.get("kernel_setup_cycles")?.as_usize()? as u64,
+        },
+        npu,
+        dma_cluster: dma_from_json(v.get("dma_cluster")?)?,
+        dma_io: dma_from_json(v.get("dma_io")?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(Strategy::parse("ftl"), Some(Strategy::Ftl));
+        assert_eq!(Strategy::parse("baseline"), Some(Strategy::LayerPerLayer));
+        assert_eq!(Strategy::parse("magic"), None);
+    }
+
+    #[test]
+    fn preset_config_valid() {
+        let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+        cfg.validate().unwrap();
+        assert!(cfg.soc.has_npu());
+        let cfg = DeployConfig::preset("cluster-only", Strategy::LayerPerLayer).unwrap();
+        assert!(!cfg.soc.has_npu());
+        assert!(DeployConfig::preset("bogus", Strategy::Ftl).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+        let text = cfg.to_json();
+        let back = DeployConfig::from_json(&text).unwrap();
+        assert_eq!(back.strategy, Strategy::Ftl);
+        assert_eq!(back.soc, cfg.soc);
+        assert_eq!(back.solver, cfg.solver);
+        assert_eq!(back.double_buffer, cfg.double_buffer);
+    }
+
+    #[test]
+    fn npu_null_roundtrip() {
+        let cfg = DeployConfig::preset("cluster-only", Strategy::LayerPerLayer).unwrap();
+        let back = DeployConfig::from_json(&cfg.to_json()).unwrap();
+        assert!(back.soc.npu.is_none());
+    }
+}

@@ -1,0 +1,298 @@
+//! The deployment coordinator — the L3 entry point tying the whole flow
+//! together:
+//!
+//! ```text
+//! Graph ─► fuse_groups ─► assign_homes ─► solve_graph ─► build_schedule
+//!       ─► sim::simulate (cycles, DMA)  and/or  runtime::TileExecutor
+//! ```
+//!
+//! [`Deployer`] is the one-stop API used by the CLI, the examples and the
+//! benches; [`experiments`] hosts the paper-reproduction drivers (Fig. 3,
+//! DMA reduction, sweeps).
+
+pub mod experiments;
+
+use anyhow::{Context, Result};
+
+use crate::config::DeployConfig;
+use crate::ir::Graph;
+use crate::memory::Level;
+use crate::metrics;
+use crate::runtime::{tile_key, HostTensor, KernelBackend, TileExecutor};
+use crate::schedule::{build_schedule, Schedule};
+use crate::sim::{simulate, SimReport};
+use crate::tiling::{assign_homes_with, fuse_groups, solve_graph_with, FusionGroup, FusionPolicy, TilingSolution};
+use crate::util::json::Json;
+
+/// A fully planned deployment (before simulation/execution).
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    /// Final fusion groups (after solver fallbacks).
+    pub groups: Vec<FusionGroup>,
+    /// Home level of each tensor (`None` = fused intermediate).
+    pub homes: Vec<Option<Level>>,
+    /// Solved tiling.
+    pub solution: TilingSolution,
+    /// Executable tiled schedule.
+    pub schedule: Schedule,
+}
+
+impl Deployment {
+    /// All distinct kernel-tile signatures this deployment invokes —
+    /// consumed by `ftl emit-tiles` so `python/compile/aot.py` can AOT
+    /// exactly the executables the runtime will need.
+    pub fn tile_signatures(&self, graph: &Graph) -> Vec<(String, Vec<Vec<usize>>, Vec<usize>)> {
+        let mut seen = std::collections::BTreeMap::new();
+        for g in &self.solution.groups {
+            for state in g.iterations() {
+                for n in &g.nodes {
+                    let in_shapes: Vec<Vec<usize>> =
+                        n.input_bufs.iter().map(|&bi| g.buffers[bi].shape_at(&state)).collect();
+                    let out_shape = g.buffers[n.output_buf].shape_at(&state);
+                    let refs: Vec<&[usize]> = in_shapes.iter().map(|s| s.as_slice()).collect();
+                    if let Some(key) = tile_key(&n.op, &refs, &out_shape) {
+                        seen.entry(key).or_insert((in_shapes, out_shape));
+                    }
+                }
+            }
+        }
+        let _ = graph;
+        seen.into_iter().map(|(k, (i, o))| (k, i, o)).collect()
+    }
+}
+
+/// Per-deployment report: plan stats + simulation outcome.
+#[derive(Debug, Clone)]
+pub struct DeployReport {
+    /// Strategy name.
+    pub strategy: String,
+    /// SoC name.
+    pub soc: String,
+    /// Workload name.
+    pub workload: String,
+    /// Number of fusion groups (phases).
+    pub phases: usize,
+    /// Peak L1 arena bytes.
+    pub peak_l1: usize,
+    /// Total DMA command count (planned).
+    pub dma_commands: usize,
+    /// Total DMA payload bytes (planned).
+    pub dma_bytes: usize,
+    /// Simulation outcome.
+    pub sim: SimReport,
+}
+
+impl DeployReport {
+    /// Human-readable report.
+    pub fn render(&self, soc: &crate::soc::SocConfig) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "workload={} soc={} strategy={} phases={} peak_l1={}B dma_cmds={} dma_bytes={}\n",
+            self.workload, self.soc, self.strategy, self.phases, self.peak_l1, self.dma_commands, self.dma_bytes
+        ));
+        s.push_str(&metrics::sim_table(&self.sim, soc));
+        s.push_str(&metrics::dma_table(&self.sim.dma));
+        s
+    }
+
+    /// Machine-readable report.
+    pub fn to_json(&self, soc: &crate::soc::SocConfig) -> Json {
+        Json::obj(vec![
+            ("workload", Json::str(&self.workload)),
+            ("strategy", Json::str(&self.strategy)),
+            ("phases", Json::int(self.phases)),
+            ("peak_l1", Json::int(self.peak_l1)),
+            ("dma_commands", Json::int(self.dma_commands)),
+            ("dma_bytes", Json::int(self.dma_bytes)),
+            ("sim", metrics::sim_json(&self.sim, soc)),
+        ])
+    }
+}
+
+/// The deployment pipeline.
+pub struct Deployer {
+    graph: Graph,
+    config: DeployConfig,
+    policy: FusionPolicy,
+    workload: String,
+}
+
+impl Deployer {
+    /// New deployer for a graph + config.
+    pub fn new(graph: Graph, config: DeployConfig) -> Self {
+        Self { graph, config, policy: FusionPolicy::default(), workload: "custom".into() }
+    }
+
+    /// Set the workload name used in reports.
+    pub fn with_workload_name(mut self, name: impl Into<String>) -> Self {
+        self.workload = name.into();
+        self
+    }
+
+    /// Override the fusion policy.
+    pub fn with_policy(mut self, policy: FusionPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// The graph being deployed.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The active config.
+    pub fn config(&self) -> &DeployConfig {
+        &self.config
+    }
+
+    /// Run the planning pipeline (steps ①–④ + allocation + schedule).
+    pub fn plan(&self) -> Result<Deployment> {
+        self.graph.validate()?;
+        let groups = fuse_groups(&self.graph, self.config.strategy, self.policy);
+        let (groups, solution) = solve_graph_with(
+            &self.graph,
+            &self.config.soc,
+            groups,
+            &self.config.solver,
+            self.config.double_buffer,
+            self.config.homes,
+        )
+        .context("tiling solve failed")?;
+        let homes = assign_homes_with(&self.graph, &groups, &self.config.soc, self.config.homes);
+        let schedule = build_schedule(&self.graph, &self.config.soc, &solution)?;
+        Ok(Deployment { groups, homes, solution, schedule })
+    }
+
+    /// Plan + simulate.
+    pub fn deploy(&self) -> Result<(Deployment, DeployReport)> {
+        let d = self.plan()?;
+        let sim = simulate(&d.schedule, &self.config.soc)?;
+        let report = DeployReport {
+            strategy: self.config.strategy.name().to_string(),
+            soc: self.config.soc.name.clone(),
+            workload: self.workload.clone(),
+            phases: d.schedule.phases.len(),
+            peak_l1: d.solution.peak_l1(),
+            dma_commands: d.schedule.dma_count(),
+            dma_bytes: d.schedule.dma_bytes(),
+            sim,
+        };
+        Ok((d, report))
+    }
+
+    /// Plan + execute numerically against the un-tiled oracle; returns
+    /// the max output deviation.
+    pub fn validate_numerics<B: KernelBackend>(&self, backend: B, seed: u64) -> Result<f32> {
+        let d = self.plan()?;
+        let bindings = crate::runtime::reference::random_bindings(&self.graph, seed);
+        let oracle = crate::runtime::reference::run_graph(&self.graph, &bindings)?;
+        let mut exec = TileExecutor::new(backend);
+        let env = exec.run(&self.graph, &d.solution, &bindings)?;
+        let mut worst = 0.0f32;
+        for &out in &self.graph.outputs() {
+            worst = worst.max(env[&out].max_abs_diff(&oracle[&out]));
+        }
+        Ok(worst)
+    }
+
+    /// Async-style request loop helper: deploy many graphs sequentially
+    /// on a std::thread, reporting through a channel. (The coordinator is
+    /// CPU-bound; a thread pool is the right tool without an async
+    /// runtime dependency.)
+    pub fn deploy_batch(
+        requests: Vec<(String, Graph, DeployConfig)>,
+    ) -> Vec<(String, Result<DeployReport>)> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let handles: Vec<_> = requests
+            .into_iter()
+            .map(|(name, graph, config)| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    let dep = Deployer::new(graph, config).with_workload_name(name.clone());
+                    let out = dep.deploy().map(|(_, r)| r);
+                    tx.send((name, out)).ok();
+                })
+            })
+            .collect();
+        drop(tx);
+        let mut results: Vec<(String, Result<DeployReport>)> = rx.into_iter().collect();
+        for h in handles {
+            h.join().ok();
+        }
+        results.sort_by(|a, b| a.0.cmp(&b.0));
+        results
+    }
+}
+
+/// Binding helper re-exported for examples.
+pub fn random_bindings(graph: &Graph, seed: u64) -> std::collections::HashMap<usize, HostTensor> {
+    crate::runtime::reference::random_bindings(graph, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeployConfig;
+    use crate::ir::builder::vit_mlp;
+    use crate::ir::DType;
+    use crate::runtime::NativeBackend;
+    use crate::tiling::Strategy;
+
+    #[test]
+    fn full_pipeline_ftl() {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+        let dep = Deployer::new(g, cfg).with_workload_name("vit-base-mlp");
+        let (d, report) = dep.deploy().unwrap();
+        assert_eq!(report.phases, 2);
+        assert!(report.sim.total_cycles > 0);
+        assert!(d.solution.peak_l1() > 0);
+        let rendered = report.render(&dep.config().soc);
+        assert!(rendered.contains("fc1+gelu"));
+    }
+
+    #[test]
+    fn numerics_validation_small() {
+        let g = vit_mlp(16, 24, 48, DType::F32);
+        let cfg = DeployConfig::preset("cluster-only", Strategy::Ftl).unwrap();
+        let dep = Deployer::new(g, cfg);
+        let worst = dep.validate_numerics(NativeBackend, 3).unwrap();
+        assert!(worst < 1e-3, "deviation {worst}");
+    }
+
+    #[test]
+    fn tile_signatures_nonempty_and_stable() {
+        let g = vit_mlp(64, 32, 96, DType::F32);
+        let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+        let dep = Deployer::new(g, cfg);
+        let d = dep.plan().unwrap();
+        let sigs = d.tile_signatures(dep.graph());
+        assert!(!sigs.is_empty());
+        assert!(sigs.iter().any(|(k, _, _)| k.starts_with("gemm")));
+        // deterministic ordering (BTreeMap)
+        let sigs2 = d.tile_signatures(dep.graph());
+        assert_eq!(
+            sigs.iter().map(|s| &s.0).collect::<Vec<_>>(),
+            sigs2.iter().map(|s| &s.0).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn deploy_batch_parallel() {
+        let reqs = vec![
+            (
+                "a".to_string(),
+                vit_mlp(32, 32, 64, DType::Int8),
+                DeployConfig::preset("siracusa", Strategy::Ftl).unwrap(),
+            ),
+            (
+                "b".to_string(),
+                vit_mlp(32, 32, 64, DType::Int8),
+                DeployConfig::preset("cluster-only", Strategy::LayerPerLayer).unwrap(),
+            ),
+        ];
+        let results = Deployer::deploy_batch(reqs);
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|(_, r)| r.is_ok()));
+    }
+}

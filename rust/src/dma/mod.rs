@@ -1,0 +1,17 @@
+//! DMA engine model.
+//!
+//! RISC-V SoCs in the Siracusa family move tiles with autonomous DMA
+//! engines (MCHAN-class for L2↔L1, a HyperBus/IO DMA for L3↔L2) that
+//! support strided 1-D/2-D/3-D transfers. A tile of a row-major tensor is
+//! a 2-D (or 3-D) transfer: `rows` contiguous runs of `row_bytes`,
+//! separated by `src_stride`/`dst_stride`.
+//!
+//! The cost model mirrors GVSoC's: a fixed per-command setup latency plus
+//! bandwidth-limited streaming, with an extra per-row beat charge for
+//! strided transfers (2-D descriptors re-arm per row).
+
+mod stats;
+mod transfer;
+
+pub use stats::{DmaStats, TransferLog};
+pub use transfer::{DmaCostModel, DmaDirection, Transfer};

@@ -1,0 +1,170 @@
+//! Transfer accounting — the source of the paper's "−47.1 % DMA
+//! transfers" metric.
+
+use std::collections::BTreeMap;
+
+
+use crate::memory::Level;
+
+use super::{DmaDirection, Transfer};
+
+/// Aggregated DMA statistics for one run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DmaStats {
+    /// Number of transfer commands issued, per channel level.
+    pub transfers: BTreeMap<Level, u64>,
+    /// Payload bytes moved, per channel level.
+    pub bytes: BTreeMap<Level, u64>,
+    /// Cycles spent by each DMA channel (busy time, not wall time).
+    pub busy_cycles: BTreeMap<Level, u64>,
+    /// In/out split of payload bytes.
+    pub bytes_in: u64,
+    /// Bytes moved away from compute.
+    pub bytes_out: u64,
+}
+
+impl DmaStats {
+    /// Record one transfer taking `cycles` on its channel.
+    pub fn record(&mut self, t: &Transfer, cycles: u64) {
+        let ch = t.channel_level();
+        *self.transfers.entry(ch).or_default() += 1;
+        *self.bytes.entry(ch).or_default() += t.bytes() as u64;
+        *self.busy_cycles.entry(ch).or_default() += cycles;
+        match t.direction() {
+            DmaDirection::In => self.bytes_in += t.bytes() as u64,
+            DmaDirection::Out => self.bytes_out += t.bytes() as u64,
+        }
+    }
+
+    /// Total transfer commands across channels.
+    pub fn total_transfers(&self) -> u64 {
+        self.transfers.values().sum()
+    }
+
+    /// Total payload bytes across channels.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.values().sum()
+    }
+
+    /// Bytes on a specific channel.
+    pub fn bytes_at(&self, level: Level) -> u64 {
+        self.bytes.get(&level).copied().unwrap_or(0)
+    }
+
+    /// Transfers on a specific channel.
+    pub fn transfers_at(&self, level: Level) -> u64 {
+        self.transfers.get(&level).copied().unwrap_or(0)
+    }
+
+    /// Merge another stats block into this one.
+    pub fn merge(&mut self, other: &DmaStats) {
+        for (k, v) in &other.transfers {
+            *self.transfers.entry(*k).or_default() += v;
+        }
+        for (k, v) in &other.bytes {
+            *self.bytes.entry(*k).or_default() += v;
+        }
+        for (k, v) in &other.busy_cycles {
+            *self.busy_cycles.entry(*k).or_default() += v;
+        }
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+    }
+
+    /// Percentage reduction of transfer count vs a baseline
+    /// (`100 * (base - self) / base`).
+    pub fn transfer_reduction_vs(&self, baseline: &DmaStats) -> f64 {
+        let b = baseline.total_transfers() as f64;
+        if b == 0.0 {
+            return 0.0;
+        }
+        100.0 * (b - self.total_transfers() as f64) / b
+    }
+
+    /// Percentage reduction of byte volume vs a baseline.
+    pub fn byte_reduction_vs(&self, baseline: &DmaStats) -> f64 {
+        let b = baseline.total_bytes() as f64;
+        if b == 0.0 {
+            return 0.0;
+        }
+        100.0 * (b - self.total_bytes() as f64) / b
+    }
+}
+
+/// Optional per-transfer log (used by `--trace` and the test suite).
+#[derive(Debug, Clone, Default)]
+pub struct TransferLog {
+    /// (issue-cycle, transfer, duration) triples in issue order.
+    pub entries: Vec<(u64, Transfer, u64)>,
+}
+
+impl TransferLog {
+    /// Append an entry.
+    pub fn push(&mut self, at: u64, t: Transfer, cycles: u64) {
+        self.entries.push((at, t, cycles));
+    }
+
+    /// Number of logged transfers.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t_l2l1(bytes: usize) -> Transfer {
+        Transfer::d1(Level::L2, Level::L1, bytes)
+    }
+
+    #[test]
+    fn record_and_totals() {
+        let mut s = DmaStats::default();
+        s.record(&t_l2l1(100), 40);
+        s.record(&Transfer::d1(Level::L1, Level::L2, 50), 20);
+        s.record(&Transfer::d1(Level::L3, Level::L2, 200), 700);
+        assert_eq!(s.total_transfers(), 3);
+        assert_eq!(s.total_bytes(), 350);
+        assert_eq!(s.bytes_at(Level::L2), 150);
+        assert_eq!(s.bytes_at(Level::L3), 200);
+        assert_eq!(s.bytes_in, 300);
+        assert_eq!(s.bytes_out, 50);
+    }
+
+    #[test]
+    fn reduction_math() {
+        let mut base = DmaStats::default();
+        for _ in 0..100 {
+            base.record(&t_l2l1(10), 5);
+        }
+        let mut fused = DmaStats::default();
+        for _ in 0..53 {
+            fused.record(&t_l2l1(10), 5);
+        }
+        let red = fused.transfer_reduction_vs(&base);
+        assert!((red - 47.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = DmaStats::default();
+        a.record(&t_l2l1(10), 5);
+        let mut b = DmaStats::default();
+        b.record(&t_l2l1(30), 8);
+        a.merge(&b);
+        assert_eq!(a.total_transfers(), 2);
+        assert_eq!(a.total_bytes(), 40);
+    }
+
+    #[test]
+    fn empty_baseline_reduction_is_zero() {
+        let s = DmaStats::default();
+        assert_eq!(s.transfer_reduction_vs(&DmaStats::default()), 0.0);
+    }
+}

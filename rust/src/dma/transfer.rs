@@ -1,0 +1,150 @@
+//! Transfer descriptors and the DMA cost model.
+
+
+use crate::memory::Level;
+
+/// Direction of a transfer between two adjacent levels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DmaDirection {
+    /// Toward compute (e.g. L2→L1 tile load).
+    In,
+    /// Away from compute (e.g. L1→L2 tile store).
+    Out,
+}
+
+/// A (possibly strided) DMA transfer between two memory levels.
+///
+/// `rows` runs of `row_bytes` contiguous bytes each. A fully contiguous
+/// transfer has `rows == 1`. 3-D transfers are expressed as `planes`
+/// repetitions of the 2-D pattern (the MCHAN 3-D extension the paper
+/// relies on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transfer {
+    /// Source level.
+    pub from: Level,
+    /// Destination level.
+    pub to: Level,
+    /// Number of 2-D planes (1 for 1-D/2-D transfers).
+    pub planes: usize,
+    /// Rows per plane.
+    pub rows: usize,
+    /// Contiguous bytes per row.
+    pub row_bytes: usize,
+}
+
+impl Transfer {
+    /// Contiguous 1-D transfer.
+    pub fn d1(from: Level, to: Level, bytes: usize) -> Self {
+        Self { from, to, planes: 1, rows: 1, row_bytes: bytes }
+    }
+
+    /// Strided 2-D transfer (`rows` × `row_bytes`).
+    pub fn d2(from: Level, to: Level, rows: usize, row_bytes: usize) -> Self {
+        Self { from, to, planes: 1, rows, row_bytes }
+    }
+
+    /// 3-D transfer.
+    pub fn d3(from: Level, to: Level, planes: usize, rows: usize, row_bytes: usize) -> Self {
+        Self { from, to, planes, rows, row_bytes }
+    }
+
+    /// Total payload bytes.
+    pub fn bytes(&self) -> usize {
+        self.planes * self.rows * self.row_bytes
+    }
+
+    /// Direction relative to compute (L1).
+    pub fn direction(&self) -> DmaDirection {
+        if self.to < self.from {
+            DmaDirection::In
+        } else {
+            DmaDirection::Out
+        }
+    }
+
+    /// The *outer* of the two levels — identifies which DMA engine/channel
+    /// services this transfer (L2↔L1 → cluster DMA; L3↔L2 → IO DMA).
+    pub fn channel_level(&self) -> Level {
+        self.from.max(self.to)
+    }
+}
+
+/// Cost model for one DMA engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DmaCostModel {
+    /// Fixed cycles to program + launch one transfer command.
+    pub setup_cycles: u64,
+    /// Extra cycles charged per row beyond the first (descriptor re-arm
+    /// for strided transfers).
+    pub per_row_cycles: u64,
+    /// Streaming bandwidth in bytes per cycle (may be fractional, e.g.
+    /// 0.5 B/cycle for a HyperRAM link at cluster clock).
+    pub bytes_per_cycle: f64,
+}
+
+impl DmaCostModel {
+    /// Cycles to complete `t` on this engine.
+    pub fn cycles(&self, t: &Transfer) -> u64 {
+        let stream = (t.bytes() as f64 / self.bytes_per_cycle).ceil() as u64;
+        let rows = (t.planes * t.rows) as u64;
+        self.setup_cycles + self.per_row_cycles * rows.saturating_sub(1) + stream
+    }
+
+    /// Cycles for a burst of identical transfers issued back-to-back.
+    pub fn burst_cycles(&self, t: &Transfer, n: usize) -> u64 {
+        self.cycles(t) * n as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const M: DmaCostModel = DmaCostModel { setup_cycles: 30, per_row_cycles: 2, bytes_per_cycle: 8.0 };
+
+    #[test]
+    fn payload_bytes() {
+        assert_eq!(Transfer::d1(Level::L2, Level::L1, 100).bytes(), 100);
+        assert_eq!(Transfer::d2(Level::L2, Level::L1, 16, 64).bytes(), 1024);
+        assert_eq!(Transfer::d3(Level::L3, Level::L2, 4, 16, 64).bytes(), 4096);
+    }
+
+    #[test]
+    fn direction_and_channel() {
+        let load = Transfer::d1(Level::L2, Level::L1, 8);
+        assert_eq!(load.direction(), DmaDirection::In);
+        assert_eq!(load.channel_level(), Level::L2);
+        let store = Transfer::d1(Level::L1, Level::L2, 8);
+        assert_eq!(store.direction(), DmaDirection::Out);
+        let spill = Transfer::d1(Level::L2, Level::L3, 8);
+        assert_eq!(spill.channel_level(), Level::L3);
+    }
+
+    #[test]
+    fn cost_1d() {
+        let t = Transfer::d1(Level::L2, Level::L1, 800);
+        assert_eq!(M.cycles(&t), 30 + 100);
+    }
+
+    #[test]
+    fn cost_2d_charges_rows() {
+        let contiguous = Transfer::d1(Level::L2, Level::L1, 1024);
+        let strided = Transfer::d2(Level::L2, Level::L1, 16, 64);
+        assert_eq!(strided.bytes(), contiguous.bytes());
+        assert!(M.cycles(&strided) > M.cycles(&contiguous));
+        assert_eq!(M.cycles(&strided) - M.cycles(&contiguous), 2 * 15);
+    }
+
+    #[test]
+    fn fractional_bandwidth() {
+        let slow = DmaCostModel { setup_cycles: 300, per_row_cycles: 8, bytes_per_cycle: 0.5 };
+        let t = Transfer::d1(Level::L3, Level::L2, 100);
+        assert_eq!(slow.cycles(&t), 300 + 200);
+    }
+
+    #[test]
+    fn burst_is_linear() {
+        let t = Transfer::d2(Level::L2, Level::L1, 4, 32);
+        assert_eq!(M.burst_cycles(&t, 10), M.cycles(&t) * 10);
+    }
+}

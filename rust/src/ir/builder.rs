@@ -1,0 +1,242 @@
+//! Ergonomic graph construction, plus the stock workloads used by the
+//! paper's evaluation (ViT MLP variants).
+
+use anyhow::Result;
+
+use super::{ActKind, DType, Graph, Op, Tensor, TensorId, TensorKind};
+
+/// Fluent builder over [`Graph`].
+///
+/// (`no_run`: doctest binaries bypass the crate's rpath to the bundled
+/// libstdc++ that the `xla` native library needs; the same snippet runs
+/// as `examples/quickstart.rs`.)
+///
+/// ```no_run
+/// use ftl::ir::{GraphBuilder, DType, ActKind};
+/// let mut b = GraphBuilder::new(DType::Int8);
+/// let x = b.input("x", &[197, 768]);
+/// let h = b.linear("fc1", x, 3072, true);
+/// let a = b.act("gelu", ActKind::Gelu, h);
+/// let y = b.linear("fc2", a, 768, true);
+/// let g = b.finish(y).unwrap();
+/// assert_eq!(g.nodes.len(), 4);
+/// ```
+pub struct GraphBuilder {
+    graph: Graph,
+    dtype: DType,
+    fresh: usize,
+}
+
+impl GraphBuilder {
+    /// New builder; all tensors use `dtype` unless stated otherwise.
+    pub fn new(dtype: DType) -> Self {
+        Self { graph: Graph::new(), dtype, fresh: 0 }
+    }
+
+    fn fresh_name(&mut self, stem: &str) -> String {
+        self.fresh += 1;
+        format!("{stem}_{}", self.fresh)
+    }
+
+    /// Declare a graph input.
+    pub fn input(&mut self, name: &str, shape: &[usize]) -> TensorId {
+        self.graph
+            .add_tensor(Tensor::new(name, shape.to_vec(), self.dtype, TensorKind::Input))
+            .expect("duplicate input name")
+    }
+
+    /// Declare a weight tensor.
+    pub fn weight(&mut self, name: &str, shape: &[usize]) -> TensorId {
+        self.graph
+            .add_tensor(Tensor::new(name, shape.to_vec(), self.dtype, TensorKind::Weight))
+            .expect("duplicate weight name")
+    }
+
+    /// Fully-connected layer: `x [M,K] → [M,N]`, weights auto-declared.
+    pub fn linear(&mut self, name: &str, x: TensorId, n: usize, bias: bool) -> TensorId {
+        let k = *self.graph.tensors[x].shape.last().expect("linear input must have rank >= 1");
+        let w = self.weight(&format!("{name}.w"), &[k, n]);
+        let mut inputs = vec![x, w];
+        if bias {
+            let b = self.weight(&format!("{name}.b"), &[n]);
+            inputs.push(b);
+        }
+        let out = self.fresh_name(name);
+        let (_, t) = self
+            .graph
+            .add_node(name, Op::Gemm { transpose_b: false, has_bias: bias }, inputs, out, TensorKind::Intermediate)
+            .expect("linear build failed");
+        t
+    }
+
+    /// Elementwise activation.
+    pub fn act(&mut self, name: &str, kind: ActKind, x: TensorId) -> TensorId {
+        let out = self.fresh_name(name);
+        let (_, t) = self
+            .graph
+            .add_node(name, Op::Act(kind), vec![x], out, TensorKind::Intermediate)
+            .expect("act build failed");
+        t
+    }
+
+    /// Elementwise addition.
+    pub fn add(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        let out = self.fresh_name(name);
+        let (_, t) = self.graph.add_node(name, Op::Add, vec![a, b], out, TensorKind::Intermediate).expect("add failed");
+        t
+    }
+
+    /// LayerNorm over the last axis; gamma/beta auto-declared.
+    pub fn layernorm(&mut self, name: &str, x: TensorId) -> TensorId {
+        let c = *self.graph.tensors[x].shape.last().unwrap();
+        let gamma = self.weight(&format!("{name}.gamma"), &[c]);
+        let beta = self.weight(&format!("{name}.beta"), &[c]);
+        let out = self.fresh_name(name);
+        let (_, t) = self
+            .graph
+            .add_node(name, Op::LayerNorm { eps: 1e-5 }, vec![x, gamma, beta], out, TensorKind::Intermediate)
+            .expect("layernorm failed");
+        t
+    }
+
+    /// Mark `out` as the graph output, validate, and return the graph.
+    pub fn finish(mut self, out: TensorId) -> Result<Graph> {
+        self.graph.tensors[out].kind = TensorKind::Output;
+        self.graph.validate()?;
+        Ok(self.graph)
+    }
+
+    /// Access the graph under construction.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+}
+
+/// The paper's benchmark workload: a ViT MLP block,
+/// `GEMM(d→h) → GeLU → GEMM(h→d)`, over `seq` tokens.
+///
+/// ViT-Base: `seq=197, d=768, h=3072` (h = 4d), int8 — the configuration
+/// whose intermediate tensor (`seq×h` ≈ 605 KiB) overflows the reduced
+/// Siracusa L2, triggering the paper's L3-spill mechanism.
+pub fn vit_mlp(seq: usize, d: usize, h: usize, dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new(dtype);
+    let x = b.input("x", &[seq, d]);
+    let fc1 = b.linear("fc1", x, h, true);
+    let act = b.act("gelu", ActKind::Gelu, fc1);
+    let fc2 = b.linear("fc2", act, d, true);
+    b.finish(fc2).expect("vit_mlp is valid by construction")
+}
+
+/// Named ViT MLP presets (model dims from Dosovitskiy et al., ICLR'21).
+pub fn vit_mlp_preset(name: &str) -> Option<Graph> {
+    let (seq, d, h) = match name {
+        "vit-tiny" => (197, 192, 768),
+        "vit-small" => (197, 384, 1536),
+        "vit-base" => (197, 768, 3072),
+        "vit-large" => (197, 1024, 4096),
+        _ => return None,
+    };
+    Some(vit_mlp(seq, d, h, DType::Int8))
+}
+
+/// A deeper MLP chain (for fusion-length ablations): `n_layers` of
+/// Linear(+bias)→GeLU with constant width.
+pub fn deep_mlp(seq: usize, width: usize, n_layers: usize, dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new(dtype);
+    let mut t = b.input("x", &[seq, width]);
+    for i in 0..n_layers {
+        t = b.linear(&format!("fc{i}"), t, width, true);
+        t = b.act(&format!("act{i}"), ActKind::Gelu, t);
+    }
+    b.finish(t).expect("deep_mlp is valid by construction")
+}
+
+/// A single-head self-attention block over `seq` tokens of width `d`
+/// with head dim `dh`:
+/// `Q = X·Wq, K = X·Wk, V = X·Wv, S = softmax(Q·Kᵀ), O = (S·V)·Wo`.
+///
+/// Exercises the `transpose_b` GEMM path (`Q·Kᵀ` via `Gemm{transpose_b}`)
+/// and the Softmax whole-row kernel policy inside a real deployment.
+pub fn attention_head(seq: usize, d: usize, dh: usize, dtype: DType) -> Graph {
+    let mut g = Graph::new();
+    let x = g.add_tensor(Tensor::new("x", vec![seq, d], dtype, TensorKind::Input)).expect("fresh graph");
+    let wq = g.add_tensor(Tensor::new("wq", vec![d, dh], dtype, TensorKind::Weight)).unwrap();
+    let wk = g.add_tensor(Tensor::new("wk", vec![d, dh], dtype, TensorKind::Weight)).unwrap();
+    let wv = g.add_tensor(Tensor::new("wv", vec![d, dh], dtype, TensorKind::Weight)).unwrap();
+    let wo = g.add_tensor(Tensor::new("wo", vec![dh, d], dtype, TensorKind::Weight)).unwrap();
+    let gemm = |tb| Op::Gemm { transpose_b: tb, has_bias: false };
+    let (_, q) = g.add_node("q_proj", gemm(false), vec![x, wq], "q", TensorKind::Intermediate).unwrap();
+    let (_, k) = g.add_node("k_proj", gemm(false), vec![x, wk], "k", TensorKind::Intermediate).unwrap();
+    let (_, v) = g.add_node("v_proj", gemm(false), vec![x, wv], "v", TensorKind::Intermediate).unwrap();
+    // scores = Q · Kᵀ  (K stored [seq, dh] → transpose_b)
+    let (_, s) = g.add_node("scores", gemm(true), vec![q, k], "s", TensorKind::Intermediate).unwrap();
+    let (_, p) = g.add_node("softmax", Op::Softmax, vec![s], "p", TensorKind::Intermediate).unwrap();
+    let (_, av) = g.add_node("attend", gemm(false), vec![p, v], "av", TensorKind::Intermediate).unwrap();
+    g.add_node("out_proj", gemm(false), vec![av, wo], "y", TensorKind::Output).unwrap();
+    g.validate().expect("attention_head is valid by construction");
+    g
+}
+
+/// A full pre-norm transformer MLP sub-block with residual:
+/// `LN → FC1 → GeLU → FC2 → Add(residual)`.
+pub fn vit_mlp_block(seq: usize, d: usize, h: usize, dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new(dtype);
+    let x = b.input("x", &[seq, d]);
+    let ln = b.layernorm("ln", x);
+    let fc1 = b.linear("fc1", ln, h, true);
+    let act = b.act("gelu", ActKind::Gelu, fc1);
+    let fc2 = b.linear("fc2", act, d, true);
+    let res = b.add("residual", fc2, x);
+    b.finish(res).expect("vit_mlp_block is valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vit_base_shapes() {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        g.validate().unwrap();
+        let (_, h) = g.tensor_by_name("fc1_1").unwrap();
+        assert_eq!(h.shape, vec![197, 3072]);
+        let out = g.outputs();
+        assert_eq!(g.tensors[out[0]].shape, vec![197, 768]);
+        // intermediate ≈ 605 KiB in int8
+        assert_eq!(h.size_bytes(), 197 * 3072);
+    }
+
+    #[test]
+    fn presets_exist() {
+        for p in ["vit-tiny", "vit-small", "vit-base", "vit-large"] {
+            let g = vit_mlp_preset(p).unwrap();
+            g.validate().unwrap();
+        }
+        assert!(vit_mlp_preset("nope").is_none());
+    }
+
+    #[test]
+    fn deep_mlp_layers() {
+        let g = deep_mlp(64, 128, 4, DType::Int8);
+        g.validate().unwrap();
+        assert_eq!(g.nodes.len(), 8);
+    }
+
+    #[test]
+    fn attention_head_shapes() {
+        let g = attention_head(197, 768, 64, DType::Int8);
+        g.validate().unwrap();
+        assert_eq!(g.nodes.len(), 7);
+        let (_, s) = g.tensor_by_name("s").unwrap();
+        assert_eq!(s.shape, vec![197, 197], "scores are seq x seq");
+        let out = g.outputs();
+        assert_eq!(g.tensors[out[0]].shape, vec![197, 768]);
+    }
+
+    #[test]
+    fn mlp_block_residual() {
+        let g = vit_mlp_block(16, 32, 64, DType::F32);
+        g.validate().unwrap();
+        assert_eq!(g.nodes.last().unwrap().op, Op::Add);
+    }
+}

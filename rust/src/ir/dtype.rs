@@ -1,0 +1,84 @@
+//! Element datatypes.
+
+
+/// Element type of a tensor.
+///
+/// The paper's kernels are int8 (XpulpV2 SIMD / NE16 NPU); the PJRT
+/// numerics path uses f32 because the Pallas oracle kernels are lowered in
+/// f32. Cost models only care about `size_bytes`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 8-bit signed integer (quantised activations/weights).
+    Int8,
+    /// 16-bit signed integer.
+    Int16,
+    /// 32-bit signed integer (accumulators, requant params).
+    Int32,
+    /// 16-bit brain float.
+    BF16,
+    /// 32-bit IEEE float.
+    F32,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub const fn size_bytes(self) -> usize {
+        match self {
+            DType::Int8 => 1,
+            DType::Int16 | DType::BF16 => 2,
+            DType::Int32 | DType::F32 => 4,
+        }
+    }
+
+    /// Short lowercase name, matching the JSON network format.
+    pub const fn name(self) -> &'static str {
+        match self {
+            DType::Int8 => "int8",
+            DType::Int16 => "int16",
+            DType::Int32 => "int32",
+            DType::BF16 => "bf16",
+            DType::F32 => "f32",
+        }
+    }
+
+    /// Parse from the JSON network format name.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "int8" | "i8" => DType::Int8,
+            "int16" | "i16" => DType::Int16,
+            "int32" | "i32" => DType::Int32,
+            "bf16" => DType::BF16,
+            "f32" | "float32" => DType::F32,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::Int8.size_bytes(), 1);
+        assert_eq!(DType::Int16.size_bytes(), 2);
+        assert_eq!(DType::Int32.size_bytes(), 4);
+        assert_eq!(DType::BF16.size_bytes(), 2);
+        assert_eq!(DType::F32.size_bytes(), 4);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in [DType::Int8, DType::Int16, DType::Int32, DType::BF16, DType::F32] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("i8"), Some(DType::Int8));
+        assert_eq!(DType::parse("nope"), None);
+    }
+}

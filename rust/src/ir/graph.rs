@@ -1,0 +1,266 @@
+//! The graph container: tensors + nodes, topological order, validation.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{Op, Tensor, TensorKind};
+
+/// Index of a tensor within a [`Graph`].
+pub type TensorId = usize;
+/// Index of a node within a [`Graph`].
+pub type NodeId = usize;
+
+/// One operator application.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Node name (unique, used in reports and schedules).
+    pub name: String,
+    /// The operator.
+    pub op: Op,
+    /// Input tensor ids, in the op's expected order.
+    pub inputs: Vec<TensorId>,
+    /// Output tensor id (single-output ops only — enough for this IR).
+    pub output: TensorId,
+}
+
+/// A static DNN graph.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// All tensor declarations.
+    pub tensors: Vec<Tensor>,
+    /// Operator nodes, stored in topological order (validated).
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    /// Empty graph.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a tensor; errors if the name already exists.
+    pub fn add_tensor(&mut self, t: Tensor) -> Result<TensorId> {
+        ensure!(
+            !self.tensors.iter().any(|x| x.name == t.name),
+            "duplicate tensor name {}",
+            t.name
+        );
+        self.tensors.push(t);
+        Ok(self.tensors.len() - 1)
+    }
+
+    /// Add a node whose output shape is inferred from its inputs. The
+    /// output tensor is created with the given name and kind.
+    pub fn add_node(
+        &mut self,
+        name: impl Into<String>,
+        op: Op,
+        inputs: Vec<TensorId>,
+        out_name: impl Into<String>,
+        out_kind: TensorKind,
+    ) -> Result<(NodeId, TensorId)> {
+        let name = name.into();
+        for &i in &inputs {
+            ensure!(i < self.tensors.len(), "node {name}: input tensor id {i} out of range");
+        }
+        let shapes: Vec<&[usize]> = inputs.iter().map(|&i| self.tensors[i].shape.as_slice()).collect();
+        let out_shape = op
+            .infer_shape(&shapes)
+            .with_context(|| format!("shape inference failed for node {name}"))?;
+        let dtype = self.tensors[inputs[0]].dtype;
+        let out = self.add_tensor(Tensor::new(out_name, out_shape, dtype, out_kind))?;
+        self.nodes.push(Node { name, op, inputs, output: out });
+        Ok((self.nodes.len() - 1, out))
+    }
+
+    /// Tensor lookup by name.
+    pub fn tensor_by_name(&self, name: &str) -> Option<(TensorId, &Tensor)> {
+        self.tensors.iter().enumerate().find(|(_, t)| t.name == name)
+    }
+
+    /// Node lookup by name.
+    pub fn node_by_name(&self, name: &str) -> Option<(NodeId, &Node)> {
+        self.nodes.iter().enumerate().find(|(_, n)| n.name == name)
+    }
+
+    /// Producer node of each tensor (None for graph inputs/weights).
+    pub fn producers(&self) -> Vec<Option<NodeId>> {
+        let mut p = vec![None; self.tensors.len()];
+        for (nid, n) in self.nodes.iter().enumerate() {
+            p[n.output] = Some(nid);
+        }
+        p
+    }
+
+    /// Consumer nodes of each tensor.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut c = vec![Vec::new(); self.tensors.len()];
+        for (nid, n) in self.nodes.iter().enumerate() {
+            for &i in &n.inputs {
+                c[i].push(nid);
+            }
+        }
+        c
+    }
+
+    /// Graph input tensors (kind == Input).
+    pub fn inputs(&self) -> Vec<TensorId> {
+        self.ids_of_kind(TensorKind::Input)
+    }
+
+    /// Graph output tensors (kind == Output).
+    pub fn outputs(&self) -> Vec<TensorId> {
+        self.ids_of_kind(TensorKind::Output)
+    }
+
+    /// Weight tensors.
+    pub fn weights(&self) -> Vec<TensorId> {
+        self.ids_of_kind(TensorKind::Weight)
+    }
+
+    fn ids_of_kind(&self, kind: TensorKind) -> Vec<TensorId> {
+        self.tensors
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.kind == kind)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Total bytes of all weight tensors.
+    pub fn weight_bytes(&self) -> usize {
+        self.weights().iter().map(|&i| self.tensors[i].size_bytes()).sum()
+    }
+
+    /// Total MAC count over all nodes.
+    pub fn total_macs(&self) -> usize {
+        self.nodes
+            .iter()
+            .map(|n| {
+                let shapes: Vec<&[usize]> = n.inputs.iter().map(|&i| self.tensors[i].shape.as_slice()).collect();
+                n.op.macs(&shapes, &self.tensors[n.output].shape)
+            })
+            .sum()
+    }
+
+    /// Validate the whole graph: names unique, node inputs defined before
+    /// use (topological order), shapes consistent with `infer_shape`,
+    /// every Intermediate has exactly one producer and ≥1 consumer.
+    pub fn validate(&self) -> Result<()> {
+        let mut names = HashMap::new();
+        for (i, t) in self.tensors.iter().enumerate() {
+            if let Some(prev) = names.insert(t.name.clone(), i) {
+                bail!("duplicate tensor name {} (ids {prev} and {i})", t.name);
+            }
+            ensure!(!t.shape.is_empty(), "tensor {} has empty shape", t.name);
+            ensure!(t.shape.iter().all(|&d| d > 0), "tensor {} has zero dim", t.name);
+        }
+
+        let mut defined: Vec<bool> = self
+            .tensors
+            .iter()
+            .map(|t| !matches!(t.kind, TensorKind::Intermediate | TensorKind::Output))
+            .collect();
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                ensure!(
+                    defined[i],
+                    "node {} uses tensor {} before it is produced (not topological)",
+                    n.name,
+                    self.tensors[i].name
+                );
+            }
+            let shapes: Vec<&[usize]> = n.inputs.iter().map(|&i| self.tensors[i].shape.as_slice()).collect();
+            let inferred = n.op.infer_shape(&shapes)?;
+            ensure!(
+                inferred == self.tensors[n.output].shape,
+                "node {}: declared output shape {:?} != inferred {:?}",
+                n.name,
+                self.tensors[n.output].shape,
+                inferred
+            );
+            ensure!(!defined[n.output], "tensor {} produced twice", self.tensors[n.output].name);
+            defined[n.output] = true;
+        }
+
+        let consumers = self.consumers();
+        let producers = self.producers();
+        for (i, t) in self.tensors.iter().enumerate() {
+            match t.kind {
+                TensorKind::Intermediate => {
+                    ensure!(producers[i].is_some(), "intermediate {} has no producer", t.name);
+                    ensure!(!consumers[i].is_empty(), "intermediate {} has no consumer", t.name);
+                }
+                TensorKind::Output => {
+                    ensure!(producers[i].is_some(), "output {} has no producer", t.name);
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ActKind, DType};
+
+    fn mlp() -> Graph {
+        let mut g = Graph::new();
+        let x = g.add_tensor(Tensor::new("x", vec![8, 16], DType::F32, TensorKind::Input)).unwrap();
+        let w1 = g.add_tensor(Tensor::new("w1", vec![16, 32], DType::F32, TensorKind::Weight)).unwrap();
+        let (_, h) = g
+            .add_node("fc1", Op::Gemm { transpose_b: false, has_bias: false }, vec![x, w1], "h", TensorKind::Intermediate)
+            .unwrap();
+        let (_, a) = g.add_node("act", Op::Act(ActKind::Gelu), vec![h], "a", TensorKind::Intermediate).unwrap();
+        let w2 = g.add_tensor(Tensor::new("w2", vec![32, 16], DType::F32, TensorKind::Weight)).unwrap();
+        g.add_node("fc2", Op::Gemm { transpose_b: false, has_bias: false }, vec![a, w2], "y", TensorKind::Output)
+            .unwrap();
+        g
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = mlp();
+        g.validate().unwrap();
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.inputs().len(), 1);
+        assert_eq!(g.outputs().len(), 1);
+        assert_eq!(g.weights().len(), 2);
+    }
+
+    #[test]
+    fn producers_consumers() {
+        let g = mlp();
+        let p = g.producers();
+        let c = g.consumers();
+        let (h, _) = g.tensor_by_name("h").unwrap();
+        assert_eq!(p[h], Some(0));
+        assert_eq!(c[h], vec![1]);
+        let (x, _) = g.tensor_by_name("x").unwrap();
+        assert_eq!(p[x], None);
+    }
+
+    #[test]
+    fn duplicate_name_rejected() {
+        let mut g = Graph::new();
+        g.add_tensor(Tensor::new("x", vec![1], DType::F32, TensorKind::Input)).unwrap();
+        assert!(g.add_tensor(Tensor::new("x", vec![2], DType::F32, TensorKind::Input)).is_err());
+    }
+
+    #[test]
+    fn total_macs() {
+        let g = mlp();
+        // fc1: 8*32*16, gelu: 8*32, fc2: 8*16*32
+        assert_eq!(g.total_macs(), 8 * 32 * 16 + 8 * 32 + 8 * 16 * 32);
+    }
+
+    #[test]
+    fn non_topological_rejected() {
+        let mut g = mlp();
+        g.nodes.swap(0, 2);
+        assert!(g.validate().is_err());
+    }
+}

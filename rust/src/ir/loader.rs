@@ -1,0 +1,209 @@
+//! JSON (de)serialisation of networks — the on-disk interchange format of
+//! the deployment flow (`ftl deploy --network net.json`).
+//!
+//! Format:
+//!
+//! ```json
+//! {
+//!   "tensors": [ {"name":"x","shape":[197,768],"dtype":"int8","kind":"input"}, ... ],
+//!   "nodes":   [ {"name":"fc1","op":"gemm","attrs":{"transpose_b":false,"has_bias":true},
+//!                 "inputs":[0,1,2],"output":3}, ... ]
+//! }
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+use super::{ActKind, DType, Graph, Node, Op, Tensor, TensorKind};
+
+fn kind_name(k: TensorKind) -> &'static str {
+    match k {
+        TensorKind::Input => "input",
+        TensorKind::Output => "output",
+        TensorKind::Weight => "weight",
+        TensorKind::Intermediate => "intermediate",
+    }
+}
+
+fn kind_parse(s: &str) -> Result<TensorKind> {
+    Ok(match s {
+        "input" => TensorKind::Input,
+        "output" => TensorKind::Output,
+        "weight" => TensorKind::Weight,
+        "intermediate" => TensorKind::Intermediate,
+        _ => bail!("unknown tensor kind '{s}'"),
+    })
+}
+
+fn op_to_json(op: &Op) -> Json {
+    let (name, attrs) = match op {
+        Op::Gemm { transpose_b, has_bias } => (
+            "gemm",
+            Json::obj(vec![("transpose_b", Json::Bool(*transpose_b)), ("has_bias", Json::Bool(*has_bias))]),
+        ),
+        Op::Act(k) => ("act", Json::obj(vec![("kind", Json::str(k.name()))])),
+        Op::Add => ("add", Json::obj(vec![])),
+        Op::LayerNorm { eps } => ("layernorm", Json::obj(vec![("eps", Json::Num(*eps as f64))])),
+        Op::Softmax => ("softmax", Json::obj(vec![])),
+        Op::Transpose => ("transpose", Json::obj(vec![])),
+        Op::Conv2d { kh, kw, stride, pad } => (
+            "conv2d",
+            Json::obj(vec![
+                ("kh", Json::int(*kh)),
+                ("kw", Json::int(*kw)),
+                ("stride", Json::int(*stride)),
+                ("pad", Json::int(*pad)),
+            ]),
+        ),
+        Op::Requant => ("requant", Json::obj(vec![])),
+    };
+    Json::obj(vec![("op", Json::str(name)), ("attrs", attrs)])
+}
+
+fn op_from_json(v: &Json) -> Result<Op> {
+    let name = v.get("op")?.as_str()?;
+    let attrs = v.get_opt("attrs").cloned().unwrap_or_else(|| Json::obj(vec![]));
+    Ok(match name {
+        "gemm" => Op::Gemm {
+            transpose_b: attrs.get_opt("transpose_b").map(|b| b.as_bool()).transpose()?.unwrap_or(false),
+            has_bias: attrs.get_opt("has_bias").map(|b| b.as_bool()).transpose()?.unwrap_or(false),
+        },
+        "act" => {
+            let k = attrs.get("kind")?.as_str()?;
+            let kind = match k {
+                "gelu" => ActKind::Gelu,
+                "relu" => ActKind::Relu,
+                "sigmoid" => ActKind::Sigmoid,
+                "identity" => ActKind::Identity,
+                _ => bail!("unknown activation '{k}'"),
+            };
+            Op::Act(kind)
+        }
+        "gelu" => Op::Act(ActKind::Gelu),
+        "relu" => Op::Act(ActKind::Relu),
+        "add" => Op::Add,
+        "layernorm" => Op::LayerNorm { eps: attrs.get_opt("eps").map(|e| e.as_f64()).transpose()?.unwrap_or(1e-5) as f32 },
+        "softmax" => Op::Softmax,
+        "transpose" => Op::Transpose,
+        "conv2d" => Op::Conv2d {
+            kh: attrs.get("kh")?.as_usize()?,
+            kw: attrs.get("kw")?.as_usize()?,
+            stride: attrs.get("stride")?.as_usize()?,
+            pad: attrs.get("pad")?.as_usize()?,
+        },
+        "requant" => Op::Requant,
+        _ => bail!("unknown op '{name}'"),
+    })
+}
+
+/// Parse a graph from JSON text and validate it.
+pub fn graph_from_json(text: &str) -> Result<Graph> {
+    let v = parse(text).context("parsing network JSON")?;
+    let mut g = Graph::new();
+    for (i, t) in v.get("tensors")?.as_arr()?.iter().enumerate() {
+        let name = t.get("name")?.as_str()?.to_string();
+        let shape: Vec<usize> =
+            t.get("shape")?.as_arr()?.iter().map(|d| d.as_usize()).collect::<Result<_>>()?;
+        let dtype = DType::parse(t.get("dtype")?.as_str()?)
+            .ok_or_else(|| anyhow!("tensor {i}: unknown dtype"))?;
+        let kind = kind_parse(t.get("kind")?.as_str()?)?;
+        g.add_tensor(Tensor::new(name, shape, dtype, kind))?;
+    }
+    for n in v.get("nodes")?.as_arr()? {
+        let name = n.get("name")?.as_str()?.to_string();
+        let op = op_from_json(n)?;
+        let inputs: Vec<usize> =
+            n.get("inputs")?.as_arr()?.iter().map(|i| i.as_usize()).collect::<Result<_>>()?;
+        let output = n.get("output")?.as_usize()?;
+        for &i in inputs.iter().chain(std::iter::once(&output)) {
+            if i >= g.tensors.len() {
+                bail!("node {name}: tensor id {i} out of range");
+            }
+        }
+        g.nodes.push(Node { name, op, inputs, output });
+    }
+    g.validate().context("network JSON failed validation")?;
+    Ok(g)
+}
+
+/// Serialise a graph to pretty JSON.
+pub fn graph_to_json(g: &Graph) -> Result<String> {
+    let tensors: Vec<Json> = g
+        .tensors
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("name", Json::str(&t.name)),
+                ("shape", Json::Arr(t.shape.iter().map(|&d| Json::int(d)).collect())),
+                ("dtype", Json::str(t.dtype.name())),
+                ("kind", Json::str(kind_name(t.kind))),
+            ])
+        })
+        .collect();
+    let nodes: Vec<Json> = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut obj = op_to_json(&n.op);
+            if let Json::Obj(m) = &mut obj {
+                m.insert("name".into(), Json::str(&n.name));
+                m.insert("inputs".into(), Json::Arr(n.inputs.iter().map(|&i| Json::int(i)).collect()));
+                m.insert("output".into(), Json::int(n.output));
+            }
+            obj
+        })
+        .collect();
+    Ok(Json::obj(vec![("tensors", Json::Arr(tensors)), ("nodes", Json::Arr(nodes))]).pretty())
+}
+
+/// Load a graph from a file path.
+pub fn graph_from_file(path: &std::path::Path) -> Result<Graph> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    graph_from_json(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::{vit_mlp, vit_mlp_block};
+    use crate::ir::DType;
+
+    #[test]
+    fn json_roundtrip() {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let text = graph_to_json(&g).unwrap();
+        let g2 = graph_from_json(&text).unwrap();
+        assert_eq!(g.tensors.len(), g2.tensors.len());
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+        for (a, b) in g.tensors.iter().zip(&g2.tensors) {
+            assert_eq!(a, b);
+        }
+        for (a, b) in g.nodes.iter().zip(&g2.nodes) {
+            assert_eq!(a.op, b.op);
+            assert_eq!(a.inputs, b.inputs);
+            assert_eq!(a.output, b.output);
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_ops() {
+        let g = vit_mlp_block(16, 32, 64, DType::F32);
+        let text = graph_to_json(&g).unwrap();
+        let g2 = graph_from_json(&text).unwrap();
+        g2.validate().unwrap();
+        assert_eq!(g.nodes.len(), g2.nodes.len());
+    }
+
+    #[test]
+    fn invalid_json_rejected() {
+        assert!(graph_from_json("{").is_err());
+        // valid JSON, invalid graph (node uses undefined tensor id)
+        let bad = r#"{"tensors":[],"nodes":[{"name":"n","op":"add","inputs":[0,1],"output":2}]}"#;
+        assert!(graph_from_json(bad).is_err());
+        // unknown op
+        let bad = r#"{"tensors":[{"name":"x","shape":[1],"dtype":"int8","kind":"input"}],
+                      "nodes":[{"name":"n","op":"warp","inputs":[0],"output":0}]}"#;
+        assert!(graph_from_json(bad).is_err());
+    }
+}

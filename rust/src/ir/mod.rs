@@ -1,0 +1,21 @@
+//! Graph intermediate representation.
+//!
+//! A deliberately small, Deeploy-style IR: a [`Graph`] is a list of tensor
+//! declarations plus a list of operator nodes in topological order. Every
+//! tensor has a static shape (DNN graphs are static — the property the
+//! whole paper builds on), a dtype, and a *home* memory level (weights and
+//! activations start in L3/L2 and are tiled down to L1 by the FTL engine).
+
+pub mod builder;
+mod dtype;
+mod graph;
+mod loader;
+mod op;
+mod tensor;
+
+pub use builder::GraphBuilder;
+pub use dtype::DType;
+pub use graph::{Graph, Node, NodeId, TensorId};
+pub use loader::{graph_from_file, graph_from_json, graph_to_json};
+pub use op::{ActKind, Op};
+pub use tensor::{Tensor, TensorKind};

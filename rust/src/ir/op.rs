@@ -1,0 +1,257 @@
+//! Operator definitions and shape inference.
+
+use anyhow::{bail, ensure, Result};
+
+/// Elementwise activation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    /// Gaussian Error Linear Unit (the paper's benchmark op).
+    Gelu,
+    /// Rectified Linear Unit.
+    Relu,
+    /// Logistic sigmoid.
+    Sigmoid,
+    /// Identity (useful for testing the fusion machinery).
+    Identity,
+}
+
+impl ActKind {
+    /// Short name used in reports and the JSON format.
+    pub const fn name(self) -> &'static str {
+        match self {
+            ActKind::Gelu => "gelu",
+            ActKind::Relu => "relu",
+            ActKind::Sigmoid => "sigmoid",
+            ActKind::Identity => "identity",
+        }
+    }
+}
+
+/// Operator node payload.
+///
+/// Shapes use the conventions:
+/// * `Gemm`: `A [M,K] × B [K,N] (+ bias [N]) → [M,N]` (`transpose_b` flips B
+///   to `[N,K]`).
+/// * Elementwise ops preserve shape.
+/// * `LayerNorm`/`Softmax` normalise over the last axis.
+/// * `Conv2d`: NHWC activation `[N,H,W,C]`, weights `[Kh,Kw,C,F] → [N,H',W',F]`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// General matrix multiplication with optional bias.
+    Gemm {
+        /// If true, the second input is stored `[N, K]`.
+        transpose_b: bool,
+        /// If true, a third input (bias, `[N]`) is expected.
+        has_bias: bool,
+    },
+    /// Elementwise activation.
+    Act(ActKind),
+    /// Elementwise addition of two tensors of identical shape.
+    Add,
+    /// Layer normalisation over the last axis (gamma/beta inputs `[C]`).
+    LayerNorm {
+        /// Numerical-stability epsilon (recorded for codegen; cost model
+        /// does not depend on it).
+        eps: f32,
+    },
+    /// Softmax over the last axis.
+    Softmax,
+    /// 2-D transpose of a matrix `[M,N] → [N,M]`.
+    Transpose,
+    /// 2-D convolution, NHWC.
+    Conv2d {
+        /// Kernel height.
+        kh: usize,
+        /// Kernel width.
+        kw: usize,
+        /// Stride (same in H and W).
+        stride: usize,
+        /// Symmetric zero padding (same in H and W).
+        pad: usize,
+    },
+    /// Requantisation (int32 accumulator → int8), elementwise.
+    Requant,
+}
+
+impl Op {
+    /// Human-readable operator name.
+    pub fn name(&self) -> String {
+        match self {
+            Op::Gemm { .. } => "gemm".into(),
+            Op::Act(k) => k.name().into(),
+            Op::Add => "add".into(),
+            Op::LayerNorm { .. } => "layernorm".into(),
+            Op::Softmax => "softmax".into(),
+            Op::Transpose => "transpose".into(),
+            Op::Conv2d { .. } => "conv2d".into(),
+            Op::Requant => "requant".into(),
+        }
+    }
+
+    /// Number of tensor inputs this op expects.
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Gemm { has_bias, .. } => 2 + usize::from(*has_bias),
+            Op::Act(_) | Op::Softmax | Op::Transpose | Op::Requant => 1,
+            Op::Add => 2,
+            Op::LayerNorm { .. } => 3,
+            Op::Conv2d { .. } => 2,
+        }
+    }
+
+    /// Infer the output shape from input shapes; errors on rank/shape
+    /// mismatches. This is the single source of truth used by the graph
+    /// validator and the tiling constraint generator.
+    pub fn infer_shape(&self, inputs: &[&[usize]]) -> Result<Vec<usize>> {
+        ensure!(
+            inputs.len() == self.arity(),
+            "{}: expected {} inputs, got {}",
+            self.name(),
+            self.arity(),
+            inputs.len()
+        );
+        match self {
+            Op::Gemm { transpose_b, has_bias } => {
+                let a = inputs[0];
+                let b = inputs[1];
+                ensure!(a.len() == 2 && b.len() == 2, "gemm expects rank-2 inputs");
+                let (m, k) = (a[0], a[1]);
+                let (bk, n) = if *transpose_b { (b[1], b[0]) } else { (b[0], b[1]) };
+                ensure!(k == bk, "gemm K mismatch: A has K={k}, B has K={bk}");
+                if *has_bias {
+                    let bias = inputs[2];
+                    ensure!(bias == [n], "gemm bias must be [{n}], got {bias:?}");
+                }
+                Ok(vec![m, n])
+            }
+            Op::Act(_) | Op::Softmax | Op::Requant => Ok(inputs[0].to_vec()),
+            Op::Add => {
+                ensure!(inputs[0] == inputs[1], "add shape mismatch: {:?} vs {:?}", inputs[0], inputs[1]);
+                Ok(inputs[0].to_vec())
+            }
+            Op::LayerNorm { .. } => {
+                let x = inputs[0];
+                ensure!(!x.is_empty(), "layernorm input must have rank >= 1");
+                let c = *x.last().unwrap();
+                ensure!(inputs[1] == [c], "layernorm gamma must be [{c}]");
+                ensure!(inputs[2] == [c], "layernorm beta must be [{c}]");
+                Ok(x.to_vec())
+            }
+            Op::Transpose => {
+                let x = inputs[0];
+                ensure!(x.len() == 2, "transpose expects rank-2 input");
+                Ok(vec![x[1], x[0]])
+            }
+            Op::Conv2d { kh, kw, stride, pad } => {
+                let x = inputs[0];
+                let w = inputs[1];
+                ensure!(x.len() == 4, "conv2d expects NHWC input");
+                ensure!(w.len() == 4, "conv2d expects KhKwCF weights");
+                let (n, h, wi, c) = (x[0], x[1], x[2], x[3]);
+                ensure!(w[0] == *kh && w[1] == *kw, "conv2d weight kernel dims mismatch");
+                ensure!(w[2] == c, "conv2d channel mismatch: input C={c}, weight C={}", w[2]);
+                let f = w[3];
+                let ho = conv_out(h, *kh, *stride, *pad)?;
+                let wo = conv_out(wi, *kw, *stride, *pad)?;
+                Ok(vec![n, ho, wo, f])
+            }
+        }
+    }
+
+    /// Multiply–accumulate count for the full (un-tiled) op — the basis of
+    /// the compute cost models.
+    pub fn macs(&self, inputs: &[&[usize]], output: &[usize]) -> usize {
+        match self {
+            Op::Gemm { transpose_b, .. } => {
+                let k = if *transpose_b { inputs[1][1] } else { inputs[1][0] };
+                output.iter().product::<usize>() * k
+            }
+            Op::Conv2d { kh, kw, .. } => {
+                let c = inputs[0][3];
+                output.iter().product::<usize>() * kh * kw * c
+            }
+            // Elementwise / normalisation ops: ~1 "op" per element.
+            _ => output.iter().product(),
+        }
+    }
+
+    /// True for ops whose tile-output dims map 1:1 to tile-input dims
+    /// (elementwise), which makes them trivially fusable.
+    pub fn is_elementwise(&self) -> bool {
+        matches!(self, Op::Act(_) | Op::Add | Op::Requant)
+    }
+}
+
+fn conv_out(dim: usize, k: usize, stride: usize, pad: usize) -> Result<usize> {
+    let padded = dim + 2 * pad;
+    if padded < k {
+        bail!("conv2d: input dim {dim} (+2*{pad}) smaller than kernel {k}");
+    }
+    Ok((padded - k) / stride + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_shape() {
+        let op = Op::Gemm { transpose_b: false, has_bias: true };
+        let out = op.infer_shape(&[&[197, 768], &[768, 3072], &[3072]]).unwrap();
+        assert_eq!(out, vec![197, 3072]);
+    }
+
+    #[test]
+    fn gemm_transposed_b() {
+        let op = Op::Gemm { transpose_b: true, has_bias: false };
+        let out = op.infer_shape(&[&[4, 8], &[16, 8]]).unwrap();
+        assert_eq!(out, vec![4, 16]);
+    }
+
+    #[test]
+    fn gemm_k_mismatch() {
+        let op = Op::Gemm { transpose_b: false, has_bias: false };
+        assert!(op.infer_shape(&[&[4, 8], &[9, 16]]).is_err());
+    }
+
+    #[test]
+    fn gemm_bad_bias() {
+        let op = Op::Gemm { transpose_b: false, has_bias: true };
+        assert!(op.infer_shape(&[&[4, 8], &[8, 16], &[15]]).is_err());
+    }
+
+    #[test]
+    fn elementwise_shapes() {
+        assert_eq!(Op::Act(ActKind::Gelu).infer_shape(&[&[5, 7]]).unwrap(), vec![5, 7]);
+        assert_eq!(Op::Add.infer_shape(&[&[5, 7], &[5, 7]]).unwrap(), vec![5, 7]);
+        assert!(Op::Add.infer_shape(&[&[5, 7], &[5, 8]]).is_err());
+    }
+
+    #[test]
+    fn layernorm_shape() {
+        let op = Op::LayerNorm { eps: 1e-5 };
+        assert_eq!(op.infer_shape(&[&[197, 768], &[768], &[768]]).unwrap(), vec![197, 768]);
+        assert!(op.infer_shape(&[&[197, 768], &[767], &[768]]).is_err());
+    }
+
+    #[test]
+    fn conv2d_shape() {
+        let op = Op::Conv2d { kh: 3, kw: 3, stride: 1, pad: 1 };
+        let out = op.infer_shape(&[&[1, 32, 32, 16], &[3, 3, 16, 64]]).unwrap();
+        assert_eq!(out, vec![1, 32, 32, 64]);
+        let op = Op::Conv2d { kh: 3, kw: 3, stride: 2, pad: 0 };
+        let out = op.infer_shape(&[&[1, 33, 33, 16], &[3, 3, 16, 64]]).unwrap();
+        assert_eq!(out, vec![1, 16, 16, 64]);
+    }
+
+    #[test]
+    fn macs_gemm() {
+        let op = Op::Gemm { transpose_b: false, has_bias: false };
+        assert_eq!(op.macs(&[&[4, 8], &[8, 16]], &[4, 16]), 4 * 16 * 8);
+    }
+
+    #[test]
+    fn transpose_shape() {
+        assert_eq!(Op::Transpose.infer_shape(&[&[3, 5]]).unwrap(), vec![5, 3]);
+    }
+}

@@ -1,0 +1,101 @@
+//! Tensor declarations.
+
+
+use super::DType;
+
+/// What role a tensor plays in the graph — this decides its *home* memory
+/// level and its lifetime for static allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TensorKind {
+    /// Network input activation (lives in L2, streamed from host/L3).
+    Input,
+    /// Network output activation.
+    Output,
+    /// Constant parameter (weights/bias) — resident in L3/L2, read-only.
+    Weight,
+    /// Intermediate activation produced and consumed inside the graph.
+    Intermediate,
+}
+
+/// A statically-shaped tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tensor {
+    /// Unique name within the graph.
+    pub name: String,
+    /// Static shape; row-major (last dim contiguous).
+    pub shape: Vec<usize>,
+    /// Element type.
+    pub dtype: DType,
+    /// Role of the tensor.
+    pub kind: TensorKind,
+}
+
+impl Tensor {
+    /// Create a new tensor declaration.
+    pub fn new(name: impl Into<String>, shape: Vec<usize>, dtype: DType, kind: TensorKind) -> Self {
+        Self { name: name.into(), shape, dtype, kind }
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Total size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype.size_bytes()
+    }
+
+    /// Rank (number of dimensions).
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides in *elements*.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.shape[i + 1];
+        }
+        strides
+    }
+
+    /// True if this tensor is an activation (not a constant parameter).
+    pub fn is_activation(&self) -> bool {
+        !matches!(self.kind, TensorKind::Weight)
+    }
+}
+
+impl std::fmt::Display for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {:?} {}", self.name, self.shape, self.dtype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_bytes() {
+        let t = Tensor::new("x", vec![197, 768], DType::Int8, TensorKind::Input);
+        assert_eq!(t.numel(), 197 * 768);
+        assert_eq!(t.size_bytes(), 197 * 768);
+        let t = Tensor::new("w", vec![768, 3072], DType::F32, TensorKind::Weight);
+        assert_eq!(t.size_bytes(), 768 * 3072 * 4);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let t = Tensor::new("x", vec![4, 3, 2], DType::F32, TensorKind::Input);
+        assert_eq!(t.strides(), vec![6, 2, 1]);
+        let t1 = Tensor::new("s", vec![5], DType::F32, TensorKind::Input);
+        assert_eq!(t1.strides(), vec![1]);
+    }
+
+    #[test]
+    fn activation_flag() {
+        assert!(Tensor::new("x", vec![1], DType::Int8, TensorKind::Input).is_activation());
+        assert!(!Tensor::new("w", vec![1], DType::Int8, TensorKind::Weight).is_activation());
+    }
+}

@@ -1,0 +1,57 @@
+//! # FTL — Fused-Tiled Layers
+//!
+//! A deployment framework for DNNs on SoCs with **software-managed memory
+//! hierarchies** (scratchpads + DMA, no hardware caches), reproducing the
+//! paper *"Fused-Tiled Layers: Minimizing Data Movement on RISC-V SoCs with
+//! Software-Managed Caches"* (Jung, Burrello, Conti, Benini — CS.AR 2025).
+//!
+//! The core contribution is the [`tiling`] engine: each layer's tiling is
+//! expressed as a constraint-optimisation problem over its tensor-dimension
+//! variables; **fusion** of consecutive tiled layers is obtained by *binding*
+//! the dimension variables of their shared tensor, so that a single solve
+//! yields tile sizes valid for the whole fused group and the intermediate
+//! tensor never materialises above L1.
+//!
+//! ## Pipeline
+//!
+//! ```text
+//!  ir::Graph ──► tiling::fusion (group + bind vars)
+//!            ──► tiling::solver (branch & bound, L1-capacity pruned)
+//!            ──► memory::alloc  (static lifetime allocation, ping-pong)
+//!            ──► schedule::{baseline,fused} (tiled DMA/kernel schedule)
+//!            ──► sim::Engine    (event-driven runtime + DMA stats)
+//!            ──► runtime::TileExecutor (PJRT numerics validation)
+//! ```
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — coordinator: IR, FTL solver, allocator, schedule
+//!   generation, event-driven SoC simulator, PJRT runtime, CLI.
+//! * **L2 (JAX, `python/compile/model.py`)** — ViT-MLP forward lowered AOT
+//!   to HLO text artifacts.
+//! * **L1 (Pallas, `python/compile/kernels/`)** — tiled GEMM / GeLU / fused
+//!   GEMM+GeLU kernels (`interpret=True`), verified against `ref.py`.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod config;
+pub mod coordinator;
+pub mod dma;
+pub mod ir;
+pub mod memory;
+pub mod metrics;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod soc;
+pub mod tiling;
+pub mod util;
+
+pub use coordinator::{DeployReport, Deployer};
+pub use ir::{Graph, Op, Tensor};
+pub use soc::SocConfig;
+pub use tiling::{Strategy, TilingSolution};
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,318 @@
+//! `ftl` — the deployment-framework CLI.
+//!
+//! ```text
+//! ftl deploy     --workload vit-base-stage --soc siracusa --strategy ftl [--double-buffer] [--json]
+//! ftl fig3       [--seq 197 --dim 768 --hidden 3072] [--double-buffer]
+//! ftl dma        [--soc cluster-only]
+//! ftl emit-tiles --out artifacts/tiles.json
+//! ftl run        --artifacts artifacts [--workload vit-base-stage] [--strategy ftl]
+//! ftl export     --workload vit-base --out net.json
+//! ```
+//!
+//! Argument parsing is hand-rolled (the build is fully offline — no clap).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::{experiments, Deployer};
+use ftl::ir::builder::{attention_head, deep_mlp, vit_mlp_block, vit_mlp_preset};
+use ftl::ir::{graph_from_json, graph_to_json, DType, Graph};
+use ftl::runtime::{NativeBackend, PjrtBackend};
+use ftl::tiling::Strategy;
+use ftl::util::json::Json;
+
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else { bail!("unexpected argument '{a}'") };
+            // boolean flags take no value; value flags consume the next token
+            match name {
+                "double-buffer" | "json" | "no-perf-constraints" | "verbose" => {
+                    flags.insert(name.to_string(), "true".into());
+                }
+                _ => {
+                    let v = it.next().ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                    flags.insert(name.to_string(), v);
+                }
+            }
+        }
+        Ok(Self { cmd, flags })
+    }
+
+    fn get<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flags.get(name).map(String::as_str).unwrap_or(default)
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+        }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+/// Resolve a workload name (or `--network file.json`) to a graph.
+fn load_workload(args: &Args) -> Result<(String, Graph)> {
+    if let Some(path) = args.flags.get("network") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        return Ok((path.clone(), graph_from_json(&text)?));
+    }
+    let name = args.get("workload", "vit-base-stage");
+    let seq = args.get_usize("seq", 197)?;
+    let graph = match name {
+        "vit-base-stage" => experiments::vit_mlp_stage(seq, 768, 3072),
+        "vit-tiny-stage" => experiments::vit_mlp_stage(seq, 192, 768),
+        "mlp-stage" => {
+            experiments::vit_mlp_stage(seq, args.get_usize("dim", 768)?, args.get_usize("hidden", 3072)?)
+        }
+        "vit-base-block" => vit_mlp_block(seq, 768, 3072, DType::Int8),
+        "deep-mlp" => deep_mlp(seq, args.get_usize("dim", 512)?, args.get_usize("layers", 4)?, DType::Int8),
+        "attention" => attention_head(seq, args.get_usize("dim", 768)?, args.get_usize("head", 64)?, DType::Int8),
+        other => vit_mlp_preset(other).ok_or_else(|| {
+            anyhow!("unknown workload '{other}' (try vit-base-stage, vit-base, vit-tiny, mlp-stage, deep-mlp)")
+        })?,
+    };
+    Ok((name.to_string(), graph))
+}
+
+fn make_config(args: &Args) -> Result<DeployConfig> {
+    let strategy = Strategy::parse(args.get("strategy", "ftl"))
+        .ok_or_else(|| anyhow!("--strategy must be 'ftl' or 'baseline'"))?;
+    let mut cfg = match args.flags.get("config") {
+        Some(path) => DeployConfig::from_file(std::path::Path::new(path))?,
+        None => DeployConfig::preset(args.get("soc", "siracusa"), strategy)?,
+    };
+    cfg.strategy = strategy;
+    cfg.double_buffer = args.has("double-buffer");
+    if args.has("no-perf-constraints") {
+        cfg.solver.use_perf_constraints = false;
+    }
+    cfg.homes = match args.get("homes", "resident") {
+        "resident" => ftl::tiling::HomesPolicy::Resident,
+        "lifetime" => ftl::tiling::HomesPolicy::Lifetime,
+        other => bail!("--homes must be resident|lifetime, got '{other}'"),
+    };
+    Ok(cfg)
+}
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    let (name, graph) = load_workload(args)?;
+    let cfg = make_config(args)?;
+    let soc = cfg.soc.clone();
+    let dep = Deployer::new(graph, cfg).with_workload_name(&name);
+    let (plan, report) = dep.deploy()?;
+    if args.has("json") {
+        println!("{}", report.to_json(&soc).pretty());
+    } else {
+        println!("{}", report.render(&soc));
+        println!("fusion groups:");
+        for (g, sol) in plan.groups.iter().zip(&plan.solution.groups) {
+            let names: Vec<&str> = g.nodes.iter().map(|&n| dep.graph().nodes[n].name.as_str()).collect();
+            let loops: Vec<String> =
+                sol.loops.iter().map(|l| format!("{}={}({}/{})", l.name, l.tile, l.trips(), l.full)).collect();
+            println!(
+                "  [{}] loops: {} footprint: {} B iterations: {}",
+                names.join("+"),
+                loops.join(" "),
+                sol.footprint,
+                sol.total_iterations()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let seq = args.get_usize("seq", 197)?;
+    let d = args.get_usize("dim", 768)?;
+    let h = args.get_usize("hidden", 3072)?;
+    let rows = experiments::fig3(seq, d, h, args.has("double-buffer"))?;
+    if args.has("json") {
+        let arr: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("config", Json::str(&r.config)),
+                    ("strategy", Json::str(&r.strategy)),
+                    ("cycles", Json::int(r.cycles as usize)),
+                    ("ms", Json::Num(r.ms)),
+                    ("reduction_pct", Json::Num(r.reduction_pct)),
+                ])
+            })
+            .collect();
+        println!("{}", Json::Arr(arr).pretty());
+    } else {
+        println!("Fig. 3 — ViT MLP stage ({seq}x{d}->{h}); paper: -28.8% (cluster), -60.1% (cluster+npu)\n");
+        println!("{}", experiments::fig3_table(&rows));
+    }
+    Ok(())
+}
+
+fn cmd_dma(args: &Args) -> Result<()> {
+    let seq = args.get_usize("seq", 197)?;
+    let d = args.get_usize("dim", 768)?;
+    let h = args.get_usize("hidden", 3072)?;
+    let r = experiments::dma_reduction(seq, d, h, args.get("soc", "cluster-only"))?;
+    println!("DMA reduction (paper: -47.1%)");
+    println!(
+        "  transfers: {} -> {} ({:.1}% reduction)",
+        r.base_transfers, r.ftl_transfers, r.transfer_reduction_pct
+    );
+    println!("  bytes:     {} -> {} ({:.1}% reduction)", r.base_bytes, r.ftl_bytes, r.byte_reduction_pct);
+    Ok(())
+}
+
+/// Emit the tile signatures needed by the AOT compiler (two-pass build):
+/// every (op, exact tile shape) the planned deployments will invoke.
+fn cmd_emit_tiles(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.get("out", "artifacts/tiles.json"));
+    let seq = args.get_usize("seq", 197)?;
+    let d = args.get_usize("dim", 768)?;
+    let h = args.get_usize("hidden", 3072)?;
+    let mut sigs: std::collections::BTreeMap<String, (String, Vec<Vec<usize>>, Vec<usize>)> =
+        std::collections::BTreeMap::new();
+    for strategy in [Strategy::LayerPerLayer, Strategy::Ftl] {
+        for soc in ["cluster-only", "siracusa"] {
+            let graph = experiments::vit_mlp_stage(seq, d, h);
+            let cfg = DeployConfig::preset(soc, strategy)?;
+            let dep = Deployer::new(graph, cfg);
+            let plan = dep.plan()?;
+            for (key, ins, outs) in plan.tile_signatures(dep.graph()) {
+                let kind = key.split('_').next().unwrap_or("?").to_string();
+                sigs.entry(key).or_insert((kind, ins, outs));
+            }
+        }
+    }
+    let entries: Vec<Json> = sigs
+        .iter()
+        .map(|(key, (kind, ins, outs))| {
+            Json::obj(vec![
+                ("name", Json::str(key)),
+                ("kind", Json::str(kind)),
+                (
+                    "in_shapes",
+                    Json::Arr(ins.iter().map(|s| Json::Arr(s.iter().map(|&v| Json::int(v)).collect())).collect()),
+                ),
+                ("out_shape", Json::Arr(outs.iter().map(|&v| Json::int(v)).collect())),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("workload", Json::obj(vec![("seq", Json::int(seq)), ("dim", Json::int(d)), ("hidden", Json::int(h))])),
+        ("entries", Json::Arr(entries)),
+    ]);
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&out, doc.pretty())?;
+    println!("wrote {} tile signatures to {}", sigs.len(), out.display());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (name, graph) = load_workload(args)?;
+    let cfg = make_config(args)?;
+    let dep = Deployer::new(graph, cfg).with_workload_name(&name);
+    let seed = args.get_usize("seed", 42)? as u64;
+    let artifacts = args.get("artifacts", "artifacts");
+    let worst = if std::path::Path::new(artifacts).join("manifest.json").exists() {
+        let backend = PjrtBackend::new(std::path::Path::new(artifacts))?;
+        println!("backend: pjrt (artifacts: {artifacts})");
+        dep.validate_numerics(backend, seed)?
+    } else {
+        println!("backend: native (no manifest at {artifacts}/manifest.json)");
+        dep.validate_numerics(NativeBackend, seed)?
+    };
+    println!("workload {name}: max |tiled - oracle| = {worst:.2e}");
+    if worst > 1e-3 {
+        bail!("numerics validation FAILED (deviation {worst})");
+    }
+    println!("numerics validation OK");
+    Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let (name, graph) = load_workload(args)?;
+    let out = args.get("out", "network.json");
+    std::fs::write(out, graph_to_json(&graph)?)?;
+    println!("exported workload '{name}' to {out}");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let seq = args.get_usize("seq", 197)?;
+    let d = args.get_usize("dim", 768)?;
+    let hs = [256, 512, 1024, 1536, 2048, 3072, 4096];
+    let rows = experiments::hidden_sweep(seq, d, &hs, args.get("soc", "siracusa"))?;
+    let mut t = ftl::metrics::Table::new(&["hidden", "baseline cycles", "ftl cycles", "reduction"]);
+    for (h, base, f, red) in rows {
+        t.row(&[h.to_string(), base.to_string(), f.to_string(), format!("-{red:.1}%")]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn help() {
+    println!(
+        "ftl — Fused-Tiled Layers deployment framework (paper reproduction)
+
+USAGE: ftl <command> [flags]
+
+COMMANDS:
+  deploy       plan + simulate one deployment     (--workload --soc --strategy [--double-buffer] [--json])
+  fig3         reproduce the paper's Fig. 3       ([--seq --dim --hidden] [--double-buffer] [--json])
+  dma          reproduce the -47.1% DMA metric    ([--soc])
+  sweep        hidden-dim sweep (Ext-A)           ([--soc])
+  emit-tiles   export tile signatures for AOT     (--out artifacts/tiles.json)
+  run          numerics validation vs oracle      (--artifacts artifacts [--workload] [--strategy])
+  export       write a workload as network JSON   (--workload --out)
+  help         this text
+
+WORKLOADS: vit-base-stage (default, the paper's), vit-tiny-stage, mlp-stage
+           (--dim/--hidden), vit-base-block, deep-mlp, attention, vit-tiny|small|base|large
+SOCS:      siracusa (cluster+NPU), cluster-only
+STRATEGY:  ftl (default), baseline"
+    );
+}
+
+fn main() {
+    let code = match Args::parse().and_then(|args| match args.cmd.as_str() {
+        "deploy" => cmd_deploy(&args),
+        "fig3" => cmd_fig3(&args),
+        "dma" => cmd_dma(&args),
+        "sweep" => cmd_sweep(&args),
+        "emit-tiles" => cmd_emit_tiles(&args),
+        "run" => cmd_run(&args),
+        "export" => cmd_export(&args),
+        "help" | "--help" | "-h" => {
+            help();
+            Ok(())
+        }
+        other => {
+            help();
+            Err(anyhow!("unknown command '{other}'"))
+        }
+    }) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}

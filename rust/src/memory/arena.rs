@@ -1,0 +1,196 @@
+//! L1 tile-buffer arena layout.
+//!
+//! For a tiled (or fused-tiled) execution, L1 holds one buffer per operand
+//! tile; with double buffering every *streamed* buffer is duplicated
+//! (ping/pong) so the DMA can fill buffer `k+1` while the kernel consumes
+//! buffer `k`. The [`ArenaPlan`] computes concrete offsets and checks the
+//! L1 capacity constraint that the FTL solver promised to satisfy.
+
+use anyhow::{ensure, Result};
+
+/// Role of a tile buffer inside L1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufferRole {
+    /// Streamed input-activation tile (double-buffered).
+    Input,
+    /// Streamed weight tile (double-buffered).
+    Weight,
+    /// Streamed output tile (double-buffered).
+    Output,
+    /// Intermediate tile of a fused group — lives only in L1, single copy.
+    Intermediate,
+    /// Kernel scratch (im2col buffers, accumulators), single copy.
+    Scratch,
+}
+
+impl BufferRole {
+    /// Whether this buffer is duplicated under double buffering.
+    pub fn is_streamed(self) -> bool {
+        matches!(self, BufferRole::Input | BufferRole::Weight | BufferRole::Output)
+    }
+}
+
+/// One logical tile buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileBuffer {
+    /// Display name, e.g. `"fc1.in[x]"`.
+    pub name: String,
+    /// Role (decides ping/pong duplication).
+    pub role: BufferRole,
+    /// Bytes per copy.
+    pub bytes: usize,
+}
+
+/// A concrete L1 layout: every buffer (and its pong copy, if any) gets an
+/// offset.
+#[derive(Debug, Clone)]
+pub struct ArenaPlan {
+    /// The logical buffers.
+    pub buffers: Vec<TileBuffer>,
+    /// Offsets: `offsets[i]` has one entry per copy of `buffers[i]`.
+    pub offsets: Vec<Vec<usize>>,
+    /// Total bytes used.
+    pub total: usize,
+    /// Whether double buffering was applied.
+    pub double_buffered: bool,
+}
+
+impl ArenaPlan {
+    /// Lay out `buffers` sequentially (aligned), duplicating streamed
+    /// buffers when `double_buffered`. Errors if the total exceeds
+    /// `capacity`.
+    pub fn layout(
+        buffers: Vec<TileBuffer>,
+        capacity: usize,
+        alignment: usize,
+        double_buffered: bool,
+    ) -> Result<Self> {
+        let copies: Vec<usize> = buffers
+            .iter()
+            .map(|b| if double_buffered && b.role.is_streamed() { 2 } else { 1 })
+            .collect();
+        Self::layout_explicit(buffers, &copies, capacity, alignment, double_buffered)
+    }
+
+    /// Like [`ArenaPlan::layout`] but with an explicit per-buffer copy
+    /// count (the schedule generator exempts loop-invariant buffers from
+    /// ping/pong duplication even when double buffering is on).
+    pub fn layout_explicit(
+        buffers: Vec<TileBuffer>,
+        copies: &[usize],
+        capacity: usize,
+        alignment: usize,
+        double_buffered: bool,
+    ) -> Result<Self> {
+        assert!(alignment.is_power_of_two());
+        assert_eq!(copies.len(), buffers.len());
+        let align = |x: usize| (x + alignment - 1) & !(alignment - 1);
+        let mut cursor = 0usize;
+        let mut offsets = Vec::with_capacity(buffers.len());
+        for (b, &n) in buffers.iter().zip(copies) {
+            assert!(n >= 1, "buffer {} needs at least one copy", b.name);
+            let mut offs = Vec::with_capacity(n);
+            for _ in 0..n {
+                cursor = align(cursor);
+                offs.push(cursor);
+                cursor += b.bytes;
+            }
+            offsets.push(offs);
+        }
+        ensure!(
+            cursor <= capacity,
+            "L1 arena overflow: need {} bytes, capacity {} (double_buffered={})",
+            cursor,
+            capacity,
+            double_buffered
+        );
+        Ok(Self { buffers, offsets, total: cursor, double_buffered })
+    }
+
+    /// Bytes that the layout would take (without building it) — the
+    /// capacity expression used inside the FTL solver.
+    pub fn footprint(buffers: &[TileBuffer], alignment: usize, double_buffered: bool) -> usize {
+        let align = |x: usize| (x + alignment - 1) & !(alignment - 1);
+        let mut cursor = 0usize;
+        for b in buffers {
+            let copies = if double_buffered && b.role.is_streamed() { 2 } else { 1 };
+            for _ in 0..copies {
+                cursor = align(cursor) + b.bytes;
+            }
+        }
+        cursor
+    }
+
+    /// Offset of copy `phase % copies` of buffer `i` — the ping/pong
+    /// address used by tile iteration `phase`.
+    pub fn offset(&self, i: usize, phase: usize) -> usize {
+        let offs = &self.offsets[i];
+        offs[phase % offs.len()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bufs() -> Vec<TileBuffer> {
+        vec![
+            TileBuffer { name: "in".into(), role: BufferRole::Input, bytes: 100 },
+            TileBuffer { name: "w".into(), role: BufferRole::Weight, bytes: 200 },
+            TileBuffer { name: "mid".into(), role: BufferRole::Intermediate, bytes: 50 },
+            TileBuffer { name: "out".into(), role: BufferRole::Output, bytes: 80 },
+        ]
+    }
+
+    #[test]
+    fn single_buffered_layout() {
+        let plan = ArenaPlan::layout(bufs(), 1 << 10, 4, false).unwrap();
+        assert_eq!(plan.total, 100 + 200 + 52 + 80); // mid aligned 50→52 start ok
+        for o in &plan.offsets {
+            assert_eq!(o.len(), 1);
+        }
+    }
+
+    #[test]
+    fn double_buffered_duplicates_streams_only() {
+        let plan = ArenaPlan::layout(bufs(), 1 << 10, 4, true).unwrap();
+        assert_eq!(plan.offsets[0].len(), 2); // input
+        assert_eq!(plan.offsets[1].len(), 2); // weight
+        assert_eq!(plan.offsets[2].len(), 1); // intermediate: single copy
+        assert_eq!(plan.offsets[3].len(), 2); // output
+        // ping/pong alternation
+        assert_eq!(plan.offset(0, 0), plan.offsets[0][0]);
+        assert_eq!(plan.offset(0, 1), plan.offsets[0][1]);
+        assert_eq!(plan.offset(0, 2), plan.offsets[0][0]);
+        // intermediate is phase-invariant
+        assert_eq!(plan.offset(2, 0), plan.offset(2, 7));
+    }
+
+    #[test]
+    fn footprint_matches_layout() {
+        for db in [false, true] {
+            let plan = ArenaPlan::layout(bufs(), 1 << 20, 8, db).unwrap();
+            assert_eq!(plan.total, ArenaPlan::footprint(&bufs(), 8, db));
+        }
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        assert!(ArenaPlan::layout(bufs(), 300, 4, true).is_err());
+    }
+
+    #[test]
+    fn offsets_disjoint() {
+        let plan = ArenaPlan::layout(bufs(), 1 << 10, 4, true).unwrap();
+        let mut spans: Vec<(usize, usize)> = Vec::new();
+        for (i, b) in plan.buffers.iter().enumerate() {
+            for &o in &plan.offsets[i] {
+                spans.push((o, o + b.bytes));
+            }
+        }
+        spans.sort();
+        for w in spans.windows(2) {
+            assert!(w[0].1 <= w[1].0, "overlapping spans {:?}", w);
+        }
+    }
+}

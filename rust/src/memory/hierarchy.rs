@@ -1,0 +1,115 @@
+//! The three-level software-managed hierarchy.
+
+
+/// A memory level in the hierarchy. Lower number = closer to compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    /// L1 TCDM — multi-banked scratchpad shared by the cluster cores and
+    /// the NPU; the only level kernels read from.
+    L1,
+    /// L2 — on-chip SRAM, holds tensors between layers.
+    L2,
+    /// L3 — external RAM (HyperRAM-class); costly to reach.
+    L3,
+}
+
+impl Level {
+    /// All levels, closest first.
+    pub const ALL: [Level; 3] = [Level::L1, Level::L2, Level::L3];
+
+    /// The next level further from compute, if any.
+    pub fn outer(self) -> Option<Level> {
+        match self {
+            Level::L1 => Some(Level::L2),
+            Level::L2 => Some(Level::L3),
+            Level::L3 => None,
+        }
+    }
+
+    /// Short display name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Level::L1 => "L1",
+            Level::L2 => "L2",
+            Level::L3 => "L3",
+        }
+    }
+}
+
+impl std::fmt::Display for Level {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Static properties of one memory level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LevelSpec {
+    /// Usable capacity in bytes (after runtime/stack reservations).
+    pub capacity: usize,
+    /// Required allocation alignment in bytes.
+    pub alignment: usize,
+}
+
+impl LevelSpec {
+    /// New spec.
+    pub const fn new(capacity: usize, alignment: usize) -> Self {
+        Self { capacity, alignment }
+    }
+}
+
+/// Capacities of the whole hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryHierarchy {
+    /// L1 TCDM spec.
+    pub l1: LevelSpec,
+    /// L2 SRAM spec.
+    pub l2: LevelSpec,
+    /// L3 external RAM spec.
+    pub l3: LevelSpec,
+}
+
+impl MemoryHierarchy {
+    /// Spec of a given level.
+    pub fn spec(&self, level: Level) -> LevelSpec {
+        match level {
+            Level::L1 => self.l1,
+            Level::L2 => self.l2,
+            Level::L3 => self.l3,
+        }
+    }
+
+    /// Capacity of a given level in bytes.
+    pub fn capacity(&self, level: Level) -> usize {
+        self.spec(level).capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outer_chain() {
+        assert_eq!(Level::L1.outer(), Some(Level::L2));
+        assert_eq!(Level::L2.outer(), Some(Level::L3));
+        assert_eq!(Level::L3.outer(), None);
+    }
+
+    #[test]
+    fn ordering_closest_first() {
+        assert!(Level::L1 < Level::L2);
+        assert!(Level::L2 < Level::L3);
+    }
+
+    #[test]
+    fn hierarchy_lookup() {
+        let h = MemoryHierarchy {
+            l1: LevelSpec::new(256 << 10, 4),
+            l2: LevelSpec::new(512 << 10, 4),
+            l3: LevelSpec::new(64 << 20, 4),
+        };
+        assert_eq!(h.capacity(Level::L1), 256 << 10);
+        assert_eq!(h.spec(Level::L3).capacity, 64 << 20);
+    }
+}

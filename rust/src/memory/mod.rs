@@ -1,0 +1,21 @@
+//! Software-managed memory hierarchy model and static allocation.
+//!
+//! SoCs like Siracusa have no hardware caches on the accelerator path:
+//! every byte in L1 TCDM was put there by an explicit DMA transfer, and the
+//! deployment flow must *statically* decide, at compile time, where every
+//! tensor (and every tile double-buffer) lives. This module provides:
+//!
+//! * [`Level`] / [`LevelSpec`] — the three-level hierarchy (L1 TCDM, L2
+//!   SRAM, L3 external RAM) with capacities.
+//! * [`StaticAllocator`] — Deeploy-style lifetime-interval allocation:
+//!   tensors with disjoint live ranges share offsets (greedy best-fit).
+//! * [`ArenaPlan`] — the L1 tile-buffer layout for a tiled schedule,
+//!   including ping-pong duplication for double buffering.
+
+mod alloc;
+mod arena;
+mod hierarchy;
+
+pub use alloc::{AllocRequest, Allocation, StaticAllocator};
+pub use arena::{ArenaPlan, BufferRole, TileBuffer};
+pub use hierarchy::{Level, LevelSpec, MemoryHierarchy};

@@ -1,0 +1,162 @@
+//! Report formatting: human tables and machine-readable JSON for every
+//! benchmark/deploy run (consumed by EXPERIMENTS.md and the bench
+//! harnesses).
+
+use crate::dma::DmaStats;
+use crate::memory::Level;
+use crate::sim::SimReport;
+use crate::soc::SocConfig;
+use crate::util::json::Json;
+
+/// Simple fixed-width table writer.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header width).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Render a simulation report as a human-readable phase table.
+pub fn sim_table(rep: &SimReport, soc: &SocConfig) -> String {
+    let mut t = Table::new(&["phase", "cycles", "ms", "cluster%", "npu%", "dmaL2%", "dmaL3%", "bound"]);
+    for p in &rep.phases {
+        let pct = |busy: u64| if p.cycles == 0 { 0.0 } else { 100.0 * busy as f64 / p.cycles as f64 };
+        t.row(&[
+            p.name.clone(),
+            p.cycles.to_string(),
+            format!("{:.3}", soc.cycles_to_ms(p.cycles)),
+            format!("{:.1}", pct(p.cluster_busy)),
+            format!("{:.1}", pct(p.npu_busy)),
+            format!("{:.1}", pct(p.dma_l2_busy)),
+            format!("{:.1}", pct(p.dma_l3_busy)),
+            p.bound.to_string(),
+        ]);
+    }
+    t.row(&[
+        "TOTAL".into(),
+        rep.total_cycles.to_string(),
+        format!("{:.3}", rep.ms(soc)),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+    ]);
+    t.render()
+}
+
+/// DMA stats as a table.
+pub fn dma_table(d: &DmaStats) -> String {
+    let mut t = Table::new(&["channel", "transfers", "KiB"]);
+    for lvl in [Level::L2, Level::L3] {
+        t.row(&[
+            format!("{}-DMA", lvl),
+            d.transfers_at(lvl).to_string(),
+            format!("{:.1}", d.bytes_at(lvl) as f64 / 1024.0),
+        ]);
+    }
+    t.row(&[
+        "TOTAL".into(),
+        d.total_transfers().to_string(),
+        format!("{:.1}", d.total_bytes() as f64 / 1024.0),
+    ]);
+    t.render()
+}
+
+/// Simulation report as JSON (for the bench harness / EXPERIMENTS.md).
+pub fn sim_json(rep: &SimReport, soc: &SocConfig) -> Json {
+    let phases: Vec<Json> = rep
+        .phases
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("name", Json::str(&p.name)),
+                ("cycles", Json::int(p.cycles as usize)),
+                ("cluster_busy", Json::int(p.cluster_busy as usize)),
+                ("npu_busy", Json::int(p.npu_busy as usize)),
+                ("dma_l2_busy", Json::int(p.dma_l2_busy as usize)),
+                ("dma_l3_busy", Json::int(p.dma_l3_busy as usize)),
+                ("bound", Json::str(p.bound.to_string())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("soc", Json::str(&soc.name)),
+        ("total_cycles", Json::int(rep.total_cycles as usize)),
+        ("total_ms", Json::Num(rep.ms(soc))),
+        ("dma_transfers", Json::int(rep.dma.total_transfers() as usize)),
+        ("dma_bytes", Json::int(rep.dma.total_bytes() as usize)),
+        ("phases", Json::Arr(phases)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(&["xxx".into(), "y".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("a    bbbb"));
+        assert!(lines[2].starts_with("xxx  y"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x".into(), "y".into()]);
+    }
+
+    #[test]
+    fn dma_table_renders() {
+        let d = DmaStats::default();
+        let s = dma_table(&d);
+        assert!(s.contains("L2-DMA"));
+        assert!(s.contains("TOTAL"));
+    }
+}

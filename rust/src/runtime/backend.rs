@@ -1,0 +1,49 @@
+//! Kernel backend abstraction.
+
+use anyhow::Result;
+
+use crate::ir::Op;
+
+use super::{reference, HostTensor};
+
+/// Executes one kernel on concrete tile tensors.
+///
+/// The tile executor is generic over this: `cargo test` uses
+/// [`NativeBackend`]; the end-to-end example uses
+/// [`super::PjrtBackend`] with the AOT artifacts.
+pub trait KernelBackend {
+    /// Execute `op` on `inputs`, returning the output tile.
+    fn exec(&mut self, op: &Op, inputs: &[&HostTensor]) -> Result<HostTensor>;
+
+    /// Backend name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference backend.
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend;
+
+impl KernelBackend for NativeBackend {
+    fn exec(&mut self, op: &Op, inputs: &[&HostTensor]) -> Result<HostTensor> {
+        reference::run_op(op, inputs)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ActKind;
+
+    #[test]
+    fn native_backend_runs_ops() {
+        let mut b = NativeBackend;
+        let x = HostTensor::random(&[3, 4], 1);
+        let y = b.exec(&Op::Act(ActKind::Relu), &[&x]).unwrap();
+        assert!(y.data.iter().all(|&v| v >= 0.0));
+        assert_eq!(b.name(), "native");
+    }
+}

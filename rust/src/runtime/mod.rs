@@ -1,0 +1,30 @@
+//! Numerics runtime: execute the tiled/fused schedules on real data.
+//!
+//! Two backends implement [`KernelBackend`]:
+//!
+//! * [`NativeBackend`] — pure-Rust reference kernels (always available;
+//!   used by `cargo test` so the tiling/fusion *transformation* is
+//!   validated without artifacts);
+//! * [`PjrtBackend`] — loads the AOT-compiled HLO tile executables
+//!   produced by `python/compile/aot.py` (see `artifacts/manifest.json`)
+//!   and runs them on the PJRT CPU client via the `xla` crate. Python is
+//!   never on this path — artifacts are compiled once at build time.
+//!
+//! [`TileExecutor`] walks a [`crate::tiling::TilingSolution`] exactly like
+//! the schedule generator does — same loop nests, same remainder tiles —
+//! slicing input tiles out of the full tensors, invoking one kernel per
+//! node per iteration, and scattering output tiles back. Fused
+//! intermediates live only in the executor's "L1" scratch, mirroring the
+//! hardware behaviour. Comparing the result against the un-tiled oracle
+//! ([`reference::run_graph`]) proves FTL is numerics-preserving.
+
+mod backend;
+mod executor;
+mod pjrt;
+pub mod reference;
+mod tensor;
+
+pub use backend::{KernelBackend, NativeBackend};
+pub use executor::TileExecutor;
+pub use pjrt::{fused_gemm_gelu_key, tile_key, Manifest, ManifestEntry, PjrtBackend};
+pub use tensor::HostTensor;

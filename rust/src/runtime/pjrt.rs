@@ -1,0 +1,233 @@
+//! PJRT backend: load AOT-compiled HLO tile executables and run them.
+//!
+//! The interchange format is **HLO text** (see `python/compile/aot.py`):
+//! jax ≥ 0.5 serialises `HloModuleProto`s with 64-bit instruction ids
+//! which the crate's XLA (xla_extension 0.5.1) rejects; the text parser
+//! reassigns ids and round-trips cleanly.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::ir::{ActKind, Op};
+use crate::util::json::{parse, Json};
+
+use super::backend::KernelBackend;
+use super::HostTensor;
+
+/// Canonical artifact key for an (op, tile-shapes) pair. Must match the
+/// naming scheme in `python/compile/aot.py`.
+///
+/// Examples: `gemm_b_m197_k768_n256`, `gelu_197x256`,
+/// `gemm_gelu_b_m197_k768_n256` (the fused Pallas kernel).
+pub fn tile_key(op: &Op, in_shapes: &[&[usize]], out_shape: &[usize]) -> Option<String> {
+    match op {
+        Op::Gemm { transpose_b: false, has_bias } => {
+            let m = out_shape[0];
+            let n = out_shape[1];
+            let k = in_shapes[0][1];
+            let b = if *has_bias { "_b" } else { "" };
+            Some(format!("gemm{b}_m{m}_k{k}_n{n}"))
+        }
+        Op::Act(ActKind::Gelu) => {
+            let dims: Vec<String> = out_shape.iter().map(|d| d.to_string()).collect();
+            Some(format!("gelu_{}", dims.join("x")))
+        }
+        Op::Act(ActKind::Relu) => {
+            let dims: Vec<String> = out_shape.iter().map(|d| d.to_string()).collect();
+            Some(format!("relu_{}", dims.join("x")))
+        }
+        Op::Add => {
+            let dims: Vec<String> = out_shape.iter().map(|d| d.to_string()).collect();
+            Some(format!("add_{}", dims.join("x")))
+        }
+        // Other ops fall back to the native backend.
+        _ => None,
+    }
+}
+
+/// Key for the fused GEMM+GeLU Pallas kernel artifact.
+pub fn fused_gemm_gelu_key(m: usize, k: usize, n: usize, bias: bool) -> String {
+    let b = if bias { "_b" } else { "" };
+    format!("gemm_gelu{b}_m{m}_k{k}_n{n}")
+}
+
+/// One artifact entry from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    /// Canonical key (see [`tile_key`]).
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    /// Expected input shapes.
+    pub in_shapes: Vec<Vec<usize>>,
+    /// Expected output shape.
+    pub out_shape: Vec<usize>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+    /// Entries keyed by canonical name.
+    pub entries: HashMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        let v = parse(&text)?;
+        let mut entries = HashMap::new();
+        for e in v.get("entries")?.as_arr()? {
+            let name = e.get("name")?.as_str()?.to_string();
+            let file = e.get("file")?.as_str()?.to_string();
+            let in_shapes = e
+                .get("in_shapes")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_arr()?.iter().map(Json::as_usize).collect::<Result<Vec<_>>>())
+                .collect::<Result<Vec<_>>>()?;
+            let out_shape = e.get("out_shape")?.as_arr()?.iter().map(Json::as_usize).collect::<Result<Vec<_>>>()?;
+            entries.insert(name.clone(), ManifestEntry { name, file, in_shapes, out_shape });
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    /// True if an artifact with this key exists.
+    pub fn has(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+}
+
+/// PJRT CPU backend with lazily compiled executables.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Kernel invocations served (for reports).
+    pub invocations: u64,
+}
+
+impl PjrtBackend {
+    /// Create from an artifact directory containing `manifest.json`.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, manifest, compiled: HashMap::new(), invocations: 0 })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&mut self, key: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(key) {
+            let entry = self
+                .manifest
+                .entries
+                .get(key)
+                .ok_or_else(|| anyhow!("artifact '{key}' not in manifest ({} entries)", self.manifest.entries.len()))?;
+            let path = self.manifest.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
+            self.compiled.insert(key.to_string(), exe);
+        }
+        Ok(&self.compiled[key])
+    }
+
+    /// Run an artifact by key on concrete tensors.
+    pub fn run(&mut self, key: &str, inputs: &[&HostTensor]) -> Result<HostTensor> {
+        // Validate shapes against the manifest before the FFI boundary.
+        let entry =
+            self.manifest.entries.get(key).ok_or_else(|| anyhow!("artifact '{key}' not in manifest"))?.clone();
+        if entry.in_shapes.len() != inputs.len() {
+            bail!("artifact {key}: expected {} inputs, got {}", entry.in_shapes.len(), inputs.len());
+        }
+        for (i, (t, exp)) in inputs.iter().zip(&entry.in_shapes).enumerate() {
+            if &t.shape != exp {
+                bail!("artifact {key}: input {i} shape {:?} != expected {:?}", t.shape, exp);
+            }
+        }
+        let exe = self.executable(key)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<usize> = t.shape.clone();
+                let lit = xla::Literal::vec1(&t.data);
+                lit.reshape(&dims.iter().map(|&d| d as i64).collect::<Vec<_>>())
+                    .map_err(|e| anyhow!("reshape literal: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("executing {key}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let data = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        self.invocations += 1;
+        HostTensor::new(&entry.out_shape, data)
+    }
+}
+
+impl KernelBackend for PjrtBackend {
+    fn exec(&mut self, op: &Op, inputs: &[&HostTensor]) -> Result<HostTensor> {
+        let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
+        // Output shape from IR shape inference on the tile shapes.
+        let out_shape = op.infer_shape(&shapes)?;
+        match tile_key(op, &shapes, &out_shape) {
+            Some(key) if self.manifest.has(&key) => self.run(&key, inputs),
+            // No artifact for this (op, shape): fall back to the native
+            // reference so mixed graphs still validate end-to-end.
+            _ => super::reference::run_op(op, inputs),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_key_format() {
+        let op = Op::Gemm { transpose_b: false, has_bias: true };
+        let key = tile_key(&op, &[&[197, 768], &[768, 256], &[256]], &[197, 256]).unwrap();
+        assert_eq!(key, "gemm_b_m197_k768_n256");
+        let op = Op::Act(ActKind::Gelu);
+        assert_eq!(tile_key(&op, &[&[197, 256]], &[197, 256]).unwrap(), "gelu_197x256");
+        assert_eq!(fused_gemm_gelu_key(197, 768, 256, true), "gemm_gelu_b_m197_k768_n256");
+        // Unsupported ops yield None (native fallback).
+        assert!(tile_key(&Op::Softmax, &[&[4, 4]], &[4, 4]).is_none());
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let dir = std::env::temp_dir().join(format!("ftl_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"entries":[{"name":"gelu_4x4","file":"gelu_4x4.hlo.txt",
+                "in_shapes":[[4,4]],"out_shape":[4,4]}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.has("gelu_4x4"));
+        assert_eq!(m.entries["gelu_4x4"].out_shape, vec![4, 4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent/ftl")).is_err());
+    }
+}

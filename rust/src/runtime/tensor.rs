@@ -1,0 +1,220 @@
+//! Host-side tensors and N-D tile gather/scatter.
+
+use anyhow::{ensure, Result};
+
+/// A row-major f32 tensor on the host.
+///
+/// The deployment target computes in int8, but the numerics-validation
+/// path runs the f32 Pallas/XLA kernels — the *transformation* under test
+/// (tiling + fusion) is dtype-agnostic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    /// Shape, row-major.
+    pub shape: Vec<usize>,
+    /// Elements, `shape.iter().product()` of them.
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Tensor from data (checked).
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        ensure!(
+            data.len() == shape.iter().product::<usize>(),
+            "data length {} does not match shape {:?}",
+            data.len(),
+            shape
+        );
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    /// Deterministic pseudo-random tensor in [-1, 1] (xorshift-seeded).
+    pub fn random(shape: &[usize], seed: u64) -> Self {
+        let mut rng = crate::util::prop::Rng::new(seed);
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row-major strides in elements.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Gather a tile `[offsets, offsets+tile_shape)` into a fresh tensor.
+    /// Out-of-range parts are zero-filled (conv halo support).
+    pub fn gather(&self, offsets: &[usize], tile_shape: &[usize]) -> HostTensor {
+        assert_eq!(offsets.len(), self.shape.len());
+        assert_eq!(tile_shape.len(), self.shape.len());
+        let mut out = HostTensor::zeros(tile_shape);
+        let src_strides = self.strides();
+        let dst_strides = out.strides();
+        let rank = self.shape.len();
+        // Iterate all rows (all dims except the last) of the tile.
+        let row_len = tile_shape[rank - 1];
+        let rows: usize = tile_shape[..rank - 1].iter().product::<usize>().max(1);
+        let mut idx = vec![0usize; rank - 1];
+        for _ in 0..rows {
+            // In-range row?
+            let mut src_off = 0usize;
+            let mut in_range = true;
+            for (d, &i) in idx.iter().enumerate() {
+                let src_i = offsets[d] + i;
+                if src_i >= self.shape[d] {
+                    in_range = false;
+                    break;
+                }
+                src_off += src_i * src_strides[d];
+            }
+            if in_range {
+                let col0 = offsets[rank - 1];
+                let n = row_len.min(self.shape[rank - 1].saturating_sub(col0));
+                let src_start = src_off + col0 * src_strides[rank - 1];
+                let mut dst_off = 0usize;
+                for (d, &i) in idx.iter().enumerate() {
+                    dst_off += i * dst_strides[d];
+                }
+                out.data[dst_off..dst_off + n].copy_from_slice(&self.data[src_start..src_start + n]);
+            }
+            // advance multi-index
+            for d in (0..rank - 1).rev() {
+                idx[d] += 1;
+                if idx[d] < tile_shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        out
+    }
+
+    /// Scatter `tile` into `self` at `offsets` (clipped to bounds).
+    pub fn scatter(&mut self, offsets: &[usize], tile: &HostTensor) {
+        assert_eq!(offsets.len(), self.shape.len());
+        assert_eq!(tile.shape.len(), self.shape.len());
+        let dst_strides = self.strides();
+        let src_strides = tile.strides();
+        let rank = self.shape.len();
+        let row_len = tile.shape[rank - 1];
+        let rows: usize = tile.shape[..rank - 1].iter().product::<usize>().max(1);
+        let mut idx = vec![0usize; rank - 1];
+        for _ in 0..rows {
+            let mut dst_off = 0usize;
+            let mut in_range = true;
+            for (d, &i) in idx.iter().enumerate() {
+                let dst_i = offsets[d] + i;
+                if dst_i >= self.shape[d] {
+                    in_range = false;
+                    break;
+                }
+                dst_off += dst_i * dst_strides[d];
+            }
+            if in_range {
+                let col0 = offsets[rank - 1];
+                let n = row_len.min(self.shape[rank - 1].saturating_sub(col0));
+                let mut src_off = 0usize;
+                for (d, &i) in idx.iter().enumerate() {
+                    src_off += i * src_strides[d];
+                }
+                let dst_start = dst_off + col0 * dst_strides[rank - 1];
+                self.data[dst_start..dst_start + n].copy_from_slice(&tile.data[src_off..src_off + n]);
+            }
+            for d in (0..rank - 1).rev() {
+                idx[d] += 1;
+                if idx[d] < tile.shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+
+    /// Max absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data.iter().zip(&other.data).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(shape: &[usize]) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor::new(shape, (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn gather_interior_2d() {
+        let t = seq(&[4, 5]);
+        let tile = t.gather(&[1, 2], &[2, 2]);
+        assert_eq!(tile.data, vec![7.0, 8.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn gather_edge_zero_fills() {
+        let t = seq(&[3, 3]);
+        let tile = t.gather(&[2, 2], &[2, 2]);
+        assert_eq!(tile.data, vec![8.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scatter_roundtrip() {
+        let src = seq(&[6, 7]);
+        let mut dst = HostTensor::zeros(&[6, 7]);
+        // copy via 2x3 tiles
+        for r in (0..6).step_by(2) {
+            for c in (0..7).step_by(3) {
+                let th = 2.min(6 - r);
+                let tw = 3.min(7 - c);
+                let tile = src.gather(&[r, c], &[th, tw]);
+                dst.scatter(&[r, c], &tile);
+            }
+        }
+        assert_eq!(src.data, dst.data);
+    }
+
+    #[test]
+    fn gather_1d_and_3d() {
+        let t = seq(&[6]);
+        assert_eq!(t.gather(&[4], &[3]).data, vec![4.0, 5.0, 0.0]);
+        let t3 = seq(&[2, 3, 4]);
+        let tile = t3.gather(&[1, 1, 2], &[1, 2, 2]);
+        assert_eq!(tile.data, vec![18.0, 19.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    fn random_deterministic() {
+        let a = HostTensor::random(&[4, 4], 42);
+        let b = HostTensor::random(&[4, 4], 42);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = seq(&[2, 2]);
+        let mut b = a.clone();
+        b.data[3] += 0.5;
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn new_checks_length() {
+        assert!(HostTensor::new(&[2, 2], vec![0.0; 3]).is_err());
+    }
+}

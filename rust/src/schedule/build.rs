@@ -1,0 +1,298 @@
+//! Schedule construction from a solved tiling.
+
+use anyhow::Result;
+
+use crate::dma::Transfer;
+use crate::ir::Graph;
+use crate::memory::{ArenaPlan, Level, TileBuffer};
+use crate::soc::{ComputeUnit, KernelCostModel, SocConfig};
+use crate::tiling::solver_dma_legs as dma_legs;
+use crate::tiling::{GroupSolution, TilingSolution};
+
+/// One kernel invocation on a concrete tile.
+#[derive(Debug, Clone)]
+pub struct KernelInvocation {
+    /// Node name (e.g. `"fc1"`).
+    pub name: String,
+    /// Unit it runs on.
+    pub unit: ComputeUnit,
+    /// Cycles charged by the cost model for this exact tile.
+    pub cycles: u64,
+    /// Output-tile shape (for traces and the runtime executor).
+    pub out_shape: Vec<usize>,
+}
+
+/// One tile-loop iteration: loads, kernels, stores.
+#[derive(Debug, Clone, Default)]
+pub struct TileStep {
+    /// Inbound transfers issued before the kernels.
+    pub dma_in: Vec<Transfer>,
+    /// Kernel invocations (group order).
+    pub kernels: Vec<KernelInvocation>,
+    /// Outbound transfers issued after the kernels.
+    pub dma_out: Vec<Transfer>,
+}
+
+impl TileStep {
+    /// Total payload bytes moved by this step.
+    pub fn dma_bytes(&self) -> usize {
+        self.dma_in.iter().chain(&self.dma_out).map(Transfer::bytes).sum()
+    }
+
+    /// Total kernel cycles of this step.
+    pub fn kernel_cycles(&self) -> u64 {
+        self.kernels.iter().map(|k| k.cycles).sum()
+    }
+}
+
+/// One fusion group's tiled execution.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    /// Display name, e.g. `"fc1+gelu"`.
+    pub name: String,
+    /// Tile iterations in loop order.
+    pub steps: Vec<TileStep>,
+    /// Whether streamed buffers ping/pong.
+    pub double_buffered: bool,
+    /// L1 arena layout backing the steps.
+    pub arena: ArenaPlan,
+}
+
+impl Phase {
+    /// Total number of DMA commands in the phase.
+    pub fn dma_count(&self) -> usize {
+        self.steps.iter().map(|s| s.dma_in.len() + s.dma_out.len()).sum()
+    }
+
+    /// Total payload bytes.
+    pub fn dma_bytes(&self) -> usize {
+        self.steps.iter().map(TileStep::dma_bytes).sum()
+    }
+}
+
+/// The full network schedule (phases run back-to-back).
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Phases in execution order.
+    pub phases: Vec<Phase>,
+}
+
+impl Schedule {
+    /// Total DMA command count.
+    pub fn dma_count(&self) -> usize {
+        self.phases.iter().map(Phase::dma_count).sum()
+    }
+
+    /// Total DMA payload bytes.
+    pub fn dma_bytes(&self) -> usize {
+        self.phases.iter().map(Phase::dma_bytes).sum()
+    }
+
+    /// Total kernel cycles (no overlap accounting — see [`crate::sim`]).
+    pub fn kernel_cycles(&self) -> u64 {
+        self.phases.iter().flat_map(|p| &p.steps).map(TileStep::kernel_cycles).sum()
+    }
+}
+
+/// Generate the executable schedule for a solved tiling.
+pub fn build_schedule(graph: &Graph, soc: &SocConfig, solution: &TilingSolution) -> Result<Schedule> {
+    let phases = solution.groups.iter().map(|g| build_phase(graph, soc, g)).collect::<Result<Vec<_>>>()?;
+    Ok(Schedule { phases })
+}
+
+fn build_phase(graph: &Graph, soc: &SocConfig, g: &GroupSolution) -> Result<Phase> {
+    let name = g.nodes.iter().map(|n| n.name.as_str()).collect::<Vec<_>>().join("+");
+
+    // L1 arena: steady-state tile sizes; loop-invariant (depth-0) buffers
+    // are not ping/pong-duplicated even when double buffering is on.
+    let tiles: Vec<TileBuffer> = g
+        .buffers
+        .iter()
+        .map(|b| TileBuffer { name: b.name.clone(), role: b.role, bytes: b.steady_bytes(&g.loops) })
+        .collect();
+    let copies: Vec<usize> = g
+        .buffers
+        .iter()
+        .map(|b| if g.double_buffered && b.is_streamed() && b.fetch_depth > 0 { 2 } else { 1 })
+        .collect();
+    let arena = ArenaPlan::layout_explicit(
+        tiles,
+        &copies,
+        soc.mem.capacity(Level::L1),
+        soc.mem.spec(Level::L1).alignment,
+        g.double_buffered,
+    )?;
+
+    let iters = g.iterations();
+    let mut steps = Vec::with_capacity(iters.len());
+    for (i, state) in iters.iter().enumerate() {
+        let changed = g.changed_depth(iters.get(i.wrapping_sub(1)).filter(|_| i > 0).map(|v| v.as_slice()), state);
+        let next_changed = iters.get(i + 1).map(|nx| g.changed_depth(Some(state.as_slice()), nx));
+
+        let mut step = TileStep::default();
+
+        // Loads: a buffer is (re-)fetched when a loop it depends on
+        // advanced — i.e. changed depth < fetch_depth — or on iteration 0.
+        for b in &g.buffers {
+            let inbound = matches!(b.role, crate::memory::BufferRole::Input | crate::memory::BufferRole::Weight);
+            if !inbound {
+                continue;
+            }
+            let Some(home) = b.home else { continue };
+            let refetch = i == 0 || changed < b.fetch_depth;
+            if refetch {
+                let shape = b.shape_at(state);
+                let rows: usize = shape[..shape.len() - 1].iter().product::<usize>().max(1);
+                let row_bytes = shape.last().copied().unwrap_or(1) * b.elem_bytes;
+                step.dma_in.extend(dma_legs(home, true, rows, row_bytes));
+            }
+        }
+
+        // Kernels, with exact (remainder-clamped) tile shapes.
+        for n in &g.nodes {
+            let in_shapes: Vec<Vec<usize>> = n.input_bufs.iter().map(|&bi| g.buffers[bi].shape_at(state)).collect();
+            let in_refs: Vec<&[usize]> = in_shapes.iter().map(|s| s.as_slice()).collect();
+            let out_shape = g.buffers[n.output_buf].shape_at(state);
+            let cycles = KernelCostModel::tile_cycles(soc, &n.op, n.unit, &in_refs, &out_shape);
+            step.kernels.push(KernelInvocation { name: n.name.clone(), unit: n.unit, cycles, out_shape });
+        }
+
+        // Stores: exactly once per output tile — at the last iteration of
+        // the loops deeper than the buffer's fetch depth.
+        for b in &g.buffers {
+            if b.role != crate::memory::BufferRole::Output {
+                continue;
+            }
+            let Some(home) = b.home else { continue };
+            let store_now = match next_changed {
+                None => true, // last iteration of the phase
+                Some(nc) => nc < b.fetch_depth,
+            };
+            if store_now {
+                let shape = b.shape_at(state);
+                let rows: usize = shape[..shape.len() - 1].iter().product::<usize>().max(1);
+                let row_bytes = shape.last().copied().unwrap_or(1) * b.elem_bytes;
+                step.dma_out.extend(dma_legs(home, false, rows, row_bytes));
+            }
+        }
+
+        steps.push(step);
+    }
+
+    // Silence unused-variable warning path: graph reserved for future
+    // per-node attribute lookups.
+    let _ = graph;
+
+    Ok(Phase { name, steps, double_buffered: g.double_buffered, arena })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vit_mlp;
+    use crate::ir::DType;
+    use crate::memory::BufferRole;
+    use crate::soc::{siracusa_reduced, siracusa_reduced_cluster_only};
+    use crate::tiling::{fuse_groups, solve_graph, FusionPolicy, SolverOptions, Strategy};
+
+    fn deploy(strategy: Strategy, npu: bool, dbuf: bool) -> (crate::ir::Graph, SocConfig, Schedule) {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let soc = if npu { siracusa_reduced() } else { siracusa_reduced_cluster_only() };
+        let groups = fuse_groups(&g, strategy, FusionPolicy::default());
+        let (_, sol) = solve_graph(&g, &soc, groups, &SolverOptions::default(), dbuf).unwrap();
+        let sched = build_schedule(&g, &soc, &sol).unwrap();
+        (g, soc, sched)
+    }
+
+    #[test]
+    fn baseline_has_three_phases() {
+        let (_, _, s) = deploy(Strategy::LayerPerLayer, false, false);
+        assert_eq!(s.phases.len(), 3);
+    }
+
+    #[test]
+    fn ftl_has_two_phases() {
+        let (_, _, s) = deploy(Strategy::Ftl, false, false);
+        assert_eq!(s.phases.len(), 2);
+        assert!(s.phases[0].name.contains('+'), "fused phase named {}", s.phases[0].name);
+    }
+
+    #[test]
+    fn ftl_moves_fewer_bytes_and_commands() {
+        let (_, _, base) = deploy(Strategy::LayerPerLayer, false, false);
+        let (_, _, ftl) = deploy(Strategy::Ftl, false, false);
+        assert!(ftl.dma_bytes() < base.dma_bytes(), "ftl {} vs base {}", ftl.dma_bytes(), base.dma_bytes());
+        assert!(ftl.dma_count() < base.dma_count());
+    }
+
+    #[test]
+    fn output_stored_exactly_once() {
+        // Sum of all outbound payload bytes for the graph output must be
+        // >= tensor size and each output tile stored exactly once ⇒ total
+        // payload == tensor bytes × legs.
+        let (g, _, s) = deploy(Strategy::Ftl, false, false);
+        let out_id = g.outputs()[0];
+        let out_bytes = g.tensors[out_id].size_bytes();
+        let stored: usize = s.phases.last().unwrap().steps.iter().flat_map(|st| &st.dma_out).map(Transfer::bytes).sum();
+        // final phase's output is the graph output; home L2 ⇒ 1 leg.
+        assert_eq!(stored, out_bytes);
+    }
+
+    #[test]
+    fn fused_intermediate_generates_no_dma() {
+        let (g, soc, _) = deploy(Strategy::Ftl, false, false);
+        let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy::default());
+        let (_, sol) = solve_graph(&g, &soc, groups, &SolverOptions::default(), false).unwrap();
+        let fused = &sol.groups[0];
+        let inter = fused.buffers.iter().find(|b| b.role == BufferRole::Intermediate).unwrap();
+        assert!(inter.home.is_none());
+        // Total bytes of the fused phase must not include the intermediate.
+        let sched = build_schedule(&g, &soc, &sol).unwrap();
+        let h_bytes = g.tensor_by_name("fc1_1").unwrap().1.size_bytes();
+        let base = deploy(Strategy::LayerPerLayer, false, false).2;
+        // Baseline moves H at least twice (store+load), FTL zero times.
+        assert!(base.dma_bytes() >= sched.dma_bytes() + 2 * h_bytes);
+    }
+
+    #[test]
+    fn weights_fetched_once_with_hoisting() {
+        // In the best loop order for fc1, X (or W1) is loop-invariant at
+        // some depth; the total inbound payload for W1 must be exactly its
+        // size × number of refetches implied by its fetch depth.
+        let (g, _, s) = deploy(Strategy::LayerPerLayer, false, false);
+        let w1_bytes = g.tensor_by_name("fc1.w").unwrap().1.size_bytes();
+        let fc1_in: usize = s.phases[0].steps.iter().flat_map(|st| &st.dma_in).map(Transfer::bytes).sum();
+        // X + W1 + bias inbound; W1 dominates. Inbound must be at least
+        // W1 once, and the solver should avoid re-streaming W1 many times.
+        assert!(fc1_in >= w1_bytes);
+        assert!(fc1_in < 3 * w1_bytes, "W1 re-streamed too often: {fc1_in} vs {w1_bytes}");
+    }
+
+    #[test]
+    fn double_buffer_arena_has_pong_copies() {
+        let (_, _, s) = deploy(Strategy::Ftl, true, true);
+        let phase = &s.phases[0];
+        assert!(phase.double_buffered);
+        let has_pong = phase.arena.offsets.iter().any(|o| o.len() == 2);
+        assert!(has_pong, "at least one streamed buffer must be duplicated");
+    }
+
+    #[test]
+    fn npu_schedule_places_gemm_on_npu() {
+        let (_, _, s) = deploy(Strategy::Ftl, true, false);
+        let units: Vec<ComputeUnit> = s.phases[0].steps[0].kernels.iter().map(|k| k.unit).collect();
+        assert!(units.contains(&ComputeUnit::Npu));
+        assert!(units.contains(&ComputeUnit::Cluster)); // gelu stays on cluster
+    }
+
+    #[test]
+    fn steps_cover_all_iterations() {
+        let (g, soc, _) = deploy(Strategy::Ftl, false, false);
+        let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy::default());
+        let (_, sol) = solve_graph(&g, &soc, groups, &SolverOptions::default(), false).unwrap();
+        let sched = build_schedule(&g, &soc, &sol).unwrap();
+        for (p, gr) in sched.phases.iter().zip(&sol.groups) {
+            assert_eq!(p.steps.len(), gr.total_iterations());
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Tiled execution-schedule generation.
+//!
+//! Turns a [`TilingSolution`] into the concrete, remainder-exact sequence
+//! of DMA commands and kernel invocations the SoC executes — one
+//! [`Phase`] per fusion group, one [`TileStep`] per tile-loop iteration.
+//! Loop-invariant buffers are fetched once; outputs are stored exactly
+//! once per output tile; fused intermediates generate no DMA at all.
+//!
+//! The schedule is consumed by two backends:
+//! * [`crate::sim`] — the event-driven SoC simulator (cycles, DMA stats);
+//! * [`crate::runtime`] — the PJRT tile executor (numerics validation).
+
+mod build;
+
+pub use build::{build_schedule, KernelInvocation, Phase, Schedule, TileStep};

@@ -1,0 +1,258 @@
+//! The discrete-event core: tasks, serial resources, dependency-driven
+//! list scheduling with an event heap.
+//!
+//! Each task occupies exactly one resource for `duration` cycles and may
+//! depend on any set of earlier tasks. A task starts at
+//! `max(max(dep.finish), resource.free)`; the engine processes a ready
+//! heap ordered by earliest feasible start, which for serial resources is
+//! equivalent to full event-driven simulation.
+
+use std::collections::BinaryHeap;
+
+use anyhow::{ensure, Result};
+
+use crate::memory::Level;
+use crate::soc::ComputeUnit;
+
+/// A serial hardware resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Resource {
+    /// A compute unit (cluster or NPU).
+    Unit(ComputeUnit),
+    /// The DMA channel whose outer endpoint is this level
+    /// (`L2` = cluster DMA, `L3` = IO DMA).
+    Dma(Level),
+}
+
+impl Resource {
+    /// All resources of a SoC (NPU slot exists even if unused).
+    pub const ALL: [Resource; 4] = [
+        Resource::Unit(ComputeUnit::Cluster),
+        Resource::Unit(ComputeUnit::Npu),
+        Resource::Dma(Level::L2),
+        Resource::Dma(Level::L3),
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            Resource::Unit(ComputeUnit::Cluster) => 0,
+            Resource::Unit(ComputeUnit::Npu) => 1,
+            Resource::Dma(Level::L2) => 2,
+            Resource::Dma(Level::L3) => 3,
+            Resource::Dma(Level::L1) => unreachable!("no DMA channel terminates at L1's inner side"),
+        }
+    }
+}
+
+/// Handle to a submitted task.
+pub type TaskId = usize;
+
+/// A task to simulate.
+#[derive(Debug, Clone)]
+pub struct TaskSpec {
+    /// Resource it occupies.
+    pub resource: Resource,
+    /// Busy cycles.
+    pub duration: u64,
+    /// Task ids that must finish first.
+    pub deps: Vec<TaskId>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Done {
+    finish: u64,
+}
+
+/// Dependency-driven event engine.
+#[derive(Debug, Default)]
+pub struct Engine {
+    tasks: Vec<TaskSpec>,
+}
+
+/// Simulation result.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Finish time of every task.
+    pub finish: Vec<u64>,
+    /// Start time of every task.
+    pub start: Vec<u64>,
+    /// Makespan (max finish).
+    pub makespan: u64,
+    /// Busy cycles per resource (indexed like `Resource::ALL`).
+    pub busy: [u64; 4],
+}
+
+impl RunResult {
+    /// Busy cycles of one resource.
+    pub fn busy_of(&self, r: Resource) -> u64 {
+        self.busy[r.index()]
+    }
+
+    /// Utilisation (busy / makespan) of one resource.
+    pub fn utilisation(&self, r: Resource) -> f64 {
+        if self.makespan == 0 {
+            0.0
+        } else {
+            self.busy_of(r) as f64 / self.makespan as f64
+        }
+    }
+}
+
+impl Engine {
+    /// Fresh engine.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Submit a task; returns its id. Dependencies must already exist
+    /// (task graph is a DAG by construction).
+    pub fn submit(&mut self, spec: TaskSpec) -> TaskId {
+        debug_assert!(spec.deps.iter().all(|&d| d < self.tasks.len()), "deps must be earlier tasks");
+        self.tasks.push(spec);
+        self.tasks.len() - 1
+    }
+
+    /// Number of submitted tasks.
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// True if no tasks were submitted.
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Run the event simulation.
+    pub fn run(&self) -> Result<RunResult> {
+        let n = self.tasks.len();
+        let mut indeg = vec![0usize; n];
+        let mut dependents: Vec<Vec<TaskId>> = vec![Vec::new(); n];
+        for (i, t) in self.tasks.iter().enumerate() {
+            indeg[i] = t.deps.len();
+            for &d in &t.deps {
+                ensure!(d < i, "task {i} depends on later/self task {d}");
+                dependents[d].push(i);
+            }
+        }
+
+        // Ready heap: (Reverse(earliest_start), task). Earliest start =
+        // max over dep finishes; actual start also waits for the resource.
+        let mut ready: BinaryHeap<std::cmp::Reverse<(u64, usize)>> = BinaryHeap::new();
+        let mut earliest = vec![0u64; n];
+        for i in 0..n {
+            if indeg[i] == 0 {
+                ready.push(std::cmp::Reverse((0, i)));
+            }
+        }
+
+        let mut res_free = [0u64; 4];
+        let mut busy = [0u64; 4];
+        let mut done: Vec<Option<Done>> = vec![None; n];
+        let mut start = vec![0u64; n];
+        let mut completed = 0usize;
+
+        while let Some(std::cmp::Reverse((est, i))) = ready.pop() {
+            let t = &self.tasks[i];
+            let r = t.resource.index();
+            let s = est.max(res_free[r]);
+            let f = s + t.duration;
+            res_free[r] = f;
+            busy[r] += t.duration;
+            start[i] = s;
+            done[i] = Some(Done { finish: f });
+            completed += 1;
+            for &dep in &dependents[i] {
+                earliest[dep] = earliest[dep].max(f);
+                indeg[dep] -= 1;
+                if indeg[dep] == 0 {
+                    ready.push(std::cmp::Reverse((earliest[dep], dep)));
+                }
+            }
+        }
+        ensure!(completed == n, "dependency cycle: only {completed}/{n} tasks ran");
+
+        let finish: Vec<u64> = done.into_iter().map(|d| d.unwrap().finish).collect();
+        let makespan = finish.iter().copied().max().unwrap_or(0);
+        Ok(RunResult { finish, start, makespan, busy })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CL: Resource = Resource::Unit(ComputeUnit::Cluster);
+    const NPU: Resource = Resource::Unit(ComputeUnit::Npu);
+    const DMA: Resource = Resource::Dma(Level::L2);
+
+    #[test]
+    fn serial_on_same_resource() {
+        let mut e = Engine::new();
+        e.submit(TaskSpec { resource: CL, duration: 10, deps: vec![] });
+        e.submit(TaskSpec { resource: CL, duration: 5, deps: vec![] });
+        let r = e.run().unwrap();
+        assert_eq!(r.makespan, 15);
+        assert_eq!(r.busy_of(CL), 15);
+    }
+
+    #[test]
+    fn parallel_on_different_resources() {
+        let mut e = Engine::new();
+        e.submit(TaskSpec { resource: CL, duration: 10, deps: vec![] });
+        e.submit(TaskSpec { resource: NPU, duration: 7, deps: vec![] });
+        let r = e.run().unwrap();
+        assert_eq!(r.makespan, 10);
+        assert!((r.utilisation(NPU) - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dependency_chain() {
+        let mut e = Engine::new();
+        let a = e.submit(TaskSpec { resource: DMA, duration: 4, deps: vec![] });
+        let b = e.submit(TaskSpec { resource: CL, duration: 6, deps: vec![a] });
+        let c = e.submit(TaskSpec { resource: DMA, duration: 3, deps: vec![b] });
+        let r = e.run().unwrap();
+        assert_eq!(r.start[b], 4);
+        assert_eq!(r.finish[c], 13);
+    }
+
+    #[test]
+    fn pipeline_overlap() {
+        // Classic double-buffer pipeline: dma(i) overlaps kernel(i-1).
+        let mut e = Engine::new();
+        let mut prev_kernel: Option<TaskId> = None;
+        let mut last = 0;
+        for _ in 0..4 {
+            let mut deps = vec![];
+            if let Some(k) = prev_kernel {
+                // Keep ping/pong ordering: dma i can start while kernel
+                // i−1 runs, so dma depends only on the kernel two steps
+                // back (not modelled here: 4 steps, no conflict).
+                let _ = k;
+            }
+            let d = e.submit(TaskSpec { resource: DMA, duration: 10, deps: std::mem::take(&mut deps) });
+            let k = e.submit(TaskSpec { resource: CL, duration: 10, deps: vec![d] });
+            prev_kernel = Some(k);
+            last = k;
+        }
+        let r = e.run().unwrap();
+        // DMA is the serial bottleneck: 4×10, last kernel finishes +10.
+        assert_eq!(r.finish[last], 50);
+    }
+
+    #[test]
+    fn cycle_detected_via_debug_assert_or_error() {
+        // deps must reference earlier ids; a forward dep is a builder bug
+        // caught by run()'s ensure.
+        let e = Engine { tasks: vec![TaskSpec { resource: CL, duration: 1, deps: vec![0] }] };
+        assert!(e.run().is_err());
+    }
+
+    #[test]
+    fn empty_engine() {
+        let e = Engine::new();
+        let r = e.run().unwrap();
+        assert_eq!(r.makespan, 0);
+        assert!(e.is_empty());
+    }
+}

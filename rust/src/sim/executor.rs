@@ -1,0 +1,301 @@
+//! Schedule → task graph translation and report collection.
+
+use anyhow::Result;
+
+use crate::dma::DmaStats;
+use crate::memory::Level;
+use crate::schedule::{Phase, Schedule};
+use crate::soc::{ComputeUnit, SocConfig};
+
+use super::engine::{Engine, Resource, TaskId, TaskSpec};
+
+/// What limits a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Boundedness {
+    /// Kernels dominate (the paper's cluster-only GEMM case).
+    Compute,
+    /// DMA dominates (the paper's NPU case — where FTL pays off most).
+    Dma,
+    /// Neither clearly dominates (< 20 % apart).
+    Balanced,
+}
+
+impl std::fmt::Display for Boundedness {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Boundedness::Compute => "compute-bound",
+            Boundedness::Dma => "dma-bound",
+            Boundedness::Balanced => "balanced",
+        })
+    }
+}
+
+/// Per-phase simulation outcome.
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    /// Phase name (node names joined with '+').
+    pub name: String,
+    /// Phase makespan in cycles.
+    pub cycles: u64,
+    /// Busy cycles: cluster.
+    pub cluster_busy: u64,
+    /// Busy cycles: NPU.
+    pub npu_busy: u64,
+    /// Busy cycles: cluster DMA (L2↔L1).
+    pub dma_l2_busy: u64,
+    /// Busy cycles: IO DMA (L3↔L2).
+    pub dma_l3_busy: u64,
+    /// What limits the phase.
+    pub bound: Boundedness,
+    /// DMA statistics of the phase.
+    pub dma: DmaStats,
+}
+
+/// Whole-network simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total cycles (phases are barriers, so the sum of phase makespans).
+    pub total_cycles: u64,
+    /// Per-phase breakdown.
+    pub phases: Vec<PhaseReport>,
+    /// Aggregated DMA statistics.
+    pub dma: DmaStats,
+}
+
+impl SimReport {
+    /// Wall-clock milliseconds at the SoC clock.
+    pub fn ms(&self, soc: &SocConfig) -> f64 {
+        soc.cycles_to_ms(self.total_cycles)
+    }
+
+    /// Percentage runtime reduction vs a baseline report.
+    pub fn runtime_reduction_vs(&self, baseline: &SimReport) -> f64 {
+        if baseline.total_cycles == 0 {
+            return 0.0;
+        }
+        100.0 * (baseline.total_cycles as f64 - self.total_cycles as f64) / baseline.total_cycles as f64
+    }
+}
+
+/// Simulate a schedule on a SoC.
+pub fn simulate(schedule: &Schedule, soc: &SocConfig) -> Result<SimReport> {
+    let mut phases = Vec::with_capacity(schedule.phases.len());
+    let mut dma = DmaStats::default();
+    let mut total = 0u64;
+    for phase in &schedule.phases {
+        let rep = simulate_phase(phase, soc)?;
+        total += rep.cycles;
+        dma.merge(&rep.dma);
+        phases.push(rep);
+    }
+    Ok(SimReport { total_cycles: total, phases, dma })
+}
+
+fn simulate_phase(phase: &Phase, soc: &SocConfig) -> Result<PhaseReport> {
+    let mut e = Engine::new();
+    let mut stats = DmaStats::default();
+
+    // Per-step task ids for pipeline dependencies.
+    let mut step_dma_in: Vec<Vec<TaskId>> = Vec::with_capacity(phase.steps.len());
+    let mut step_kernels: Vec<Vec<TaskId>> = Vec::with_capacity(phase.steps.len());
+    let mut step_dma_out: Vec<Vec<TaskId>> = Vec::with_capacity(phase.steps.len());
+    // In single-buffered mode everything chains onto the previous task.
+    let mut prev_task: Option<TaskId> = None;
+
+    for (i, step) in phase.steps.iter().enumerate() {
+        let mut dma_in_ids = Vec::with_capacity(step.dma_in.len());
+        // Ping/pong: buffers are reused from step i−2, so loads (and the
+        // kernels overwriting output buffers) must wait for that step.
+        let two_back_kernels: Vec<TaskId> =
+            if i >= 2 { step_kernels[i - 2].clone() } else { Vec::new() };
+        let two_back_stores: Vec<TaskId> =
+            if i >= 2 { step_dma_out[i - 2].clone() } else { Vec::new() };
+
+        let mut prev_leg: Option<TaskId> = None;
+        for t in &step.dma_in {
+            let cycles = soc.dma_for(t.channel_level()).cycles(t);
+            stats.record(t, cycles);
+            let mut deps: Vec<TaskId> = Vec::new();
+            if phase.double_buffered {
+                deps.extend(two_back_kernels.iter().copied());
+                // Multi-leg transfers (L3→L2→L1) chain leg to leg.
+                if t.to == Level::L1 {
+                    if let Some(p) = prev_leg {
+                        deps.push(p);
+                    }
+                }
+            } else if let Some(p) = prev_task {
+                deps.push(p);
+            }
+            let id = e.submit(TaskSpec { resource: Resource::Dma(t.channel_level()), duration: cycles, deps });
+            prev_leg = Some(id);
+            prev_task = Some(id);
+            dma_in_ids.push(id);
+        }
+
+        let mut kernel_ids = Vec::with_capacity(step.kernels.len());
+        let mut prev_kernel: Option<TaskId> = None;
+        for k in &step.kernels {
+            let mut deps: Vec<TaskId> = Vec::new();
+            if phase.double_buffered {
+                deps.extend(dma_in_ids.iter().copied());
+                deps.extend(two_back_stores.iter().copied());
+                if let Some(p) = prev_kernel {
+                    deps.push(p); // data dependency within the fused chain
+                }
+            } else if let Some(p) = prev_task {
+                deps.push(p);
+            }
+            let id = e.submit(TaskSpec { resource: Resource::Unit(k.unit), duration: k.cycles, deps });
+            prev_kernel = Some(id);
+            prev_task = Some(id);
+            kernel_ids.push(id);
+        }
+
+        let mut dma_out_ids = Vec::with_capacity(step.dma_out.len());
+        let mut prev_leg: Option<TaskId> = None;
+        for t in &step.dma_out {
+            let cycles = soc.dma_for(t.channel_level()).cycles(t);
+            stats.record(t, cycles);
+            let mut deps: Vec<TaskId> = Vec::new();
+            if phase.double_buffered {
+                deps.extend(kernel_ids.iter().copied());
+                if let Some(p) = prev_leg {
+                    deps.push(p); // L1→L2 before L2→L3
+                }
+            } else if let Some(p) = prev_task {
+                deps.push(p);
+            }
+            let id = e.submit(TaskSpec { resource: Resource::Dma(t.channel_level()), duration: cycles, deps });
+            prev_leg = Some(id);
+            prev_task = Some(id);
+            dma_out_ids.push(id);
+        }
+
+        step_dma_in.push(dma_in_ids);
+        step_kernels.push(kernel_ids);
+        step_dma_out.push(dma_out_ids);
+    }
+
+    let run = e.run()?;
+    let cluster_busy = run.busy_of(Resource::Unit(ComputeUnit::Cluster));
+    let npu_busy = run.busy_of(Resource::Unit(ComputeUnit::Npu));
+    let dma_l2_busy = run.busy_of(Resource::Dma(Level::L2));
+    let dma_l3_busy = run.busy_of(Resource::Dma(Level::L3));
+    let compute = cluster_busy + npu_busy;
+    let dma_busy = dma_l2_busy + dma_l3_busy;
+    let bound = if dma_busy as f64 > 1.2 * compute as f64 {
+        Boundedness::Dma
+    } else if compute as f64 > 1.2 * dma_busy as f64 {
+        Boundedness::Compute
+    } else {
+        Boundedness::Balanced
+    };
+
+    Ok(PhaseReport {
+        name: phase.name.clone(),
+        cycles: run.makespan,
+        cluster_busy,
+        npu_busy,
+        dma_l2_busy,
+        dma_l3_busy,
+        bound,
+        dma: stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vit_mlp;
+    use crate::ir::DType;
+    use crate::schedule::build_schedule;
+    use crate::soc::{siracusa_reduced, siracusa_reduced_cluster_only};
+    use crate::tiling::{fuse_groups, solve_graph, FusionPolicy, SolverOptions, Strategy};
+
+    fn run(strategy: Strategy, npu: bool, dbuf: bool) -> SimReport {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let soc = if npu { siracusa_reduced() } else { siracusa_reduced_cluster_only() };
+        let groups = fuse_groups(&g, strategy, FusionPolicy::default());
+        let (_, sol) = solve_graph(&g, &soc, groups, &SolverOptions::default(), dbuf).unwrap();
+        let sched = build_schedule(&g, &soc, &sol).unwrap();
+        simulate(&sched, &soc).unwrap()
+    }
+
+    #[test]
+    fn ftl_faster_than_baseline_cluster() {
+        let base = run(Strategy::LayerPerLayer, false, false);
+        let ftl = run(Strategy::Ftl, false, false);
+        let red = ftl.runtime_reduction_vs(&base);
+        assert!(red > 10.0, "cluster-only FTL reduction too small: {red:.1}%");
+        assert!(red < 60.0, "cluster-only FTL reduction implausibly large: {red:.1}%");
+    }
+
+    #[test]
+    fn ftl_faster_than_baseline_npu() {
+        let base = run(Strategy::LayerPerLayer, true, false);
+        let ftl = run(Strategy::Ftl, true, false);
+        let red = ftl.runtime_reduction_vs(&base);
+        assert!(red > 40.0, "NPU FTL reduction too small: {red:.1}%");
+        assert!(red < 85.0, "NPU FTL reduction implausibly large: {red:.1}%");
+    }
+
+    #[test]
+    fn npu_case_reduction_larger_than_cluster() {
+        let base_c = run(Strategy::LayerPerLayer, false, false);
+        let ftl_c = run(Strategy::Ftl, false, false);
+        let base_n = run(Strategy::LayerPerLayer, true, false);
+        let ftl_n = run(Strategy::Ftl, true, false);
+        assert!(
+            ftl_n.runtime_reduction_vs(&base_n) > ftl_c.runtime_reduction_vs(&base_c),
+            "the paper's key shape: NPU case benefits more from FTL"
+        );
+    }
+
+    #[test]
+    fn dma_transfer_reduction_large() {
+        let base = run(Strategy::LayerPerLayer, false, false);
+        let ftl = run(Strategy::Ftl, false, false);
+        let red = ftl.dma.byte_reduction_vs(&base.dma);
+        assert!(red > 25.0, "DMA byte reduction too small: {red:.1}%");
+    }
+
+    #[test]
+    fn double_buffer_helps_or_equal() {
+        for npu in [false, true] {
+            let single = run(Strategy::Ftl, npu, false);
+            let double = run(Strategy::Ftl, npu, true);
+            assert!(
+                double.total_cycles <= single.total_cycles,
+                "double buffering must not slow down (npu={npu}): {} vs {}",
+                double.total_cycles,
+                single.total_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn npu_only_busy_when_present() {
+        let no_npu = run(Strategy::Ftl, false, false);
+        assert!(no_npu.phases.iter().all(|p| p.npu_busy == 0));
+        let with_npu = run(Strategy::Ftl, true, false);
+        assert!(with_npu.phases.iter().any(|p| p.npu_busy > 0));
+    }
+
+    #[test]
+    fn phase_cycles_sum_to_total() {
+        let rep = run(Strategy::Ftl, true, true);
+        let sum: u64 = rep.phases.iter().map(|p| p.cycles).sum();
+        assert_eq!(sum, rep.total_cycles);
+    }
+
+    #[test]
+    fn baseline_gelu_phase_is_dma_bound() {
+        // The paper's mechanism: the standalone GeLU layer round-trips the
+        // L3-spilled intermediate; its phase must be DMA-bound.
+        let base = run(Strategy::LayerPerLayer, false, false);
+        let gelu = base.phases.iter().find(|p| p.name == "gelu").expect("gelu phase");
+        assert_eq!(gelu.bound, Boundedness::Dma);
+        assert!(gelu.dma_l3_busy > 0, "gelu must touch the IO DMA (L3 spill)");
+    }
+}

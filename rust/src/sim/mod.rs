@@ -1,0 +1,17 @@
+//! GVSoC-style event-driven SoC simulation.
+//!
+//! The paper measures runtime with GVSoC, an event-based simulator whose
+//! cycle counts come from analytic per-engine models. We reproduce that
+//! abstraction: a discrete-event [`engine`] schedules *tasks* (DMA
+//! transfers, kernel invocations) on *serial resources* (the cluster, the
+//! NPU, one DMA channel per outer memory level) honouring explicit
+//! dependencies; [`executor`] translates a [`crate::schedule::Schedule`]
+//! into the task graph — sequential within a single-buffered phase,
+//! software-pipelined (ping/pong) within a double-buffered one — and
+//! collects runtime, per-resource utilisation and DMA statistics.
+
+mod engine;
+mod executor;
+
+pub use engine::{Engine, Resource, TaskId, TaskSpec};
+pub use executor::{simulate, Boundedness, PhaseReport, SimReport};

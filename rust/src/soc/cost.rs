@@ -1,0 +1,133 @@
+//! Analytic kernel cost models.
+//!
+//! GVSoC-style event simulation charges each kernel invocation an analytic
+//! cycle count derived from the unit's throughput. Constants are
+//! calibrated so that the *ratios* of the paper's Fig. 3 reproduce (see
+//! `presets.rs` and EXPERIMENTS.md); absolute cycle counts are not claims
+//! about 16 nm silicon.
+
+use crate::ir::{ActKind, Op};
+
+use super::{ComputeUnit, SocConfig};
+
+/// Cost of one kernel invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelCost {
+    /// Unit the kernel runs on.
+    pub unit: ComputeUnit,
+    /// Cycles charged.
+    pub cycles: u64,
+}
+
+/// Stateless cost evaluator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KernelCostModel;
+
+impl KernelCostModel {
+    /// Cycles for executing `op` on a tile with the given input/output
+    /// shapes, on `unit`.
+    pub fn tile_cycles(soc: &SocConfig, op: &Op, unit: ComputeUnit, inputs: &[&[usize]], output: &[usize]) -> u64 {
+        let macs = op.macs(inputs, output) as f64;
+        let elems = output.iter().product::<usize>() as f64;
+        match unit {
+            ComputeUnit::Npu => {
+                let npu = soc.npu.expect("NPU kernel scheduled on NPU-less SoC");
+                let compute = match op {
+                    Op::Gemm { .. } | Op::Conv2d { .. } => macs / npu.effective_macs_per_cycle(),
+                    // The NPU only runs GEMM/conv; anything else falling
+                    // here is a placement bug — make it expensive and
+                    // visible rather than silently wrong.
+                    _ => unreachable!("op {} cannot run on the NPU", op.name()),
+                };
+                npu.job_setup_cycles + compute.ceil() as u64
+            }
+            ComputeUnit::Cluster => {
+                let c = soc.cluster;
+                let compute = match op {
+                    Op::Gemm { .. } | Op::Conv2d { .. } => macs / c.gemm_macs_per_cycle(),
+                    Op::Act(kind) => elems / (c.eltwise_per_cycle() * Self::act_rate(*kind)),
+                    Op::Add | Op::Requant => elems / (c.eltwise_per_cycle() * 2.0),
+                    Op::LayerNorm { .. } => elems / (c.eltwise_per_cycle() * 0.25),
+                    Op::Softmax => elems / (c.eltwise_per_cycle() / 3.0),
+                    Op::Transpose => elems / c.eltwise_per_cycle(),
+                };
+                c.kernel_setup_cycles + compute.ceil() as u64
+            }
+        }
+    }
+
+    /// Relative elementwise throughput of each activation (vs the
+    /// cluster's base `eltwise_per_core_cycle`): int8 GeLU is a 256-entry
+    /// LUT (1 elem/cycle/core), ReLU is a SIMD max (4×), sigmoid an LUT
+    /// with interpolation (0.5×).
+    fn act_rate(kind: ActKind) -> f64 {
+        match kind {
+            ActKind::Gelu => 1.0,
+            ActKind::Relu => 4.0,
+            ActKind::Sigmoid => 0.5,
+            ActKind::Identity => 8.0,
+        }
+    }
+
+    /// Convenience: cycles for the op on its *placed* unit.
+    pub fn placed_cycles(soc: &SocConfig, op: &Op, inputs: &[&[usize]], output: &[usize]) -> KernelCost {
+        let unit = soc.place(op);
+        KernelCost { unit, cycles: Self::tile_cycles(soc, op, unit, inputs, output) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::{siracusa_reduced, siracusa_reduced_cluster_only};
+
+    #[test]
+    fn gemm_cluster_vs_npu() {
+        let soc = siracusa_reduced();
+        let op = Op::Gemm { transpose_b: false, has_bias: false };
+        let ins: Vec<&[usize]> = vec![&[64, 256], &[256, 64]];
+        let out = [64usize, 64];
+        let cl = KernelCostModel::tile_cycles(&soc, &op, ComputeUnit::Cluster, &ins, &out);
+        let np = KernelCostModel::tile_cycles(&soc, &op, ComputeUnit::Npu, &ins, &out);
+        assert!(np < cl, "NPU ({np}) should beat cluster ({cl}) on GEMM");
+    }
+
+    #[test]
+    fn placement_in_placed_cycles() {
+        let soc = siracusa_reduced_cluster_only();
+        let op = Op::Gemm { transpose_b: false, has_bias: false };
+        let ins: Vec<&[usize]> = vec![&[8, 8], &[8, 8]];
+        let kc = KernelCostModel::placed_cycles(&soc, &op, &ins, &[8, 8]);
+        assert_eq!(kc.unit, ComputeUnit::Cluster);
+    }
+
+    #[test]
+    fn gelu_scales_with_elems() {
+        let soc = siracusa_reduced();
+        let op = Op::Act(ActKind::Gelu);
+        let small: Vec<&[usize]> = vec![&[16, 64]];
+        let large: Vec<&[usize]> = vec![&[64, 64]];
+        let s = KernelCostModel::tile_cycles(&soc, &op, ComputeUnit::Cluster, &small, &[16, 64]);
+        let l = KernelCostModel::tile_cycles(&soc, &op, ComputeUnit::Cluster, &large, &[64, 64]);
+        assert!(l > s);
+        let setup = soc.cluster.kernel_setup_cycles;
+        assert_eq!((l - setup), (s - setup) * 4);
+    }
+
+    #[test]
+    fn relu_faster_than_gelu() {
+        let soc = siracusa_reduced();
+        let shape: Vec<&[usize]> = vec![&[128, 128]];
+        let gelu = KernelCostModel::tile_cycles(&soc, &Op::Act(ActKind::Gelu), ComputeUnit::Cluster, &shape, &[128, 128]);
+        let relu = KernelCostModel::tile_cycles(&soc, &Op::Act(ActKind::Relu), ComputeUnit::Cluster, &shape, &[128, 128]);
+        assert!(relu < gelu);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot run on the NPU")]
+    fn gelu_on_npu_panics() {
+        let soc = siracusa_reduced();
+        let shape: Vec<&[usize]> = vec![&[8, 8]];
+        KernelCostModel::tile_cycles(&soc, &Op::Act(ActKind::Gelu), ComputeUnit::Npu, &shape, &[8, 8]);
+    }
+}

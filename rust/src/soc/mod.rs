@@ -1,0 +1,103 @@
+//! SoC model: compute units, kernel cost models, and presets.
+//!
+//! The paper evaluates on a *reduced* Siracusa SoC: an 8-core RV32
+//! (XpulpV2) DSP cluster plus an NE16-class NPU, both reading from L1
+//! TCDM, fed by a cluster DMA (L2↔L1) and an IO DMA to external RAM
+//! (L3↔L2). We model each compute unit with a MAC-throughput cost model
+//! calibrated to reproduce the paper's runtime *ratios* (GVSoC-style
+//! event simulation does the same — cycle counts come from analytic
+//! kernel models, not RTL).
+
+mod cost;
+mod presets;
+mod units;
+
+pub use cost::{KernelCost, KernelCostModel};
+pub use presets::{siracusa_reduced, siracusa_reduced_cluster_only, SocPreset};
+pub use units::{ClusterSpec, ComputeUnit, NpuSpec};
+
+
+use crate::dma::DmaCostModel;
+use crate::memory::{Level, MemoryHierarchy};
+
+/// Full SoC configuration — everything the simulator and the FTL solver
+/// need to know about the target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SocConfig {
+    /// Human-readable name (shows up in reports).
+    pub name: String,
+    /// Cluster clock in MHz (cycles → wall-clock conversion only).
+    pub freq_mhz: f64,
+    /// Memory hierarchy capacities.
+    pub mem: MemoryHierarchy,
+    /// The RISC-V DSP cluster.
+    pub cluster: ClusterSpec,
+    /// Optional NPU (GEMM/conv offload).
+    pub npu: Option<NpuSpec>,
+    /// Cluster DMA (L2↔L1).
+    pub dma_cluster: DmaCostModel,
+    /// IO DMA / HyperBus (L3↔L2).
+    pub dma_io: DmaCostModel,
+}
+
+impl SocConfig {
+    /// DMA cost model for transfers whose outer level is `level`.
+    pub fn dma_for(&self, level: Level) -> DmaCostModel {
+        match level {
+            Level::L3 => self.dma_io,
+            _ => self.dma_cluster,
+        }
+    }
+
+    /// The compute unit a given op runs on (NPU takes GEMM/conv when
+    /// present, everything else runs on the cluster — the paper's
+    /// placement).
+    pub fn place(&self, op: &crate::ir::Op) -> ComputeUnit {
+        use crate::ir::Op;
+        match op {
+            Op::Gemm { .. } | Op::Conv2d { .. } if self.npu.is_some() => ComputeUnit::Npu,
+            _ => ComputeUnit::Cluster,
+        }
+    }
+
+    /// Convert cycles to milliseconds at the configured clock.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_mhz * 1e3)
+    }
+
+    /// Whether the SoC has an NPU.
+    pub fn has_npu(&self) -> bool {
+        self.npu.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ActKind, Op};
+
+    #[test]
+    fn placement_follows_npu_presence() {
+        let with = siracusa_reduced();
+        let without = siracusa_reduced_cluster_only();
+        let gemm = Op::Gemm { transpose_b: false, has_bias: true };
+        let gelu = Op::Act(ActKind::Gelu);
+        assert_eq!(with.place(&gemm), ComputeUnit::Npu);
+        assert_eq!(with.place(&gelu), ComputeUnit::Cluster);
+        assert_eq!(without.place(&gemm), ComputeUnit::Cluster);
+    }
+
+    #[test]
+    fn dma_selection() {
+        let soc = siracusa_reduced();
+        assert_eq!(soc.dma_for(Level::L2), soc.dma_cluster);
+        assert_eq!(soc.dma_for(Level::L3), soc.dma_io);
+    }
+
+    #[test]
+    fn cycles_to_ms() {
+        let soc = siracusa_reduced();
+        let ms = soc.cycles_to_ms((soc.freq_mhz * 1e3) as u64);
+        assert!((ms - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,137 @@
+//! SoC presets.
+//!
+//! `siracusa-reduced` is *calibrated*, not measured: the constants are
+//! chosen so the deployment flow reproduces the paper's Fig. 3 ratios
+//! (−28.8 % runtime cluster-only, −60.1 % with NPU, ≈−47 % DMA volume)
+//! through the same *mechanism* the paper describes — the MLP intermediate
+//! tensor overflows L2 and round-trips through slow external L3 unless FTL
+//! fuses the producer/consumer pair. See EXPERIMENTS.md §Calibration.
+//!
+//! Derivation of the key constants (ViT-Base MLP stage, int8,
+//! X[197,768] · W1[768,3072] → GeLU):
+//!
+//! * cluster GEMM: 8 cores × 4 MAC/cyc (XpulpV2 `pv.sdotsp.b`) × 0.5
+//!   efficiency = 16 MAC/cyc → 464.8 M MAC ≈ 29 M cycles — compute-bound.
+//! * NPU: 96 MAC/cyc × 0.65 = 62.4 MAC/cyc → ≈ 7.5 M cycles.
+//! * L3 link: 0.1 B/cyc → one 605 KiB pass of the intermediate ≈ 6.1 M
+//!   cycles; the baseline pays the round trip twice (store + load).
+//! * L2 = 3.25 MiB: holds X + W1 + output (≈2.97 MiB) but *not* also the
+//!   605 KiB intermediate — exactly the paper's overflow condition.
+
+use crate::dma::DmaCostModel;
+use crate::memory::{LevelSpec, MemoryHierarchy};
+
+use super::{ClusterSpec, NpuSpec, SocConfig};
+
+/// Named preset selector (CLI `--soc`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SocPreset {
+    /// Reduced Siracusa, cluster + NPU (the paper's right-hand Fig. 3 bars).
+    SiracusaReduced,
+    /// Reduced Siracusa, cluster only (left-hand bars).
+    SiracusaClusterOnly,
+}
+
+impl SocPreset {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "siracusa" | "siracusa-reduced" | "npu" => SocPreset::SiracusaReduced,
+            "siracusa-cluster" | "cluster" | "cluster-only" => SocPreset::SiracusaClusterOnly,
+            _ => return None,
+        })
+    }
+
+    /// Materialise the configuration.
+    pub fn config(self) -> SocConfig {
+        match self {
+            SocPreset::SiracusaReduced => siracusa_reduced(),
+            SocPreset::SiracusaClusterOnly => siracusa_reduced_cluster_only(),
+        }
+    }
+}
+
+fn base() -> SocConfig {
+    SocConfig {
+        name: "siracusa-reduced".into(),
+        freq_mhz: 360.0,
+        mem: MemoryHierarchy {
+            // 256 KiB TCDM minus 16 KiB runtime reservation.
+            l1: LevelSpec::new(240 << 10, 4),
+            // Reduced Siracusa L2: 3.25 MiB usable.
+            l2: LevelSpec::new((3 << 20) + (256 << 10), 4),
+            // External HyperRAM-class L3.
+            l3: LevelSpec::new(64 << 20, 4),
+        },
+        cluster: ClusterSpec {
+            cores: 8,
+            macs_per_core_cycle: 4.0,
+            gemm_efficiency: 0.5,
+            eltwise_per_core_cycle: 1.0,
+            kernel_setup_cycles: 400,
+        },
+        npu: Some(NpuSpec { macs_per_cycle: 96.0, efficiency: 0.65, job_setup_cycles: 600 }),
+        // Cluster DMA (MCHAN-class): 64-bit port to L2, cheap commands.
+        dma_cluster: DmaCostModel { setup_cycles: 30, per_row_cycles: 2, bytes_per_cycle: 8.0 },
+        // IO DMA over HyperBus-class link, expressed at cluster clock.
+        dma_io: DmaCostModel { setup_cycles: 300, per_row_cycles: 8, bytes_per_cycle: 0.1 },
+    }
+}
+
+/// Reduced Siracusa with the NPU enabled.
+pub fn siracusa_reduced() -> SocConfig {
+    base()
+}
+
+/// Reduced Siracusa with the NPU fused off (cluster-only evaluation).
+pub fn siracusa_reduced_cluster_only() -> SocConfig {
+    let mut soc = base();
+    soc.name = "siracusa-reduced-cluster".into();
+    soc.npu = None;
+    soc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::Level;
+
+    #[test]
+    fn preset_parse() {
+        assert_eq!(SocPreset::parse("siracusa"), Some(SocPreset::SiracusaReduced));
+        assert_eq!(SocPreset::parse("cluster-only"), Some(SocPreset::SiracusaClusterOnly));
+        assert_eq!(SocPreset::parse("zx81"), None);
+    }
+
+    #[test]
+    fn overflow_condition_holds() {
+        // The calibration invariant behind the whole reproduction: for
+        // ViT-Base MLP-stage tensors, L2 holds {X, W1, bias, OUT} but not
+        // also the intermediate.
+        let soc = siracusa_reduced();
+        let x = 197 * 768;
+        let w1 = 768 * 3072;
+        let b1 = 3072 * 4; // int32 bias
+        let inter = 197 * 3072;
+        let out = 197 * 3072;
+        let without = x + w1 + b1 + out;
+        let with = without + inter;
+        assert!(without <= soc.mem.capacity(Level::L2), "resident set must fit L2");
+        assert!(with > soc.mem.capacity(Level::L2), "adding the intermediate must overflow L2");
+    }
+
+    #[test]
+    fn l3_much_slower_than_l2() {
+        let soc = siracusa_reduced();
+        assert!(soc.dma_cluster.bytes_per_cycle / soc.dma_io.bytes_per_cycle >= 16.0);
+    }
+
+    #[test]
+    fn npu_faster_than_cluster_but_not_free() {
+        let soc = siracusa_reduced();
+        let npu = soc.npu.unwrap().effective_macs_per_cycle();
+        let cl = soc.cluster.gemm_macs_per_cycle();
+        assert!(npu > 2.0 * cl);
+        assert!(npu < 16.0 * cl);
+    }
+}

@@ -1,0 +1,99 @@
+//! Compute-unit specifications.
+
+
+/// Which engine executes a kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ComputeUnit {
+    /// The 8-core RV32 XpulpV2 DSP cluster.
+    Cluster,
+    /// The NE16-class neural processing unit.
+    Npu,
+}
+
+impl ComputeUnit {
+    /// Display name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            ComputeUnit::Cluster => "cluster",
+            ComputeUnit::Npu => "npu",
+        }
+    }
+}
+
+impl std::fmt::Display for ComputeUnit {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// RISC-V DSP cluster parameters (XpulpV2: hardware loops, post-increment
+/// load/store, 4×int8 SIMD dot-product).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterSpec {
+    /// Number of cores.
+    pub cores: usize,
+    /// Peak int8 MACs per core per cycle (SIMD sdotp: 4).
+    pub macs_per_core_cycle: f64,
+    /// Achieved fraction of peak for GEMM inner loops (loop overhead,
+    /// bank conflicts, barriers).
+    pub gemm_efficiency: f64,
+    /// Elementwise ops (e.g. LUT GeLU) per core per cycle.
+    pub eltwise_per_core_cycle: f64,
+    /// Fixed cycles per kernel launch (fork/join + loop setup).
+    pub kernel_setup_cycles: u64,
+}
+
+impl ClusterSpec {
+    /// Effective GEMM MACs/cycle for the whole cluster.
+    pub fn gemm_macs_per_cycle(&self) -> f64 {
+        self.cores as f64 * self.macs_per_core_cycle * self.gemm_efficiency
+    }
+
+    /// Effective elementwise throughput (elements/cycle) for the cluster.
+    pub fn eltwise_per_cycle(&self) -> f64 {
+        self.cores as f64 * self.eltwise_per_core_cycle
+    }
+}
+
+/// NPU parameters (NE16-class: int8 GEMM/conv engine reading L1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NpuSpec {
+    /// Peak int8 MACs per cycle.
+    pub macs_per_cycle: f64,
+    /// Achieved fraction of peak (tiling edge effects, pipeline fill).
+    pub efficiency: f64,
+    /// Fixed cycles per job launch (configuration over the peripheral
+    /// interconnect).
+    pub job_setup_cycles: u64,
+}
+
+impl NpuSpec {
+    /// Effective MACs/cycle.
+    pub fn effective_macs_per_cycle(&self) -> f64 {
+        self.macs_per_cycle * self.efficiency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_throughput() {
+        let c = ClusterSpec {
+            cores: 8,
+            macs_per_core_cycle: 4.0,
+            gemm_efficiency: 0.5,
+            eltwise_per_core_cycle: 1.0,
+            kernel_setup_cycles: 400,
+        };
+        assert!((c.gemm_macs_per_cycle() - 16.0).abs() < 1e-12);
+        assert!((c.eltwise_per_cycle() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn npu_throughput() {
+        let n = NpuSpec { macs_per_cycle: 256.0, efficiency: 0.75, job_setup_cycles: 600 };
+        assert!((n.effective_macs_per_cycle() - 192.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,236 @@
+//! Step ② — constraint formulation.
+//!
+//! Three constraint classes, exactly as the paper defines them:
+//!
+//! * **Geometric** — data dependencies between output- and input-tensor
+//!   dimensions, expressed as linear transformations `in = a·out + b`
+//!   ([`Constraint::Link`]; plain equality is `a=1, b=0`). For GEMM the
+//!   output tile `[m, n]` needs input tiles `A[m, k]`, `B[k, n]`; for a
+//!   convolution the input-height tile is `stride·h_out + (kh − 1)`.
+//! * **Kernel policy** — dataflow requirements of the kernel library:
+//!   the int8 GEMM reduction dim is never tiled ([`Constraint::Full`],
+//!   requantisation needs the complete accumulation), normalisation ops
+//!   need whole rows.
+//! * **Performance** — flexible utilisation boosters: tile sizes that are
+//!   multiples of the SIMD width / NPU PE-array width
+//!   ([`Constraint::Multiple`]) and minimum tile sizes
+//!   ([`Constraint::Min`]). These bind only the *steady-state* tile; edge
+//!   (remainder) tiles may be smaller.
+
+use anyhow::{bail, Result};
+
+use crate::ir::{Graph, Node, Op};
+use crate::soc::SocConfig;
+
+use super::problem::{NodeTiling, OperandRef};
+use super::vars::{VarId, VarTable};
+
+/// A tiling constraint over [`VarId`]s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Constraint {
+    /// Geometric: `dst = a · src + b` over *tile sizes*.
+    Link {
+        /// Dependent (input-side) variable.
+        dst: VarId,
+        /// Independent variable.
+        src: VarId,
+        /// Multiplier.
+        a: usize,
+        /// Offset.
+        b: usize,
+    },
+    /// Kernel policy: the dimension is not tiled (`tile == full`).
+    Full(VarId),
+    /// Performance: steady-state tile size must be a multiple of `.1`.
+    Multiple(VarId, usize),
+    /// Performance: steady-state tile size must be at least `.1`.
+    Min(VarId, usize),
+}
+
+impl Constraint {
+    /// Equality binding (used by fusion, step ③).
+    pub fn eq(dst: VarId, src: VarId) -> Self {
+        Constraint::Link { dst, src, a: 1, b: 0 }
+    }
+
+    /// True for the performance class (droppable under `--no-perf-constraints`).
+    pub fn is_performance(&self) -> bool {
+        matches!(self, Constraint::Multiple(..) | Constraint::Min(..))
+    }
+}
+
+/// Emit variables, operand descriptors and constraints for one node.
+///
+/// `out_vars`, if given, are the *pre-bound* variables for the node's
+/// output dimensions (used when the node's output feeds a later op in the
+/// same solve — not the usual path; fusion binds on the *input* side).
+/// Returns the node tiling descriptor plus its constraints.
+pub fn emit_node(
+    graph: &Graph,
+    soc: &SocConfig,
+    node_id: usize,
+    vars: &mut VarTable,
+) -> Result<(NodeTiling, Vec<Constraint>)> {
+    let node: &Node = &graph.nodes[node_id];
+    let nname = &node.name;
+    let out_shape = &graph.tensors[node.output].shape;
+    let mut cons = Vec::new();
+
+    // Attribute output variables (step ① for the output tensor).
+    let out_vars: Vec<VarId> = out_shape
+        .iter()
+        .enumerate()
+        .map(|(i, &d)| vars.fresh(format!("{nname}.out{i}"), d))
+        .collect();
+
+    let in_shapes: Vec<&Vec<usize>> = node.inputs.iter().map(|&t| &graph.tensors[t].shape).collect();
+
+    // Per-op geometric / policy / performance constraints.
+    let in_vars: Vec<Vec<VarId>> = match &node.op {
+        Op::Gemm { transpose_b, has_bias } => {
+            let (m, n) = (out_vars[0], out_vars[1]);
+            let k_full = in_shapes[0][1];
+            let k = vars.fresh(format!("{nname}.K"), k_full);
+            // Kernel policy: int8 GEMM accumulates the whole K per tile.
+            cons.push(Constraint::Full(k));
+            // Performance: SIMD width on N (cluster sdotp) / PE width (NPU).
+            let width = if soc.has_npu() { 16 } else { 4 };
+            cons.push(Constraint::Multiple(n, width));
+            let b = if *transpose_b { vec![n, k] } else { vec![k, n] };
+            let mut ins = vec![vec![m, k], b];
+            if *has_bias {
+                ins.push(vec![n]);
+            }
+            ins
+        }
+        Op::Act(_) | Op::Requant => {
+            // Elementwise: input tile dims ≡ output tile dims.
+            vec![out_vars.clone()]
+        }
+        Op::Add => vec![out_vars.clone(), out_vars.clone()],
+        Op::LayerNorm { .. } => {
+            // Kernel policy: normalisation needs whole rows — last dim full.
+            let c = *out_vars.last().unwrap();
+            cons.push(Constraint::Full(c));
+            vec![out_vars.clone(), vec![c], vec![c]]
+        }
+        Op::Softmax => {
+            let c = *out_vars.last().unwrap();
+            cons.push(Constraint::Full(c));
+            vec![out_vars.clone()]
+        }
+        Op::Transpose => {
+            // Geometric: input dims are the output dims swapped.
+            vec![vec![out_vars[1], out_vars[0]]]
+        }
+        Op::Conv2d { kh, kw, stride, pad } => {
+            let (nb, ho, wo, f) = (out_vars[0], out_vars[1], out_vars[2], out_vars[3]);
+            // Geometric links with halo: hi = stride·ho + (kh − 1).
+            let hi = vars.fresh(format!("{nname}.Hin"), in_shapes[0][1]);
+            let wi = vars.fresh(format!("{nname}.Win"), in_shapes[0][2]);
+            cons.push(Constraint::Link { dst: hi, src: ho, a: *stride, b: kh - 1 });
+            cons.push(Constraint::Link { dst: wi, src: wo, a: *stride, b: kw - 1 });
+            // Kernel policy: padded convolutions are not spatially tiled —
+            // the affine tile-offset model (`in_off = stride·out_off`)
+            // cannot express the −pad shift, so interior tiles would read
+            // the wrong halo. Zero-pad convs tile freely.
+            if *pad > 0 {
+                cons.push(Constraint::Full(ho));
+                cons.push(Constraint::Full(wo));
+            }
+            // Kernel policy: full input-channel reduction per tile.
+            let c = vars.fresh(format!("{nname}.Cin"), in_shapes[0][3]);
+            cons.push(Constraint::Full(c));
+            // Weights are never spatially tiled.
+            let kh_v = vars.fresh(format!("{nname}.kh"), *kh);
+            let kw_v = vars.fresh(format!("{nname}.kw"), *kw);
+            cons.push(Constraint::Full(kh_v));
+            cons.push(Constraint::Full(kw_v));
+            let width = if soc.has_npu() { 16 } else { 4 };
+            cons.push(Constraint::Multiple(f, width));
+            vec![vec![nb, hi, wi, c], vec![kh_v, kw_v, c, f]]
+        }
+    };
+
+    if in_vars.len() != node.inputs.len() {
+        bail!("internal: operand/var count mismatch for node {nname}");
+    }
+
+    let operands: Vec<OperandRef> = node
+        .inputs
+        .iter()
+        .zip(&in_vars)
+        .map(|(&t, dims)| OperandRef { tensor: t, dims: dims.clone(), is_output: false })
+        .chain(std::iter::once(OperandRef { tensor: node.output, dims: out_vars.clone(), is_output: true }))
+        .collect();
+
+    Ok((NodeTiling { node: node_id, out_vars, operands }, cons))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vit_mlp;
+    use crate::ir::DType;
+    use crate::soc::{siracusa_reduced, siracusa_reduced_cluster_only};
+
+    #[test]
+    fn gemm_emits_full_k_and_simd_multiple() {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let soc = siracusa_reduced_cluster_only();
+        let mut vars = VarTable::new();
+        let (nt, cons) = emit_node(&g, &soc, 0, &mut vars).unwrap();
+        // fc1: A, B, bias, out = 4 operands.
+        assert_eq!(nt.operands.len(), 4);
+        let fulls: Vec<_> = cons.iter().filter(|c| matches!(c, Constraint::Full(_))).collect();
+        assert_eq!(fulls.len(), 1, "exactly one Full (the K dim)");
+        assert!(cons.iter().any(|c| matches!(c, Constraint::Multiple(_, 4))));
+    }
+
+    #[test]
+    fn npu_widens_simd_multiple() {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let soc = siracusa_reduced();
+        let mut vars = VarTable::new();
+        let (_, cons) = emit_node(&g, &soc, 0, &mut vars).unwrap();
+        assert!(cons.iter().any(|c| matches!(c, Constraint::Multiple(_, 16))));
+    }
+
+    #[test]
+    fn act_shares_output_vars() {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let soc = siracusa_reduced();
+        let mut vars = VarTable::new();
+        let (nt, cons) = emit_node(&g, &soc, 1, &mut vars).unwrap();
+        assert!(cons.is_empty());
+        // gelu input dims are literally the output vars.
+        assert_eq!(nt.operands[0].dims, nt.operands[1].dims);
+    }
+
+    #[test]
+    fn performance_class_detection() {
+        let v = VarId(0);
+        assert!(Constraint::Multiple(v, 4).is_performance());
+        assert!(Constraint::Min(v, 8).is_performance());
+        assert!(!Constraint::Full(v).is_performance());
+        assert!(!Constraint::eq(v, VarId(1)).is_performance());
+    }
+
+    #[test]
+    fn conv_emits_halo_links() {
+        use crate::ir::{Graph, Tensor, TensorKind};
+        let mut g = Graph::new();
+        let x = g.add_tensor(Tensor::new("x", vec![1, 32, 32, 16], DType::Int8, TensorKind::Input)).unwrap();
+        let w = g.add_tensor(Tensor::new("w", vec![3, 3, 16, 64], DType::Int8, TensorKind::Weight)).unwrap();
+        g.add_node("conv", Op::Conv2d { kh: 3, kw: 3, stride: 1, pad: 1 }, vec![x, w], "y", TensorKind::Output)
+            .unwrap();
+        let soc = siracusa_reduced_cluster_only();
+        let mut vars = VarTable::new();
+        let (_, cons) = emit_node(&g, &soc, 0, &mut vars).unwrap();
+        let halos: Vec<_> = cons
+            .iter()
+            .filter(|c| matches!(c, Constraint::Link { a: 1, b: 2, .. }))
+            .collect();
+        assert_eq!(halos.len(), 2, "H and W halo links");
+    }
+}

@@ -1,0 +1,182 @@
+//! Step ③ — fusion-group selection.
+//!
+//! FTL fuses *consecutive* layers: a producer and the consumer(s) of its
+//! output tensor, chained while the policy allows. The shared tensor's
+//! dimension variables are bound during [`super::GroupProblem::build`];
+//! this module only decides *which* nodes go together. If a group later
+//! turns out to be unsolvable (the bound problem cannot fit L1), the
+//! solver shrinks it from the tail — fusion in FTL is an optimisation, not
+//! an obligation.
+
+
+use crate::ir::{Graph, NodeId, TensorKind};
+
+use super::problem::Strategy;
+
+/// A set of consecutive nodes tiled as one problem.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusionGroup {
+    /// Node ids in topological (execution) order.
+    pub nodes: Vec<NodeId>,
+}
+
+impl FusionGroup {
+    /// Single-node group.
+    pub fn solo(n: NodeId) -> Self {
+        Self { nodes: vec![n] }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Always false — groups are non-empty by construction.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+/// Which consumers may be pulled into a producer's group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusionPolicy {
+    /// Maximum nodes per group.
+    pub max_len: usize,
+    /// Only chain *elementwise* consumers (the safe default: their tile
+    /// dims bind 1:1 to the producer's). When false, any consumer is
+    /// attempted (e.g. GEMM→GEMM) and the solver's capacity check decides.
+    pub elementwise_only: bool,
+}
+
+impl Default for FusionPolicy {
+    fn default() -> Self {
+        Self { max_len: 4, elementwise_only: true }
+    }
+}
+
+/// Partition the graph into fusion groups.
+///
+/// * [`Strategy::LayerPerLayer`] — every node is its own group.
+/// * [`Strategy::Ftl`] — greedy maximal chains: extend a group while the
+///   tail node's output has a *single* consumer, is not a graph output,
+///   and the consumer satisfies the policy.
+pub fn fuse_groups(graph: &Graph, strategy: Strategy, policy: FusionPolicy) -> Vec<FusionGroup> {
+    match strategy {
+        Strategy::LayerPerLayer => (0..graph.nodes.len()).map(FusionGroup::solo).collect(),
+        Strategy::Ftl => {
+            let consumers = graph.consumers();
+            let mut groups: Vec<FusionGroup> = Vec::new();
+            let mut taken = vec![false; graph.nodes.len()];
+            for start in 0..graph.nodes.len() {
+                if taken[start] {
+                    continue;
+                }
+                let mut group = FusionGroup::solo(start);
+                taken[start] = true;
+                let mut tail = start;
+                while group.len() < policy.max_len {
+                    let out = graph.nodes[tail].output;
+                    if graph.tensors[out].kind == TensorKind::Output {
+                        break;
+                    }
+                    let cons = &consumers[out];
+                    if cons.len() != 1 {
+                        break;
+                    }
+                    let next = cons[0];
+                    if taken[next] {
+                        break;
+                    }
+                    // The consumer must directly follow in topo order *as a
+                    // chain*: all its other inputs must come from outside
+                    // the not-yet-executed region (they do, since the graph
+                    // is topologically ordered and produced tensors are
+                    // either in-group or earlier).
+                    if policy.elementwise_only && !graph.nodes[next].op.is_elementwise() {
+                        break;
+                    }
+                    group.nodes.push(next);
+                    taken[next] = true;
+                    tail = next;
+                }
+                groups.push(group);
+            }
+            groups
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::{deep_mlp, vit_mlp, vit_mlp_block};
+    use crate::ir::DType;
+
+    #[test]
+    fn layer_per_layer_is_solo() {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let groups = fuse_groups(&g, Strategy::LayerPerLayer, FusionPolicy::default());
+        assert_eq!(groups.len(), 3);
+        assert!(groups.iter().all(|gr| gr.len() == 1));
+    }
+
+    #[test]
+    fn ftl_fuses_gemm_gelu() {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy::default());
+        // {fc1, gelu}, {fc2}
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0].nodes, vec![0, 1]);
+        assert_eq!(groups[1].nodes, vec![2]);
+    }
+
+    #[test]
+    fn aggressive_policy_chains_gemms() {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy { max_len: 8, elementwise_only: false });
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].nodes, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn max_len_respected() {
+        let g = deep_mlp(32, 64, 4, DType::Int8); // 8 nodes: fc,act ×4
+        let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy { max_len: 2, elementwise_only: true });
+        assert_eq!(groups.len(), 4);
+        assert!(groups.iter().all(|gr| gr.len() == 2));
+    }
+
+    #[test]
+    fn multi_consumer_breaks_chain() {
+        // In vit_mlp_block, x feeds both LN and the residual Add → the LN
+        // group can't swallow x's consumers; Add has two inputs and fuses
+        // onto fc2 only if fc2's output has a single consumer (it does).
+        let g = vit_mlp_block(16, 32, 64, DType::Int8);
+        let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy::default());
+        // ln solo (fc1 is not elementwise), {fc1, gelu}, {fc2, add}
+        assert_eq!(groups.len(), 3);
+        let names: Vec<Vec<&str>> = groups
+            .iter()
+            .map(|gr| gr.nodes.iter().map(|&n| g.nodes[n].name.as_str()).collect())
+            .collect();
+        assert_eq!(names[0], vec!["ln"]);
+        assert_eq!(names[1], vec!["fc1", "gelu"]);
+        assert_eq!(names[2], vec!["fc2", "residual"]);
+    }
+
+    #[test]
+    fn groups_cover_all_nodes_once() {
+        let g = deep_mlp(16, 32, 5, DType::Int8);
+        for strat in [Strategy::LayerPerLayer, Strategy::Ftl] {
+            let groups = fuse_groups(&g, strat, FusionPolicy::default());
+            let mut seen = vec![false; g.nodes.len()];
+            for gr in &groups {
+                for &n in &gr.nodes {
+                    assert!(!seen[n], "node {n} appears twice");
+                    seen[n] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+}

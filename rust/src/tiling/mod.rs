@@ -1,0 +1,40 @@
+//! The FTL tiling engine — the paper's core contribution.
+//!
+//! FTL formulates tiling as a constraint-optimisation problem (paper
+//! Fig. 1, steps ①–④):
+//!
+//! 1. **Variable attribution** ([`vars`]): every dimension of every tensor
+//!    touched by an operator gets a tile-size variable.
+//! 2. **Constraint formulation** ([`constraints`]): three constraint
+//!    classes per operator —
+//!    *geometric* (output dims linked to input dims via linear
+//!    transformations, `in = a·out + b`), *kernel policy* (dataflow
+//!    requirements, e.g. the int8 GEMM reduction dimension is never tiled
+//!    because requantisation needs the full accumulation), and
+//!    *performance* (SIMD-width multiples, minimum tile sizes, to keep
+//!    hardware utilisation up).
+//! 3. **Fusion** ([`fusion`]): consecutive layers are selected and the
+//!    variables of their *shared* tensor's dimensions are **bound**
+//!    (equality-linked), merging the per-layer problems into one.
+//! 4. **Solve** ([`solver`]): a branch-and-bound search over candidate
+//!    tile sizes, pruned by the L1-capacity constraint, minimising an
+//!    analytic runtime estimate (DMA + kernel cost over the tile loop
+//!    nest, with loop-invariant operand hoisting).
+//!
+//! The output is a [`TilingSolution`]: per fused group, a loop nest with
+//! concrete tile sizes, per-operand L1 buffers and fetch depths — from
+//! which [`crate::schedule`] emits the executable tiled schedule.
+
+mod constraints;
+mod fusion;
+mod problem;
+mod solution;
+mod solver;
+mod vars;
+
+pub use constraints::{emit_node, Constraint};
+pub use fusion::{fuse_groups, FusionGroup, FusionPolicy};
+pub use problem::{GroupProblem, OperandRef, Strategy};
+pub use solution::{FreeVarChoice, GroupBuffer, GroupSolution, NodeTile, TilingSolution};
+pub use solver::{assign_homes, assign_homes_with, dma_legs as solver_dma_legs, estimate_cycles, solve_graph, solve_graph_with, solve_group, HomesPolicy, SolverOptions};
+pub use vars::{DimVar, VarId, VarTable};

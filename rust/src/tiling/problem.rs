@@ -1,0 +1,361 @@
+//! The merged constraint-optimisation problem for one fusion group, and
+//! the affine variable resolution that turns the constraint set into a
+//! small number of *free* tile variables.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::ir::{Graph, NodeId, TensorId};
+use crate::soc::SocConfig;
+
+use super::constraints::{emit_node, Constraint};
+use super::fusion::FusionGroup;
+use super::vars::{VarId, VarTable};
+
+/// Tiling strategy: the baseline vs the paper's contribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Layer-per-layer tiling — each node is its own group (baseline).
+    LayerPerLayer,
+    /// Fused-Tiled Layers — consecutive layers merged per the fusion
+    /// policy, shared-tensor variables bound.
+    Ftl,
+}
+
+impl Strategy {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "baseline" | "layer-per-layer" | "lpl" => Strategy::LayerPerLayer,
+            "ftl" | "fused" | "fused-tiled" => Strategy::Ftl,
+            _ => return None,
+        })
+    }
+
+    /// Display name used in reports.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Strategy::LayerPerLayer => "layer-per-layer",
+            Strategy::Ftl => "ftl",
+        }
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One operand (input or output) of a node, with its tile-dim variables.
+#[derive(Debug, Clone)]
+pub struct OperandRef {
+    /// The tensor this operand reads/writes.
+    pub tensor: TensorId,
+    /// Tile-size variable per dimension.
+    pub dims: Vec<VarId>,
+    /// True if this operand is the node's output.
+    pub is_output: bool,
+}
+
+/// Tiling view of one node.
+#[derive(Debug, Clone)]
+pub struct NodeTiling {
+    /// Node id in the graph.
+    pub node: NodeId,
+    /// Variables of the output dims.
+    pub out_vars: Vec<VarId>,
+    /// All operands (inputs in op order, then the output).
+    pub operands: Vec<OperandRef>,
+}
+
+/// The merged problem for a fusion group (paper steps ①–③ materialised).
+#[derive(Debug, Clone)]
+pub struct GroupProblem {
+    /// Per-node tiling descriptors, in group order.
+    pub nodes: Vec<NodeTiling>,
+    /// All variables.
+    pub vars: VarTable,
+    /// All constraints (geometric + kernel policy + performance + fusion
+    /// bindings).
+    pub constraints: Vec<Constraint>,
+}
+
+impl GroupProblem {
+    /// Build the problem: emit per-node variables/constraints (steps ①–②)
+    /// and bind shared-tensor variables across the group (step ③).
+    pub fn build(graph: &Graph, soc: &SocConfig, group: &FusionGroup) -> Result<Self> {
+        let mut vars = VarTable::new();
+        let mut constraints = Vec::new();
+        let mut nodes = Vec::with_capacity(group.nodes.len());
+
+        // producer-output vars per tensor, for binding.
+        let mut produced: HashMap<TensorId, Vec<VarId>> = HashMap::new();
+
+        for &nid in &group.nodes {
+            let (nt, cons) = emit_node(graph, soc, nid, &mut vars)?;
+            constraints.extend(cons);
+            // Step ③: bind this node's input vars to the in-group
+            // producer's output vars, dimension by dimension.
+            for op_ref in nt.operands.iter().filter(|o| !o.is_output) {
+                if let Some(src_vars) = produced.get(&op_ref.tensor) {
+                    if src_vars.len() != op_ref.dims.len() {
+                        bail!("fusion binding rank mismatch on tensor {}", graph.tensors[op_ref.tensor].name);
+                    }
+                    for (&dst, &src) in op_ref.dims.iter().zip(src_vars) {
+                        constraints.push(Constraint::eq(dst, src));
+                    }
+                }
+            }
+            produced.insert(graph.nodes[nid].output, nt.out_vars.clone());
+            nodes.push(nt);
+        }
+        Ok(Self { nodes, vars, constraints })
+    }
+
+    /// Resolve the affine link structure: every variable becomes
+    /// `a · root + b` for some root variable; `Full` roots get fixed
+    /// values. Returns the reduced problem the solver enumerates over.
+    ///
+    /// `use_perf` — include performance constraints (the paper's third
+    /// class); disabled by the `--no-perf-constraints` ablation.
+    pub fn resolve(&self, use_perf: bool) -> Result<ResolvedVars> {
+        let n = self.vars.len();
+        // link[dst] = (src, a, b)
+        let mut link: Vec<Option<(usize, usize, usize)>> = vec![None; n];
+        for c in &self.constraints {
+            if let Constraint::Link { dst, src, a, b } = *c {
+                if dst == src {
+                    if a == 1 && b == 0 {
+                        continue;
+                    }
+                    bail!("inconsistent self-link on {}", self.vars.get(dst).name);
+                }
+                match link[dst.0] {
+                    None => link[dst.0] = Some((src.0, a, b)),
+                    Some(existing) if existing == (src.0, a, b) => {}
+                    Some(_) => {
+                        // Two different links into the same var: keep the
+                        // first as the definition and record the second as
+                        // an equality on roots later. For this IR the only
+                        // multi-link case is a diamond (Add of two fused
+                        // branches), which shares vars by construction.
+                        bail!("conflicting links into {}", self.vars.get(dst).name)
+                    }
+                }
+            }
+        }
+
+        // Resolve each var to (root, a, b) with cycle detection.
+        let mut expr: Vec<Option<(usize, usize, usize)>> = vec![None; n];
+        fn resolve_one(
+            i: usize,
+            link: &[Option<(usize, usize, usize)>],
+            expr: &mut Vec<Option<(usize, usize, usize)>>,
+            depth: usize,
+        ) -> Result<(usize, usize, usize)> {
+            if depth > link.len() {
+                bail!("cycle in link constraints");
+            }
+            if let Some(e) = expr[i] {
+                return Ok(e);
+            }
+            let e = match link[i] {
+                None => (i, 1, 0),
+                Some((src, a, b)) => {
+                    let (root, a2, b2) = resolve_one(src, link, expr, depth + 1)?;
+                    (root, a * a2, a * b2 + b)
+                }
+            };
+            expr[i] = Some(e);
+            Ok(e)
+        }
+        for i in 0..n {
+            resolve_one(i, &link, &mut expr, 0)?;
+        }
+        let expr: Vec<(usize, usize, usize)> = expr.into_iter().map(Option::unwrap).collect();
+
+        // Roots and their effective full extents (tightest bound over all
+        // vars mapping to the root: a·root + b ≤ full ⇒ root ≤ (full−b)/a).
+        let mut root_full: HashMap<usize, usize> = HashMap::new();
+        for (i, &(root, a, b)) in expr.iter().enumerate() {
+            let full = self.vars.get(VarId(i)).full;
+            if full < b + a {
+                bail!("dimension {} too small for link offsets", self.vars.get(VarId(i)).name);
+            }
+            let bound = (full - b) / a;
+            let e = root_full.entry(root).or_insert(bound);
+            *e = (*e).min(bound);
+        }
+
+        // Fixed roots from Full constraints.
+        let mut fixed: HashMap<usize, usize> = HashMap::new();
+        for c in &self.constraints {
+            if let Constraint::Full(v) = *c {
+                let (root, a, b) = expr[v.0];
+                let full = self.vars.get(v).full;
+                if (full - b) % a != 0 {
+                    bail!("Full constraint on {} not satisfiable via link", self.vars.get(v).name);
+                }
+                let val = (full - b) / a;
+                if let Some(prev) = fixed.insert(root, val) {
+                    if prev != val {
+                        bail!("conflicting Full constraints on root of {}", self.vars.get(v).name);
+                    }
+                }
+            }
+        }
+
+        // Performance constraints, projected onto roots (identity exprs only —
+        // halo'd dims get their preference via the objective instead).
+        let mut multiple: HashMap<usize, usize> = HashMap::new();
+        let mut min: HashMap<usize, usize> = HashMap::new();
+        if use_perf {
+            for c in &self.constraints {
+                match *c {
+                    Constraint::Multiple(v, m) if expr[v.0].1 == 1 && expr[v.0].2 == 0 => {
+                        let r = expr[v.0].0;
+                        let e = multiple.entry(r).or_insert(1);
+                        *e = lcm(*e, m);
+                    }
+                    Constraint::Min(v, lo) if expr[v.0].1 == 1 && expr[v.0].2 == 0 => {
+                        let r = expr[v.0].0;
+                        let e = min.entry(r).or_insert(1);
+                        *e = (*e).max(lo);
+                    }
+                    _ => {}
+                }
+            }
+        }
+
+        let mut free: Vec<usize> = root_full.keys().copied().filter(|r| !fixed.contains_key(r)).collect();
+        free.sort_unstable();
+        Ok(ResolvedVars { expr, root_full, fixed, multiple, min, free })
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: usize, b: usize) -> usize {
+    a / gcd(a, b) * b
+}
+
+/// The reduced (affine-resolved) problem.
+#[derive(Debug, Clone)]
+pub struct ResolvedVars {
+    /// Per var: `(root_index, a, b)` meaning `tile(var) = a·tile(root)+b`.
+    pub expr: Vec<(usize, usize, usize)>,
+    /// Effective domain upper bound of each root.
+    pub root_full: HashMap<usize, usize>,
+    /// Roots with policy-fixed values (`Full` dims).
+    pub fixed: HashMap<usize, usize>,
+    /// Multiplicity preferences per root.
+    pub multiple: HashMap<usize, usize>,
+    /// Minimum tile per root.
+    pub min: HashMap<usize, usize>,
+    /// Free roots, sorted — the solver's search dimensions.
+    pub free: Vec<usize>,
+}
+
+impl ResolvedVars {
+    /// Tile size of `var` under an assignment of the free roots
+    /// (`assign[i]` is the value of `free[i]`), clamped to the var's full
+    /// extent.
+    pub fn tile_of(&self, var: VarId, full: usize, assign: &[usize]) -> usize {
+        let (root, a, b) = self.expr[var.0];
+        let rv = self.root_value(root, assign);
+        (a * rv + b).min(full)
+    }
+
+    /// Value of a root under an assignment.
+    pub fn root_value(&self, root: usize, assign: &[usize]) -> usize {
+        if let Some(&v) = self.fixed.get(&root) {
+            v
+        } else {
+            let idx = self.free.binary_search(&root).expect("root must be free or fixed");
+            assign[idx]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::vit_mlp;
+    use crate::ir::DType;
+    use crate::soc::siracusa_reduced_cluster_only;
+    use crate::tiling::fusion::FusionGroup;
+
+    fn problem(nodes: Vec<usize>) -> GroupProblem {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let soc = siracusa_reduced_cluster_only();
+        GroupProblem::build(&g, &soc, &FusionGroup { nodes }).unwrap()
+    }
+
+    #[test]
+    fn single_gemm_two_free_vars() {
+        let p = problem(vec![0]);
+        let r = p.resolve(true).unwrap();
+        // GEMM: M and N free, K fixed by policy.
+        assert_eq!(r.free.len(), 2);
+        assert_eq!(r.fixed.len(), 1);
+        assert!(r.fixed.values().any(|&v| v == 768));
+    }
+
+    #[test]
+    fn fused_gemm_gelu_binds_vars() {
+        let p = problem(vec![0, 1]);
+        let r = p.resolve(true).unwrap();
+        // Fusion must NOT add free vars: gelu's dims are bound to gemm's
+        // output dims.
+        assert_eq!(r.free.len(), 2, "fused group still has exactly M and N free");
+        // Binding: gelu operand vars resolve to the same roots as gemm out vars.
+        let gemm_out = &p.nodes[0].out_vars;
+        let gelu_in = &p.nodes[1].operands[0].dims;
+        for (a, b) in gemm_out.iter().zip(gelu_in) {
+            assert_eq!(r.expr[a.0].0, r.expr[b.0].0, "bound vars share a root");
+        }
+    }
+
+    #[test]
+    fn perf_constraints_projected() {
+        let p = problem(vec![0]);
+        let with = p.resolve(true).unwrap();
+        let without = p.resolve(false).unwrap();
+        assert!(!with.multiple.is_empty());
+        assert!(without.multiple.is_empty());
+    }
+
+    #[test]
+    fn tile_of_clamps() {
+        let p = problem(vec![0]);
+        let r = p.resolve(true).unwrap();
+        // Assign huge values; tiles must clamp to fulls.
+        let assign: Vec<usize> = r.free.iter().map(|_| 100_000).collect();
+        for (vid, v) in p.vars.iter() {
+            assert!(r.tile_of(vid, v.full, &assign) <= v.full);
+        }
+    }
+
+    #[test]
+    fn full_mlp_group_fused_chain() {
+        // fc1 → gelu → fc2: fc2's input K is Full → binds gelu's N (and
+        // thus gemm1's N) to full 3072.
+        let p = problem(vec![0, 1, 2]);
+        let r = p.resolve(true).unwrap();
+        // free vars: M (shared), fc2.N — gemm1.N is forced to 3072 by the
+        // chain through fc2's Full(K).
+        assert_eq!(r.free.len(), 2);
+        let gemm1_n = p.nodes[0].out_vars[1];
+        let (root, a, b) = r.expr[gemm1_n.0];
+        assert_eq!((a, b), (1, 0));
+        assert_eq!(r.fixed.get(&root), Some(&3072));
+    }
+}

@@ -1,0 +1,323 @@
+//! Step ④ output — the solved tiling of each fusion group.
+//!
+//! A [`GroupSolution`] is self-contained: the loop nest (free variables in
+//! loop order with chosen steady-state tile sizes), every L1 buffer with
+//! its per-dimension affine tile expressions, and the node list. The
+//! schedule generator and the PJRT tile executor both walk
+//! [`GroupSolution::iterations`] to enumerate concrete (remainder-exact)
+//! tiles.
+
+
+use crate::ir::{NodeId, Op, TensorId};
+use crate::memory::{BufferRole, Level};
+use crate::soc::ComputeUnit;
+
+/// One free tile variable, placed at a loop level.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FreeVarChoice {
+    /// Debug name (from the representative dimension variable).
+    pub name: String,
+    /// Full extent to cover.
+    pub full: usize,
+    /// Chosen steady-state tile size.
+    pub tile: usize,
+}
+
+impl FreeVarChoice {
+    /// Number of iterations of this loop.
+    pub fn trips(&self) -> usize {
+        self.full.div_ceil(self.tile)
+    }
+}
+
+/// Affine tile expression of one buffer dimension:
+/// `tile = min(full − offset, a·t + b)` where `t` is the current extent of
+/// loop `loop_idx` (`None` ⇒ fixed dim, `tile = b`), and the offset along
+/// the dim is `a · loop_offset`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DimSpec {
+    /// Full extent of the underlying tensor dimension.
+    pub full: usize,
+    /// Loop this dim follows, if any (index into the loop order).
+    pub loop_idx: Option<usize>,
+    /// Multiplier on the loop variable.
+    pub a: usize,
+    /// Offset (halo) term; for fixed dims this *is* the tile size.
+    pub b: usize,
+}
+
+impl DimSpec {
+    /// Concrete (offset, extent) of this dim at the given loop state.
+    /// `state[l] = (offset, cur_tile)` for loop `l`.
+    pub fn at(&self, state: &[(usize, usize)]) -> (usize, usize) {
+        match self.loop_idx {
+            None => (0, self.b.min(self.full)),
+            Some(l) => {
+                let (off, cur) = state[l];
+                let o = (self.a * off).min(self.full.saturating_sub(1));
+                let t = (self.a * cur + self.b).min(self.full - o);
+                (o, t)
+            }
+        }
+    }
+
+    /// Steady-state tile extent (no remainder clamping).
+    pub fn steady(&self, loops: &[FreeVarChoice]) -> usize {
+        match self.loop_idx {
+            None => self.b.min(self.full),
+            Some(l) => (self.a * loops[l].tile + self.b).min(self.full),
+        }
+    }
+}
+
+/// One L1 tile buffer of a group.
+#[derive(Debug, Clone)]
+pub struct GroupBuffer {
+    /// Backing tensor.
+    pub tensor: TensorId,
+    /// Tensor name (for reports).
+    pub name: String,
+    /// Role in L1 (decides streaming/double-buffering).
+    pub role: BufferRole,
+    /// Element size in bytes.
+    pub elem_bytes: usize,
+    /// Per-dimension tile expressions.
+    pub dims: Vec<DimSpec>,
+    /// Home memory level of the tensor (`None` for fused intermediates
+    /// that exist only in L1).
+    pub home: Option<Level>,
+    /// Re-fetched every iteration of loops `0..fetch_depth`
+    /// (`0` ⇒ fetched once before the nest).
+    pub fetch_depth: usize,
+}
+
+impl GroupBuffer {
+    /// Steady-state tile bytes.
+    pub fn steady_bytes(&self, loops: &[FreeVarChoice]) -> usize {
+        self.dims.iter().map(|d| d.steady(loops)).product::<usize>() * self.elem_bytes
+    }
+
+    /// Concrete tile shape at a loop state.
+    pub fn shape_at(&self, state: &[(usize, usize)]) -> Vec<usize> {
+        self.dims.iter().map(|d| d.at(state).1).collect()
+    }
+
+    /// Concrete element offsets at a loop state.
+    pub fn offsets_at(&self, state: &[(usize, usize)]) -> Vec<usize> {
+        self.dims.iter().map(|d| d.at(state).0).collect()
+    }
+
+    /// Number of times this buffer is (re-)fetched over the whole nest.
+    pub fn trips(&self, loops: &[FreeVarChoice]) -> usize {
+        loops[..self.fetch_depth].iter().map(FreeVarChoice::trips).product()
+    }
+
+    /// True if this buffer is moved by DMA at all.
+    pub fn is_streamed(&self) -> bool {
+        self.home.is_some()
+    }
+}
+
+/// One node of the group with its kernel placement.
+#[derive(Debug, Clone)]
+pub struct NodeTile {
+    /// Graph node id.
+    pub node: NodeId,
+    /// Node name.
+    pub name: String,
+    /// Operator (copied out of the graph for self-containedness).
+    pub op: Op,
+    /// Compute unit the kernel runs on.
+    pub unit: ComputeUnit,
+    /// Indices into [`GroupSolution::buffers`] for the inputs, in op order.
+    pub input_bufs: Vec<usize>,
+    /// Index of the output buffer.
+    pub output_buf: usize,
+}
+
+/// Solved tiling for one fusion group.
+#[derive(Debug, Clone)]
+pub struct GroupSolution {
+    /// Nodes in execution order.
+    pub nodes: Vec<NodeTile>,
+    /// Loop nest, outermost first.
+    pub loops: Vec<FreeVarChoice>,
+    /// All L1 buffers (deduplicated per tensor).
+    pub buffers: Vec<GroupBuffer>,
+    /// Steady-state L1 footprint in bytes (with double-buffer copies as
+    /// solved).
+    pub footprint: usize,
+    /// Whether streamed buffers are double-buffered.
+    pub double_buffered: bool,
+    /// Analytic runtime estimate used as the solver objective.
+    pub estimated_cycles: u64,
+}
+
+impl GroupSolution {
+    /// Total tile iterations of the nest.
+    pub fn total_iterations(&self) -> usize {
+        self.loops.iter().map(FreeVarChoice::trips).product()
+    }
+
+    /// Enumerate the loop nest: yields, for every iteration, the loop
+    /// state `[(offset, cur_tile); n_loops]` in row-major (outer-first)
+    /// order, plus the multi-index.
+    pub fn iterations(&self) -> Vec<Vec<(usize, usize)>> {
+        let mut states = vec![Vec::new()];
+        for l in &self.loops {
+            let mut next = Vec::with_capacity(states.len() * l.trips());
+            for s in &states {
+                let mut off = 0;
+                while off < l.full {
+                    let cur = l.tile.min(l.full - off);
+                    let mut s2 = s.clone();
+                    s2.push((off, cur));
+                    next.push(s2);
+                    off += l.tile;
+                }
+            }
+            states = next;
+        }
+        states
+    }
+
+    /// Which loops advanced between consecutive iterations `i-1` and `i`
+    /// (outermost changed level); iteration 0 returns 0 (everything fresh).
+    pub fn changed_depth(&self, prev: Option<&[(usize, usize)]>, cur: &[(usize, usize)]) -> usize {
+        match prev {
+            None => 0,
+            Some(p) => {
+                for (l, (a, b)) in p.iter().zip(cur).enumerate() {
+                    if a != b {
+                        return l;
+                    }
+                }
+                cur.len()
+            }
+        }
+    }
+}
+
+/// The full-graph solution.
+#[derive(Debug, Clone)]
+pub struct TilingSolution {
+    /// Per-group solutions, in execution order.
+    pub groups: Vec<GroupSolution>,
+}
+
+impl TilingSolution {
+    /// Sum of analytic estimates (used for solver regression tests; the
+    /// simulator provides the real number).
+    pub fn estimated_cycles(&self) -> u64 {
+        self.groups.iter().map(|g| g.estimated_cycles).sum()
+    }
+
+    /// Max L1 footprint over groups.
+    pub fn peak_l1(&self) -> usize {
+        self.groups.iter().map(|g| g.footprint).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loops() -> Vec<FreeVarChoice> {
+        vec![
+            FreeVarChoice { name: "M".into(), full: 10, tile: 4 },
+            FreeVarChoice { name: "N".into(), full: 6, tile: 3 },
+        ]
+    }
+
+    fn sol(loops: Vec<FreeVarChoice>) -> GroupSolution {
+        GroupSolution {
+            nodes: vec![],
+            loops,
+            buffers: vec![],
+            footprint: 0,
+            double_buffered: false,
+            estimated_cycles: 0,
+        }
+    }
+
+    #[test]
+    fn trips_and_iterations() {
+        let s = sol(loops());
+        assert_eq!(s.total_iterations(), 3 * 2);
+        let iters = s.iterations();
+        assert_eq!(iters.len(), 6);
+        // first iteration full tiles
+        assert_eq!(iters[0], vec![(0, 4), (0, 3)]);
+        // last iteration: M remainder 2, N offset 3
+        assert_eq!(iters[5], vec![(8, 2), (3, 3)]);
+    }
+
+    #[test]
+    fn remainder_tiles_cover_exactly() {
+        let s = sol(vec![FreeVarChoice { name: "X".into(), full: 197, tile: 32 }]);
+        let iters = s.iterations();
+        let covered: usize = iters.iter().map(|st| st[0].1).sum();
+        assert_eq!(covered, 197);
+        assert_eq!(iters.len(), 7);
+        assert_eq!(iters.last().unwrap()[0], (192, 5));
+    }
+
+    #[test]
+    fn dimspec_fixed_and_looped() {
+        let st = vec![(8, 2), (3, 3)];
+        let fixed = DimSpec { full: 768, loop_idx: None, a: 0, b: 768 };
+        assert_eq!(fixed.at(&st), (0, 768));
+        let m = DimSpec { full: 10, loop_idx: Some(0), a: 1, b: 0 };
+        assert_eq!(m.at(&st), (8, 2));
+        // halo'd (conv-like): in = 2*out + 2
+        let halo = DimSpec { full: 23, loop_idx: Some(1), a: 2, b: 2 };
+        assert_eq!(halo.at(&st), (6, 8));
+    }
+
+    #[test]
+    fn buffer_trips_hoisting() {
+        let ls = loops(); // trips: 3 (M), 2 (N)
+        let mk = |depth| GroupBuffer {
+            tensor: 0,
+            name: "b".into(),
+            role: BufferRole::Input,
+            elem_bytes: 1,
+            dims: vec![],
+            home: Some(Level::L2),
+            fetch_depth: depth,
+        };
+        assert_eq!(mk(0).trips(&ls), 1); // loop-invariant: fetched once
+        assert_eq!(mk(1).trips(&ls), 3); // per M tile
+        assert_eq!(mk(2).trips(&ls), 6); // per (M,N) tile
+    }
+
+    #[test]
+    fn changed_depth_detection() {
+        let s = sol(loops());
+        let iters = s.iterations();
+        assert_eq!(s.changed_depth(None, &iters[0]), 0);
+        // iter 0→1: N advanced (depth 1)
+        assert_eq!(s.changed_depth(Some(&iters[0]), &iters[1]), 1);
+        // iter 1→2: M advanced (depth 0)
+        assert_eq!(s.changed_depth(Some(&iters[1]), &iters[2]), 0);
+    }
+
+    #[test]
+    fn steady_bytes() {
+        let ls = loops();
+        let b = GroupBuffer {
+            tensor: 0,
+            name: "a".into(),
+            role: BufferRole::Input,
+            elem_bytes: 2,
+            dims: vec![
+                DimSpec { full: 10, loop_idx: Some(0), a: 1, b: 0 },
+                DimSpec { full: 768, loop_idx: None, a: 0, b: 768 },
+            ],
+            home: Some(Level::L2),
+            fetch_depth: 1,
+        };
+        assert_eq!(b.steady_bytes(&ls), 4 * 768 * 2);
+        assert_eq!(b.shape_at(&[(8, 2), (0, 3)]), vec![2, 768]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Step ① — variable attribution.
+//!
+//! Every tensor dimension of every operator in a (possibly fused) group is
+//! given a *tile-size variable*. A variable's domain is `1..=full` where
+//! `full` is the dimension's extent; the solver assigns each variable the
+//! tile size used in L1.
+
+
+/// Handle to a [`DimVar`] inside a [`VarTable`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VarId(pub usize);
+
+/// One tile-size variable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DimVar {
+    /// Debug name, e.g. `"fc1.M"`.
+    pub name: String,
+    /// Full extent of the dimension.
+    pub full: usize,
+}
+
+/// Arena of variables for one tiling problem.
+#[derive(Debug, Clone, Default)]
+pub struct VarTable {
+    vars: Vec<DimVar>,
+}
+
+impl VarTable {
+    /// Empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create a fresh variable.
+    pub fn fresh(&mut self, name: impl Into<String>, full: usize) -> VarId {
+        assert!(full > 0, "dimension extent must be positive");
+        self.vars.push(DimVar { name: name.into(), full });
+        VarId(self.vars.len() - 1)
+    }
+
+    /// Look up a variable.
+    pub fn get(&self, id: VarId) -> &DimVar {
+        &self.vars[id.0]
+    }
+
+    /// Number of variables.
+    pub fn len(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// True if no variables were attributed yet.
+    pub fn is_empty(&self) -> bool {
+        self.vars.is_empty()
+    }
+
+    /// Iterate over `(id, var)`.
+    pub fn iter(&self) -> impl Iterator<Item = (VarId, &DimVar)> {
+        self.vars.iter().enumerate().map(|(i, v)| (VarId(i), v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_and_get() {
+        let mut t = VarTable::new();
+        let m = t.fresh("fc1.M", 197);
+        let n = t.fresh("fc1.N", 3072);
+        assert_eq!(t.get(m).full, 197);
+        assert_eq!(t.get(n).name, "fc1.N");
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_extent_panics() {
+        VarTable::new().fresh("bad", 0);
+    }
+
+    #[test]
+    fn iter_order() {
+        let mut t = VarTable::new();
+        let ids: Vec<VarId> = (0..5).map(|i| t.fresh(format!("v{i}"), i + 1)).collect();
+        let seen: Vec<VarId> = t.iter().map(|(id, _)| id).collect();
+        assert_eq!(ids, seen);
+    }
+}

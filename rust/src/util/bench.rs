@@ -1,0 +1,109 @@
+//! Micro-benchmark harness (in place of `criterion`, offline).
+//!
+//! Plain wall-clock timing with warmup, N samples, and a criterion-style
+//! one-line summary (median ± IQR). Bench binaries are `harness = false`
+//! and call [`bench`] directly; `cargo bench` runs them all.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Median sample time.
+    pub median: Duration,
+    /// 25th percentile.
+    pub p25: Duration,
+    /// 75th percentile.
+    pub p75: Duration,
+    /// Samples taken.
+    pub samples: usize,
+}
+
+impl BenchResult {
+    /// Criterion-style one-liner.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  ({} samples)",
+            self.name,
+            fmt_dur(self.p25),
+            fmt_dur(self.median),
+            fmt_dur(self.p75),
+            self.samples
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2} s", ns as f64 / 1e9)
+    }
+}
+
+/// Run `f` with warmup and sampling; prints and returns the result.
+///
+/// `target_time` bounds total sampling wall-clock (like criterion's
+/// measurement_time); at least 10 samples are always taken.
+pub fn bench(name: &str, target_time: Duration, mut f: impl FnMut()) -> BenchResult {
+    // Warmup: run until 10% of target or 3 iterations.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u32;
+    while warm_iters < 3 || warm_start.elapsed() < target_time / 10 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1000 {
+            break;
+        }
+    }
+
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 10 || (start.elapsed() < target_time && samples.len() < 200) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let result = BenchResult {
+        name: name.to_string(),
+        median: samples[samples.len() / 2],
+        p25: samples[samples.len() / 4],
+        p75: samples[samples.len() * 3 / 4],
+        samples: samples.len(),
+    };
+    println!("{}", result.line());
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0u64;
+        let r = bench("noop", Duration::from_millis(20), || {
+            count += 1;
+        });
+        assert!(r.samples >= 10);
+        assert!(count as usize >= r.samples);
+        assert!(r.p25 <= r.median && r.median <= r.p75);
+        assert!(r.line().contains("noop"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains("s"));
+    }
+}

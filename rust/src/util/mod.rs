@@ -1,0 +1,12 @@
+//! Small in-crate utilities.
+//!
+//! This workspace builds fully offline; instead of pulling `serde_json`,
+//! [`json`] provides a compact JSON value model with a strict parser and a
+//! pretty printer — enough for the network interchange format, deploy
+//! configs, and machine-readable reports. [`prop`] is a tiny
+//! property-testing harness (xorshift PRNG + shrink-free case generation)
+//! used by the test suite in place of `proptest`.
+
+pub mod bench;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,108 @@
+//! Tiny property-testing harness (in place of `proptest`, offline).
+//!
+//! Deterministic xorshift64* PRNG + a `cases` driver: run a closure over N
+//! seeded cases and report the failing seed so a failure reproduces with
+//! `Rng::new(seed)`.
+
+/// xorshift64* PRNG — deterministic, seedable, no dependencies.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Seeded generator (seed 0 is remapped — xorshift state must be ≠ 0).
+    pub fn new(seed: u64) -> Self {
+        Rng(if seed == 0 { 0x9E3779B97F4A7C15 } else { seed })
+    }
+
+    /// Next raw u64.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + (self.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Bernoulli.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len() - 1)]
+    }
+}
+
+/// Run `f` over `n` seeded cases; panics with the seed on failure.
+pub fn cases(n: u64, f: impl Fn(&mut Rng)) {
+    for seed in 1..=n {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at case {seed}/{n}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let v = r.range(5, 9);
+            assert!((5..=9).contains(&v));
+        }
+        assert_eq!(r.range(4, 4), 4);
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(11);
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn cases_runs_all() {
+        let mut count = 0u64;
+        // `cases` takes Fn, so count via a Cell.
+        let cell = std::cell::Cell::new(0u64);
+        cases(25, |_| cell.set(cell.get() + 1));
+        count += cell.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "always fails")]
+    fn cases_propagates_failure() {
+        cases(10, |_| panic!("always fails"));
+    }
+}

@@ -1,0 +1,294 @@
+//! Edge cases and failure injection across the deployment pipeline.
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::{experiments, Deployer};
+use ftl::dma::DmaCostModel;
+use ftl::ir::{ActKind, DType, Graph, GraphBuilder, Op, Tensor, TensorKind};
+use ftl::memory::{Level, LevelSpec};
+use ftl::runtime::{reference, NativeBackend, TileExecutor};
+use ftl::soc::siracusa_reduced;
+use ftl::tiling::{fuse_groups, solve_graph, FusionPolicy, SolverOptions, Strategy};
+
+fn conv_graph(h: usize, w: usize, c: usize, f: usize, pad: usize) -> Graph {
+    let mut g = Graph::new();
+    let x = g.add_tensor(Tensor::new("x", vec![1, h, w, c], DType::F32, TensorKind::Input)).unwrap();
+    let wt = g.add_tensor(Tensor::new("w", vec![3, 3, c, f], DType::F32, TensorKind::Weight)).unwrap();
+    g.add_node("conv", Op::Conv2d { kh: 3, kw: 3, stride: 1, pad }, vec![x, wt], "y", TensorKind::Output)
+        .unwrap();
+    g.validate().unwrap();
+    g
+}
+
+#[test]
+fn conv2d_unpadded_tiles_and_matches_oracle() {
+    // Conv with halo'd geometric links (in = out + kh−1): the executor's
+    // gather must fetch overlapping input tiles and still match the
+    // un-tiled reference.
+    let g = conv_graph(20, 22, 8, 16, 0);
+    let soc = siracusa_reduced();
+    let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy::default());
+    let (_, sol) = solve_graph(&g, &soc, groups, &SolverOptions::default(), false).unwrap();
+    let bindings = reference::random_bindings(&g, 5);
+    let oracle = reference::run_graph(&g, &bindings).unwrap();
+    let mut exec = TileExecutor::new(NativeBackend);
+    let env = exec.run(&g, &sol, &bindings).unwrap();
+    let out = g.outputs()[0];
+    let diff = env[&out].max_abs_diff(&oracle[&out]);
+    assert!(diff < 1e-3, "tiled conv deviates by {diff}");
+}
+
+#[test]
+fn conv2d_padded_not_spatially_tiled_but_correct() {
+    // pad > 0 pins the spatial dims Full (kernel-policy guard); output
+    // channels still tile, and numerics must hold.
+    let g = conv_graph(12, 12, 4, 32, 1);
+    let soc = siracusa_reduced();
+    let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy::default());
+    let (_, sol) = solve_graph(&g, &soc, groups, &SolverOptions::default(), false).unwrap();
+    // spatial loops must not appear (ho, wo fixed) — free loops cover N, F only.
+    for gr in &sol.groups {
+        for l in &gr.loops {
+            assert!(l.full == 1 || l.full == 32, "unexpected free loop over extent {}", l.full);
+        }
+    }
+    let bindings = reference::random_bindings(&g, 6);
+    let oracle = reference::run_graph(&g, &bindings).unwrap();
+    let mut exec = TileExecutor::new(NativeBackend);
+    let env = exec.run(&g, &sol, &bindings).unwrap();
+    let out = g.outputs()[0];
+    assert!(env[&out].max_abs_diff(&oracle[&out]) < 1e-3);
+}
+
+#[test]
+fn conv_then_relu_fuses() {
+    let mut g = conv_graph(16, 16, 8, 16, 0);
+    // append relu consuming y
+    let (y, _) = g.tensor_by_name("y").unwrap();
+    g.tensors[y].kind = TensorKind::Intermediate;
+    let out = g.add_tensor(Tensor::new("z", vec![1, 14, 14, 16], DType::F32, TensorKind::Output)).unwrap();
+    g.nodes.push(ftl::ir::Node { name: "relu".into(), op: Op::Act(ActKind::Relu), inputs: vec![y], output: out });
+    g.validate().unwrap();
+    let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy::default());
+    assert_eq!(groups.len(), 1, "conv+relu should fuse");
+    let soc = siracusa_reduced();
+    let (_, sol) = solve_graph(&g, &soc, groups, &SolverOptions::default(), false).unwrap();
+    let bindings = reference::random_bindings(&g, 7);
+    let oracle = reference::run_graph(&g, &bindings).unwrap();
+    let mut exec = TileExecutor::new(NativeBackend);
+    let env = exec.run(&g, &sol, &bindings).unwrap();
+    assert!(env[&out].max_abs_diff(&oracle[&out]) < 1e-3);
+}
+
+#[test]
+fn tiny_l1_single_node_is_an_error() {
+    let g = experiments::vit_mlp_stage(197, 768, 3072);
+    let mut soc = siracusa_reduced();
+    // L1 too small for even one minimal GEMM tile (needs a full-K row).
+    soc.mem.l1 = LevelSpec::new(1024, 4);
+    let groups = fuse_groups(&g, Strategy::LayerPerLayer, FusionPolicy::default());
+    let err = solve_graph(&g, &soc, groups, &SolverOptions::default(), false);
+    assert!(err.is_err(), "1 KiB L1 must be infeasible for a K=768 GEMM");
+}
+
+#[test]
+fn small_l1_forces_fusion_fallback() {
+    // L1 big enough for single layers at small tiles but too small for
+    // the fused group -> FTL falls back to per-layer groups and still works.
+    let g = experiments::vit_mlp_stage(64, 128, 256);
+    let mut soc = siracusa_reduced();
+    soc.mem.l1 = LevelSpec::new(3 * 1024, 4);
+    let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy::default());
+    match solve_graph(&g, &soc, groups, &SolverOptions::default(), false) {
+        Ok((final_groups, sol)) => {
+            assert_eq!(final_groups.iter().map(|gr| gr.len()).sum::<usize>(), 2);
+            assert!(sol.peak_l1() <= 3 * 1024);
+        }
+        Err(_) => {
+            // Also acceptable: genuinely infeasible at this L1. But the
+            // per-layer baseline must then fail identically, not worse.
+            let base = fuse_groups(&g, Strategy::LayerPerLayer, FusionPolicy::default());
+            assert!(solve_graph(&g, &soc, base, &SolverOptions::default(), false).is_err());
+        }
+    }
+}
+
+#[test]
+fn seq_one_token_works() {
+    let g = experiments::vit_mlp_stage(1, 64, 256);
+    let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+    let dep = Deployer::new(g, cfg);
+    let (_, report) = dep.deploy().unwrap();
+    assert!(report.sim.total_cycles > 0);
+    assert!(dep.validate_numerics(NativeBackend, 1).unwrap() < 1e-3);
+}
+
+#[test]
+fn degenerate_1x1x1_graph() {
+    let mut b = GraphBuilder::new(DType::F32);
+    let x = b.input("x", &[1, 1]);
+    let fc = b.linear("fc", x, 1, true);
+    let act = b.act("a", ActKind::Gelu, fc);
+    let g = b.finish(act).unwrap();
+    let cfg = DeployConfig::preset("cluster-only", Strategy::Ftl).unwrap();
+    let dep = Deployer::new(g, cfg);
+    assert!(dep.validate_numerics(NativeBackend, 2).unwrap() < 1e-5);
+}
+
+#[test]
+fn zero_bandwidth_config_rejected() {
+    let mut cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+    cfg.soc.dma_io = DmaCostModel { setup_cycles: 1, per_row_cycles: 0, bytes_per_cycle: 0.0 };
+    assert!(cfg.validate().is_err());
+}
+
+#[test]
+fn requant_chain_fuses_and_is_identity_in_f32() {
+    // int8 deployments insert Requant after GEMM; in the f32 numerics
+    // path it is the identity, and it must fuse like any elementwise op.
+    let mut g = Graph::new();
+    let x = g.add_tensor(Tensor::new("x", vec![16, 32], DType::F32, TensorKind::Input)).unwrap();
+    let w = g.add_tensor(Tensor::new("w", vec![32, 24], DType::F32, TensorKind::Weight)).unwrap();
+    let (_, acc) = g
+        .add_node("mm", Op::Gemm { transpose_b: false, has_bias: false }, vec![x, w], "acc", TensorKind::Intermediate)
+        .unwrap();
+    let (_, rq) = g.add_node("rq", Op::Requant, vec![acc], "q", TensorKind::Intermediate).unwrap();
+    g.add_node("act", Op::Act(ActKind::Relu), vec![rq], "y", TensorKind::Output).unwrap();
+    g.validate().unwrap();
+    let groups = fuse_groups(&g, Strategy::Ftl, FusionPolicy::default());
+    assert_eq!(groups.len(), 1, "gemm+requant+relu should be one group");
+    let soc = siracusa_reduced();
+    let (_, sol) = solve_graph(&g, &soc, groups, &SolverOptions::default(), false).unwrap();
+    let bindings = reference::random_bindings(&g, 9);
+    let oracle = reference::run_graph(&g, &bindings).unwrap();
+    let mut exec = TileExecutor::new(NativeBackend);
+    let env = exec.run(&g, &sol, &bindings).unwrap();
+    let out = g.outputs()[0];
+    assert_eq!(env[&out].data, oracle[&out].data, "requant path must be exact in f32");
+}
+
+#[test]
+fn transpose_layer_deploys() {
+    let mut g = Graph::new();
+    let x = g.add_tensor(Tensor::new("x", vec![48, 64], DType::F32, TensorKind::Input)).unwrap();
+    g.add_node("t", Op::Transpose, vec![x], "y", TensorKind::Output).unwrap();
+    let soc = siracusa_reduced();
+    let groups = fuse_groups(&g, Strategy::LayerPerLayer, FusionPolicy::default());
+    let (_, sol) = solve_graph(&g, &soc, groups, &SolverOptions::default(), false).unwrap();
+    let bindings = reference::random_bindings(&g, 10);
+    let oracle = reference::run_graph(&g, &bindings).unwrap();
+    let mut exec = TileExecutor::new(NativeBackend);
+    let env = exec.run(&g, &sol, &bindings).unwrap();
+    let out = g.outputs()[0];
+    assert!(env[&out].max_abs_diff(&oracle[&out]) < 1e-6);
+}
+
+#[test]
+fn softmax_rows_not_tiled_along_last_dim() {
+    let mut g = Graph::new();
+    let x = g.add_tensor(Tensor::new("x", vec![197, 197], DType::F32, TensorKind::Input)).unwrap();
+    g.add_node("sm", Op::Softmax, vec![x], "y", TensorKind::Output).unwrap();
+    let soc = siracusa_reduced();
+    let groups = fuse_groups(&g, Strategy::LayerPerLayer, FusionPolicy::default());
+    let (_, sol) = solve_graph(&g, &soc, groups, &SolverOptions::default(), false).unwrap();
+    // The last dim is Full per kernel policy -> only the row loop is free.
+    assert_eq!(sol.groups[0].loops.len(), 1);
+    let bindings = reference::random_bindings(&g, 11);
+    let oracle = reference::run_graph(&g, &bindings).unwrap();
+    let mut exec = TileExecutor::new(NativeBackend);
+    let env = exec.run(&g, &sol, &bindings).unwrap();
+    let out = g.outputs()[0];
+    assert!(env[&out].max_abs_diff(&oracle[&out]) < 1e-5);
+}
+
+#[test]
+fn attention_head_deploys_and_matches_oracle() {
+    // transpose_b GEMM (Q·Kᵀ) + Softmax row policy inside one deployment;
+    // softmax fusing onto `scores` must not break numerics either way.
+    use ftl::ir::builder::attention_head;
+    for (strategy, npu) in
+        [(Strategy::Ftl, true), (Strategy::Ftl, false), (Strategy::LayerPerLayer, true)]
+    {
+        let g = attention_head(48, 64, 16, DType::F32);
+        let cfg = DeployConfig::preset(if npu { "siracusa" } else { "cluster-only" }, strategy).unwrap();
+        let dep = Deployer::new(g, cfg);
+        let (_, report) = dep.deploy().unwrap();
+        assert!(report.sim.total_cycles > 0);
+        let worst = dep.validate_numerics(NativeBackend, 21).unwrap();
+        assert!(worst < 1e-4, "attention numerics off by {worst} ({strategy:?}, npu={npu})");
+    }
+}
+
+#[test]
+fn attention_head_paper_scale_simulates() {
+    use ftl::ir::builder::attention_head;
+    let g = attention_head(197, 768, 64, DType::Int8);
+    let base = Deployer::new(g.clone(), DeployConfig::preset("siracusa", Strategy::LayerPerLayer).unwrap())
+        .deploy()
+        .unwrap()
+        .1;
+    let ftl_r =
+        Deployer::new(g, DeployConfig::preset("siracusa", Strategy::Ftl).unwrap()).deploy().unwrap().1;
+    assert!(ftl_r.sim.total_cycles <= base.sim.total_cycles);
+    assert!(ftl_r.sim.dma.total_bytes() <= base.sim.dma.total_bytes());
+}
+
+#[test]
+fn lifetime_policy_keeps_stage_mechanism() {
+    // The paper's overflow survives the smarter allocator on the stage:
+    // the intermediate's live range overlaps the resident weights.
+    use ftl::tiling::{assign_homes_with, HomesPolicy};
+    let g = experiments::vit_mlp_stage(197, 768, 3072);
+    let soc = siracusa_reduced();
+    let groups = fuse_groups(&g, Strategy::LayerPerLayer, FusionPolicy::default());
+    for policy in [HomesPolicy::Resident, HomesPolicy::Lifetime] {
+        let homes = assign_homes_with(&g, &groups, &soc, policy);
+        let (h, _) = g.tensor_by_name("fc1_1").unwrap();
+        assert_eq!(homes[h], Some(Level::L3), "{policy:?}: intermediate must spill");
+    }
+}
+
+#[test]
+fn lifetime_policy_recovers_deep_mlp_activations() {
+    // Divergence case: resident packing spills some activations of a deep
+    // MLP; lifetime packing keeps them all in L2 (only ~2 live at once).
+    use ftl::ir::builder::deep_mlp;
+    use ftl::tiling::{assign_homes_with, HomesPolicy};
+    let g = deep_mlp(512, 768, 4, DType::Int8);
+    let soc = ftl::soc::siracusa_reduced_cluster_only();
+    let groups = fuse_groups(&g, Strategy::LayerPerLayer, FusionPolicy::default());
+    let count_l3 = |policy| {
+        assign_homes_with(&g, &groups, &soc, policy)
+            .iter()
+            .filter(|h| **h == Some(Level::L3))
+            .count()
+    };
+    assert!(count_l3(HomesPolicy::Lifetime) < count_l3(HomesPolicy::Resident));
+}
+
+#[test]
+fn lifetime_policy_numerics_hold() {
+    use ftl::tiling::HomesPolicy;
+    let g = experiments::vit_mlp_stage(48, 64, 160);
+    let mut cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+    cfg.homes = HomesPolicy::Lifetime;
+    let worst = Deployer::new(g, cfg).validate_numerics(NativeBackend, 13).unwrap();
+    assert!(worst < 1e-3);
+}
+
+#[test]
+fn l3_slower_configs_increase_ftl_benefit() {
+    // Monotonicity of the mechanism: slowing L3 widens the baseline/FTL
+    // gap (more expensive intermediate round trip).
+    let run = |l3_bpc: f64| {
+        let g = experiments::vit_mlp_stage(197, 768, 3072);
+        let mut cfg = DeployConfig::preset("cluster-only", Strategy::LayerPerLayer).unwrap();
+        cfg.soc.dma_io.bytes_per_cycle = l3_bpc;
+        let base = Deployer::new(g.clone(), cfg.clone()).deploy().unwrap().1.sim.total_cycles;
+        cfg.strategy = Strategy::Ftl;
+        let ftl_c = Deployer::new(g, cfg).deploy().unwrap().1.sim.total_cycles;
+        100.0 * (base as f64 - ftl_c as f64) / base as f64
+    };
+    let fast = run(0.4);
+    let slow = run(0.05);
+    assert!(slow > fast, "slower L3 must increase FTL's win ({slow:.1}% vs {fast:.1}%)");
+}

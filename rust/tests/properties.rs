@@ -1,0 +1,269 @@
+//! Property-based tests over the core invariants (in-crate `util::prop`
+//! harness — see DESIGN.md; `proptest` is unavailable offline).
+
+use std::collections::HashSet;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::Deployer;
+use ftl::ir::builder::{deep_mlp, vit_mlp};
+use ftl::ir::{ActKind, DType, GraphBuilder};
+use ftl::memory::{AllocRequest, BufferRole, Level, StaticAllocator};
+use ftl::runtime::{reference, HostTensor, NativeBackend, TileExecutor};
+use ftl::schedule::build_schedule;
+use ftl::sim::simulate;
+use ftl::tiling::{assign_homes, fuse_groups, solve_graph, FusionPolicy, SolverOptions, Strategy};
+use ftl::util::prop::{cases, Rng};
+
+/// Random small MLP-ish graph.
+fn random_graph(rng: &mut Rng) -> ftl::ir::Graph {
+    let seq = rng.range(3, 48);
+    let d = rng.range(3, 48);
+    let mut b = GraphBuilder::new(DType::F32);
+    let mut t = b.input("x", &[seq, d]);
+    let layers = rng.range(1, 3);
+    for i in 0..layers {
+        let n = rng.range(3, 64);
+        t = b.linear(&format!("fc{i}"), t, n, rng.chance(0.7));
+        if rng.chance(0.8) {
+            let kind = *rng.pick(&[ActKind::Gelu, ActKind::Relu, ActKind::Sigmoid]);
+            t = b.act(&format!("act{i}"), kind, t);
+        }
+    }
+    b.finish(t).expect("random graph is valid")
+}
+
+#[test]
+fn prop_allocator_no_overlap_and_within_capacity() {
+    cases(200, |rng| {
+        let n = rng.range(1, 40);
+        let reqs: Vec<AllocRequest> = (0..n)
+            .map(|i| {
+                let birth = rng.range(0, 30);
+                AllocRequest::new(i, rng.range(0, 4096), birth, birth + rng.range(0, 10))
+            })
+            .collect();
+        let alloc = StaticAllocator::new(1 << 22, 1 << rng.range(0, 6));
+        let placed = alloc.solve(&reqs).expect("capacity is generous");
+        alloc.verify(&placed).expect("placement must verify");
+    });
+}
+
+#[test]
+fn prop_allocator_peak_not_worse_than_sum() {
+    cases(100, |rng| {
+        let n = rng.range(2, 24);
+        let reqs: Vec<AllocRequest> = (0..n)
+            .map(|i| {
+                let birth = rng.range(0, 10);
+                AllocRequest::new(i, rng.range(1, 2048), birth, birth + rng.range(0, 6))
+            })
+            .collect();
+        let alloc = StaticAllocator::new(1 << 24, 4);
+        let placed = alloc.solve(&reqs).unwrap();
+        let peak = StaticAllocator::peak(&placed);
+        let aligned_sum: usize = reqs.iter().map(|r| (r.size + 3) & !3).sum();
+        assert!(peak <= aligned_sum, "peak {peak} worse than naive sum {aligned_sum}");
+    });
+}
+
+#[test]
+fn prop_solution_fits_l1_and_covers_dims() {
+    cases(40, |rng| {
+        let graph = random_graph(rng);
+        let strategy = if rng.chance(0.5) { Strategy::Ftl } else { Strategy::LayerPerLayer };
+        let soc = if rng.chance(0.5) {
+            ftl::soc::siracusa_reduced()
+        } else {
+            ftl::soc::siracusa_reduced_cluster_only()
+        };
+        let dbuf = rng.chance(0.5);
+        let groups = fuse_groups(&graph, strategy, FusionPolicy::default());
+        let (_, sol) = solve_graph(&graph, &soc, groups, &SolverOptions::default(), dbuf).expect("solvable");
+        for g in &sol.groups {
+            assert!(g.footprint <= soc.mem.capacity(Level::L1));
+            // loop nest covers each free dim exactly
+            for l in &g.loops {
+                let covered: usize = {
+                    let mut c = 0;
+                    let mut off = 0;
+                    while off < l.full {
+                        c += l.tile.min(l.full - off);
+                        off += l.tile;
+                    }
+                    c
+                };
+                assert_eq!(covered, l.full);
+            }
+            // every buffer tile at every iteration stays within bounds
+            for state in g.iterations() {
+                for b in &g.buffers {
+                    let off = b.offsets_at(&state);
+                    let shp = b.shape_at(&state);
+                    for ((o, s), d) in off.iter().zip(&shp).zip(&b.dims) {
+                        assert!(o + s <= d.full.max(o + 1), "tile exceeds dim: {o}+{s} > {}", d.full);
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_tiled_execution_matches_oracle() {
+    cases(25, |rng| {
+        let graph = random_graph(rng);
+        let strategy = if rng.chance(0.5) { Strategy::Ftl } else { Strategy::LayerPerLayer };
+        let cfg = DeployConfig::preset(if rng.chance(0.5) { "siracusa" } else { "cluster-only" }, strategy)
+            .unwrap();
+        let worst = Deployer::new(graph, cfg).validate_numerics(NativeBackend, rng.next_u64()).unwrap();
+        assert!(worst < 1e-2, "deviation {worst}");
+    });
+}
+
+#[test]
+fn prop_ftl_dma_bytes_never_exceed_baseline() {
+    cases(25, |rng| {
+        let graph = random_graph(rng);
+        let soc = ftl::soc::siracusa_reduced();
+        let run = |strategy| {
+            let groups = fuse_groups(&graph, strategy, FusionPolicy::default());
+            let (_, sol) = solve_graph(&graph, &soc, groups, &SolverOptions::default(), false).unwrap();
+            let sched = build_schedule(&graph, &soc, &sol).unwrap();
+            simulate(&sched, &soc).unwrap()
+        };
+        let base = run(Strategy::LayerPerLayer);
+        let ftl_r = run(Strategy::Ftl);
+        assert!(
+            ftl_r.dma.total_bytes() <= base.dma.total_bytes(),
+            "FTL moved more bytes ({} > {})",
+            ftl_r.dma.total_bytes(),
+            base.dma.total_bytes()
+        );
+        assert!(ftl_r.total_cycles <= base.total_cycles);
+    });
+}
+
+#[test]
+fn prop_double_buffer_never_hurts() {
+    cases(20, |rng| {
+        let graph = random_graph(rng);
+        let soc = ftl::soc::siracusa_reduced();
+        let groups = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
+        let run = |dbuf: bool| {
+            let (_, sol) =
+                solve_graph(&graph, &soc, groups.clone(), &SolverOptions::default(), dbuf).unwrap();
+            let sched = build_schedule(&graph, &soc, &sol).unwrap();
+            simulate(&sched, &soc).unwrap().total_cycles
+        };
+        let single = run(false);
+        let double = run(true);
+        // Double buffering is NOT universally a win — the paper itself
+        // notes it only pays when kernel runtime < DMA runtime, and the
+        // doubled footprint can force smaller tiles (more per-command
+        // setup cycles), which dominates on tiny graphs. The invariant we
+        // can assert is a *bounded* regression: the pipeline overlap can
+        // never cost more than the extra setup of ~2x the tile count.
+        assert!(
+            (double as f64) <= single as f64 * 1.25,
+            "double buffering cost more than the setup bound: {double} vs {single}"
+        );
+    });
+}
+
+#[test]
+fn prop_gather_scatter_roundtrip() {
+    cases(100, |rng| {
+        let rows = rng.range(1, 40);
+        let cols = rng.range(1, 40);
+        let src = HostTensor::random(&[rows, cols], rng.next_u64());
+        let tr = rng.range(1, rows);
+        let tc = rng.range(1, cols);
+        let mut dst = HostTensor::zeros(&[rows, cols]);
+        let mut r0 = 0;
+        while r0 < rows {
+            let mut c0 = 0;
+            while c0 < cols {
+                let tile = src.gather(&[r0, c0], &[tr.min(rows - r0), tc.min(cols - c0)]);
+                dst.scatter(&[r0, c0], &tile);
+                c0 += tc;
+            }
+            r0 += tr;
+        }
+        assert_eq!(src.data, dst.data);
+    });
+}
+
+#[test]
+fn prop_homes_consistent_with_materialisation() {
+    cases(40, |rng| {
+        let graph = random_graph(rng);
+        let soc = ftl::soc::siracusa_reduced();
+        let groups = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
+        let homes = assign_homes(&graph, &groups, &soc);
+        let (groups, sol) = solve_graph(&graph, &soc, groups, &SolverOptions::default(), false).unwrap();
+        let homes = {
+            // homes may have been recomputed after splits; recompute for
+            // the final groups for the invariant check.
+            let _ = homes;
+            assign_homes(&graph, &groups, &soc)
+        };
+        let mut intermediate_buffers = HashSet::new();
+        for g in &sol.groups {
+            for b in &g.buffers {
+                if b.role == BufferRole::Intermediate {
+                    intermediate_buffers.insert(b.tensor);
+                    assert!(b.home.is_none(), "fused intermediate with a home level");
+                }
+            }
+        }
+        for t in &intermediate_buffers {
+            assert_eq!(homes[*t], None, "home assigned to non-materialised tensor");
+        }
+        // Every graph input/weight/output must have a home.
+        for (i, tensor) in graph.tensors.iter().enumerate() {
+            if !matches!(tensor.kind, ftl::ir::TensorKind::Intermediate) {
+                assert!(homes[i].is_some(), "{} lacks a home", tensor.name);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_reference_ops_shape_agree_with_ir_inference() {
+    cases(60, |rng| {
+        let graph = random_graph(rng);
+        let bindings = reference::random_bindings(&graph, rng.next_u64());
+        let env = reference::run_graph(&graph, &bindings).unwrap();
+        for node in &graph.nodes {
+            assert_eq!(env[&node.output].shape, graph.tensors[node.output].shape);
+        }
+    });
+}
+
+#[test]
+fn prop_executor_deterministic() {
+    cases(10, |rng| {
+        let graph = vit_mlp(rng.range(8, 32), rng.range(8, 32), rng.range(8, 64), DType::F32);
+        let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+        let dep = Deployer::new(graph, cfg);
+        let plan = dep.plan().unwrap();
+        let bindings = reference::random_bindings(dep.graph(), 5);
+        let mut e1 = TileExecutor::new(NativeBackend);
+        let mut e2 = TileExecutor::new(NativeBackend);
+        let r1 = e1.run(dep.graph(), &plan.solution, &bindings).unwrap();
+        let r2 = e2.run(dep.graph(), &plan.solution, &bindings).unwrap();
+        let out = dep.graph().outputs()[0];
+        assert_eq!(r1[&out].data, r2[&out].data);
+    });
+}
+
+#[test]
+fn prop_deep_mlp_group_count() {
+    cases(20, |rng| {
+        let layers = rng.range(1, 5);
+        let graph = deep_mlp(16, 32, layers, DType::Int8);
+        let groups = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
+        // Each Linear+GeLU pair fuses → exactly `layers` groups.
+        assert_eq!(groups.len(), layers);
+    });
+}
