@@ -1,70 +1,42 @@
-//! Deployment server — the coordinator as a long-running service.
+//! Deployment server — the serve layer (`ftl::serve`) as a long-running
+//! TCP service.
 //!
-//! A minimal line-oriented TCP protocol (std-only; the build is fully
-//! offline): each request line is
+//! A minimal line-oriented protocol (std-only; the build is fully
+//! offline): each request line is one of
 //!
 //! ```text
-//! DEPLOY <workload> <soc> <strategy>            e.g. DEPLOY vit-base-stage siracusa ftl
+//! DEPLOY <workload> <soc> <strategy>      e.g. DEPLOY vit-base-stage siracusa ftl
+//! STATS                                   plan-cache / single-flight counters
+//! PING
 //! ```
 //!
-//! and the response is one JSON line with the deploy report. Worker
-//! threads serve requests concurrently; planning is CPU-bound, so a
-//! thread per connection is the right concurrency model here.
+//! and the response is one JSON line. Requests are handled by a thread
+//! per connection, but the heavy lifting is shared: every DEPLOY goes
+//! through [`PlanService`], so structurally identical requests are served
+//! from the sharded plan cache (`"cached": true` in the response) and
+//! concurrent misses for the same key coalesce into a single
+//! branch-&-bound solve.
 //!
 //! ```text
 //! cargo run --release --example deploy_server &          # listens on 127.0.0.1:7117
 //! printf 'DEPLOY vit-base-stage siracusa ftl\n' | nc 127.0.0.1 7117
+//! printf 'STATS\n' | nc 127.0.0.1 7117
 //! ```
 //!
-//! Pass `--self-test` to spin up the server, fire a batch of client
-//! requests against it, verify the responses, and exit — used as the
-//! runnable demo (and by the integration tests).
+//! Pass `--self-test` to spin up the server, fire concurrent client
+//! batches against it (including duplicates), verify the responses *and*
+//! the cache/single-flight accounting, and exit.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use ftl::config::DeployConfig;
-use ftl::coordinator::{experiments, Deployer};
-use ftl::tiling::Strategy;
+use ftl::serve::{handle_line, PlanService, ServeOptions};
 use ftl::util::json::Json;
 
-fn handle_request(line: &str, served: &AtomicU64) -> Json {
-    match serve(line) {
-        Ok(j) => {
-            served.fetch_add(1, Ordering::Relaxed);
-            j
-        }
-        Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
-    }
-}
-
-fn serve(line: &str) -> Result<Json> {
-    let parts: Vec<&str> = line.split_whitespace().collect();
-    match parts.as_slice() {
-        ["DEPLOY", workload, soc, strategy] => {
-            let strategy =
-                Strategy::parse(strategy).ok_or_else(|| anyhow!("bad strategy '{strategy}'"))?;
-            let graph = match *workload {
-                "vit-base-stage" => experiments::vit_mlp_stage(197, 768, 3072),
-                "vit-tiny-stage" => experiments::vit_mlp_stage(197, 192, 768),
-                other => ftl::ir::builder::vit_mlp_preset(other)
-                    .ok_or_else(|| anyhow!("unknown workload '{other}'"))?,
-            };
-            let cfg = DeployConfig::preset(soc, strategy)?;
-            let soc_cfg = cfg.soc.clone();
-            let (_, report) = Deployer::new(graph, cfg).with_workload_name(*workload).deploy()?;
-            Ok(report.to_json(&soc_cfg))
-        }
-        ["PING"] => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
-        _ => bail!("bad request: '{line}' (expected: DEPLOY <workload> <soc> <strategy>)"),
-    }
-}
-
-fn client(conn: TcpStream, served: Arc<AtomicU64>) {
+fn client(conn: TcpStream, service: Arc<PlanService>) {
     let peer = conn.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let reader = BufReader::new(conn.try_clone().expect("clone stream"));
     let mut writer = conn;
@@ -73,7 +45,9 @@ fn client(conn: TcpStream, served: Arc<AtomicU64>) {
         if line.trim().is_empty() {
             continue;
         }
-        let response = handle_request(line.trim(), &served);
+        // Protocol handling lives in ftl::serve::handle_line, shared with
+        // the `ftl serve` subcommand.
+        let response = handle_line(&service, line.trim());
         if writeln!(writer, "{}", response.to_string()).is_err() {
             break;
         }
@@ -81,76 +55,110 @@ fn client(conn: TcpStream, served: Arc<AtomicU64>) {
     eprintln!("[server] {peer} disconnected");
 }
 
-fn run_server(addr: &str) -> Result<(TcpListener, Arc<AtomicU64>)> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    let served = Arc::new(AtomicU64::new(0));
-    Ok((listener, served))
+/// Fire one request over a fresh connection, return the parsed response.
+fn request(addr: std::net::SocketAddr, req: &str) -> Result<Json> {
+    let mut conn = TcpStream::connect(addr)?;
+    writeln!(conn, "{req}")?;
+    let mut line = String::new();
+    BufReader::new(conn).read_line(&mut line)?;
+    let v = ftl::util::json::parse(line.trim())?;
+    if let Some(err) = v.get_opt("error") {
+        bail!("request '{req}' failed: {}", err.as_str().unwrap_or("?"));
+    }
+    Ok(v)
+}
+
+fn self_test(listener: TcpListener, service: Arc<PlanService>) -> Result<()> {
+    let local = listener.local_addr()?;
+    let accept_service = service.clone();
+    std::thread::spawn(move || {
+        for conn in listener.incoming().flatten() {
+            let service = accept_service.clone();
+            std::thread::spawn(move || client(conn, service));
+        }
+    });
+
+    // Wave 1: concurrent batch with duplicates — the three duplicates of
+    // the siracusa/ftl deploy must coalesce onto one solve.
+    let requests = [
+        "DEPLOY vit-base-stage siracusa ftl",
+        "DEPLOY vit-base-stage siracusa ftl",
+        "DEPLOY vit-base-stage siracusa ftl",
+        "DEPLOY vit-base-stage siracusa baseline",
+        "DEPLOY vit-base-stage cluster-only ftl",
+        "DEPLOY vit-tiny-stage cluster-only baseline",
+    ];
+    let unique = 4u64;
+    let handles: Vec<_> = requests
+        .iter()
+        .map(|req| {
+            let req = req.to_string();
+            std::thread::spawn(move || -> Result<Json> { request(local, &req) })
+        })
+        .collect();
+    let mut ftl_cycles = 0i64;
+    let mut base_cycles = 0i64;
+    for (req, h) in requests.iter().zip(handles) {
+        let v = h.join().map_err(|_| anyhow!("client thread panicked"))??;
+        let sim = v.get("sim").context("DEPLOY response missing sim")?;
+        let cycles = sim.get("total_cycles")?.as_usize()? as i64;
+        println!("[client] {req} -> {cycles} cycles (cached: {})", v.get("cached")?.to_string());
+        if req.contains("siracusa ftl") {
+            ftl_cycles = cycles;
+        } else if req.contains("siracusa baseline") {
+            base_cycles = cycles;
+        }
+    }
+    ensure!(ftl_cycles > 0 && base_cycles > ftl_cycles, "FTL must beat baseline over the wire too");
+
+    // Wave 2: repeat everything — now every response must be a cache hit.
+    for req in &requests {
+        let v = request(local, req)?;
+        ensure!(
+            v.get("cached")?.as_bool()?,
+            "second-wave request '{req}' was not served from the plan cache"
+        );
+    }
+
+    // Accounting: exactly one solve per distinct (workload, soc, strategy).
+    let stats = request(local, "STATS")?;
+    let solves = stats.get("solves")?.as_usize()? as u64;
+    ensure!(
+        solves == unique,
+        "expected exactly {unique} solves for {unique} distinct requests, got {solves}"
+    );
+    let hits = stats.get("plan_cache")?.get("hits")?.as_usize()?;
+    ensure!(hits >= requests.len(), "second wave must hit the cache ({hits} hits)");
+    let pong = request(local, "PING")?;
+    ensure!(pong.get("pong")?.as_bool()?, "PING must pong");
+
+    println!("[server] stats: {}", service.stats_json().to_string());
+    println!(
+        "[server] served {} plan requests with {} solves; self-test OK",
+        service.stats().requests,
+        solves
+    );
+    Ok(())
 }
 
 fn main() -> Result<()> {
-    let self_test = std::env::args().any(|a| a == "--self-test");
-    let addr = "127.0.0.1:7117";
-    let (listener, served) = run_server(addr)?;
-    println!("[server] listening on {addr} (protocol: DEPLOY <workload> <soc> <strategy>)");
+    let self_test_mode = std::env::args().any(|a| a == "--self-test");
+    // Port 0 in self-test mode: parallel test runs must not collide.
+    let addr = if self_test_mode { "127.0.0.1:0" } else { "127.0.0.1:7117" };
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let service = Arc::new(PlanService::new(ServeOptions::default()));
+    println!(
+        "[server] listening on {} (protocol: DEPLOY <workload> <soc> <strategy> | STATS | PING)",
+        listener.local_addr()?
+    );
 
-    if self_test {
-        let served2 = served.clone();
-        let local = listener.local_addr()?;
-        std::thread::spawn(move || {
-            for conn in listener.incoming().flatten() {
-                let served = served2.clone();
-                std::thread::spawn(move || client(conn, served));
-            }
-        });
-        // Fire a concurrent batch of requests.
-        let requests = [
-            "DEPLOY vit-base-stage siracusa ftl",
-            "DEPLOY vit-base-stage siracusa baseline",
-            "DEPLOY vit-base-stage cluster-only ftl",
-            "DEPLOY vit-tiny-stage cluster-only baseline",
-            "PING",
-        ];
-        let handles: Vec<_> = requests
-            .iter()
-            .map(|req| {
-                let req = req.to_string();
-                std::thread::spawn(move || -> Result<String> {
-                    let mut conn = TcpStream::connect(local)?;
-                    writeln!(conn, "{req}")?;
-                    let mut line = String::new();
-                    BufReader::new(conn).read_line(&mut line)?;
-                    Ok(line)
-                })
-            })
-            .collect();
-        let mut ftl_cycles = 0i64;
-        let mut base_cycles = 0i64;
-        for (req, h) in requests.iter().zip(handles) {
-            let line = h.join().map_err(|_| anyhow!("client thread panicked"))??;
-            let v = ftl::util::json::parse(line.trim())?;
-            if v.get_opt("error").is_some() {
-                bail!("request '{req}' failed: {line}");
-            }
-            if let Some(sim) = v.get_opt("sim") {
-                let cycles = sim.get("total_cycles")?.as_usize()? as i64;
-                println!("[client] {req} -> {cycles} cycles");
-                if req.contains("siracusa ftl") {
-                    ftl_cycles = cycles;
-                } else if req.contains("siracusa baseline") {
-                    base_cycles = cycles;
-                }
-            } else {
-                println!("[client] {req} -> {}", line.trim());
-            }
-        }
-        assert!(ftl_cycles > 0 && base_cycles > ftl_cycles, "FTL must beat baseline over the wire too");
-        println!("[server] served {} requests; self-test OK", served.load(Ordering::Relaxed));
-        return Ok(());
+    if self_test_mode {
+        return self_test(listener, service);
     }
 
     for conn in listener.incoming().flatten() {
-        let served = served.clone();
-        std::thread::spawn(move || client(conn, served));
+        let service = service.clone();
+        std::thread::spawn(move || client(conn, service));
     }
     Ok(())
 }

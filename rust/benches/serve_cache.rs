@@ -1,0 +1,59 @@
+//! Bench: the serve layer — cold solve vs warm plan-cache hit vs
+//! contended single-flight.
+//!
+//! The acceptance bar for `ftl::serve` is a >=10x latency reduction for
+//! warm-cache DEPLOY requests (they skip the branch-&-bound solver
+//! entirely); in practice the gap is orders of magnitude. The contended
+//! number shows N concurrent identical cold requests costing ~one solve
+//! (single-flight), not N solves.
+
+use std::time::Duration;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::experiments;
+use ftl::serve::{PlanService, ServeOptions};
+use ftl::tiling::Strategy;
+use ftl::util::bench::bench;
+
+fn main() {
+    let graph = experiments::vit_mlp_stage(197, 768, 3072);
+    let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+    let opts = ServeOptions { cache_capacity: 32, cache_shards: 4, workers: 1 };
+
+    println!("=== serve layer: plan-cache + single-flight (vit-base-stage, siracusa/ftl) ===\n");
+
+    // Cold: a fresh service per call — fingerprint, miss, full solve.
+    let cold = bench("serve/cold_plan(solve)", Duration::from_secs(3), || {
+        let svc = PlanService::new(opts);
+        let outcome = svc.plan(&graph, &cfg).unwrap();
+        assert!(!outcome.cached);
+    });
+
+    // Warm: one service, the key stays hot — fingerprint + LRU hit only.
+    let warm_svc = PlanService::new(opts);
+    warm_svc.plan(&graph, &cfg).unwrap();
+    let warm = bench("serve/warm_hit", Duration::from_secs(2), || {
+        let outcome = warm_svc.plan(&graph, &cfg).unwrap();
+        assert!(outcome.cached);
+    });
+
+    // Contended: 8 threads race the same cold key; single-flight coalesces
+    // them onto one solve, so the wall-clock tracks `cold`, not 8x cold.
+    let contended = bench("serve/contended_8x_single_flight", Duration::from_secs(3), || {
+        let svc = PlanService::new(opts);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    svc.plan(&graph, &cfg).unwrap();
+                });
+            }
+        });
+        assert_eq!(svc.stats().solves, 1, "contended requests must coalesce to one solve");
+    });
+
+    let speedup = cold.median.as_nanos() as f64 / warm.median.as_nanos().max(1) as f64;
+    let amortised = contended.median.as_nanos() as f64 / cold.median.as_nanos().max(1) as f64;
+    println!("\nwarm-cache speedup vs cold solve: {speedup:.0}x (acceptance bar: >=10x)");
+    println!("contended(8 threads) / cold(1 thread): {amortised:.2}x (single-flight: ~1x, not 8x)");
+    assert!(speedup >= 10.0, "warm cache hit must be >=10x faster than a cold solve (got {speedup:.1}x)");
+}

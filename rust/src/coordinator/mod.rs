@@ -25,6 +25,12 @@ use crate::tiling::{assign_homes_with, fuse_groups, solve_graph_with, FusionGrou
 use crate::util::json::Json;
 
 /// A fully planned deployment (before simulation/execution).
+///
+/// Planning is deterministic and expensive; a `Deployment` is therefore a
+/// cacheable artifact. The serve layer ([`crate::serve`]) shares plans as
+/// `Arc<Deployment>` — prefer passing `&Deployment`/`Arc<Deployment>`
+/// over cloning (the `Clone` impl exists for tooling that genuinely needs
+/// an owned copy, e.g. mutation-based ablations).
 #[derive(Debug, Clone)]
 pub struct Deployment {
     /// Final fusion groups (after solver fallbacks).
@@ -58,6 +64,24 @@ impl Deployment {
         }
         let _ = graph;
         seen.into_iter().map(|(k, (i, o))| (k, i, o)).collect()
+    }
+
+    /// Simulate this plan on the config's SoC and assemble the standard
+    /// per-request report. Planning is the expensive step — this is the
+    /// cheap per-request half, so a cached plan (see [`crate::serve`])
+    /// can be re-reported under any workload label without re-solving.
+    pub fn report(&self, workload: &str, config: &DeployConfig) -> Result<DeployReport> {
+        let sim = simulate(&self.schedule, &config.soc)?;
+        Ok(DeployReport {
+            strategy: config.strategy.name().to_string(),
+            soc: config.soc.name.clone(),
+            workload: workload.to_string(),
+            phases: self.schedule.phases.len(),
+            peak_l1: self.solution.peak_l1(),
+            dma_commands: self.schedule.dma_count(),
+            dma_bytes: self.schedule.dma_bytes(),
+            sim,
+        })
     }
 }
 
@@ -166,17 +190,7 @@ impl Deployer {
     /// Plan + simulate.
     pub fn deploy(&self) -> Result<(Deployment, DeployReport)> {
         let d = self.plan()?;
-        let sim = simulate(&d.schedule, &self.config.soc)?;
-        let report = DeployReport {
-            strategy: self.config.strategy.name().to_string(),
-            soc: self.config.soc.name.clone(),
-            workload: self.workload.clone(),
-            phases: d.schedule.phases.len(),
-            peak_l1: d.solution.peak_l1(),
-            dma_commands: d.schedule.dma_count(),
-            dma_bytes: d.schedule.dma_bytes(),
-            sim,
-        };
+        let report = d.report(&self.workload, &self.config)?;
         Ok((d, report))
     }
 

@@ -21,6 +21,12 @@
 //!            ──► schedule::{baseline,fused} (tiled DMA/kernel schedule)
 //!            ──► sim::Engine    (event-driven runtime + DMA stats)
 //!            ──► runtime::TileExecutor (PJRT numerics validation)
+//!
+//!  serving  (long-running planner service, `ftl serve`):
+//!  request ──► serve::fingerprint (stable content hash of graph+config)
+//!          ──► serve::PlanCache   (sharded LRU of Arc<Deployment>) ── hit ─► reply
+//!          ──► serve::SingleFlight (coalesce concurrent identical solves)
+//!          ──► coordinator::Deployer::plan  (solve once, cache, share)
 //! ```
 //!
 //! ## Layers
@@ -43,13 +49,15 @@ pub mod memory;
 pub mod metrics;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod sim;
 pub mod soc;
 pub mod tiling;
 pub mod util;
 
-pub use coordinator::{DeployReport, Deployer};
+pub use coordinator::{DeployReport, Deployer, Deployment};
 pub use ir::{Graph, Op, Tensor};
+pub use serve::{PlanService, ServeOptions};
 pub use soc::SocConfig;
 pub use tiling::{Strategy, TilingSolution};
 

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! ftl deploy     --workload vit-base-stage --soc siracusa --strategy ftl [--double-buffer] [--json]
+//! ftl serve      [--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64] [--self-test]
 //! ftl fig3       [--seq 197 --dim 768 --hidden 3072] [--double-buffer]
 //! ftl dma        [--soc cluster-only]
 //! ftl emit-tiles --out artifacts/tiles.json
@@ -12,15 +13,20 @@
 //! Argument parsing is hand-rolled (the build is fully offline — no clap).
 
 use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use ftl::config::DeployConfig;
 use ftl::coordinator::{experiments, Deployer};
 use ftl::ir::builder::{attention_head, deep_mlp, vit_mlp_block, vit_mlp_preset};
 use ftl::ir::{graph_from_json, graph_to_json, DType, Graph};
-use ftl::runtime::{NativeBackend, PjrtBackend};
+use ftl::runtime::{KernelBackend, NativeBackend, PjrtBackend};
+use ftl::serve::{handle_line, resolve_workload, PlanService, ServeOptions};
 use ftl::tiling::Strategy;
 use ftl::util::json::Json;
 
@@ -38,7 +44,7 @@ impl Args {
             let Some(name) = a.strip_prefix("--") else { bail!("unexpected argument '{a}'") };
             // boolean flags take no value; value flags consume the next token
             match name {
-                "double-buffer" | "json" | "no-perf-constraints" | "verbose" => {
+                "double-buffer" | "json" | "no-perf-constraints" | "verbose" | "self-test" => {
                     flags.insert(name.to_string(), "true".into());
                 }
                 _ => {
@@ -113,13 +119,13 @@ fn make_config(args: &Args) -> Result<DeployConfig> {
 fn cmd_deploy(args: &Args) -> Result<()> {
     let (name, graph) = load_workload(args)?;
     let cfg = make_config(args)?;
-    let soc = cfg.soc.clone();
     let dep = Deployer::new(graph, cfg).with_workload_name(&name);
     let (plan, report) = dep.deploy()?;
+    let soc = &dep.config().soc;
     if args.has("json") {
-        println!("{}", report.to_json(&soc).pretty());
+        println!("{}", report.to_json(soc).pretty());
     } else {
-        println!("{}", report.render(&soc));
+        println!("{}", report.render(soc));
         println!("fusion groups:");
         for (g, sol) in plan.groups.iter().zip(&plan.solution.groups) {
             let names: Vec<&str> = g.nodes.iter().map(|&n| dep.graph().nodes[n].name.as_str()).collect();
@@ -134,6 +140,124 @@ fn cmd_deploy(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// `ftl serve` — run the plan-cache + single-flight deployment service
+/// ([`ftl::serve::PlanService`]) behind the line protocol
+/// `DEPLOY <workload> <soc> <strategy>` | `STATS` | `PING` (one JSON
+/// response per line). `--self-test` exercises the full service in
+/// process (cache hits, single-flight coalescing, warm-vs-cold speedup)
+/// and exits.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let opts = ServeOptions {
+        cache_capacity: args.get_usize("cache-cap", 64)?,
+        cache_shards: args.get_usize("cache-shards", 8)?,
+        workers: args.get_usize("workers", 4)?,
+    };
+    let service = PlanService::new(opts);
+    if args.has("self-test") {
+        return serve_self_test(&service);
+    }
+    let addr = args.get("addr", "127.0.0.1:7117");
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    println!("[ftl-serve] listening on {addr} (DEPLOY <workload> <soc> <strategy> | STATS | PING)");
+    let service = Arc::new(service);
+    for conn in listener.incoming().flatten() {
+        let service = service.clone();
+        std::thread::spawn(move || serve_connection(conn, &service));
+    }
+    Ok(())
+}
+
+fn serve_connection(conn: TcpStream, service: &PlanService) {
+    let Ok(read_half) = conn.try_clone() else { return };
+    let reader = BufReader::new(read_half);
+    let mut writer = conn;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        // Protocol handling lives in ftl::serve::handle_line, shared with
+        // examples/deploy_server.rs.
+        let response = handle_line(service, line);
+        if writeln!(writer, "{}", response.to_string()).is_err() {
+            break;
+        }
+    }
+}
+
+/// In-process exercise of the serve layer — run by tier-1 via the
+/// `serve` integration test so the service is covered without TCP.
+fn serve_self_test(service: &PlanService) -> Result<()> {
+    println!("[ftl-serve] self-test");
+    let graph = resolve_workload("vit-base-stage")?;
+    let cfg = DeployConfig::preset("siracusa", Strategy::Ftl)?;
+
+    // 1. Cold plan: must consult the solver exactly once.
+    let t_cold = Instant::now();
+    let cold = service.plan(&graph, &cfg)?;
+    let cold_time = t_cold.elapsed();
+    ensure!(!cold.cached, "first request cannot be a cache hit");
+    ensure!(service.stats().solves == 1, "cold plan must run exactly one solve");
+
+    // 2. Warm plan: served from cache, sharing the same Arc, no solve.
+    // Timing is best-of-100 so a scheduler hiccup can't flake the bound.
+    let warm = service.plan(&graph, &cfg)?;
+    ensure!(warm.cached, "second request must hit the cache");
+    ensure!(Arc::ptr_eq(&cold.plan, &warm.plan), "cache must share the plan, not copy it");
+    let mut warm_time = std::time::Duration::MAX;
+    for _ in 0..100 {
+        let t = Instant::now();
+        let hit = service.plan(&graph, &cfg)?;
+        warm_time = warm_time.min(t.elapsed());
+        ensure!(hit.cached, "warm requests must keep hitting the cache");
+    }
+    ensure!(service.stats().solves == 1, "warm requests must skip the solver");
+    let speedup = cold_time.as_nanos() as f64 / warm_time.as_nanos().max(1) as f64;
+    println!(
+        "[ftl-serve] cold plan {:.2?} vs warm hit {:.2?} ({speedup:.0}x)",
+        cold_time, warm_time
+    );
+    ensure!(speedup >= 10.0, "warm cache hit must be >=10x faster than a cold solve (got {speedup:.1}x)");
+
+    // 3. Concurrent identical DEPLOYs: coalesce, agree, and add no solves.
+    let mut cycles: Vec<u64> = Vec::new();
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            handles.push(s.spawn(|| {
+                service.deploy("vit-base-stage", &graph, &cfg).map(|r| r.report.sim.total_cycles)
+            }));
+        }
+        for h in handles {
+            cycles.push(h.join().map_err(|_| anyhow!("self-test thread panicked"))??);
+        }
+        Ok(())
+    })?;
+    ensure!(cycles.windows(2).all(|w| w[0] == w[1]), "coalesced requests must agree on cycles");
+    ensure!(service.stats().solves == 1, "identical concurrent requests must not re-solve");
+
+    // 4. A structurally different request discriminates and solves anew.
+    let baseline_cfg = DeployConfig::preset("cluster-only", Strategy::LayerPerLayer)?;
+    let other = service.deploy("vit-base-stage", &graph, &baseline_cfg)?;
+    ensure!(!other.cached, "different config must miss the cache");
+    ensure!(other.fingerprint != cold.fingerprint, "fingerprint must discriminate configs");
+    ensure!(service.stats().solves == 2, "new config must trigger exactly one more solve");
+    ensure!(
+        other.report.sim.total_cycles > cycles[0],
+        "FTL on siracusa must beat the cluster-only baseline"
+    );
+
+    let stats = service.stats();
+    println!("{}", stats.cache.table());
+    println!("{}", service.stats_json().pretty());
+    println!(
+        "[ftl-serve] served {} requests with {} solves; self-test OK",
+        stats.requests, stats.solves
+    );
     Ok(())
 }
 
@@ -232,7 +356,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     let artifacts = args.get("artifacts", "artifacts");
     let worst = if std::path::Path::new(artifacts).join("manifest.json").exists() {
         let backend = PjrtBackend::new(std::path::Path::new(artifacts))?;
-        println!("backend: pjrt (artifacts: {artifacts})");
+        println!("backend: {} (artifacts: {artifacts})", KernelBackend::name(&backend));
+        if KernelBackend::name(&backend) == "pjrt-stub" {
+            println!(
+                "warning: built without the `xla` feature — artifacts are NOT executed; \
+                 kernels fall back to the native reference, so this validates the tiling \
+                 transformation only, not the AOT artifacts"
+            );
+        }
         dep.validate_numerics(backend, seed)?
     } else {
         println!("backend: native (no manifest at {artifacts}/manifest.json)");
@@ -275,6 +406,8 @@ USAGE: ftl <command> [flags]
 
 COMMANDS:
   deploy       plan + simulate one deployment     (--workload --soc --strategy [--double-buffer] [--json])
+  serve        plan-cache deployment service      ([--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64]
+               (DEPLOY/STATS/PING line protocol)   [--cache-shards 8] [--self-test])
   fig3         reproduce the paper's Fig. 3       ([--seq --dim --hidden] [--double-buffer] [--json])
   dma          reproduce the -47.1% DMA metric    ([--soc])
   sweep        hidden-dim sweep (Ext-A)           ([--soc])
@@ -293,6 +426,7 @@ STRATEGY:  ftl (default), baseline"
 fn main() {
     let code = match Args::parse().and_then(|args| match args.cmd.as_str() {
         "deploy" => cmd_deploy(&args),
+        "serve" => cmd_serve(&args),
         "fig3" => cmd_fig3(&args),
         "dma" => cmd_dma(&args),
         "sweep" => cmd_sweep(&args),

@@ -130,9 +130,77 @@ pub fn sim_json(rep: &SimReport, soc: &SocConfig) -> Json {
     ])
 }
 
+/// Counters for the serve-layer plan cache (filled by
+/// [`crate::serve::PlanCache`], rendered in `STATS` responses and the
+/// `ftl serve` self-test).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups that found a cached plan.
+    pub hits: u64,
+    /// Lookups that missed.
+    pub misses: u64,
+    /// Entries evicted to stay within capacity.
+    pub evictions: u64,
+    /// Plans inserted.
+    pub inserts: u64,
+    /// Current cached-plan count.
+    pub entries: usize,
+    /// Configured capacity.
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Hit fraction in `[0, 1]` (0 when no lookups yet).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// JSON rendering (embedded in the serve stats snapshot).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hits", Json::int(self.hits as usize)),
+            ("misses", Json::int(self.misses as usize)),
+            ("evictions", Json::int(self.evictions as usize)),
+            ("inserts", Json::int(self.inserts as usize)),
+            ("entries", Json::int(self.entries)),
+            ("capacity", Json::int(self.capacity)),
+            ("hit_rate", Json::Num(self.hit_rate())),
+        ])
+    }
+
+    /// Human-readable one-table rendering.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&["hits", "misses", "hit%", "evictions", "entries", "capacity"]);
+        t.row(&[
+            self.hits.to_string(),
+            self.misses.to_string(),
+            format!("{:.1}", 100.0 * self.hit_rate()),
+            self.evictions.to_string(),
+            self.entries.to_string(),
+            self.capacity.to_string(),
+        ]);
+        t.render()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cache_stats_rates_and_rendering() {
+        let s = CacheStats { hits: 3, misses: 1, evictions: 0, inserts: 1, entries: 1, capacity: 8 };
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+        let j = s.to_json();
+        assert_eq!(j.get("hits").unwrap().as_usize().unwrap(), 3);
+        assert!(s.table().contains("75.0"));
+    }
 
     #[test]
     fn table_alignment() {

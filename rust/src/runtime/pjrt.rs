@@ -104,6 +104,7 @@ impl Manifest {
 }
 
 /// PJRT CPU backend with lazily compiled executables.
+#[cfg(feature = "xla")]
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     manifest: Manifest,
@@ -112,6 +113,7 @@ pub struct PjrtBackend {
     pub invocations: u64,
 }
 
+#[cfg(feature = "xla")]
 impl PjrtBackend {
     /// Create from an artifact directory containing `manifest.json`.
     pub fn new(artifact_dir: &Path) -> Result<Self> {
@@ -176,6 +178,7 @@ impl PjrtBackend {
     }
 }
 
+#[cfg(feature = "xla")]
 impl KernelBackend for PjrtBackend {
     fn exec(&mut self, op: &Op, inputs: &[&HostTensor]) -> Result<HostTensor> {
         let shapes: Vec<&[usize]> = inputs.iter().map(|t| t.shape.as_slice()).collect();
@@ -191,6 +194,54 @@ impl KernelBackend for PjrtBackend {
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+}
+
+/// Offline stub compiled when the `xla` feature is off (the default — the
+/// build has no network access and `xla_extension` ships native XLA
+/// libraries). It still loads and validates the artifact manifest so the
+/// tooling flow (`ftl emit-tiles` → `aot.py` → `ftl run`) stays
+/// exercisable; kernel execution falls back to the native reference
+/// backend, and direct artifact invocation ([`PjrtBackend::run`]) reports
+/// a clear error. Build with `--features xla` (after adding the `xla`
+/// dependency) for real PJRT execution.
+#[cfg(not(feature = "xla"))]
+pub struct PjrtBackend {
+    manifest: Manifest,
+    /// Kernel invocations served via real artifacts (always 0 in the stub).
+    pub invocations: u64,
+}
+
+#[cfg(not(feature = "xla"))]
+impl PjrtBackend {
+    /// Create from an artifact directory containing `manifest.json`.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        Ok(Self { manifest: Manifest::load(artifact_dir)?, invocations: 0 })
+    }
+
+    /// The manifest in use.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Direct artifact execution is unavailable without the `xla` feature.
+    pub fn run(&mut self, key: &str, _inputs: &[&HostTensor]) -> Result<HostTensor> {
+        if !self.manifest.has(key) {
+            bail!("artifact '{key}' not in manifest ({} entries)", self.manifest.entries.len());
+        }
+        bail!("artifact '{key}': ftl was built without the `xla` feature — rebuild with `--features xla` to execute PJRT artifacts")
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl KernelBackend for PjrtBackend {
+    fn exec(&mut self, op: &Op, inputs: &[&HostTensor]) -> Result<HostTensor> {
+        // Native fallback keeps `ftl run --artifacts ...` usable offline.
+        super::reference::run_op(op, inputs)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
     }
 }
 

@@ -1,0 +1,205 @@
+//! Sharded, capacity-bounded LRU cache of compiled deployment plans.
+//!
+//! Keys are [`Fingerprint`]s; values are cheap-to-clone handles (the serve
+//! layer stores `Arc<Deployment>`, so a hit shares the plan instead of
+//! copying it). Shards each hold an independent `Mutex`, so concurrent
+//! requests for *different* plans never contend on one lock; recency is a
+//! global monotonic tick, cheap to bump and good enough for an
+//! eviction-order LRU. Hit/miss/eviction/insert counters aggregate into a
+//! [`crate::metrics::CacheStats`] snapshot for reports.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::CacheStats;
+
+use super::fingerprint::Fingerprint;
+
+struct Entry<V> {
+    value: V,
+    last_used: u64,
+}
+
+struct Shard<V> {
+    map: HashMap<u128, Entry<V>>,
+}
+
+/// A sharded LRU keyed by [`Fingerprint`] (generic so the eviction logic
+/// is unit-testable with plain values; the serve layer instantiates it as
+/// [`PlanCache`]).
+pub struct LruCache<V: Clone> {
+    shards: Vec<Mutex<Shard<V>>>,
+    /// Max entries per shard (total capacity is spread over the shards).
+    per_shard: usize,
+    capacity: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    inserts: AtomicU64,
+}
+
+/// The serve layer's plan cache.
+pub type PlanCache = LruCache<std::sync::Arc<crate::coordinator::Deployment>>;
+
+impl<V: Clone> LruCache<V> {
+    /// New cache holding at most `capacity` entries spread over `shards`
+    /// lock domains. `shards` is clamped to `>= 1`; per-shard capacity is
+    /// rounded up so the total is never *below* the requested capacity.
+    pub fn new(capacity: usize, shards: usize) -> Self {
+        let shards = shards.max(1).min(capacity.max(1));
+        let per_shard = (capacity + shards - 1) / shards;
+        let shards_vec = (0..shards).map(|_| Mutex::new(Shard { map: HashMap::new() })).collect();
+        Self {
+            shards: shards_vec,
+            per_shard,
+            capacity,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: Fingerprint) -> &Mutex<Shard<V>> {
+        &self.shards[key.shard(self.shards.len())]
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Look up a plan; bumps recency and the hit/miss counters.
+    pub fn get(&self, key: Fingerprint) -> Option<V> {
+        let mut shard = self.shard(key).lock().expect("plan-cache shard poisoned");
+        match shard.map.get_mut(&key.0) {
+            Some(entry) => {
+                entry.last_used = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a plan, evicting least-recently-used entries
+    /// from the key's shard if it would exceed its capacity share.
+    pub fn insert(&self, key: Fingerprint, value: V) {
+        if self.capacity == 0 {
+            return;
+        }
+        let tick = self.next_tick();
+        let mut shard = self.shard(key).lock().expect("plan-cache shard poisoned");
+        shard.map.insert(key.0, Entry { value, last_used: tick });
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        while shard.map.len() > self.per_shard {
+            let oldest = shard
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k)
+                .expect("non-empty shard has an LRU entry");
+            shard.map.remove(&oldest);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether a key is currently cached (does not bump recency/counters).
+    pub fn contains(&self, key: Fingerprint) -> bool {
+        self.shard(key).lock().expect("plan-cache shard poisoned").map.contains_key(&key.0)
+    }
+
+    /// Current number of cached plans across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().expect("plan-cache shard poisoned").map.len()).sum()
+    }
+
+    /// True if no plans are cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot for reports.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            entries: self.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(v: u128) -> Fingerprint {
+        Fingerprint(v)
+    }
+
+    #[test]
+    fn hit_miss_counters() {
+        let c: LruCache<u32> = LruCache::new(4, 1);
+        assert!(c.get(key(1)).is_none());
+        c.insert(key(1), 10);
+        assert_eq!(c.get(key(1)), Some(10));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.capacity, 4);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let c: LruCache<u32> = LruCache::new(3, 1);
+        c.insert(key(1), 1);
+        c.insert(key(2), 2);
+        c.insert(key(3), 3);
+        // Touch 1 so 2 becomes the LRU entry.
+        assert_eq!(c.get(key(1)), Some(1));
+        c.insert(key(4), 4);
+        assert_eq!(c.len(), 3);
+        assert!(c.contains(key(1)), "recently-used entry must survive");
+        assert!(!c.contains(key(2)), "LRU entry must be evicted");
+        assert!(c.contains(key(3)));
+        assert!(c.contains(key(4)));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn eviction_order_is_lru_not_fifo() {
+        let c: LruCache<u32> = LruCache::new(2, 1);
+        c.insert(key(1), 1);
+        c.insert(key(2), 2);
+        assert_eq!(c.get(key(1)), Some(1)); // 1 is now newer than 2
+        c.insert(key(3), 3);
+        assert!(c.contains(key(1)));
+        assert!(!c.contains(key(2)));
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let c: LruCache<u32> = LruCache::new(0, 4);
+        c.insert(key(1), 1);
+        assert!(c.is_empty());
+        assert!(c.get(key(1)).is_none());
+    }
+
+    #[test]
+    fn sharding_spreads_but_total_capacity_holds() {
+        let c: LruCache<u32> = LruCache::new(8, 4);
+        for i in 0..64u128 {
+            c.insert(key(i << 64 | i), i as u32); // vary the shard bits
+        }
+        assert!(c.len() <= 8, "len {} exceeds capacity", c.len());
+        assert!(c.stats().evictions >= 56);
+    }
+}

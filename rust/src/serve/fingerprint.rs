@@ -1,0 +1,291 @@
+//! Stable content fingerprints for deployment requests.
+//!
+//! A [`Fingerprint`] identifies the *planning problem*: the graph's
+//! structure (topology, shapes, dtypes, operator attributes) plus every
+//! [`DeployConfig`] field that influences the fuse → solve → allocate →
+//! schedule pipeline. Two requests with equal fingerprints are guaranteed
+//! to produce the same [`crate::coordinator::Deployment`], so the serve
+//! layer can hand out one cached plan for both.
+//!
+//! The hash is a hand-rolled 128-bit FNV-1a over a canonical byte
+//! encoding — deliberately **not** `std::hash` (whose algorithm is
+//! unspecified and, for `RandomState`, randomly seeded per process), so
+//! keys are stable across runs and could be persisted or shared between
+//! replicas. Every variable-length field is length-prefixed and every
+//! section is tagged, so distinct structures cannot collide by
+//! concatenation ambiguity.
+
+use crate::config::DeployConfig;
+use crate::ir::{Graph, Op, TensorKind};
+use crate::soc::SocConfig;
+use crate::tiling::{HomesPolicy, Strategy};
+
+/// 128-bit FNV-1a offset basis.
+const FNV_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+/// 128-bit FNV-1a prime.
+const FNV_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+/// A stable 128-bit content hash of one planning problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u128);
+
+impl Fingerprint {
+    /// Hex rendering (32 lowercase hex digits) used in protocol responses.
+    pub fn hex(&self) -> String {
+        format!("{:032x}", self.0)
+    }
+
+    /// Stable shard index in `0..shards` (for the sharded plan cache).
+    pub fn shard(&self, shards: usize) -> usize {
+        debug_assert!(shards > 0);
+        // The low bits feed the cache's HashMap; use the high bits here so
+        // shard choice and bucket choice are decorrelated.
+        ((self.0 >> 64) as u64 % shards.max(1) as u64) as usize
+    }
+}
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+/// Incremental FNV-1a/128 writer over the canonical encoding.
+struct Fnv {
+    state: u128,
+}
+
+impl Fnv {
+    fn new() -> Self {
+        Self { state: FNV_OFFSET }
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u128;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.bytes(&[v]);
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Bit-exact float encoding (plans are invalidated by *any* cost-model
+    /// change, including ones that only flip a rounding decision).
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Length-prefixed string (used for op/dtype tags, never user names).
+    fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.bytes(s.as_bytes());
+    }
+
+    /// Section tag — keeps differently-ordered encoders from colliding.
+    fn tag(&mut self, t: &str) {
+        self.str(t);
+    }
+}
+
+/// Fingerprint one request: graph structure + the full deploy config.
+///
+/// **Contract** (see also `serve/mod.rs` module docs):
+///
+/// * tensor/node *names are excluded* — alpha-equivalent graphs share a
+///   plan (the cached schedule carries the names of whichever request
+///   solved first; names are cosmetic in reports);
+/// * tensor shapes, dtypes, kinds and the exact topology (input/output
+///   tensor indices per node) are included;
+/// * every operator attribute is included (GEMM layout flags, LayerNorm
+///   epsilon bits, Conv2d geometry);
+/// * the SoC is included *structurally* (memories, compute units, DMA cost
+///   models, clock) but not by preset name — two names for the same
+///   hardware share plans;
+/// * strategy, double-buffering, solver options and the homes policy are
+///   included.
+pub fn fingerprint(graph: &Graph, config: &DeployConfig) -> Fingerprint {
+    let mut h = Fnv::new();
+    h.tag("ftl-plan-v1");
+    hash_graph(&mut h, graph);
+    hash_soc(&mut h, &config.soc);
+    hash_config(&mut h, config);
+    Fingerprint(h.state)
+}
+
+fn hash_graph(h: &mut Fnv, graph: &Graph) {
+    h.tag("graph");
+    h.usize(graph.tensors.len());
+    for t in &graph.tensors {
+        h.u8(match t.kind {
+            TensorKind::Input => 0,
+            TensorKind::Output => 1,
+            TensorKind::Weight => 2,
+            TensorKind::Intermediate => 3,
+        });
+        h.str(t.dtype.name());
+        h.usize(t.shape.len());
+        for &d in &t.shape {
+            h.usize(d);
+        }
+    }
+    h.usize(graph.nodes.len());
+    for n in &graph.nodes {
+        hash_op(h, &n.op);
+        h.usize(n.inputs.len());
+        for &i in &n.inputs {
+            h.usize(i);
+        }
+        h.usize(n.output);
+    }
+}
+
+fn hash_op(h: &mut Fnv, op: &Op) {
+    match op {
+        Op::Gemm { transpose_b, has_bias } => {
+            h.tag("gemm");
+            h.u8(u8::from(*transpose_b));
+            h.u8(u8::from(*has_bias));
+        }
+        Op::Act(kind) => {
+            h.tag("act");
+            h.str(kind.name());
+        }
+        Op::Add => h.tag("add"),
+        Op::LayerNorm { eps } => {
+            h.tag("layernorm");
+            h.u64(eps.to_bits() as u64);
+        }
+        Op::Softmax => h.tag("softmax"),
+        Op::Transpose => h.tag("transpose"),
+        Op::Conv2d { kh, kw, stride, pad } => {
+            h.tag("conv2d");
+            h.usize(*kh);
+            h.usize(*kw);
+            h.usize(*stride);
+            h.usize(*pad);
+        }
+        Op::Requant => h.tag("requant"),
+    }
+}
+
+fn hash_soc(h: &mut Fnv, soc: &SocConfig) {
+    h.tag("soc");
+    // NOTE: soc.name intentionally excluded — structural identity only.
+    h.f64(soc.freq_mhz);
+    for level in [&soc.mem.l1, &soc.mem.l2, &soc.mem.l3] {
+        h.usize(level.capacity);
+        h.usize(level.alignment);
+    }
+    h.usize(soc.cluster.cores);
+    h.f64(soc.cluster.macs_per_core_cycle);
+    h.f64(soc.cluster.gemm_efficiency);
+    h.f64(soc.cluster.eltwise_per_core_cycle);
+    h.u64(soc.cluster.kernel_setup_cycles);
+    match &soc.npu {
+        None => h.u8(0),
+        Some(npu) => {
+            h.u8(1);
+            h.f64(npu.macs_per_cycle);
+            h.f64(npu.efficiency);
+            h.u64(npu.job_setup_cycles);
+        }
+    }
+    for dma in [&soc.dma_cluster, &soc.dma_io] {
+        h.u64(dma.setup_cycles);
+        h.u64(dma.per_row_cycles);
+        h.f64(dma.bytes_per_cycle);
+    }
+}
+
+fn hash_config(h: &mut Fnv, config: &DeployConfig) {
+    h.tag("config");
+    h.u8(match config.strategy {
+        Strategy::LayerPerLayer => 0,
+        Strategy::Ftl => 1,
+    });
+    h.u8(u8::from(config.double_buffer));
+    h.u8(u8::from(config.solver.use_perf_constraints));
+    h.usize(config.solver.max_candidates);
+    h.f64(config.solver.l1_budget_fraction);
+    h.u8(match config.homes {
+        HomesPolicy::Resident => 0,
+        HomesPolicy::Lifetime => 1,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiments::vit_mlp_stage;
+
+    fn cfg(soc: &str, strategy: Strategy) -> DeployConfig {
+        DeployConfig::preset(soc, strategy).unwrap()
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let g = vit_mlp_stage(16, 24, 48);
+        let c = cfg("siracusa", Strategy::Ftl);
+        assert_eq!(fingerprint(&g, &c), fingerprint(&g, &c));
+        // A freshly-built structurally identical graph hashes identically.
+        let g2 = vit_mlp_stage(16, 24, 48);
+        assert_eq!(fingerprint(&g, &c), fingerprint(&g2, &c));
+    }
+
+    #[test]
+    fn names_are_cosmetic() {
+        let g = vit_mlp_stage(16, 24, 48);
+        let mut renamed = g.clone();
+        for t in &mut renamed.tensors {
+            t.name = format!("renamed_{}", t.name);
+        }
+        for n in &mut renamed.nodes {
+            n.name = format!("renamed_{}", n.name);
+        }
+        let c = cfg("siracusa", Strategy::Ftl);
+        assert_eq!(fingerprint(&g, &c), fingerprint(&renamed, &c));
+    }
+
+    #[test]
+    fn discriminates_shapes_and_config() {
+        let g = vit_mlp_stage(16, 24, 48);
+        let c = cfg("siracusa", Strategy::Ftl);
+        let base = fingerprint(&g, &c);
+
+        let bigger = vit_mlp_stage(16, 24, 64);
+        assert_ne!(base, fingerprint(&bigger, &c));
+
+        assert_ne!(base, fingerprint(&g, &cfg("siracusa", Strategy::LayerPerLayer)));
+        assert_ne!(base, fingerprint(&g, &cfg("cluster-only", Strategy::Ftl)));
+
+        let mut dbuf = cfg("siracusa", Strategy::Ftl);
+        dbuf.double_buffer = true;
+        assert_ne!(base, fingerprint(&g, &dbuf));
+
+        let mut solver = cfg("siracusa", Strategy::Ftl);
+        solver.solver.max_candidates += 1;
+        assert_ne!(base, fingerprint(&g, &solver));
+
+        let mut homes = cfg("siracusa", Strategy::Ftl);
+        homes.homes = HomesPolicy::Lifetime;
+        assert_ne!(base, fingerprint(&g, &homes));
+    }
+
+    #[test]
+    fn hex_is_32_digits() {
+        let g = vit_mlp_stage(8, 8, 16);
+        let f = fingerprint(&g, &cfg("cluster-only", Strategy::Ftl));
+        assert_eq!(f.hex().len(), 32);
+        assert_eq!(f.to_string(), f.hex());
+    }
+}

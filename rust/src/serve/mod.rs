@@ -1,0 +1,62 @@
+//! `ftl::serve` — the plan-cache + single-flight deployment service layer.
+//!
+//! The FTL pipeline (fuse → branch-&-bound solve → allocate → schedule)
+//! is **deterministic** for a given (graph, SoC, strategy, config): a
+//! compiled [`crate::coordinator::Deployment`] is a pure function of its
+//! request. This layer exploits that to serve heavy traffic: solve each
+//! distinct planning problem once, then hand the shared plan to every
+//! structurally identical request.
+//!
+//! ```text
+//!            request (graph, DeployConfig)
+//!                      │
+//!            [fingerprint]  stable 128-bit content hash
+//!                      │
+//!            [cache]  sharded LRU of Arc<Deployment> ── hit ──► reply
+//!                      │ miss
+//!            [singleflight]  concurrent misses coalesce; one leader
+//!                      │ solves, followers wait on its result
+//!            coordinator::Deployer::plan()  (the expensive solve)
+//!                      │
+//!            cache insert ──► reply (simulation re-runs per request)
+//! ```
+//!
+//! # Cache-key contract
+//!
+//! Two requests share a plan **iff** their [`Fingerprint`]s are equal.
+//! The fingerprint covers, exactly:
+//!
+//! * **Graph structure** — tensor shapes, dtypes and kinds; node
+//!   topology (which tensor indices each node reads/writes); and every
+//!   operator attribute (GEMM layout flags, LayerNorm epsilon bits,
+//!   Conv2d geometry). Tensor/node **names are excluded**: renaming
+//!   layers does not miss the cache. The cached schedule therefore
+//!   carries the names of whichever request solved first — names are
+//!   cosmetic in reports, never semantic.
+//! * **SoC structure** — memory capacities/alignments, cluster and NPU
+//!   throughput models, DMA cost models, clock. The preset *name* is
+//!   excluded; aliases of the same hardware share plans.
+//! * **Planning config** — strategy, double-buffering, all solver
+//!   options (bit-exact for floats) and the homes policy.
+//!
+//! Anything that can change the solver's output must be (and is) part of
+//! the key; anything cosmetic must not be. When adding a field to
+//! [`crate::config::DeployConfig`] or a new [`crate::ir::Op`] attribute,
+//! extend [`fingerprint`] in the same change — a missed field silently
+//! serves stale plans.
+//!
+//! Served plans are shared as `Arc<Deployment>` — the cache never clones
+//! a plan, and callers must not mutate one.
+
+mod cache;
+mod fingerprint;
+mod service;
+mod singleflight;
+
+pub use cache::{LruCache, PlanCache};
+pub use fingerprint::{fingerprint, Fingerprint};
+pub use service::{
+    handle_line, resolve_workload, AsyncReply, PlanOutcome, PlanService, ServeOptions, ServeReply,
+    ServeStats,
+};
+pub use singleflight::{Role, SingleFlight};

@@ -1,0 +1,446 @@
+//! [`PlanService`] — the deployment service facade.
+//!
+//! Ties the serve layer together: fingerprint the request, consult the
+//! sharded [`PlanCache`], coalesce concurrent misses through
+//! [`SingleFlight`], and only then run the coordinator's planning
+//! pipeline. Exposes a synchronous API (`plan` / `deploy`) for
+//! request-response callers and a fire-and-forget queue (`submit` /
+//! `submit_with`) drained by a worker-thread pool for cache warming and
+//! async callers. All counters surface in a JSON stats snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::DeployConfig;
+use crate::coordinator::{experiments, DeployReport, Deployer, Deployment};
+use crate::ir::builder::vit_mlp_preset;
+use crate::ir::Graph;
+use crate::util::json::Json;
+
+use super::cache::PlanCache;
+use super::fingerprint::{fingerprint, Fingerprint};
+use super::singleflight::SingleFlight;
+
+/// Tunables for a [`PlanService`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Max cached plans (total across shards).
+    pub cache_capacity: usize,
+    /// Number of cache lock shards.
+    pub cache_shards: usize,
+    /// Worker threads draining the fire-and-forget queue.
+    pub workers: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { cache_capacity: 128, cache_shards: 8, workers: 4 }
+    }
+}
+
+/// Outcome of the plan-cache path.
+#[derive(Clone)]
+pub struct PlanOutcome {
+    /// The (shared) compiled plan.
+    pub plan: Arc<Deployment>,
+    /// The request's cache key.
+    pub fingerprint: Fingerprint,
+    /// True if the plan came from the cache without consulting the solver
+    /// (including coalescing onto a concurrent solve).
+    pub cached: bool,
+}
+
+/// Full response for one deployment request.
+pub struct ServeReply {
+    /// The (shared) compiled plan.
+    pub plan: Arc<Deployment>,
+    /// Plan + simulation report (rebuilt per request — simulation is cheap
+    /// next to the solve and carries the per-request workload name).
+    pub report: DeployReport,
+    /// The request's cache key.
+    pub fingerprint: Fingerprint,
+    /// Whether the plan was served from the cache.
+    pub cached: bool,
+}
+
+/// Reply sent back on the channel for queued ([`PlanService::submit_with`])
+/// requests: the workload name plus the report or error.
+pub type AsyncReply = (String, Result<DeployReport>);
+
+struct Job {
+    workload: String,
+    graph: Graph,
+    config: DeployConfig,
+    reply: Option<Sender<AsyncReply>>,
+}
+
+/// Shared state between the facade and the worker threads.
+struct ServiceInner {
+    cache: PlanCache,
+    flight: SingleFlight<Arc<Deployment>>,
+    solves: AtomicU64,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    workers: usize,
+}
+
+impl ServiceInner {
+    /// The cache + single-flight path around the solver.
+    fn plan(&self, graph: &Graph, config: &DeployConfig) -> Result<PlanOutcome> {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let key = fingerprint(graph, config);
+        if let Some(plan) = self.cache.get(key) {
+            return Ok(PlanOutcome { plan, fingerprint: key, cached: true });
+        }
+        // `cached` must reflect whether *this request's* plan came out of
+        // the solver, not the flight role: a leader whose double-check
+        // below hits the cache did not solve either.
+        let solved_here = std::cell::Cell::new(false);
+        let (result, _role) = self.flight.run(key.0, || {
+            // Double-check inside the flight: this caller may have raced a
+            // leader that finished (and populated the cache) between our
+            // miss and the flight acquisition.
+            if let Some(plan) = self.cache.get(key) {
+                return Ok(plan);
+            }
+            solved_here.set(true);
+            self.solves.fetch_add(1, Ordering::Relaxed);
+            let deployment = Deployer::new(graph.clone(), config.clone()).plan()?;
+            let plan = Arc::new(deployment);
+            // Publish before the flight closes so no request can observe
+            // "no flight and no cache entry" for an already-solved key.
+            self.cache.insert(key, plan.clone());
+            Ok(plan)
+        });
+        let plan = match result {
+            Ok(plan) => plan,
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        Ok(PlanOutcome { plan, fingerprint: key, cached: !solved_here.get() })
+    }
+
+    /// Plan (cached) + simulate + assemble the standard report.
+    fn deploy(&self, workload: &str, graph: &Graph, config: &DeployConfig) -> Result<ServeReply> {
+        let outcome = self.plan(graph, config)?;
+        let report = match outcome.plan.report(workload, config) {
+            Ok(report) => report,
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                return Err(e).with_context(|| format!("simulating cached plan for '{workload}'"));
+            }
+        };
+        Ok(ServeReply { plan: outcome.plan, report, fingerprint: outcome.fingerprint, cached: outcome.cached })
+    }
+}
+
+/// The deployment service (see module docs).
+pub struct PlanService {
+    inner: Arc<ServiceInner>,
+    queue: Mutex<Option<Sender<Job>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl PlanService {
+    /// Start a service with the given tunables (spawns the worker pool).
+    pub fn new(opts: ServeOptions) -> Self {
+        let inner = Arc::new(ServiceInner {
+            cache: PlanCache::new(opts.cache_capacity, opts.cache_shards),
+            flight: SingleFlight::new(),
+            solves: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            workers: opts.workers,
+        });
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::new();
+        for i in 0..opts.workers.max(1) {
+            let rx: Arc<Mutex<Receiver<Job>>> = rx.clone();
+            let inner = inner.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ftl-serve-{i}"))
+                .spawn(move || loop {
+                    // Holding the lock while blocked in recv() is the
+                    // standard std-mpsc work-queue pattern: exactly one
+                    // idle worker waits in recv, the rest wait on the
+                    // mutex, and the lock drops before the job runs.
+                    let job = rx.lock().expect("serve queue poisoned").recv();
+                    let Ok(job) = job else { break };
+                    // Panic isolation: a panicking solve must not kill the
+                    // worker (with a small pool, one bad job would
+                    // otherwise silently stop the queue forever while
+                    // submit() keeps succeeding).
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        inner.deploy(&job.workload, &job.graph, &job.config).map(|r| r.report)
+                    }))
+                    .unwrap_or_else(|_| {
+                        Err(anyhow!("serve worker panicked while deploying '{}'", job.workload))
+                    });
+                    if let Some(reply) = job.reply {
+                        reply.send((job.workload, result)).ok();
+                    }
+                })
+                .expect("spawn serve worker");
+            handles.push(handle);
+        }
+        Self { inner, queue: Mutex::new(Some(tx)), workers: Mutex::new(handles) }
+    }
+
+    /// Service with default tunables.
+    pub fn with_defaults() -> Self {
+        Self::new(ServeOptions::default())
+    }
+
+    /// Plan-only path (no simulation): fingerprint → cache → single-flight
+    /// → solve. Warm keys return the shared `Arc<Deployment>` without
+    /// touching the solver.
+    pub fn plan(&self, graph: &Graph, config: &DeployConfig) -> Result<PlanOutcome> {
+        self.inner.plan(graph, config)
+    }
+
+    /// Synchronous request-response deployment: cached plan + fresh
+    /// simulation report.
+    pub fn deploy(&self, workload: &str, graph: &Graph, config: &DeployConfig) -> Result<ServeReply> {
+        self.inner.deploy(workload, graph, config)
+    }
+
+    /// Fire-and-forget: queue the request for the worker pool (used to
+    /// pre-warm the cache). Errors only if the service is shut down.
+    pub fn submit(&self, workload: impl Into<String>, graph: Graph, config: DeployConfig) -> Result<()> {
+        self.enqueue(Job { workload: workload.into(), graph, config, reply: None })
+    }
+
+    /// Queue a request; the worker pool sends `(workload, report)` back on
+    /// `reply` when done.
+    pub fn submit_with(
+        &self,
+        workload: impl Into<String>,
+        graph: Graph,
+        config: DeployConfig,
+        reply: Sender<AsyncReply>,
+    ) -> Result<()> {
+        self.enqueue(Job { workload: workload.into(), graph, config, reply: Some(reply) })
+    }
+
+    fn enqueue(&self, job: Job) -> Result<()> {
+        let queue = self.queue.lock().expect("serve queue poisoned");
+        match queue.as_ref() {
+            Some(tx) => tx.send(job).map_err(|_| anyhow!("serve worker pool is shut down")),
+            None => Err(anyhow!("serve worker pool is shut down")),
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            cache: self.inner.cache.stats(),
+            solves: self.inner.solves.load(Ordering::Relaxed),
+            requests: self.inner.requests.load(Ordering::Relaxed),
+            errors: self.inner.errors.load(Ordering::Relaxed),
+            singleflight_leads: self.inner.flight.leads(),
+            singleflight_waits: self.inner.flight.waits(),
+            workers: self.inner.workers,
+        }
+    }
+
+    /// Machine-readable stats snapshot (the protocol's `STATS` response).
+    pub fn stats_json(&self) -> Json {
+        self.stats().to_json()
+    }
+
+    /// Drain the queue and stop the worker pool (also runs on drop).
+    pub fn shutdown(&self) {
+        if let Some(tx) = self.queue.lock().expect("serve queue poisoned").take() {
+            drop(tx);
+        }
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.workers.lock().expect("serve workers poisoned"));
+        for h in handles {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for PlanService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Aggregated service counters.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeStats {
+    /// Plan-cache counters.
+    pub cache: crate::metrics::CacheStats,
+    /// Actual branch-&-bound solves performed.
+    pub solves: u64,
+    /// Plan requests received (sync + queued).
+    pub requests: u64,
+    /// Requests that returned an error.
+    pub errors: u64,
+    /// Single-flight leaders (computations run).
+    pub singleflight_leads: u64,
+    /// Single-flight followers (requests coalesced onto another solve).
+    pub singleflight_waits: u64,
+    /// Worker-pool size.
+    pub workers: usize,
+}
+
+impl ServeStats {
+    /// JSON rendering.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("plan_cache", self.cache.to_json()),
+            ("solves", Json::int(self.solves as usize)),
+            ("requests", Json::int(self.requests as usize)),
+            ("errors", Json::int(self.errors as usize)),
+            ("singleflight_leads", Json::int(self.singleflight_leads as usize)),
+            ("singleflight_waits", Json::int(self.singleflight_waits as usize)),
+            ("workers", Json::int(self.workers)),
+        ])
+    }
+}
+
+/// Resolve a served workload name to a graph — the vocabulary of the line
+/// protocol spoken by `ftl serve` and `examples/deploy_server.rs`.
+pub fn resolve_workload(name: &str) -> Result<Graph> {
+    match name {
+        "vit-base-stage" => Ok(experiments::vit_mlp_stage(197, 768, 3072)),
+        "vit-tiny-stage" => Ok(experiments::vit_mlp_stage(197, 192, 768)),
+        other => vit_mlp_preset(other).ok_or_else(|| {
+            anyhow!("unknown workload '{other}' (try vit-base-stage, vit-tiny-stage, vit-tiny, vit-small, vit-base, vit-large)")
+        }),
+    }
+}
+
+/// Handle one line of the serve protocol — the single implementation
+/// behind both `ftl serve` and `examples/deploy_server.rs`:
+///
+/// ```text
+/// DEPLOY <workload> <soc> <strategy>   -> deploy report JSON
+///                                         (+ "cached", "fingerprint")
+/// STATS                                -> service counter snapshot
+/// PING                                 -> {"pong": true}
+/// ```
+///
+/// Errors never escape: they come back as one `{"error": ...}` object so
+/// a bad request can't kill a connection handler.
+pub fn handle_line(service: &PlanService, line: &str) -> Json {
+    match handle_request(service, line) {
+        Ok(j) => j,
+        Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+    }
+}
+
+fn handle_request(service: &PlanService, line: &str) -> Result<Json> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        ["DEPLOY", workload, soc, strategy] => {
+            let strategy = crate::tiling::Strategy::parse(strategy)
+                .ok_or_else(|| anyhow!("bad strategy '{strategy}'"))?;
+            let graph = resolve_workload(workload)?;
+            let cfg = DeployConfig::preset(soc, strategy)?;
+            let reply = service.deploy(workload, &graph, &cfg)?;
+            let mut j = reply.report.to_json(&cfg.soc);
+            if let Json::Obj(m) = &mut j {
+                m.insert("cached".into(), Json::Bool(reply.cached));
+                m.insert("fingerprint".into(), Json::str(reply.fingerprint.hex()));
+            }
+            Ok(j)
+        }
+        ["STATS"] => Ok(service.stats_json()),
+        ["PING"] => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
+        _ => bail!("bad request: '{line}' (expected: DEPLOY <workload> <soc> <strategy> | STATS | PING)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tiling::Strategy;
+
+    fn small() -> (Graph, DeployConfig) {
+        (experiments::vit_mlp_stage(16, 24, 48), DeployConfig::preset("cluster-only", Strategy::Ftl).unwrap())
+    }
+
+    #[test]
+    fn warm_hit_skips_solver_and_shares_plan() {
+        let svc = PlanService::new(ServeOptions { cache_capacity: 8, cache_shards: 2, workers: 1 });
+        let (g, c) = small();
+        let first = svc.plan(&g, &c).unwrap();
+        assert!(!first.cached);
+        let second = svc.plan(&g, &c).unwrap();
+        assert!(second.cached);
+        assert!(Arc::ptr_eq(&first.plan, &second.plan), "cache must share, not copy");
+        let stats = svc.stats();
+        assert_eq!(stats.solves, 1);
+        assert_eq!(stats.cache.hits, 1);
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn deploy_reports_match_uncached_pipeline() {
+        let svc = PlanService::with_defaults();
+        let (g, c) = small();
+        let reply = svc.deploy("unit", &g, &c).unwrap();
+        let (_, direct) = Deployer::new(g.clone(), c.clone()).with_workload_name("unit").deploy().unwrap();
+        assert_eq!(reply.report.sim.total_cycles, direct.sim.total_cycles);
+        assert_eq!(reply.report.phases, direct.phases);
+        assert_eq!(reply.report.workload, "unit");
+    }
+
+    #[test]
+    fn queued_requests_reply_on_channel() {
+        let svc = PlanService::new(ServeOptions { cache_capacity: 8, cache_shards: 2, workers: 2 });
+        let (g, c) = small();
+        let (tx, rx) = mpsc::channel();
+        svc.submit_with("queued", g.clone(), c.clone(), tx.clone()).unwrap();
+        svc.submit_with("queued", g, c, tx).unwrap();
+        let mut ok = 0;
+        for _ in 0..2 {
+            let (name, res) = rx.recv().unwrap();
+            assert_eq!(name, "queued");
+            res.unwrap();
+            ok += 1;
+        }
+        assert_eq!(ok, 2);
+        assert_eq!(svc.stats().solves, 1, "identical queued requests share one solve");
+    }
+
+    #[test]
+    fn shutdown_rejects_new_work() {
+        let svc = PlanService::new(ServeOptions { cache_capacity: 2, cache_shards: 1, workers: 1 });
+        svc.shutdown();
+        let (g, c) = small();
+        assert!(svc.submit("late", g, c).is_err());
+    }
+
+    #[test]
+    fn resolve_workload_names() {
+        assert!(resolve_workload("vit-base-stage").is_ok());
+        assert!(resolve_workload("vit-tiny-stage").is_ok());
+        assert!(resolve_workload("no-such-net").is_err());
+    }
+
+    #[test]
+    fn protocol_errors_become_json_not_panics() {
+        let svc = PlanService::new(ServeOptions { cache_capacity: 2, cache_shards: 1, workers: 1 });
+        for bad in ["", "DEPLOY", "DEPLOY x", "DEPLOY a b c d e", "NOPE x y z",
+                    "DEPLOY no-such-net siracusa ftl", "DEPLOY vit-tiny-stage no-such-soc ftl",
+                    "DEPLOY vit-tiny-stage siracusa no-such-strategy"] {
+            let j = handle_line(&svc, bad);
+            assert!(j.get_opt("error").is_some(), "'{bad}' must yield an error object, got {}", j.to_string());
+        }
+        let pong = handle_line(&svc, "PING");
+        assert!(pong.get("pong").unwrap().as_bool().unwrap());
+        let stats = handle_line(&svc, "STATS");
+        assert_eq!(stats.get("solves").unwrap().as_usize().unwrap(), 0);
+    }
+}

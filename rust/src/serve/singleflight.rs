@@ -1,0 +1,288 @@
+//! Single-flight request coalescing.
+//!
+//! The branch-&-bound solve is the expensive step of the pipeline; when N
+//! identical requests arrive concurrently (the common pattern behind a
+//! load balancer), only the first — the *leader* — runs the computation.
+//! The rest park on a condvar and receive a clone of the leader's result,
+//! so the solver runs **exactly once per key** regardless of concurrency.
+//!
+//! Values must be `Clone` (the serve layer uses `Arc<Deployment>`, so a
+//! "clone" is a refcount bump). Errors don't generally implement `Clone`,
+//! so followers receive the leader's failure re-rendered from its full
+//! context chain. The in-flight table only holds keys while a leader is
+//! computing; completed flights are removed immediately after the result
+//! is published, and the caller is expected to make the result visible
+//! (e.g. insert into the plan cache) *inside* the leader closure so no
+//! window exists where neither the cache nor the flight table covers the
+//! key.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, Result};
+
+/// One in-flight computation: the slot the leader fills + the condvar
+/// followers wait on.
+struct Call<T> {
+    slot: Mutex<Option<Result<T, String>>>,
+    done: Condvar,
+}
+
+impl<T> Call<T> {
+    fn new() -> Self {
+        Self { slot: Mutex::new(None), done: Condvar::new() }
+    }
+}
+
+/// Who performed the work for a [`SingleFlight::run`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// This caller executed the closure.
+    Leader,
+    /// This caller waited and received the leader's result.
+    Follower,
+}
+
+/// Coalesces concurrent computations by key (see module docs).
+pub struct SingleFlight<T: Clone> {
+    calls: Mutex<HashMap<u128, Arc<Call<T>>>>,
+    leads: AtomicU64,
+    waits: AtomicU64,
+}
+
+/// Leader-side cleanup that also runs on unwind: if the leader's closure
+/// panics before publishing, followers would otherwise block forever on
+/// the condvar and every future request for the key would join the dead
+/// flight. On drop this publishes a failure into any still-empty slot,
+/// wakes the followers, and removes the flight-table entry. Locks are
+/// taken with `if let Ok(..)` — never `expect` — because this drop can
+/// run mid-panic and a second panic would abort the process.
+struct LeaderGuard<'a, T: Clone> {
+    flight: &'a SingleFlight<T>,
+    call: Arc<Call<T>>,
+    key: u128,
+}
+
+impl<T: Clone> Drop for LeaderGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Ok(mut slot) = self.call.slot.lock() {
+            if slot.is_none() {
+                *slot = Some(Err("leader panicked before publishing a result".to_string()));
+            }
+        }
+        self.call.done.notify_all();
+        if let Ok(mut calls) = self.flight.calls.lock() {
+            calls.remove(&self.key);
+        }
+    }
+}
+
+impl<T: Clone> Default for SingleFlight<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Clone> SingleFlight<T> {
+    /// Empty flight table.
+    pub fn new() -> Self {
+        Self { calls: Mutex::new(HashMap::new()), leads: AtomicU64::new(0), waits: AtomicU64::new(0) }
+    }
+
+    /// Run `f` for `key`, or wait for the concurrent leader already
+    /// running it. Returns the result plus this caller's [`Role`].
+    pub fn run(&self, key: u128, f: impl FnOnce() -> Result<T>) -> (Result<T>, Role) {
+        let (call, role) = {
+            let mut calls = self.calls.lock().expect("single-flight table poisoned");
+            match calls.get(&key) {
+                Some(existing) => (existing.clone(), Role::Follower),
+                None => {
+                    let fresh = Arc::new(Call::new());
+                    calls.insert(key, fresh.clone());
+                    (fresh, Role::Leader)
+                }
+            }
+        };
+
+        match role {
+            Role::Leader => {
+                self.leads.fetch_add(1, Ordering::Relaxed);
+                // The guard publishes + notifies + removes on drop — on
+                // the normal path *after* the result is stored below, and
+                // on unwind (publishing a failure) if `f` panics.
+                let guard = LeaderGuard { flight: self, call: call.clone(), key };
+                let result = f();
+                let shared: Result<T, String> = match &result {
+                    Ok(v) => Ok(v.clone()),
+                    // `{:#}` keeps the whole context chain for followers.
+                    Err(e) => Err(format!("{e:#}")),
+                };
+                {
+                    let mut slot = call.slot.lock().expect("single-flight slot poisoned");
+                    *slot = Some(shared);
+                }
+                // Drop order: publish happened above, so the guard's drop
+                // notifies followers and removes the flight entry — a
+                // follower that grabbed the call just before removal
+                // finds the slot already filled.
+                drop(guard);
+                (result, Role::Leader)
+            }
+            Role::Follower => {
+                self.waits.fetch_add(1, Ordering::Relaxed);
+                let mut slot = call.slot.lock().expect("single-flight slot poisoned");
+                while slot.is_none() {
+                    slot = call.done.wait(slot).expect("single-flight wait poisoned");
+                }
+                let shared = slot.clone().expect("slot filled before notify");
+                (shared.map_err(|e| anyhow!("single-flight leader failed: {e}")), Role::Follower)
+            }
+        }
+    }
+
+    /// How many callers executed a closure (led a flight).
+    pub fn leads(&self) -> u64 {
+        self.leads.load(Ordering::Relaxed)
+    }
+
+    /// How many callers coalesced onto another caller's flight.
+    pub fn waits(&self) -> u64 {
+        self.waits.load(Ordering::Relaxed)
+    }
+
+    /// Number of keys currently being computed.
+    pub fn in_flight(&self) -> usize {
+        self.calls.lock().expect("single-flight table poisoned").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn single_caller_leads() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        let (res, role) = sf.run(1, || Ok(7));
+        assert_eq!(res.unwrap(), 7);
+        assert_eq!(role, Role::Leader);
+        assert_eq!(sf.leads(), 1);
+        assert_eq!(sf.waits(), 0);
+        assert_eq!(sf.in_flight(), 0, "completed flights must be removed");
+    }
+
+    #[test]
+    fn concurrent_callers_coalesce_to_one_execution() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        let executions = AtomicUsize::new(0);
+        let leaders = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let (res, role) = sf.run(42, || {
+                        executions.fetch_add(1, Ordering::SeqCst);
+                        // Hold the flight open until every other thread has
+                        // registered as a follower (bounded, so a broken
+                        // implementation fails instead of hanging).
+                        let start = std::time::Instant::now();
+                        while sf.waits() < 7 && start.elapsed() < Duration::from_secs(10) {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Ok(99)
+                    });
+                    assert_eq!(res.unwrap(), 99);
+                    if role == Role::Leader {
+                        leaders.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        assert_eq!(executions.load(Ordering::SeqCst), 1, "exactly one solve per key");
+        assert_eq!(leaders.load(Ordering::SeqCst), 1);
+        assert_eq!(sf.leads(), 1);
+        assert_eq!(sf.waits(), 7);
+    }
+
+    #[test]
+    fn distinct_keys_run_independently() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        let (a, _) = sf.run(1, || Ok(1));
+        let (b, _) = sf.run(2, || Ok(2));
+        assert_eq!(a.unwrap() + b.unwrap(), 3);
+        assert_eq!(sf.leads(), 2);
+    }
+
+    #[test]
+    fn leader_error_propagates_to_followers() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let (res, _) = sf.run(7, || {
+                        std::thread::sleep(Duration::from_millis(50));
+                        Err(anyhow::Error::msg("boom").context("solving"))
+                    });
+                    let msg = format!("{:#}", res.unwrap_err());
+                    assert!(msg.contains("boom"), "error chain lost: {msg}");
+                });
+            }
+        });
+        assert_eq!(sf.leads() + sf.waits(), 4);
+    }
+
+    #[test]
+    fn leader_panic_unblocks_follower_and_clears_key() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        let follower_errs = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for _ in 0..2 {
+                handles.push(s.spawn(|| {
+                    let (res, role) = sf.run(11, || {
+                        // Only the leader runs this: wait for the follower
+                        // to park, then die without publishing.
+                        let start = std::time::Instant::now();
+                        while sf.waits() < 1 && start.elapsed() < Duration::from_secs(10) {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        panic!("leader dies mid-solve");
+                    });
+                    // Only the follower reaches here.
+                    assert_eq!(role, Role::Follower);
+                    let msg = format!("{}", res.unwrap_err());
+                    assert!(msg.contains("panicked"), "follower must see the panic: {msg}");
+                    follower_errs.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            // One handle joins with Err (the panicking leader) — swallow it
+            // so the scope doesn't re-panic.
+            for h in handles {
+                let _ = h.join();
+            }
+        });
+        assert_eq!(follower_errs.load(Ordering::SeqCst), 1);
+        assert_eq!(sf.in_flight(), 0, "panicked flight must be removed");
+        // The key is immediately reusable.
+        let (res, role) = sf.run(11, || Ok(5));
+        assert_eq!(res.unwrap(), 5);
+        assert_eq!(role, Role::Leader);
+    }
+
+    #[test]
+    fn key_reusable_after_completion() {
+        let sf: SingleFlight<u32> = SingleFlight::new();
+        let count = AtomicUsize::new(0);
+        for _ in 0..3 {
+            let (res, role) = sf.run(5, || {
+                count.fetch_add(1, Ordering::SeqCst);
+                Ok(1)
+            });
+            assert_eq!(res.unwrap(), 1);
+            assert_eq!(role, Role::Leader, "sequential callers each lead a fresh flight");
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+}

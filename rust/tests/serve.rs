@@ -1,0 +1,200 @@
+//! Integration tests for the `ftl::serve` layer: fingerprint contract,
+//! LRU eviction, single-flight coalescing under real concurrency, plan
+//! sharing, and the `ftl serve --self-test` CLI path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::experiments;
+use ftl::serve::{fingerprint, Fingerprint, LruCache, PlanService, ServeOptions, SingleFlight};
+use ftl::tiling::Strategy;
+use ftl::Graph;
+
+fn small_graph() -> Graph {
+    experiments::vit_mlp_stage(16, 24, 48)
+}
+
+fn cfg(soc: &str, strategy: Strategy) -> DeployConfig {
+    DeployConfig::preset(soc, strategy).unwrap()
+}
+
+// ---------------------------------------------------------------- fingerprint
+
+#[test]
+fn fingerprint_stable_across_rebuilds_and_runs_of_the_encoder() {
+    let c = cfg("siracusa", Strategy::Ftl);
+    let a = fingerprint(&small_graph(), &c);
+    let b = fingerprint(&small_graph(), &c);
+    assert_eq!(a, b, "structurally identical requests must share a key");
+}
+
+#[test]
+fn fingerprint_ignores_names_but_not_structure() {
+    let c = cfg("siracusa", Strategy::Ftl);
+    let g = small_graph();
+    let base = fingerprint(&g, &c);
+
+    // Renaming every tensor/node is cosmetic: same key.
+    let mut renamed = g.clone();
+    for t in &mut renamed.tensors {
+        t.name.push_str("_x");
+    }
+    for n in &mut renamed.nodes {
+        n.name.push_str("_x");
+    }
+    assert_eq!(base, fingerprint(&renamed, &c));
+
+    // Any shape change is structural: new key.
+    assert_ne!(base, fingerprint(&experiments::vit_mlp_stage(16, 24, 64), &c));
+    assert_ne!(base, fingerprint(&experiments::vit_mlp_stage(17, 24, 48), &c));
+}
+
+#[test]
+fn fingerprint_discriminates_every_config_knob() {
+    let g = small_graph();
+    let base = fingerprint(&g, &cfg("siracusa", Strategy::Ftl));
+    let mut keys = vec![base];
+
+    keys.push(fingerprint(&g, &cfg("siracusa", Strategy::LayerPerLayer)));
+    keys.push(fingerprint(&g, &cfg("cluster-only", Strategy::Ftl)));
+
+    let mut dbuf = cfg("siracusa", Strategy::Ftl);
+    dbuf.double_buffer = true;
+    keys.push(fingerprint(&g, &dbuf));
+
+    let mut perf = cfg("siracusa", Strategy::Ftl);
+    perf.solver.use_perf_constraints = false;
+    keys.push(fingerprint(&g, &perf));
+
+    let mut budget = cfg("siracusa", Strategy::Ftl);
+    budget.solver.l1_budget_fraction = 0.5;
+    keys.push(fingerprint(&g, &budget));
+
+    let mut homes = cfg("siracusa", Strategy::Ftl);
+    homes.homes = ftl::tiling::HomesPolicy::Lifetime;
+    keys.push(fingerprint(&g, &homes));
+
+    let distinct: std::collections::BTreeSet<u128> = keys.iter().map(|k| k.0).collect();
+    assert_eq!(distinct.len(), keys.len(), "every planning knob must produce a distinct key");
+}
+
+// ----------------------------------------------------------------------- LRU
+
+#[test]
+fn lru_evicts_in_recency_order() {
+    let cache: LruCache<&'static str> = LruCache::new(2, 1);
+    cache.insert(Fingerprint(1), "one");
+    cache.insert(Fingerprint(2), "two");
+    assert_eq!(cache.get(Fingerprint(1)), Some("one")); // 1 newer than 2
+    cache.insert(Fingerprint(3), "three");
+    assert!(cache.contains(Fingerprint(1)));
+    assert!(!cache.contains(Fingerprint(2)), "least-recently-used entry must go first");
+    assert!(cache.contains(Fingerprint(3)));
+    let stats = cache.stats();
+    assert_eq!(stats.evictions, 1);
+    assert_eq!(stats.entries, 2);
+}
+
+#[test]
+fn service_eviction_forces_resolve() {
+    // Capacity 1: alternating keys always evict each other.
+    let svc = PlanService::new(ServeOptions { cache_capacity: 1, cache_shards: 1, workers: 1 });
+    let g = small_graph();
+    let a = cfg("cluster-only", Strategy::Ftl);
+    let b = cfg("cluster-only", Strategy::LayerPerLayer);
+    svc.plan(&g, &a).unwrap();
+    svc.plan(&g, &b).unwrap(); // evicts a
+    svc.plan(&g, &a).unwrap(); // must re-solve
+    let stats = svc.stats();
+    assert_eq!(stats.solves, 3);
+    assert!(stats.cache.evictions >= 2);
+}
+
+// -------------------------------------------------------------- single-flight
+
+#[test]
+fn n_concurrent_identical_requests_one_solve() {
+    let svc = PlanService::new(ServeOptions { cache_capacity: 16, cache_shards: 4, workers: 1 });
+    let g = small_graph();
+    let c = cfg("cluster-only", Strategy::Ftl);
+    const N: usize = 8;
+    let cycles: Vec<u64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..N)
+            .map(|_| s.spawn(|| svc.deploy("t", &g, &c).unwrap().report.sim.total_cycles))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(cycles.windows(2).all(|w| w[0] == w[1]), "all coalesced replies must agree");
+    let stats = svc.stats();
+    assert_eq!(stats.solves, 1, "N concurrent identical requests must perform exactly 1 solve");
+    assert_eq!(stats.requests, N as u64);
+}
+
+#[test]
+fn singleflight_counts_leader_and_followers() {
+    let sf: SingleFlight<usize> = SingleFlight::new();
+    let runs = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..6 {
+            s.spawn(|| {
+                let (res, _) = sf.run(9, || {
+                    runs.fetch_add(1, Ordering::SeqCst);
+                    let start = std::time::Instant::now();
+                    while sf.waits() < 5 && start.elapsed() < std::time::Duration::from_secs(10) {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    Ok(7)
+                });
+                assert_eq!(res.unwrap(), 7);
+            });
+        }
+    });
+    assert_eq!(runs.load(Ordering::SeqCst), 1);
+    assert_eq!(sf.leads(), 1);
+    assert_eq!(sf.waits(), 5);
+}
+
+// ------------------------------------------------------------- plan sharing
+
+#[test]
+fn served_plans_are_shared_not_copied() {
+    let svc = PlanService::with_defaults();
+    let g = small_graph();
+    let c = cfg("cluster-only", Strategy::Ftl);
+    let first = svc.plan(&g, &c).unwrap();
+    let second = svc.plan(&g, &c).unwrap();
+    assert!(Arc::ptr_eq(&first.plan, &second.plan), "warm hits must share one Arc<Deployment>");
+    assert!(!first.cached && second.cached);
+    // The shared plan still produces per-request reports.
+    let report = first.plan.report("relabelled", &c).unwrap();
+    assert_eq!(report.workload, "relabelled");
+    assert!(report.sim.total_cycles > 0);
+}
+
+#[test]
+fn cached_plan_report_matches_direct_pipeline() {
+    let svc = PlanService::with_defaults();
+    let g = small_graph();
+    let c = cfg("siracusa", Strategy::Ftl);
+    let via_cache = svc.deploy("w", &g, &c).unwrap();
+    let (_, direct) = ftl::Deployer::new(g.clone(), c.clone()).with_workload_name("w").deploy().unwrap();
+    assert_eq!(via_cache.report.sim.total_cycles, direct.sim.total_cycles);
+    assert_eq!(via_cache.report.dma_bytes, direct.dma_bytes);
+    assert_eq!(via_cache.report.peak_l1, direct.peak_l1);
+}
+
+// ------------------------------------------------------------------ CLI path
+
+#[test]
+fn cli_serve_self_test_passes() {
+    let exe = env!("CARGO_BIN_EXE_ftl");
+    let out = std::process::Command::new(exe)
+        .args(["serve", "--self-test", "--cache-cap", "8", "--workers", "2"])
+        .output()
+        .expect("run ftl serve --self-test");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "ftl serve --self-test failed:\n{stdout}\n{stderr}");
+    assert!(stdout.contains("self-test OK"), "unexpected output:\n{stdout}");
+}

@@ -1,0 +1,249 @@
+//! Vendored, dependency-free stand-in for the `anyhow` crate.
+//!
+//! This workspace builds fully offline (no crates.io access), so instead
+//! of the real `anyhow` this micro-implementation provides exactly the
+//! subset the `ftl` crate uses:
+//!
+//! * [`Error`] — a context-chained error value (`Display` prints the
+//!   outermost message; the `{:#}` alternate form prints the whole chain,
+//!   matching anyhow's behaviour relied on by `eprintln!("{e:#}")`);
+//! * [`Result`] — `Result<T, Error>` alias with a default type parameter;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on both
+//!   `Result<T, E>` (for any std error *or* an [`Error`]) and `Option<T>`.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket `From<E>` and the
+//! `Context` impls coherent.
+
+use std::convert::Infallible;
+use std::fmt;
+
+use self::private::IntoError;
+
+/// A context-chained error value.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// Crate-standard result alias (default error type = [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Error from a displayable message.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message (the form used by
+    /// `Err(e.context(format!(..)))` call-sites).
+    pub fn context(self, c: impl fmt::Display) -> Self {
+        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The innermost error message in the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(s) = cur.source.as_deref() {
+            cur = s;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into [`Error`], capturing its source chain.
+/// (Coherent because [`Error`] itself is not a `std::error::Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(c) = cur {
+            msgs.push(c.to_string());
+            cur = c.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+mod private {
+    /// Sealed conversion used by [`super::Context`]: either a std error or
+    /// an [`super::Error`] becomes the inner error of the new context.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T, E> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error (or `None`) with a lazily-built context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: private::IntoError> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!("condition failed: {}", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Result::<(), _>::Err(io_err()).context("reading x").unwrap_err();
+        assert_eq!(format!("{e}"), "reading x");
+        assert_eq!(format!("{e:#}"), "reading x: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn macros_and_option_context() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x > 1, "x too small: {x}");
+            if x > 10 {
+                bail!("x too big: {}", x);
+            }
+            let v = Some(x).context("missing")?;
+            Ok(v)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(0).unwrap_err()), "x too small: 0");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "x too big: 11");
+        let none: Option<usize> = None;
+        assert_eq!(format!("{}", none.context("absent").unwrap_err()), "absent");
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn g() -> Result<String> {
+            let s = std::fs::read_to_string("/nonexistent/ftl-vendor-anyhow")?;
+            Ok(s)
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn error_context_method() {
+        let e = anyhow!("inner").context(format!("outer {}", 1));
+        assert_eq!(format!("{e}"), "outer 1");
+        assert_eq!(format!("{e:#}"), "outer 1: inner");
+    }
+}
