@@ -12,10 +12,12 @@
 //!
 //! and the response is one JSON line. Requests are handled by a thread
 //! per connection, but the heavy lifting is shared: every DEPLOY goes
-//! through [`PlanService`], so structurally identical requests are served
-//! from the sharded plan cache (`"cached": true` in the response) and
-//! concurrent misses for the same key coalesce into a single
-//! branch-&-bound solve.
+//! through the [`BatchScheduler`] (admission control + SoC-grouped
+//! batching) into the [`PlanService`], so structurally identical
+//! requests are served from the sharded plan + sim caches (`"cached"` /
+//! `"sim_cached"` in the response), concurrent misses for the same key
+//! coalesce into a single branch-&-bound solve, and overload sheds
+//! (`"outcome": "SHED"`) instead of stalling the queue.
 //!
 //! ```text
 //! cargo run --release --example deploy_server &          # listens on 127.0.0.1:7117
@@ -33,10 +35,10 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use ftl::serve::{handle_line, PlanService, ServeOptions};
+use ftl::serve::{handle_line, BatchOptions, BatchScheduler, PlanService, ServeOptions};
 use ftl::util::json::Json;
 
-fn client(conn: TcpStream, service: Arc<PlanService>) {
+fn client(conn: TcpStream, scheduler: Arc<BatchScheduler>) {
     let peer = conn.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let reader = BufReader::new(conn.try_clone().expect("clone stream"));
     let mut writer = conn;
@@ -47,8 +49,8 @@ fn client(conn: TcpStream, service: Arc<PlanService>) {
         }
         // Protocol handling lives in ftl::serve::handle_line, shared with
         // the `ftl serve` subcommand.
-        let response = handle_line(&service, line.trim());
-        if writeln!(writer, "{}", response.to_string()).is_err() {
+        let response = handle_line(&scheduler, line.trim());
+        if writeln!(writer, "{response}").is_err() {
             break;
         }
     }
@@ -68,13 +70,13 @@ fn request(addr: std::net::SocketAddr, req: &str) -> Result<Json> {
     Ok(v)
 }
 
-fn self_test(listener: TcpListener, service: Arc<PlanService>) -> Result<()> {
+fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>) -> Result<()> {
     let local = listener.local_addr()?;
-    let accept_service = service.clone();
+    let accept_scheduler = scheduler.clone();
     std::thread::spawn(move || {
         for conn in listener.incoming().flatten() {
-            let service = accept_service.clone();
-            std::thread::spawn(move || client(conn, service));
+            let scheduler = accept_scheduler.clone();
+            std::thread::spawn(move || client(conn, scheduler));
         }
     });
 
@@ -100,9 +102,10 @@ fn self_test(listener: TcpListener, service: Arc<PlanService>) -> Result<()> {
     let mut base_cycles = 0i64;
     for (req, h) in requests.iter().zip(handles) {
         let v = h.join().map_err(|_| anyhow!("client thread panicked"))??;
+        ensure!(v.get("outcome")?.as_str()? == "OK", "wave-1 request '{req}' not served");
         let sim = v.get("sim").context("DEPLOY response missing sim")?;
         let cycles = sim.get("total_cycles")?.as_usize()? as i64;
-        println!("[client] {req} -> {cycles} cycles (cached: {})", v.get("cached")?.to_string());
+        println!("[client] {req} -> {cycles} cycles (cached: {})", v.get("cached")?);
         if req.contains("siracusa ftl") {
             ftl_cycles = cycles;
         } else if req.contains("siracusa baseline") {
@@ -111,32 +114,49 @@ fn self_test(listener: TcpListener, service: Arc<PlanService>) -> Result<()> {
     }
     ensure!(ftl_cycles > 0 && base_cycles > ftl_cycles, "FTL must beat baseline over the wire too");
 
-    // Wave 2: repeat everything — now every response must be a cache hit.
+    // Wave 2: repeat everything — now every response must hit both the
+    // plan cache and the sim-report cache.
     for req in &requests {
         let v = request(local, req)?;
         ensure!(
             v.get("cached")?.as_bool()?,
             "second-wave request '{req}' was not served from the plan cache"
         );
+        ensure!(
+            v.get("sim_cached")?.as_bool()?,
+            "second-wave request '{req}' re-ran the simulation engine"
+        );
     }
 
-    // Accounting: exactly one solve per distinct (workload, soc, strategy).
+    // Accounting: exactly one solve + one simulation per distinct
+    // (workload, soc, strategy).
     let stats = request(local, "STATS")?;
     let solves = stats.get("solves")?.as_usize()? as u64;
     ensure!(
         solves == unique,
         "expected exactly {unique} solves for {unique} distinct requests, got {solves}"
     );
+    let sims = stats.get("sims")?.as_usize()? as u64;
+    ensure!(sims == unique, "expected exactly {unique} sims, got {sims}");
     let hits = stats.get("plan_cache")?.get("hits")?.as_usize()?;
     ensure!(hits >= requests.len(), "second wave must hit the cache ({hits} hits)");
+    // Wave 1's cold requests flow through the batch queue (at least one
+    // per distinct fingerprint); wave 2 is fully warm and takes the
+    // cache fast path, bypassing the queue.
+    let batched = stats.get("batch")?.get("batched_requests")?.as_usize()?;
+    ensure!(
+        batched >= unique as usize && batched <= requests.len(),
+        "cold wave must flow through the batch queue ({batched})"
+    );
     let pong = request(local, "PING")?;
     ensure!(pong.get("pong")?.as_bool()?, "PING must pong");
 
-    println!("[server] stats: {}", service.stats_json().to_string());
+    println!("[server] stats: {}", scheduler.stats_json());
     println!(
-        "[server] served {} plan requests with {} solves; self-test OK",
-        service.stats().requests,
-        solves
+        "[server] served {} plan requests with {} solves / {} sims; self-test OK",
+        scheduler.service().stats().requests,
+        solves,
+        sims
     );
     Ok(())
 }
@@ -146,19 +166,22 @@ fn main() -> Result<()> {
     // Port 0 in self-test mode: parallel test runs must not collide.
     let addr = if self_test_mode { "127.0.0.1:0" } else { "127.0.0.1:7117" };
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    let service = Arc::new(PlanService::new(ServeOptions::default()));
+    let scheduler = Arc::new(BatchScheduler::new(
+        Arc::new(PlanService::new(ServeOptions::default())),
+        BatchOptions::default(),
+    ));
     println!(
-        "[server] listening on {} (protocol: DEPLOY <workload> <soc> <strategy> | STATS | PING)",
+        "[server] listening on {} (protocol: DEPLOY <workload> <soc> <strategy> [deadline-ms] | STATS | PING)",
         listener.local_addr()?
     );
 
     if self_test_mode {
-        return self_test(listener, service);
+        return self_test(listener, scheduler);
     }
 
     for conn in listener.incoming().flatten() {
-        let service = service.clone();
-        std::thread::spawn(move || client(conn, service));
+        let scheduler = scheduler.clone();
+        std::thread::spawn(move || client(conn, scheduler));
     }
     Ok(())
 }

@@ -1,0 +1,105 @@
+//! Bench: the batching scheduler — admission + fan-out overhead vs the
+//! work it saves.
+//!
+//! Three numbers tell the story:
+//! * `warm_batched_deploy` — a fully warm request through the whole
+//!   admit → batch → hit → hit → reply path (queue + window overhead on
+//!   top of two cache hits);
+//! * `fanout_8x_identical` — 8 concurrent identical cold requests
+//!   through a fresh scheduler: one solve + one simulation total, the
+//!   rest fan out (per-iteration cost tracks ~1 solve, not 8);
+//! * `sim_rerun` vs `sim_cache_hit` — what the sim-report cache saves on
+//!   a warm plan (the engine run the old serve layer paid per request).
+//!
+//! `FTL_BENCH_SMOKE=1` shrinks the workload and measurement windows so
+//! CI can execute the harness end-to-end.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::experiments;
+use ftl::ir::Graph;
+use ftl::serve::{AdmissionPolicy, BatchOptions, BatchScheduler, PlanService, ServeOptions};
+use ftl::tiling::Strategy;
+use ftl::util::bench::bench;
+
+fn smoke() -> bool {
+    std::env::var("FTL_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    let smoke = smoke();
+    let graph: Graph = if smoke {
+        experiments::vit_mlp_stage(64, 96, 192)
+    } else {
+        experiments::vit_mlp_stage(197, 768, 3072)
+    };
+    let secs = |n: u64| if smoke { Duration::from_millis(150) } else { Duration::from_secs(n) };
+    let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+    let opts = ServeOptions { cache_capacity: 32, cache_shards: 4, workers: 1, ..ServeOptions::default() };
+    // Zero window for the latency numbers: batching pays off under
+    // concurrency, and the fan-out bench opens its own window.
+    let fast = BatchOptions {
+        queue_capacity: 64,
+        batch_window: Duration::ZERO,
+        max_batch: 64,
+        policy: AdmissionPolicy::Block,
+    };
+
+    println!("=== serve layer: batching scheduler + sim-report cache ===\n");
+
+    // Warm path: both caches hot; measures pure scheduler overhead.
+    let warm_sched = BatchScheduler::new(Arc::new(PlanService::new(opts)), fast);
+    warm_sched.deploy("warmup", graph.clone(), cfg.clone()).unwrap();
+    let warm = bench("batch/warm_batched_deploy", secs(2), || {
+        let outcome = warm_sched.deploy("warm", graph.clone(), cfg.clone()).unwrap();
+        let reply = outcome.served().expect("warm request must be served");
+        assert!(reply.cached && reply.sim_cached);
+    });
+
+    // Fan-out: 8 concurrent identical cold requests, one solve + one sim.
+    let window = BatchOptions { batch_window: Duration::from_millis(5), ..fast };
+    let fanout = bench("batch/fanout_8x_identical_cold", secs(3), || {
+        let service = Arc::new(PlanService::new(opts));
+        let sched = Arc::new(BatchScheduler::new(service.clone(), window));
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let sched = sched.clone();
+            let graph = graph.clone();
+            let cfg = cfg.clone();
+            handles.push(std::thread::spawn(move || {
+                sched.deploy(&format!("r{i}"), graph, cfg).unwrap().served().expect("served")
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = service.stats();
+        assert_eq!(stats.solves, 1, "fan-out must coalesce to one solve");
+        assert_eq!(stats.sims, 1, "fan-out must coalesce to one simulation");
+    });
+
+    // Sim-report cache: engine run vs cache hit on an already-hot plan.
+    let svc = PlanService::new(opts);
+    let plan = svc.plan(&graph, &cfg).unwrap().plan;
+    let rerun = bench("batch/sim_rerun(engine)", secs(2), || {
+        let sim = plan.simulate(&cfg).unwrap();
+        assert!(sim.total_cycles > 0);
+    });
+    svc.deploy("seed", &graph, &cfg).unwrap();
+    let hit = bench("batch/sim_cache_hit", secs(2), || {
+        let reply = svc.deploy("hit", &graph, &cfg).unwrap();
+        assert!(reply.sim_cached);
+    });
+
+    let sim_speedup = rerun.median.as_nanos() as f64 / hit.median.as_nanos().max(1) as f64;
+    let amortised = fanout.median.as_nanos() as f64 / 8.0;
+    println!("\nwarm batched deploy (queue + 2 cache hits): {:?}", warm.median);
+    println!("fan-out 8x cold: {:?} total (~{:.0} ns/request amortised)", fanout.median, amortised);
+    println!("sim-cache speedup vs engine re-run: {sim_speedup:.1}x");
+    assert!(
+        sim_speedup >= 2.0,
+        "sim-cache hit must clearly beat an engine re-run (got {sim_speedup:.2}x)"
+    );
+}

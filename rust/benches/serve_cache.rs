@@ -15,15 +15,27 @@ use ftl::serve::{PlanService, ServeOptions};
 use ftl::tiling::Strategy;
 use ftl::util::bench::bench;
 
+/// `FTL_BENCH_SMOKE=1` shrinks measurement windows (and the workload) so
+/// CI can execute the harness end-to-end without paying full bench time.
+fn smoke() -> bool {
+    std::env::var("FTL_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 fn main() {
-    let graph = experiments::vit_mlp_stage(197, 768, 3072);
+    let smoke = smoke();
+    let graph = if smoke {
+        experiments::vit_mlp_stage(64, 96, 192)
+    } else {
+        experiments::vit_mlp_stage(197, 768, 3072)
+    };
+    let secs = |n: u64| if smoke { Duration::from_millis(150) } else { Duration::from_secs(n) };
     let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
-    let opts = ServeOptions { cache_capacity: 32, cache_shards: 4, workers: 1 };
+    let opts = ServeOptions { cache_capacity: 32, cache_shards: 4, workers: 1, ..ServeOptions::default() };
 
     println!("=== serve layer: plan-cache + single-flight (vit-base-stage, siracusa/ftl) ===\n");
 
     // Cold: a fresh service per call — fingerprint, miss, full solve.
-    let cold = bench("serve/cold_plan(solve)", Duration::from_secs(3), || {
+    let cold = bench("serve/cold_plan(solve)", secs(3), || {
         let svc = PlanService::new(opts);
         let outcome = svc.plan(&graph, &cfg).unwrap();
         assert!(!outcome.cached);
@@ -32,14 +44,14 @@ fn main() {
     // Warm: one service, the key stays hot — fingerprint + LRU hit only.
     let warm_svc = PlanService::new(opts);
     warm_svc.plan(&graph, &cfg).unwrap();
-    let warm = bench("serve/warm_hit", Duration::from_secs(2), || {
+    let warm = bench("serve/warm_hit", secs(2), || {
         let outcome = warm_svc.plan(&graph, &cfg).unwrap();
         assert!(outcome.cached);
     });
 
     // Contended: 8 threads race the same cold key; single-flight coalesces
     // them onto one solve, so the wall-clock tracks `cold`, not 8x cold.
-    let contended = bench("serve/contended_8x_single_flight", Duration::from_secs(3), || {
+    let contended = bench("serve/contended_8x_single_flight", secs(3), || {
         let svc = PlanService::new(opts);
         std::thread::scope(|s| {
             for _ in 0..8 {

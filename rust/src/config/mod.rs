@@ -33,7 +33,13 @@ impl DeployConfig {
     pub fn preset(soc: &str, strategy: Strategy) -> Result<Self> {
         let preset = SocPreset::parse(soc)
             .with_context(|| format!("unknown SoC preset '{soc}' (try: siracusa, cluster-only)"))?;
-        Ok(Self { soc: preset.config(), strategy, double_buffer: false, solver: SolverOptions::default(), homes: HomesPolicy::Resident })
+        Ok(Self {
+            soc: preset.config(),
+            strategy,
+            double_buffer: false,
+            solver: SolverOptions::default(),
+            homes: HomesPolicy::Resident,
+        })
     }
 
     /// Load from a JSON file.

@@ -71,8 +71,22 @@ impl Deployment {
     /// cheap per-request half, so a cached plan (see [`crate::serve`])
     /// can be re-reported under any workload label without re-solving.
     pub fn report(&self, workload: &str, config: &DeployConfig) -> Result<DeployReport> {
-        let sim = simulate(&self.schedule, &config.soc)?;
-        Ok(DeployReport {
+        Ok(self.report_with_sim(workload, config, self.simulate(config)?))
+    }
+
+    /// Run the event-driven simulator over this plan's schedule.
+    /// Deterministic for a fixed (schedule, SoC) — which is exactly why
+    /// the serve layer can cache the resulting [`SimReport`] by plan
+    /// fingerprint (see [`crate::serve`]).
+    pub fn simulate(&self, config: &DeployConfig) -> Result<SimReport> {
+        simulate(&self.schedule, &config.soc)
+    }
+
+    /// Assemble the standard per-request report around an
+    /// already-computed simulation (fresh or cache-shared). Everything
+    /// except the workload label and the sim is derived from the plan.
+    pub fn report_with_sim(&self, workload: &str, config: &DeployConfig, sim: SimReport) -> DeployReport {
+        DeployReport {
             strategy: config.strategy.name().to_string(),
             soc: config.soc.name.clone(),
             workload: workload.to_string(),
@@ -81,7 +95,7 @@ impl Deployment {
             dma_commands: self.schedule.dma_count(),
             dma_bytes: self.schedule.dma_bytes(),
             sim,
-        })
+        }
     }
 }
 

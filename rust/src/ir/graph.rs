@@ -211,13 +211,11 @@ mod tests {
         let mut g = Graph::new();
         let x = g.add_tensor(Tensor::new("x", vec![8, 16], DType::F32, TensorKind::Input)).unwrap();
         let w1 = g.add_tensor(Tensor::new("w1", vec![16, 32], DType::F32, TensorKind::Weight)).unwrap();
-        let (_, h) = g
-            .add_node("fc1", Op::Gemm { transpose_b: false, has_bias: false }, vec![x, w1], "h", TensorKind::Intermediate)
-            .unwrap();
+        let gemm = Op::Gemm { transpose_b: false, has_bias: false };
+        let (_, h) = g.add_node("fc1", gemm.clone(), vec![x, w1], "h", TensorKind::Intermediate).unwrap();
         let (_, a) = g.add_node("act", Op::Act(ActKind::Gelu), vec![h], "a", TensorKind::Intermediate).unwrap();
         let w2 = g.add_tensor(Tensor::new("w2", vec![32, 16], DType::F32, TensorKind::Weight)).unwrap();
-        g.add_node("fc2", Op::Gemm { transpose_b: false, has_bias: false }, vec![a, w2], "y", TensorKind::Output)
-            .unwrap();
+        g.add_node("fc2", gemm, vec![a, w2], "y", TensorKind::Output).unwrap();
         g
     }
 

@@ -83,7 +83,9 @@ fn op_from_json(v: &Json) -> Result<Op> {
         "gelu" => Op::Act(ActKind::Gelu),
         "relu" => Op::Act(ActKind::Relu),
         "add" => Op::Add,
-        "layernorm" => Op::LayerNorm { eps: attrs.get_opt("eps").map(|e| e.as_f64()).transpose()?.unwrap_or(1e-5) as f32 },
+        "layernorm" => {
+            Op::LayerNorm { eps: attrs.get_opt("eps").map(|e| e.as_f64()).transpose()?.unwrap_or(1e-5) as f32 }
+        }
         "softmax" => Op::Softmax,
         "transpose" => Op::Transpose,
         "conv2d" => Op::Conv2d {

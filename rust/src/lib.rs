@@ -23,10 +23,13 @@
 //!            ──► runtime::TileExecutor (PJRT numerics validation)
 //!
 //!  serving  (long-running planner service, `ftl serve`):
-//!  request ──► serve::fingerprint (stable content hash of graph+config)
-//!          ──► serve::PlanCache   (sharded LRU of Arc<Deployment>) ── hit ─► reply
+//!  request ──► serve::BatchScheduler (admission control: bounded queue,
+//!          │    shed/block, deadlines; SoC-grouped batching + fan-out)
+//!          ──► serve::fingerprint (stable content hash of graph+config)
+//!          ──► serve::PlanCache   (sharded LRU of Arc<Deployment>) ── hit ─► ...
 //!          ──► serve::SingleFlight (coalesce concurrent identical solves)
 //!          ──► coordinator::Deployer::plan  (solve once, cache, share)
+//!          ──► serve::SimCache    (sharded LRU of Arc<SimReport>) ── hit ─► reply
 //! ```
 //!
 //! ## Layers

@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! ftl deploy     --workload vit-base-stage --soc siracusa --strategy ftl [--double-buffer] [--json]
-//! ftl serve      [--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64] [--self-test]
+//! ftl serve      [--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64] [--sim-cache-cap 256]
+//!                [--queue-cap 256] [--batch-window-ms 2] [--max-batch 64] [--shed] [--self-test]
 //! ftl fig3       [--seq 197 --dim 768 --hidden 3072] [--double-buffer]
 //! ftl dma        [--soc cluster-only]
 //! ftl emit-tiles --out artifacts/tiles.json
@@ -26,7 +27,10 @@ use ftl::coordinator::{experiments, Deployer};
 use ftl::ir::builder::{attention_head, deep_mlp, vit_mlp_block, vit_mlp_preset};
 use ftl::ir::{graph_from_json, graph_to_json, DType, Graph};
 use ftl::runtime::{KernelBackend, NativeBackend, PjrtBackend};
-use ftl::serve::{handle_line, resolve_workload, PlanService, ServeOptions};
+use ftl::serve::{
+    handle_line, resolve_workload, AdmissionPolicy, BatchOptions, BatchScheduler, PlanService,
+    ServeOptions,
+};
 use ftl::tiling::Strategy;
 use ftl::util::json::Json;
 
@@ -44,7 +48,7 @@ impl Args {
             let Some(name) = a.strip_prefix("--") else { bail!("unexpected argument '{a}'") };
             // boolean flags take no value; value flags consume the next token
             match name {
-                "double-buffer" | "json" | "no-perf-constraints" | "verbose" | "self-test" => {
+                "double-buffer" | "json" | "no-perf-constraints" | "verbose" | "self-test" | "shed" => {
                     flags.insert(name.to_string(), "true".into());
                 }
                 _ => {
@@ -143,34 +147,44 @@ fn cmd_deploy(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `ftl serve` — run the plan-cache + single-flight deployment service
-/// ([`ftl::serve::PlanService`]) behind the line protocol
-/// `DEPLOY <workload> <soc> <strategy>` | `STATS` | `PING` (one JSON
-/// response per line). `--self-test` exercises the full service in
-/// process (cache hits, single-flight coalescing, warm-vs-cold speedup)
-/// and exits.
+/// `ftl serve` — run the batch-aware deployment service
+/// ([`ftl::serve::BatchScheduler`] over [`ftl::serve::PlanService`])
+/// behind the line protocol `DEPLOY <workload> <soc> <strategy>
+/// [deadline-ms]` | `STATS` | `PING` (one JSON response per line).
+/// `--queue-cap`, `--batch-window-ms` and `--shed` tune admission
+/// control; `--self-test` exercises the full service in process (cache
+/// hits, single-flight coalescing, warm-vs-cold speedup, batch fan-out,
+/// shedding, deadlines) and exits.
 fn cmd_serve(args: &Args) -> Result<()> {
     let opts = ServeOptions {
         cache_capacity: args.get_usize("cache-cap", 64)?,
+        sim_cache_capacity: args.get_usize("sim-cache-cap", 256)?,
         cache_shards: args.get_usize("cache-shards", 8)?,
         workers: args.get_usize("workers", 4)?,
     };
-    let service = PlanService::new(opts);
+    let batch_opts = BatchOptions {
+        queue_capacity: args.get_usize("queue-cap", 256)?,
+        batch_window: std::time::Duration::from_millis(args.get_usize("batch-window-ms", 2)? as u64),
+        max_batch: args.get_usize("max-batch", 64)?,
+        policy: if args.has("shed") { AdmissionPolicy::Shed } else { AdmissionPolicy::Block },
+    };
     if args.has("self-test") {
-        return serve_self_test(&service);
+        return serve_self_test(opts, batch_opts);
     }
+    let scheduler = Arc::new(BatchScheduler::new(Arc::new(PlanService::new(opts)), batch_opts));
     let addr = args.get("addr", "127.0.0.1:7117");
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    println!("[ftl-serve] listening on {addr} (DEPLOY <workload> <soc> <strategy> | STATS | PING)");
-    let service = Arc::new(service);
+    println!(
+        "[ftl-serve] listening on {addr} (DEPLOY <workload> <soc> <strategy> [deadline-ms] | STATS | PING)"
+    );
     for conn in listener.incoming().flatten() {
-        let service = service.clone();
-        std::thread::spawn(move || serve_connection(conn, &service));
+        let scheduler = scheduler.clone();
+        std::thread::spawn(move || serve_connection(conn, &scheduler));
     }
     Ok(())
 }
 
-fn serve_connection(conn: TcpStream, service: &PlanService) {
+fn serve_connection(conn: TcpStream, scheduler: &BatchScheduler) {
     let Ok(read_half) = conn.try_clone() else { return };
     let reader = BufReader::new(read_half);
     let mut writer = conn;
@@ -182,8 +196,8 @@ fn serve_connection(conn: TcpStream, service: &PlanService) {
         }
         // Protocol handling lives in ftl::serve::handle_line, shared with
         // examples/deploy_server.rs.
-        let response = handle_line(service, line);
-        if writeln!(writer, "{}", response.to_string()).is_err() {
+        let response = handle_line(scheduler, line);
+        if writeln!(writer, "{response}").is_err() {
             break;
         }
     }
@@ -191,8 +205,9 @@ fn serve_connection(conn: TcpStream, service: &PlanService) {
 
 /// In-process exercise of the serve layer — run by tier-1 via the
 /// `serve` integration test so the service is covered without TCP.
-fn serve_self_test(service: &PlanService) -> Result<()> {
+fn serve_self_test(opts: ServeOptions, batch_opts: BatchOptions) -> Result<()> {
     println!("[ftl-serve] self-test");
+    let service = PlanService::new(opts);
     let graph = resolve_workload("vit-base-stage")?;
     let cfg = DeployConfig::preset("siracusa", Strategy::Ftl)?;
 
@@ -251,12 +266,106 @@ fn serve_self_test(service: &PlanService) -> Result<()> {
         "FTL on siracusa must beat the cluster-only baseline"
     );
 
+    // 5. Sim-report cache: a warm DEPLOY must skip the engine entirely.
+    // (Repeat the *most recent* key — older keys may legitimately have
+    // been evicted under a tiny --cache-cap.)
+    let sims_before = service.stats().sims;
+    let warm_deploy = service.deploy("vit-base-stage", &graph, &baseline_cfg)?;
+    ensure!(warm_deploy.cached && warm_deploy.sim_cached, "warm deploy must hit both caches");
+    ensure!(service.stats().sims == sims_before, "warm deploy must not re-run the simulator");
+
+    // 6. Batching scheduler: a concurrent mixed-SoC burst over a fresh
+    // service must perform exactly one solve + one simulation per
+    // distinct fingerprint, fanning each result out to all its waiters.
+    // Fixed cache sizing: the burst's 3 keys must never evict each other
+    // even under an adversarial --cache-cap.
+    let burst_service = Arc::new(PlanService::new(ServeOptions {
+        cache_capacity: 32,
+        sim_cache_capacity: 64,
+        cache_shards: 4,
+        workers: opts.workers,
+    }));
+    let burst_opts = BatchOptions {
+        queue_capacity: 32,
+        max_batch: 32,
+        batch_window: batch_opts.batch_window.max(std::time::Duration::from_millis(50)),
+        policy: batch_opts.policy,
+    };
+    let scheduler = BatchScheduler::new(burst_service.clone(), burst_opts);
+    let mix = [
+        ("vit-base-stage", "siracusa", Strategy::Ftl),
+        ("vit-base-stage", "cluster-only", Strategy::Ftl),
+        ("vit-base-stage", "cluster-only", Strategy::LayerPerLayer),
+    ];
+    let mut burst: Vec<(usize, u64)> = Vec::new(); // (mix index, cycles)
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for round in 0..3 {
+            for (i, (workload, soc, strategy)) in mix.iter().enumerate() {
+                let scheduler = &scheduler;
+                let graph = graph.clone();
+                handles.push(s.spawn(move || -> Result<(usize, u64)> {
+                    let cfg = DeployConfig::preset(soc, *strategy)?;
+                    let outcome = scheduler.deploy(&format!("{workload}-{round}"), graph, cfg)?;
+                    let reply = outcome
+                        .served()
+                        .ok_or_else(|| anyhow!("burst request must be served, not shed/timed out"))?;
+                    Ok((i, reply.report.sim.total_cycles))
+                }));
+            }
+        }
+        for h in handles {
+            burst.push(h.join().map_err(|_| anyhow!("burst thread panicked"))??);
+        }
+        Ok(())
+    })?;
+    ensure!(burst.len() == 9, "expected 9 burst replies");
+    for i in 0..mix.len() {
+        let cycles: Vec<u64> = burst.iter().filter(|(j, _)| *j == i).map(|(_, c)| *c).collect();
+        ensure!(cycles.len() == 3, "each fingerprint must serve 3 requests");
+        ensure!(cycles.windows(2).all(|w| w[0] == w[1]), "fan-out replies must agree on cycles");
+    }
+    let burst_stats = burst_service.stats();
+    ensure!(burst_stats.solves == 3, "burst must solve once per distinct fingerprint (got {})", burst_stats.solves);
+    ensure!(burst_stats.sims == 3, "burst must simulate once per distinct fingerprint (got {})", burst_stats.sims);
+    let batch_stats = scheduler.stats();
+    // Each distinct fingerprint's first (cold) request must be batched;
+    // stragglers may take the warm fast path once their key is cached.
+    ensure!(
+        (3..=9).contains(&batch_stats.batched_requests),
+        "burst batched_requests out of range: {}",
+        batch_stats.batched_requests
+    );
+    ensure!(batch_stats.shed == 0 && batch_stats.timeouts == 0, "burst must not shed or time out");
+
+    // 7. Admission control: a zero-capacity queue sheds, an expired
+    // deadline times out — neither touches the solver. (Use a config the
+    // burst did NOT warm, so the cache fast path can't serve it.)
+    let gate = BatchScheduler::new(
+        burst_service.clone(),
+        BatchOptions { queue_capacity: 0, policy: AdmissionPolicy::Shed, ..burst_opts },
+    );
+    let mut cold_cfg = cfg.clone();
+    cold_cfg.double_buffer = true;
+    let shed = gate.deploy("overload", graph.clone(), cold_cfg)?;
+    ensure!(shed.kind() == "SHED", "zero-capacity queue must shed");
+    let late = scheduler.deploy_with_deadline(
+        "late",
+        graph.clone(),
+        cfg.clone(),
+        Some(std::time::Duration::ZERO),
+    )?;
+    ensure!(late.kind() == "TIMEOUT", "expired deadline must time out");
+    ensure!(gate.stats().shed == 1 && scheduler.stats().timeouts == 1, "admission counters must record");
+    ensure!(burst_service.stats().solves == 3, "shed/timed-out requests must not reach the solver");
+
     let stats = service.stats();
     println!("{}", stats.cache.table());
-    println!("{}", service.stats_json().pretty());
+    println!("{}", scheduler.stats().table());
+    println!("{}", scheduler.stats_json().pretty());
     println!(
-        "[ftl-serve] served {} requests with {} solves; self-test OK",
-        stats.requests, stats.solves
+        "[ftl-serve] served {} requests with {} solves / {} sims (+ batch burst: 9 requests, 3 solves); self-test OK",
+        stats.requests, stats.solves, stats.sims
     );
     Ok(())
 }
@@ -406,8 +515,9 @@ USAGE: ftl <command> [flags]
 
 COMMANDS:
   deploy       plan + simulate one deployment     (--workload --soc --strategy [--double-buffer] [--json])
-  serve        plan-cache deployment service      ([--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64]
-               (DEPLOY/STATS/PING line protocol)   [--cache-shards 8] [--self-test])
+  serve        batch-aware deployment service     ([--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64]
+               (DEPLOY/STATS/PING line protocol)   [--sim-cache-cap 256] [--cache-shards 8] [--queue-cap 256]
+                                                   [--batch-window-ms 2] [--max-batch 64] [--shed] [--self-test])
   fig3         reproduce the paper's Fig. 3       ([--seq --dim --hidden] [--double-buffer] [--json])
   dma          reproduce the -47.1% DMA metric    ([--soc])
   sweep        hidden-dim sweep (Ext-A)           ([--soc])

@@ -188,9 +188,91 @@ impl CacheStats {
     }
 }
 
+/// Counters for the serve-layer batching scheduler (filled by
+/// [`crate::serve::BatchScheduler`], rendered in `STATS` responses and
+/// the `ftl serve` self-test).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Requests that went through a batch (admitted, not shed).
+    pub batched_requests: u64,
+    /// Largest batch dispatched so far.
+    pub max_batch_size: u64,
+    /// Requests rejected by admission control (full queue, shed policy —
+    /// or any request at all on a zero-capacity queue).
+    pub shed: u64,
+    /// Requests whose deadline expired before dispatch.
+    pub timeouts: u64,
+    /// Requests currently waiting in the queue.
+    pub queue_depth: usize,
+    /// Configured queue capacity.
+    pub queue_capacity: usize,
+}
+
+impl BatchStats {
+    /// Mean requests per dispatched batch (0 when nothing dispatched).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// JSON rendering (embedded in the serve stats snapshot).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batches", Json::int(self.batches as usize)),
+            ("batched_requests", Json::int(self.batched_requests as usize)),
+            ("max_batch_size", Json::int(self.max_batch_size as usize)),
+            ("mean_batch_size", Json::Num(self.mean_batch_size())),
+            ("shed", Json::int(self.shed as usize)),
+            ("timeouts", Json::int(self.timeouts as usize)),
+            ("queue_depth", Json::int(self.queue_depth)),
+            ("queue_capacity", Json::int(self.queue_capacity)),
+        ])
+    }
+
+    /// Human-readable one-table rendering.
+    pub fn table(&self) -> String {
+        let mut t = Table::new(&["batches", "requests", "max", "mean", "shed", "timeouts", "depth", "cap"]);
+        t.row(&[
+            self.batches.to_string(),
+            self.batched_requests.to_string(),
+            self.max_batch_size.to_string(),
+            format!("{:.1}", self.mean_batch_size()),
+            self.shed.to_string(),
+            self.timeouts.to_string(),
+            self.queue_depth.to_string(),
+            self.queue_capacity.to_string(),
+        ]);
+        t.render()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn batch_stats_mean_and_rendering() {
+        let s = BatchStats {
+            batches: 2,
+            batched_requests: 7,
+            max_batch_size: 5,
+            shed: 1,
+            timeouts: 0,
+            queue_depth: 0,
+            queue_capacity: 16,
+        };
+        assert!((s.mean_batch_size() - 3.5).abs() < 1e-12);
+        assert_eq!(BatchStats::default().mean_batch_size(), 0.0);
+        let j = s.to_json();
+        assert_eq!(j.get("shed").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.get("batched_requests").unwrap().as_usize().unwrap(), 7);
+        assert!(s.table().contains("3.5"));
+    }
 
     #[test]
     fn cache_stats_rates_and_rendering() {

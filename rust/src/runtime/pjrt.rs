@@ -229,7 +229,10 @@ impl PjrtBackend {
         if !self.manifest.has(key) {
             bail!("artifact '{key}' not in manifest ({} entries)", self.manifest.entries.len());
         }
-        bail!("artifact '{key}': ftl was built without the `xla` feature — rebuild with `--features xla` to execute PJRT artifacts")
+        bail!(
+            "artifact '{key}': ftl was built without the `xla` feature — rebuild with `--features xla` \
+             to execute PJRT artifacts"
+        )
     }
 }
 

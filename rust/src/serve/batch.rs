@@ -1,0 +1,672 @@
+//! [`BatchScheduler`] — traffic shaping in front of [`PlanService`].
+//!
+//! The plan cache and single-flight layer (PR 1) make *identical*
+//! concurrent requests cheap, but under heavy traffic the serve layer
+//! still drained its queue one request at a time with no backpressure —
+//! the paper's off-chip-bottleneck shape, moved up into the deployment
+//! service. This module adds the missing traffic controls:
+//!
+//! * **Admission control** — a bounded queue with a configurable
+//!   capacity and a full-queue policy: [`AdmissionPolicy::Shed`] rejects
+//!   immediately (the request resolves to [`BatchOutcome::Shed`], the
+//!   protocol's `SHED`), [`AdmissionPolicy::Block`] applies backpressure
+//!   by parking the submitter until space frees up. Requests may carry a
+//!   deadline; one that expires before dispatch resolves to
+//!   [`BatchOutcome::TimedOut`] (`TIMEOUT`) instead of doing dead work.
+//! * **SoC-grouped batching** — the dispatcher collects requests for a
+//!   short window, sorts the batch by SoC fingerprint (then full plan
+//!   fingerprint), and walks it in runs: requests targeting the same SoC
+//!   are solved back-to-back so the solver and cost models stay warm,
+//!   and each run of *identical* fingerprints is solved and simulated
+//!   **once**, with the result fanned out to every waiter in the run.
+//!
+//! Batching composes with (rather than replaces) the caches underneath:
+//! a fully warm request short-circuits into the caches without ever
+//! entering the queue (batching only exists to amortize cold work),
+//! fan-out handles identical requests *within* a batch, the plan + sim
+//! caches handle repeats *across* batches, and single-flight handles
+//! races between parallel dispatch lanes, fast-path callers and sync
+//! callers. Within a batch, each distinct SoC gets its own dispatch
+//! lane: same-SoC groups solve back-to-back for locality, distinct SoCs
+//! solve in parallel.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::DeployConfig;
+use crate::ir::Graph;
+use crate::metrics::BatchStats;
+use crate::util::json::Json;
+
+use super::fingerprint::{fingerprint, soc_fingerprint, Fingerprint};
+use super::service::{resolve_workload, PlanService, ServeReply};
+
+/// What admission control does with a new request when the queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Reject immediately — the request resolves to [`BatchOutcome::Shed`].
+    Shed,
+    /// Apply backpressure — park the submitting thread until space frees.
+    #[default]
+    Block,
+}
+
+/// Tunables for a [`BatchScheduler`].
+#[derive(Debug, Clone, Copy)]
+pub struct BatchOptions {
+    /// Bounded-queue capacity. **Zero admits nothing**: every request is
+    /// shed regardless of policy (blocking on a queue that can never
+    /// drain would deadlock the submitter).
+    pub queue_capacity: usize,
+    /// How long the dispatcher holds a batch open after the first
+    /// request arrives, letting the queue fill so grouping has something
+    /// to group. Zero dispatches whatever is queued immediately.
+    pub batch_window: Duration,
+    /// Max requests per dispatched batch (clamped to `>= 1`).
+    pub max_batch: usize,
+    /// Full-queue policy.
+    pub policy: AdmissionPolicy,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        Self {
+            queue_capacity: 256,
+            batch_window: Duration::from_millis(2),
+            max_batch: 64,
+            policy: AdmissionPolicy::Block,
+        }
+    }
+}
+
+/// Terminal outcome of one batched request.
+pub enum BatchOutcome {
+    /// Deployed — possibly via batch fan-out or the caches.
+    Served(Box<ServeReply>),
+    /// Rejected by admission control (full queue, shed policy).
+    Shed,
+    /// Deadline expired before the request was dispatched.
+    TimedOut,
+}
+
+impl BatchOutcome {
+    /// The reply, if the request was served.
+    pub fn served(self) -> Option<ServeReply> {
+        match self {
+            BatchOutcome::Served(reply) => Some(*reply),
+            _ => None,
+        }
+    }
+
+    /// Protocol rendering of the outcome kind (`OK` / `SHED` / `TIMEOUT`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BatchOutcome::Served(_) => "OK",
+            BatchOutcome::Shed => "SHED",
+            BatchOutcome::TimedOut => "TIMEOUT",
+        }
+    }
+}
+
+/// One admitted request waiting in the queue.
+struct Pending {
+    workload: String,
+    graph: Graph,
+    config: DeployConfig,
+    /// Full plan fingerprint — the fan-out key.
+    key: Fingerprint,
+    /// SoC-structure fingerprint — the batch grouping key.
+    soc_key: Fingerprint,
+    /// Absolute dispatch deadline, if the request carries one.
+    deadline: Option<Instant>,
+    reply: mpsc::Sender<Result<BatchOutcome>>,
+}
+
+/// How admission control resolved an enqueue attempt.
+enum Admit {
+    Admitted,
+    Shed,
+    /// The request's deadline expired while its submitter was parked
+    /// waiting for queue space (Block policy only).
+    Expired,
+    Closed,
+}
+
+struct QueueState {
+    items: VecDeque<Pending>,
+    open: bool,
+}
+
+struct Queue {
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+/// State shared between the facade and the dispatcher thread.
+struct BatchInner {
+    service: Arc<PlanService>,
+    opts: BatchOptions,
+    queue: Queue,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    max_batch_size: AtomicU64,
+    shed: AtomicU64,
+    timeouts: AtomicU64,
+}
+
+impl BatchInner {
+    /// Admission control: bounded enqueue honouring the full-queue policy.
+    /// A blocked submitter's deadline keeps ticking: the park is bounded
+    /// by it, so a deadlined request can never be stalled unboundedly by
+    /// backpressure.
+    fn enqueue(&self, pending: Pending) -> Admit {
+        let deadline = pending.deadline;
+        let mut st = self.queue.state.lock().expect("batch queue poisoned");
+        loop {
+            if !st.open {
+                return Admit::Closed;
+            }
+            if self.opts.queue_capacity == 0 {
+                // A queue that can never drain must not block (see
+                // `BatchOptions::queue_capacity`).
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                return Admit::Shed;
+            }
+            if st.items.len() < self.opts.queue_capacity {
+                st.items.push_back(pending);
+                self.queue.not_empty.notify_one();
+                return Admit::Admitted;
+            }
+            match self.opts.policy {
+                AdmissionPolicy::Shed => {
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                    return Admit::Shed;
+                }
+                AdmissionPolicy::Block => match deadline {
+                    None => {
+                        st = self.queue.not_full.wait(st).expect("batch queue poisoned");
+                    }
+                    Some(d) => {
+                        let now = Instant::now();
+                        if d <= now {
+                            self.timeouts.fetch_add(1, Ordering::Relaxed);
+                            return Admit::Expired;
+                        }
+                        let (guard, _) = self
+                            .queue
+                            .not_full
+                            .wait_timeout(st, d - now)
+                            .expect("batch queue poisoned");
+                        st = guard;
+                    }
+                },
+            }
+        }
+    }
+
+    /// Dispatcher side: wait for the first request, hold the batch window
+    /// open, then drain up to `max_batch` requests. Returns an empty
+    /// batch only when the scheduler is shut down and fully drained.
+    fn collect(&self) -> Vec<Pending> {
+        let mut st = self.queue.state.lock().expect("batch queue poisoned");
+        while st.items.is_empty() {
+            if !st.open {
+                return Vec::new();
+            }
+            st = self.queue.not_empty.wait(st).expect("batch queue poisoned");
+        }
+        let window = self.opts.batch_window;
+        let max_batch = self.opts.max_batch.max(1);
+        let t0 = Instant::now();
+        while st.open && st.items.len() < max_batch {
+            let elapsed = t0.elapsed();
+            if elapsed >= window {
+                break;
+            }
+            let (guard, _) = self
+                .queue
+                .not_empty
+                .wait_timeout(st, window - elapsed)
+                .expect("batch queue poisoned");
+            st = guard;
+        }
+        let n = st.items.len().min(max_batch);
+        let batch: Vec<Pending> = st.items.drain(..n).collect();
+        drop(st);
+        self.queue.not_full.notify_all();
+        batch
+    }
+
+    /// Dispatch one batch: group, deduplicate, solve-or-hit once per
+    /// distinct fingerprint, fan out.
+    fn dispatch(&self, mut batch: Vec<Pending>) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        self.max_batch_size.fetch_max(batch.len() as u64, Ordering::Relaxed);
+        // SoC-major order keeps the solver's working set warm across
+        // consecutive groups; full-fingerprint order inside a SoC makes
+        // identical requests adjacent for the run-length walk below.
+        batch.sort_by_key(|p| (p.soc_key, p.key));
+        let mut groups: Vec<Vec<Pending>> = Vec::new();
+        for p in batch {
+            let start_new = groups.last().map_or(true, |g| g[0].key != p.key);
+            if start_new {
+                groups.push(Vec::new());
+            }
+            groups.last_mut().expect("group pushed above").push(p);
+        }
+        // One lane per distinct SoC: groups within a lane run
+        // back-to-back (solver/cost-model locality), lanes run in
+        // parallel so distinct-SoC solves don't serialize behind each
+        // other the way a single dispatch loop would.
+        let mut lanes: Vec<Vec<Vec<Pending>>> = Vec::new();
+        let mut last_soc: Option<Fingerprint> = None;
+        for group in groups {
+            let soc = group[0].soc_key;
+            if last_soc != Some(soc) {
+                lanes.push(Vec::new());
+                last_soc = Some(soc);
+            }
+            lanes.last_mut().expect("lane pushed above").push(group);
+        }
+        if lanes.len() == 1 {
+            for group in lanes.remove(0) {
+                self.dispatch_group(group);
+            }
+            return;
+        }
+        std::thread::scope(|s| {
+            for lane in lanes {
+                s.spawn(move || {
+                    for group in lane {
+                        self.dispatch_group(group);
+                    }
+                });
+            }
+        });
+    }
+
+    /// One solve + one simulation for a run of identical fingerprints;
+    /// every waiter gets a reply carrying its own workload label.
+    fn dispatch_group(&self, group: Vec<Pending>) {
+        let now = Instant::now();
+        let (live, expired): (Vec<Pending>, Vec<Pending>) =
+            group.into_iter().partition(|p| p.deadline.map_or(true, |d| d > now));
+        for p in expired {
+            self.timeouts.fetch_add(1, Ordering::Relaxed);
+            p.reply.send(Ok(BatchOutcome::TimedOut)).ok();
+        }
+        let mut live = live.into_iter();
+        let Some(leader) = live.next() else { return };
+        // Panic isolation: a panicking solve must kill neither the
+        // dispatcher nor the waiters parked on their reply channels.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.service.deploy(&leader.workload, &leader.graph, &leader.config)
+        }))
+        .unwrap_or_else(|_| {
+            Err(anyhow!("batch dispatcher panicked while deploying '{}'", leader.workload))
+        });
+        match result {
+            Ok(reply) => {
+                for p in live {
+                    // Fan-out: share the plan and the simulation, rebuild
+                    // only the cheap per-request report wrapper.
+                    let report = reply.plan.report_with_sim(&p.workload, &p.config, reply.report.sim.clone());
+                    let fanned = ServeReply {
+                        plan: reply.plan.clone(),
+                        report,
+                        fingerprint: reply.fingerprint,
+                        cached: true,
+                        sim_cached: true,
+                    };
+                    p.reply.send(Ok(BatchOutcome::Served(Box::new(fanned)))).ok();
+                }
+                leader.reply.send(Ok(BatchOutcome::Served(Box::new(reply)))).ok();
+            }
+            Err(e) => {
+                // anyhow::Error is not Clone; re-render the chain per waiter.
+                let msg = format!("{e:#}");
+                for p in live.chain(std::iter::once(leader)) {
+                    p.reply.send(Err(anyhow!("batched deploy failed: {msg}"))).ok();
+                }
+            }
+        }
+    }
+}
+
+/// The batching scheduler (see module docs). Request lifecycle:
+/// **admit** (bounded queue) → **batch** (window + SoC grouping) →
+/// **solve-or-hit** (plan cache) → **simulate-or-hit** (sim cache) →
+/// **reply** (fan-out to every waiter of the fingerprint).
+pub struct BatchScheduler {
+    inner: Arc<BatchInner>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl BatchScheduler {
+    /// Start a scheduler in front of `service` (spawns the dispatcher).
+    pub fn new(service: Arc<PlanService>, opts: BatchOptions) -> Self {
+        let inner = Arc::new(BatchInner {
+            service,
+            opts,
+            queue: Queue {
+                state: Mutex::new(QueueState { items: VecDeque::new(), open: true }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+            },
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            max_batch_size: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+        });
+        let worker = inner.clone();
+        let handle = std::thread::Builder::new()
+            .name("ftl-batch-dispatch".into())
+            .spawn(move || loop {
+                let batch = worker.collect();
+                if batch.is_empty() {
+                    break;
+                }
+                worker.dispatch(batch);
+            })
+            .expect("spawn batch dispatcher");
+        Self { inner, dispatcher: Mutex::new(Some(handle)) }
+    }
+
+    /// Scheduler with default tunables over a default service.
+    pub fn with_defaults() -> Self {
+        Self::new(Arc::new(PlanService::with_defaults()), BatchOptions::default())
+    }
+
+    /// The service behind the scheduler (for direct/sync callers and
+    /// counter assertions).
+    pub fn service(&self) -> &Arc<PlanService> {
+        &self.inner.service
+    }
+
+    /// Blocking batched deployment without a deadline.
+    pub fn deploy(&self, workload: &str, graph: Graph, config: DeployConfig) -> Result<BatchOutcome> {
+        self.deploy_with_deadline(workload, graph, config, None)
+    }
+
+    /// Blocking batched deployment. `deadline` bounds how long the
+    /// request may wait *before dispatch* — including time parked on a
+    /// full queue under [`AdmissionPolicy::Block`]; a request whose
+    /// deadline passes first resolves to [`BatchOutcome::TimedOut`]
+    /// without consuming solver time. A deadline of zero is already
+    /// expired at enqueue.
+    pub fn deploy_with_deadline(
+        &self,
+        workload: &str,
+        graph: Graph,
+        config: DeployConfig,
+        deadline: Option<Duration>,
+    ) -> Result<BatchOutcome> {
+        if let Some(d) = deadline {
+            if d.is_zero() {
+                self.inner.timeouts.fetch_add(1, Ordering::Relaxed);
+                return Ok(BatchOutcome::TimedOut);
+            }
+        }
+        // Warm fast path: a fully cached request skips the queue and the
+        // batch window entirely — batching only exists to amortize cold
+        // work, and the caches + single-flight below stay coherent with
+        // the dispatcher regardless of which path a request takes.
+        if let Some(result) = self.inner.service.deploy_if_warm(workload, &graph, &config) {
+            return result.map(|reply| BatchOutcome::Served(Box::new(reply)));
+        }
+        let key = fingerprint(&graph, &config);
+        let soc_key = soc_fingerprint(&config.soc);
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending {
+            workload: workload.to_string(),
+            graph,
+            config,
+            key,
+            soc_key,
+            deadline: deadline.map(|d| Instant::now() + d),
+            reply: tx,
+        };
+        match self.inner.enqueue(pending) {
+            Admit::Admitted => {}
+            Admit::Shed => return Ok(BatchOutcome::Shed),
+            Admit::Expired => return Ok(BatchOutcome::TimedOut),
+            Admit::Closed => bail!("batch scheduler is shut down"),
+        }
+        match rx.recv() {
+            Ok(outcome) => outcome,
+            Err(_) => bail!("batch scheduler dropped the request before replying"),
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> BatchStats {
+        BatchStats {
+            batches: self.inner.batches.load(Ordering::Relaxed),
+            batched_requests: self.inner.batched_requests.load(Ordering::Relaxed),
+            max_batch_size: self.inner.max_batch_size.load(Ordering::Relaxed),
+            shed: self.inner.shed.load(Ordering::Relaxed),
+            timeouts: self.inner.timeouts.load(Ordering::Relaxed),
+            queue_depth: self.inner.queue.state.lock().expect("batch queue poisoned").items.len(),
+            queue_capacity: self.inner.opts.queue_capacity,
+        }
+    }
+
+    /// Combined service + batch stats (the protocol's `STATS` response).
+    pub fn stats_json(&self) -> Json {
+        let mut j = self.inner.service.stats_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("batch".into(), self.stats().to_json());
+        }
+        j
+    }
+
+    /// Close the queue, drain what's already admitted, and stop the
+    /// dispatcher (also runs on drop). New cold requests are rejected;
+    /// fully warm requests may still be served via the cache fast path
+    /// (the underlying [`PlanService`] is not shut down).
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.inner.queue.state.lock().expect("batch queue poisoned");
+            st.open = false;
+        }
+        self.inner.queue.not_empty.notify_all();
+        self.inner.queue.not_full.notify_all();
+        if let Some(handle) = self.dispatcher.lock().expect("batch dispatcher poisoned").take() {
+            handle.join().ok();
+        }
+    }
+}
+
+impl Drop for BatchScheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Handle one line of the serve protocol — the single implementation
+/// behind both `ftl serve` and `examples/deploy_server.rs`:
+///
+/// ```text
+/// DEPLOY <workload> <soc> <strategy> [deadline-ms]
+///     -> deploy report JSON + "outcome": "OK", "cached", "sim_cached",
+///        "fingerprint" — or {"outcome": "SHED"|"TIMEOUT", "error": ...}
+///        when admission control rejects or the deadline expires
+/// STATS -> service + batch counter snapshot
+/// PING  -> {"pong": true}
+/// ```
+///
+/// Errors never escape: they come back as one `{"error": ...}` object so
+/// a bad request can't kill a connection handler.
+pub fn handle_line(scheduler: &BatchScheduler, line: &str) -> Json {
+    match handle_request(scheduler, line) {
+        Ok(j) => j,
+        Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+    }
+}
+
+fn handle_request(scheduler: &BatchScheduler, line: &str) -> Result<Json> {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        ["DEPLOY", workload, soc, strategy] => deploy_request(scheduler, workload, soc, strategy, None),
+        ["DEPLOY", workload, soc, strategy, deadline_ms] => {
+            let ms: u64 = deadline_ms
+                .parse()
+                .map_err(|_| anyhow!("bad deadline '{deadline_ms}' (expected milliseconds)"))?;
+            deploy_request(scheduler, workload, soc, strategy, Some(Duration::from_millis(ms)))
+        }
+        ["STATS"] => Ok(scheduler.stats_json()),
+        ["PING"] => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
+        _ => bail!(
+            "bad request: '{line}' (expected: DEPLOY <workload> <soc> <strategy> [deadline-ms] | STATS | PING)"
+        ),
+    }
+}
+
+fn deploy_request(
+    scheduler: &BatchScheduler,
+    workload: &str,
+    soc: &str,
+    strategy: &str,
+    deadline: Option<Duration>,
+) -> Result<Json> {
+    let strategy = crate::tiling::Strategy::parse(strategy)
+        .ok_or_else(|| anyhow!("bad strategy '{strategy}'"))?;
+    let graph = resolve_workload(workload)?;
+    let cfg = DeployConfig::preset(soc, strategy)?;
+    let soc_cfg = cfg.soc.clone();
+    let outcome = scheduler.deploy_with_deadline(workload, graph, cfg, deadline)?;
+    match outcome {
+        BatchOutcome::Served(reply) => {
+            let mut j = reply.report.to_json(&soc_cfg);
+            if let Json::Obj(m) = &mut j {
+                m.insert("outcome".into(), Json::str("OK"));
+                m.insert("cached".into(), Json::Bool(reply.cached));
+                m.insert("sim_cached".into(), Json::Bool(reply.sim_cached));
+                m.insert("fingerprint".into(), Json::str(reply.fingerprint.hex()));
+            }
+            Ok(j)
+        }
+        BatchOutcome::Shed => Ok(Json::obj(vec![
+            ("outcome", Json::str("SHED")),
+            ("error", Json::str("queue full: request shed by admission control")),
+        ])),
+        BatchOutcome::TimedOut => Ok(Json::obj(vec![
+            ("outcome", Json::str("TIMEOUT")),
+            ("error", Json::str("deadline expired before the request was dispatched")),
+        ])),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiments;
+    use crate::serve::ServeOptions;
+    use crate::tiling::Strategy;
+
+    fn small() -> (Graph, DeployConfig) {
+        (
+            experiments::vit_mlp_stage(16, 24, 48),
+            DeployConfig::preset("cluster-only", Strategy::Ftl).unwrap(),
+        )
+    }
+
+    fn small_service() -> Arc<PlanService> {
+        Arc::new(PlanService::new(ServeOptions {
+            cache_capacity: 8,
+            cache_shards: 2,
+            workers: 1,
+            ..ServeOptions::default()
+        }))
+    }
+
+    #[test]
+    fn zero_capacity_queue_admits_nothing() {
+        for policy in [AdmissionPolicy::Shed, AdmissionPolicy::Block] {
+            let sched = BatchScheduler::new(
+                small_service(),
+                BatchOptions { queue_capacity: 0, policy, ..BatchOptions::default() },
+            );
+            let (g, c) = small();
+            let outcome = sched.deploy("z", g, c).unwrap();
+            assert!(matches!(outcome, BatchOutcome::Shed), "zero capacity must shed ({policy:?})");
+            assert_eq!(sched.stats().shed, 1);
+            assert_eq!(sched.service().stats().requests, 0, "shed requests must not reach the solver");
+        }
+    }
+
+    #[test]
+    fn expired_deadline_times_out_at_enqueue() {
+        let sched = BatchScheduler::new(small_service(), BatchOptions::default());
+        let (g, c) = small();
+        let outcome = sched.deploy_with_deadline("late", g, c, Some(Duration::ZERO)).unwrap();
+        assert!(matches!(outcome, BatchOutcome::TimedOut));
+        assert_eq!(sched.stats().timeouts, 1);
+        assert_eq!(sched.service().stats().requests, 0);
+    }
+
+    #[test]
+    fn served_outcome_roundtrips_through_protocol() {
+        let sched = BatchScheduler::new(
+            small_service(),
+            BatchOptions { batch_window: Duration::ZERO, ..BatchOptions::default() },
+        );
+        let j = handle_line(&sched, "DEPLOY vit-tiny-stage cluster-only ftl");
+        assert!(j.get_opt("error").is_none(), "unexpected error: {j}");
+        assert_eq!(j.get("outcome").unwrap().as_str().unwrap(), "OK");
+        assert!(j.get("sim").unwrap().get("total_cycles").unwrap().as_usize().unwrap() > 0);
+        // Warm repeat: both caches hit, and the fast path keeps the
+        // request out of the batch queue entirely.
+        let j2 = handle_line(&sched, "DEPLOY vit-tiny-stage cluster-only ftl");
+        assert!(j2.get("cached").unwrap().as_bool().unwrap());
+        assert!(j2.get("sim_cached").unwrap().as_bool().unwrap());
+        let stats = handle_line(&sched, "STATS");
+        assert_eq!(stats.get("solves").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(stats.get("sims").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(
+            stats.get("batch").unwrap().get("batched_requests").unwrap().as_usize().unwrap(),
+            1,
+            "the warm repeat must bypass the queue"
+        );
+    }
+
+    #[test]
+    fn protocol_errors_become_json_not_panics() {
+        let sched = BatchScheduler::new(small_service(), BatchOptions::default());
+        for bad in [
+            "",
+            "DEPLOY",
+            "DEPLOY x",
+            "DEPLOY a b c d e",
+            "NOPE x y z",
+            "DEPLOY no-such-net siracusa ftl",
+            "DEPLOY vit-tiny-stage no-such-soc ftl",
+            "DEPLOY vit-tiny-stage siracusa no-such-strategy",
+            "DEPLOY vit-tiny-stage siracusa ftl not-a-number",
+        ] {
+            let j = handle_line(&sched, bad);
+            assert!(j.get_opt("error").is_some(), "'{bad}' must yield an error object, got {j}");
+        }
+        let pong = handle_line(&sched, "PING");
+        assert!(pong.get("pong").unwrap().as_bool().unwrap());
+        let stats = handle_line(&sched, "STATS");
+        assert_eq!(stats.get("solves").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(stats.get("batch").unwrap().get("shed").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let sched = BatchScheduler::new(small_service(), BatchOptions::default());
+        sched.shutdown();
+        let (g, c) = small();
+        assert!(sched.deploy("late", g, c).is_err());
+    }
+}

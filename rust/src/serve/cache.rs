@@ -43,13 +43,19 @@ pub struct LruCache<V: Clone> {
 /// The serve layer's plan cache.
 pub type PlanCache = LruCache<std::sync::Arc<crate::coordinator::Deployment>>;
 
+/// The serve layer's simulation-report cache: keyed by the plan
+/// fingerprint rehashed under a sim domain tag (see
+/// [`super::fingerprint::Fingerprint::derive`]), so warm requests skip
+/// `sim::engine` entirely.
+pub type SimCache = LruCache<std::sync::Arc<crate::sim::SimReport>>;
+
 impl<V: Clone> LruCache<V> {
     /// New cache holding at most `capacity` entries spread over `shards`
     /// lock domains. `shards` is clamped to `>= 1`; per-shard capacity is
     /// rounded up so the total is never *below* the requested capacity.
     pub fn new(capacity: usize, shards: usize) -> Self {
-        let shards = shards.max(1).min(capacity.max(1));
-        let per_shard = (capacity + shards - 1) / shards;
+        let shards = shards.clamp(1, capacity.max(1));
+        let per_shard = capacity.div_ceil(shards);
         let shards_vec = (0..shards).map(|_| Mutex::new(Shard { map: HashMap::new() })).collect();
         Self {
             shards: shards_vec,
@@ -73,18 +79,31 @@ impl<V: Clone> LruCache<V> {
 
     /// Look up a plan; bumps recency and the hit/miss counters.
     pub fn get(&self, key: Fingerprint) -> Option<V> {
-        let mut shard = self.shard(key).lock().expect("plan-cache shard poisoned");
-        match shard.map.get_mut(&key.0) {
-            Some(entry) => {
-                entry.last_used = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        match self.lookup(key) {
+            Some(v) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(entry.value.clone())
+                Some(v)
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
+    }
+
+    /// Look up without touching the hit/miss counters (recency still
+    /// bumps). For internal double-checks — e.g. re-probing inside a
+    /// single-flight after a counted miss — so one request never counts
+    /// two misses.
+    pub fn get_quiet(&self, key: Fingerprint) -> Option<V> {
+        self.lookup(key)
+    }
+
+    fn lookup(&self, key: Fingerprint) -> Option<V> {
+        let mut shard = self.shard(key).lock().expect("plan-cache shard poisoned");
+        let entry = shard.map.get_mut(&key.0)?;
+        entry.last_used = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        Some(entry.value.clone())
     }
 
     /// Insert (or refresh) a plan, evicting least-recently-used entries
@@ -180,6 +199,21 @@ mod tests {
         c.insert(key(1), 1);
         c.insert(key(2), 2);
         assert_eq!(c.get(key(1)), Some(1)); // 1 is now newer than 2
+        c.insert(key(3), 3);
+        assert!(c.contains(key(1)));
+        assert!(!c.contains(key(2)));
+    }
+
+    #[test]
+    fn quiet_lookup_skips_counters_but_bumps_recency() {
+        let c: LruCache<u32> = LruCache::new(2, 1);
+        c.insert(key(1), 1);
+        c.insert(key(2), 2);
+        assert_eq!(c.get_quiet(key(1)), Some(1));
+        assert_eq!(c.get_quiet(key(9)), None);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "quiet lookups must not count");
+        // The quiet touch of 1 made 2 the LRU entry.
         c.insert(key(3), 3);
         assert!(c.contains(key(1)));
         assert!(!c.contains(key(2)));

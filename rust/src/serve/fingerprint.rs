@@ -35,6 +35,18 @@ impl Fingerprint {
         format!("{:032x}", self.0)
     }
 
+    /// Derive a secondary key from this fingerprint by rehashing it under
+    /// a domain tag. Used for the sim-report cache: its key space must be
+    /// a pure function of the plan fingerprint (plan + SoC + workload
+    /// shape are all covered by it) yet never collide with another cache's
+    /// use of the same fingerprint.
+    pub fn derive(&self, tag: &str) -> Fingerprint {
+        let mut h = Fnv::new();
+        h.tag(tag);
+        h.bytes(&self.0.to_le_bytes());
+        Fingerprint(h.state)
+    }
+
     /// Stable shard index in `0..shards` (for the sharded plan cache).
     pub fn shard(&self, shards: usize) -> usize {
         debug_assert!(shards > 0);
@@ -119,6 +131,19 @@ pub fn fingerprint(graph: &Graph, config: &DeployConfig) -> Fingerprint {
     hash_graph(&mut h, graph);
     hash_soc(&mut h, &config.soc);
     hash_config(&mut h, config);
+    Fingerprint(h.state)
+}
+
+/// Fingerprint of the SoC structure alone — the batching scheduler's
+/// grouping key ([`crate::serve::BatchScheduler`]). Requests with equal
+/// SoC fingerprints exercise the same memory hierarchy and cost models,
+/// so solving them back-to-back keeps the solver's working set warm even
+/// when their graphs differ. Same exclusion rules as [`fingerprint`]: the
+/// preset *name* is cosmetic, the structure is identity.
+pub fn soc_fingerprint(soc: &SocConfig) -> Fingerprint {
+    let mut h = Fnv::new();
+    h.tag("ftl-soc-v1");
+    hash_soc(&mut h, soc);
     Fingerprint(h.state)
 }
 
@@ -279,6 +304,29 @@ mod tests {
         let mut homes = cfg("siracusa", Strategy::Ftl);
         homes.homes = HomesPolicy::Lifetime;
         assert_ne!(base, fingerprint(&g, &homes));
+    }
+
+    #[test]
+    fn soc_fingerprint_groups_by_structure_not_name() {
+        let siracusa = cfg("siracusa", Strategy::Ftl);
+        let cluster = cfg("cluster-only", Strategy::Ftl);
+        assert_ne!(soc_fingerprint(&siracusa.soc), soc_fingerprint(&cluster.soc));
+        // The preset name is cosmetic: renaming the SoC keeps the key.
+        let mut renamed = siracusa.soc.clone();
+        renamed.name = "siracusa-alias".into();
+        assert_eq!(soc_fingerprint(&siracusa.soc), soc_fingerprint(&renamed));
+        // Strategy is not part of the SoC key (it groups, not discriminates).
+        let baseline = cfg("siracusa", Strategy::LayerPerLayer);
+        assert_eq!(soc_fingerprint(&siracusa.soc), soc_fingerprint(&baseline.soc));
+    }
+
+    #[test]
+    fn derived_keys_are_stable_and_tagged() {
+        let g = vit_mlp_stage(16, 24, 48);
+        let f = fingerprint(&g, &cfg("siracusa", Strategy::Ftl));
+        assert_eq!(f.derive("sim-v1"), f.derive("sim-v1"));
+        assert_ne!(f.derive("sim-v1"), f.derive("other"));
+        assert_ne!(f.derive("sim-v1"), f, "derived keys must not collide with the base key space");
     }
 
     #[test]

@@ -1,25 +1,44 @@
-//! `ftl::serve` — the plan-cache + single-flight deployment service layer.
+//! `ftl::serve` — the traffic-shaped deployment service layer.
 //!
 //! The FTL pipeline (fuse → branch-&-bound solve → allocate → schedule)
 //! is **deterministic** for a given (graph, SoC, strategy, config): a
 //! compiled [`crate::coordinator::Deployment`] is a pure function of its
-//! request. This layer exploits that to serve heavy traffic: solve each
-//! distinct planning problem once, then hand the shared plan to every
-//! structurally identical request.
+//! request, and so is its simulation report. This layer exploits that to
+//! serve heavy traffic: solve and simulate each distinct planning
+//! problem once, then hand the shared results to every structurally
+//! identical request — with admission control in front so overload sheds
+//! instead of stalling.
+//!
+//! # Serving
+//!
+//! Request lifecycle (`admit → batch → solve-or-hit → simulate-or-hit →
+//! reply`), as driven by `ftl serve` and `examples/deploy_server.rs`:
 //!
 //! ```text
-//!            request (graph, DeployConfig)
+//!            request (workload, graph, DeployConfig [, deadline])
 //!                      │
-//!            [fingerprint]  stable 128-bit content hash
-//!                      │
-//!            [cache]  sharded LRU of Arc<Deployment> ── hit ──► reply
-//!                      │ miss
-//!            [singleflight]  concurrent misses coalesce; one leader
-//!                      │ solves, followers wait on its result
-//!            coordinator::Deployer::plan()  (the expensive solve)
-//!                      │
-//!            cache insert ──► reply (simulation re-runs per request)
+//!            [fast path]  both caches warm? → serve immediately,
+//!                      │    skipping the queue and the batch window
+//!            [admit]   BatchScheduler bounded queue: full? → shed (SHED)
+//!                      │    or block for space; deadline expired (now or
+//!                      │    while parked) → TIMEOUT
+//!            [batch]   dispatcher holds a window open, then groups the
+//!                      │    batch by SoC fingerprint (solver locality) and
+//!                      │    dedups by full fingerprint (one solve per run,
+//!                      │    fan the result out to every waiter)
+//!            [solve-or-hit]     sharded LRU of Arc<Deployment>; misses
+//!                      │        coalesce through SingleFlight, one leader
+//!                      │        runs coordinator::Deployer::plan()
+//!            [simulate-or-hit]  second sharded LRU of Arc<SimReport>
+//!                      │        keyed by the plan fingerprint; warm keys
+//!                      │        skip sim::engine entirely
+//!            [reply]   per-request DeployReport (own workload label) +
+//!                      cached / sim_cached flags + fingerprint
 //! ```
+//!
+//! Synchronous callers can still use [`PlanService::plan`] /
+//! [`PlanService::deploy`] directly — the caches and single-flight sit
+//! below the batching layer, so both entry points stay coherent.
 //!
 //! # Cache-key contract
 //!
@@ -35,9 +54,16 @@
 //!   cosmetic in reports, never semantic.
 //! * **SoC structure** — memory capacities/alignments, cluster and NPU
 //!   throughput models, DMA cost models, clock. The preset *name* is
-//!   excluded; aliases of the same hardware share plans.
+//!   excluded; aliases of the same hardware share plans. (The batching
+//!   scheduler groups by this component alone — see
+//!   [`soc_fingerprint`].)
 //! * **Planning config** — strategy, double-buffering, all solver
 //!   options (bit-exact for floats) and the homes policy.
+//!
+//! Simulation reports are cached under the same fingerprint rehashed
+//! into a disjoint key space ([`Fingerprint::derive`]): the simulator is
+//! deterministic for a fixed (schedule, SoC), both of which the plan
+//! fingerprint covers.
 //!
 //! Anything that can change the solver's output must be (and is) part of
 //! the key; anything cosmetic must not be. When adding a field to
@@ -48,15 +74,16 @@
 //! Served plans are shared as `Arc<Deployment>` — the cache never clones
 //! a plan, and callers must not mutate one.
 
+mod batch;
 mod cache;
 mod fingerprint;
 mod service;
 mod singleflight;
 
-pub use cache::{LruCache, PlanCache};
-pub use fingerprint::{fingerprint, Fingerprint};
+pub use batch::{handle_line, AdmissionPolicy, BatchOptions, BatchOutcome, BatchScheduler};
+pub use cache::{LruCache, PlanCache, SimCache};
+pub use fingerprint::{fingerprint, soc_fingerprint, Fingerprint};
 pub use service::{
-    handle_line, resolve_workload, AsyncReply, PlanOutcome, PlanService, ServeOptions, ServeReply,
-    ServeStats,
+    resolve_workload, AsyncReply, PlanOutcome, PlanService, ServeOptions, ServeReply, ServeStats,
 };
 pub use singleflight::{Role, SingleFlight};

@@ -3,33 +3,44 @@
 //! Ties the serve layer together: fingerprint the request, consult the
 //! sharded [`PlanCache`], coalesce concurrent misses through
 //! [`SingleFlight`], and only then run the coordinator's planning
-//! pipeline. Exposes a synchronous API (`plan` / `deploy`) for
-//! request-response callers and a fire-and-forget queue (`submit` /
-//! `submit_with`) drained by a worker-thread pool for cache warming and
-//! async callers. All counters surface in a JSON stats snapshot.
+//! pipeline. A second sharded LRU (the [`SimCache`]) does the same for
+//! simulation reports, so a fully warm request touches neither the
+//! solver nor `sim::engine`. Exposes a synchronous API (`plan` /
+//! `deploy`) for request-response callers and a fire-and-forget queue
+//! (`submit` / `submit_with`) drained by a worker-thread pool for cache
+//! warming and async callers. All counters surface in a JSON stats
+//! snapshot.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::DeployConfig;
 use crate::coordinator::{experiments, DeployReport, Deployer, Deployment};
 use crate::ir::builder::vit_mlp_preset;
 use crate::ir::Graph;
+use crate::sim::SimReport;
 use crate::util::json::Json;
 
-use super::cache::PlanCache;
+use super::cache::{PlanCache, SimCache};
 use super::fingerprint::{fingerprint, Fingerprint};
 use super::singleflight::SingleFlight;
+
+/// Domain tag separating sim-cache keys from plan-cache keys (see
+/// [`Fingerprint::derive`]). Bump when the simulator's output changes
+/// shape-compatibly but not value-compatibly.
+const SIM_KEY_TAG: &str = "ftl-sim-v1";
 
 /// Tunables for a [`PlanService`].
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
     /// Max cached plans (total across shards).
     pub cache_capacity: usize,
+    /// Max cached simulation reports (total across shards).
+    pub sim_cache_capacity: usize,
     /// Number of cache lock shards.
     pub cache_shards: usize,
     /// Worker threads draining the fire-and-forget queue.
@@ -38,7 +49,7 @@ pub struct ServeOptions {
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { cache_capacity: 128, cache_shards: 8, workers: 4 }
+        Self { cache_capacity: 128, sim_cache_capacity: 256, cache_shards: 8, workers: 4 }
     }
 }
 
@@ -58,13 +69,20 @@ pub struct PlanOutcome {
 pub struct ServeReply {
     /// The (shared) compiled plan.
     pub plan: Arc<Deployment>,
-    /// Plan + simulation report (rebuilt per request — simulation is cheap
-    /// next to the solve and carries the per-request workload name).
+    /// Plan + simulation report. The report wrapper is rebuilt per request
+    /// (it carries the per-request workload name) but the simulation
+    /// inside it comes from the sim cache whenever the key is warm.
     pub report: DeployReport,
     /// The request's cache key.
     pub fingerprint: Fingerprint,
-    /// Whether the plan was served from the cache.
+    /// True iff *this request* did not run the solver: served from the
+    /// plan cache, coalesced onto a concurrent solve (single-flight), or
+    /// fanned out from a batch leader's solve.
     pub cached: bool,
+    /// True iff *this request* did not run the simulation engine: served
+    /// from the sim-report cache, coalesced onto a concurrent
+    /// simulation, or fanned out from a batch leader's simulation.
+    pub sim_cached: bool,
 }
 
 /// Reply sent back on the channel for queued ([`PlanService::submit_with`])
@@ -81,8 +99,11 @@ struct Job {
 /// Shared state between the facade and the worker threads.
 struct ServiceInner {
     cache: PlanCache,
+    sim_cache: SimCache,
     flight: SingleFlight<Arc<Deployment>>,
+    sim_flight: SingleFlight<Arc<SimReport>>,
     solves: AtomicU64,
+    sims: AtomicU64,
     requests: AtomicU64,
     errors: AtomicU64,
     workers: usize,
@@ -103,8 +124,9 @@ impl ServiceInner {
         let (result, _role) = self.flight.run(key.0, || {
             // Double-check inside the flight: this caller may have raced a
             // leader that finished (and populated the cache) between our
-            // miss and the flight acquisition.
-            if let Some(plan) = self.cache.get(key) {
+            // miss and the flight acquisition. Quiet lookup — the miss was
+            // already counted above.
+            if let Some(plan) = self.cache.get_quiet(key) {
                 return Ok(plan);
             }
             solved_here.set(true);
@@ -126,17 +148,57 @@ impl ServiceInner {
         Ok(PlanOutcome { plan, fingerprint: key, cached: !solved_here.get() })
     }
 
-    /// Plan (cached) + simulate + assemble the standard report.
+    /// The sim-cache + single-flight path around `sim::engine`. Keyed by
+    /// the plan fingerprint (which already covers the workload shape, the
+    /// SoC and every planning knob) rehashed under [`SIM_KEY_TAG`].
+    fn simulate(
+        &self,
+        key: Fingerprint,
+        plan: &Arc<Deployment>,
+        config: &DeployConfig,
+    ) -> Result<(Arc<SimReport>, bool)> {
+        let sim_key = key.derive(SIM_KEY_TAG);
+        if let Some(sim) = self.sim_cache.get(sim_key) {
+            return Ok((sim, true));
+        }
+        // Same `cached` semantics as `plan`: true unless *this request*
+        // ran the simulation engine.
+        let simulated_here = std::cell::Cell::new(false);
+        let (result, _role) = self.sim_flight.run(sim_key.0, || {
+            // Quiet double-check — the miss was already counted above.
+            if let Some(sim) = self.sim_cache.get_quiet(sim_key) {
+                return Ok(sim);
+            }
+            simulated_here.set(true);
+            self.sims.fetch_add(1, Ordering::Relaxed);
+            let sim = Arc::new(plan.simulate(config)?);
+            self.sim_cache.insert(sim_key, sim.clone());
+            Ok(sim)
+        });
+        match result {
+            Ok(sim) => Ok((sim, !simulated_here.get())),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Plan (cached) + simulate (cached) + assemble the standard report.
     fn deploy(&self, workload: &str, graph: &Graph, config: &DeployConfig) -> Result<ServeReply> {
         let outcome = self.plan(graph, config)?;
-        let report = match outcome.plan.report(workload, config) {
-            Ok(report) => report,
+        let (sim, sim_cached) = match self.simulate(outcome.fingerprint, &outcome.plan, config) {
+            Ok(sim) => sim,
             Err(e) => {
                 self.errors.fetch_add(1, Ordering::Relaxed);
                 return Err(e).with_context(|| format!("simulating cached plan for '{workload}'"));
             }
         };
-        Ok(ServeReply { plan: outcome.plan, report, fingerprint: outcome.fingerprint, cached: outcome.cached })
+        let report = outcome.plan.report_with_sim(workload, config, (*sim).clone());
+        Ok(ServeReply {
+            plan: outcome.plan,
+            report,
+            fingerprint: outcome.fingerprint,
+            cached: outcome.cached,
+            sim_cached,
+        })
     }
 }
 
@@ -152,8 +214,11 @@ impl PlanService {
     pub fn new(opts: ServeOptions) -> Self {
         let inner = Arc::new(ServiceInner {
             cache: PlanCache::new(opts.cache_capacity, opts.cache_shards),
+            sim_cache: SimCache::new(opts.sim_cache_capacity, opts.cache_shards),
             flight: SingleFlight::new(),
+            sim_flight: SingleFlight::new(),
             solves: AtomicU64::new(0),
+            sims: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             workers: opts.workers,
@@ -205,10 +270,29 @@ impl PlanService {
         self.inner.plan(graph, config)
     }
 
-    /// Synchronous request-response deployment: cached plan + fresh
-    /// simulation report.
+    /// Synchronous request-response deployment: cached plan + cached (or
+    /// freshly run) simulation report.
     pub fn deploy(&self, workload: &str, graph: &Graph, config: &DeployConfig) -> Result<ServeReply> {
         self.inner.deploy(workload, graph, config)
+    }
+
+    /// Serve the request only if both caches are warm: `None` (with no
+    /// counter side effects) when either the plan or the sim report is
+    /// absent. The batch scheduler uses this as a fast path so fully warm
+    /// traffic skips the queue and the batch window entirely. Probes are
+    /// `contains`-only; the `Some` arm re-runs the normal counted path,
+    /// which in the rare eviction race may still solve synchronously.
+    pub fn deploy_if_warm(
+        &self,
+        workload: &str,
+        graph: &Graph,
+        config: &DeployConfig,
+    ) -> Option<Result<ServeReply>> {
+        let key = fingerprint(graph, config);
+        if !self.inner.cache.contains(key) || !self.inner.sim_cache.contains(key.derive(SIM_KEY_TAG)) {
+            return None;
+        }
+        Some(self.inner.deploy(workload, graph, config))
     }
 
     /// Fire-and-forget: queue the request for the worker pool (used to
@@ -241,7 +325,9 @@ impl PlanService {
     pub fn stats(&self) -> ServeStats {
         ServeStats {
             cache: self.inner.cache.stats(),
+            sim_cache: self.inner.sim_cache.stats(),
             solves: self.inner.solves.load(Ordering::Relaxed),
+            sims: self.inner.sims.load(Ordering::Relaxed),
             requests: self.inner.requests.load(Ordering::Relaxed),
             errors: self.inner.errors.load(Ordering::Relaxed),
             singleflight_leads: self.inner.flight.leads(),
@@ -279,8 +365,12 @@ impl Drop for PlanService {
 pub struct ServeStats {
     /// Plan-cache counters.
     pub cache: crate::metrics::CacheStats,
+    /// Sim-report-cache counters.
+    pub sim_cache: crate::metrics::CacheStats,
     /// Actual branch-&-bound solves performed.
     pub solves: u64,
+    /// Actual `sim::engine` runs performed.
+    pub sims: u64,
     /// Plan requests received (sync + queued).
     pub requests: u64,
     /// Requests that returned an error.
@@ -298,7 +388,9 @@ impl ServeStats {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("plan_cache", self.cache.to_json()),
+            ("sim_cache", self.sim_cache.to_json()),
             ("solves", Json::int(self.solves as usize)),
+            ("sims", Json::int(self.sims as usize)),
             ("requests", Json::int(self.requests as usize)),
             ("errors", Json::int(self.errors as usize)),
             ("singleflight_leads", Json::int(self.singleflight_leads as usize)),
@@ -315,49 +407,11 @@ pub fn resolve_workload(name: &str) -> Result<Graph> {
         "vit-base-stage" => Ok(experiments::vit_mlp_stage(197, 768, 3072)),
         "vit-tiny-stage" => Ok(experiments::vit_mlp_stage(197, 192, 768)),
         other => vit_mlp_preset(other).ok_or_else(|| {
-            anyhow!("unknown workload '{other}' (try vit-base-stage, vit-tiny-stage, vit-tiny, vit-small, vit-base, vit-large)")
+            anyhow!(
+                "unknown workload '{other}' (try vit-base-stage, vit-tiny-stage, vit-tiny, vit-small, \
+                 vit-base, vit-large)"
+            )
         }),
-    }
-}
-
-/// Handle one line of the serve protocol — the single implementation
-/// behind both `ftl serve` and `examples/deploy_server.rs`:
-///
-/// ```text
-/// DEPLOY <workload> <soc> <strategy>   -> deploy report JSON
-///                                         (+ "cached", "fingerprint")
-/// STATS                                -> service counter snapshot
-/// PING                                 -> {"pong": true}
-/// ```
-///
-/// Errors never escape: they come back as one `{"error": ...}` object so
-/// a bad request can't kill a connection handler.
-pub fn handle_line(service: &PlanService, line: &str) -> Json {
-    match handle_request(service, line) {
-        Ok(j) => j,
-        Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
-    }
-}
-
-fn handle_request(service: &PlanService, line: &str) -> Result<Json> {
-    let parts: Vec<&str> = line.split_whitespace().collect();
-    match parts.as_slice() {
-        ["DEPLOY", workload, soc, strategy] => {
-            let strategy = crate::tiling::Strategy::parse(strategy)
-                .ok_or_else(|| anyhow!("bad strategy '{strategy}'"))?;
-            let graph = resolve_workload(workload)?;
-            let cfg = DeployConfig::preset(soc, strategy)?;
-            let reply = service.deploy(workload, &graph, &cfg)?;
-            let mut j = reply.report.to_json(&cfg.soc);
-            if let Json::Obj(m) = &mut j {
-                m.insert("cached".into(), Json::Bool(reply.cached));
-                m.insert("fingerprint".into(), Json::str(reply.fingerprint.hex()));
-            }
-            Ok(j)
-        }
-        ["STATS"] => Ok(service.stats_json()),
-        ["PING"] => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
-        _ => bail!("bad request: '{line}' (expected: DEPLOY <workload> <soc> <strategy> | STATS | PING)"),
     }
 }
 
@@ -370,9 +424,13 @@ mod tests {
         (experiments::vit_mlp_stage(16, 24, 48), DeployConfig::preset("cluster-only", Strategy::Ftl).unwrap())
     }
 
+    fn opts(cache_capacity: usize, cache_shards: usize, workers: usize) -> ServeOptions {
+        ServeOptions { cache_capacity, cache_shards, workers, ..ServeOptions::default() }
+    }
+
     #[test]
     fn warm_hit_skips_solver_and_shares_plan() {
-        let svc = PlanService::new(ServeOptions { cache_capacity: 8, cache_shards: 2, workers: 1 });
+        let svc = PlanService::new(opts(8, 2, 1));
         let (g, c) = small();
         let first = svc.plan(&g, &c).unwrap();
         assert!(!first.cached);
@@ -397,8 +455,37 @@ mod tests {
     }
 
     #[test]
+    fn warm_deploy_skips_simulation_engine() {
+        let svc = PlanService::with_defaults();
+        let (g, c) = small();
+        let cold = svc.deploy("a", &g, &c).unwrap();
+        assert!(!cold.cached && !cold.sim_cached);
+        let warm = svc.deploy("b", &g, &c).unwrap();
+        assert!(warm.cached && warm.sim_cached, "second deploy must hit both caches");
+        assert_eq!(warm.report.workload, "b", "cached sims must still carry per-request names");
+        assert_eq!(warm.report.sim.total_cycles, cold.report.sim.total_cycles);
+        let stats = svc.stats();
+        assert_eq!(stats.sims, 1, "one engine run for two deploys");
+        assert_eq!(stats.sim_cache.hits, 1);
+    }
+
+    #[test]
+    fn deploy_if_warm_only_serves_fully_cached_keys() {
+        let svc = PlanService::with_defaults();
+        let (g, c) = small();
+        assert!(svc.deploy_if_warm("w", &g, &c).is_none(), "cold key has no warm path");
+        assert_eq!(svc.stats().requests, 0, "a declined warm probe must leave counters untouched");
+        svc.deploy("seed", &g, &c).unwrap();
+        let reply = svc.deploy_if_warm("warm", &g, &c).unwrap().unwrap();
+        assert!(reply.cached && reply.sim_cached);
+        assert_eq!(reply.report.workload, "warm");
+        assert_eq!(svc.stats().solves, 1);
+        assert_eq!(svc.stats().sims, 1);
+    }
+
+    #[test]
     fn queued_requests_reply_on_channel() {
-        let svc = PlanService::new(ServeOptions { cache_capacity: 8, cache_shards: 2, workers: 2 });
+        let svc = PlanService::new(opts(8, 2, 2));
         let (g, c) = small();
         let (tx, rx) = mpsc::channel();
         svc.submit_with("queued", g.clone(), c.clone(), tx.clone()).unwrap();
@@ -416,7 +503,7 @@ mod tests {
 
     #[test]
     fn shutdown_rejects_new_work() {
-        let svc = PlanService::new(ServeOptions { cache_capacity: 2, cache_shards: 1, workers: 1 });
+        let svc = PlanService::new(opts(2, 1, 1));
         svc.shutdown();
         let (g, c) = small();
         assert!(svc.submit("late", g, c).is_err());
@@ -427,20 +514,5 @@ mod tests {
         assert!(resolve_workload("vit-base-stage").is_ok());
         assert!(resolve_workload("vit-tiny-stage").is_ok());
         assert!(resolve_workload("no-such-net").is_err());
-    }
-
-    #[test]
-    fn protocol_errors_become_json_not_panics() {
-        let svc = PlanService::new(ServeOptions { cache_capacity: 2, cache_shards: 1, workers: 1 });
-        for bad in ["", "DEPLOY", "DEPLOY x", "DEPLOY a b c d e", "NOPE x y z",
-                    "DEPLOY no-such-net siracusa ftl", "DEPLOY vit-tiny-stage no-such-soc ftl",
-                    "DEPLOY vit-tiny-stage siracusa no-such-strategy"] {
-            let j = handle_line(&svc, bad);
-            assert!(j.get_opt("error").is_some(), "'{bad}' must yield an error object, got {}", j.to_string());
-        }
-        let pong = handle_line(&svc, "PING");
-        assert!(pong.get("pong").unwrap().as_bool().unwrap());
-        let stats = handle_line(&svc, "STATS");
-        assert_eq!(stats.get("solves").unwrap().as_usize().unwrap(), 0);
     }
 }

@@ -9,6 +9,16 @@
 //! into the task graph — sequential within a single-buffered phase,
 //! software-pipelined (ping/pong) within a double-buffered one — and
 //! collects runtime, per-resource utilisation and DMA statistics.
+//!
+//! # Determinism (the sim-cache contract)
+//!
+//! [`simulate`] is a pure function of (schedule, SoC): no randomness, no
+//! wall-clock, no global state — ties in the event queue break by task
+//! id, which is assigned deterministically from the schedule order. The
+//! serve layer depends on this to cache [`SimReport`]s by plan
+//! fingerprint ([`crate::serve::SimCache`]); anything that would make two
+//! runs of the same schedule diverge (e.g. randomized tie-breaking or
+//! time-based scheduling) must also invalidate that cache's key scheme.
 
 mod engine;
 mod executor;

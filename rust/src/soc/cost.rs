@@ -118,8 +118,9 @@ mod tests {
     fn relu_faster_than_gelu() {
         let soc = siracusa_reduced();
         let shape: Vec<&[usize]> = vec![&[128, 128]];
-        let gelu = KernelCostModel::tile_cycles(&soc, &Op::Act(ActKind::Gelu), ComputeUnit::Cluster, &shape, &[128, 128]);
-        let relu = KernelCostModel::tile_cycles(&soc, &Op::Act(ActKind::Relu), ComputeUnit::Cluster, &shape, &[128, 128]);
+        let tile = [128usize, 128];
+        let gelu = KernelCostModel::tile_cycles(&soc, &Op::Act(ActKind::Gelu), ComputeUnit::Cluster, &shape, &tile);
+        let relu = KernelCostModel::tile_cycles(&soc, &Op::Act(ActKind::Relu), ComputeUnit::Cluster, &shape, &tile);
         assert!(relu < gelu);
     }
 

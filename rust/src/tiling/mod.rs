@@ -36,5 +36,8 @@ pub use constraints::{emit_node, Constraint};
 pub use fusion::{fuse_groups, FusionGroup, FusionPolicy};
 pub use problem::{GroupProblem, OperandRef, Strategy};
 pub use solution::{FreeVarChoice, GroupBuffer, GroupSolution, NodeTile, TilingSolution};
-pub use solver::{assign_homes, assign_homes_with, dma_legs as solver_dma_legs, estimate_cycles, solve_graph, solve_graph_with, solve_group, HomesPolicy, SolverOptions};
+pub use solver::{
+    assign_homes, assign_homes_with, dma_legs as solver_dma_legs, estimate_cycles, solve_graph, solve_graph_with,
+    solve_group, HomesPolicy, SolverOptions,
+};
 pub use vars::{DimVar, VarId, VarTable};

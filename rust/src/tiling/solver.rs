@@ -216,7 +216,14 @@ pub fn solve_group(
                     })
                     .collect();
                 let home = if role == BufferRole::Intermediate { None } else { homes[t] };
-                bufs.push(BufTemplate { tensor: t, name: tensor.name.clone(), role, elem_bytes: tensor.dtype.size_bytes(), dims, home });
+                bufs.push(BufTemplate {
+                    tensor: t,
+                    name: tensor.name.clone(),
+                    role,
+                    elem_bytes: tensor.dtype.size_bytes(),
+                    dims,
+                    home,
+                });
                 bufs.len() - 1
             });
             if op_ref.is_output {
@@ -451,7 +458,8 @@ pub fn solve_graph_with(
                 Ok(s) => out.push(s),
                 Err(e) => {
                     if g.len() == 1 {
-                        return Err(e.context(format!("unsolvable single-node group '{}'", graph.nodes[g.nodes[0]].name)));
+                        let name = &graph.nodes[g.nodes[0]].name;
+                        return Err(e.context(format!("unsolvable single-node group '{name}'")));
                     }
                     resplit = Some(gi);
                     break;

@@ -110,13 +110,6 @@ impl Json {
         }
     }
 
-    /// Compact serialisation.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s, None, 0);
-        s
-    }
-
     /// Pretty serialisation (2-space indent).
     pub fn pretty(&self) -> String {
         let mut s = String::new();
@@ -185,6 +178,15 @@ impl Json {
     }
 }
 
+/// Compact serialisation (`to_string()` via the blanket `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s, None, 0);
+        f.write_str(&s)
+    }
+}
+
 fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
@@ -220,7 +222,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn peek(&self) -> Option<u8> {
         self.bytes.get(self.pos).copied()
     }
