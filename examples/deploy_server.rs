@@ -27,7 +27,10 @@
 //!
 //! Pass `--self-test` to spin up the server, fire concurrent client
 //! batches against it (including duplicates), verify the responses *and*
-//! the cache/single-flight accounting, and exit.
+//! the cache/single-flight accounting — then snapshot the warm caches and
+//! **restart** into a fresh service pointed at the same `--cache-dir`
+//! (default: a temp dir), proving every previously seen request is served
+//! with zero solves and zero simulator runs — and exit.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -35,7 +38,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use ftl::serve::{handle_line, BatchOptions, BatchScheduler, PlanService, ServeOptions};
+use ftl::serve::{handle_line, BatchOptions, BatchScheduler, PersistOptions, PlanService, ServeOptions, Snapshotter};
 use ftl::util::json::Json;
 
 fn client(conn: TcpStream, scheduler: Arc<BatchScheduler>) {
@@ -70,7 +73,7 @@ fn request(addr: std::net::SocketAddr, req: &str) -> Result<Json> {
     Ok(v)
 }
 
-fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>) -> Result<()> {
+fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>, cache_dir: Option<String>) -> Result<()> {
     let local = listener.local_addr()?;
     let accept_scheduler = scheduler.clone();
     std::thread::spawn(move || {
@@ -151,6 +154,50 @@ fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>) -> Result<()
     let pong = request(local, "PING")?;
     ensure!(pong.get("pong")?.as_bool()?, "PING must pong");
 
+    // Wave 3: persistence — snapshot the warm caches, then "restart" into
+    // a fresh service pointed at the same directory. Every previously
+    // seen request must now be served straight from the loaded snapshot:
+    // zero branch-&-bound solves, zero simulator runs.
+    let using_temp = cache_dir.is_none();
+    let dir = cache_dir.unwrap_or_else(|| {
+        std::env::temp_dir()
+            .join(format!("ftl-deploy-server-snap-{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned()
+    });
+    {
+        let snap = Snapshotter::attach(scheduler.service().clone(), &dir, PersistOptions::manual())?;
+        // A pre-populated --cache-dir counts as already written: flush
+        // only covers whatever the load pass didn't find on disk.
+        let already = snap.counters().loaded();
+        let written = snap.flush();
+        ensure!(
+            written as u64 + already >= 2 * unique,
+            "snapshot must persist one plan + one sim per distinct fingerprint (wrote {written}, loaded {already})"
+        );
+    }
+    let service2 = Arc::new(PlanService::new(ServeOptions::default()));
+    let snap2 = Snapshotter::attach(service2.clone(), &dir, PersistOptions::manual())?;
+    ensure!(snap2.counters().loaded() >= 2 * unique, "restart must load the snapshot back");
+    let sched2 = BatchScheduler::new(service2.clone(), BatchOptions::default());
+    for req in &requests {
+        let v = handle_line(&sched2, req);
+        ensure!(v.get_opt("error").is_none(), "restart request '{req}' failed: {v}");
+        ensure!(v.get("cached")?.as_bool()?, "restarted service must hit the loaded plan cache for '{req}'");
+        ensure!(v.get("sim_cached")?.as_bool()?, "restarted service must hit the loaded sim cache for '{req}'");
+    }
+    let s2 = service2.stats();
+    ensure!(
+        s2.solves == 0 && s2.sims == 0,
+        "warm restart must serve with zero solves/sims (got {}/{})",
+        s2.solves,
+        s2.sims
+    );
+    println!("[server] warm restart from {dir}: {} requests, 0 solves, 0 sims", requests.len());
+    if using_temp {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     println!("[server] stats: {}", scheduler.stats_json());
     println!(
         "[server] served {} plan requests with {} solves / {} sims; self-test OK",
@@ -162,21 +209,28 @@ fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>) -> Result<()
 }
 
 fn main() -> Result<()> {
-    let self_test_mode = std::env::args().any(|a| a == "--self-test");
+    let argv: Vec<String> = std::env::args().collect();
+    let self_test_mode = argv.iter().any(|a| a == "--self-test");
+    let cache_dir = argv.iter().position(|a| a == "--cache-dir").and_then(|i| argv.get(i + 1).cloned());
     // Port 0 in self-test mode: parallel test runs must not collide.
     let addr = if self_test_mode { "127.0.0.1:0" } else { "127.0.0.1:7117" };
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    let scheduler = Arc::new(BatchScheduler::new(
-        Arc::new(PlanService::new(ServeOptions::default())),
-        BatchOptions::default(),
-    ));
+    let service = Arc::new(PlanService::new(ServeOptions::default()));
+    // In long-running mode, a --cache-dir persists the caches across
+    // restarts (warm start + 1 s write-behind); in self-test mode the
+    // restart wave attaches its own snapshotters instead.
+    let _snapshotter = match (&cache_dir, self_test_mode) {
+        (Some(dir), false) => Some(Snapshotter::attach(service.clone(), dir, PersistOptions::default())?),
+        _ => None,
+    };
+    let scheduler = Arc::new(BatchScheduler::new(service, BatchOptions::default()));
     println!(
         "[server] listening on {} (protocol: DEPLOY <workload> <soc> <strategy> [deadline-ms] | STATS | PING)",
         listener.local_addr()?
     );
 
     if self_test_mode {
-        return self_test(listener, scheduler);
+        return self_test(listener, scheduler, cache_dir);
     }
 
     for conn in listener.incoming().flatten() {

@@ -12,7 +12,7 @@
 
 pub mod experiments;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::config::DeployConfig;
 use crate::ir::Graph;
@@ -31,7 +31,7 @@ use crate::util::json::Json;
 /// `Arc<Deployment>` — prefer passing `&Deployment`/`Arc<Deployment>`
 /// over cloning (the `Clone` impl exists for tooling that genuinely needs
 /// an owned copy, e.g. mutation-based ablations).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Deployment {
     /// Final fusion groups (after solver fallbacks).
     pub groups: Vec<FusionGroup>,
@@ -80,6 +80,57 @@ impl Deployment {
     /// fingerprint (see [`crate::serve`]).
     pub fn simulate(&self, config: &DeployConfig) -> Result<SimReport> {
         simulate(&self.schedule, &config.soc)
+    }
+
+    /// Canonical JSON encoding of the whole compiled plan — the snapshot
+    /// codec behind [`crate::serve::persist`]. Self-contained: everything
+    /// needed to re-serve the plan (fusion groups, homes, solved tiling,
+    /// executable schedule) is included; the source graph is not (the
+    /// cache key, a content fingerprint of the request, already binds it).
+    pub fn to_json(&self) -> Json {
+        let homes: Vec<Json> = self
+            .homes
+            .iter()
+            .map(|h| match h {
+                None => Json::Null,
+                Some(l) => Json::str(l.name()),
+            })
+            .collect();
+        Json::obj(vec![
+            ("groups", Json::Arr(self.groups.iter().map(|g| Json::ints(&g.nodes)).collect())),
+            ("homes", Json::Arr(homes)),
+            ("solution", self.solution.to_json()),
+            ("schedule", self.schedule.to_json()),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding (inverse of
+    /// [`Deployment::to_json`]).
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let groups: Vec<FusionGroup> = v
+            .get("groups")?
+            .as_arr()?
+            .iter()
+            .map(|g| Ok(FusionGroup { nodes: g.as_usize_arr()? }))
+            .collect::<Result<_>>()?;
+        let homes: Vec<Option<Level>> = v
+            .get("homes")?
+            .as_arr()?
+            .iter()
+            .map(|h| match h {
+                Json::Null => Ok(None),
+                other => {
+                    let name = other.as_str()?;
+                    Level::parse(name).map(Some).ok_or_else(|| anyhow!("unknown memory level '{name}'"))
+                }
+            })
+            .collect::<Result<_>>()?;
+        Ok(Self {
+            groups,
+            homes,
+            solution: TilingSolution::from_json(v.get("solution")?)?,
+            schedule: crate::schedule::Schedule::from_json(v.get("schedule")?)?,
+        })
     }
 
     /// Assemble the standard per-request report around an
@@ -303,6 +354,31 @@ mod tests {
             sigs.iter().map(|s| &s.0).collect::<Vec<_>>(),
             sigs2.iter().map(|s| &s.0).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn deployment_json_roundtrip() {
+        for (soc, strategy, dbuf) in [
+            ("siracusa", Strategy::Ftl, false),
+            ("cluster-only", Strategy::LayerPerLayer, false),
+            ("siracusa", Strategy::Ftl, true),
+        ] {
+            let g = vit_mlp(64, 32, 96, DType::Int8);
+            let mut cfg = DeployConfig::preset(soc, strategy).unwrap();
+            cfg.double_buffer = dbuf;
+            let d = Deployer::new(g, cfg).plan().unwrap();
+            let back = Deployment::from_json(&d.to_json()).unwrap();
+            assert_eq!(back, d, "deployment must round-trip ({soc}, {strategy:?}, dbuf={dbuf})");
+            // And the decoded plan is still *servable*: its report matches.
+            let cfg2 = {
+                let mut c = DeployConfig::preset(soc, strategy).unwrap();
+                c.double_buffer = dbuf;
+                c
+            };
+            let sim_a = d.simulate(&cfg2).unwrap();
+            let sim_b = back.simulate(&cfg2).unwrap();
+            assert_eq!(sim_a.total_cycles, sim_b.total_cycles);
+        }
     }
 
     #[test]

@@ -3,8 +3,10 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{anyhow, bail, Result};
 
 use crate::memory::Level;
+use crate::util::json::Json;
 
 use super::{DmaDirection, Transfer};
 
@@ -89,6 +91,43 @@ impl DmaStats {
         }
         100.0 * (b - self.total_bytes() as f64) / b
     }
+
+    /// Canonical JSON encoding (the snapshot codec — see
+    /// [`crate::serve::persist`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("transfers", level_map_to_json(&self.transfers)),
+            ("bytes", level_map_to_json(&self.bytes)),
+            ("busy_cycles", level_map_to_json(&self.busy_cycles)),
+            ("bytes_in", Json::int(self.bytes_in as usize)),
+            ("bytes_out", Json::int(self.bytes_out as usize)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            transfers: level_map_from_json(v.get("transfers")?)?,
+            bytes: level_map_from_json(v.get("bytes")?)?,
+            busy_cycles: level_map_from_json(v.get("busy_cycles")?)?,
+            bytes_in: v.get("bytes_in")?.as_u64()?,
+            bytes_out: v.get("bytes_out")?.as_u64()?,
+        })
+    }
+}
+
+fn level_map_to_json(m: &BTreeMap<Level, u64>) -> Json {
+    Json::Obj(m.iter().map(|(l, &v)| (l.name().to_string(), Json::int(v as usize))).collect())
+}
+
+fn level_map_from_json(v: &Json) -> Result<BTreeMap<Level, u64>> {
+    let Json::Obj(m) = v else { bail!("expected an object of per-level counters") };
+    m.iter()
+        .map(|(k, v)| {
+            let level = Level::parse(k).ok_or_else(|| anyhow!("unknown memory level '{k}'"))?;
+            Ok((level, v.as_u64()?))
+        })
+        .collect()
 }
 
 /// Optional per-transfer log (used by `--trace` and the test suite).
@@ -160,6 +199,18 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.total_transfers(), 2);
         assert_eq!(a.total_bytes(), 40);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut s = DmaStats::default();
+        s.record(&t_l2l1(100), 40);
+        s.record(&Transfer::d1(Level::L1, Level::L2, 50), 20);
+        s.record(&Transfer::d1(Level::L3, Level::L2, 200), 700);
+        let back = DmaStats::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // Empty stats round-trip too (fresh maps).
+        assert_eq!(DmaStats::from_json(&DmaStats::default().to_json()).unwrap(), DmaStats::default());
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Transfer descriptors and the DMA cost model.
 
+use anyhow::{anyhow, Result};
 
 use crate::memory::Level;
+use crate::util::json::Json;
 
 /// Direction of a transfer between two adjacent levels.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -66,6 +68,33 @@ impl Transfer {
     /// services this transfer (L2↔L1 → cluster DMA; L3↔L2 → IO DMA).
     pub fn channel_level(&self) -> Level {
         self.from.max(self.to)
+    }
+
+    /// Canonical JSON encoding (the snapshot codec — see
+    /// [`crate::serve::persist`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("from", Json::str(self.from.name())),
+            ("to", Json::str(self.to.name())),
+            ("planes", Json::int(self.planes)),
+            ("rows", Json::int(self.rows)),
+            ("row_bytes", Json::int(self.row_bytes)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let level = |key: &str| -> Result<Level> {
+            let name = v.get(key)?.as_str()?;
+            Level::parse(name).ok_or_else(|| anyhow!("unknown memory level '{name}'"))
+        };
+        Ok(Self {
+            from: level("from")?,
+            to: level("to")?,
+            planes: v.get("planes")?.as_usize()?,
+            rows: v.get("rows")?.as_usize()?,
+            row_bytes: v.get("row_bytes")?.as_usize()?,
+        })
     }
 }
 
@@ -140,6 +169,19 @@ mod tests {
         let slow = DmaCostModel { setup_cycles: 300, per_row_cycles: 8, bytes_per_cycle: 0.5 };
         let t = Transfer::d1(Level::L3, Level::L2, 100);
         assert_eq!(slow.cycles(&t), 300 + 200);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for t in [
+            Transfer::d1(Level::L2, Level::L1, 100),
+            Transfer::d2(Level::L1, Level::L2, 16, 64),
+            Transfer::d3(Level::L3, Level::L2, 4, 16, 64),
+        ] {
+            assert_eq!(Transfer::from_json(&t.to_json()).unwrap(), t);
+        }
+        let bad = crate::util::json::parse(r#"{"from":"L9","to":"L1","planes":1,"rows":1,"row_bytes":8}"#).unwrap();
+        assert!(Transfer::from_json(&bad).is_err());
     }
 
     #[test]

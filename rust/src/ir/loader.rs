@@ -36,7 +36,10 @@ fn kind_parse(s: &str) -> Result<TensorKind> {
     })
 }
 
-fn op_to_json(op: &Op) -> Json {
+/// Canonical JSON encoding of one operator (`{"op": name, "attrs": {...}}`)
+/// — shared by the network interchange format and the snapshot codec
+/// ([`crate::serve::persist`]).
+pub fn op_to_json(op: &Op) -> Json {
     let (name, attrs) = match op {
         Op::Gemm { transpose_b, has_bias } => (
             "gemm",
@@ -61,7 +64,8 @@ fn op_to_json(op: &Op) -> Json {
     Json::obj(vec![("op", Json::str(name)), ("attrs", attrs)])
 }
 
-fn op_from_json(v: &Json) -> Result<Op> {
+/// Decode the canonical operator encoding (inverse of [`op_to_json`]).
+pub fn op_from_json(v: &Json) -> Result<Op> {
     let name = v.get("op")?.as_str()?;
     let attrs = v.get_opt("attrs").cloned().unwrap_or_else(|| Json::obj(vec![]));
     Ok(match name {

@@ -30,6 +30,8 @@
 //!          ──► serve::SingleFlight (coalesce concurrent identical solves)
 //!          ──► coordinator::Deployer::plan  (solve once, cache, share)
 //!          ──► serve::SimCache    (sharded LRU of Arc<SimReport>) ── hit ─► reply
+//!          ──► serve::persist     (versioned on-disk snapshots: warm-start
+//!                                  both caches across restarts, --cache-dir)
 //! ```
 //!
 //! ## Layers

@@ -3,7 +3,8 @@
 //! ```text
 //! ftl deploy     --workload vit-base-stage --soc siracusa --strategy ftl [--double-buffer] [--json]
 //! ftl serve      [--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64] [--sim-cache-cap 256]
-//!                [--queue-cap 256] [--batch-window-ms 2] [--max-batch 64] [--shed] [--self-test]
+//!                [--queue-cap 256] [--batch-window-ms 2] [--max-batch 64] [--shed]
+//!                [--cache-dir DIR] [--snapshot-interval-ms 1000] [--self-test]
 //! ftl fig3       [--seq 197 --dim 768 --hidden 3072] [--double-buffer]
 //! ftl dma        [--soc cluster-only]
 //! ftl emit-tiles --out artifacts/tiles.json
@@ -28,8 +29,8 @@ use ftl::ir::builder::{attention_head, deep_mlp, vit_mlp_block, vit_mlp_preset};
 use ftl::ir::{graph_from_json, graph_to_json, DType, Graph};
 use ftl::runtime::{KernelBackend, NativeBackend, PjrtBackend};
 use ftl::serve::{
-    handle_line, resolve_workload, AdmissionPolicy, BatchOptions, BatchScheduler, PlanService,
-    ServeOptions,
+    handle_line, resolve_workload, AdmissionPolicy, BatchOptions, BatchScheduler, PersistOptions, PlanService,
+    ServeOptions, Snapshotter,
 };
 use ftl::tiling::Strategy;
 use ftl::util::json::Json;
@@ -152,9 +153,12 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// behind the line protocol `DEPLOY <workload> <soc> <strategy>
 /// [deadline-ms]` | `STATS` | `PING` (one JSON response per line).
 /// `--queue-cap`, `--batch-window-ms` and `--shed` tune admission
-/// control; `--self-test` exercises the full service in process (cache
-/// hits, single-flight coalescing, warm-vs-cold speedup, batch fan-out,
-/// shedding, deadlines) and exits.
+/// control; `--cache-dir` persists the plan + sim caches across restarts
+/// (write-behind every `--snapshot-interval-ms`, warm start on boot);
+/// `--self-test` exercises the full service in process (cache hits,
+/// single-flight coalescing, warm-vs-cold speedup, batch fan-out,
+/// shedding, deadlines — or, with `--cache-dir`, the snapshot/warm-start
+/// path) and exits.
 fn cmd_serve(args: &Args) -> Result<()> {
     let opts = ServeOptions {
         cache_capacity: args.get_usize("cache-cap", 64)?,
@@ -168,10 +172,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 64)?,
         policy: if args.has("shed") { AdmissionPolicy::Shed } else { AdmissionPolicy::Block },
     };
+    let cache_dir = args.flags.get("cache-dir").cloned();
+    let snapshot_interval = std::time::Duration::from_millis(args.get_usize("snapshot-interval-ms", 1000)? as u64);
     if args.has("self-test") {
-        return serve_self_test(opts, batch_opts);
+        return match cache_dir {
+            Some(dir) => serve_warm_start_self_test(opts, batch_opts, &dir, snapshot_interval),
+            None => serve_self_test(opts, batch_opts),
+        };
     }
-    let scheduler = Arc::new(BatchScheduler::new(Arc::new(PlanService::new(opts)), batch_opts));
+    let service = Arc::new(PlanService::new(opts));
+    // Held for the process lifetime: warm-starts the caches now, then
+    // write-behinds new entries until shutdown.
+    let _snapshotter = match &cache_dir {
+        Some(dir) => {
+            let snap = Snapshotter::attach(service.clone(), dir, PersistOptions { interval: snapshot_interval })?;
+            println!(
+                "[ftl-serve] snapshot dir {dir}: loaded {} entries (skipped {} corrupt, {} version)",
+                snap.counters().loaded(),
+                snap.counters().skipped_corrupt(),
+                snap.counters().skipped_version()
+            );
+            Some(snap)
+        }
+        None => None,
+    };
+    let scheduler = Arc::new(BatchScheduler::new(service, batch_opts));
     let addr = args.get("addr", "127.0.0.1:7117");
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     println!(
@@ -370,6 +395,72 @@ fn serve_self_test(opts: ServeOptions, batch_opts: BatchOptions) -> Result<()> {
     Ok(())
 }
 
+/// Warm-start self-test (`ftl serve --self-test --cache-dir <dir>`):
+/// attach the snapshotter (loading whatever the directory holds), serve
+/// a fixed mixed workload set through the batch scheduler, flush the
+/// snapshot, and report counters in a stable greppable format. Run once
+/// against an empty directory it populates the snapshot (3 solves); run
+/// again against the same directory every request must come out of the
+/// loaded caches — `solves=0 sims=0` (asserted in-process and by the CI
+/// warm-start smoke step).
+fn serve_warm_start_self_test(
+    opts: ServeOptions,
+    batch_opts: BatchOptions,
+    dir: &str,
+    interval: std::time::Duration,
+) -> Result<()> {
+    println!("[ftl-serve] warm-start self-test (cache-dir: {dir})");
+    let service = Arc::new(PlanService::new(opts));
+    let snapshotter = Snapshotter::attach(service.clone(), dir, PersistOptions { interval })?;
+    let loaded = snapshotter.counters().loaded();
+    let scheduler = BatchScheduler::new(service.clone(), batch_opts);
+    let mix = [
+        ("vit-base-stage", "siracusa", Strategy::Ftl),
+        ("vit-base-stage", "cluster-only", Strategy::Ftl),
+        ("vit-tiny-stage", "cluster-only", Strategy::LayerPerLayer),
+    ];
+    for (workload, soc, strategy) in mix {
+        let graph = resolve_workload(workload)?;
+        let cfg = DeployConfig::preset(soc, strategy)?;
+        let outcome = scheduler.deploy(workload, graph, cfg)?;
+        ensure!(outcome.kind() == "OK", "warm-start request '{workload}' must be served");
+    }
+    // Drain anything the background pass hasn't written yet, then assert
+    // on the cumulative counter (a background flush may already have run).
+    snapshotter.flush();
+    let written = snapshotter.counters().entries_written();
+    ensure!(snapshotter.counters().write_errors() == 0, "snapshot writes must succeed in the self-test");
+    let stats = service.stats();
+    // Each mix entry contributes one plan + one sim snapshot entry.
+    let full_snapshot = (2 * mix.len()) as u64;
+    if loaded >= full_snapshot {
+        ensure!(
+            stats.solves == 0 && stats.sims == 0,
+            "a populated snapshot must serve with zero solves/sims (got {}/{})",
+            stats.solves,
+            stats.sims
+        );
+        ensure!(written == 0, "a fully warm run has nothing new to snapshot");
+    } else if loaded == 0 {
+        ensure!(stats.solves == mix.len() as u64, "cold run must solve once per distinct request");
+        ensure!(written == full_snapshot, "cold run must snapshot every new entry");
+    }
+    ensure!(
+        service.stats_json().get("persist").is_ok(),
+        "stats_json must expose persist counters when a snapshotter is attached"
+    );
+    println!(
+        "[ftl-serve] warm-start: loaded={loaded} solves={} sims={} written={written} \
+         skipped_corrupt={} skipped_version={}",
+        stats.solves,
+        stats.sims,
+        snapshotter.counters().skipped_corrupt(),
+        snapshotter.counters().skipped_version()
+    );
+    println!("[ftl-serve] warm-start self-test OK");
+    Ok(())
+}
+
 fn cmd_fig3(args: &Args) -> Result<()> {
     let seq = args.get_usize("seq", 197)?;
     let d = args.get_usize("dim", 768)?;
@@ -517,7 +608,8 @@ COMMANDS:
   deploy       plan + simulate one deployment     (--workload --soc --strategy [--double-buffer] [--json])
   serve        batch-aware deployment service     ([--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64]
                (DEPLOY/STATS/PING line protocol)   [--sim-cache-cap 256] [--cache-shards 8] [--queue-cap 256]
-                                                   [--batch-window-ms 2] [--max-batch 64] [--shed] [--self-test])
+                                                   [--batch-window-ms 2] [--max-batch 64] [--shed]
+                                                   [--cache-dir DIR] [--snapshot-interval-ms 1000] [--self-test])
   fig3         reproduce the paper's Fig. 3       ([--seq --dim --hidden] [--double-buffer] [--json])
   dma          reproduce the -47.1% DMA metric    ([--soc])
   sweep        hidden-dim sweep (Ext-A)           ([--soc])

@@ -6,7 +6,9 @@
 //! buffer `k`. The [`ArenaPlan`] computes concrete offsets and checks the
 //! L1 capacity constraint that the FTL solver promised to satisfy.
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
+
+use crate::util::json::Json;
 
 /// Role of a tile buffer inside L1.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -28,6 +30,29 @@ impl BufferRole {
     pub fn is_streamed(self) -> bool {
         matches!(self, BufferRole::Input | BufferRole::Weight | BufferRole::Output)
     }
+
+    /// Canonical name (the snapshot codec's tag).
+    pub const fn name(self) -> &'static str {
+        match self {
+            BufferRole::Input => "input",
+            BufferRole::Weight => "weight",
+            BufferRole::Output => "output",
+            BufferRole::Intermediate => "intermediate",
+            BufferRole::Scratch => "scratch",
+        }
+    }
+
+    /// Parse a canonical name back.
+    pub fn parse(s: &str) -> Option<BufferRole> {
+        Some(match s {
+            "input" => BufferRole::Input,
+            "weight" => BufferRole::Weight,
+            "output" => BufferRole::Output,
+            "intermediate" => BufferRole::Intermediate,
+            "scratch" => BufferRole::Scratch,
+            _ => return None,
+        })
+    }
 }
 
 /// One logical tile buffer.
@@ -43,7 +68,7 @@ pub struct TileBuffer {
 
 /// A concrete L1 layout: every buffer (and its pong copy, if any) gets an
 /// offset.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ArenaPlan {
     /// The logical buffers.
     pub buffers: Vec<TileBuffer>,
@@ -127,6 +152,53 @@ impl ArenaPlan {
         let offs = &self.offsets[i];
         offs[phase % offs.len()]
     }
+
+    /// Canonical JSON encoding (the snapshot codec — see
+    /// [`crate::serve::persist`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("buffers", Json::Arr(self.buffers.iter().map(TileBuffer::to_json).collect())),
+            ("offsets", Json::Arr(self.offsets.iter().map(|o| Json::ints(o.as_slice())).collect())),
+            ("total", Json::int(self.total)),
+            ("double_buffered", Json::Bool(self.double_buffered)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let buffers: Vec<TileBuffer> =
+            v.get("buffers")?.as_arr()?.iter().map(TileBuffer::from_json).collect::<Result<_>>()?;
+        let offsets: Vec<Vec<usize>> =
+            v.get("offsets")?.as_arr()?.iter().map(Json::as_usize_arr).collect::<Result<_>>()?;
+        ensure!(offsets.len() == buffers.len(), "arena plan: offsets/buffers length mismatch");
+        Ok(Self {
+            buffers,
+            offsets,
+            total: v.get("total")?.as_usize()?,
+            double_buffered: v.get("double_buffered")?.as_bool()?,
+        })
+    }
+}
+
+impl TileBuffer {
+    /// Canonical JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("role", Json::str(self.role.name())),
+            ("bytes", Json::int(self.bytes)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let role = v.get("role")?.as_str()?;
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            role: BufferRole::parse(role).ok_or_else(|| anyhow!("unknown buffer role '{role}'"))?,
+            bytes: v.get("bytes")?.as_usize()?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -177,6 +249,26 @@ mod tests {
     #[test]
     fn overflow_rejected() {
         assert!(ArenaPlan::layout(bufs(), 300, 4, true).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for db in [false, true] {
+            let plan = ArenaPlan::layout(bufs(), 1 << 10, 4, db).unwrap();
+            let back = ArenaPlan::from_json(&plan.to_json()).unwrap();
+            assert_eq!(back, plan);
+        }
+        assert!(ArenaPlan::from_json(&crate::util::json::parse(r#"{"total":1}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn buffer_role_names_roundtrip() {
+        for r in
+            [BufferRole::Input, BufferRole::Weight, BufferRole::Output, BufferRole::Intermediate, BufferRole::Scratch]
+        {
+            assert_eq!(BufferRole::parse(r.name()), Some(r));
+        }
+        assert_eq!(BufferRole::parse("nope"), None);
     }
 
     #[test]

@@ -34,6 +34,17 @@ impl Level {
             Level::L3 => "L3",
         }
     }
+
+    /// Parse a display name back (the snapshot codec's inverse of
+    /// [`Level::name`]).
+    pub fn parse(s: &str) -> Option<Level> {
+        Some(match s {
+            "L1" => Level::L1,
+            "L2" => Level::L2,
+            "L3" => Level::L3,
+            _ => return None,
+        })
+    }
 }
 
 impl std::fmt::Display for Level {
@@ -88,6 +99,14 @@ impl MemoryHierarchy {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn name_parse_roundtrip() {
+        for l in Level::ALL {
+            assert_eq!(Level::parse(l.name()), Some(l));
+        }
+        assert_eq!(Level::parse("L4"), None);
+    }
 
     #[test]
     fn outer_chain() {

@@ -1,6 +1,6 @@
 //! Schedule construction from a solved tiling.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::dma::Transfer;
 use crate::ir::Graph;
@@ -8,9 +8,10 @@ use crate::memory::{ArenaPlan, Level, TileBuffer};
 use crate::soc::{ComputeUnit, KernelCostModel, SocConfig};
 use crate::tiling::solver_dma_legs as dma_legs;
 use crate::tiling::{GroupSolution, TilingSolution};
+use crate::util::json::Json;
 
 /// One kernel invocation on a concrete tile.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct KernelInvocation {
     /// Node name (e.g. `"fc1"`).
     pub name: String,
@@ -23,7 +24,7 @@ pub struct KernelInvocation {
 }
 
 /// One tile-loop iteration: loads, kernels, stores.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct TileStep {
     /// Inbound transfers issued before the kernels.
     pub dma_in: Vec<Transfer>,
@@ -46,7 +47,7 @@ impl TileStep {
 }
 
 /// One fusion group's tiled execution.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Phase {
     /// Display name, e.g. `"fc1+gelu"`.
     pub name: String,
@@ -71,7 +72,7 @@ impl Phase {
 }
 
 /// The full network schedule (phases run back-to-back).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
     /// Phases in execution order.
     pub phases: Vec<Phase>,
@@ -91,6 +92,82 @@ impl Schedule {
     /// Total kernel cycles (no overlap accounting — see [`crate::sim`]).
     pub fn kernel_cycles(&self) -> u64 {
         self.phases.iter().flat_map(|p| &p.steps).map(TileStep::kernel_cycles).sum()
+    }
+
+    /// Canonical JSON encoding (the snapshot codec — see
+    /// [`crate::serve::persist`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("phases", Json::Arr(self.phases.iter().map(Phase::to_json).collect()))])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self { phases: v.get("phases")?.as_arr()?.iter().map(Phase::from_json).collect::<Result<_>>()? })
+    }
+}
+
+impl Phase {
+    /// Canonical JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("steps", Json::Arr(self.steps.iter().map(TileStep::to_json).collect())),
+            ("double_buffered", Json::Bool(self.double_buffered)),
+            ("arena", self.arena.to_json()),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            steps: v.get("steps")?.as_arr()?.iter().map(TileStep::from_json).collect::<Result<_>>()?,
+            double_buffered: v.get("double_buffered")?.as_bool()?,
+            arena: ArenaPlan::from_json(v.get("arena")?)?,
+        })
+    }
+}
+
+impl TileStep {
+    /// Canonical JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dma_in", Json::Arr(self.dma_in.iter().map(Transfer::to_json).collect())),
+            ("kernels", Json::Arr(self.kernels.iter().map(KernelInvocation::to_json).collect())),
+            ("dma_out", Json::Arr(self.dma_out.iter().map(Transfer::to_json).collect())),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            dma_in: v.get("dma_in")?.as_arr()?.iter().map(Transfer::from_json).collect::<Result<_>>()?,
+            kernels: v.get("kernels")?.as_arr()?.iter().map(KernelInvocation::from_json).collect::<Result<_>>()?,
+            dma_out: v.get("dma_out")?.as_arr()?.iter().map(Transfer::from_json).collect::<Result<_>>()?,
+        })
+    }
+}
+
+impl KernelInvocation {
+    /// Canonical JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("unit", Json::str(self.unit.name())),
+            ("cycles", Json::int(self.cycles as usize)),
+            ("out_shape", Json::ints(&self.out_shape)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let unit = v.get("unit")?.as_str()?;
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            unit: ComputeUnit::parse(unit).ok_or_else(|| anyhow!("unknown compute unit '{unit}'"))?,
+            cycles: v.get("cycles")?.as_u64()?,
+            out_shape: v.get("out_shape")?.as_usize_arr()?,
+        })
     }
 }
 
@@ -283,6 +360,17 @@ mod tests {
         let units: Vec<ComputeUnit> = s.phases[0].steps[0].kernels.iter().map(|k| k.unit).collect();
         assert!(units.contains(&ComputeUnit::Npu));
         assert!(units.contains(&ComputeUnit::Cluster)); // gelu stays on cluster
+    }
+
+    #[test]
+    fn json_roundtrip_full_schedule() {
+        for (strategy, npu, dbuf) in
+            [(Strategy::LayerPerLayer, false, false), (Strategy::Ftl, true, true), (Strategy::Ftl, false, false)]
+        {
+            let (_, _, s) = deploy(strategy, npu, dbuf);
+            let back = Schedule::from_json(&s.to_json()).unwrap();
+            assert_eq!(back, s, "schedule must round-trip ({strategy:?}, npu={npu}, dbuf={dbuf})");
+        }
     }
 
     #[test]

@@ -102,7 +102,7 @@ impl<V: Clone> LruCache<V> {
     fn lookup(&self, key: Fingerprint) -> Option<V> {
         let mut shard = self.shard(key).lock().expect("plan-cache shard poisoned");
         let entry = shard.map.get_mut(&key.0)?;
-        entry.last_used = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        entry.last_used = self.next_tick();
         Some(entry.value.clone())
     }
 
@@ -114,8 +114,12 @@ impl<V: Clone> LruCache<V> {
         }
         let tick = self.next_tick();
         let mut shard = self.shard(key).lock().expect("plan-cache shard poisoned");
-        shard.map.insert(key.0, Entry { value, last_used: tick });
-        self.inserts.fetch_add(1, Ordering::Relaxed);
+        // A refresh of an existing key is not an insert: `inserts -
+        // evictions` must keep tracking `entries` or persisted-snapshot
+        // accounting drifts.
+        if shard.map.insert(key.0, Entry { value, last_used: tick }).is_none() {
+            self.inserts.fetch_add(1, Ordering::Relaxed);
+        }
         while shard.map.len() > self.per_shard {
             let oldest = shard
                 .map
@@ -131,6 +135,22 @@ impl<V: Clone> LruCache<V> {
     /// Whether a key is currently cached (does not bump recency/counters).
     pub fn contains(&self, key: Fingerprint) -> bool {
         self.shard(key).lock().expect("plan-cache shard poisoned").map.contains_key(&key.0)
+    }
+
+    /// Snapshot every cached entry (no recency/counter side effects) —
+    /// the export hook of the persistence layer ([`crate::serve::persist`]).
+    /// Keys come out sorted so snapshot writes are deterministic.
+    pub fn export(&self) -> Vec<(Fingerprint, V)> {
+        let mut entries: Vec<(Fingerprint, V)> = self
+            .shards
+            .iter()
+            .flat_map(|s| {
+                let shard = s.lock().expect("plan-cache shard poisoned");
+                shard.map.iter().map(|(&k, e)| (Fingerprint(k), e.value.clone())).collect::<Vec<_>>()
+            })
+            .collect();
+        entries.sort_by_key(|(k, _)| *k);
+        entries
     }
 
     /// Current number of cached plans across all shards.
@@ -217,6 +237,51 @@ mod tests {
         c.insert(key(3), 3);
         assert!(c.contains(key(1)));
         assert!(!c.contains(key(2)));
+    }
+
+    #[test]
+    fn refresh_does_not_count_as_insert() {
+        let c: LruCache<u32> = LruCache::new(4, 1);
+        c.insert(key(1), 10);
+        c.insert(key(1), 11); // refresh: value replaced, not a new entry
+        c.insert(key(2), 20);
+        assert_eq!(c.get(key(1)), Some(11), "refresh must keep the newest value");
+        let s = c.stats();
+        assert_eq!(s.inserts, 2, "refreshing an existing key must not bump inserts");
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.inserts - s.evictions, s.entries as u64, "inserts - evictions must track entries");
+    }
+
+    #[test]
+    fn insert_eviction_invariant_holds_under_churn() {
+        let c: LruCache<u32> = LruCache::new(3, 1);
+        for i in 0..32u128 {
+            c.insert(key(i % 7), i as u32); // refreshes and evictions interleave
+            let s = c.stats();
+            assert_eq!(
+                s.inserts - s.evictions,
+                s.entries as u64,
+                "invariant broke at step {i}: inserts={} evictions={} entries={}",
+                s.inserts,
+                s.evictions,
+                s.entries
+            );
+        }
+    }
+
+    #[test]
+    fn export_snapshots_all_entries_without_side_effects() {
+        let c: LruCache<u32> = LruCache::new(8, 4);
+        for i in 0..5u128 {
+            c.insert(key(i << 64 | i), i as u32);
+        }
+        let before = c.stats();
+        let mut exported = c.export();
+        exported.sort_by_key(|(k, _)| k.0);
+        assert_eq!(exported.len(), 5);
+        assert_eq!(exported.iter().map(|&(_, v)| v).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        let after = c.stats();
+        assert_eq!((before.hits, before.misses, before.inserts), (after.hits, after.misses, after.inserts));
     }
 
     #[test]

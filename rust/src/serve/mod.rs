@@ -73,16 +73,35 @@
 //!
 //! Served plans are shared as `Arc<Deployment>` — the cache never clones
 //! a plan, and callers must not mutate one.
+//!
+//! # Persistence (warm start)
+//!
+//! Fingerprints are process-stable by construction, so the caches
+//! survive restarts: [`persist::Snapshotter::attach`] points a
+//! [`PlanService`] at a snapshot directory (`ftl serve --cache-dir`),
+//! loads every valid entry back into the plan + sim caches before the
+//! first request, and write-behinds new entries in the background
+//! (`--snapshot-interval-ms`). The on-disk format is one self-validating
+//! JSON envelope per entry — a format-version tag
+//! ([`persist::SNAPSHOT_FORMAT`]) plus an FNV-1a/128 payload checksum —
+//! written atomically via tmp-file + rename. **Corruption policy:** a
+//! mangled entry is skipped and counted (`persist.skipped_corrupt`), an
+//! entry from another format version likewise (`persist.skipped_version`);
+//! neither is ever fatal, and the affected request simply re-solves. A
+//! restarted replica pointed at a populated directory serves previously
+//! seen requests with zero solves and zero simulator runs.
 
 mod batch;
 mod cache;
 mod fingerprint;
+pub mod persist;
 mod service;
 mod singleflight;
 
 pub use batch::{handle_line, AdmissionPolicy, BatchOptions, BatchOutcome, BatchScheduler};
 pub use cache::{LruCache, PlanCache, SimCache};
-pub use fingerprint::{fingerprint, soc_fingerprint, Fingerprint};
+pub use fingerprint::{checksum, fingerprint, soc_fingerprint, Fingerprint};
+pub use persist::{PersistCounters, PersistOptions, SNAPSHOT_FORMAT, Snapshotter};
 pub use service::{
     resolve_workload, AsyncReply, PlanOutcome, PlanService, ServeOptions, ServeReply, ServeStats,
 };

@@ -1,0 +1,511 @@
+//! `ftl::serve::persist` — the warm-start snapshot layer.
+//!
+//! The whole serve stack rests on one fact: planning is a pure function
+//! of the request, and requests are identified by *process-stable*
+//! content fingerprints ([`super::fingerprint`] deliberately avoids
+//! `std::hash` so keys survive restarts). This module cashes that
+//! promise in: cached `Arc<Deployment>`s and `Arc<SimReport>`s are
+//! serialised through the canonical codec layer
+//! ([`Deployment::to_json`], [`SimReport::to_json`]) into a snapshot
+//! directory, and a restarted service loads them back before taking
+//! traffic — a previously-seen request is then served with **zero**
+//! branch-and-bound solves and **zero** simulator runs.
+//!
+//! # Snapshot format
+//!
+//! One file per cache entry, named `plan-<fingerprint>.json` /
+//! `sim-<fingerprint>.json` (32 lowercase hex digits). Each file is a
+//! self-validating envelope:
+//!
+//! ```json
+//! {
+//!   "format": "ftl-snapshot-v1",         // version tag — bump on any codec change
+//!   "kind": "plan" | "sim",
+//!   "fingerprint": "<32 hex digits>",     // the cache key
+//!   "checksum": "<32 hex digits>",        // FNV-1a/128 over "<kind>\n<fingerprint>\n<payload>"
+//!   "payload": { ... canonical encoding ... }
+//! }
+//! ```
+//!
+//! The checksum covers the kind and fingerprint as well as the compact
+//! payload text, so a corrupted cache key cannot smuggle a valid payload
+//! in under the wrong fingerprint. Writes are atomic: the envelope is
+//! written to a `.tmp-<pid>` sibling and `rename`d into place, so a
+//! crash mid-write can never leave a half-written entry under a final
+//! name (stale tmp files from a crashed writer are deleted at the next
+//! load). Loading is **never fatal**: a file that fails to parse, fails
+//! its checksum, or decodes to garbage is skipped and counted
+//! (`persist.skipped_corrupt`); an entry written by a different format
+//! version is skipped and counted separately (`persist.skipped_version`).
+//! Writing is never fatal either: an entry that cannot be written is
+//! counted (`persist.write_errors`) and retried on the next pass, and
+//! the rest of the pass continues. Only an unreadable/uncreatable
+//! snapshot *directory* errors the attach.
+//!
+//! # Write-behind
+//!
+//! [`Snapshotter::attach`] spawns a background thread that wakes every
+//! `PersistOptions::interval` and writes any cache entry not yet on disk
+//! (entries are immutable once cached — a fingerprint's plan never
+//! changes — so "not yet written" is the only dirty state). A zero
+//! interval disables the thread; [`Snapshotter::flush`] runs the same
+//! pass synchronously, and shutdown/drop performs a final flush so
+//! admitted work is not lost.
+//!
+//! Counters surface in `stats_json` under `"persist"`: `loaded`,
+//! `skipped_corrupt`, `skipped_version`, `snapshots`, `entries_written`,
+//! `bytes_written`, `write_errors`.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Deployment;
+use crate::sim::SimReport;
+use crate::util::json::{parse, Json};
+
+use super::fingerprint::{checksum, Fingerprint};
+use super::service::PlanService;
+
+/// Snapshot format version tag. Bump whenever the canonical encoding of
+/// any persisted type changes incompatibly — old entries are then
+/// skipped (counted as `skipped_version`) instead of mis-decoded.
+pub const SNAPSHOT_FORMAT: &str = "ftl-snapshot-v1";
+
+/// Tunables for a [`Snapshotter`].
+#[derive(Debug, Clone, Copy)]
+pub struct PersistOptions {
+    /// Write-behind pass interval. `Duration::ZERO` disables the
+    /// background thread (snapshots then happen only on explicit
+    /// [`Snapshotter::flush`] calls and at shutdown).
+    pub interval: Duration,
+}
+
+impl Default for PersistOptions {
+    fn default() -> Self {
+        Self { interval: Duration::from_millis(1000) }
+    }
+}
+
+impl PersistOptions {
+    /// Manual-flush-only options (no background thread).
+    pub fn manual() -> Self {
+        Self { interval: Duration::ZERO }
+    }
+}
+
+/// Live persistence counters, shared with [`PlanService`] so they appear
+/// in `stats_json` under `"persist"`.
+#[derive(Debug, Default)]
+pub struct PersistCounters {
+    loaded: AtomicU64,
+    skipped_corrupt: AtomicU64,
+    skipped_version: AtomicU64,
+    snapshots: AtomicU64,
+    entries_written: AtomicU64,
+    bytes_written: AtomicU64,
+    write_errors: AtomicU64,
+}
+
+impl PersistCounters {
+    /// Entries loaded into the caches at attach time.
+    pub fn loaded(&self) -> u64 {
+        self.loaded.load(Ordering::Relaxed)
+    }
+
+    /// Entries skipped because they were unreadable, unparseable, failed
+    /// their checksum, or failed payload decoding.
+    pub fn skipped_corrupt(&self) -> u64 {
+        self.skipped_corrupt.load(Ordering::Relaxed)
+    }
+
+    /// Entries skipped because they carry a different format version.
+    pub fn skipped_version(&self) -> u64 {
+        self.skipped_version.load(Ordering::Relaxed)
+    }
+
+    /// Completed snapshot passes (background + manual + shutdown).
+    pub fn snapshots(&self) -> u64 {
+        self.snapshots.load(Ordering::Relaxed)
+    }
+
+    /// Entries written to disk over the snapshotter's lifetime.
+    pub fn entries_written(&self) -> u64 {
+        self.entries_written.load(Ordering::Relaxed)
+    }
+
+    /// Envelope bytes written to disk over the snapshotter's lifetime.
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written.load(Ordering::Relaxed)
+    }
+
+    /// Entries that failed to write (skipped for the pass, retried on
+    /// the next one).
+    pub fn write_errors(&self) -> u64 {
+        self.write_errors.load(Ordering::Relaxed)
+    }
+
+    /// The `stats_json` rendering (`"persist": {...}`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("loaded", Json::int(self.loaded() as usize)),
+            ("skipped_corrupt", Json::int(self.skipped_corrupt() as usize)),
+            ("skipped_version", Json::int(self.skipped_version() as usize)),
+            ("snapshots", Json::int(self.snapshots() as usize)),
+            ("entries_written", Json::int(self.entries_written() as usize)),
+            ("bytes_written", Json::int(self.bytes_written() as usize)),
+            ("write_errors", Json::int(self.write_errors() as usize)),
+        ])
+    }
+}
+
+const KIND_PLAN: u8 = 0;
+const KIND_SIM: u8 = 1;
+
+/// The write-behind snapshotter (see module docs). Attach one to a
+/// [`PlanService`] and point it at a snapshot directory; existing
+/// entries warm-start the caches immediately, new entries are persisted
+/// in the background (or on [`Snapshotter::flush`]).
+pub struct Snapshotter {
+    inner: Arc<SnapInner>,
+    writer: Mutex<Option<JoinHandle<()>>>,
+}
+
+struct SnapInner {
+    service: Arc<PlanService>,
+    dir: PathBuf,
+    counters: Arc<PersistCounters>,
+    /// Keys already on disk (seeded at load) — entries are immutable, so
+    /// this is the entire dirty-tracking state.
+    written: Mutex<HashSet<(u8, u128)>>,
+    stop: Mutex<bool>,
+    wake: Condvar,
+}
+
+impl Snapshotter {
+    /// Warm-start `service` from `dir` (creating it if absent), register
+    /// the `persist.*` counters with the service, and start the
+    /// write-behind thread (unless `opts.interval` is zero). Corrupt or
+    /// version-mismatched entries are skipped and counted, never fatal.
+    pub fn attach(service: Arc<PlanService>, dir: impl Into<PathBuf>, opts: PersistOptions) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating snapshot directory {}", dir.display()))?;
+        let counters = Arc::new(PersistCounters::default());
+        service.set_persist_counters(counters.clone());
+        let mut written = HashSet::new();
+        load_dir(&service, &dir, &counters, &mut written)?;
+        let inner = Arc::new(SnapInner {
+            service,
+            dir,
+            counters,
+            written: Mutex::new(written),
+            stop: Mutex::new(false),
+            wake: Condvar::new(),
+        });
+        let writer = if opts.interval.is_zero() {
+            None
+        } else {
+            let worker = inner.clone();
+            let interval = opts.interval;
+            let handle = std::thread::Builder::new()
+                .name("ftl-snapshotter".into())
+                .spawn(move || {
+                    let mut stopped = worker.stop.lock().expect("snapshotter stop flag poisoned");
+                    loop {
+                        if *stopped {
+                            break;
+                        }
+                        let (guard, _) =
+                            worker.wake.wait_timeout(stopped, interval).expect("snapshotter stop flag poisoned");
+                        stopped = guard;
+                        if *stopped {
+                            break;
+                        }
+                        drop(stopped);
+                        worker.flush();
+                        stopped = worker.stop.lock().expect("snapshotter stop flag poisoned");
+                    }
+                })
+                .expect("spawn snapshotter thread");
+            Some(handle)
+        };
+        Ok(Self { inner, writer: Mutex::new(writer) })
+    }
+
+    /// Run one write-behind pass now; returns how many new entries were
+    /// written. Never fails: an entry that cannot be written is counted
+    /// (`write_errors`) and retried on the next pass. Safe to call
+    /// concurrently with the background thread.
+    pub fn flush(&self) -> usize {
+        self.inner.flush()
+    }
+
+    /// The snapshot directory.
+    pub fn dir(&self) -> &Path {
+        &self.inner.dir
+    }
+
+    /// Live counters (shared with the service's `stats_json`).
+    pub fn counters(&self) -> &PersistCounters {
+        &self.inner.counters
+    }
+
+    /// Stop the background thread and run a final flush so every cached
+    /// entry reaches disk (also runs on drop).
+    pub fn shutdown(&self) {
+        {
+            let mut stopped = self.inner.stop.lock().expect("snapshotter stop flag poisoned");
+            *stopped = true;
+        }
+        self.inner.wake.notify_all();
+        if let Some(handle) = self.writer.lock().expect("snapshotter writer poisoned").take() {
+            handle.join().ok();
+        }
+        self.inner.flush();
+    }
+}
+
+impl Drop for Snapshotter {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl SnapInner {
+    /// One write-behind pass: persist every cache entry not yet on disk.
+    /// Per-entry write failures are counted and retried next pass — one
+    /// unwritable entry must not starve the rest (mirror of the load
+    /// side's skip-and-count policy). The flush holds the `written` set
+    /// for its whole duration — only snapshotter threads touch it, and
+    /// there is at most one background thread, so this serialises
+    /// concurrent manual flushes.
+    fn flush(&self) -> usize {
+        let mut written = self.written.lock().expect("snapshotter written-set poisoned");
+        let mut wrote = 0usize;
+        let mut bytes = 0u64;
+        // The `written` check comes before serialization: in steady state
+        // (everything on disk) a pass must not rebuild a single Json tree.
+        for (key, plan) in self.service.export_plans() {
+            if written.contains(&(KIND_PLAN, key.0)) {
+                continue;
+            }
+            if self.persist_one("plan", key, plan.to_json(), &mut wrote, &mut bytes) {
+                written.insert((KIND_PLAN, key.0));
+            }
+        }
+        for (key, sim) in self.service.export_sims() {
+            if written.contains(&(KIND_SIM, key.0)) {
+                continue;
+            }
+            if self.persist_one("sim", key, sim.to_json(), &mut wrote, &mut bytes) {
+                written.insert((KIND_SIM, key.0));
+            }
+        }
+        self.counters.snapshots.fetch_add(1, Ordering::Relaxed);
+        self.counters.entries_written.fetch_add(wrote as u64, Ordering::Relaxed);
+        self.counters.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+        wrote
+    }
+
+    /// Write one envelope, counting failures instead of propagating them
+    /// (a failed entry is retried on the next pass). Returns whether the
+    /// entry reached disk.
+    fn persist_one(&self, tag: &str, key: Fingerprint, payload: Json, wrote: &mut usize, bytes: &mut u64) -> bool {
+        match write_entry(&self.dir, tag, key, payload) {
+            Ok(b) => {
+                *wrote += 1;
+                *bytes += b;
+                true
+            }
+            Err(e) => {
+                self.counters.write_errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!("[ftl-serve] snapshot write failed for {tag}-{}: {e:#}", key.hex());
+                false
+            }
+        }
+    }
+}
+
+/// The checksummed byte string of one envelope: kind + fingerprint +
+/// compact payload text, so corruption of the cache key is caught just
+/// like corruption of the payload.
+fn checksum_input(kind: &str, key: Fingerprint, payload_text: &str) -> String {
+    format!("{kind}\n{}\n{payload_text}", key.hex())
+}
+
+/// Atomically write one envelope; returns its size in bytes.
+fn write_entry(dir: &Path, kind: &str, key: Fingerprint, payload: Json) -> Result<u64> {
+    let payload_text = payload.to_string();
+    let sum = checksum(checksum_input(kind, key, &payload_text).as_bytes());
+    let doc = Json::obj(vec![
+        ("format", Json::str(SNAPSHOT_FORMAT)),
+        ("kind", Json::str(kind)),
+        ("fingerprint", Json::str(key.hex())),
+        ("checksum", Json::str(sum.hex())),
+        ("payload", payload),
+    ]);
+    let text = doc.to_string();
+    let final_path = dir.join(format!("{kind}-{}.json", key.hex()));
+    let tmp_path = dir.join(format!("{kind}-{}.json.tmp-{}", key.hex(), std::process::id()));
+    std::fs::write(&tmp_path, &text).with_context(|| format!("writing {}", tmp_path.display()))?;
+    std::fs::rename(&tmp_path, &final_path).with_context(|| format!("renaming {} into place", tmp_path.display()))?;
+    Ok(text.len() as u64)
+}
+
+/// A decoded snapshot entry.
+enum Loaded {
+    Plan(Fingerprint, Deployment),
+    Sim(Fingerprint, SimReport),
+}
+
+/// Why an entry was skipped.
+enum Skip {
+    Version,
+    Corrupt,
+}
+
+/// Scan `dir` and import every valid entry into the service's caches.
+/// Per-entry failures are counted, never propagated.
+fn load_dir(
+    service: &PlanService,
+    dir: &Path,
+    counters: &PersistCounters,
+    written: &mut HashSet<(u8, u128)>,
+) -> Result<()> {
+    let entries = std::fs::read_dir(dir).with_context(|| format!("reading snapshot directory {}", dir.display()))?;
+    for entry in entries {
+        let Ok(entry) = entry else { continue };
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        // Stale `.tmp-<pid>` files from a crashed writer are dead weight,
+        // but another *live* replica sharing this directory may be
+        // mid-write right now — only reap tmp files old enough that no
+        // in-flight rename can still want them (best-effort).
+        if name.contains(".tmp-") {
+            let stale = std::fs::metadata(&path)
+                .and_then(|m| m.modified())
+                .ok()
+                .and_then(|t| t.elapsed().ok())
+                .is_some_and(|age| age > Duration::from_secs(60));
+            if stale {
+                let _ = std::fs::remove_file(&path);
+            }
+            continue;
+        }
+        // Final entries only.
+        if !name.ends_with(".json") || !(name.starts_with("plan-") || name.starts_with("sim-")) {
+            continue;
+        }
+        match load_entry(&path) {
+            Ok(Loaded::Plan(key, plan)) => {
+                service.import_plan(key, Arc::new(plan));
+                written.insert((KIND_PLAN, key.0));
+                counters.loaded.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(Loaded::Sim(key, sim)) => {
+                service.import_sim(key, Arc::new(sim));
+                written.insert((KIND_SIM, key.0));
+                counters.loaded.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(Skip::Version) => {
+                counters.skipped_version.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(Skip::Corrupt) => {
+                counters.skipped_corrupt.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate and decode one envelope file.
+fn load_entry(path: &Path) -> std::result::Result<Loaded, Skip> {
+    let text = std::fs::read_to_string(path).map_err(|_| Skip::Corrupt)?;
+    let doc = parse(&text).map_err(|_| Skip::Corrupt)?;
+    let format = doc.get("format").and_then(|f| f.as_str()).map_err(|_| Skip::Corrupt)?;
+    if format != SNAPSHOT_FORMAT {
+        return Err(Skip::Version);
+    }
+    let kind = doc.get("kind").and_then(|k| k.as_str()).map_err(|_| Skip::Corrupt)?;
+    let hex = doc.get("fingerprint").and_then(|f| f.as_str()).map_err(|_| Skip::Corrupt)?;
+    let key = Fingerprint(u128::from_str_radix(hex, 16).map_err(|_| Skip::Corrupt)?);
+    let declared = doc.get("checksum").and_then(|c| c.as_str()).map_err(|_| Skip::Corrupt)?;
+    let payload = doc.get("payload").map_err(|_| Skip::Corrupt)?;
+    // Re-serialising the parsed payload through the canonical printer
+    // reproduces the exact text the checksum was computed over (the
+    // printer is deterministic: sorted keys, shortest-roundtrip floats).
+    let canonical = payload.to_string();
+    if checksum(checksum_input(kind, key, &canonical).as_bytes()).hex() != declared {
+        return Err(Skip::Corrupt);
+    }
+    match kind {
+        "plan" => Ok(Loaded::Plan(key, Deployment::from_json(payload).map_err(|_| Skip::Corrupt)?)),
+        "sim" => Ok(Loaded::Sim(key, SimReport::from_json(payload).map_err(|_| Skip::Corrupt)?)),
+        _ => Err(Skip::Corrupt),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dma::DmaStats;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ftl-persist-unit-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn tiny_sim() -> SimReport {
+        SimReport { total_cycles: 42, phases: vec![], dma: DmaStats::default() }
+    }
+
+    #[test]
+    fn envelope_roundtrips_and_rejects_tampering() {
+        let dir = tmp_dir("envelope");
+        let key = Fingerprint(0xfeed_beef);
+        write_entry(&dir, "sim", key, tiny_sim().to_json()).unwrap();
+        let path = dir.join(format!("sim-{}.json", key.hex()));
+        match load_entry(&path).ok().unwrap() {
+            Loaded::Sim(k, sim) => {
+                assert_eq!(k, key);
+                assert_eq!(sim, tiny_sim());
+            }
+            Loaded::Plan(..) => panic!("sim entry decoded as plan"),
+        }
+        // Flip one payload byte: the checksum must catch it.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"total_cycles\":42", "\"total_cycles\":43")).unwrap();
+        assert!(matches!(load_entry(&path), Err(Skip::Corrupt)));
+        // Flip the cache key: the checksum covers it, so a valid payload
+        // can never be imported under a corrupted fingerprint.
+        std::fs::write(&path, text.replace(&key.hex(), &Fingerprint(0xfeed_beee).hex())).unwrap();
+        assert!(matches!(load_entry(&path), Err(Skip::Corrupt)));
+        // A different format version is a version skip, not corruption.
+        std::fs::write(&path, text.replace(SNAPSHOT_FORMAT, "ftl-snapshot-v0")).unwrap();
+        assert!(matches!(load_entry(&path), Err(Skip::Version)));
+        // Unparseable text is corruption.
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(matches!(load_entry(&path), Err(Skip::Corrupt)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn no_tmp_files_survive_a_flush_write() {
+        let dir = tmp_dir("atomic");
+        write_entry(&dir, "sim", Fingerprint(7), tiny_sim().to_json()).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "atomic write must leave no tmp files");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

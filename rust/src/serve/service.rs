@@ -27,6 +27,7 @@ use crate::util::json::Json;
 
 use super::cache::{PlanCache, SimCache};
 use super::fingerprint::{fingerprint, Fingerprint};
+use super::persist::PersistCounters;
 use super::singleflight::SingleFlight;
 
 /// Domain tag separating sim-cache keys from plan-cache keys (see
@@ -107,6 +108,10 @@ struct ServiceInner {
     requests: AtomicU64,
     errors: AtomicU64,
     workers: usize,
+    /// Counters of the attached persistence layer, if any (see
+    /// [`crate::serve::persist::Snapshotter::attach`]); surfaced in
+    /// `stats_json` under `"persist"`.
+    persist: Mutex<Option<Arc<PersistCounters>>>,
 }
 
 impl ServiceInner {
@@ -222,6 +227,7 @@ impl PlanService {
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             workers: opts.workers,
+            persist: Mutex::new(None),
         });
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -337,8 +343,46 @@ impl PlanService {
     }
 
     /// Machine-readable stats snapshot (the protocol's `STATS` response).
+    /// Includes `"persist"` counters when a
+    /// [`crate::serve::persist::Snapshotter`] is attached.
     pub fn stats_json(&self) -> Json {
-        self.stats().to_json()
+        let mut j = self.stats().to_json();
+        if let Some(counters) = self.inner.persist.lock().expect("persist counters poisoned").as_ref() {
+            if let Json::Obj(m) = &mut j {
+                m.insert("persist".into(), counters.to_json());
+            }
+        }
+        j
+    }
+
+    // ------------------------------------------------ persistence hooks
+    // (consumed by `crate::serve::persist` — see its module docs)
+
+    /// Export every cached plan (no counter side effects).
+    pub fn export_plans(&self) -> Vec<(Fingerprint, Arc<Deployment>)> {
+        self.inner.cache.export()
+    }
+
+    /// Export every cached simulation report, keyed by the *derived* sim
+    /// fingerprint (no counter side effects).
+    pub fn export_sims(&self) -> Vec<(Fingerprint, Arc<SimReport>)> {
+        self.inner.sim_cache.export()
+    }
+
+    /// Seed the plan cache with a snapshot entry (warm start).
+    pub fn import_plan(&self, key: Fingerprint, plan: Arc<Deployment>) {
+        self.inner.cache.insert(key, plan);
+    }
+
+    /// Seed the sim cache with a snapshot entry; `key` must be the
+    /// derived sim fingerprint exactly as exported.
+    pub fn import_sim(&self, key: Fingerprint, sim: Arc<SimReport>) {
+        self.inner.sim_cache.insert(key, sim);
+    }
+
+    /// Register the persistence layer's counters for `stats_json`.
+    pub fn set_persist_counters(&self, counters: Arc<PersistCounters>) {
+        *self.inner.persist.lock().expect("persist counters poisoned") = Some(counters);
     }
 
     /// Drain the queue and stop the worker pool (also runs on drop).

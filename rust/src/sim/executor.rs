@@ -1,11 +1,12 @@
 //! Schedule → task graph translation and report collection.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::dma::DmaStats;
 use crate::memory::Level;
 use crate::schedule::{Phase, Schedule};
 use crate::soc::{ComputeUnit, SocConfig};
+use crate::util::json::Json;
 
 use super::engine::{Engine, Resource, TaskId, TaskSpec};
 
@@ -20,18 +21,36 @@ pub enum Boundedness {
     Balanced,
 }
 
-impl std::fmt::Display for Boundedness {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(match self {
+impl Boundedness {
+    /// Canonical name (shared by [`std::fmt::Display`] and the snapshot
+    /// codec).
+    pub const fn name(self) -> &'static str {
+        match self {
             Boundedness::Compute => "compute-bound",
             Boundedness::Dma => "dma-bound",
             Boundedness::Balanced => "balanced",
+        }
+    }
+
+    /// Parse a canonical name back.
+    pub fn parse(s: &str) -> Option<Boundedness> {
+        Some(match s {
+            "compute-bound" => Boundedness::Compute,
+            "dma-bound" => Boundedness::Dma,
+            "balanced" => Boundedness::Balanced,
+            _ => return None,
         })
     }
 }
 
+impl std::fmt::Display for Boundedness {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Per-phase simulation outcome.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PhaseReport {
     /// Phase name (node names joined with '+').
     pub name: String,
@@ -52,7 +71,7 @@ pub struct PhaseReport {
 }
 
 /// Whole-network simulation outcome.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
     /// Total cycles (phases are barriers, so the sum of phase makespans).
     pub total_cycles: u64,
@@ -74,6 +93,57 @@ impl SimReport {
             return 0.0;
         }
         100.0 * (baseline.total_cycles as f64 - self.total_cycles as f64) / baseline.total_cycles as f64
+    }
+
+    /// Canonical JSON encoding (the snapshot codec — see
+    /// [`crate::serve::persist`]; distinct from [`crate::metrics::sim_json`],
+    /// which renders for reports and is not decodable).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_cycles", Json::int(self.total_cycles as usize)),
+            ("phases", Json::Arr(self.phases.iter().map(PhaseReport::to_json).collect())),
+            ("dma", self.dma.to_json()),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            total_cycles: v.get("total_cycles")?.as_u64()?,
+            phases: v.get("phases")?.as_arr()?.iter().map(PhaseReport::from_json).collect::<Result<_>>()?,
+            dma: DmaStats::from_json(v.get("dma")?)?,
+        })
+    }
+}
+
+impl PhaseReport {
+    /// Canonical JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("cycles", Json::int(self.cycles as usize)),
+            ("cluster_busy", Json::int(self.cluster_busy as usize)),
+            ("npu_busy", Json::int(self.npu_busy as usize)),
+            ("dma_l2_busy", Json::int(self.dma_l2_busy as usize)),
+            ("dma_l3_busy", Json::int(self.dma_l3_busy as usize)),
+            ("bound", Json::str(self.bound.name())),
+            ("dma", self.dma.to_json()),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let bound = v.get("bound")?.as_str()?;
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            cycles: v.get("cycles")?.as_u64()?,
+            cluster_busy: v.get("cluster_busy")?.as_u64()?,
+            npu_busy: v.get("npu_busy")?.as_u64()?,
+            dma_l2_busy: v.get("dma_l2_busy")?.as_u64()?,
+            dma_l3_busy: v.get("dma_l3_busy")?.as_u64()?,
+            bound: Boundedness::parse(bound).ok_or_else(|| anyhow!("unknown boundedness '{bound}'"))?,
+            dma: DmaStats::from_json(v.get("dma")?)?,
+        })
     }
 }
 
@@ -280,6 +350,18 @@ mod tests {
         assert!(no_npu.phases.iter().all(|p| p.npu_busy == 0));
         let with_npu = run(Strategy::Ftl, true, false);
         assert!(with_npu.phases.iter().any(|p| p.npu_busy > 0));
+    }
+
+    #[test]
+    fn sim_report_json_roundtrip() {
+        for (npu, dbuf) in [(false, false), (true, true)] {
+            let rep = run(Strategy::Ftl, npu, dbuf);
+            let back = SimReport::from_json(&rep.to_json()).unwrap();
+            assert_eq!(back, rep, "sim report must round-trip (npu={npu}, dbuf={dbuf})");
+        }
+        for b in [Boundedness::Compute, Boundedness::Dma, Boundedness::Balanced] {
+            assert_eq!(Boundedness::parse(b.name()), Some(b));
+        }
     }
 
     #[test]

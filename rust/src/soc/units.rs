@@ -18,6 +18,16 @@ impl ComputeUnit {
             ComputeUnit::Npu => "npu",
         }
     }
+
+    /// Parse a display name back (the snapshot codec's inverse of
+    /// [`ComputeUnit::name`]).
+    pub fn parse(s: &str) -> Option<ComputeUnit> {
+        Some(match s {
+            "cluster" => ComputeUnit::Cluster,
+            "npu" => ComputeUnit::Npu,
+            _ => return None,
+        })
+    }
 }
 
 impl std::fmt::Display for ComputeUnit {

@@ -8,9 +8,12 @@
 //! tiles.
 
 
-use crate::ir::{NodeId, Op, TensorId};
+use anyhow::{anyhow, Result};
+
+use crate::ir::{op_from_json, op_to_json, NodeId, Op, TensorId};
 use crate::memory::{BufferRole, Level};
 use crate::soc::ComputeUnit;
+use crate::util::json::Json;
 
 /// One free tile variable, placed at a loop level.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -71,7 +74,7 @@ impl DimSpec {
 }
 
 /// One L1 tile buffer of a group.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GroupBuffer {
     /// Backing tensor.
     pub tensor: TensorId,
@@ -119,7 +122,7 @@ impl GroupBuffer {
 }
 
 /// One node of the group with its kernel placement.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct NodeTile {
     /// Graph node id.
     pub node: NodeId,
@@ -136,7 +139,7 @@ pub struct NodeTile {
 }
 
 /// Solved tiling for one fusion group.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GroupSolution {
     /// Nodes in execution order.
     pub nodes: Vec<NodeTile>,
@@ -199,7 +202,7 @@ impl GroupSolution {
 }
 
 /// The full-graph solution.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TilingSolution {
     /// Per-group solutions, in execution order.
     pub groups: Vec<GroupSolution>,
@@ -215,6 +218,164 @@ impl TilingSolution {
     /// Max L1 footprint over groups.
     pub fn peak_l1(&self) -> usize {
         self.groups.iter().map(|g| g.footprint).max().unwrap_or(0)
+    }
+
+    /// Canonical JSON encoding (the snapshot codec — see
+    /// [`crate::serve::persist`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("groups", Json::Arr(self.groups.iter().map(GroupSolution::to_json).collect()))])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self { groups: v.get("groups")?.as_arr()?.iter().map(GroupSolution::from_json).collect::<Result<_>>()? })
+    }
+}
+
+// ---------------------------------------------------------- snapshot codec
+
+impl FreeVarChoice {
+    /// Canonical JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("full", Json::int(self.full)),
+            ("tile", Json::int(self.tile)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            full: v.get("full")?.as_usize()?,
+            tile: v.get("tile")?.as_usize()?,
+        })
+    }
+}
+
+impl DimSpec {
+    /// Canonical JSON encoding (`"loop": null` encodes a fixed dim).
+    pub fn to_json(&self) -> Json {
+        let loop_idx = match self.loop_idx {
+            None => Json::Null,
+            Some(l) => Json::int(l),
+        };
+        Json::obj(vec![
+            ("full", Json::int(self.full)),
+            ("loop", loop_idx),
+            ("a", Json::int(self.a)),
+            ("b", Json::int(self.b)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let loop_idx = match v.get("loop")? {
+            Json::Null => None,
+            other => Some(other.as_usize()?),
+        };
+        Ok(Self {
+            full: v.get("full")?.as_usize()?,
+            loop_idx,
+            a: v.get("a")?.as_usize()?,
+            b: v.get("b")?.as_usize()?,
+        })
+    }
+}
+
+impl GroupBuffer {
+    /// Canonical JSON encoding (`"home": null` encodes a fused
+    /// intermediate that never leaves L1).
+    pub fn to_json(&self) -> Json {
+        let home = match self.home {
+            None => Json::Null,
+            Some(l) => Json::str(l.name()),
+        };
+        Json::obj(vec![
+            ("tensor", Json::int(self.tensor)),
+            ("name", Json::str(&self.name)),
+            ("role", Json::str(self.role.name())),
+            ("elem_bytes", Json::int(self.elem_bytes)),
+            ("dims", Json::Arr(self.dims.iter().map(DimSpec::to_json).collect())),
+            ("home", home),
+            ("fetch_depth", Json::int(self.fetch_depth)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let role = v.get("role")?.as_str()?;
+        let home = match v.get("home")? {
+            Json::Null => None,
+            other => {
+                let name = other.as_str()?;
+                Some(Level::parse(name).ok_or_else(|| anyhow!("unknown memory level '{name}'"))?)
+            }
+        };
+        Ok(Self {
+            tensor: v.get("tensor")?.as_usize()?,
+            name: v.get("name")?.as_str()?.to_string(),
+            role: BufferRole::parse(role).ok_or_else(|| anyhow!("unknown buffer role '{role}'"))?,
+            elem_bytes: v.get("elem_bytes")?.as_usize()?,
+            dims: v.get("dims")?.as_arr()?.iter().map(DimSpec::from_json).collect::<Result<_>>()?,
+            home,
+            fetch_depth: v.get("fetch_depth")?.as_usize()?,
+        })
+    }
+}
+
+impl NodeTile {
+    /// Canonical JSON encoding (the operator nests as the interchange
+    /// format's `{"op", "attrs"}` object).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", Json::int(self.node)),
+            ("name", Json::str(&self.name)),
+            ("op", op_to_json(&self.op)),
+            ("unit", Json::str(self.unit.name())),
+            ("input_bufs", Json::ints(&self.input_bufs)),
+            ("output_buf", Json::int(self.output_buf)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let unit = v.get("unit")?.as_str()?;
+        Ok(Self {
+            node: v.get("node")?.as_usize()?,
+            name: v.get("name")?.as_str()?.to_string(),
+            op: op_from_json(v.get("op")?)?,
+            unit: ComputeUnit::parse(unit).ok_or_else(|| anyhow!("unknown compute unit '{unit}'"))?,
+            input_bufs: v.get("input_bufs")?.as_usize_arr()?,
+            output_buf: v.get("output_buf")?.as_usize()?,
+        })
+    }
+}
+
+impl GroupSolution {
+    /// Canonical JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::Arr(self.nodes.iter().map(NodeTile::to_json).collect())),
+            ("loops", Json::Arr(self.loops.iter().map(FreeVarChoice::to_json).collect())),
+            ("buffers", Json::Arr(self.buffers.iter().map(GroupBuffer::to_json).collect())),
+            ("footprint", Json::int(self.footprint)),
+            ("double_buffered", Json::Bool(self.double_buffered)),
+            ("estimated_cycles", Json::int(self.estimated_cycles as usize)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            nodes: v.get("nodes")?.as_arr()?.iter().map(NodeTile::from_json).collect::<Result<_>>()?,
+            loops: v.get("loops")?.as_arr()?.iter().map(FreeVarChoice::from_json).collect::<Result<_>>()?,
+            buffers: v.get("buffers")?.as_arr()?.iter().map(GroupBuffer::from_json).collect::<Result<_>>()?,
+            footprint: v.get("footprint")?.as_usize()?,
+            double_buffered: v.get("double_buffered")?.as_bool()?,
+            estimated_cycles: v.get("estimated_cycles")?.as_u64()?,
+        })
     }
 }
 
@@ -300,6 +461,44 @@ mod tests {
         assert_eq!(s.changed_depth(Some(&iters[0]), &iters[1]), 1);
         // iter 1→2: M advanced (depth 0)
         assert_eq!(s.changed_depth(Some(&iters[1]), &iters[2]), 0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let sol = TilingSolution {
+            groups: vec![GroupSolution {
+                nodes: vec![NodeTile {
+                    node: 0,
+                    name: "fc1".into(),
+                    op: Op::Gemm { transpose_b: false, has_bias: true },
+                    unit: ComputeUnit::Cluster,
+                    input_bufs: vec![0, 1],
+                    output_buf: 2,
+                }],
+                loops: loops(),
+                buffers: vec![GroupBuffer {
+                    tensor: 3,
+                    name: "x".into(),
+                    role: BufferRole::Input,
+                    elem_bytes: 1,
+                    dims: vec![
+                        DimSpec { full: 10, loop_idx: Some(0), a: 1, b: 0 },
+                        DimSpec { full: 768, loop_idx: None, a: 0, b: 768 },
+                    ],
+                    home: Some(Level::L2),
+                    fetch_depth: 1,
+                }],
+                footprint: 4096,
+                double_buffered: true,
+                estimated_cycles: 123_456,
+            }],
+        };
+        let back = TilingSolution::from_json(&sol.to_json()).unwrap();
+        assert_eq!(back, sol);
+        // A fused-intermediate buffer (home: null) round-trips too.
+        let mut nul = sol.clone();
+        nul.groups[0].buffers[0].home = None;
+        assert_eq!(TilingSolution::from_json(&nul.to_json()).unwrap(), nul);
     }
 
     #[test]

@@ -83,6 +83,25 @@ impl Json {
         Ok(n as usize)
     }
 
+    /// As u64 (must be a non-negative integer ≤ 2⁵³).
+    pub fn as_u64(&self) -> Result<u64> {
+        let n = self.as_f64()?;
+        if n < 0.0 || n.fract() != 0.0 || n > 2f64.powi(53) {
+            bail!("expected non-negative integer, got {n}");
+        }
+        Ok(n as u64)
+    }
+
+    /// As a vector of non-negative integers.
+    pub fn as_usize_arr(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(Json::as_usize).collect()
+    }
+
+    /// Integer-array builder (the codec layer's shape/id lists).
+    pub fn ints(xs: &[usize]) -> Json {
+        Json::Arr(xs.iter().map(|&v| Json::int(v)).collect())
+    }
+
     /// As bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
@@ -420,6 +439,37 @@ mod tests {
         assert_eq!(v.as_str().unwrap(), "A\t\"ü");
         let s = Json::str("a\"b\\c\nd");
         assert_eq!(parse(&s.to_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn control_characters_always_escaped() {
+        // Regression: every control character below U+0020 must come out
+        // as a valid JSON escape (`\u00XX` or a short form), never raw —
+        // a raw 0x01 in a protocol response or persisted snapshot is
+        // invalid JSON and corrupts the whole document.
+        for cp in 0u32..0x20 {
+            let c = char::from_u32(cp).unwrap();
+            let s = Json::str(format!("a{c}b"));
+            let text = s.to_string();
+            assert!(text.bytes().all(|b| b >= 0x20), "control char U+{cp:04X} emitted raw in {text:?}");
+            assert_eq!(parse(&text).unwrap(), s, "U+{cp:04X} must round-trip");
+        }
+        // Exact encodings: short escapes for the common ones, \u00XX else.
+        assert_eq!(Json::str("\n\r\t").to_string(), "\"\\n\\r\\t\"");
+        assert_eq!(Json::str("\u{1}").to_string(), "\"\\u0001\"");
+        assert_eq!(Json::str("\u{8}\u{c}").to_string(), "\"\\u0008\\u000c\"");
+        assert_eq!(Json::str("\u{1f}").to_string(), "\"\\u001f\"");
+    }
+
+    #[test]
+    fn u64_and_usize_arrays() {
+        let v = parse("[3,1,2]").unwrap();
+        assert_eq!(v.as_usize_arr().unwrap(), vec![3, 1, 2]);
+        assert_eq!(Json::ints(&[3, 1, 2]).to_string(), "[3,1,2]");
+        assert_eq!(parse("42").unwrap().as_u64().unwrap(), 42);
+        assert!(parse("-1").unwrap().as_u64().is_err());
+        assert!(parse("1.5").unwrap().as_u64().is_err());
+        assert!(parse("[1,true]").unwrap().as_usize_arr().is_err());
     }
 
     #[test]

@@ -1,9 +1,11 @@
-//! Integration tests for the `ftl::serve` layer: fingerprint contract,
-//! LRU eviction, single-flight coalescing under real concurrency, plan
+//! Integration tests for the `ftl::serve` layer: fingerprint contract
+//! (including golden vectors pinning the canonical encoding), LRU
+//! eviction, single-flight coalescing under real concurrency, plan
 //! sharing, the batching scheduler (admission control, deadlines,
-//! fan-out), the sim-report cache, and the `ftl serve --self-test` CLI
-//! path.
+//! fan-out), the sim-report cache, the persistent warm-start snapshot
+//! layer, and the `ftl serve --self-test` CLI paths.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -11,8 +13,8 @@ use std::time::Duration;
 use ftl::config::DeployConfig;
 use ftl::coordinator::experiments;
 use ftl::serve::{
-    fingerprint, AdmissionPolicy, BatchOptions, BatchOutcome, BatchScheduler, Fingerprint, LruCache,
-    PlanService, ServeOptions, SingleFlight,
+    checksum, fingerprint, soc_fingerprint, AdmissionPolicy, BatchOptions, BatchOutcome, BatchScheduler, Fingerprint,
+    LruCache, PersistOptions, PlanService, SNAPSHOT_FORMAT, ServeOptions, SingleFlight, Snapshotter,
 };
 use ftl::tiling::Strategy;
 use ftl::Graph;
@@ -87,6 +89,28 @@ fn fingerprint_discriminates_every_config_knob() {
 
     let distinct: std::collections::BTreeSet<u128> = keys.iter().map(|k| k.0).collect();
     assert_eq!(distinct.len(), keys.len(), "every planning knob must produce a distinct key");
+}
+
+#[test]
+fn golden_fingerprint_vectors_pin_the_canonical_encoding() {
+    // Exact digests of the canonical byte encoding, independently derived
+    // from the documented FNV-1a/128 scheme. If any assertion here fires,
+    // the encoding changed — which silently invalidates every persisted
+    // snapshot and every cross-replica shared key. If the change is
+    // intentional, bump the relevant version tags (SNAPSHOT_FORMAT, the
+    // "ftl-plan-v1"/"ftl-soc-v1" domain tags) and re-derive these vectors;
+    // never let the encoding drift unversioned.
+    let g = small_graph(); // vit_mlp_stage(16, 24, 48)
+    let siracusa_ftl = fingerprint(&g, &cfg("siracusa", Strategy::Ftl));
+    assert_eq!(siracusa_ftl.hex(), "42aad40208726062841a6df9f2fcc962");
+    let cluster_baseline = fingerprint(&g, &cfg("cluster-only", Strategy::LayerPerLayer));
+    assert_eq!(cluster_baseline.hex(), "0b7e7b01b9c50f23ee421bbf0b427e0a");
+    assert_eq!(soc_fingerprint(&cfg("siracusa", Strategy::Ftl).soc).hex(), "484a0be8e0be53e4b8aaa0ef690d902a");
+    assert_eq!(soc_fingerprint(&cfg("cluster-only", Strategy::Ftl).soc).hex(), "8a1cd28eece50f7d0f84f9476da177b7");
+    // Derived (sim-cache) keys and snapshot checksums are pinned too —
+    // both feed persisted artifacts.
+    assert_eq!(siracusa_ftl.derive("ftl-sim-v1").hex(), "0207d4ee386f5c2b99d1a5114b0fcf7c");
+    assert_eq!(checksum(b"ftl golden vector").hex(), "573e90f18bb28d20cdf5f7e1002e951f");
 }
 
 // ----------------------------------------------------------------------- LRU
@@ -435,6 +459,156 @@ fn stats_json_reports_batch_shed_and_sim_cache() {
     assert!(j.get("plan_cache").is_ok());
 }
 
+// -------------------------------------------------------- persistence layer
+
+/// Fresh, empty snapshot dir for one test (attach() creates it).
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ftl-serve-persist-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn warm_start_restarted_service_serves_with_zero_solves_and_sims() {
+    let dir = temp_dir("warm-start");
+    let g = small_graph();
+    let a = cfg("cluster-only", Strategy::Ftl);
+    let b = cfg("siracusa", Strategy::Ftl);
+    let (cycles_a, cycles_b) = {
+        let svc = Arc::new(PlanService::new(opts(16, 2, 1)));
+        let snap = Snapshotter::attach(svc.clone(), &dir, PersistOptions::manual()).unwrap();
+        let ra = svc.deploy("first", &g, &a).unwrap();
+        let rb = svc.deploy("second", &g, &b).unwrap();
+        assert_eq!(snap.flush(), 4, "two plans + two sim reports must be snapshotted");
+        assert_eq!(snap.counters().write_errors(), 0);
+        (ra.report.sim.total_cycles, rb.report.sim.total_cycles)
+    };
+
+    // "Restart": a fresh service (fresh caches, fresh counters) over the
+    // same directory — the acceptance-criteria scenario.
+    let svc = Arc::new(PlanService::new(opts(16, 2, 1)));
+    let snap = Snapshotter::attach(svc.clone(), &dir, PersistOptions::manual()).unwrap();
+    assert_eq!(snap.counters().loaded(), 4, "restart must load every snapshot entry");
+    let reply = svc.deploy("after-restart", &g, &a).unwrap();
+    assert!(reply.cached && reply.sim_cached, "restarted service must hit both loaded caches");
+    assert_eq!(reply.report.workload, "after-restart");
+    assert_eq!(reply.report.sim.total_cycles, cycles_a, "loaded snapshot must reproduce the original report");
+    assert_eq!(svc.stats().solves, 0, "warm start must perform zero solves");
+    assert_eq!(svc.stats().sims, 0, "warm start must perform zero simulator runs");
+
+    // Same guarantee through the batch scheduler (the `ftl serve` path):
+    // a fully warm request takes the fast path without queueing.
+    let sched = BatchScheduler::new(svc.clone(), BatchOptions::default());
+    let outcome = sched.deploy("batched", g.clone(), b).unwrap();
+    let reply = outcome.served().expect("warm request must be served");
+    assert!(reply.cached && reply.sim_cached);
+    assert_eq!(reply.report.sim.total_cycles, cycles_b);
+    assert_eq!(svc.stats().solves, 0);
+    assert_eq!(svc.stats().sims, 0);
+    assert_eq!(sched.stats().batched_requests, 0, "fully warm restart traffic must bypass the queue");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_and_version_mismatched_entries_are_skipped_never_fatal() {
+    let dir = temp_dir("corrupt");
+    let g = small_graph();
+    let c = cfg("cluster-only", Strategy::Ftl);
+    {
+        let svc = Arc::new(PlanService::new(opts(8, 1, 1)));
+        let snap = Snapshotter::attach(svc.clone(), &dir, PersistOptions::manual()).unwrap();
+        svc.deploy("seed", &g, &c).unwrap();
+        assert_eq!(snap.flush(), 2);
+    }
+    // Damage the plan entry, drop in a garbage file, and add a
+    // version-mismatched sim entry; the original sim entry stays intact.
+    let files: Vec<PathBuf> = std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+    let name = |p: &PathBuf| p.file_name().unwrap().to_str().unwrap().to_string();
+    let plan_file = files.iter().find(|p| name(p).starts_with("plan-")).unwrap();
+    std::fs::write(plan_file, "{\"format\":\"ftl-snapshot-v1\", truncated mid-write").unwrap();
+    std::fs::write(dir.join("plan-00000000000000000000000000000000.json"), "not json at all").unwrap();
+    let sim_file = files.iter().find(|p| name(p).starts_with("sim-")).unwrap();
+    let versioned = std::fs::read_to_string(sim_file).unwrap().replace(SNAPSHOT_FORMAT, "ftl-snapshot-v999");
+    std::fs::write(dir.join("sim-11111111111111111111111111111111.json"), versioned).unwrap();
+
+    let svc = Arc::new(PlanService::new(opts(8, 1, 1)));
+    let snap = Snapshotter::attach(svc.clone(), &dir, PersistOptions::manual()).unwrap();
+    assert_eq!(snap.counters().loaded(), 1, "the intact sim entry must still load");
+    assert_eq!(snap.counters().skipped_corrupt(), 2, "truncated + garbage files are corrupt skips");
+    assert_eq!(snap.counters().skipped_version(), 1, "foreign format tag is a version skip");
+
+    // Degraded but alive: the damaged plan re-solves, the intact sim
+    // entry still short-circuits the simulator.
+    let reply = svc.deploy("recover", &g, &c).unwrap();
+    assert!(!reply.cached, "damaged plan entry must fall back to a fresh solve");
+    assert!(reply.sim_cached, "intact sim entry must still serve");
+    assert_eq!(svc.stats().solves, 1);
+    assert_eq!(svc.stats().sims, 0);
+
+    // persist.* counters surface in the STATS payload.
+    let j = svc.stats_json();
+    let persist = j.get("persist").unwrap();
+    assert_eq!(persist.get("loaded").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(persist.get("skipped_corrupt").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(persist.get("skipped_version").unwrap().as_usize().unwrap(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn background_snapshotter_writes_behind_without_explicit_flush() {
+    let dir = temp_dir("write-behind");
+    let svc = Arc::new(PlanService::new(opts(8, 1, 1)));
+    let snap = Snapshotter::attach(svc.clone(), &dir, PersistOptions { interval: Duration::from_millis(20) }).unwrap();
+    svc.deploy("bg", &small_graph(), &cfg("cluster-only", Strategy::Ftl)).unwrap();
+    let start = std::time::Instant::now();
+    while snap.counters().entries_written() < 2 && start.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(
+        snap.counters().entries_written() >= 2,
+        "write-behind thread must persist entries without an explicit flush"
+    );
+    assert!(snap.counters().snapshots() >= 1);
+    // No half-written files under final names.
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        let n = p.file_name().unwrap().to_str().unwrap().to_string();
+        if n.ends_with(".json") {
+            assert!(
+                ftl::util::json::parse(&std::fs::read_to_string(&p).unwrap()).is_ok(),
+                "snapshot entry {n} must be complete valid JSON"
+            );
+        }
+    }
+    snap.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deployment_and_sim_report_roundtrip_property() {
+    // Round-trip property over real solved deployments: every knob
+    // combination the pool covers must decode back to an identical,
+    // still-servable plan. (Shapes come from a pool the solver is known
+    // to handle; the knobs vary per seeded case.)
+    let shapes = [(16usize, 24usize, 48usize), (32, 32, 64), (64, 32, 96)];
+    ftl::util::prop::cases(6, |rng| {
+        let &(seq, d, h) = rng.pick(&shapes);
+        let soc = *rng.pick(&["siracusa", "cluster-only"]);
+        let strategy = if rng.chance(0.5) { Strategy::Ftl } else { Strategy::LayerPerLayer };
+        let mut c = cfg(soc, strategy);
+        c.double_buffer = rng.chance(0.5);
+        let g = experiments::vit_mlp_stage(seq, d, h);
+        let plan = ftl::Deployer::new(g, c.clone()).plan().unwrap();
+        let back = ftl::Deployment::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan, "deployment must round-trip ({seq}x{d}x{h}, {soc}, {strategy:?})");
+        let sim = plan.simulate(&c).unwrap();
+        let sim_back = ftl::sim::SimReport::from_json(&sim.to_json()).unwrap();
+        assert_eq!(sim_back, sim, "sim report must round-trip");
+        // The decoded plan is still servable: it re-simulates identically.
+        assert_eq!(back.simulate(&c).unwrap(), sim);
+    });
+}
+
 // ------------------------------------------------------------------ CLI path
 
 #[test]
@@ -448,4 +622,34 @@ fn cli_serve_self_test_passes() {
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(out.status.success(), "ftl serve --self-test failed:\n{stdout}\n{stderr}");
     assert!(stdout.contains("self-test OK"), "unexpected output:\n{stdout}");
+}
+
+#[test]
+fn cli_serve_warm_start_self_test_reports_zero_solves_on_second_run() {
+    // The CI warm-start smoke step in miniature: two `ftl serve
+    // --self-test --cache-dir` runs against one directory. The first
+    // populates the snapshot (one solve per distinct request), the second
+    // must serve everything from the loaded caches.
+    let dir = temp_dir("cli-warm");
+    let exe = env!("CARGO_BIN_EXE_ftl");
+    let run = || {
+        let out = std::process::Command::new(exe)
+            .args(["serve", "--self-test", "--cache-dir", dir.to_str().unwrap()])
+            .output()
+            .expect("run ftl serve --self-test --cache-dir");
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+        assert!(out.status.success(), "warm-start self-test failed:\n{stdout}\n{stderr}");
+        assert!(stdout.contains("warm-start self-test OK"), "unexpected output:\n{stdout}");
+        stdout
+    };
+    let first = run();
+    assert!(first.contains("loaded=0"), "first run starts cold:\n{first}");
+    assert!(first.contains("solves=3 sims=3"), "first run must solve each distinct request:\n{first}");
+    let second = run();
+    assert!(
+        second.contains("solves=0 sims=0"),
+        "second run against the populated cache dir must not solve or simulate:\n{second}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
