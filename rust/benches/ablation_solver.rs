@@ -2,7 +2,10 @@
 //!
 //! (a) performance-constraint class on/off (paper step ②, third class);
 //! (b) candidate-budget sweep (solve quality vs solve time);
-//! (c) solver wall-clock per fusion-group size.
+//! (c) solver wall-clock per fusion-group size;
+//! (d) branch-and-bound vs exhaustive sweep — wall-clock and exact
+//!     search-space accounting (scored vs pruned points), single- and
+//!     multi-threaded, on the paper's ViT MLP stage.
 
 use std::time::Duration;
 
@@ -11,10 +14,15 @@ use ftl::coordinator::{experiments, Deployer};
 use ftl::ir::builder::deep_mlp;
 use ftl::ir::DType;
 use ftl::metrics::Table;
-use ftl::tiling::{fuse_groups, solve_graph, FusionPolicy, SolverOptions, Strategy};
+use ftl::tiling::{
+    assign_homes, fuse_groups, solve_graph, solve_group_exhaustive, solve_group_in, FusionPolicy, SolverOptions,
+    SolverPool, Strategy,
+};
 use ftl::util::bench::bench;
 
 fn main() {
+    let smoke = std::env::var("FTL_BENCH_SMOKE").is_ok();
+    let t = |secs: u64| if smoke { Duration::from_millis(40) } else { Duration::from_secs(secs) };
     let (seq, d, h) = (197, 768, 3072);
     println!("=== Ext-C: solver ablations ===\n");
 
@@ -30,32 +38,80 @@ fn main() {
 
     // (b) candidate budget sweep
     println!("(b) candidate budget (solve quality vs. effort):");
-    let mut t = Table::new(&["max_candidates", "est. cycles", "sim cycles"]);
+    let mut budget_table = Table::new(&["max_candidates", "est. cycles", "sim cycles"]);
     for cands in [4, 8, 16, 32, 64, 128] {
         let graph = experiments::vit_mlp_stage(seq, d, h);
         let mut cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
         cfg.solver.max_candidates = cands;
         let dep = Deployer::new(graph, cfg);
         let (plan, report) = dep.deploy().unwrap();
-        t.row(&[
+        budget_table.row(&[
             cands.to_string(),
             plan.solution.estimated_cycles().to_string(),
             report.sim.total_cycles.to_string(),
         ]);
     }
-    println!("{}", t.render());
+    println!("{}", budget_table.render());
 
     // (c) solver wall-clock
     println!("(c) solver wall-clock:");
     let graph = experiments::vit_mlp_stage(seq, d, h);
     let soc = ftl::soc::siracusa_reduced();
-    bench("solver/stage_ftl_group", Duration::from_secs(2), || {
+    bench("solver/stage_ftl_group", t(2), || {
         let groups = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
         let _ = solve_graph(&graph, &soc, groups, &SolverOptions::default(), false).unwrap();
     });
     let deep = deep_mlp(128, 512, 6, DType::Int8);
-    bench("solver/deep_mlp_12_nodes", Duration::from_secs(2), || {
+    bench("solver/deep_mlp_12_nodes", t(2), || {
         let groups = fuse_groups(&deep, Strategy::Ftl, FusionPolicy::default());
         let _ = solve_graph(&deep, &soc, groups, &SolverOptions::default(), false).unwrap();
     });
+
+    // (d) branch-and-bound vs exhaustive sweep
+    println!("\n(d) branch-and-bound vs exhaustive (ViT MLP stage, fused group):");
+    let groups = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
+    let homes = assign_homes(&graph, &groups, &soc);
+    let exh = bench("solver/bnb_off_exhaustive", t(2), || {
+        for gr in &groups {
+            let _ = solve_group_exhaustive(&graph, &soc, gr, &homes, &SolverOptions::default(), false).unwrap();
+        }
+    });
+    let mut rows: Vec<(String, std::time::Duration, Option<ftl::tiling::SearchStats>)> =
+        vec![("exhaustive".into(), exh.median, None)];
+    for threads in [1usize, 0] {
+        let pool = SolverPool::new(threads);
+        let label = if threads == 1 { "bnb threads=1" } else { "bnb threads=auto" };
+        let r = bench(&format!("solver/{}", label.replace(' ', "_").replace('=', "-")), t(2), || {
+            for gr in &groups {
+                let _ =
+                    solve_group_in(&graph, &soc, gr, &homes, &SolverOptions::default(), false, &pool).unwrap();
+            }
+        });
+        rows.push((label.into(), r.median, Some(pool.stats())));
+    }
+    let mut table = Table::new(&["solver", "median", "speedup", "space", "scored", "cap-pruned", "bound-pruned"]);
+    let base = rows[0].1.as_nanos().max(1) as f64;
+    for (label, median, stats) in &rows {
+        let (space, scored, cap, bound) = match stats {
+            // Per-solve averages: the bench harness repeats the solve, so
+            // divide the pool's running totals by the solve count.
+            Some(s) if s.solves > 0 => (
+                (s.space / s.solves).to_string(),
+                (s.scored / s.solves).to_string(),
+                (s.capacity_pruned / s.solves).to_string(),
+                (s.bound_pruned / s.solves).to_string(),
+            ),
+            _ => ("-".into(), "all".into(), "-".into(), "-".into()),
+        };
+        table.row(&[
+            label.clone(),
+            format!("{:.2?}", median),
+            format!("{:.1}x", base / median.as_nanos().max(1) as f64),
+            space,
+            scored,
+            cap,
+            bound,
+        ]);
+    }
+    println!("{}", table.render());
 }

@@ -3,6 +3,13 @@
 //! Micro-benchmarks for every stage of the deployment pipeline plus the
 //! runtime-side tile machinery. These are the numbers tracked in
 //! EXPERIMENTS.md §Perf (before/after each optimisation).
+//!
+//! `pipeline/solve_graph` runs the production parallel branch-and-bound
+//! solver; `pipeline/solve_graph_exhaustive` is the pre-optimisation
+//! flat sweep (the B&B's correctness oracle) and
+//! `pipeline/solve_graph_threads1` isolates the pruning win from the
+//! parallel win. `FTL_BENCH_SMOKE=1` shrinks sampling so CI can execute
+//! the harness end-to-end without paying full measurement time.
 
 use std::time::Duration;
 
@@ -12,11 +19,17 @@ use ftl::memory::{AllocRequest, StaticAllocator};
 use ftl::runtime::{reference, HostTensor, NativeBackend, TileExecutor};
 use ftl::schedule::build_schedule;
 use ftl::sim::simulate;
-use ftl::tiling::{assign_homes, fuse_groups, solve_graph, FusionPolicy, SolverOptions, Strategy};
+use ftl::tiling::{
+    assign_homes, fuse_groups, solve_graph, solve_graph_in, solve_group_exhaustive, FusionPolicy, HomesPolicy,
+    SolverOptions, SolverPool, Strategy,
+};
 use ftl::util::bench::bench;
 use ftl::util::prop::Rng;
 
 fn main() {
+    let smoke = std::env::var("FTL_BENCH_SMOKE").is_ok();
+    let t = |secs: u64| if smoke { Duration::from_millis(40) } else { Duration::from_secs(secs) };
+
     let graph = experiments::vit_mlp_stage(197, 768, 3072);
     let soc = ftl::soc::siracusa_reduced();
     let groups = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
@@ -24,23 +37,45 @@ fn main() {
     let sched = build_schedule(&graph, &soc, &sol).unwrap();
     println!("=== L3 hot paths (EXPERIMENTS.md §Perf) ===\n");
 
-    bench("pipeline/fuse_groups", Duration::from_secs(1), || {
+    bench("pipeline/fuse_groups", t(1), || {
         let _ = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
     });
-    bench("pipeline/assign_homes", Duration::from_secs(1), || {
+    bench("pipeline/assign_homes", t(1), || {
         let _ = assign_homes(&graph, &groups, &soc);
     });
-    bench("pipeline/solve_graph", Duration::from_secs(3), || {
+    bench("pipeline/solve_graph", t(3), || {
         let g = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
         let _ = solve_graph(&graph, &soc, g, &SolverOptions::default(), false).unwrap();
     });
-    bench("pipeline/build_schedule", Duration::from_secs(2), || {
+    // Pruning-only win (no parallel fan-out), and the pre-B&B baseline.
+    let pool1 = SolverPool::new(1);
+    bench("pipeline/solve_graph_threads1", t(3), || {
+        let g = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
+        let _ = solve_graph_in(
+            &graph,
+            &soc,
+            g,
+            &SolverOptions::default(),
+            false,
+            HomesPolicy::Resident,
+            &pool1,
+        )
+        .unwrap();
+    });
+    bench("pipeline/solve_graph_exhaustive", t(3), || {
+        let g = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
+        let homes = assign_homes(&graph, &g, &soc);
+        for gr in &g {
+            let _ = solve_group_exhaustive(&graph, &soc, gr, &homes, &SolverOptions::default(), false).unwrap();
+        }
+    });
+    bench("pipeline/build_schedule", t(2), || {
         let _ = build_schedule(&graph, &soc, &sol).unwrap();
     });
-    bench("pipeline/simulate", Duration::from_secs(2), || {
+    bench("pipeline/simulate", t(2), || {
         let _ = simulate(&sched, &soc).unwrap();
     });
-    bench("pipeline/deploy_end_to_end", Duration::from_secs(3), || {
+    bench("pipeline/deploy_end_to_end", t(3), || {
         let g = experiments::vit_mlp_stage(197, 768, 3072);
         let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
         let _ = Deployer::new(g, cfg).deploy().unwrap();
@@ -55,7 +90,7 @@ fn main() {
         })
         .collect();
     let alloc = StaticAllocator::new(16 << 20, 8);
-    bench("memory/static_alloc_512", Duration::from_secs(2), || {
+    bench("memory/static_alloc_512", t(2), || {
         let _ = alloc.solve(&reqs).unwrap();
     });
 
@@ -65,14 +100,23 @@ fn main() {
     let dep = Deployer::new(small, cfg);
     let plan = dep.plan().unwrap();
     let bindings = reference::random_bindings(dep.graph(), 1);
-    bench("runtime/tile_executor_native_64x96x192", Duration::from_secs(2), || {
+    bench("runtime/tile_executor_native_64x96x192", t(2), || {
         let mut exec = TileExecutor::new(NativeBackend);
         let _ = exec.run(dep.graph(), &plan.solution, &bindings).unwrap();
     });
 
     // Gather/scatter micro-cost.
     let big = HostTensor::random(&[1024, 1024], 3);
-    bench("runtime/gather_128x128", Duration::from_secs(1), || {
+    bench("runtime/gather_128x128", t(1), || {
         let _ = big.gather(&[512, 512], &[128, 128]);
     });
+
+    // Search-space accounting over everything the global pool solved
+    // above: pruning, not scoring, must carry the search.
+    let s = SolverPool::global().stats();
+    println!(
+        "\nsolver counters (global pool): solves={} space={} scored={} capacity_pruned={} \
+         bound_pruned={} subtrees_cut={}",
+        s.solves, s.space, s.scored, s.capacity_pruned, s.bound_pruned, s.subtrees_cut
+    );
 }

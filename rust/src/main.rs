@@ -4,7 +4,13 @@
 //! ftl deploy     --workload vit-base-stage --soc siracusa --strategy ftl [--double-buffer] [--json]
 //! ftl serve      [--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64] [--sim-cache-cap 256]
 //!                [--queue-cap 256] [--batch-window-ms 2] [--max-batch 64] [--shed]
-//!                [--cache-dir DIR] [--snapshot-interval-ms 1000] [--self-test]
+//!                [--cache-dir DIR] [--snapshot-interval-ms 1000] [--cache-max-entries 0] [--self-test]
+//!
+//! Every command also takes `--solver-threads N` (or the
+//! `FTL_SOLVER_THREADS` env var): the branch-and-bound tiling solver's
+//! worker budget. Deterministic — any thread count compiles bit-identical
+//! plans (the serve self-test prints a greppable `plan_digest=` line that
+//! CI compares across thread counts).
 //! ftl fig3       [--seq 197 --dim 768 --hidden 3072] [--double-buffer]
 //! ftl dma        [--soc cluster-only]
 //! ftl emit-tiles --out artifacts/tiles.json
@@ -29,8 +35,8 @@ use ftl::ir::builder::{attention_head, deep_mlp, vit_mlp_block, vit_mlp_preset};
 use ftl::ir::{graph_from_json, graph_to_json, DType, Graph};
 use ftl::runtime::{KernelBackend, NativeBackend, PjrtBackend};
 use ftl::serve::{
-    handle_line, resolve_workload, AdmissionPolicy, BatchOptions, BatchScheduler, PersistOptions, PlanService,
-    ServeOptions, Snapshotter,
+    checksum, handle_line, resolve_workload, AdmissionPolicy, BatchOptions, BatchScheduler, PersistOptions,
+    PlanService, ServeOptions, Snapshotter,
 };
 use ftl::tiling::Strategy;
 use ftl::util::json::Json;
@@ -154,7 +160,8 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// [deadline-ms]` | `STATS` | `PING` (one JSON response per line).
 /// `--queue-cap`, `--batch-window-ms` and `--shed` tune admission
 /// control; `--cache-dir` persists the plan + sim caches across restarts
-/// (write-behind every `--snapshot-interval-ms`, warm start on boot);
+/// (write-behind every `--snapshot-interval-ms`, warm start on boot,
+/// `--cache-max-entries` caps the directory via an mtime-LRU sweep);
 /// `--self-test` exercises the full service in process (cache hits,
 /// single-flight coalescing, warm-vs-cold speedup, batch fan-out,
 /// shedding, deadlines — or, with `--cache-dir`, the snapshot/warm-start
@@ -173,10 +180,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy: if args.has("shed") { AdmissionPolicy::Shed } else { AdmissionPolicy::Block },
     };
     let cache_dir = args.flags.get("cache-dir").cloned();
-    let snapshot_interval = std::time::Duration::from_millis(args.get_usize("snapshot-interval-ms", 1000)? as u64);
+    let persist_opts = PersistOptions {
+        interval: std::time::Duration::from_millis(args.get_usize("snapshot-interval-ms", 1000)? as u64),
+        max_entries: args.get_usize("cache-max-entries", 0)?,
+    };
     if args.has("self-test") {
         return match cache_dir {
-            Some(dir) => serve_warm_start_self_test(opts, batch_opts, &dir, snapshot_interval),
+            Some(dir) => serve_warm_start_self_test(opts, batch_opts, &dir, persist_opts),
             None => serve_self_test(opts, batch_opts),
         };
     }
@@ -185,7 +195,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // write-behinds new entries until shutdown.
     let _snapshotter = match &cache_dir {
         Some(dir) => {
-            let snap = Snapshotter::attach(service.clone(), dir, PersistOptions { interval: snapshot_interval })?;
+            let snap = Snapshotter::attach(service.clone(), dir, persist_opts)?;
             println!(
                 "[ftl-serve] snapshot dir {dir}: loaded {} entries (skipped {} corrupt, {} version)",
                 snap.counters().loaded(),
@@ -384,6 +394,18 @@ fn serve_self_test(opts: ServeOptions, batch_opts: BatchOptions) -> Result<()> {
     ensure!(gate.stats().shed == 1 && scheduler.stats().timeouts == 1, "admission counters must record");
     ensure!(burst_service.stats().solves == 3, "shed/timed-out requests must not reach the solver");
 
+    // 8. Determinism digest: a stable content hash over the three burst
+    // plans, printed greppably so CI can assert that FTL_SOLVER_THREADS=1
+    // and multi-threaded runs compile bit-identical plans.
+    let mut plan_text = String::new();
+    for (_, soc, strategy) in mix {
+        let cfg = DeployConfig::preset(soc, strategy)?;
+        let outcome = burst_service.plan(&graph, &cfg)?;
+        ensure!(outcome.cached, "digest step must reuse the burst's cached plans");
+        plan_text.push_str(&outcome.plan.to_json().to_string());
+    }
+    println!("[ftl-serve] plan_digest={}", checksum(plan_text.as_bytes()).hex());
+
     let stats = service.stats();
     println!("{}", stats.cache.table());
     println!("{}", scheduler.stats().table());
@@ -407,11 +429,11 @@ fn serve_warm_start_self_test(
     opts: ServeOptions,
     batch_opts: BatchOptions,
     dir: &str,
-    interval: std::time::Duration,
+    persist_opts: PersistOptions,
 ) -> Result<()> {
     println!("[ftl-serve] warm-start self-test (cache-dir: {dir})");
     let service = Arc::new(PlanService::new(opts));
-    let snapshotter = Snapshotter::attach(service.clone(), dir, PersistOptions { interval })?;
+    let snapshotter = Snapshotter::attach(service.clone(), dir, persist_opts)?;
     let loaded = snapshotter.counters().loaded();
     let scheduler = BatchScheduler::new(service.clone(), batch_opts);
     let mix = [
@@ -609,7 +631,8 @@ COMMANDS:
   serve        batch-aware deployment service     ([--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64]
                (DEPLOY/STATS/PING line protocol)   [--sim-cache-cap 256] [--cache-shards 8] [--queue-cap 256]
                                                    [--batch-window-ms 2] [--max-batch 64] [--shed]
-                                                   [--cache-dir DIR] [--snapshot-interval-ms 1000] [--self-test])
+                                                   [--cache-dir DIR] [--snapshot-interval-ms 1000]
+                                                   [--cache-max-entries 0] [--self-test])
   fig3         reproduce the paper's Fig. 3       ([--seq --dim --hidden] [--double-buffer] [--json])
   dma          reproduce the -47.1% DMA metric    ([--soc])
   sweep        hidden-dim sweep (Ext-A)           ([--soc])
@@ -621,20 +644,35 @@ COMMANDS:
 WORKLOADS: vit-base-stage (default, the paper's), vit-tiny-stage, mlp-stage
            (--dim/--hidden), vit-base-block, deep-mlp, attention, vit-tiny|small|base|large
 SOCS:      siracusa (cluster+NPU), cluster-only
-STRATEGY:  ftl (default), baseline"
+STRATEGY:  ftl (default), baseline
+GLOBAL:    --solver-threads N (default: FTL_SOLVER_THREADS or auto) — tiling-solver worker budget;
+           deterministic, any value compiles bit-identical plans"
     );
 }
 
-fn main() {
-    let code = match Args::parse().and_then(|args| match args.cmd.as_str() {
-        "deploy" => cmd_deploy(&args),
-        "serve" => cmd_serve(&args),
-        "fig3" => cmd_fig3(&args),
-        "dma" => cmd_dma(&args),
-        "sweep" => cmd_sweep(&args),
-        "emit-tiles" => cmd_emit_tiles(&args),
-        "run" => cmd_run(&args),
-        "export" => cmd_export(&args),
+/// Apply the global solver-concurrency knob: `--solver-threads N`
+/// (any command) overrides the `FTL_SOLVER_THREADS` env default; `0`
+/// restores auto-detection. Thread count never changes solver output
+/// (deterministic branch-and-bound — see `ftl::tiling::SolverPool`), so
+/// this is a pure throughput knob.
+fn apply_solver_threads(args: &Args) -> Result<()> {
+    if args.has("solver-threads") {
+        ftl::tiling::SolverPool::global().set_threads(args.get_usize("solver-threads", 0)?);
+    }
+    Ok(())
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    apply_solver_threads(args)?;
+    match args.cmd.as_str() {
+        "deploy" => cmd_deploy(args),
+        "serve" => cmd_serve(args),
+        "fig3" => cmd_fig3(args),
+        "dma" => cmd_dma(args),
+        "sweep" => cmd_sweep(args),
+        "emit-tiles" => cmd_emit_tiles(args),
+        "run" => cmd_run(args),
+        "export" => cmd_export(args),
         "help" | "--help" | "-h" => {
             help();
             Ok(())
@@ -643,7 +681,11 @@ fn main() {
             help();
             Err(anyhow!("unknown command '{other}'"))
         }
-    }) {
+    }
+}
+
+fn main() {
+    let code = match Args::parse().and_then(|args| dispatch(&args)) {
         Ok(()) => 0,
         Err(e) => {
             eprintln!("error: {e:#}");

@@ -261,10 +261,14 @@ impl BatchInner {
             }
             groups.last_mut().expect("group pushed above").push(p);
         }
-        // One lane per distinct SoC: groups within a lane run
-        // back-to-back (solver/cost-model locality), lanes run in
-        // parallel so distinct-SoC solves don't serialize behind each
-        // other the way a single dispatch loop would.
+        // One lane per distinct SoC: lanes run in parallel so
+        // distinct-SoC solves don't serialize behind each other, and
+        // *within* a lane the distinct-fingerprint groups fan out over
+        // the shared solver pool ([`crate::tiling::SolverPool`]) — one
+        // batch's distinct cold requests solve concurrently, bounded by
+        // the pool's global worker budget (which the per-group
+        // branch-and-bound also draws from, so nesting degrades to fewer
+        // workers per solve instead of oversubscribing).
         let mut lanes: Vec<Vec<Vec<Pending>>> = Vec::new();
         let mut last_soc: Option<Fingerprint> = None;
         for group in groups {
@@ -275,18 +279,15 @@ impl BatchInner {
             }
             lanes.last_mut().expect("lane pushed above").push(group);
         }
+        let pool = crate::tiling::SolverPool::global();
         if lanes.len() == 1 {
-            for group in lanes.remove(0) {
-                self.dispatch_group(group);
-            }
+            pool.map(lanes.remove(0), |group| self.dispatch_group(group));
             return;
         }
         std::thread::scope(|s| {
             for lane in lanes {
                 s.spawn(move || {
-                    for group in lane {
-                        self.dispatch_group(group);
-                    }
+                    pool.map(lane, |group| self.dispatch_group(group));
                 });
             }
         });

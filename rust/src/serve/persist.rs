@@ -52,9 +52,19 @@
 //! pass synchronously, and shutdown/drop performs a final flush so
 //! admitted work is not lost.
 //!
+//! # Garbage collection
+//!
+//! By default the directory grows with every distinct fingerprint.
+//! [`PersistOptions::max_entries`] (`ftl serve --cache-max-entries`)
+//! bounds it: each snapshot pass ends with an mtime-LRU sweep that
+//! removes the oldest entries beyond the cap (entries are immutable, so
+//! write time is the only recency signal on disk). Evictions are counted
+//! (`persist.evicted`), never re-written within the process, and only
+//! shrink the warm-start set a restart can load.
+//!
 //! Counters surface in `stats_json` under `"persist"`: `loaded`,
 //! `skipped_corrupt`, `skipped_version`, `snapshots`, `entries_written`,
-//! `bytes_written`, `write_errors`.
+//! `bytes_written`, `write_errors`, `evicted`.
 
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
@@ -84,18 +94,26 @@ pub struct PersistOptions {
     /// background thread (snapshots then happen only on explicit
     /// [`Snapshotter::flush`] calls and at shutdown).
     pub interval: Duration,
+    /// Snapshot-directory size cap (`ftl serve --cache-max-entries`):
+    /// after each snapshot pass, if the directory holds more than this
+    /// many entries the oldest (by file mtime, ties by name) are removed
+    /// — an mtime-LRU sweep, counted as `persist.evicted`. `0` disables
+    /// garbage collection. Evicted entries are *not* re-written while
+    /// the process lives (entries are immutable; the cap bounds the
+    /// warm-start set a restart can load, nothing else).
+    pub max_entries: usize,
 }
 
 impl Default for PersistOptions {
     fn default() -> Self {
-        Self { interval: Duration::from_millis(1000) }
+        Self { interval: Duration::from_millis(1000), max_entries: 0 }
     }
 }
 
 impl PersistOptions {
     /// Manual-flush-only options (no background thread).
     pub fn manual() -> Self {
-        Self { interval: Duration::ZERO }
+        Self { interval: Duration::ZERO, max_entries: 0 }
     }
 }
 
@@ -110,6 +128,7 @@ pub struct PersistCounters {
     entries_written: AtomicU64,
     bytes_written: AtomicU64,
     write_errors: AtomicU64,
+    evicted: AtomicU64,
 }
 
 impl PersistCounters {
@@ -150,6 +169,12 @@ impl PersistCounters {
         self.write_errors.load(Ordering::Relaxed)
     }
 
+    /// Entries removed by the mtime-LRU size-cap sweep
+    /// (`--cache-max-entries`).
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
     /// The `stats_json` rendering (`"persist": {...}`).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
@@ -160,6 +185,7 @@ impl PersistCounters {
             ("entries_written", Json::int(self.entries_written() as usize)),
             ("bytes_written", Json::int(self.bytes_written() as usize)),
             ("write_errors", Json::int(self.write_errors() as usize)),
+            ("evicted", Json::int(self.evicted() as usize)),
         ])
     }
 }
@@ -181,8 +207,13 @@ struct SnapInner {
     dir: PathBuf,
     counters: Arc<PersistCounters>,
     /// Keys already on disk (seeded at load) — entries are immutable, so
-    /// this is the entire dirty-tracking state.
+    /// this is the entire dirty-tracking state. Keys evicted by the size
+    /// cap stay in the set: eviction bounds the warm-start directory,
+    /// it does not mark the entry dirty again (that would make every
+    /// pass re-write and re-evict the same overflow).
     written: Mutex<HashSet<(u8, u128)>>,
+    /// Directory size cap (0 = no GC) — see [`PersistOptions::max_entries`].
+    max_entries: usize,
     stop: Mutex<bool>,
     wake: Condvar,
 }
@@ -204,9 +235,15 @@ impl Snapshotter {
             dir,
             counters,
             written: Mutex::new(written),
+            max_entries: opts.max_entries,
             stop: Mutex::new(false),
             wake: Condvar::new(),
         });
+        if opts.max_entries > 0 {
+            // A restart may bring a smaller cap than the directory it
+            // inherits — sweep once up front.
+            inner.gc();
+        }
         let writer = if opts.interval.is_zero() {
             None
         } else {
@@ -309,7 +346,48 @@ impl SnapInner {
         self.counters.snapshots.fetch_add(1, Ordering::Relaxed);
         self.counters.entries_written.fetch_add(wrote as u64, Ordering::Relaxed);
         self.counters.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+        // Only a pass that wrote something can have grown the directory
+        // (evicted keys are never re-written), so an idle server must not
+        // re-scan it every interval; attach runs one unconditional sweep
+        // to enforce a lowered cap over a pre-existing directory.
+        if self.max_entries > 0 && wrote > 0 {
+            self.gc();
+        }
         wrote
+    }
+
+    /// mtime-LRU sweep: when the directory holds more than `max_entries`
+    /// final entries, remove the oldest (ties broken by file name so the
+    /// sweep is deterministic under coarse mtimes). Best-effort — an
+    /// entry that cannot be statted or removed is simply left for the
+    /// next pass.
+    fn gc(&self) {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return };
+        let mut finals: Vec<(std::time::SystemTime, String, PathBuf)> = Vec::new();
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            if name.contains(".tmp-")
+                || !name.ends_with(".json")
+                || !(name.starts_with("plan-") || name.starts_with("sim-"))
+            {
+                continue;
+            }
+            let Ok(mtime) = entry.metadata().and_then(|m| m.modified()) else { continue };
+            finals.push((mtime, name.to_string(), path));
+        }
+        if finals.len() <= self.max_entries {
+            return;
+        }
+        finals.sort_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+        let excess = finals.len() - self.max_entries;
+        let mut evicted = 0u64;
+        for (_, _, path) in finals.into_iter().take(excess) {
+            if std::fs::remove_file(&path).is_ok() {
+                evicted += 1;
+            }
+        }
+        self.counters.evicted.fetch_add(evicted, Ordering::Relaxed);
     }
 
     /// Write one envelope, counting failures instead of propagating them
@@ -493,6 +571,43 @@ mod tests {
         // Unparseable text is corruption.
         std::fs::write(&path, "{not json").unwrap();
         assert!(matches!(load_entry(&path), Err(Skip::Corrupt)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn size_cap_sweeps_oldest_entries() {
+        use crate::serve::{PlanService, ServeOptions};
+        let dir = tmp_dir("gc");
+        let service = Arc::new(PlanService::new(ServeOptions {
+            cache_capacity: 8,
+            sim_cache_capacity: 8,
+            cache_shards: 1,
+            workers: 1,
+        }));
+        for k in 0..5u128 {
+            service.import_sim(Fingerprint(0x1000 + k), Arc::new(tiny_sim()));
+        }
+        let snap = Snapshotter::attach(
+            service,
+            dir.clone(),
+            PersistOptions { interval: Duration::ZERO, max_entries: 2 },
+        )
+        .unwrap();
+        assert_eq!(snap.flush(), 5, "all five entries written before the sweep");
+        let count_finals = || {
+            std::fs::read_dir(&dir)
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .filter(|e| e.file_name().to_string_lossy().ends_with(".json"))
+                .count()
+        };
+        assert_eq!(count_finals(), 2, "sweep must enforce the cap");
+        assert_eq!(snap.counters().evicted(), 3);
+        // Evicted keys are not dirty: the next pass writes and evicts
+        // nothing (the cap bounds the directory, it doesn't thrash it).
+        assert_eq!(snap.flush(), 0);
+        assert_eq!(snap.counters().evicted(), 3);
+        assert_eq!(count_finals(), 2);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

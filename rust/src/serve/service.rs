@@ -344,11 +344,15 @@ impl PlanService {
 
     /// Machine-readable stats snapshot (the protocol's `STATS` response).
     /// Includes `"persist"` counters when a
-    /// [`crate::serve::persist::Snapshotter`] is attached.
+    /// [`crate::serve::persist::Snapshotter`] is attached, and the global
+    /// solver pool's `"solver"` search counters (thread cap, points
+    /// scored vs capacity-/bound-pruned — see
+    /// [`crate::tiling::SolverPool`]).
     pub fn stats_json(&self) -> Json {
         let mut j = self.stats().to_json();
-        if let Some(counters) = self.inner.persist.lock().expect("persist counters poisoned").as_ref() {
-            if let Json::Obj(m) = &mut j {
+        if let Json::Obj(m) = &mut j {
+            m.insert("solver".into(), crate::tiling::SolverPool::global().stats_json());
+            if let Some(counters) = self.inner.persist.lock().expect("persist counters poisoned").as_ref() {
                 m.insert("persist".into(), counters.to_json());
             }
         }

@@ -27,6 +27,23 @@ impl KernelCostModel {
     /// Cycles for executing `op` on a tile with the given input/output
     /// shapes, on `unit`.
     pub fn tile_cycles(soc: &SocConfig, op: &Op, unit: ComputeUnit, inputs: &[&[usize]], output: &[usize]) -> u64 {
+        let (setup, work) = Self::tile_setup_work(soc, op, unit, inputs, output);
+        setup + work.ceil() as u64
+    }
+
+    /// The two components of [`KernelCostModel::tile_cycles`]: the fixed
+    /// per-invocation setup and the pre-ceil streaming work (cycles as a
+    /// linear function of the tile's MAC/element volume). The tiling
+    /// solver's branch-and-bound lower bound uses the work term directly
+    /// on *covered* (trips × extent) shapes, where the per-tile ceil would
+    /// not be admissible.
+    pub fn tile_setup_work(
+        soc: &SocConfig,
+        op: &Op,
+        unit: ComputeUnit,
+        inputs: &[&[usize]],
+        output: &[usize],
+    ) -> (u64, f64) {
         let macs = op.macs(inputs, output) as f64;
         let elems = output.iter().product::<usize>() as f64;
         match unit {
@@ -39,7 +56,7 @@ impl KernelCostModel {
                     // visible rather than silently wrong.
                     _ => unreachable!("op {} cannot run on the NPU", op.name()),
                 };
-                npu.job_setup_cycles + compute.ceil() as u64
+                (npu.job_setup_cycles, compute)
             }
             ComputeUnit::Cluster => {
                 let c = soc.cluster;
@@ -51,7 +68,7 @@ impl KernelCostModel {
                     Op::Softmax => elems / (c.eltwise_per_cycle() / 3.0),
                     Op::Transpose => elems / c.eltwise_per_cycle(),
                 };
-                c.kernel_setup_cycles + compute.ceil() as u64
+                (c.kernel_setup_cycles, compute)
             }
         }
     }

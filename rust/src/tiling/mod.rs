@@ -16,10 +16,15 @@
 //! 3. **Fusion** ([`fusion`]): consecutive layers are selected and the
 //!    variables of their *shared* tensor's dimensions are **bound**
 //!    (equality-linked), merging the per-layer problems into one.
-//! 4. **Solve** ([`solver`]): a branch-and-bound search over candidate
-//!    tile sizes, pruned by the L1-capacity constraint, minimising an
-//!    analytic runtime estimate (DMA + kernel cost over the tile loop
-//!    nest, with loop-invariant operand hoisting).
+//! 4. **Solve** ([`solver`]): a parallel branch-and-bound search over
+//!    candidate tile sizes and loop orders — partial assignments are cut
+//!    by admissible L1-capacity and cost lower bounds, the outermost
+//!    variable fans out across [`SolverPool`]-budgeted workers sharing
+//!    the best-so-far bound, and the winner is bit-identical to the
+//!    serial exhaustive sweep ([`solve_group_exhaustive`]) for any
+//!    thread count. The objective is an analytic runtime estimate (DMA +
+//!    kernel cost over the tile loop nest, with loop-invariant operand
+//!    hoisting).
 //!
 //! The output is a [`TilingSolution`]: per fused group, a loop nest with
 //! concrete tile sizes, per-operand L1 buffers and fetch depths — from
@@ -27,6 +32,7 @@
 
 mod constraints;
 mod fusion;
+mod pool;
 mod problem;
 mod solution;
 mod solver;
@@ -34,10 +40,11 @@ mod vars;
 
 pub use constraints::{emit_node, Constraint};
 pub use fusion::{fuse_groups, FusionGroup, FusionPolicy};
+pub use pool::{Permits, SearchCounters, SearchStats, SolverPool};
 pub use problem::{GroupProblem, OperandRef, Strategy};
 pub use solution::{FreeVarChoice, GroupBuffer, GroupSolution, NodeTile, TilingSolution};
 pub use solver::{
-    assign_homes, assign_homes_with, dma_legs as solver_dma_legs, estimate_cycles, solve_graph, solve_graph_with,
-    solve_group, HomesPolicy, SolverOptions,
+    assign_homes, assign_homes_with, dma_legs as solver_dma_legs, estimate_cycles, solve_graph, solve_graph_in,
+    solve_graph_with, solve_group, solve_group_exhaustive, solve_group_in, HomesPolicy, SolverOptions,
 };
 pub use vars::{DimVar, VarId, VarTable};

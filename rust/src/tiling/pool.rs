@@ -1,0 +1,342 @@
+//! The shared solver pool: a process-wide worker budget + search counters
+//! for the branch-and-bound tiling solver (see [`super::solver`]).
+//!
+//! The pool does **not** own threads — branch-and-bound workers are
+//! short-lived `std::thread::scope` threads spawned by whoever is
+//! solving. What the pool owns is the *budget*: a global cap on how many
+//! extra workers may run concurrently, shared by every caller
+//! ([`crate::tiling::solve_graph`]'s per-group fan-out, the per-group
+//! candidate fan-out inside `solve_group`, and
+//! [`crate::serve::BatchScheduler`]'s dispatch lanes), so nested
+//! parallelism degrades to fewer workers per solve instead of
+//! oversubscribing the host. A caller's own thread never needs a permit;
+//! only *extra* workers do, so every solve always makes progress even
+//! with zero permits available.
+//!
+//! Thread count resolution: an explicit [`SolverPool::set_threads`] /
+//! [`SolverPool::new`] value wins; `0` means auto. The global pool's
+//! auto default reads `FTL_SOLVER_THREADS`, falling back to
+//! [`std::thread::available_parallelism`]. **Thread count never changes
+//! solver output** — the search is deterministic by construction
+//! (enforced by property test + CI) — which is why it is *not* part of
+//! the request fingerprint ([`crate::serve::fingerprint`]).
+//!
+//! The pool also aggregates the `solver.*` search counters surfaced in
+//! the serve layer's `stats_json`: per completed solve, how many search
+//! points were actually scored vs pruned away by the capacity bound or
+//! the best-so-far cost bound.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Snapshot of the search counters (see [`SearchCounters`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Completed group solves.
+    pub solves: u64,
+    /// Total enumerable points across those solves
+    /// (`Σ orders × Π candidates`).
+    pub space: u64,
+    /// Points actually scored (full feasibility + cost evaluation).
+    pub scored: u64,
+    /// Points discarded because the L1-capacity lower bound of their
+    /// prefix (or their own footprint) exceeded the budget.
+    pub capacity_pruned: u64,
+    /// Points discarded because the cost lower bound of their prefix
+    /// exceeded the best solution found so far.
+    pub bound_pruned: u64,
+    /// Prune events (a cut subtree of any size counts once).
+    pub subtrees_cut: u64,
+}
+
+impl SearchStats {
+    /// Points eliminated without scoring.
+    pub fn pruned(&self) -> u64 {
+        self.capacity_pruned + self.bound_pruned
+    }
+
+    /// JSON rendering (embedded in the serve stats snapshot).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("solves", Json::int(self.solves as usize)),
+            ("space", Json::int(self.space as usize)),
+            ("scored", Json::int(self.scored as usize)),
+            ("capacity_pruned", Json::int(self.capacity_pruned as usize)),
+            ("bound_pruned", Json::int(self.bound_pruned as usize)),
+            ("subtrees_cut", Json::int(self.subtrees_cut as usize)),
+        ])
+    }
+}
+
+/// Atomic accumulator behind [`SearchStats`]. One instance lives in each
+/// [`SolverPool`]; solves merge their whole local tally at completion, so
+/// `scored + capacity_pruned + bound_pruned == space` holds on any
+/// quiesced pool (asserted by the search-space accounting property test).
+#[derive(Debug, Default)]
+pub struct SearchCounters {
+    solves: AtomicU64,
+    space: AtomicU64,
+    scored: AtomicU64,
+    capacity_pruned: AtomicU64,
+    bound_pruned: AtomicU64,
+    subtrees_cut: AtomicU64,
+}
+
+impl SearchCounters {
+    /// Merge one solve's local tally.
+    pub fn merge(&self, s: &SearchStats) {
+        self.solves.fetch_add(s.solves, Ordering::Relaxed);
+        self.space.fetch_add(s.space, Ordering::Relaxed);
+        self.scored.fetch_add(s.scored, Ordering::Relaxed);
+        self.capacity_pruned.fetch_add(s.capacity_pruned, Ordering::Relaxed);
+        self.bound_pruned.fetch_add(s.bound_pruned, Ordering::Relaxed);
+        self.subtrees_cut.fetch_add(s.subtrees_cut, Ordering::Relaxed);
+    }
+
+    /// Current totals.
+    pub fn snapshot(&self) -> SearchStats {
+        SearchStats {
+            solves: self.solves.load(Ordering::Relaxed),
+            space: self.space.load(Ordering::Relaxed),
+            scored: self.scored.load(Ordering::Relaxed),
+            capacity_pruned: self.capacity_pruned.load(Ordering::Relaxed),
+            bound_pruned: self.bound_pruned.load(Ordering::Relaxed),
+            subtrees_cut: self.subtrees_cut.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The shared worker budget + counters (see module docs).
+pub struct SolverPool {
+    /// Configured thread cap; 0 = auto.
+    threads: AtomicUsize,
+    /// Extra workers currently running (the budget is `threads() - 1`
+    /// extras — the calling thread itself is always worker zero).
+    extras_in_use: AtomicUsize,
+    counters: SearchCounters,
+}
+
+impl SolverPool {
+    /// Pool with an explicit thread cap (`0` = auto-detect).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: AtomicUsize::new(threads), extras_in_use: AtomicUsize::new(0), counters: SearchCounters::default() }
+    }
+
+    /// The process-wide pool. Auto thread count honours
+    /// `FTL_SOLVER_THREADS` (read once, at first use); CLI flags override
+    /// it via [`SolverPool::set_threads`].
+    pub fn global() -> &'static SolverPool {
+        static GLOBAL: OnceLock<SolverPool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let env = std::env::var("FTL_SOLVER_THREADS").ok().and_then(|v| v.parse::<usize>().ok());
+            SolverPool::new(env.unwrap_or(0))
+        })
+    }
+
+    /// Override the thread cap (`0` = auto). Call before serving traffic;
+    /// permits already granted are unaffected.
+    pub fn set_threads(&self, n: usize) {
+        self.threads.store(n, Ordering::Relaxed);
+    }
+
+    /// Resolved thread cap (≥ 1).
+    pub fn threads(&self) -> usize {
+        match self.threads.load(Ordering::Relaxed) {
+            0 => std::thread::available_parallelism().map(std::num::NonZeroUsize::get).unwrap_or(1),
+            n => n,
+        }
+    }
+
+    /// Search counters (solves merge local tallies here).
+    pub fn counters(&self) -> &SearchCounters {
+        &self.counters
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> SearchStats {
+        self.counters.snapshot()
+    }
+
+    /// The `stats_json` rendering: thread cap + search counters.
+    pub fn stats_json(&self) -> Json {
+        let mut j = self.stats().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("threads".into(), Json::int(self.threads()));
+        }
+        j
+    }
+
+    /// Try to reserve up to `want` extra-worker permits without blocking;
+    /// returns how many were granted (possibly 0). Pair with
+    /// [`SolverPool::release`].
+    pub fn try_acquire(&self, want: usize) -> usize {
+        if want == 0 {
+            return 0;
+        }
+        let budget = self.threads().saturating_sub(1);
+        loop {
+            let cur = self.extras_in_use.load(Ordering::Relaxed);
+            let grant = want.min(budget.saturating_sub(cur));
+            if grant == 0 {
+                return 0;
+            }
+            if self
+                .extras_in_use
+                .compare_exchange(cur, cur + grant, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return grant;
+            }
+        }
+    }
+
+    /// Return permits taken by [`SolverPool::try_acquire`].
+    pub fn release(&self, n: usize) {
+        if n > 0 {
+            self.extras_in_use.fetch_sub(n, Ordering::Relaxed);
+        }
+    }
+
+    /// [`SolverPool::try_acquire`] behind an RAII guard: the permits are
+    /// returned when the guard drops, so a panicking worker cannot leak
+    /// the global budget (which would silently force every later solve
+    /// single-threaded for the life of the process).
+    pub fn acquire_up_to(&self, want: usize) -> Permits<'_> {
+        Permits { pool: self, n: self.try_acquire(want) }
+    }
+
+    /// Run `f` over `items`, fanning across the caller's thread plus up
+    /// to `threads() - 1` pool-budgeted scoped workers (strided split, so
+    /// results keep item order). Falls back to a plain sequential map
+    /// when the pool has no spare budget or there is nothing to fan out.
+    /// `f` must be safe to call concurrently for distinct items.
+    pub fn map<T: Send, R: Send>(&self, items: Vec<T>, f: impl Fn(T) -> R + Sync) -> Vec<R> {
+        let want_extras = self.threads().min(items.len()).saturating_sub(1);
+        let permits = self.acquire_up_to(want_extras);
+        let extras = permits.count();
+        if extras == 0 || items.len() < 2 {
+            return items.into_iter().map(f).collect();
+        }
+        let workers = extras + 1;
+        let n = items.len();
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        // Hand each worker a strided set of items: worker w gets items
+        // w, w+workers, … (keeps early/late heavy items balanced).
+        let mut per_worker: Vec<Vec<(usize, T)>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, item) in items.into_iter().enumerate() {
+            per_worker[i % workers].push((i, item));
+        }
+        std::thread::scope(|s| {
+            let f = &f;
+            let slots = &slots;
+            let mut own = None;
+            for (w, chunk) in per_worker.into_iter().enumerate() {
+                if w == 0 {
+                    own = Some(chunk);
+                    continue;
+                }
+                s.spawn(move || {
+                    for (i, item) in chunk {
+                        *slots[i].lock().expect("solver pool slot poisoned") = Some(f(item));
+                    }
+                });
+            }
+            for (i, item) in own.expect("worker zero chunk") {
+                *slots[i].lock().expect("solver pool slot poisoned") = Some(f(item));
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("solver pool slot poisoned").expect("worker filled slot"))
+            .collect()
+    }
+}
+
+/// RAII extra-worker permits (see [`SolverPool::acquire_up_to`]).
+pub struct Permits<'p> {
+    pool: &'p SolverPool,
+    n: usize,
+}
+
+impl Permits<'_> {
+    /// How many extra-worker permits were actually granted.
+    pub fn count(&self) -> usize {
+        self.n
+    }
+}
+
+impl Drop for Permits<'_> {
+    fn drop(&mut self) {
+        self.pool.release(self.n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permits_are_bounded_and_returned() {
+        let pool = SolverPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let a = pool.try_acquire(10);
+        assert_eq!(a, 3, "budget is threads - 1");
+        assert_eq!(pool.try_acquire(1), 0, "budget exhausted");
+        pool.release(a);
+        assert_eq!(pool.try_acquire(2), 2);
+        pool.release(2);
+    }
+
+    #[test]
+    fn single_thread_pool_grants_nothing() {
+        let pool = SolverPool::new(1);
+        assert_eq!(pool.try_acquire(4), 0);
+    }
+
+    #[test]
+    fn permits_survive_worker_panics() {
+        let pool = SolverPool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _permits = pool.acquire_up_to(3);
+            panic!("worker died mid-solve");
+        }));
+        assert!(result.is_err());
+        assert_eq!(pool.try_acquire(3), 3, "RAII guard must return permits across a panic");
+        pool.release(3);
+    }
+
+    #[test]
+    fn map_preserves_order_any_thread_count() {
+        for threads in [1, 2, 4, 8] {
+            let pool = SolverPool::new(threads);
+            let out = pool.map((0..37).collect::<Vec<usize>>(), |x| x * 2);
+            assert_eq!(out, (0..37).map(|x| x * 2).collect::<Vec<usize>>());
+        }
+    }
+
+    #[test]
+    fn counters_merge_and_snapshot() {
+        let pool = SolverPool::new(2);
+        pool.counters().merge(&SearchStats {
+            solves: 1,
+            space: 100,
+            scored: 10,
+            capacity_pruned: 40,
+            bound_pruned: 50,
+            subtrees_cut: 7,
+        });
+        let s = pool.stats();
+        assert_eq!(s.scored + s.pruned(), s.space);
+        let j = pool.stats_json();
+        assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("space").unwrap().as_usize().unwrap(), 100);
+    }
+
+    #[test]
+    fn auto_threads_resolves_positive() {
+        let pool = SolverPool::new(0);
+        assert!(pool.threads() >= 1);
+    }
+}

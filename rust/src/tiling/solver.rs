@@ -1,12 +1,31 @@
 //! Step ④ — solving the merged constraint-optimisation problem.
 //!
 //! After affine resolution the group has a handful of *free* tile
-//! variables. The solver enumerates candidate tile sizes per free
-//! variable (divisor-spaced, rounded to the performance multiples) and
-//! loop orders, prunes by the L1-capacity constraint, and minimises an
-//! analytic runtime estimate: DMA cost (with loop-invariant operand
-//! hoisting) plus kernel cost over the tile loop nest — single- or
-//! double-buffered.
+//! variables. The solver searches candidate tile sizes per free variable
+//! (divisor-spaced, rounded to the performance multiples) and loop
+//! orders, minimising an analytic runtime estimate: DMA cost (with
+//! loop-invariant operand hoisting) plus kernel cost over the tile loop
+//! nest — single- or double-buffered.
+//!
+//! The search is a **parallel branch-and-bound** (§Perf), not a flat
+//! sweep: variables are assigned along the loop order, and every partial
+//! assignment is bounded by two admissible lower bounds — a monotone
+//! L1-footprint bound (unassigned variables at their smallest candidate)
+//! and a cost bound built on covered-volume conservation (`trips ×
+//! extent ≥` the covered minimum per dimension, total MAC volume per
+//! kernel, per-transfer/per-tile setup at minimum trip counts). Subtrees
+//! whose bound exceeds the budget or the best solution so far are cut
+//! without scoring a single leaf; candidates are scanned largest-first
+//! so capacity cuts land early and the near-optimal large tiles
+//! establish a tight cost bound immediately. The outermost variable's
+//! candidates fan out across `std::thread::scope` workers budgeted by
+//! the shared [`SolverPool`], sharing the best-so-far bound through an
+//! `AtomicU64`. The winner is **bit-identical to the serial exhaustive
+//! reference** for any thread count: pruning only ever discards points
+//! strictly worse than the optimum, and ties resolve by the
+//! deterministic `(cycles, iters, order, assign)` lexicographic key
+//! (property-tested against [`solve_group_exhaustive`], enforced again
+//! in CI via plan digests).
 //!
 //! If a fused group cannot fit L1 at any candidate point (e.g. an
 //! aggressive GEMM→GEMM fusion whose binding forces a full-width
@@ -14,6 +33,7 @@
 //! re-solves — fusion in FTL is opportunistic.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{Context, Result};
 
@@ -23,6 +43,7 @@ use crate::memory::{BufferRole, Level};
 use crate::soc::{ComputeUnit, KernelCostModel, SocConfig};
 
 use super::fusion::FusionGroup;
+use super::pool::{SearchStats, SolverPool};
 use super::problem::{GroupProblem, ResolvedVars};
 use super::solution::{DimSpec, FreeVarChoice, GroupBuffer, GroupSolution, NodeTile, TilingSolution};
 
@@ -159,7 +180,8 @@ struct BufTemplate {
     home: Option<Level>,
 }
 
-/// Solve one fusion group. Errors if no candidate point fits L1.
+/// Solve one fusion group with the global [`SolverPool`]. Errors if no
+/// candidate point fits L1.
 pub fn solve_group(
     graph: &Graph,
     soc: &SocConfig,
@@ -168,138 +190,850 @@ pub fn solve_group(
     opts: &SolverOptions,
     double_buffer: bool,
 ) -> Result<GroupSolution> {
-    let problem = GroupProblem::build(graph, soc, group)?;
-    let resolved = problem.resolve(opts.use_perf_constraints)?;
-    let budget = (soc.mem.capacity(Level::L1) as f64 * opts.l1_budget_fraction) as usize;
-
-    // --- Buffer templates, deduplicated per tensor -----------------------
-    let produced: Vec<TensorId> = group.nodes.iter().map(|&n| graph.nodes[n].output).collect();
-    let consumers = graph.consumers();
-    let mut buf_index: HashMap<TensorId, usize> = HashMap::new();
-    let mut bufs: Vec<BufTemplate> = Vec::new();
-    let mut node_tiles: Vec<(usize, Vec<usize>, usize)> = Vec::new(); // (node, input buf idx, output buf idx)
-
-    for nt in &problem.nodes {
-        let mut input_bufs = Vec::new();
-        let mut output_buf = usize::MAX;
-        for op_ref in &nt.operands {
-            let t = op_ref.tensor;
-            let idx = *buf_index.entry(t).or_insert_with(|| {
-                let tensor = &graph.tensors[t];
-                let role = if tensor.kind == TensorKind::Weight {
-                    BufferRole::Weight
-                } else if produced.contains(&t) {
-                    let escapes = tensor.kind == TensorKind::Output
-                        || consumers[t].iter().any(|c| !group.nodes.contains(c));
-                    if escapes {
-                        BufferRole::Output
-                    } else {
-                        BufferRole::Intermediate
-                    }
-                } else {
-                    BufferRole::Input
-                };
-                let dims = op_ref
-                    .dims
-                    .iter()
-                    .enumerate()
-                    .map(|(d, &v)| {
-                        let (root, a, b) = resolved.expr[v.0];
-                        let full = tensor.shape[d];
-                        match resolved.fixed.get(&root) {
-                            Some(&fv) => (full, None, 0usize, (a * fv + b).min(full)),
-                            None => {
-                                let fi = resolved.free.binary_search(&root).expect("free root");
-                                (full, Some(fi), a, b)
-                            }
-                        }
-                    })
-                    .collect();
-                let home = if role == BufferRole::Intermediate { None } else { homes[t] };
-                bufs.push(BufTemplate {
-                    tensor: t,
-                    name: tensor.name.clone(),
-                    role,
-                    elem_bytes: tensor.dtype.size_bytes(),
-                    dims,
-                    home,
-                });
-                bufs.len() - 1
-            });
-            if op_ref.is_output {
-                output_buf = idx;
-            } else {
-                input_bufs.push(idx);
-            }
-        }
-        node_tiles.push((nt.node, input_bufs, output_buf));
-    }
-
-    // --- Candidate tile sizes per free variable ---------------------------
-    let free = &resolved.free;
-    let candidates: Vec<Vec<usize>> = free
-        .iter()
-        .map(|root| {
-            let full = resolved.root_full[root];
-            let step = resolved.multiple.get(root).copied().unwrap_or(1);
-            let minv = resolved.min.get(root).copied().unwrap_or(1).max(1);
-            candidate_tiles(full, step, minv, opts.max_candidates)
-        })
-        .collect();
-
-    // --- Loop orders -------------------------------------------------------
-    let orders: Vec<Vec<usize>> = if free.len() <= 3 {
-        permutations(free.len())
-    } else {
-        vec![(0..free.len()).collect(), (0..free.len()).rev().collect()]
-    };
-
-    // --- Enumerate ---------------------------------------------------------
-    // Hot loop (§Perf): candidates × orders can reach tens of thousands of
-    // points per group, so scoring is allocation-free (scratch buffers
-    // reused across points); the full GroupSolution is materialised once,
-    // for the winner only.
-    let node_ops: Vec<(crate::ir::Op, ComputeUnit)> = node_tiles
-        .iter()
-        .map(|(nid, _, _)| {
-            let op = graph.nodes[*nid].op.clone();
-            let unit = soc.place(&op);
-            (op, unit)
-        })
-        .collect();
-    let mut best: Option<(u64, usize, Vec<usize>, Vec<usize>)> = None; // (cycles, iters, order, assign)
-    let mut assign = vec![0usize; free.len()];
-    let mut scratch = ScoreScratch::new(free.len(), bufs.len());
-    for order in &orders {
-        enumerate(&candidates, 0, &mut assign, &mut |assign| {
-            let Some((cycles, iters)) = score_candidate(
-                soc, &bufs, &node_tiles, &node_ops, &resolved, order, assign, double_buffer, budget,
-                &mut scratch,
-            ) else {
-                return;
-            };
-            let better = match &best {
-                None => true,
-                Some((c, i, _, _)) => (cycles, iters) < (*c, *i),
-            };
-            if better {
-                best = Some((cycles, iters, order.clone(), assign.to_vec()));
-            }
-        });
-    }
-
-    let (_, _, order, assign) = best.with_context(|| {
-        format!(
-            "no feasible tiling for group [{}] within L1 budget {budget} B",
-            group.nodes.iter().map(|&n| graph.nodes[n].name.as_str()).collect::<Vec<_>>().join(", ")
-        )
-    })?;
-    let sol = build_candidate(graph, soc, &bufs, &node_tiles, &resolved, &order, &assign, double_buffer, budget)
-        .expect("winning candidate must rebuild");
-    Ok(sol)
+    solve_group_in(graph, soc, group, homes, opts, double_buffer, SolverPool::global())
 }
 
-/// Reusable scratch for [`score_candidate`].
+/// [`solve_group`] against an explicit pool (thread budget + counters).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_group_in(
+    graph: &Graph,
+    soc: &SocConfig,
+    group: &FusionGroup,
+    homes: &[Option<Level>],
+    opts: &SolverOptions,
+    double_buffer: bool,
+    pool: &SolverPool,
+) -> Result<GroupSolution> {
+    let space = GroupSpace::build(graph, soc, group, homes, opts, double_buffer)?;
+    let (best, tally) = space.branch_and_bound(pool);
+    pool.counters().merge(&tally);
+    space.materialise(graph, group, best)
+}
+
+/// Serial exhaustive reference sweep over the full search space — the
+/// branch-and-bound's correctness oracle (property tests assert the
+/// pruned/parallel winner is bit-identical to this) and the §Perf
+/// "before" baseline in `benches/hotpath.rs` / `benches/ablation_solver`.
+pub fn solve_group_exhaustive(
+    graph: &Graph,
+    soc: &SocConfig,
+    group: &FusionGroup,
+    homes: &[Option<Level>],
+    opts: &SolverOptions,
+    double_buffer: bool,
+) -> Result<GroupSolution> {
+    let space = GroupSpace::build(graph, soc, group, homes, opts, double_buffer)?;
+    let best = space.exhaustive();
+    space.materialise(graph, group, best)
+}
+
+// ------------------------------------------------------------------ search
+
+/// Partial-assignment state of one free variable during the search.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum VarMode {
+    /// Unassigned: bounds relax it over its whole candidate list.
+    Free,
+    /// Being scanned at this level: bounds relax it over the candidate
+    /// *suffix* starting at this index (the list is descending, so the
+    /// suffix is "this size and smaller").
+    Scan(usize),
+    /// Assigned to candidate `.1` with value `.0`.
+    Exact(usize, usize),
+}
+
+/// One candidate point the search considers best so far.
+#[derive(Debug, Clone)]
+struct BestPoint {
+    cycles: u64,
+    iters: usize,
+    order_idx: usize,
+    assign: Vec<usize>,
+}
+
+/// Everything the branch-and-bound needs about one group, precomputed
+/// once per solve: templates, per-variable candidate lists (descending),
+/// loop orders, and the suffix tables behind the admissible bounds.
+struct GroupSpace<'a> {
+    soc: &'a SocConfig,
+    bufs: Vec<BufTemplate>,
+    /// (node id, input buf indices, output buf index).
+    node_tiles: Vec<(usize, Vec<usize>, usize)>,
+    node_ops: Vec<(crate::ir::Op, ComputeUnit)>,
+    resolved: ResolvedVars,
+    budget: usize,
+    double_buffer: bool,
+    /// Full extent per free variable.
+    fulls: Vec<usize>,
+    /// Candidate tile sizes per free variable, largest first.
+    cands: Vec<Vec<usize>>,
+    /// Smallest candidate per free variable (the extent relaxation).
+    min_cand: Vec<usize>,
+    /// Loop orders to search.
+    orders: Vec<Vec<usize>>,
+    /// Per order: hoisted position/fetch-depth tables (§Perf: computed
+    /// once per order instead of per scored leaf).
+    order_ctx: Vec<OrderCtx>,
+    /// Per buffer, per dim: covered-volume suffix table (empty for fixed
+    /// dims): `cov[i] = min over candidates x at index ≥ i of
+    /// ceil(full/x) · min(a·x + b, dim_full)` — the least volume any
+    /// completion can move through that dimension.
+    cov: Vec<Vec<Vec<u64>>>,
+    /// Per node: fixed kernel setup + input shapes at minimum extents,
+    /// for the compute lower bound.
+    node_bound: Vec<NodeBoundMeta>,
+    /// Total enumerable points: `orders × Π candidates`.
+    total_points: u64,
+}
+
+/// Per-order hoisted tables.
+struct OrderCtx {
+    /// Loop order: position → free-variable index.
+    order: Vec<usize>,
+    /// Inverse permutation: free-variable index → position.
+    pos_of: Vec<usize>,
+    /// Per buffer: re-fetched every iteration of loops `0..fetch_depth`.
+    fetch_depth: Vec<usize>,
+}
+
+struct NodeBoundMeta {
+    setup: u64,
+    in_min: Vec<Vec<usize>>,
+}
+
+/// Below this many total points a solve stays on the calling thread —
+/// worker spawn overhead would dominate tiny searches.
+const PARALLEL_MIN_POINTS: u64 = 256;
+
+/// Safety margin subtracted from the (partly float) cost lower bound so
+/// rounding can never make it exceed the exact integer cost of a
+/// completion.
+const FLOAT_SLACK: u64 = 8;
+
+impl<'a> GroupSpace<'a> {
+    fn build(
+        graph: &'a Graph,
+        soc: &'a SocConfig,
+        group: &FusionGroup,
+        homes: &[Option<Level>],
+        opts: &SolverOptions,
+        double_buffer: bool,
+    ) -> Result<GroupSpace<'a>> {
+        let problem = GroupProblem::build(graph, soc, group)?;
+        let resolved = problem.resolve(opts.use_perf_constraints)?;
+        let budget = (soc.mem.capacity(Level::L1) as f64 * opts.l1_budget_fraction) as usize;
+
+        // --- Buffer templates, deduplicated per tensor -------------------
+        let produced: Vec<TensorId> = group.nodes.iter().map(|&n| graph.nodes[n].output).collect();
+        let consumers = graph.consumers();
+        let mut buf_index: HashMap<TensorId, usize> = HashMap::new();
+        let mut bufs: Vec<BufTemplate> = Vec::new();
+        let mut node_tiles: Vec<(usize, Vec<usize>, usize)> = Vec::new();
+
+        for nt in &problem.nodes {
+            let mut input_bufs = Vec::new();
+            let mut output_buf = usize::MAX;
+            for op_ref in &nt.operands {
+                let t = op_ref.tensor;
+                let idx = *buf_index.entry(t).or_insert_with(|| {
+                    let tensor = &graph.tensors[t];
+                    let role = if tensor.kind == TensorKind::Weight {
+                        BufferRole::Weight
+                    } else if produced.contains(&t) {
+                        let escapes = tensor.kind == TensorKind::Output
+                            || consumers[t].iter().any(|c| !group.nodes.contains(c));
+                        if escapes {
+                            BufferRole::Output
+                        } else {
+                            BufferRole::Intermediate
+                        }
+                    } else {
+                        BufferRole::Input
+                    };
+                    let dims = op_ref
+                        .dims
+                        .iter()
+                        .enumerate()
+                        .map(|(d, &v)| {
+                            let (root, a, b) = resolved.expr[v.0];
+                            let full = tensor.shape[d];
+                            match resolved.fixed.get(&root) {
+                                Some(&fv) => (full, None, 0usize, (a * fv + b).min(full)),
+                                None => {
+                                    let fi = resolved.free.binary_search(&root).expect("free root");
+                                    (full, Some(fi), a, b)
+                                }
+                            }
+                        })
+                        .collect();
+                    let home = if role == BufferRole::Intermediate { None } else { homes[t] };
+                    bufs.push(BufTemplate {
+                        tensor: t,
+                        name: tensor.name.clone(),
+                        role,
+                        elem_bytes: tensor.dtype.size_bytes(),
+                        dims,
+                        home,
+                    });
+                    bufs.len() - 1
+                });
+                if op_ref.is_output {
+                    output_buf = idx;
+                } else {
+                    input_bufs.push(idx);
+                }
+            }
+            node_tiles.push((nt.node, input_bufs, output_buf));
+        }
+
+        // --- Candidate tile sizes per free variable ----------------------
+        let free = &resolved.free;
+        let n = free.len();
+        debug_assert!(n <= 64, "free-variable bitmask assumes ≤64 variables");
+        let fulls: Vec<usize> = free.iter().map(|root| resolved.root_full[root]).collect();
+        let cands: Vec<Vec<usize>> = free
+            .iter()
+            .map(|root| {
+                let full = resolved.root_full[root];
+                let step = resolved.multiple.get(root).copied().unwrap_or(1);
+                let minv = resolved.min.get(root).copied().unwrap_or(1).max(1);
+                candidate_tiles(full, step, minv, opts.max_candidates)
+            })
+            .collect();
+        let min_cand: Vec<usize> = cands.iter().map(|c| *c.last().expect("non-empty candidates")).collect();
+
+        // --- Loop orders + per-order hoisted tables ----------------------
+        let orders = search_orders(n, &bufs);
+        let order_ctx: Vec<OrderCtx> = orders
+            .iter()
+            .map(|order| {
+                let mut pos_of = vec![0usize; n];
+                for (pos, &fi) in order.iter().enumerate() {
+                    pos_of[fi] = pos;
+                }
+                let fetch_depth = bufs
+                    .iter()
+                    .map(|b| {
+                        b.dims.iter().filter_map(|&(_, fr, _, _)| fr).map(|fi| pos_of[fi] + 1).max().unwrap_or(0)
+                    })
+                    .collect();
+                OrderCtx { order: order.clone(), pos_of, fetch_depth }
+            })
+            .collect();
+
+        // --- Covered-volume suffix tables --------------------------------
+        let cov: Vec<Vec<Vec<u64>>> = bufs
+            .iter()
+            .map(|b| {
+                b.dims
+                    .iter()
+                    .map(|&(full, fr, a, bb)| match fr {
+                        None => Vec::new(),
+                        Some(fi) => {
+                            let list = &cands[fi];
+                            let root_full = fulls[fi];
+                            let mut suf = vec![0u64; list.len()];
+                            let mut best = u64::MAX;
+                            for (i, &x) in list.iter().enumerate().rev() {
+                                let covered =
+                                    (root_full.div_ceil(x) as u64) * ((a * x + bb).min(full) as u64);
+                                best = best.min(covered);
+                                suf[i] = best;
+                            }
+                            suf
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // --- Per-node bound metadata -------------------------------------
+        let node_ops: Vec<(crate::ir::Op, ComputeUnit)> = node_tiles
+            .iter()
+            .map(|(nid, _, _)| {
+                let op = graph.nodes[*nid].op.clone();
+                let unit = soc.place(&op);
+                (op, unit)
+            })
+            .collect();
+        let min_shape = |bi: usize| -> Vec<usize> {
+            bufs[bi]
+                .dims
+                .iter()
+                .map(|&(full, fr, a, bb)| match fr {
+                    None => bb.min(full),
+                    Some(fi) => (a * min_cand[fi] + bb).min(full),
+                })
+                .collect()
+        };
+        let node_bound: Vec<NodeBoundMeta> = node_tiles
+            .iter()
+            .zip(&node_ops)
+            .map(|((_, ins, out), (op, unit))| {
+                let in_min: Vec<Vec<usize>> = ins.iter().map(|&bi| min_shape(bi)).collect();
+                let out_min = min_shape(*out);
+                let in_refs: Vec<&[usize]> = in_min.iter().map(|s| s.as_slice()).collect();
+                let (setup, _) = KernelCostModel::tile_setup_work(soc, op, *unit, &in_refs, &out_min);
+                NodeBoundMeta { setup, in_min }
+            })
+            .collect();
+
+        let mut total_points = orders.len() as u64;
+        for c in &cands {
+            total_points = total_points.saturating_mul(c.len() as u64);
+        }
+
+        Ok(GroupSpace {
+            soc,
+            bufs,
+            node_tiles,
+            node_ops,
+            resolved,
+            budget,
+            double_buffer,
+            fulls,
+            cands,
+            min_cand,
+            orders,
+            order_ctx,
+            cov,
+            node_bound,
+            total_points,
+        })
+    }
+
+    /// Number of leaves under one node at `depth` (product of deeper
+    /// candidate-list lengths).
+    fn leaves_below(&self, octx: &OrderCtx, depth: usize) -> u64 {
+        octx.order[depth + 1..].iter().map(|&fi| self.cands[fi].len() as u64).product()
+    }
+
+    /// Minimum trip count of `fi`'s loop over every completion of its
+    /// current [`VarMode`].
+    fn var_trips_lb(&self, st: &[VarMode], fi: usize) -> u64 {
+        let full = self.fulls[fi];
+        let tile = match st[fi] {
+            VarMode::Exact(v, _) => v.min(full),
+            VarMode::Scan(i) => self.cands[fi][i],
+            VarMode::Free => self.cands[fi][0],
+        };
+        full.div_ceil(tile) as u64
+    }
+
+    /// Minimum steady extent of a dim driven by `fi`.
+    fn var_ext_lb(&self, st: &[VarMode], fi: usize, a: usize, b: usize, dim_full: usize) -> usize {
+        let v = match st[fi] {
+            VarMode::Exact(v, _) => v.min(self.fulls[fi]),
+            _ => self.min_cand[fi],
+        };
+        (a * v + b).min(dim_full)
+    }
+
+    /// Minimum covered volume (`trips × extent`) of a dim driven by `fi`.
+    fn var_cov_lb(&self, st: &[VarMode], fi: usize, a: usize, b: usize, dim_full: usize, suf: &[u64]) -> u64 {
+        match st[fi] {
+            VarMode::Exact(v, _) => {
+                let v = v.min(self.fulls[fi]);
+                (self.fulls[fi].div_ceil(v) as u64) * ((a * v + b).min(dim_full) as u64)
+            }
+            VarMode::Scan(i) => suf[i],
+            VarMode::Free => suf[0],
+        }
+    }
+
+    /// Admissible lower bounds over every completion of the partial
+    /// assignment `st`: `(L1 footprint, cycles)`.
+    ///
+    /// Footprint: every extent is nondecreasing in its variable's tile
+    /// size, so unassigned variables at their smallest candidate bound
+    /// every completion from below. Cycles relaxes term-wise: each DMA
+    /// channel is charged `setup × min-trips + min-volume / bandwidth`,
+    /// pairing each loop with one dependent buffer dim through the
+    /// covered-volume table (the per-row term is dropped — admissible);
+    /// each kernel is charged `setup × min-iters + covered MAC volume /
+    /// throughput` (the per-tile ceil is dropped — admissible). A small
+    /// constant absorbs float-floor slack.
+    fn lower_bound(&self, octx: &OrderCtx, st: &[VarMode]) -> (usize, u64) {
+        let n = self.fulls.len();
+        let mut footprint = 0usize;
+        let (mut vol_l2, mut vol_l3) = (0f64, 0f64);
+        let (mut setup_l2, mut setup_l3) = (0u64, 0u64);
+        for (bi, b) in self.bufs.iter().enumerate() {
+            let fd = octx.fetch_depth[bi];
+            let mut bytes = b.elem_bytes;
+            for &(full, fr, a, bb) in &b.dims {
+                let ext = match fr {
+                    None => bb.min(full),
+                    Some(fi) => self.var_ext_lb(st, fi, a, bb, full),
+                };
+                bytes *= ext;
+            }
+            let copies = if self.double_buffer && b.home.is_some() && fd > 0 { 2 } else { 1 };
+            footprint += align4(bytes) * copies;
+            let Some(home) = b.home else { continue };
+            if home == Level::L1 {
+                continue;
+            }
+            // Minimum volume: pair each loop with its first dependent dim
+            // (covered = trips × extent conserved), remaining dims at
+            // minimum extent, loops below the fetch depth that drive no
+            // dim of this buffer at minimum trips.
+            let mut vol = b.elem_bytes as f64;
+            let mut paired = 0u64;
+            for (di, &(full, fr, a, bb)) in b.dims.iter().enumerate() {
+                match fr {
+                    None => vol *= bb.min(full) as f64,
+                    Some(fi) if paired & (1 << fi) == 0 => {
+                        paired |= 1 << fi;
+                        vol *= self.var_cov_lb(st, fi, a, bb, full, &self.cov[bi][di]) as f64;
+                    }
+                    Some(fi) => vol *= self.var_ext_lb(st, fi, a, bb, full) as f64,
+                }
+            }
+            let mut unpaired_trips = 1u64;
+            let mut all_trips = 1u64;
+            for &fi in &octx.order[..fd] {
+                let t = self.var_trips_lb(st, fi);
+                all_trips = all_trips.saturating_mul(t);
+                if paired & (1 << fi) == 0 {
+                    unpaired_trips = unpaired_trips.saturating_mul(t);
+                }
+            }
+            let vol_total = vol * unpaired_trips as f64;
+            vol_l2 += vol_total;
+            setup_l2 = setup_l2.saturating_add(self.soc.dma_cluster.setup_cycles.saturating_mul(all_trips));
+            if home == Level::L3 {
+                vol_l3 += vol_total;
+                setup_l3 = setup_l3.saturating_add(self.soc.dma_io.setup_cycles.saturating_mul(all_trips));
+            }
+        }
+        let dma_l2 = setup_l2.saturating_add((vol_l2 / self.soc.dma_cluster.bytes_per_cycle) as u64);
+        let dma_l3 = setup_l3.saturating_add((vol_l3 / self.soc.dma_io.bytes_per_cycle) as u64);
+
+        let mut iters_lb = 1u64;
+        for fi in 0..n {
+            iters_lb = iters_lb.saturating_mul(self.var_trips_lb(st, fi));
+        }
+        let mut compute = 0u64;
+        for (ni, ((_, _, out_buf), (op, unit))) in self.node_tiles.iter().zip(&self.node_ops).enumerate() {
+            let nb = &self.node_bound[ni];
+            let ob = &self.bufs[*out_buf];
+            let mut paired = 0u64;
+            let mut out_shape: Vec<usize> = Vec::with_capacity(ob.dims.len());
+            for (di, &(full, fr, a, bb)) in ob.dims.iter().enumerate() {
+                let v = match fr {
+                    None => bb.min(full),
+                    Some(fi) if paired & (1 << fi) == 0 => {
+                        paired |= 1 << fi;
+                        self.var_cov_lb(st, fi, a, bb, full, &self.cov[*out_buf][di]) as usize
+                    }
+                    Some(fi) => self.var_ext_lb(st, fi, a, bb, full),
+                };
+                out_shape.push(v);
+            }
+            let in_refs: Vec<&[usize]> = nb.in_min.iter().map(|s| s.as_slice()).collect();
+            let (_, work) = KernelCostModel::tile_setup_work(self.soc, op, *unit, &in_refs, &out_shape);
+            let mut extra = 1u64;
+            for fi in 0..n {
+                if paired & (1 << fi) == 0 {
+                    extra = extra.saturating_mul(self.var_trips_lb(st, fi));
+                }
+            }
+            compute = compute
+                .saturating_add(nb.setup.saturating_mul(iters_lb))
+                .saturating_add((work * extra as f64).max(0.0) as u64);
+        }
+
+        let cycles = if self.double_buffer {
+            dma_l2.max(dma_l3).max(compute)
+        } else {
+            dma_l2.saturating_add(dma_l3).saturating_add(compute)
+        };
+        (footprint, cycles.saturating_sub(FLOAT_SLACK))
+    }
+
+    /// Allocation-free exact feasibility + cost scoring of one candidate
+    /// point. Mirrors [`build_candidate`] + [`estimate_cycles`] exactly
+    /// (asserted by `tests::score_matches_build`).
+    fn score_leaf(&self, octx: &OrderCtx, assign: &[usize], s: &mut ScoreScratch) -> Option<(u64, usize)> {
+        s.loops.clear();
+        for &fi in &octx.order {
+            let full = self.fulls[fi];
+            s.loops.push((full, assign[fi].min(full)));
+        }
+        let mut total_iters = 1usize;
+        for &(full, tile) in &s.loops {
+            total_iters *= full.div_ceil(tile);
+        }
+
+        // Steady tile extents + footprint.
+        s.steady.clear();
+        s.steady_off.clear();
+        let mut footprint = 0usize;
+        for (bi, b) in self.bufs.iter().enumerate() {
+            s.steady_off.push(s.steady.len());
+            let mut bytes = b.elem_bytes;
+            for &(full, fr, a, bb) in &b.dims {
+                let ext = match fr {
+                    None => bb.min(full),
+                    Some(fi) => (a * s.loops[octx.pos_of[fi]].1 + bb).min(full),
+                };
+                s.steady.push(ext);
+                bytes *= ext;
+            }
+            let copies = if self.double_buffer && b.home.is_some() && octx.fetch_depth[bi] > 0 { 2 } else { 1 };
+            footprint += align4(bytes) * copies;
+            if footprint > self.budget {
+                return None;
+            }
+        }
+        s.steady_off.push(s.steady.len());
+
+        // DMA per channel (loop-invariant hoisting via fetch depth).
+        let mut dma_l2 = 0u64;
+        let mut dma_l3 = 0u64;
+        for (bi, b) in self.bufs.iter().enumerate() {
+            let Some(home) = b.home else { continue };
+            let dims = &s.steady[s.steady_off[bi]..s.steady_off[bi + 1]];
+            let rows: usize = dims[..dims.len() - 1].iter().product::<usize>().max(1);
+            let row_bytes = dims.last().copied().unwrap_or(1) * b.elem_bytes;
+            let trips: u64 = s.loops[..octx.fetch_depth[bi]]
+                .iter()
+                .map(|&(full, tile)| full.div_ceil(tile) as u64)
+                .product();
+            let inbound = matches!(b.role, BufferRole::Input | BufferRole::Weight);
+            for leg in dma_legs(home, inbound, rows, row_bytes) {
+                let cycles = self.soc.dma_for(leg.channel_level()).cycles(&leg) * trips;
+                match leg.channel_level() {
+                    Level::L3 => dma_l3 += cycles,
+                    _ => dma_l2 += cycles,
+                }
+            }
+        }
+
+        // Compute.
+        let mut compute = 0u64;
+        for ((_, input_bufs, output_buf), (op, unit)) in self.node_tiles.iter().zip(&self.node_ops) {
+            let in_shapes: Vec<&[usize]> = input_bufs
+                .iter()
+                .map(|&bi| &s.steady[s.steady_off[bi]..s.steady_off[bi + 1]])
+                .collect();
+            let out_shape = &s.steady[s.steady_off[*output_buf]..s.steady_off[*output_buf + 1]];
+            compute +=
+                KernelCostModel::tile_cycles(self.soc, op, *unit, &in_shapes, out_shape) * total_iters as u64;
+        }
+
+        let dma_total = dma_l2 + dma_l3;
+        let cycles = if self.double_buffer {
+            let bottleneck = dma_l2.max(dma_l3).max(compute);
+            let fill = if total_iters > 0 { dma_total / total_iters as u64 } else { 0 };
+            bottleneck + fill
+        } else {
+            dma_total + compute
+        };
+        Some((cycles, total_iters))
+    }
+
+    /// Deterministic tie-break key: `(cycles, iters, order, assign)`
+    /// lexicographic — the global winner is independent of search order
+    /// and thread count.
+    fn key<'s>(&'s self, p: &'s BestPoint) -> (u64, usize, &'s [usize], &'s [usize]) {
+        (p.cycles, p.iters, self.orders[p.order_idx].as_slice(), p.assign.as_slice())
+    }
+
+    /// Run the branch-and-bound; returns the winner (if any point is
+    /// feasible) plus this solve's fully-accounted search tally
+    /// (`scored + capacity_pruned + bound_pruned == space`).
+    fn branch_and_bound(&self, pool: &SolverPool) -> (Option<BestPoint>, SearchStats) {
+        let n = self.fulls.len();
+        let mut tally = SearchStats { solves: 1, space: self.total_points, ..Default::default() };
+        if n == 0 {
+            let mut scratch = ScoreScratch::new(0, self.bufs.len());
+            return match self.score_leaf(&self.order_ctx[0], &[], &mut scratch) {
+                None => {
+                    tally.capacity_pruned += 1;
+                    (None, tally)
+                }
+                Some((cycles, iters)) => {
+                    tally.scored += 1;
+                    (Some(BestPoint { cycles, iters, order_idx: 0, assign: Vec::new() }), tally)
+                }
+            };
+        }
+
+        // Work items: the outermost variable's candidates, per order.
+        let mut items: Vec<(usize, usize)> = Vec::new();
+        for (oi, order) in self.orders.iter().enumerate() {
+            for ci in 0..self.cands[order[0]].len() {
+                items.push((oi, ci));
+            }
+        }
+        let shared = AtomicU64::new(u64::MAX);
+        let threads = pool.threads().min(items.len()).max(1);
+        // RAII permits: returned on drop even if a worker panics, so a
+        // poisoned solve can't shrink the global budget forever.
+        let want = if threads <= 1 || self.total_points < PARALLEL_MIN_POINTS { 0 } else { threads - 1 };
+        let permits = pool.acquire_up_to(want);
+        let extras = permits.count();
+
+        let results: Vec<(Option<BestPoint>, SearchStats)> = if extras == 0 {
+            vec![self.search_range(&items, &shared)]
+        } else {
+            let workers = extras + 1;
+            let mut chunks: Vec<Vec<(usize, usize)>> = (0..workers).map(|_| Vec::new()).collect();
+            for (i, item) in items.into_iter().enumerate() {
+                chunks[i % workers].push(item);
+            }
+            std::thread::scope(|s| {
+                let shared = &shared;
+                let mut own = None;
+                let mut handles = Vec::new();
+                for (w, chunk) in chunks.into_iter().enumerate() {
+                    if w == 0 {
+                        own = Some(chunk);
+                        continue;
+                    }
+                    handles.push(s.spawn(move || self.search_range(&chunk, shared)));
+                }
+                let mut out = vec![self.search_range(&own.expect("worker zero chunk"), shared)];
+                for h in handles {
+                    out.push(h.join().expect("solver worker panicked"));
+                }
+                out
+            })
+        };
+        drop(permits);
+
+        let mut best: Option<BestPoint> = None;
+        for (b, t) in results {
+            tally.scored += t.scored;
+            tally.capacity_pruned += t.capacity_pruned;
+            tally.bound_pruned += t.bound_pruned;
+            tally.subtrees_cut += t.subtrees_cut;
+            if let Some(p) = b {
+                let better = match &best {
+                    None => true,
+                    Some(cur) => self.key(&p) < self.key(cur),
+                };
+                if better {
+                    best = Some(p);
+                }
+            }
+        }
+        (best, tally)
+    }
+
+    /// One worker: search the given `(order, outermost candidate)` items.
+    fn search_range(&self, items: &[(usize, usize)], shared: &AtomicU64) -> (Option<BestPoint>, SearchStats) {
+        let n = self.fulls.len();
+        let mut w = Walker {
+            space: self,
+            shared,
+            st: vec![VarMode::Free; n],
+            assign: vec![0; n],
+            scratch: ScoreScratch::new(n, self.bufs.len()),
+            best: None,
+            tally: SearchStats::default(),
+        };
+        let mut dead = vec![false; self.orders.len()];
+        for &(oi, ci) in items {
+            let octx = &self.order_ctx[oi];
+            let below = self.leaves_below(octx, 0);
+            if dead[oi] {
+                // A suffix-range cut at a previous item of this order
+                // already covers everything smaller.
+                w.tally.bound_pruned += below;
+                continue;
+            }
+            let fi = octx.order[0];
+            let v = self.cands[fi][ci];
+            w.assign[fi] = v;
+            w.st[fi] = VarMode::Exact(v, ci);
+            if n == 1 {
+                w.leaf(octx, oi);
+            } else {
+                let (fp, cl) = self.lower_bound(octx, &w.st);
+                if fp > self.budget {
+                    w.tally.capacity_pruned += below;
+                    w.tally.subtrees_cut += 1;
+                } else if cl > shared.load(Ordering::Relaxed) {
+                    w.tally.bound_pruned += below;
+                    w.tally.subtrees_cut += 1;
+                } else {
+                    w.dfs(octx, oi, 1);
+                }
+            }
+            // Range cut: can any smaller outermost candidate still win?
+            if ci + 1 < self.cands[fi].len() && shared.load(Ordering::Relaxed) != u64::MAX {
+                w.st[fi] = VarMode::Scan(ci + 1);
+                let (_, cl) = self.lower_bound(octx, &w.st);
+                if cl > shared.load(Ordering::Relaxed) {
+                    dead[oi] = true;
+                    w.tally.subtrees_cut += 1;
+                }
+            }
+            w.st[fi] = VarMode::Free;
+        }
+        (w.best, w.tally)
+    }
+
+    /// Serial exhaustive sweep (the oracle/baseline — no pruning).
+    fn exhaustive(&self) -> Option<BestPoint> {
+        let n = self.fulls.len();
+        let mut scratch = ScoreScratch::new(n, self.bufs.len());
+        let mut best: Option<BestPoint> = None;
+        let mut assign = vec![0usize; n];
+        for (oi, octx) in self.order_ctx.iter().enumerate() {
+            if n == 0 {
+                if let Some((cycles, iters)) = self.score_leaf(octx, &assign, &mut scratch) {
+                    let better = match &best {
+                        None => true,
+                        Some(b) => (cycles, iters, octx.order.as_slice(), assign.as_slice()) < self.key(b),
+                    };
+                    if better {
+                        best = Some(BestPoint { cycles, iters, order_idx: oi, assign: assign.clone() });
+                    }
+                }
+                continue;
+            }
+            let mut idx = vec![0usize; n];
+            'points: loop {
+                for f in 0..n {
+                    assign[f] = self.cands[f][idx[f]];
+                }
+                if let Some((cycles, iters)) = self.score_leaf(octx, &assign, &mut scratch) {
+                    let better = match &best {
+                        None => true,
+                        Some(b) => (cycles, iters, octx.order.as_slice(), assign.as_slice()) < self.key(b),
+                    };
+                    if better {
+                        best = Some(BestPoint { cycles, iters, order_idx: oi, assign: assign.clone() });
+                    }
+                }
+                let mut d = n;
+                while d > 0 {
+                    d -= 1;
+                    idx[d] += 1;
+                    if idx[d] < self.cands[d].len() {
+                        continue 'points;
+                    }
+                    idx[d] = 0;
+                }
+                break;
+            }
+        }
+        best
+    }
+
+    /// Turn the winning point into a [`GroupSolution`] (or the standard
+    /// infeasibility error).
+    fn materialise(
+        &self,
+        graph: &Graph,
+        group: &FusionGroup,
+        best: Option<BestPoint>,
+    ) -> Result<GroupSolution> {
+        let p = best.with_context(|| {
+            format!(
+                "no feasible tiling for group [{}] within L1 budget {} B",
+                group.nodes.iter().map(|&n| graph.nodes[n].name.as_str()).collect::<Vec<_>>().join(", "),
+                self.budget
+            )
+        })?;
+        let order = &self.orders[p.order_idx];
+        let sol = build_candidate(
+            graph,
+            self.soc,
+            &self.bufs,
+            &self.node_tiles,
+            &self.resolved,
+            order,
+            &p.assign,
+            self.double_buffer,
+            self.budget,
+        )
+        .expect("winning candidate must rebuild");
+        Ok(sol)
+    }
+}
+
+/// Per-worker DFS state below the fanned-out top level.
+struct Walker<'s, 'a> {
+    space: &'s GroupSpace<'a>,
+    shared: &'s AtomicU64,
+    st: Vec<VarMode>,
+    assign: Vec<usize>,
+    scratch: ScoreScratch,
+    best: Option<BestPoint>,
+    tally: SearchStats,
+}
+
+impl Walker<'_, '_> {
+    /// Score one fully-assigned point and fold it into the local best +
+    /// the shared bound.
+    fn leaf(&mut self, octx: &OrderCtx, oi: usize) {
+        match self.space.score_leaf(octx, &self.assign, &mut self.scratch) {
+            None => self.tally.capacity_pruned += 1,
+            Some((cycles, iters)) => {
+                self.tally.scored += 1;
+                let better = match &self.best {
+                    None => true,
+                    Some(b) => {
+                        (cycles, iters, octx.order.as_slice(), self.assign.as_slice()) < self.space.key(b)
+                    }
+                };
+                if better {
+                    self.best = Some(BestPoint { cycles, iters, order_idx: oi, assign: self.assign.clone() });
+                    self.shared.fetch_min(cycles, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+
+    /// Assign the variable at `depth` (1-based below the fanned-out top
+    /// level), pruning by the capacity/cost bounds and cutting the whole
+    /// remaining candidate suffix when even its relaxation cannot beat
+    /// the best so far.
+    fn dfs(&mut self, octx: &OrderCtx, oi: usize, depth: usize) {
+        let fi = octx.order[depth];
+        let ncand = self.space.cands[fi].len();
+        let below = self.space.leaves_below(octx, depth);
+        let last = depth + 1 == octx.order.len();
+        for i in 0..ncand {
+            let v = self.space.cands[fi][i];
+            self.assign[fi] = v;
+            self.st[fi] = VarMode::Exact(v, i);
+            if last {
+                self.leaf(octx, oi);
+            } else {
+                let (fp, cl) = self.space.lower_bound(octx, &self.st);
+                if fp > self.space.budget {
+                    self.tally.capacity_pruned += below;
+                    self.tally.subtrees_cut += 1;
+                } else if cl > self.shared.load(Ordering::Relaxed) {
+                    self.tally.bound_pruned += below;
+                    self.tally.subtrees_cut += 1;
+                } else {
+                    self.dfs(octx, oi, depth + 1);
+                }
+            }
+            if i + 1 < ncand && self.shared.load(Ordering::Relaxed) != u64::MAX {
+                self.st[fi] = VarMode::Scan(i + 1);
+                let (_, cl) = self.space.lower_bound(octx, &self.st);
+                if cl > self.shared.load(Ordering::Relaxed) {
+                    self.tally.bound_pruned += (ncand - i - 1) as u64 * below;
+                    self.tally.subtrees_cut += 1;
+                    self.st[fi] = VarMode::Free;
+                    return;
+                }
+            }
+            self.st[fi] = VarMode::Free;
+        }
+        self.st[fi] = VarMode::Free;
+    }
+}
+
+/// Reusable scratch for [`GroupSpace::score_leaf`].
 struct ScoreScratch {
     /// (full, tile) per loop position.
     loops: Vec<(usize, usize)>,
@@ -317,114 +1051,6 @@ impl ScoreScratch {
             steady_off: Vec::with_capacity(n_bufs + 1),
         }
     }
-}
-
-/// Allocation-free feasibility + cost scoring of one candidate point.
-/// Mirrors [`build_candidate`] + [`estimate_cycles`] exactly (asserted by
-/// `tests::score_matches_build`).
-#[allow(clippy::too_many_arguments)]
-fn score_candidate(
-    soc: &SocConfig,
-    bufs: &[BufTemplate],
-    node_tiles: &[(usize, Vec<usize>, usize)],
-    node_ops: &[(crate::ir::Op, ComputeUnit)],
-    resolved: &ResolvedVars,
-    order: &[usize],
-    assign: &[usize],
-    double_buffer: bool,
-    budget: usize,
-    s: &mut ScoreScratch,
-) -> Option<(u64, usize)> {
-    // Loop nest (full, tile) per position; pos_of[free_ref] = position.
-    s.loops.clear();
-    for &fi in order {
-        let root = resolved.free[fi];
-        let full = resolved.root_full[&root];
-        s.loops.push((full, assign[fi].min(full)));
-    }
-    let pos_of = |fi: usize| order.iter().position(|&o| o == fi).unwrap();
-
-    // Steady tile extents + footprint + fetch depths.
-    s.steady.clear();
-    s.steady_off.clear();
-    let mut footprint = 0usize;
-    let mut total_iters = 1usize;
-    for &(full, tile) in &s.loops {
-        total_iters *= full.div_ceil(tile);
-    }
-    for b in bufs {
-        s.steady_off.push(s.steady.len());
-        let mut bytes = b.elem_bytes;
-        let mut fetch_depth = 0usize;
-        for &(full, fr, a, bb) in &b.dims {
-            let ext = match fr {
-                None => bb.min(full),
-                Some(fi) => {
-                    let pos = pos_of(fi);
-                    fetch_depth = fetch_depth.max(pos + 1);
-                    (a * s.loops[pos].1 + bb).min(full)
-                }
-            };
-            s.steady.push(ext);
-            bytes *= ext;
-        }
-        let copies = if double_buffer && b.home.is_some() && fetch_depth > 0 { 2 } else { 1 };
-        footprint += align4(bytes) * copies;
-        if footprint > budget {
-            s.steady_off.push(s.steady.len()); // keep offsets consistent
-            return None;
-        }
-    }
-    s.steady_off.push(s.steady.len());
-
-    // DMA per channel (loop-invariant hoisting via fetch depth).
-    let mut dma_l2 = 0u64;
-    let mut dma_l3 = 0u64;
-    for (bi, b) in bufs.iter().enumerate() {
-        let Some(home) = b.home else { continue };
-        let dims = &s.steady[s.steady_off[bi]..s.steady_off[bi + 1]];
-        let rows: usize = dims[..dims.len() - 1].iter().product::<usize>().max(1);
-        let row_bytes = dims.last().copied().unwrap_or(1) * b.elem_bytes;
-        // trips = product of loop trip counts outside the innermost
-        // dependent loop (same formula as GroupBuffer::trips).
-        let mut fetch_depth = 0usize;
-        for &(_, fr, _, _) in &b.dims {
-            if let Some(fi) = fr {
-                fetch_depth = fetch_depth.max(pos_of(fi) + 1);
-            }
-        }
-        let trips: u64 =
-            s.loops[..fetch_depth].iter().map(|&(full, tile)| full.div_ceil(tile) as u64).product();
-        let inbound = matches!(b.role, BufferRole::Input | BufferRole::Weight);
-        for leg in dma_legs(home, inbound, rows, row_bytes) {
-            let cycles = soc.dma_for(leg.channel_level()).cycles(&leg) * trips;
-            match leg.channel_level() {
-                Level::L3 => dma_l3 += cycles,
-                _ => dma_l2 += cycles,
-            }
-        }
-    }
-
-    // Compute.
-    let mut compute = 0u64;
-    for ((_, input_bufs, output_buf), (op, unit)) in node_tiles.iter().zip(node_ops) {
-        let in_shapes: Vec<&[usize]> = input_bufs
-            .iter()
-            .map(|&bi| &s.steady[s.steady_off[bi]..s.steady_off[bi + 1]])
-            .collect();
-        let out_shape = &s.steady[s.steady_off[*output_buf]..s.steady_off[*output_buf + 1]];
-        compute += KernelCostModel::tile_cycles(soc, op, *unit, &in_shapes, out_shape) * total_iters as u64;
-    }
-
-    let dma_total = dma_l2 + dma_l3;
-    let cycles = if double_buffer {
-        let bottleneck = dma_l2.max(dma_l3).max(compute);
-        let fill = if total_iters > 0 { dma_total / total_iters as u64 } else { 0 };
-        bottleneck + fill
-    } else {
-        dma_total + compute
-    };
-    Some((cycles, total_iters))
 }
 
 /// Solve all groups; shrinks unsolvable fused groups from the tail.
@@ -448,27 +1074,47 @@ pub fn solve_graph_with(
     double_buffer: bool,
     policy: HomesPolicy,
 ) -> Result<(Vec<FusionGroup>, TilingSolution)> {
+    solve_graph_in(graph, soc, groups, opts, double_buffer, policy, SolverPool::global())
+}
+
+/// [`solve_graph_with`] against an explicit pool. Distinct groups solve
+/// concurrently on the pool's budget (each group search additionally
+/// fans its own candidates out) — results are position-stable, so the
+/// outcome is identical to the serial loop.
+#[allow(clippy::too_many_arguments)]
+pub fn solve_graph_in(
+    graph: &Graph,
+    soc: &SocConfig,
+    groups: Vec<FusionGroup>,
+    opts: &SolverOptions,
+    double_buffer: bool,
+    policy: HomesPolicy,
+    pool: &SolverPool,
+) -> Result<(Vec<FusionGroup>, TilingSolution)> {
     let mut groups = groups;
     loop {
         let homes = assign_homes_with(graph, &groups, soc, policy);
+        let results: Vec<Result<GroupSolution>> = pool.map((0..groups.len()).collect(), |gi| {
+            solve_group_in(graph, soc, &groups[gi], &homes, opts, double_buffer, pool)
+        });
         let mut out = Vec::with_capacity(groups.len());
-        let mut resplit: Option<usize> = None;
-        for (gi, g) in groups.iter().enumerate() {
-            match solve_group(graph, soc, g, &homes, opts, double_buffer) {
+        let mut resplit: Option<(usize, anyhow::Error)> = None;
+        for (gi, r) in results.into_iter().enumerate() {
+            match r {
                 Ok(s) => out.push(s),
                 Err(e) => {
-                    if g.len() == 1 {
-                        let name = &graph.nodes[g.nodes[0]].name;
-                        return Err(e.context(format!("unsolvable single-node group '{name}'")));
-                    }
-                    resplit = Some(gi);
+                    resplit = Some((gi, e));
                     break;
                 }
             }
         }
         match resplit {
             None => return Ok((groups, TilingSolution { groups: out })),
-            Some(gi) => {
+            Some((gi, e)) => {
+                if groups[gi].len() == 1 {
+                    let name = &graph.nodes[groups[gi].nodes[0]].name;
+                    return Err(e.context(format!("unsolvable single-node group '{name}'")));
+                }
                 // Drop the tail node into its own group and retry (homes
                 // change: the split tensor now materialises).
                 let tail = groups[gi].nodes.pop().expect("non-empty");
@@ -532,15 +1178,50 @@ fn permutations(n: usize) -> Vec<Vec<usize>> {
     out
 }
 
-fn enumerate(cands: &[Vec<usize>], i: usize, assign: &mut Vec<usize>, f: &mut impl FnMut(&[usize])) {
-    if i == cands.len() {
-        f(assign);
-        return;
+/// Loop orders to search. Up to 3 free variables: every permutation
+/// (regression-tested — small groups keep the exhaustive order space).
+/// Above that, a small heuristic set built on operand reuse: the
+/// variable with the largest cross-iteration reuse — the smallest
+/// dependent streamed footprint — goes innermost, so the big operands
+/// hoist out of the hot loop; plus its reverse and the identity orders,
+/// deduplicated. All orders feed the same deterministic tie-break.
+fn search_orders(n: usize, bufs: &[BufTemplate]) -> Vec<Vec<usize>> {
+    if n <= 3 {
+        return permutations(n);
     }
-    for &v in &cands[i] {
-        assign[i] = v;
-        enumerate(cands, i + 1, assign, f);
+    let mut weight = vec![0u128; n];
+    for b in bufs {
+        if b.home.is_none() {
+            continue;
+        }
+        let full_bytes = b.elem_bytes as u128 * b.dims.iter().map(|d| d.0 as u128).product::<u128>();
+        let mut seen = 0u64;
+        for &(_, fr, _, _) in &b.dims {
+            if let Some(fi) = fr {
+                if seen & (1 << fi) == 0 {
+                    seen |= 1 << fi;
+                    weight[fi] += full_bytes;
+                }
+            }
+        }
     }
+    // Outermost = heaviest dependent footprint (fetched fewest times);
+    // innermost = lightest = most reuse across inner iterations.
+    let mut h: Vec<usize> = (0..n).collect();
+    h.sort_by(|&x, &y| weight[y].cmp(&weight[x]).then(x.cmp(&y)));
+    let all = [
+        h.clone(),
+        h.iter().rev().copied().collect::<Vec<usize>>(),
+        (0..n).collect::<Vec<usize>>(),
+        (0..n).rev().collect::<Vec<usize>>(),
+    ];
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    for o in all {
+        if !out.contains(&o) {
+            out.push(o);
+        }
+    }
+    out
 }
 
 /// Materialise a candidate (order, assignment) into a GroupSolution if it
@@ -734,6 +1415,47 @@ mod tests {
     }
 
     #[test]
+    fn small_groups_enumerate_all_permutations() {
+        // Regression for the order heuristic: ≤3 free variables must keep
+        // the full permutation space regardless of buffer shapes.
+        for n in 0..=3 {
+            assert_eq!(search_orders(n, &[]), permutations(n));
+        }
+    }
+
+    #[test]
+    fn heuristic_orders_for_many_vars() {
+        // 4 free vars; streamed buffers make var 0 the heaviest (largest
+        // dependent footprint → outermost) and var 3 the lightest
+        // (innermost in the heuristic order).
+        let buf = |dims: Vec<(usize, Option<usize>, usize, usize)>, home| BufTemplate {
+            tensor: 0,
+            name: "b".into(),
+            role: BufferRole::Input,
+            elem_bytes: 1,
+            dims,
+            home,
+        };
+        let bufs = vec![
+            buf(vec![(4096, Some(2), 1, 0), (64, Some(0), 1, 0)], Some(Level::L2)),
+            buf(vec![(64, Some(1), 1, 0), (8, Some(3), 1, 0)], Some(Level::L2)),
+            buf(vec![(512, Some(0), 1, 0), (64, Some(1), 1, 0)], Some(Level::L3)),
+            // A fused intermediate must not influence the heuristic.
+            buf(vec![(1 << 20, Some(3), 1, 0)], None),
+        ];
+        let orders = search_orders(4, &bufs);
+        assert!(orders.len() <= 4, "heuristic set stays small");
+        assert!(orders.len() >= 2, "at least heuristic + reverse");
+        for o in &orders {
+            let mut sorted = o.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "every order is a permutation");
+        }
+        assert_eq!(orders[0][0], 0, "heaviest var outermost");
+        assert_eq!(*orders[0].last().unwrap(), 3, "lightest var innermost");
+    }
+
+    #[test]
     fn baseline_solves_and_fits() {
         let (g, soc, groups) = setup(Strategy::LayerPerLayer, false);
         let homes = assign_homes(&g, &groups, &soc);
@@ -754,6 +1476,58 @@ mod tests {
         let inter: Vec<_> = s.buffers.iter().filter(|b| b.role == BufferRole::Intermediate).collect();
         assert_eq!(inter.len(), 1);
         assert!(inter[0].home.is_none(), "fused intermediate has no home level");
+    }
+
+    #[test]
+    fn bnb_matches_exhaustive_any_thread_count() {
+        // The heart of the PR: the pruned/parallel search returns the
+        // bit-identical winner of the exhaustive serial sweep, for every
+        // strategy × SoC × buffering combination and any thread count.
+        for (strategy, npu, dbuf) in [
+            (Strategy::Ftl, true, false),
+            (Strategy::Ftl, false, true),
+            (Strategy::LayerPerLayer, true, false),
+            (Strategy::LayerPerLayer, false, true),
+        ] {
+            let (g, soc, groups) = setup(strategy, npu);
+            let homes = assign_homes(&g, &groups, &soc);
+            for gr in &groups {
+                let oracle =
+                    solve_group_exhaustive(&g, &soc, gr, &homes, &SolverOptions::default(), dbuf).unwrap();
+                for threads in [1usize, 2, 8] {
+                    let pool = SolverPool::new(threads);
+                    let sol =
+                        solve_group_in(&g, &soc, gr, &homes, &SolverOptions::default(), dbuf, &pool).unwrap();
+                    assert_eq!(
+                        sol, oracle,
+                        "B&B winner must be bit-identical to exhaustive \
+                         ({strategy:?}, npu={npu}, dbuf={dbuf}, threads={threads})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn search_space_fully_accounted() {
+        // Every enumerable point is either scored or pruned, never lost:
+        // scored + capacity_pruned + bound_pruned == space.
+        for threads in [1usize, 4] {
+            let pool = SolverPool::new(threads);
+            let (g, soc, groups) = setup(Strategy::Ftl, true);
+            let homes = assign_homes(&g, &groups, &soc);
+            for gr in &groups {
+                solve_group_in(&g, &soc, gr, &homes, &SolverOptions::default(), false, &pool).unwrap();
+            }
+            let s = pool.stats();
+            assert!(s.space > 0 && s.scored > 0);
+            assert_eq!(
+                s.scored + s.capacity_pruned + s.bound_pruned,
+                s.space,
+                "accounting must cover the whole space (threads={threads}): {s:?}"
+            );
+            assert!(s.pruned() > s.scored, "pruning must carry the search");
+        }
     }
 
     #[test]

@@ -11,7 +11,10 @@ use ftl::memory::{AllocRequest, BufferRole, Level, StaticAllocator};
 use ftl::runtime::{reference, HostTensor, NativeBackend, TileExecutor};
 use ftl::schedule::build_schedule;
 use ftl::sim::simulate;
-use ftl::tiling::{assign_homes, fuse_groups, solve_graph, FusionPolicy, SolverOptions, Strategy};
+use ftl::tiling::{
+    assign_homes, fuse_groups, solve_graph, solve_graph_in, solve_group_exhaustive, solve_group_in, FusionPolicy,
+    HomesPolicy, SolverOptions, SolverPool, Strategy,
+};
 use ftl::util::prop::{cases, Rng};
 
 /// Random small MLP-ish graph.
@@ -105,6 +108,74 @@ fn prop_solution_fits_l1_and_covers_dims() {
                 }
             }
         }
+    });
+}
+
+#[test]
+fn prop_bnb_solver_matches_exhaustive_oracle() {
+    // The parallel branch-and-bound must return the *bit-identical*
+    // winner of the naive serial sweep — same (cycles, iters, order,
+    // assignment), hence an equal GroupSolution — for any thread count,
+    // across random graphs, SoCs and buffering modes. Infeasible groups
+    // must fail on both sides.
+    cases(15, |rng| {
+        let graph = random_graph(rng);
+        let strategy = if rng.chance(0.5) { Strategy::Ftl } else { Strategy::LayerPerLayer };
+        let soc = if rng.chance(0.5) {
+            ftl::soc::siracusa_reduced()
+        } else {
+            ftl::soc::siracusa_reduced_cluster_only()
+        };
+        let dbuf = rng.chance(0.5);
+        let groups = fuse_groups(&graph, strategy, FusionPolicy::default());
+        let homes = assign_homes(&graph, &groups, &soc);
+        for gr in &groups {
+            let oracle = solve_group_exhaustive(&graph, &soc, gr, &homes, &SolverOptions::default(), dbuf);
+            for threads in [1usize, 3] {
+                let pool = SolverPool::new(threads);
+                let sol = solve_group_in(&graph, &soc, gr, &homes, &SolverOptions::default(), dbuf, &pool);
+                match (&oracle, &sol) {
+                    (Ok(a), Ok(b)) => assert_eq!(b, a, "B&B diverged from oracle (threads={threads})"),
+                    (Err(_), Err(_)) => {}
+                    (a, b) => panic!(
+                        "feasibility diverged (threads={threads}): oracle={:?} bnb={:?}",
+                        a.is_ok(),
+                        b.is_ok()
+                    ),
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_search_space_fully_accounted() {
+    // Every enumerable point of every solve is scored or pruned exactly
+    // once: scored + capacity_pruned + bound_pruned == space, for serial
+    // and parallel searches alike.
+    cases(10, |rng| {
+        let graph = random_graph(rng);
+        let strategy = if rng.chance(0.5) { Strategy::Ftl } else { Strategy::LayerPerLayer };
+        let pool = SolverPool::new(if rng.chance(0.5) { 1 } else { 4 });
+        let soc = ftl::soc::siracusa_reduced();
+        let groups = fuse_groups(&graph, strategy, FusionPolicy::default());
+        let _ = solve_graph_in(
+            &graph,
+            &soc,
+            groups,
+            &SolverOptions::default(),
+            rng.chance(0.5),
+            HomesPolicy::Resident,
+            &pool,
+        )
+        .expect("random graphs are solvable at the default L1");
+        let s = pool.stats();
+        assert!(s.solves > 0 && s.space > 0 && s.scored > 0);
+        assert_eq!(
+            s.scored + s.capacity_pruned + s.bound_pruned,
+            s.space,
+            "search-space accounting must balance: {s:?}"
+        );
     });
 }
 

@@ -456,6 +456,12 @@ fn stats_json_reports_batch_shed_and_sim_cache() {
     assert_eq!(batch.get("shed").unwrap().as_usize().unwrap(), 1);
     assert!(batch.get("mean_batch_size").is_ok());
     assert!(j.get("sim_cache").unwrap().get("hit_rate").is_ok());
+    // The global solver pool's search counters ride along in STATS.
+    let solver = j.get("solver").unwrap();
+    assert!(solver.get("threads").unwrap().as_usize().unwrap() >= 1);
+    for key in ["solves", "space", "scored", "capacity_pruned", "bound_pruned", "subtrees_cut"] {
+        assert!(solver.get(key).is_ok(), "solver stats must expose '{key}'");
+    }
     assert!(j.get("plan_cache").is_ok());
 }
 
@@ -558,7 +564,7 @@ fn corrupt_and_version_mismatched_entries_are_skipped_never_fatal() {
 fn background_snapshotter_writes_behind_without_explicit_flush() {
     let dir = temp_dir("write-behind");
     let svc = Arc::new(PlanService::new(opts(8, 1, 1)));
-    let snap = Snapshotter::attach(svc.clone(), &dir, PersistOptions { interval: Duration::from_millis(20) }).unwrap();
+    let snap = Snapshotter::attach(svc.clone(), &dir, PersistOptions { interval: Duration::from_millis(20), max_entries: 0 }).unwrap();
     svc.deploy("bg", &small_graph(), &cfg("cluster-only", Strategy::Ftl)).unwrap();
     let start = std::time::Instant::now();
     while snap.counters().entries_written() < 2 && start.elapsed() < Duration::from_secs(10) {
@@ -612,16 +618,33 @@ fn deployment_and_sim_report_roundtrip_property() {
 // ------------------------------------------------------------------ CLI path
 
 #[test]
-fn cli_serve_self_test_passes() {
+fn cli_serve_self_test_passes_and_plans_are_thread_count_invariant() {
+    // Also the CI solver-determinism smoke in miniature: the self-test
+    // prints a `plan_digest=` content hash over the plans it compiled;
+    // a single-threaded and a multi-threaded solver run must match.
     let exe = env!("CARGO_BIN_EXE_ftl");
-    let out = std::process::Command::new(exe)
-        .args(["serve", "--self-test", "--cache-cap", "8", "--workers", "2"])
-        .output()
-        .expect("run ftl serve --self-test");
-    let stdout = String::from_utf8_lossy(&out.stdout);
-    let stderr = String::from_utf8_lossy(&out.stderr);
-    assert!(out.status.success(), "ftl serve --self-test failed:\n{stdout}\n{stderr}");
-    assert!(stdout.contains("self-test OK"), "unexpected output:\n{stdout}");
+    let digest_with = |threads: &str| {
+        let out = std::process::Command::new(exe)
+            .args(["serve", "--self-test", "--cache-cap", "8", "--workers", "2"])
+            .env("FTL_SOLVER_THREADS", threads)
+            .output()
+            .expect("run ftl serve --self-test");
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+        assert!(out.status.success(), "ftl serve --self-test failed:\n{stdout}\n{stderr}");
+        assert!(stdout.contains("self-test OK"), "unexpected output:\n{stdout}");
+        let digest = stdout
+            .lines()
+            .find_map(|l| l.split_once("plan_digest=").map(|(_, d)| d.trim().to_string()))
+            .expect("self-test must print a plan_digest= line");
+        assert_eq!(digest.len(), 32, "digest must be 32 hex digits: {digest}");
+        digest
+    };
+    assert_eq!(
+        digest_with("1"),
+        digest_with("4"),
+        "solver thread count must not change the compiled plans"
+    );
 }
 
 #[test]
