@@ -5,8 +5,9 @@
 //! offline): each request line is one of
 //!
 //! ```text
-//! DEPLOY <workload> <soc> <strategy>      e.g. DEPLOY vit-base-stage siracusa ftl
-//! STATS                                   plan-cache / single-flight counters
+//! DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>]
+//!                                         e.g. DEPLOY vit-base-stage siracusa ftl 500 lane=gold
+//! STATS                                   plan-cache / single-flight / per-lane counters
 //! PING
 //! ```
 //!
@@ -30,7 +31,10 @@
 //! the cache/single-flight accounting — then snapshot the warm caches and
 //! **restart** into a fresh service pointed at the same `--cache-dir`
 //! (default: a temp dir), proving every previously seen request is served
-//! with zero solves and zero simulator runs — and exit.
+//! with zero solves and zero simulator runs — then run a two-lane 3:1
+//! priority-lane saturation wave (weighted fair queuing must hand the
+//! heavy tenant ~3/4 of the early cold work; greppable
+//! `lane_wave early gold=…/… quanta` shares) — and exit.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -198,6 +202,10 @@ fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>, cache_dir: O
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // Wave 4: priority-lane fairness under saturation (its own fresh
+    // scheduler — the waves above exercised the default single lane).
+    lane_wave()?;
+
     println!("[server] stats: {}", scheduler.stats_json());
     println!(
         "[server] served {} plan requests with {} solves / {} sims; self-test OK",
@@ -205,6 +213,38 @@ fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>, cache_dir: O
         solves,
         sims
     );
+    Ok(())
+}
+
+/// Wave 4: two tenants — "gold" (weight 3) and "free" (weight 1) —
+/// flood a fresh scheduler with distinct cold requests at the same
+/// instant, one request per WFQ quantum. Weighted fair queuing must
+/// give gold ~3/4 of the early service (exactly 12 of the first 16
+/// under the virtual clock; the threaded run tolerates startup
+/// raggedness). The shared driver ([`ftl::serve::wave`], also run by
+/// the `lane_contention` bench) samples the early share from the
+/// dispatcher's own counters and asserts the drain invariants.
+fn lane_wave() -> Result<()> {
+    let report = ftl::serve::wave::two_tenant_wave(12, 16)?;
+    let expect = 3.0 * report.total_early as f64 / 4.0;
+    println!(
+        "[server] lane_wave early gold={}/{} quanta (weights 3:1, expect ~{expect:.0})",
+        report.gold_early, report.total_early
+    );
+    // The 3:1 split only holds while both lanes stay backlogged (gold
+    // drains after 12 quanta); a pathologically late sample has nothing
+    // left to judge.
+    if report.total_early <= 20 {
+        ensure!(
+            (report.gold_early as f64 - expect).abs() <= 3.0,
+            "3:1 lanes must give gold a ~3/4 share of early service (got {}/{})",
+            report.gold_early,
+            report.total_early
+        );
+    } else {
+        println!("[server] lane_wave sample landed past the window; skipping the share assert");
+    }
+    println!("{}", report.stats.lanes_table());
     Ok(())
 }
 

@@ -45,12 +45,13 @@ fn main() {
         batch_window: Duration::ZERO,
         max_batch: 64,
         policy: AdmissionPolicy::Block,
+        ..BatchOptions::default()
     };
 
     println!("=== serve layer: batching scheduler + sim-report cache ===\n");
 
     // Warm path: both caches hot; measures pure scheduler overhead.
-    let warm_sched = BatchScheduler::new(Arc::new(PlanService::new(opts)), fast);
+    let warm_sched = BatchScheduler::new(Arc::new(PlanService::new(opts)), fast.clone());
     warm_sched.deploy("warmup", graph.clone(), cfg.clone()).unwrap();
     let warm = bench("batch/warm_batched_deploy", secs(2), || {
         let outcome = warm_sched.deploy("warm", graph.clone(), cfg.clone()).unwrap();
@@ -62,7 +63,7 @@ fn main() {
     let window = BatchOptions { batch_window: Duration::from_millis(5), ..fast };
     let fanout = bench("batch/fanout_8x_identical_cold", secs(3), || {
         let service = Arc::new(PlanService::new(opts));
-        let sched = Arc::new(BatchScheduler::new(service.clone(), window));
+        let sched = Arc::new(BatchScheduler::new(service.clone(), window.clone()));
         let mut handles = Vec::new();
         for i in 0..8 {
             let sched = sched.clone();

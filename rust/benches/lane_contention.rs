@@ -1,0 +1,104 @@
+//! Bench: priority lanes under two-tenant saturation.
+//!
+//! Three questions, three sections:
+//!
+//! * **(a) share tables** — the deterministic WFQ core (the same
+//!   `LaneSet` the dispatcher schedules with) under saturation at
+//!   1:1, 3:1 and strict-ish (1 000 000:1) weight splits: the served
+//!   cold-work share must track the weight share within one quantum.
+//!   Unit costs, virtual clock — the table is exact and reproducible
+//!   (it is recorded in EXPERIMENTS.md §Perf).
+//! * **(b) scheduling overhead** — wall-clock cost of one WFQ quantum
+//!   (pick + drain + charge) and of admission (try_push), i.e. what the
+//!   lanes add on top of the old single FIFO's `VecDeque` ops. This is
+//!   the number that must stay negligible against a solve (µs vs ms).
+//! * **(c) threaded contention** — a real `BatchScheduler` two-tenant
+//!   3:1 wave with distinct cold solves (one request per quantum, via
+//!   the shared `ftl::serve::wave` driver): reports the heavy tenant's
+//!   share of early quanta (sampled from the dispatcher's own
+//!   counters) and the end-state per-lane cold-work counters.
+//!
+//! `FTL_BENCH_SMOKE=1` shrinks quanta counts and the threaded wave so
+//! CI can execute the harness end-to-end.
+
+use std::time::Duration;
+
+use ftl::serve::wave::{saturated_shares, two_tenant_wave};
+use ftl::serve::{LaneSet, LaneSpec};
+use ftl::util::bench::bench;
+
+fn smoke() -> bool {
+    std::env::var("FTL_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Saturated two-lane run on the deterministic core (shared
+/// `ftl::serve::wave` driver — the same loop behind the self-test's
+/// `lane_shares` line).
+fn share_split(weights: (u64, u64), quanta: u64) -> (u64, u64) {
+    let served = saturated_shares(&[("a", weights.0), ("b", weights.1)], quanta);
+    (served[0], served[1])
+}
+
+fn main() {
+    let smoke = smoke();
+    let quanta: u64 = if smoke { 64 } else { 4096 };
+    let secs = |n: u64| if smoke { Duration::from_millis(150) } else { Duration::from_secs(n) };
+
+    println!("=== serve layer: priority lanes (weighted fair queuing) ===\n");
+
+    // (a) Deterministic share tables (virtual clock, unit costs).
+    println!("(a) two-tenant saturation, {quanta} unit quanta (deterministic core):\n");
+    println!("{:<18} {:>10} {:>10} {:>14}", "weights", "tenant A", "tenant B", "A share");
+    for weights in [(1u64, 1u64), (3, 1), (1_000_000, 1)] {
+        let (a, b) = share_split(weights, quanta);
+        let label = format!("{}:{}", weights.0, weights.1);
+        println!("{label:<18} {a:>10} {b:>10} {:>13.1}%", 100.0 * a as f64 / quanta as f64);
+        // Weighted fairness within one quantum (the strict split only
+        // bounds the light tenant to ~1 quantum of service).
+        let expect_a = quanta as f64 * weights.0 as f64 / (weights.0 + weights.1) as f64;
+        assert!(
+            (a as f64 - expect_a).abs() <= 1.0,
+            "{}:{} split must track the weight share within one quantum (got {a}, expected {expect_a:.1})",
+            weights.0,
+            weights.1
+        );
+    }
+    println!();
+
+    // (b) Scheduling overhead per quantum and per admission.
+    let mut lanes: LaneSet<u64> = LaneSet::new(vec![
+        LaneSpec::new("gold", 3, 1024),
+        LaneSpec::new("silver", 2, 1024),
+        LaneSpec::new("free", 1, 1024),
+    ]);
+    let idx: Vec<usize> = ["gold", "silver", "free"].iter().map(|&n| lanes.resolve(Some(n))).collect();
+    let quantum = bench("lanes/quantum(pick+drain+charge)", secs(2), || {
+        for &l in &idx {
+            let _ = lanes.try_push(l, 1);
+        }
+        let lane = lanes.pick().expect("saturated");
+        lanes.drain(lane, 1);
+        lanes.charge(lane, 1);
+    });
+
+    // (c) Threaded two-tenant 3:1 wave over a real scheduler: distinct
+    // cold solves, one request per quantum. The shared driver
+    // (`ftl::serve::wave`, also run by the example self-test) asserts
+    // the drain invariants (all served, exact per-lane cold work, lane
+    // sums == scheduler totals) internally.
+    let per_lane: usize = if smoke { 4 } else { 12 };
+    let window = (4 * per_lane / 3) as u64;
+    let report = two_tenant_wave(per_lane, window).expect("two-tenant wave failed");
+    println!(
+        "\n(c) threaded 3:1 wave ({per_lane} distinct cold requests/lane): gold {}/{} of early quanta",
+        report.gold_early, report.total_early
+    );
+    println!("{}", report.stats.lanes_table());
+
+    println!("\nWFQ quantum overhead (vs ~ms solves): {:?}", quantum.median);
+    assert!(
+        quantum.median < Duration::from_millis(1),
+        "lane scheduling must stay negligible against a solve (got {:?})",
+        quantum.median
+    );
+}

@@ -23,8 +23,10 @@
 //!            ──► runtime::TileExecutor (PJRT numerics validation)
 //!
 //!  serving  (long-running planner service, `ftl serve`):
-//!  request ──► serve::BatchScheduler (admission control: bounded queue,
-//!          │    shed/block, deadlines; SoC-grouped batching + fan-out)
+//!  request ──► serve::BatchScheduler (admission control: per-lane bounded
+//!          │    queues, shed/block, deadlines; weighted-fair priority
+//!          │    lanes (serve::lanes + serve::wfq, `lane=` protocol
+//!          │    field); SoC-grouped batching + fan-out)
 //!          ──► serve::fingerprint (stable content hash of graph+config)
 //!          ──► serve::PlanCache   (sharded LRU of Arc<Deployment>) ── hit ─► ...
 //!          ──► serve::SingleFlight (coalesce concurrent identical solves)

@@ -4,6 +4,7 @@
 //! ftl deploy     --workload vit-base-stage --soc siracusa --strategy ftl [--double-buffer] [--json]
 //! ftl serve      [--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64] [--sim-cache-cap 256]
 //!                [--queue-cap 256] [--batch-window-ms 2] [--max-batch 64] [--shed]
+//!                [--lane name:weight:cap[:shed|:block]]...  (repeatable priority lanes, WFQ-scheduled)
 //!                [--cache-dir DIR] [--snapshot-interval-ms 1000] [--cache-max-entries 0] [--self-test]
 //!
 //! Every command also takes `--solver-threads N` (or the
@@ -35,44 +36,55 @@ use ftl::ir::builder::{attention_head, deep_mlp, vit_mlp_block, vit_mlp_preset};
 use ftl::ir::{graph_from_json, graph_to_json, DType, Graph};
 use ftl::runtime::{KernelBackend, NativeBackend, PjrtBackend};
 use ftl::serve::{
-    checksum, handle_line, resolve_workload, AdmissionPolicy, BatchOptions, BatchScheduler, PersistOptions,
-    PlanService, ServeOptions, Snapshotter,
+    checksum, handle_line, normalize_specs, resolve_workload, AdmissionPolicy, BatchOptions, BatchScheduler,
+    LaneSpec, PersistOptions, PlanService, ServeOptions, Snapshotter,
 };
 use ftl::tiling::Strategy;
 use ftl::util::json::Json;
 
 struct Args {
     cmd: String,
-    flags: HashMap<String, String>,
+    /// Flag values in arrival order — most flags use the last value,
+    /// repeatable flags (`--lane`) consume all of them.
+    flags: HashMap<String, Vec<String>>,
 }
 
 impl Args {
     fn parse() -> Result<Self> {
         let mut it = std::env::args().skip(1);
         let cmd = it.next().unwrap_or_else(|| "help".into());
-        let mut flags = HashMap::new();
+        let mut flags: HashMap<String, Vec<String>> = HashMap::new();
         while let Some(a) = it.next() {
             let Some(name) = a.strip_prefix("--") else { bail!("unexpected argument '{a}'") };
             // boolean flags take no value; value flags consume the next token
             match name {
                 "double-buffer" | "json" | "no-perf-constraints" | "verbose" | "self-test" | "shed" => {
-                    flags.insert(name.to_string(), "true".into());
+                    flags.entry(name.to_string()).or_default().push("true".into());
                 }
                 _ => {
                     let v = it.next().ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
-                    flags.insert(name.to_string(), v);
+                    flags.entry(name.to_string()).or_default().push(v);
                 }
             }
         }
         Ok(Self { cmd, flags })
     }
 
+    fn get_opt(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
     fn get<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
-        self.flags.get(name).map(String::as_str).unwrap_or(default)
+        self.get_opt(name).unwrap_or(default)
+    }
+
+    /// Every value a repeatable flag was given (empty when absent).
+    fn get_all(&self, name: &str) -> &[String] {
+        self.flags.get(name).map(Vec::as_slice).unwrap_or(&[])
     }
 
     fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
-        match self.flags.get(name) {
+        match self.get_opt(name) {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
         }
@@ -85,9 +97,9 @@ impl Args {
 
 /// Resolve a workload name (or `--network file.json`) to a graph.
 fn load_workload(args: &Args) -> Result<(String, Graph)> {
-    if let Some(path) = args.flags.get("network") {
+    if let Some(path) = args.get_opt("network") {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        return Ok((path.clone(), graph_from_json(&text)?));
+        return Ok((path.to_string(), graph_from_json(&text)?));
     }
     let name = args.get("workload", "vit-base-stage");
     let seq = args.get_usize("seq", 197)?;
@@ -110,7 +122,7 @@ fn load_workload(args: &Args) -> Result<(String, Graph)> {
 fn make_config(args: &Args) -> Result<DeployConfig> {
     let strategy = Strategy::parse(args.get("strategy", "ftl"))
         .ok_or_else(|| anyhow!("--strategy must be 'ftl' or 'baseline'"))?;
-    let mut cfg = match args.flags.get("config") {
+    let mut cfg = match args.get_opt("config") {
         Some(path) => DeployConfig::from_file(std::path::Path::new(path))?,
         None => DeployConfig::preset(args.get("soc", "siracusa"), strategy)?,
     };
@@ -157,9 +169,13 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// `ftl serve` — run the batch-aware deployment service
 /// ([`ftl::serve::BatchScheduler`] over [`ftl::serve::PlanService`])
 /// behind the line protocol `DEPLOY <workload> <soc> <strategy>
-/// [deadline-ms]` | `STATS` | `PING` (one JSON response per line).
-/// `--queue-cap`, `--batch-window-ms` and `--shed` tune admission
-/// control; `--cache-dir` persists the plan + sim caches across restarts
+/// [deadline-ms] [lane=<name>]` | `STATS` | `PING` (one JSON response
+/// per line). `--queue-cap`, `--batch-window-ms` and `--shed` tune
+/// admission control; `--lane name:weight:cap[:shed|:block]`
+/// (repeatable) declares weighted-fair priority lanes — saturated lanes
+/// split cold work in proportion to their weights, and requests select
+/// a lane with the protocol's `lane=` field (unknown/absent names use
+/// the default lane); `--cache-dir` persists the plan + sim caches across restarts
 /// (write-behind every `--snapshot-interval-ms`, warm start on boot,
 /// `--cache-max-entries` caps the directory via an mtime-LRU sweep);
 /// `--self-test` exercises the full service in process (cache hits,
@@ -173,13 +189,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cache_shards: args.get_usize("cache-shards", 8)?,
         workers: args.get_usize("workers", 4)?,
     };
+    let queue_cap = args.get_usize("queue-cap", 256)?;
+    // Repeatable: --lane name:weight:capacity[:shed|:block]. Validated
+    // (and the default lane guaranteed) up front so a bad spec is a CLI
+    // error, not a scheduler panic.
+    let mut lane_specs = Vec::new();
+    for spec in args.get_all("lane") {
+        lane_specs.push(LaneSpec::parse(spec)?);
+    }
+    let lane_specs = normalize_specs(lane_specs, queue_cap)?;
     let batch_opts = BatchOptions {
-        queue_capacity: args.get_usize("queue-cap", 256)?,
+        queue_capacity: queue_cap,
         batch_window: std::time::Duration::from_millis(args.get_usize("batch-window-ms", 2)? as u64),
         max_batch: args.get_usize("max-batch", 64)?,
         policy: if args.has("shed") { AdmissionPolicy::Shed } else { AdmissionPolicy::Block },
+        lanes: lane_specs,
     };
-    let cache_dir = args.flags.get("cache-dir").cloned();
+    let cache_dir = args.get_opt("cache-dir").map(str::to_string);
     let persist_opts = PersistOptions {
         interval: std::time::Duration::from_millis(args.get_usize("snapshot-interval-ms", 1000)? as u64),
         max_entries: args.get_usize("cache-max-entries", 0)?,
@@ -210,7 +236,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr", "127.0.0.1:7117");
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     println!(
-        "[ftl-serve] listening on {addr} (DEPLOY <workload> <soc> <strategy> [deadline-ms] | STATS | PING)"
+        "[ftl-serve] listening on {addr} \
+         (DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>] | STATS | PING)"
     );
     for conn in listener.incoming().flatten() {
         let scheduler = scheduler.clone();
@@ -325,8 +352,9 @@ fn serve_self_test(opts: ServeOptions, batch_opts: BatchOptions) -> Result<()> {
         max_batch: 32,
         batch_window: batch_opts.batch_window.max(std::time::Duration::from_millis(50)),
         policy: batch_opts.policy,
+        lanes: Vec::new(),
     };
-    let scheduler = BatchScheduler::new(burst_service.clone(), burst_opts);
+    let scheduler = BatchScheduler::new(burst_service.clone(), burst_opts.clone());
     let mix = [
         ("vit-base-stage", "siracusa", Strategy::Ftl),
         ("vit-base-stage", "cluster-only", Strategy::Ftl),
@@ -405,6 +433,45 @@ fn serve_self_test(opts: ServeOptions, batch_opts: BatchOptions) -> Result<()> {
         plan_text.push_str(&outcome.plan.to_json().to_string());
     }
     println!("[ftl-serve] plan_digest={}", checksum(plan_text.as_bytes()).hex());
+
+    // 9. Priority lanes, deterministic core: saturate the scheduler's
+    // own LaneSet under a virtual clock (shared `serve::wave` driver,
+    // unit-cost quanta). Pure integer WFQ — the printed shares are
+    // identical at any FTL_SOLVER_THREADS (the CI fairness smoke
+    // asserts exactly that), and a 3:1 weight split must yield exactly
+    // 12/4 cold-work units over 16 quanta.
+    let shares = ftl::serve::wave::saturated_shares(&[("gold", 3), ("free", 1)], 16);
+    println!("[ftl-serve] lane_shares quanta=16 gold={} free={} (weights 3:1)", shares[0], shares[1]);
+    ensure!(shares == [12, 4], "3:1 WFQ must split 16 unit quanta 12/4 (got {shares:?})");
+
+    // 10. Lane wiring over the protocol: lane= routes to the named lane,
+    // unknown lanes fall back to default, per-lane counters ride in
+    // STATS, and the scheduler-wide totals are the lane sums.
+    let lane_sched = BatchScheduler::new(
+        burst_service.clone(),
+        BatchOptions {
+            batch_window: std::time::Duration::ZERO,
+            lanes: vec![LaneSpec::new("gold", 3, 32)],
+            ..BatchOptions::default()
+        },
+    );
+    let j = handle_line(&lane_sched, "DEPLOY vit-tiny-stage cluster-only ftl lane=gold");
+    ensure!(j.get_opt("error").is_none(), "lane deploy failed: {j}");
+    ensure!(j.get("lane")?.as_str()? == "gold", "lane= must route to the named lane");
+    let j2 = handle_line(&lane_sched, "DEPLOY vit-tiny-stage cluster-only ftl lane=no-such-lane");
+    ensure!(j2.get_opt("error").is_none(), "unknown lane must be served, not rejected: {j2}");
+    ensure!(j2.get("lane")?.as_str()? == "default", "unknown lane must fall back to default");
+    let lane_stats = lane_sched.stats();
+    let gold_lane = lane_stats.lanes.iter().find(|l| l.name == "gold").expect("gold lane in stats");
+    ensure!(gold_lane.batched_requests == 1, "the cold lane=gold deploy must be batched in gold");
+    ensure!(gold_lane.cold_work >= 1, "gold's cold deploy must be charged as cold work");
+    ensure!(
+        lane_stats.lanes.iter().map(|l| l.batched_requests).sum::<u64>() == lane_stats.batched_requests
+            && lane_stats.lanes.iter().map(|l| l.shed).sum::<u64>() == lane_stats.shed
+            && lane_stats.lanes.iter().map(|l| l.timeouts).sum::<u64>() == lane_stats.timeouts,
+        "batch.* totals must equal the per-lane sums"
+    );
+    println!("{}", lane_stats.lanes_table());
 
     let stats = service.stats();
     println!("{}", stats.cache.table());
@@ -631,6 +698,7 @@ COMMANDS:
   serve        batch-aware deployment service     ([--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64]
                (DEPLOY/STATS/PING line protocol)   [--sim-cache-cap 256] [--cache-shards 8] [--queue-cap 256]
                                                    [--batch-window-ms 2] [--max-batch 64] [--shed]
+                                                   [--lane name:weight:cap[:shed|:block]]... (WFQ lanes)
                                                    [--cache-dir DIR] [--snapshot-interval-ms 1000]
                                                    [--cache-max-entries 0] [--self-test])
   fig3         reproduce the paper's Fig. 3       ([--seq --dim --hidden] [--double-buffer] [--json])

@@ -188,10 +188,66 @@ impl CacheStats {
     }
 }
 
+/// Per-lane counters of the batching scheduler's priority lanes
+/// (filled by [`crate::serve::BatchScheduler`] from
+/// [`crate::serve::lanes::LaneCounters`], rendered in `STATS` responses
+/// under `batch.lanes.<name>.*`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LaneStats {
+    /// Lane name (`default` for the implicit lane).
+    pub name: String,
+    /// WFQ weight (≥ 1).
+    pub weight: u64,
+    /// Bounded-queue capacity (0 admits nothing).
+    pub capacity: usize,
+    /// Requests currently queued in this lane.
+    pub queue_depth: usize,
+    /// Batches (WFQ quanta) dispatched from this lane.
+    pub batches: u64,
+    /// Requests dispatched through this lane's batches.
+    pub batched_requests: u64,
+    /// Largest single batch dispatched from this lane.
+    pub max_batch_size: u64,
+    /// Requests shed by admission control at this lane.
+    pub shed: u64,
+    /// Requests whose deadline expired while owned by this lane.
+    pub timeouts: u64,
+    /// Requests answered with a served reply from this lane's batches.
+    pub served: u64,
+    /// Cold-work units charged to this lane (one per branch-and-bound
+    /// solve + one per simulator run its batches performed) — the
+    /// quantity weighted fairness is defined over.
+    pub cold_work: u64,
+    /// The lane's WFQ virtual finish tag in milli-cost-units
+    /// (monotonically non-decreasing; saturated lanes' tags advance at
+    /// the same rate).
+    pub vtime_milli: u64,
+}
+
+impl LaneStats {
+    /// JSON rendering (one entry of `batch.lanes` in the stats snapshot).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("weight", Json::int(self.weight as usize)),
+            ("capacity", Json::int(self.capacity)),
+            ("queue_depth", Json::int(self.queue_depth)),
+            ("batches", Json::int(self.batches as usize)),
+            ("batched_requests", Json::int(self.batched_requests as usize)),
+            ("max_batch_size", Json::int(self.max_batch_size as usize)),
+            ("shed", Json::int(self.shed as usize)),
+            ("timeouts", Json::int(self.timeouts as usize)),
+            ("served", Json::int(self.served as usize)),
+            ("cold_work", Json::int(self.cold_work as usize)),
+            ("vtime_milli", Json::int(self.vtime_milli as usize)),
+        ])
+    }
+}
+
 /// Counters for the serve-layer batching scheduler (filled by
 /// [`crate::serve::BatchScheduler`], rendered in `STATS` responses and
-/// the `ftl serve` self-test).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// the `ftl serve` self-test). The scheduler-wide totals are sums over
+/// `lanes` (`sum(lanes.*) == batch.*` — invariant-tested).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct BatchStats {
     /// Batches dispatched.
     pub batches: u64,
@@ -200,14 +256,16 @@ pub struct BatchStats {
     /// Largest batch dispatched so far.
     pub max_batch_size: u64,
     /// Requests rejected by admission control (full queue, shed policy —
-    /// or any request at all on a zero-capacity queue).
+    /// or any request at all on a zero-capacity queue/lane).
     pub shed: u64,
     /// Requests whose deadline expired before dispatch.
     pub timeouts: u64,
-    /// Requests currently waiting in the queue.
+    /// Requests currently waiting across all lanes.
     pub queue_depth: usize,
-    /// Configured queue capacity.
+    /// Total configured capacity across all lanes.
     pub queue_capacity: usize,
+    /// Per-lane breakdown, in lane-index order.
+    pub lanes: Vec<LaneStats>,
 }
 
 impl BatchStats {
@@ -222,6 +280,7 @@ impl BatchStats {
 
     /// JSON rendering (embedded in the serve stats snapshot).
     pub fn to_json(&self) -> Json {
+        let lanes = Json::Obj(self.lanes.iter().map(|l| (l.name.clone(), l.to_json())).collect());
         Json::obj(vec![
             ("batches", Json::int(self.batches as usize)),
             ("batched_requests", Json::int(self.batched_requests as usize)),
@@ -231,10 +290,11 @@ impl BatchStats {
             ("timeouts", Json::int(self.timeouts as usize)),
             ("queue_depth", Json::int(self.queue_depth)),
             ("queue_capacity", Json::int(self.queue_capacity)),
+            ("lanes", lanes),
         ])
     }
 
-    /// Human-readable one-table rendering.
+    /// Human-readable one-table rendering (scheduler-wide totals).
     pub fn table(&self) -> String {
         let mut t = Table::new(&["batches", "requests", "max", "mean", "shed", "timeouts", "depth", "cap"]);
         t.row(&[
@@ -247,6 +307,28 @@ impl BatchStats {
             self.queue_depth.to_string(),
             self.queue_capacity.to_string(),
         ]);
+        t.render()
+    }
+
+    /// Human-readable per-lane rendering (one row per priority lane).
+    pub fn lanes_table(&self) -> String {
+        let mut t = Table::new(&[
+            "lane", "weight", "cap", "depth", "batches", "requests", "shed", "timeouts", "served", "cold_work",
+        ]);
+        for l in &self.lanes {
+            t.row(&[
+                l.name.clone(),
+                l.weight.to_string(),
+                l.capacity.to_string(),
+                l.queue_depth.to_string(),
+                l.batches.to_string(),
+                l.batched_requests.to_string(),
+                l.shed.to_string(),
+                l.timeouts.to_string(),
+                l.served.to_string(),
+                l.cold_work.to_string(),
+            ]);
+        }
         t.render()
     }
 }
@@ -265,13 +347,32 @@ mod tests {
             timeouts: 0,
             queue_depth: 0,
             queue_capacity: 16,
+            lanes: vec![
+                LaneStats {
+                    name: "default".into(),
+                    weight: 1,
+                    capacity: 16,
+                    batches: 2,
+                    batched_requests: 7,
+                    shed: 1,
+                    served: 7,
+                    cold_work: 3,
+                    ..LaneStats::default()
+                },
+                LaneStats { name: "gold".into(), weight: 3, capacity: 8, ..LaneStats::default() },
+            ],
         };
         assert!((s.mean_batch_size() - 3.5).abs() < 1e-12);
         assert_eq!(BatchStats::default().mean_batch_size(), 0.0);
         let j = s.to_json();
         assert_eq!(j.get("shed").unwrap().as_usize().unwrap(), 1);
         assert_eq!(j.get("batched_requests").unwrap().as_usize().unwrap(), 7);
+        let lanes = j.get("lanes").unwrap();
+        assert_eq!(lanes.get("default").unwrap().get("cold_work").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(lanes.get("gold").unwrap().get("weight").unwrap().as_usize().unwrap(), 3);
         assert!(s.table().contains("3.5"));
+        let lt = s.lanes_table();
+        assert!(lt.contains("gold") && lt.contains("cold_work"));
     }
 
     #[test]

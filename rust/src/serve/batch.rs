@@ -6,32 +6,51 @@
 //! the paper's off-chip-bottleneck shape, moved up into the deployment
 //! service. This module adds the missing traffic controls:
 //!
-//! * **Admission control** — a bounded queue with a configurable
-//!   capacity and a full-queue policy: [`AdmissionPolicy::Shed`] rejects
+//! * **Admission control** — bounded queues with configurable capacity
+//!   and a full-queue policy: [`AdmissionPolicy::Shed`] rejects
 //!   immediately (the request resolves to [`BatchOutcome::Shed`], the
 //!   protocol's `SHED`), [`AdmissionPolicy::Block`] applies backpressure
 //!   by parking the submitter until space frees up. Requests may carry a
 //!   deadline; one that expires before dispatch resolves to
 //!   [`BatchOutcome::TimedOut`] (`TIMEOUT`) instead of doing dead work.
-//! * **SoC-grouped batching** — the dispatcher collects requests for a
-//!   short window, sorts the batch by SoC fingerprint (then full plan
-//!   fingerprint), and walks it in runs: requests targeting the same SoC
-//!   are solved back-to-back so the solver and cost models stay warm,
-//!   and each run of *identical* fingerprints is solved and simulated
-//!   **once**, with the result fanned out to every waiter in the run.
+//! * **Priority lanes + weighted fair queuing** — the queue is a set of
+//!   named [`lanes`](super::lanes) (`DEPLOY ... lane=<name>`; unknown or
+//!   absent names fall to the `default` lane), each with its own
+//!   bounded FIFO, weight, and optional per-lane admission policy. The
+//!   dispatcher serves one batch per quantum from the lane picked by
+//!   virtual-time weighted fair queuing, then charges the lane the
+//!   *cold work* the batch actually cost (one unit per
+//!   branch-and-bound solve and one per simulator run — cache hits are
+//!   free). Under saturation the cold work therefore splits across
+//!   lanes in proportion to their weights (a 3:1 weight ratio yields a
+//!   3:1 cold-work split, within one batch window), one aggressive
+//!   tenant can no longer starve the rest, and a single default lane
+//!   reproduces the old single-FIFO scheduler exactly.
+//! * **SoC-grouped batching** — within a quantum's batch, the
+//!   dispatcher sorts by SoC fingerprint (then full plan fingerprint)
+//!   and walks runs: requests targeting the same SoC solve back-to-back
+//!   so the solver and cost models stay warm, and each run of
+//!   *identical* fingerprints is solved and simulated **once**, with
+//!   the result fanned out to every waiter in the run.
 //!
 //! Batching composes with (rather than replaces) the caches underneath:
 //! a fully warm request short-circuits into the caches without ever
-//! entering the queue (batching only exists to amortize cold work),
-//! fan-out handles identical requests *within* a batch, the plan + sim
-//! caches handle repeats *across* batches, and single-flight handles
-//! races between parallel dispatch lanes, fast-path callers and sync
-//! callers. Within a batch, each distinct SoC gets its own dispatch
-//! lane: same-SoC groups solve back-to-back for locality, distinct SoCs
-//! solve in parallel.
+//! entering any lane (the fast path is lane-agnostic — batching and
+//! fairness only exist to arbitrate *cold* work), fan-out handles
+//! identical requests within a batch, the plan + sim caches handle
+//! repeats across batches, and single-flight handles races between
+//! parallel dispatch runs, fast-path callers and sync callers. Within a
+//! batch, each distinct SoC gets its own dispatch run: same-SoC groups
+//! solve back-to-back for locality, distinct SoCs solve in parallel.
+//!
+//! Scheduling is deterministic by construction: lane selection is a
+//! pure function of the per-lane virtual finish tags (integer fixed
+//! point, ties to the lowest lane index) and the charged costs are
+//! cache-outcome counts (thread-count independent), so the fairness
+//! property tests drive the same [`LaneSet`] the dispatcher uses under
+//! a virtual clock and assert exact shares.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -40,11 +59,13 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::config::DeployConfig;
 use crate::ir::Graph;
-use crate::metrics::BatchStats;
+use crate::metrics::{BatchStats, LaneStats};
 use crate::util::json::Json;
 
 use super::fingerprint::{fingerprint, soc_fingerprint, Fingerprint};
+use super::lanes::{normalize_specs, LaneCounters, LaneSet, LaneSpec};
 use super::service::{resolve_workload, PlanService, ServeReply};
+use super::wfq::SCALE;
 
 /// What admission control does with a new request when the queue is full.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -57,20 +78,28 @@ pub enum AdmissionPolicy {
 }
 
 /// Tunables for a [`BatchScheduler`].
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct BatchOptions {
-    /// Bounded-queue capacity. **Zero admits nothing**: every request is
-    /// shed regardless of policy (blocking on a queue that can never
-    /// drain would deadlock the submitter).
+    /// Bounded-queue capacity of the implicit `default` lane (and of
+    /// any lane spec that does not override it — see `lanes`). **Zero
+    /// admits nothing**: every request is shed regardless of policy
+    /// (blocking on a queue that can never drain would deadlock the
+    /// submitter).
     pub queue_capacity: usize,
     /// How long the dispatcher holds a batch open after the first
-    /// request arrives, letting the queue fill so grouping has something
-    /// to group. Zero dispatches whatever is queued immediately.
+    /// request arrives, letting the queues fill so grouping has
+    /// something to group. Zero dispatches whatever is queued
+    /// immediately.
     pub batch_window: Duration,
     /// Max requests per dispatched batch (clamped to `>= 1`).
     pub max_batch: usize,
-    /// Full-queue policy.
+    /// Scheduler-wide full-queue policy (lanes may override per lane).
     pub policy: AdmissionPolicy,
+    /// Priority lanes. Empty means a single `default` lane of weight 1
+    /// and capacity `queue_capacity` — the pre-lane FIFO scheduler,
+    /// bit-for-bit. A non-empty set without a `default` lane gets one
+    /// prepended (unknown `lane=` names must always land somewhere).
+    pub lanes: Vec<LaneSpec>,
 }
 
 impl Default for BatchOptions {
@@ -80,6 +109,7 @@ impl Default for BatchOptions {
             batch_window: Duration::from_millis(2),
             max_batch: 64,
             policy: AdmissionPolicy::Block,
+            lanes: Vec::new(),
         }
     }
 }
@@ -113,7 +143,7 @@ impl BatchOutcome {
     }
 }
 
-/// One admitted request waiting in the queue.
+/// One admitted request waiting in its lane.
 struct Pending {
     workload: String,
     graph: Graph,
@@ -138,7 +168,7 @@ enum Admit {
 }
 
 struct QueueState {
-    items: VecDeque<Pending>,
+    lanes: LaneSet<Pending>,
     open: bool,
 }
 
@@ -152,40 +182,56 @@ struct Queue {
 struct BatchInner {
     service: Arc<PlanService>,
     opts: BatchOptions,
+    /// Normalized lane configuration (the `default` lane always
+    /// present), index-aligned with `counters` and the queue's
+    /// [`LaneSet`]. Immutable after construction, so lane names resolve
+    /// without the queue lock.
+    specs: Vec<LaneSpec>,
+    default_lane: usize,
+    /// Per-lane counters; the scheduler-wide `batch.*` stats are sums
+    /// over these (see [`LaneCounters`]).
+    counters: Vec<LaneCounters>,
     queue: Queue,
-    batches: AtomicU64,
-    batched_requests: AtomicU64,
-    max_batch_size: AtomicU64,
-    shed: AtomicU64,
-    timeouts: AtomicU64,
 }
 
 impl BatchInner {
-    /// Admission control: bounded enqueue honouring the full-queue policy.
-    /// A blocked submitter's deadline keeps ticking: the park is bounded
-    /// by it, so a deadlined request can never be stalled unboundedly by
-    /// backpressure.
-    fn enqueue(&self, pending: Pending) -> Admit {
+    /// Resolve a request's lane name (absent/unknown → default lane) —
+    /// lock-free: the spec list is immutable after construction.
+    fn resolve_lane(&self, name: Option<&str>) -> usize {
+        super::lanes::resolve_lane(&self.specs, self.default_lane, name)
+    }
+
+    /// Admission control: bounded per-lane enqueue honouring the lane's
+    /// full-queue policy. A blocked submitter's deadline keeps ticking:
+    /// the park is bounded by it, so a deadlined request can never be
+    /// stalled unboundedly by backpressure.
+    fn enqueue(&self, lane: usize, mut pending: Pending) -> Admit {
         let deadline = pending.deadline;
+        let capacity = self.specs[lane].capacity;
+        let policy = self.specs[lane].policy.unwrap_or(self.opts.policy);
         let mut st = self.queue.state.lock().expect("batch queue poisoned");
         loop {
             if !st.open {
                 return Admit::Closed;
             }
-            if self.opts.queue_capacity == 0 {
-                // A queue that can never drain must not block (see
+            if capacity == 0 {
+                // A lane that can never drain must not block (see
                 // `BatchOptions::queue_capacity`).
-                self.shed.fetch_add(1, Ordering::Relaxed);
+                self.counters[lane].shed.fetch_add(1, Ordering::Relaxed);
                 return Admit::Shed;
             }
-            if st.items.len() < self.opts.queue_capacity {
-                st.items.push_back(pending);
-                self.queue.not_empty.notify_one();
-                return Admit::Admitted;
-            }
-            match self.opts.policy {
+            // The LaneSet enforces capacity; a bounced push hands the
+            // request back for the policy arm below.
+            pending = match st.lanes.try_push(lane, pending) {
+                Ok(()) => {
+                    self.queue.not_empty.notify_one();
+                    return Admit::Admitted;
+                }
+                Err(p) => p,
+            };
+            match policy {
                 AdmissionPolicy::Shed => {
-                    self.shed.fetch_add(1, Ordering::Relaxed);
+                    self.counters[lane].shed.fetch_add(1, Ordering::Relaxed);
                     return Admit::Shed;
                 }
                 AdmissionPolicy::Block => match deadline {
@@ -195,7 +241,7 @@ impl BatchInner {
                     Some(d) => {
                         let now = Instant::now();
                         if d <= now {
-                            self.timeouts.fetch_add(1, Ordering::Relaxed);
+                            self.counters[lane].timeouts.fetch_add(1, Ordering::Relaxed);
                             return Admit::Expired;
                         }
                         let (guard, _) = self
@@ -210,21 +256,23 @@ impl BatchInner {
         }
     }
 
-    /// Dispatcher side: wait for the first request, hold the batch window
-    /// open, then drain up to `max_batch` requests. Returns an empty
-    /// batch only when the scheduler is shut down and fully drained.
-    fn collect(&self) -> Vec<Pending> {
+    /// Dispatcher side: wait for the first request, hold the batch
+    /// window open, then let WFQ pick the lane with the smallest
+    /// virtual finish tag and drain up to `max_batch` requests from it
+    /// (one quantum). Returns `None` only when the scheduler is shut
+    /// down and fully drained.
+    fn collect(&self) -> Option<(usize, Vec<Pending>)> {
         let mut st = self.queue.state.lock().expect("batch queue poisoned");
-        while st.items.is_empty() {
+        while st.lanes.is_all_empty() {
             if !st.open {
-                return Vec::new();
+                return None;
             }
             st = self.queue.not_empty.wait(st).expect("batch queue poisoned");
         }
         let window = self.opts.batch_window;
         let max_batch = self.opts.max_batch.max(1);
         let t0 = Instant::now();
-        while st.open && st.items.len() < max_batch {
+        while st.open && st.lanes.max_len() < max_batch {
             let elapsed = t0.elapsed();
             if elapsed >= window {
                 break;
@@ -236,19 +284,21 @@ impl BatchInner {
                 .expect("batch queue poisoned");
             st = guard;
         }
-        let n = st.items.len().min(max_batch);
-        let batch: Vec<Pending> = st.items.drain(..n).collect();
+        let lane = st.lanes.pick().expect("a non-empty lane exists: only the dispatcher drains");
+        let batch = st.lanes.drain(lane, max_batch);
         drop(st);
         self.queue.not_full.notify_all();
-        batch
+        Some((lane, batch))
     }
 
-    /// Dispatch one batch: group, deduplicate, solve-or-hit once per
-    /// distinct fingerprint, fan out.
-    fn dispatch(&self, mut batch: Vec<Pending>) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        self.max_batch_size.fetch_max(batch.len() as u64, Ordering::Relaxed);
+    /// Dispatch one lane's batch: group, deduplicate, solve-or-hit once
+    /// per distinct fingerprint, fan out — then charge the lane the
+    /// cold work the batch cost (the WFQ accounting step).
+    fn dispatch(&self, lane: usize, mut batch: Vec<Pending>) {
+        let counters = &self.counters[lane];
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        counters.batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        counters.max_batch_size.fetch_max(batch.len() as u64, Ordering::Relaxed);
         // SoC-major order keeps the solver's working set warm across
         // consecutive groups; full-fingerprint order inside a SoC makes
         // identical requests adjacent for the run-length walk below.
@@ -261,46 +311,64 @@ impl BatchInner {
             }
             groups.last_mut().expect("group pushed above").push(p);
         }
-        // One lane per distinct SoC: lanes run in parallel so
+        // One run per distinct SoC: runs execute in parallel so
         // distinct-SoC solves don't serialize behind each other, and
-        // *within* a lane the distinct-fingerprint groups fan out over
+        // *within* a run the distinct-fingerprint groups fan out over
         // the shared solver pool ([`crate::tiling::SolverPool`]) — one
         // batch's distinct cold requests solve concurrently, bounded by
         // the pool's global worker budget (which the per-group
         // branch-and-bound also draws from, so nesting degrades to fewer
         // workers per solve instead of oversubscribing).
-        let mut lanes: Vec<Vec<Vec<Pending>>> = Vec::new();
+        let mut soc_runs: Vec<Vec<Vec<Pending>>> = Vec::new();
         let mut last_soc: Option<Fingerprint> = None;
         for group in groups {
             let soc = group[0].soc_key;
             if last_soc != Some(soc) {
-                lanes.push(Vec::new());
+                soc_runs.push(Vec::new());
                 last_soc = Some(soc);
             }
-            lanes.last_mut().expect("lane pushed above").push(group);
+            soc_runs.last_mut().expect("run pushed above").push(group);
         }
         let pool = crate::tiling::SolverPool::global();
-        if lanes.len() == 1 {
-            pool.map(lanes.remove(0), |group| self.dispatch_group(group));
+        if soc_runs.len() == 1 {
+            pool.map(soc_runs.remove(0), |group| self.dispatch_group(lane, group));
             return;
         }
         std::thread::scope(|s| {
-            for lane in lanes {
+            for run in soc_runs {
                 s.spawn(move || {
-                    pool.map(lane, |group| self.dispatch_group(group));
+                    pool.map(run, |group| self.dispatch_group(lane, group));
                 });
             }
         });
     }
 
+    /// Account a group's cold work to its lane: bump the counter and
+    /// advance the lane's WFQ virtual finish tag. Called *before* the
+    /// group's replies are sent, so a caller that has observed its
+    /// reply also observes the charge — and before the dispatcher picks
+    /// the next quantum, so lane selection is a deterministic function
+    /// of the served cold work.
+    fn charge(&self, lane: usize, cost: u64) {
+        if cost == 0 {
+            return;
+        }
+        self.counters[lane].cold_work.fetch_add(cost, Ordering::Relaxed);
+        let mut st = self.queue.state.lock().expect("batch queue poisoned");
+        st.lanes.charge(lane, cost);
+    }
+
     /// One solve + one simulation for a run of identical fingerprints;
-    /// every waiter gets a reply carrying its own workload label.
-    fn dispatch_group(&self, group: Vec<Pending>) {
+    /// every waiter gets a reply carrying its own workload label. The
+    /// lane is charged the cold work performed: one unit per
+    /// branch-and-bound solve, one per simulator run (zero for a fully
+    /// warm group).
+    fn dispatch_group(&self, lane: usize, group: Vec<Pending>) {
         let now = Instant::now();
         let (live, expired): (Vec<Pending>, Vec<Pending>) =
             group.into_iter().partition(|p| p.deadline.map_or(true, |d| d > now));
         for p in expired {
-            self.timeouts.fetch_add(1, Ordering::Relaxed);
+            self.counters[lane].timeouts.fetch_add(1, Ordering::Relaxed);
             p.reply.send(Ok(BatchOutcome::TimedOut)).ok();
         }
         let mut live = live.into_iter();
@@ -315,6 +383,9 @@ impl BatchInner {
         });
         match result {
             Ok(reply) => {
+                let cost = u64::from(!reply.cached) + u64::from(!reply.sim_cached);
+                self.counters[lane].served.fetch_add(1 + live.len() as u64, Ordering::Relaxed);
+                self.charge(lane, cost);
                 for p in live {
                     // Fan-out: share the plan and the simulation, rebuild
                     // only the cheap per-request report wrapper.
@@ -331,6 +402,10 @@ impl BatchInner {
                 leader.reply.send(Ok(BatchOutcome::Served(Box::new(reply)))).ok();
             }
             Err(e) => {
+                // The solver was consulted even though it failed; charge
+                // one unit so a lane of poison requests can't spin the
+                // dispatcher for free.
+                self.charge(lane, 1);
                 // anyhow::Error is not Clone; re-render the chain per waiter.
                 let msg = format!("{e:#}");
                 for p in live.chain(std::iter::once(leader)) {
@@ -342,9 +417,11 @@ impl BatchInner {
 }
 
 /// The batching scheduler (see module docs). Request lifecycle:
-/// **admit** (bounded queue) → **batch** (window + SoC grouping) →
-/// **solve-or-hit** (plan cache) → **simulate-or-hit** (sim cache) →
-/// **reply** (fan-out to every waiter of the fingerprint).
+/// **admit** (per-lane bounded queue) → **schedule** (window + WFQ lane
+/// pick) → **batch** (SoC grouping) → **solve-or-hit** (plan cache) →
+/// **simulate-or-hit** (sim cache) → **reply** (fan-out to every waiter
+/// of the fingerprint) → **charge** (cold work advances the lane's
+/// virtual finish tag).
 pub struct BatchScheduler {
     inner: Arc<BatchInner>,
     dispatcher: Mutex<Option<JoinHandle<()>>>,
@@ -352,30 +429,36 @@ pub struct BatchScheduler {
 
 impl BatchScheduler {
     /// Start a scheduler in front of `service` (spawns the dispatcher).
-    pub fn new(service: Arc<PlanService>, opts: BatchOptions) -> Self {
+    /// Panics on an invalid lane configuration (duplicate names, zero
+    /// weights) — validate user input with
+    /// [`normalize_specs`](super::lanes::normalize_specs) first.
+    pub fn new(service: Arc<PlanService>, mut opts: BatchOptions) -> Self {
+        let specs = normalize_specs(std::mem::take(&mut opts.lanes), opts.queue_capacity)
+            .expect("invalid lane configuration");
+        // Keep the retained options consistent with the normalized list
+        // (a reader of `opts.lanes` must never see the raw input).
+        opts.lanes = specs.clone();
+        let default_lane = specs.iter().position(|s| s.name == super::lanes::DEFAULT_LANE).expect("default");
+        let counters = specs.iter().map(|_| LaneCounters::default()).collect();
         let inner = Arc::new(BatchInner {
             service,
             opts,
+            specs: specs.clone(),
+            default_lane,
+            counters,
             queue: Queue {
-                state: Mutex::new(QueueState { items: VecDeque::new(), open: true }),
+                state: Mutex::new(QueueState { lanes: LaneSet::new(specs), open: true }),
                 not_empty: Condvar::new(),
                 not_full: Condvar::new(),
             },
-            batches: AtomicU64::new(0),
-            batched_requests: AtomicU64::new(0),
-            max_batch_size: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
-            timeouts: AtomicU64::new(0),
         });
         let worker = inner.clone();
         let handle = std::thread::Builder::new()
             .name("ftl-batch-dispatch".into())
-            .spawn(move || loop {
-                let batch = worker.collect();
-                if batch.is_empty() {
-                    break;
+            .spawn(move || {
+                while let Some((lane, batch)) = worker.collect() {
+                    worker.dispatch(lane, batch);
                 }
-                worker.dispatch(batch);
             })
             .expect("spawn batch dispatcher");
         Self { inner, dispatcher: Mutex::new(Some(handle)) }
@@ -392,17 +475,24 @@ impl BatchScheduler {
         &self.inner.service
     }
 
-    /// Blocking batched deployment without a deadline.
-    pub fn deploy(&self, workload: &str, graph: Graph, config: DeployConfig) -> Result<BatchOutcome> {
-        self.deploy_with_deadline(workload, graph, config, None)
+    /// The normalized lane configuration (default lane always present).
+    pub fn lane_specs(&self) -> &[LaneSpec] {
+        &self.inner.specs
     }
 
-    /// Blocking batched deployment. `deadline` bounds how long the
-    /// request may wait *before dispatch* — including time parked on a
-    /// full queue under [`AdmissionPolicy::Block`]; a request whose
-    /// deadline passes first resolves to [`BatchOutcome::TimedOut`]
-    /// without consuming solver time. A deadline of zero is already
-    /// expired at enqueue.
+    /// The lane name a request's `lane=` field resolves to
+    /// (absent/unknown → `default`).
+    pub fn lane_name(&self, lane: Option<&str>) -> &str {
+        &self.inner.specs[self.inner.resolve_lane(lane)].name
+    }
+
+    /// Blocking batched deployment without a deadline, in the default lane.
+    pub fn deploy(&self, workload: &str, graph: Graph, config: DeployConfig) -> Result<BatchOutcome> {
+        self.deploy_in_lane(workload, graph, config, None, None)
+    }
+
+    /// Blocking batched deployment in the default lane. `deadline`
+    /// bounds how long the request may wait *before dispatch*.
     pub fn deploy_with_deadline(
         &self,
         workload: &str,
@@ -410,16 +500,38 @@ impl BatchScheduler {
         config: DeployConfig,
         deadline: Option<Duration>,
     ) -> Result<BatchOutcome> {
+        self.deploy_in_lane(workload, graph, config, None, deadline)
+    }
+
+    /// Blocking batched deployment. `lane` names the priority lane
+    /// (absent/unknown → default). `deadline` bounds how long the
+    /// request may wait *before dispatch* — including time parked on a
+    /// full lane under [`AdmissionPolicy::Block`] and time queued in a
+    /// low-weight lane behind heavier traffic; a request whose deadline
+    /// passes first resolves to [`BatchOutcome::TimedOut`] without
+    /// consuming solver time. A deadline of zero is already expired at
+    /// enqueue.
+    pub fn deploy_in_lane(
+        &self,
+        workload: &str,
+        graph: Graph,
+        config: DeployConfig,
+        lane: Option<&str>,
+        deadline: Option<Duration>,
+    ) -> Result<BatchOutcome> {
+        let lane = self.inner.resolve_lane(lane);
         if let Some(d) = deadline {
             if d.is_zero() {
-                self.inner.timeouts.fetch_add(1, Ordering::Relaxed);
+                self.inner.counters[lane].timeouts.fetch_add(1, Ordering::Relaxed);
                 return Ok(BatchOutcome::TimedOut);
             }
         }
-        // Warm fast path: a fully cached request skips the queue and the
+        // Warm fast path: a fully cached request skips the lanes and the
         // batch window entirely — batching only exists to amortize cold
-        // work, and the caches + single-flight below stay coherent with
-        // the dispatcher regardless of which path a request takes.
+        // work (so fairness is over cold work, and warm traffic is
+        // lane-agnostic by design), and the caches + single-flight below
+        // stay coherent with the dispatcher regardless of which path a
+        // request takes.
         if let Some(result) = self.inner.service.deploy_if_warm(workload, &graph, &config) {
             return result.map(|reply| BatchOutcome::Served(Box::new(reply)));
         }
@@ -435,7 +547,7 @@ impl BatchScheduler {
             deadline: deadline.map(|d| Instant::now() + d),
             reply: tx,
         };
-        match self.inner.enqueue(pending) {
+        match self.inner.enqueue(lane, pending) {
             Admit::Admitted => {}
             Admit::Shed => return Ok(BatchOutcome::Shed),
             Admit::Expired => return Ok(BatchOutcome::TimedOut),
@@ -447,16 +559,47 @@ impl BatchScheduler {
         }
     }
 
-    /// Counter snapshot.
+    /// Counter snapshot. The scheduler-wide totals are sums over the
+    /// per-lane counters (`sum(lanes.*) == batch.*` by construction).
     pub fn stats(&self) -> BatchStats {
+        let (depths, vtags) = {
+            let st = self.inner.queue.state.lock().expect("batch queue poisoned");
+            let depths: Vec<usize> = (0..st.lanes.num_lanes()).map(|i| st.lanes.len_of(i)).collect();
+            let vtags: Vec<u128> = (0..st.lanes.num_lanes()).map(|i| st.lanes.vfinish(i)).collect();
+            (depths, vtags)
+        };
+        let lanes: Vec<LaneStats> = self
+            .inner
+            .specs
+            .iter()
+            .zip(&self.inner.counters)
+            .enumerate()
+            .map(|(i, (spec, c))| LaneStats {
+                name: spec.name.clone(),
+                weight: spec.weight,
+                capacity: spec.capacity,
+                queue_depth: depths[i],
+                batches: c.batches.load(Ordering::Relaxed),
+                batched_requests: c.batched_requests.load(Ordering::Relaxed),
+                max_batch_size: c.max_batch_size.load(Ordering::Relaxed),
+                shed: c.shed.load(Ordering::Relaxed),
+                timeouts: c.timeouts.load(Ordering::Relaxed),
+                served: c.served.load(Ordering::Relaxed),
+                cold_work: c.cold_work.load(Ordering::Relaxed),
+                // Virtual finish tag in milli-cost-units (fixed point
+                // rescaled); monotone per lane.
+                vtime_milli: (vtags[i].saturating_mul(1000) / SCALE) as u64,
+            })
+            .collect();
         BatchStats {
-            batches: self.inner.batches.load(Ordering::Relaxed),
-            batched_requests: self.inner.batched_requests.load(Ordering::Relaxed),
-            max_batch_size: self.inner.max_batch_size.load(Ordering::Relaxed),
-            shed: self.inner.shed.load(Ordering::Relaxed),
-            timeouts: self.inner.timeouts.load(Ordering::Relaxed),
-            queue_depth: self.inner.queue.state.lock().expect("batch queue poisoned").items.len(),
-            queue_capacity: self.inner.opts.queue_capacity,
+            batches: lanes.iter().map(|l| l.batches).sum(),
+            batched_requests: lanes.iter().map(|l| l.batched_requests).sum(),
+            max_batch_size: lanes.iter().map(|l| l.max_batch_size).max().unwrap_or(0),
+            shed: lanes.iter().map(|l| l.shed).sum(),
+            timeouts: lanes.iter().map(|l| l.timeouts).sum(),
+            queue_depth: lanes.iter().map(|l| l.queue_depth).sum(),
+            queue_capacity: lanes.iter().map(|l| l.capacity).sum(),
+            lanes,
         }
     }
 
@@ -469,7 +612,7 @@ impl BatchScheduler {
         j
     }
 
-    /// Close the queue, drain what's already admitted, and stop the
+    /// Close the queues, drain what's already admitted, and stop the
     /// dispatcher (also runs on drop). New cold requests are rejected;
     /// fully warm requests may still be served via the cache fast path
     /// (the underlying [`PlanService`] is not shut down).
@@ -496,11 +639,13 @@ impl Drop for BatchScheduler {
 /// behind both `ftl serve` and `examples/deploy_server.rs`:
 ///
 /// ```text
-/// DEPLOY <workload> <soc> <strategy> [deadline-ms]
+/// DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>]
 ///     -> deploy report JSON + "outcome": "OK", "cached", "sim_cached",
-///        "fingerprint" — or {"outcome": "SHED"|"TIMEOUT", "error": ...}
-///        when admission control rejects or the deadline expires
-/// STATS -> service + batch counter snapshot
+///        "lane", "fingerprint" — or {"outcome": "SHED"|"TIMEOUT",
+///        "lane": ..., "error": ...} when admission control rejects or
+///        the deadline expires. An unknown lane name falls back to the
+///        default lane, never an error.
+/// STATS -> service + batch counter snapshot (incl. lanes.<name>.*)
 /// PING  -> {"pong": true}
 /// ```
 ///
@@ -516,17 +661,30 @@ pub fn handle_line(scheduler: &BatchScheduler, line: &str) -> Json {
 fn handle_request(scheduler: &BatchScheduler, line: &str) -> Result<Json> {
     let parts: Vec<&str> = line.split_whitespace().collect();
     match parts.as_slice() {
-        ["DEPLOY", workload, soc, strategy] => deploy_request(scheduler, workload, soc, strategy, None),
-        ["DEPLOY", workload, soc, strategy, deadline_ms] => {
-            let ms: u64 = deadline_ms
-                .parse()
-                .map_err(|_| anyhow!("bad deadline '{deadline_ms}' (expected milliseconds)"))?;
-            deploy_request(scheduler, workload, soc, strategy, Some(Duration::from_millis(ms)))
+        ["DEPLOY", workload, soc, strategy, rest @ ..] if rest.len() <= 2 => {
+            let mut deadline: Option<Duration> = None;
+            let mut lane: Option<&str> = None;
+            for tok in rest {
+                if let Some(name) = tok.strip_prefix("lane=") {
+                    if lane.replace(name).is_some() {
+                        bail!("duplicate lane= field in '{line}'");
+                    }
+                } else {
+                    let ms: u64 = tok
+                        .parse()
+                        .map_err(|_| anyhow!("bad deadline '{tok}' (expected milliseconds or lane=<name>)"))?;
+                    if deadline.replace(Duration::from_millis(ms)).is_some() {
+                        bail!("duplicate deadline in '{line}'");
+                    }
+                }
+            }
+            deploy_request(scheduler, workload, soc, strategy, deadline, lane)
         }
         ["STATS"] => Ok(scheduler.stats_json()),
         ["PING"] => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
         _ => bail!(
-            "bad request: '{line}' (expected: DEPLOY <workload> <soc> <strategy> [deadline-ms] | STATS | PING)"
+            "bad request: '{line}' (expected: DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>] \
+             | STATS | PING)"
         ),
     }
 }
@@ -537,13 +695,15 @@ fn deploy_request(
     soc: &str,
     strategy: &str,
     deadline: Option<Duration>,
+    lane: Option<&str>,
 ) -> Result<Json> {
     let strategy = crate::tiling::Strategy::parse(strategy)
         .ok_or_else(|| anyhow!("bad strategy '{strategy}'"))?;
     let graph = resolve_workload(workload)?;
     let cfg = DeployConfig::preset(soc, strategy)?;
     let soc_cfg = cfg.soc.clone();
-    let outcome = scheduler.deploy_with_deadline(workload, graph, cfg, deadline)?;
+    let lane_name = scheduler.lane_name(lane).to_string();
+    let outcome = scheduler.deploy_in_lane(workload, graph, cfg, lane, deadline)?;
     match outcome {
         BatchOutcome::Served(reply) => {
             let mut j = reply.report.to_json(&soc_cfg);
@@ -551,16 +711,19 @@ fn deploy_request(
                 m.insert("outcome".into(), Json::str("OK"));
                 m.insert("cached".into(), Json::Bool(reply.cached));
                 m.insert("sim_cached".into(), Json::Bool(reply.sim_cached));
+                m.insert("lane".into(), Json::str(lane_name));
                 m.insert("fingerprint".into(), Json::str(reply.fingerprint.hex()));
             }
             Ok(j)
         }
         BatchOutcome::Shed => Ok(Json::obj(vec![
             ("outcome", Json::str("SHED")),
+            ("lane", Json::str(lane_name)),
             ("error", Json::str("queue full: request shed by admission control")),
         ])),
         BatchOutcome::TimedOut => Ok(Json::obj(vec![
             ("outcome", Json::str("TIMEOUT")),
+            ("lane", Json::str(lane_name)),
             ("error", Json::str("deadline expired before the request was dispatched")),
         ])),
     }
@@ -623,6 +786,7 @@ mod tests {
         let j = handle_line(&sched, "DEPLOY vit-tiny-stage cluster-only ftl");
         assert!(j.get_opt("error").is_none(), "unexpected error: {j}");
         assert_eq!(j.get("outcome").unwrap().as_str().unwrap(), "OK");
+        assert_eq!(j.get("lane").unwrap().as_str().unwrap(), "default");
         assert!(j.get("sim").unwrap().get("total_cycles").unwrap().as_usize().unwrap() > 0);
         // Warm repeat: both caches hit, and the fast path keeps the
         // request out of the batch queue entirely.
@@ -637,6 +801,44 @@ mod tests {
             1,
             "the warm repeat must bypass the queue"
         );
+        // Per-lane counters ride along under batch.lanes.<name>.*.
+        let lane = stats.get("batch").unwrap().get("lanes").unwrap().get("default").unwrap();
+        assert_eq!(lane.get("batched_requests").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(lane.get("weight").unwrap().as_usize().unwrap(), 1);
+        assert!(lane.get("cold_work").unwrap().as_usize().unwrap() >= 1, "the cold deploy must be charged");
+    }
+
+    #[test]
+    fn protocol_routes_lane_field_and_unknown_lane_falls_back() {
+        let sched = BatchScheduler::new(
+            small_service(),
+            BatchOptions {
+                batch_window: Duration::ZERO,
+                lanes: vec![LaneSpec::new("gold", 3, 8)],
+                ..BatchOptions::default()
+            },
+        );
+        let j = handle_line(&sched, "DEPLOY vit-tiny-stage cluster-only ftl lane=gold");
+        assert!(j.get_opt("error").is_none(), "unexpected error: {j}");
+        assert_eq!(j.get("lane").unwrap().as_str().unwrap(), "gold");
+        let j2 = handle_line(&sched, "DEPLOY vit-tiny-stage cluster-only baseline lane=no-such-lane");
+        assert!(j2.get_opt("error").is_none(), "unknown lane must fall back, not error: {j2}");
+        assert_eq!(j2.get("lane").unwrap().as_str().unwrap(), "default");
+        // Deadline and lane compose in either order.
+        let j3 = handle_line(&sched, "DEPLOY vit-tiny-stage cluster-only ftl lane=gold 5000");
+        assert!(j3.get_opt("error").is_none(), "{j3}");
+        let j4 = handle_line(&sched, "DEPLOY vit-tiny-stage cluster-only ftl 5000 lane=gold");
+        assert!(j4.get_opt("error").is_none(), "{j4}");
+        let batch = sched.stats_json().get("batch").unwrap().clone();
+        let gold = batch.get("lanes").unwrap().get("gold").unwrap().clone();
+        assert_eq!(gold.get("batched_requests").unwrap().as_usize().unwrap(), 1, "one cold request in gold");
+        // Duplicate fields are protocol errors.
+        for bad in [
+            "DEPLOY vit-tiny-stage cluster-only ftl lane=a lane=b",
+            "DEPLOY vit-tiny-stage cluster-only ftl 5 6",
+        ] {
+            assert!(handle_line(&sched, bad).get_opt("error").is_some(), "'{bad}' must error");
+        }
     }
 
     #[test]

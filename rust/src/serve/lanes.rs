@@ -1,0 +1,353 @@
+//! Named priority lanes for the batch scheduler.
+//!
+//! A *lane* is a tenant-visible traffic class: its own bounded FIFO
+//! queue, an integer weight, and (optionally) its own full-queue
+//! admission policy. The [`LaneSet`] bundles the per-lane queues with a
+//! [`Wfq`] scheduler so the dispatcher's quantum loop is one line each:
+//! `pick()` the lane whose virtual finish tag is smallest, `drain()` a
+//! batch from it, `charge()` the cold work it cost. Under saturation
+//! that yields a weight-proportional split of cold work across lanes
+//! (see the `wfq` module docs for the arithmetic and the no-banked-
+//! credit rule).
+//!
+//! [`LaneSet`] is deliberately pure data — no threads, no clocks, no
+//! counters: the batch scheduler drives it under its queue mutex with
+//! real traffic, and the fairness property tests
+//! (`rust/tests/fairness.rs`) drive the very same type with a virtual
+//! clock and synthetic costs, so the fairness bound is asserted on the
+//! exact code that schedules production batches.
+//!
+//! Requests name lanes by string; an unknown or absent lane name
+//! resolves to the [`DEFAULT_LANE`], which always exists
+//! ([`normalize_specs`] prepends it when the configuration does not
+//! define one). A single default lane of weight 1 reproduces the
+//! pre-lane single-FIFO scheduler bit-for-bit — that degenerate
+//! configuration is pinned by regression tests.
+
+use std::collections::VecDeque;
+use std::sync::atomic::AtomicU64;
+
+use anyhow::{bail, Result};
+
+use super::batch::AdmissionPolicy;
+use super::wfq::Wfq;
+
+/// Name of the lane that absent/unknown lane references resolve to.
+pub const DEFAULT_LANE: &str = "default";
+
+/// Configuration of one priority lane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneSpec {
+    /// Lane name — the `lane=` vocabulary of the line protocol.
+    pub name: String,
+    /// WFQ weight (≥ 1): under saturation, lanes split cold work in
+    /// proportion to their weights.
+    pub weight: u64,
+    /// Bounded-queue capacity. **Zero admits nothing** — every request
+    /// aimed at the lane is shed (same contract as a zero-capacity
+    /// scheduler queue).
+    pub capacity: usize,
+    /// Full-queue policy override; `None` inherits the scheduler-wide
+    /// policy ([`crate::serve::BatchOptions::policy`]).
+    pub policy: Option<AdmissionPolicy>,
+}
+
+impl LaneSpec {
+    /// Lane with the scheduler-default admission policy.
+    pub fn new(name: impl Into<String>, weight: u64, capacity: usize) -> Self {
+        Self { name: name.into(), weight, capacity, policy: None }
+    }
+
+    /// Parse the CLI form `name:weight:capacity[:shed|:block]` (the
+    /// repeatable `ftl serve --lane` flag).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let (name, weight, capacity, policy) = match parts.as_slice() {
+            [name, weight, cap] => (*name, *weight, *cap, None),
+            [name, weight, cap, policy] => {
+                let policy = match *policy {
+                    "shed" => AdmissionPolicy::Shed,
+                    "block" => AdmissionPolicy::Block,
+                    other => bail!("bad lane policy '{other}' in '{spec}' (expected shed|block)"),
+                };
+                (*name, *weight, *cap, Some(policy))
+            }
+            _ => bail!("bad lane spec '{spec}' (expected name:weight:capacity[:shed|:block])"),
+        };
+        if name.is_empty() || name.contains(char::is_whitespace) {
+            bail!("bad lane name in '{spec}' (must be non-empty, no whitespace)");
+        }
+        let weight: u64 = weight.parse().map_err(|_| anyhow::anyhow!("bad lane weight in '{spec}'"))?;
+        if weight == 0 {
+            bail!("lane weight must be >= 1 in '{spec}' (use capacity 0 to disable a lane)");
+        }
+        let capacity: usize = capacity.parse().map_err(|_| anyhow::anyhow!("bad lane capacity in '{spec}'"))?;
+        Ok(Self { name: name.to_string(), weight, capacity, policy })
+    }
+}
+
+/// Validate a lane configuration and guarantee the [`DEFAULT_LANE`]
+/// exists: an empty list becomes a single default lane of weight 1 and
+/// capacity `default_capacity` (the pre-lane scheduler, exactly); a
+/// list without a `default` lane gets one prepended. Duplicate names
+/// and zero weights are errors.
+pub fn normalize_specs(mut specs: Vec<LaneSpec>, default_capacity: usize) -> Result<Vec<LaneSpec>> {
+    if !specs.iter().any(|s| s.name == DEFAULT_LANE) {
+        specs.insert(0, LaneSpec::new(DEFAULT_LANE, 1, default_capacity));
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for s in &specs {
+        if s.weight == 0 {
+            bail!("lane '{}' has weight 0 (must be >= 1)", s.name);
+        }
+        if !seen.insert(s.name.as_str()) {
+            bail!("duplicate lane name '{}'", s.name);
+        }
+    }
+    Ok(specs)
+}
+
+/// Resolve a lane name against a spec list: `None` and unknown names go
+/// to the default lane — the single implementation behind
+/// [`LaneSet::resolve`] and the scheduler's lock-free name resolution.
+pub(crate) fn resolve_lane(specs: &[LaneSpec], default_lane: usize, name: Option<&str>) -> usize {
+    match name {
+        None => default_lane,
+        Some(n) => specs.iter().position(|s| s.name == n).unwrap_or(default_lane),
+    }
+}
+
+/// Per-lane queues + WFQ state (see module docs). `T` is the queued
+/// request type — [`crate::serve::BatchScheduler`] queues its pending
+/// requests, the fairness tests queue synthetic jobs.
+#[derive(Debug, Clone)]
+pub struct LaneSet<T> {
+    specs: Vec<LaneSpec>,
+    default_lane: usize,
+    queues: Vec<VecDeque<T>>,
+    wfq: Wfq,
+}
+
+impl<T> LaneSet<T> {
+    /// Build from lane specs; panics on an invalid set (duplicates,
+    /// zero weights) — construction-time configuration errors, not
+    /// runtime conditions. A missing default lane is added with
+    /// **unbounded** capacity (the pure-harness convenience); callers
+    /// that want the default lane bounded by a real queue capacity (the
+    /// batch scheduler does) must run [`normalize_specs`] with that
+    /// capacity first.
+    pub fn new(specs: Vec<LaneSpec>) -> Self {
+        let specs = normalize_specs(specs, usize::MAX).expect("invalid lane configuration");
+        let default_lane = specs.iter().position(|s| s.name == DEFAULT_LANE).expect("default lane exists");
+        let weights: Vec<u64> = specs.iter().map(|s| s.weight).collect();
+        let queues = specs.iter().map(|_| VecDeque::new()).collect();
+        Self { specs, default_lane, queues, wfq: Wfq::new(&weights) }
+    }
+
+    /// Number of lanes.
+    pub fn num_lanes(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// The lane configurations, in index order.
+    pub fn specs(&self) -> &[LaneSpec] {
+        &self.specs
+    }
+
+    /// Index of the [`DEFAULT_LANE`].
+    pub fn default_lane(&self) -> usize {
+        self.default_lane
+    }
+
+    /// Resolve a request's lane name: `None` and unknown names go to
+    /// the default lane (the protocol's "unknown lane → default lane").
+    pub fn resolve(&self, name: Option<&str>) -> usize {
+        resolve_lane(&self.specs, self.default_lane, name)
+    }
+
+    /// Queue depth of one lane.
+    pub fn len_of(&self, lane: usize) -> usize {
+        self.queues[lane].len()
+    }
+
+    /// Total queued across all lanes.
+    pub fn total_len(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    /// Depth of the fullest lane (the batch-window early-exit test:
+    /// with a single lane this is exactly the old queue length).
+    pub fn max_len(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).max().unwrap_or(0)
+    }
+
+    /// True when no lane has queued work.
+    pub fn is_all_empty(&self) -> bool {
+        self.queues.iter().all(VecDeque::is_empty)
+    }
+
+    /// Bounded enqueue: hands the item back via `Err` when the lane is
+    /// at capacity (always, for a zero-capacity lane). An
+    /// empty→backlogged transition lifts the lane's WFQ tag to the
+    /// clock (no banked idle credit).
+    pub fn try_push(&mut self, lane: usize, item: T) -> Result<(), T> {
+        let spec = &self.specs[lane];
+        if self.queues[lane].len() >= spec.capacity {
+            return Err(item);
+        }
+        if self.queues[lane].is_empty() {
+            self.wfq.activate(lane);
+        }
+        self.queues[lane].push_back(item);
+        Ok(())
+    }
+
+    /// WFQ-pick the next lane to serve among the backlogged lanes;
+    /// `None` when everything is empty. Deterministic: smallest virtual
+    /// finish tag, ties to the smallest lane index.
+    pub fn pick(&mut self) -> Option<usize> {
+        // Destructure so the backlog iterator (borrowing `queues`) can
+        // feed `wfq.pick` (borrowing `wfq` mutably) without a Vec
+        // round-trip — this runs once per quantum under the scheduler's
+        // queue mutex.
+        let Self { queues, wfq, .. } = self;
+        wfq.pick((0..queues.len()).filter(|&i| !queues[i].is_empty()))
+    }
+
+    /// Dequeue up to `max` items from one lane, FIFO order.
+    pub fn drain(&mut self, lane: usize, max: usize) -> Vec<T> {
+        let n = self.queues[lane].len().min(max);
+        self.queues[lane].drain(..n).collect()
+    }
+
+    /// Account served cold work to a lane (advances its WFQ tag).
+    pub fn charge(&mut self, lane: usize, cost: u64) {
+        self.wfq.charge(lane, cost);
+    }
+
+    /// A lane's virtual finish tag (fixed point, monotone — see
+    /// [`crate::serve::wfq`]).
+    pub fn vfinish(&self, lane: usize) -> u128 {
+        self.wfq.vfinish(lane)
+    }
+}
+
+/// Monotonic per-lane counters, updated lock-free by the scheduler and
+/// snapshotted into [`crate::metrics::LaneStats`]. The scheduler-wide
+/// `batch.*` totals are *derived* as sums over these, so the invariant
+/// `sum(lanes.*.shed) == batch.shed` (and likewise for every counter)
+/// holds by construction — and is still invariant-tested, so it cannot
+/// silently rot if the derivation changes.
+#[derive(Debug, Default)]
+pub struct LaneCounters {
+    /// Batches dispatched from this lane (one WFQ quantum each).
+    pub batches: AtomicU64,
+    /// Requests dispatched through this lane's batches.
+    pub batched_requests: AtomicU64,
+    /// Largest single batch dispatched from this lane.
+    pub max_batch_size: AtomicU64,
+    /// Requests shed by admission control at this lane.
+    pub shed: AtomicU64,
+    /// Requests whose deadline expired while owned by this lane.
+    pub timeouts: AtomicU64,
+    /// Requests answered with a served reply from this lane's batches.
+    pub served: AtomicU64,
+    /// Cold-work units charged to this lane (cache-miss solves its
+    /// batches paid for — the quantity WFQ fairness is defined over).
+    pub cold_work: AtomicU64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_forms() {
+        let l = LaneSpec::parse("gold:3:64").unwrap();
+        assert_eq!((l.name.as_str(), l.weight, l.capacity, l.policy), ("gold", 3, 64, None));
+        let l = LaneSpec::parse("free:1:16:shed").unwrap();
+        assert_eq!(l.policy, Some(AdmissionPolicy::Shed));
+        let l = LaneSpec::parse("bulk:2:0:block").unwrap();
+        assert_eq!((l.capacity, l.policy), (0, Some(AdmissionPolicy::Block)));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in ["", "gold", "gold:3", "gold:3:64:fifo", ":3:64", "gold:0:64", "gold:x:64", "gold:3:y", "a b:1:4"] {
+            assert!(LaneSpec::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn normalize_prepends_default_and_rejects_duplicates() {
+        let specs = normalize_specs(vec![LaneSpec::new("gold", 3, 8)], 256).unwrap();
+        assert_eq!(specs[0].name, DEFAULT_LANE);
+        assert_eq!((specs[0].weight, specs[0].capacity), (1, 256));
+        assert_eq!(specs[1].name, "gold");
+
+        let specs = normalize_specs(vec![LaneSpec::new(DEFAULT_LANE, 2, 4)], 256).unwrap();
+        assert_eq!(specs.len(), 1, "an explicit default lane must be kept, not doubled");
+        assert_eq!(specs[0].weight, 2);
+
+        assert!(normalize_specs(vec![LaneSpec::new("a", 1, 4), LaneSpec::new("a", 2, 4)], 16).is_err());
+        let zero_weight = LaneSpec { name: "z".into(), weight: 0, capacity: 4, policy: None };
+        assert!(normalize_specs(vec![zero_weight], 16).is_err());
+    }
+
+    #[test]
+    fn resolve_falls_back_to_default() {
+        let lanes: LaneSet<u32> = LaneSet::new(vec![LaneSpec::new("gold", 3, 8), LaneSpec::new("free", 1, 8)]);
+        assert_eq!(lanes.specs()[lanes.default_lane()].name, DEFAULT_LANE);
+        assert_eq!(lanes.resolve(Some("gold")), 1);
+        assert_eq!(lanes.resolve(Some("no-such-lane")), lanes.default_lane());
+        assert_eq!(lanes.resolve(None), lanes.default_lane());
+    }
+
+    #[test]
+    fn try_push_honours_capacity_and_zero_cap_admits_nothing() {
+        let mut lanes: LaneSet<u32> = LaneSet::new(vec![LaneSpec::new("tiny", 1, 2), LaneSpec::new("off", 1, 0)]);
+        let tiny = lanes.resolve(Some("tiny"));
+        let off = lanes.resolve(Some("off"));
+        assert!(lanes.try_push(tiny, 1).is_ok());
+        assert!(lanes.try_push(tiny, 2).is_ok());
+        assert_eq!(lanes.try_push(tiny, 3), Err(3), "third push must bounce off capacity 2");
+        assert_eq!(lanes.try_push(off, 1), Err(1), "zero-capacity lane admits nothing");
+        assert_eq!(lanes.len_of(tiny), 2);
+        assert_eq!(lanes.total_len(), 2);
+        assert_eq!(lanes.max_len(), 2);
+    }
+
+    #[test]
+    fn drain_is_fifo_within_a_lane() {
+        let mut lanes: LaneSet<u32> = LaneSet::new(vec![]);
+        let d = lanes.default_lane();
+        for v in [10, 11, 12] {
+            assert!(lanes.try_push(d, v).is_ok());
+        }
+        assert_eq!(lanes.pick(), Some(d));
+        assert_eq!(lanes.drain(d, 2), vec![10, 11]);
+        assert_eq!(lanes.drain(d, 8), vec![12]);
+        assert!(lanes.is_all_empty());
+        assert_eq!(lanes.pick(), None);
+    }
+
+    #[test]
+    fn single_default_lane_degenerates_to_fifo() {
+        // The degenerate configuration behind the FIFO-equivalence
+        // regression suite: one lane, every pick returns it, drain
+        // order is arrival order.
+        let mut lanes: LaneSet<u32> = LaneSet::new(vec![]);
+        assert_eq!(lanes.num_lanes(), 1);
+        let d = lanes.default_lane();
+        for v in 0..5 {
+            assert!(lanes.try_push(d, v).is_ok());
+        }
+        let mut out = Vec::new();
+        while let Some(lane) = lanes.pick() {
+            assert_eq!(lane, d);
+            out.extend(lanes.drain(lane, 2));
+            lanes.charge(lane, 1);
+        }
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+}

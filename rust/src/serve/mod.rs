@@ -15,17 +15,24 @@
 //! reply`), as driven by `ftl serve` and `examples/deploy_server.rs`:
 //!
 //! ```text
-//!            request (workload, graph, DeployConfig [, deadline])
+//!            request (workload, graph, DeployConfig [, deadline] [, lane])
 //!                      │
 //!            [fast path]  both caches warm? → serve immediately,
-//!                      │    skipping the queue and the batch window
-//!            [admit]   BatchScheduler bounded queue: full? → shed (SHED)
-//!                      │    or block for space; deadline expired (now or
+//!                      │    skipping the lanes and the batch window
+//!                      │    (warm traffic is lane-agnostic)
+//!            [admit]   BatchScheduler per-lane bounded queue (lane= name,
+//!                      │    unknown → default): full? → shed (SHED) or
+//!                      │    block for space; deadline expired (now or
 //!                      │    while parked) → TIMEOUT
-//!            [batch]   dispatcher holds a window open, then groups the
-//!                      │    batch by SoC fingerprint (solver locality) and
-//!                      │    dedups by full fingerprint (one solve per run,
-//!                      │    fan the result out to every waiter)
+//!            [schedule] dispatcher holds a window open, then WFQ picks
+//!                      │    the lane with the smallest virtual finish tag
+//!                      │    and drains one batch (quantum) from it; the
+//!                      │    batch's cold work is charged back to the lane,
+//!                      │    so saturated lanes split cold work by weight
+//!            [batch]   the quantum's batch is grouped by SoC fingerprint
+//!                      │    (solver locality) and deduped by full
+//!                      │    fingerprint (one solve per run, fan the
+//!                      │    result out to every waiter)
 //!            [solve-or-hit]     sharded LRU of Arc<Deployment>; misses
 //!                      │        coalesce through SingleFlight, one leader
 //!                      │        runs coordinator::Deployer::plan()
@@ -94,13 +101,17 @@
 mod batch;
 mod cache;
 mod fingerprint;
+pub mod lanes;
 pub mod persist;
 mod service;
 mod singleflight;
+pub mod wave;
+pub mod wfq;
 
 pub use batch::{handle_line, AdmissionPolicy, BatchOptions, BatchOutcome, BatchScheduler};
 pub use cache::{LruCache, PlanCache, SimCache};
 pub use fingerprint::{checksum, fingerprint, soc_fingerprint, Fingerprint};
+pub use lanes::{normalize_specs, DEFAULT_LANE, LaneSet, LaneSpec};
 pub use persist::{PersistCounters, PersistOptions, SNAPSHOT_FORMAT, Snapshotter};
 pub use service::{
     resolve_workload, AsyncReply, PlanOutcome, PlanService, ServeOptions, ServeReply, ServeStats,

@@ -285,7 +285,9 @@ impl PlanService {
     /// Serve the request only if both caches are warm: `None` (with no
     /// counter side effects) when either the plan or the sim report is
     /// absent. The batch scheduler uses this as a fast path so fully warm
-    /// traffic skips the queue and the batch window entirely. Probes are
+    /// traffic skips the priority lanes and the batch window entirely —
+    /// the fast path is deliberately lane-agnostic, since WFQ fairness is
+    /// defined over *cold* work and a cache hit consumes none. Probes are
     /// `contains`-only; the `Some` arm re-runs the normal counted path,
     /// which in the rare eviction race may still solve synchronously.
     pub fn deploy_if_warm(

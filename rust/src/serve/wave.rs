@@ -1,0 +1,196 @@
+//! Shared fairness-exercise drivers for the priority lanes.
+//!
+//! One source of truth for the two harness shapes run by
+//! `examples/deploy_server.rs --self-test`, `ftl serve --self-test` and
+//! `rust/benches/lane_contention.rs` — examples, the binary and benches
+//! are separate compilation targets, so the only way they can share a
+//! driver is through the library. These are demo/verification
+//! harnesses, not part of the serving API proper:
+//!
+//! * [`saturated_shares`] — the deterministic virtual-clock core:
+//!   unit-cost quanta over permanently backlogged lanes. Pure integer
+//!   WFQ, identical output on any host at any thread count (the CI
+//!   fairness smoke greps it).
+//! * [`two_tenant_wave`] — the threaded 3:1 wave over a real
+//!   [`BatchScheduler`] with distinct cold solves.
+//!
+//! The threaded wave's early-share measurement deliberately reads the
+//! dispatcher's own per-lane `batches` counters (sampled by a monitor
+//! thread the first time the total crosses the window) rather than
+//! requester-thread completion order: a waiter that was served in
+//! quantum *k* can be descheduled by the OS and wake after waiters
+//! served later, so completion order on an oversubscribed host is
+//! noise — the scheduler's counters are the serve order as the
+//! scheduler made it.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::DeployConfig;
+use crate::coordinator::experiments;
+use crate::metrics::BatchStats;
+use crate::tiling::Strategy;
+
+use super::batch::{AdmissionPolicy, BatchOptions, BatchScheduler};
+use super::lanes::{LaneSet, LaneSpec};
+use super::service::{PlanService, ServeOptions};
+
+/// Saturated run on the deterministic scheduling core: `quanta`
+/// unit-cost quanta over the named `(name, weight)` lanes, every lane
+/// kept permanently backlogged. Returns the per-lane served-quantum
+/// counts, index-aligned with the input. Under WFQ these track the
+/// weight shares within one quantum — e.g. `[("gold", 3), ("free", 1)]`
+/// over 16 quanta is exactly `[12, 4]`.
+pub fn saturated_shares(lanes_spec: &[(&str, u64)], quanta: u64) -> Vec<u64> {
+    let specs: Vec<LaneSpec> = lanes_spec.iter().map(|&(n, w)| LaneSpec::new(n, w, 64)).collect();
+    let mut lanes: LaneSet<u64> = LaneSet::new(specs);
+    let idx: Vec<usize> = lanes_spec.iter().map(|&(n, _)| lanes.resolve(Some(n))).collect();
+    let mut served = vec![0u64; lanes_spec.len()];
+    for tick in 0..quanta {
+        for &l in &idx {
+            // Top up; a bounce off the queue cap still leaves a backlog.
+            let _ = lanes.try_push(l, tick);
+        }
+        let lane = lanes.pick().expect("every lane is backlogged");
+        lanes.drain(lane, 1);
+        lanes.charge(lane, 1);
+        served[idx.iter().position(|&x| x == lane).expect("only named lanes are picked")] += 1;
+    }
+    served
+}
+
+/// Outcome of [`two_tenant_wave`].
+pub struct WaveReport {
+    /// Quanta dispatched from the `gold` lane at the sample point.
+    pub gold_early: u64,
+    /// Total quanta dispatched at the sample point (≥ the requested
+    /// window; normally window or window + 1 — each quantum is a full
+    /// solve + simulation, far slower than the monitor's poll).
+    pub total_early: u64,
+    /// Final scheduler stats after the wave drained.
+    pub stats: BatchStats,
+}
+
+/// Drive a fresh scheduler with two lanes — `gold` (weight 3) and
+/// `free` (weight 1) — and `per_lane` *distinct* cold requests per lane
+/// released at the same instant (barrier), one request per WFQ quantum
+/// (`max_batch: 1`). Blocks until the wave fully drains; a failing
+/// request surfaces as an `Err`, never as a hang (all fallible setup
+/// happens before the threads spawn, and the monitor is released when
+/// the requesters finish, whether or not the window was reached).
+///
+/// Asserts the invariants that must hold regardless of scheduling
+/// noise: every request served, nothing shed or timed out, each lane
+/// charged exactly one solve + one sim of cold work per request, and
+/// the scheduler totals equal to the lane sums. The *fairness* judgment
+/// on `gold_early / total_early` (≈ 3/4 under WFQ) is left to the
+/// caller, which knows its tolerance.
+pub fn two_tenant_wave(per_lane: usize, window: u64) -> Result<WaveReport> {
+    ensure!(per_lane >= 1, "wave needs at least one request per lane");
+    ensure!(
+        (1..=2 * per_lane as u64).contains(&window),
+        "window must lie within the wave's {} total quanta",
+        2 * per_lane
+    );
+    let service = Arc::new(PlanService::new(ServeOptions::default()));
+    let sched = BatchScheduler::new(
+        service,
+        BatchOptions {
+            queue_capacity: 64,
+            batch_window: Duration::from_millis(1),
+            // One request per quantum: fairness at request granularity.
+            max_batch: 1,
+            policy: AdmissionPolicy::Block,
+            lanes: vec![LaneSpec::new("gold", 3, 64), LaneSpec::new("free", 1, 64)],
+        },
+    );
+    // Build every request up front: nothing fallible runs between spawn
+    // and the barrier, so the barrier always completes.
+    let mut requests: Vec<(String, &'static str, crate::ir::Graph, DeployConfig)> = Vec::new();
+    for (lane, is_gold) in [("gold", true), ("free", false)] {
+        for i in 0..per_lane {
+            // Distinct shape per request (gold even seq lengths, free
+            // odd — disjoint for any per_lane): every request is a cold
+            // solve, so fairness is measured in real cold work, not
+            // cache hits.
+            let seq_len = if is_gold { 16 + 8 * i } else { 17 + 8 * i };
+            let graph = experiments::vit_mlp_stage(seq_len, 24, 48);
+            let cfg = DeployConfig::preset("cluster-only", Strategy::Ftl)?;
+            requests.push((format!("{lane}-{i}"), lane, graph, cfg));
+        }
+    }
+    let barrier = Barrier::new(requests.len());
+    let requesters_done = AtomicBool::new(false);
+    let mut early: Option<(u64, u64)> = None;
+    let mut first_error: Option<anyhow::Error> = None;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (workload, lane, graph, cfg) in requests {
+            let (sched, barrier) = (&sched, &barrier);
+            handles.push(s.spawn(move || -> Result<()> {
+                barrier.wait();
+                let outcome = sched.deploy_in_lane(&workload, graph, cfg, Some(lane), None)?;
+                ensure!(outcome.kind() == "OK", "wave request {workload} must be served");
+                Ok(())
+            }));
+        }
+        // Monitor: first snapshot of the dispatcher's own counters at or
+        // after the window — or at whatever the requesters reached, if
+        // they finished (possibly by failing) without crossing it.
+        let monitor = {
+            let (sched, done) = (&sched, &requesters_done);
+            s.spawn(move || loop {
+                let st = sched.stats();
+                if st.batches >= window || done.load(Ordering::Acquire) {
+                    let gold = st.lanes.iter().find(|l| l.name == "gold").map_or(0, |l| l.batches);
+                    return (gold, st.batches);
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            })
+        };
+        // Collect every requester before releasing the monitor, so a
+        // failed request can never leave the monitor spinning.
+        for h in handles {
+            let result = h.join().unwrap_or_else(|_| Err(anyhow!("wave thread panicked")));
+            if let Err(e) = result {
+                first_error.get_or_insert(e);
+            }
+        }
+        requesters_done.store(true, Ordering::Release);
+        match monitor.join() {
+            Ok(sample) => early = Some(sample),
+            Err(_) => {
+                if first_error.is_none() {
+                    first_error = Some(anyhow!("wave monitor panicked"));
+                }
+            }
+        }
+    });
+    if let Some(e) = first_error {
+        return Err(e.context("two-tenant wave request failed"));
+    }
+    let (gold_early, total_early) = early.expect("monitor joined above");
+    let stats = sched.stats();
+    let by = |name: &str| stats.lanes.iter().find(|l| l.name == name).cloned().unwrap_or_default();
+    let (gold, free) = (by("gold"), by("free"));
+    ensure!(gold.served == per_lane as u64 && free.served == per_lane as u64, "every request must drain");
+    ensure!(stats.shed == 0 && stats.timeouts == 0, "nothing may shed or time out in the wave");
+    // Every request is a distinct cold fingerprint: one solve + one sim
+    // each, charged to its lane.
+    ensure!(
+        gold.cold_work == 2 * per_lane as u64 && free.cold_work == 2 * per_lane as u64,
+        "each lane's drained cold work is one solve + one sim per request (got {} / {})",
+        gold.cold_work,
+        free.cold_work
+    );
+    ensure!(
+        stats.lanes.iter().map(|l| l.batched_requests).sum::<u64>() == stats.batched_requests
+            && stats.lanes.iter().map(|l| l.shed).sum::<u64>() == stats.shed
+            && stats.lanes.iter().map(|l| l.timeouts).sum::<u64>() == stats.timeouts,
+        "scheduler totals must equal the per-lane sums"
+    );
+    Ok(WaveReport { gold_early, total_early, stats })
+}

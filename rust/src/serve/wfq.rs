@@ -1,0 +1,228 @@
+//! Virtual-time weighted fair queuing — the arithmetic core under
+//! [`crate::serve::lanes`].
+//!
+//! Start-time fair queuing over *lanes* (per-tenant queues) instead of
+//! packets: each lane carries a virtual finish tag — its cumulative
+//! served cost normalized by its weight — and the scheduler always
+//! serves the backlogged lane with the smallest tag (ties broken by
+//! lane index, so selection is a pure function of the tags). Serving a
+//! quantum of cost `c` from a lane of weight `w` advances that lane's
+//! tag by `c / w`; under saturation every backlogged lane's tag grows
+//! at the same rate, which is exactly a weight-proportional split of
+//! the served cost (a 3:1 weight ratio yields a 3:1 cost split, within
+//! one quantum).
+//!
+//! A lane that goes idle stops accumulating tag, so a naive
+//! implementation would let it *bank* credit and starve everyone else
+//! on return. Instead the scheduler tracks a global virtual clock (the
+//! tag of the last lane served) and, when a lane re-activates, lifts
+//! its tag to `max(own tag, clock)`: an idle lane re-enters at "now",
+//! keeping fairness memoryless across idle periods.
+//!
+//! Everything here is integer fixed-point (no floats, no `Instant`):
+//! decisions are a deterministic function of the
+//! (activate, pick, charge) call sequence, which is what makes the
+//! fairness property tests in `rust/tests/fairness.rs` exact rather
+//! than statistical.
+
+/// Fixed-point scale for virtual time: one cost unit at weight 1
+/// advances a lane's tag by `SCALE`. 2^32 leaves room for
+/// `cost × SCALE` in u128 at any realistic cost, and keeps the
+/// rounding error of `SCALE / weight` far below one quantum.
+pub const SCALE: u128 = 1 << 32;
+
+#[derive(Debug, Clone)]
+struct WfqLane {
+    weight: u64,
+    /// Virtual finish tag: cumulative charged cost / weight, plus any
+    /// idle-period lift. Monotonically non-decreasing.
+    vfinish: u128,
+}
+
+/// The virtual-time scheduler state (see module docs). Lane identity is
+/// positional: callers address lanes by index into the weight vector
+/// they constructed with.
+#[derive(Debug, Clone)]
+pub struct Wfq {
+    lanes: Vec<WfqLane>,
+    /// Global virtual clock: the finish tag of the most recently picked
+    /// lane. Monotonically non-decreasing.
+    vtime: u128,
+}
+
+impl Wfq {
+    /// Scheduler over `weights.len()` lanes. Weights must be ≥ 1 (a
+    /// zero weight has no meaningful finish tag; express "never serve"
+    /// with a zero-capacity lane instead).
+    pub fn new(weights: &[u64]) -> Self {
+        assert!(!weights.is_empty(), "wfq needs at least one lane");
+        assert!(weights.iter().all(|&w| w >= 1), "lane weights must be >= 1");
+        Self { lanes: weights.iter().map(|&weight| WfqLane { weight, vfinish: 0 }).collect(), vtime: 0 }
+    }
+
+    /// Number of lanes.
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// True when constructed over zero lanes (never — `new` asserts).
+    pub fn is_empty(&self) -> bool {
+        self.lanes.is_empty()
+    }
+
+    /// A lane transitioned idle → backlogged: lift its tag to the
+    /// global clock so the idle period earns no retroactive credit.
+    /// Idempotent; calling it for an already-backlogged lane is
+    /// harmless (the tag is already ≥ its own past values, and lifting
+    /// to the clock again is a no-op or a legal lift).
+    pub fn activate(&mut self, lane: usize) {
+        let l = &mut self.lanes[lane];
+        l.vfinish = l.vfinish.max(self.vtime);
+    }
+
+    /// Pick the next lane to serve among `backlogged` (indices of lanes
+    /// with queued work): smallest finish tag wins, ties break to the
+    /// smallest index. Advances the global clock to the winner's tag.
+    /// Returns `None` when nothing is backlogged.
+    pub fn pick(&mut self, backlogged: impl IntoIterator<Item = usize>) -> Option<usize> {
+        let winner = backlogged.into_iter().min_by_key(|&i| (self.lanes[i].vfinish, i))?;
+        self.vtime = self.vtime.max(self.lanes[winner].vfinish);
+        Some(winner)
+    }
+
+    /// Account `cost` units of served work to `lane`: its tag advances
+    /// by `cost / weight` (in [`SCALE`] fixed point). Zero cost is a
+    /// no-op — a quantum that turned out to be all-warm consumed none
+    /// of the budget fairness is defined over.
+    pub fn charge(&mut self, lane: usize, cost: u64) {
+        let l = &mut self.lanes[lane];
+        l.vfinish += cost as u128 * SCALE / l.weight as u128;
+    }
+
+    /// A lane's virtual finish tag (monotone; see module docs).
+    pub fn vfinish(&self, lane: usize) -> u128 {
+        self.lanes[lane].vfinish
+    }
+
+    /// The global virtual clock (monotone).
+    pub fn vtime(&self) -> u128 {
+        self.vtime
+    }
+
+    /// A lane's configured weight.
+    pub fn weight(&self, lane: usize) -> u64 {
+        self.lanes[lane].weight
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serve `rounds` unit-cost quanta with every lane permanently
+    /// backlogged; return the per-lane served counts.
+    fn saturate(weights: &[u64], rounds: usize) -> Vec<u64> {
+        let mut wfq = Wfq::new(weights);
+        let mut served = vec![0u64; weights.len()];
+        for _ in 0..rounds {
+            let lane = wfq.pick(0..weights.len()).unwrap();
+            wfq.charge(lane, 1);
+            served[lane] += 1;
+        }
+        served
+    }
+
+    #[test]
+    fn three_to_one_split_is_exact_over_whole_periods() {
+        // 16 unit quanta at 3:1 must split 12:4 — the acceptance
+        // criterion's share, with zero tolerance needed.
+        assert_eq!(saturate(&[3, 1], 16), vec![12, 4]);
+        assert_eq!(saturate(&[1, 3], 16), vec![4, 12]);
+        assert_eq!(saturate(&[1, 1], 16), vec![8, 8]);
+    }
+
+    #[test]
+    fn shares_track_weights_within_one_quantum() {
+        let weights = [5u64, 2, 1];
+        let total: u64 = weights.iter().sum();
+        for rounds in [7usize, 40, 161] {
+            let served = saturate(&weights, rounds);
+            for (i, &w) in weights.iter().enumerate() {
+                let expected = rounds as f64 * w as f64 / total as f64;
+                let dev = (served[i] as f64 - expected).abs();
+                assert!(dev <= 1.0 + 1e-9, "lane {i} served {} vs expected {expected:.2} over {rounds}", served[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn idle_lane_reenters_at_the_clock_not_at_zero() {
+        let mut wfq = Wfq::new(&[1, 1]);
+        // Lane 1 idles while lane 0 is served 100 quanta.
+        for _ in 0..100 {
+            let lane = wfq.pick([0]).unwrap();
+            wfq.charge(lane, 1);
+        }
+        // Lane 1 wakes up: without the activate lift it would win the
+        // next 100 picks in a row; with it, service alternates.
+        wfq.activate(1);
+        let mut lane1_streak = 0u32;
+        for _ in 0..10 {
+            let lane = wfq.pick(0..2).unwrap();
+            wfq.charge(lane, 1);
+            if lane == 1 {
+                lane1_streak += 1;
+            } else {
+                break;
+            }
+        }
+        assert!(lane1_streak <= 1, "an idle lane must not bank credit (got a {lane1_streak}-long burst)");
+    }
+
+    #[test]
+    fn tags_and_clock_are_monotone() {
+        let mut wfq = Wfq::new(&[3, 1, 2]);
+        let mut last_tags: Vec<u128> = (0..3).map(|i| wfq.vfinish(i)).collect();
+        let mut last_clock = wfq.vtime();
+        for step in 0..200usize {
+            let lane = wfq.pick(0..3).unwrap();
+            wfq.charge(lane, 1 + (step % 4) as u64);
+            if step % 7 == 0 {
+                wfq.activate(step % 3);
+            }
+            for (i, last) in last_tags.iter_mut().enumerate() {
+                assert!(wfq.vfinish(i) >= *last, "lane {i} tag regressed at step {step}");
+                *last = wfq.vfinish(i);
+            }
+            assert!(wfq.vtime() >= last_clock, "clock regressed at step {step}");
+            last_clock = wfq.vtime();
+        }
+    }
+
+    #[test]
+    fn ties_break_by_lane_index() {
+        let mut wfq = Wfq::new(&[1, 1]);
+        assert_eq!(wfq.pick(0..2), Some(0), "equal tags must pick the lowest index");
+        assert_eq!(wfq.pick([1, 0]), Some(0), "iteration order must not matter");
+    }
+
+    #[test]
+    fn zero_cost_charges_are_free() {
+        let mut wfq = Wfq::new(&[2, 1]);
+        let before = wfq.vfinish(0);
+        wfq.charge(0, 0);
+        assert_eq!(wfq.vfinish(0), before);
+    }
+
+    #[test]
+    fn empty_backlog_picks_nothing() {
+        let mut wfq = Wfq::new(&[1]);
+        assert_eq!(wfq.pick(std::iter::empty()), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "weights must be >= 1")]
+    fn zero_weight_rejected() {
+        Wfq::new(&[1, 0]);
+    }
+}

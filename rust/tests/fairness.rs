@@ -1,0 +1,496 @@
+//! Deterministic fairness harness for the batch scheduler's priority
+//! lanes.
+//!
+//! Two layers, one codebase:
+//!
+//! * **Virtual-clock property tests** drive the *same*
+//!   [`LaneSet`]/WFQ core the dispatcher uses, with seeded random
+//!   weights, arrival patterns, queue caps and per-quantum costs — no
+//!   threads, no wall clock, so the weighted-fairness bound is asserted
+//!   exactly: every continuously backlogged lane's served cold-work
+//!   share deviates from its weight share by at most one batch window
+//!   of cost, and per-lane virtual time is monotone.
+//! * **Scheduler regression tests** pin the degenerate configurations:
+//!   a single default lane reproduces the pre-lane FIFO scheduler's
+//!   outcome sequence and `batch.*` counters, a zero-capacity lane
+//!   sheds everything, a deadline that expires while parked or queued
+//!   in a non-default lane resolves `TIMEOUT` (never silent
+//!   starvation), and the scheduler-wide totals always equal the
+//!   per-lane sums (`sum(lanes.*) == batch.*`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::experiments;
+use ftl::serve::{
+    AdmissionPolicy, BatchOptions, BatchOutcome, BatchScheduler, DEFAULT_LANE, LaneSet, LaneSpec, PlanService,
+    ServeOptions,
+};
+use ftl::tiling::Strategy;
+use ftl::util::prop::{cases, Rng};
+use ftl::Graph;
+
+// ------------------------------------------------------- virtual-clock core
+
+/// A seeded tenant set: `n` lanes named `t0..`, random weights in
+/// `1..=9`, the given queue capacity each.
+fn tenant_lanes(rng: &mut Rng, n: usize, capacity: usize) -> (LaneSet<u64>, Vec<usize>, Vec<u64>) {
+    let weights: Vec<u64> = (0..n).map(|_| rng.range(1, 9) as u64).collect();
+    let specs: Vec<LaneSpec> =
+        weights.iter().enumerate().map(|(i, &w)| LaneSpec::new(format!("t{i}"), w, capacity)).collect();
+    let lanes: LaneSet<u64> = LaneSet::new(specs);
+    let idx: Vec<usize> = (0..n).map(|i| lanes.resolve(Some(format!("t{i}").as_str()))).collect();
+    (lanes, idx, weights)
+}
+
+/// The start-time-fair-queuing deviation bound for lane `k`: one batch
+/// window of cost — its own largest quantum (weighted by the competitor
+/// mass) plus its weight share of the competitors' largest quanta.
+/// Derived from the pairwise bound `|S_i/w_i - S_j/w_j| <= c_i/w_i +
+/// c_j/w_j` for continuously backlogged lanes.
+fn share_bound(k: usize, weights: &[u64], cmax: &[u64]) -> f64 {
+    let wsum: f64 = weights.iter().map(|&w| w as f64).sum();
+    let others: f64 = cmax.iter().enumerate().filter(|&(j, _)| j != k).map(|(_, &c)| c as f64).sum();
+    cmax[k] as f64 * (wsum - weights[k] as f64) / wsum + weights[k] as f64 / wsum * others
+}
+
+#[test]
+fn prop_saturated_lanes_split_cold_work_by_weight_within_one_batch_window() {
+    cases(40, |rng| {
+        let n = rng.range(2, 4);
+        let cap = rng.range(4, 8);
+        let (mut lanes, idx, weights) = tenant_lanes(rng, n, cap);
+        let max_cost = rng.range(1, 5) as u64;
+        let quanta = rng.range(150, 500);
+        let mut served = vec![0u64; n];
+        let mut cmax = vec![0u64; n];
+        let mut last_tag = vec![0u128; n];
+        for _ in 0..quanta {
+            // Saturation: every tenant lane keeps a backlog. (The
+            // arrival pattern is irrelevant as long as no lane runs
+            // dry — pushes beyond capacity just bounce.)
+            for &l in &idx {
+                while lanes.len_of(l) < cap {
+                    if lanes.try_push(l, 0).is_err() {
+                        break;
+                    }
+                }
+            }
+            let lane = lanes.pick().expect("every tenant lane is backlogged");
+            let batch = lanes.drain(lane, 1);
+            assert_eq!(batch.len(), 1, "unit quantum");
+            let cost = rng.range(1, max_cost as usize) as u64;
+            lanes.charge(lane, cost);
+            let k = idx.iter().position(|&x| x == lane).expect("only backlogged lanes are picked");
+            served[k] += cost;
+            cmax[k] = cmax[k].max(cost);
+            for (j, &l) in idx.iter().enumerate() {
+                assert!(lanes.vfinish(l) >= last_tag[j], "per-lane virtual time must be monotone");
+                last_tag[j] = lanes.vfinish(l);
+            }
+        }
+        let total: u64 = served.iter().sum();
+        let wsum: f64 = weights.iter().map(|&w| w as f64).sum();
+        for k in 0..n {
+            let expected = total as f64 * weights[k] as f64 / wsum;
+            let dev = (served[k] as f64 - expected).abs();
+            let bound = share_bound(k, &weights, &cmax) + 1.0; // +1: fixed-point rounding slack
+            assert!(
+                dev <= bound,
+                "lane {k} (w={}) served {} vs fluid share {expected:.2} — deviation {dev:.2} > bound {bound:.2}",
+                weights[k],
+                served[k]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_pairwise_fairness_holds_under_random_arrivals() {
+    // Random arrival patterns: lanes may run dry. The exact invariant
+    // is pairwise — any two lanes that stayed backlogged over the whole
+    // window split cost by weight within one quantum each.
+    cases(30, |rng| {
+        let n = rng.range(2, 4);
+        let cap = rng.range(3, 6);
+        let (mut lanes, idx, weights) = tenant_lanes(rng, n, cap);
+        let quanta = rng.range(100, 300);
+        let mut served = vec![0u64; n];
+        let mut cmax = vec![0u64; n];
+        let mut always_backlogged = vec![true; n];
+        for _ in 0..quanta {
+            for (k, &l) in idx.iter().enumerate() {
+                // Bursty arrivals: each lane refills only sometimes.
+                if rng.chance(0.7) {
+                    let _ = lanes.try_push(l, 0);
+                }
+                if lanes.len_of(l) == 0 {
+                    always_backlogged[k] = false;
+                }
+            }
+            let Some(lane) = lanes.pick() else { continue };
+            lanes.drain(lane, 1);
+            let cost = rng.range(1, 4) as u64;
+            lanes.charge(lane, cost);
+            let k = idx.iter().position(|&x| x == lane).unwrap();
+            served[k] += cost;
+            cmax[k] = cmax[k].max(cost);
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if !(always_backlogged[i] && always_backlogged[j]) {
+                    continue;
+                }
+                let norm_i = served[i] as f64 / weights[i] as f64;
+                let norm_j = served[j] as f64 / weights[j] as f64;
+                let bound =
+                    cmax[i] as f64 / weights[i] as f64 + cmax[j] as f64 / weights[j] as f64 + 1.0;
+                assert!(
+                    (norm_i - norm_j).abs() <= bound,
+                    "backlogged lanes {i},{j}: normalized service {norm_i:.2} vs {norm_j:.2} (bound {bound:.2})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_idle_lane_cannot_bank_credit_across_reactivation() {
+    cases(25, |rng| {
+        let (mut lanes, idx, weights) = tenant_lanes(rng, 2, 4);
+        let idle_quanta = rng.range(20, 100);
+        // Phase A: lane 0 idle, lane 1 alone consumes `idle_quanta`.
+        for _ in 0..idle_quanta {
+            let _ = lanes.try_push(idx[1], 0);
+            let lane = lanes.pick().expect("lane 1 is backlogged");
+            assert_eq!(lane, idx[1], "an idle lane must never be picked");
+            lanes.drain(lane, 1);
+            lanes.charge(lane, 1);
+        }
+        // Phase B: lane 0 wakes up; measured from here, shares must obey
+        // the same one-window bound — no retroactive credit for phase A.
+        let quanta = rng.range(100, 300);
+        let mut served = [0u64; 2];
+        for _ in 0..quanta {
+            for &l in &idx {
+                let _ = lanes.try_push(l, 0);
+            }
+            let lane = lanes.pick().expect("both lanes are backlogged");
+            lanes.drain(lane, 1);
+            lanes.charge(lane, 1);
+            served[idx.iter().position(|&x| x == lane).unwrap()] += 1;
+        }
+        let total = (served[0] + served[1]) as f64;
+        let wsum = (weights[0] + weights[1]) as f64;
+        for k in 0..2 {
+            let expected = total * weights[k] as f64 / wsum;
+            let bound = share_bound(k, &weights, &[1, 1]) + 1.0;
+            assert!(
+                (served[k] as f64 - expected).abs() <= bound,
+                "post-reactivation share must be fair: lane {k} served {} vs {expected:.2} (idle {idle_quanta})",
+                served[k]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_lane_scheduling_is_deterministic_replay() {
+    // Same seed, same arrivals, same costs → bit-identical pick
+    // sequence. This is the property the CI fairness smoke leans on
+    // (identical lane shares at any solver thread count).
+    cases(10, |rng| {
+        let seed = rng.next_u64();
+        let run = |seed: u64| -> Vec<usize> {
+            let mut rng = Rng::new(seed);
+            let (mut lanes, idx, _) = tenant_lanes(&mut rng, 3, 4);
+            let mut picks = Vec::new();
+            for _ in 0..200 {
+                for &l in &idx {
+                    if rng.chance(0.8) {
+                        let _ = lanes.try_push(l, 0);
+                    }
+                }
+                if let Some(lane) = lanes.pick() {
+                    lanes.drain(lane, 1);
+                    lanes.charge(lane, rng.range(1, 3) as u64);
+                    picks.push(lane);
+                }
+            }
+            picks
+        };
+        assert_eq!(run(seed), run(seed), "lane scheduling must replay identically");
+    });
+}
+
+#[test]
+fn prop_queue_caps_bound_every_lane() {
+    cases(15, |rng| {
+        let n = rng.range(2, 4);
+        let caps: Vec<usize> = (0..n).map(|_| rng.range(0, 5)).collect();
+        let specs: Vec<LaneSpec> =
+            caps.iter().enumerate().map(|(i, &c)| LaneSpec::new(format!("t{i}"), 1, c)).collect();
+        let mut lanes: LaneSet<u32> = LaneSet::new(specs);
+        let idx: Vec<usize> = (0..n).map(|i| lanes.resolve(Some(format!("t{i}").as_str()))).collect();
+        for _ in 0..50 {
+            let k = rng.range(0, n - 1);
+            let before = lanes.len_of(idx[k]);
+            let accepted = lanes.try_push(idx[k], 7).is_ok();
+            assert_eq!(accepted, before < caps[k], "push must succeed iff the lane had room");
+            assert!(lanes.len_of(idx[k]) <= caps[k], "lane {k} exceeded its cap {}", caps[k]);
+        }
+        let total_cap: usize = caps.iter().sum();
+        assert!(lanes.total_len() <= total_cap);
+        // Zero-cap lanes are never backlogged, so never picked.
+        while let Some(lane) = lanes.pick() {
+            let k = idx.iter().position(|&x| x == lane).unwrap();
+            assert!(caps[k] > 0, "a zero-capacity lane must never be scheduled");
+            lanes.drain(lane, 1);
+            lanes.charge(lane, 1);
+        }
+    });
+}
+
+// ------------------------------------------------ scheduler regressions
+
+fn small_graph() -> Graph {
+    experiments::vit_mlp_stage(16, 24, 48)
+}
+
+fn cfg(soc: &str, strategy: Strategy) -> DeployConfig {
+    DeployConfig::preset(soc, strategy).unwrap()
+}
+
+fn small_service() -> Arc<PlanService> {
+    Arc::new(PlanService::new(ServeOptions {
+        cache_capacity: 8,
+        cache_shards: 2,
+        workers: 1,
+        ..ServeOptions::default()
+    }))
+}
+
+/// The pre-lane FIFO scenario, scripted: the exact `BatchOutcome`
+/// sequence and `batch.*` counters the single-queue scheduler produced
+/// must be reproduced bit-identically by the degenerate single-default-
+/// lane configuration.
+#[test]
+fn single_default_lane_reproduces_fifo_outcomes_and_counters() {
+    let sched = BatchScheduler::new(
+        small_service(),
+        BatchOptions { batch_window: Duration::ZERO, queue_capacity: 8, ..BatchOptions::default() },
+    );
+    // Exactly one lane, named `default`, inheriting the queue capacity.
+    assert_eq!(sched.lane_specs().len(), 1);
+    assert_eq!(sched.lane_specs()[0].name, DEFAULT_LANE);
+    assert_eq!(sched.lane_specs()[0].capacity, 8);
+    assert_eq!(sched.lane_specs()[0].weight, 1);
+
+    // 1. Cold request: batched, served.
+    let a = sched.deploy("a", small_graph(), cfg("cluster-only", Strategy::Ftl)).unwrap();
+    assert!(matches!(a, BatchOutcome::Served(_)));
+    // 2. Warm repeat: served via the fast path, not batched.
+    let b = sched.deploy("b", small_graph(), cfg("cluster-only", Strategy::Ftl)).unwrap();
+    let b = b.served().unwrap();
+    assert!(b.cached && b.sim_cached);
+    // 3. Pre-expired deadline: timed out before enqueue.
+    let c = sched
+        .deploy_with_deadline("c", small_graph(), cfg("cluster-only", Strategy::Ftl), Some(Duration::ZERO))
+        .unwrap();
+    assert!(matches!(c, BatchOutcome::TimedOut));
+
+    // The FIFO scheduler's exact counters for this script.
+    let stats = sched.stats();
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.batched_requests, 1);
+    assert_eq!(stats.max_batch_size, 1);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.timeouts, 1);
+    assert_eq!(stats.queue_depth, 0);
+    assert_eq!(stats.queue_capacity, 8);
+    assert_eq!(sched.service().stats().solves, 1);
+    assert_eq!(sched.service().stats().sims, 1);
+
+    // The per-lane breakdown degenerates to the global counters.
+    assert_eq!(stats.lanes.len(), 1);
+    let lane = &stats.lanes[0];
+    assert_eq!(
+        (lane.batches, lane.batched_requests, lane.shed, lane.timeouts, lane.served),
+        (stats.batches, stats.batched_requests, stats.shed, stats.timeouts, 1)
+    );
+    assert_eq!(lane.cold_work, 2, "one solve + one sim of cold work");
+
+    // 4. Zero-capacity queue sheds under both policies (the FIFO
+    // contract, per lane now).
+    for policy in [AdmissionPolicy::Shed, AdmissionPolicy::Block] {
+        let gate = BatchScheduler::new(
+            small_service(),
+            BatchOptions { queue_capacity: 0, policy, ..BatchOptions::default() },
+        );
+        let z = gate.deploy("z", small_graph(), cfg("cluster-only", Strategy::Ftl)).unwrap();
+        assert!(matches!(z, BatchOutcome::Shed));
+        assert_eq!(gate.stats().shed, 1);
+        assert_eq!(gate.stats().lanes[0].shed, 1);
+    }
+}
+
+#[test]
+fn zero_capacity_lane_sheds_everything_without_touching_other_lanes() {
+    let sched = BatchScheduler::new(
+        small_service(),
+        BatchOptions {
+            batch_window: Duration::ZERO,
+            lanes: vec![LaneSpec::new("walled-off", 5, 0)],
+            ..BatchOptions::default()
+        },
+    );
+    for i in 0..3 {
+        let c = cfg("cluster-only", Strategy::Ftl);
+        let z = sched.deploy_in_lane(&format!("z{i}"), small_graph(), c, Some("walled-off"), None).unwrap();
+        assert!(matches!(z, BatchOutcome::Shed), "a zero-capacity lane must shed everything");
+    }
+    // The default lane is unaffected — and the sheds are attributed to
+    // the zero-capacity lane, not smeared over the victims.
+    let ok = sched.deploy("ok", small_graph(), cfg("cluster-only", Strategy::Ftl)).unwrap();
+    assert!(matches!(ok, BatchOutcome::Served(_)));
+    let stats = sched.stats();
+    let by = |name: &str| stats.lanes.iter().find(|l| l.name == name).unwrap();
+    assert_eq!(by("walled-off").shed, 3);
+    assert_eq!(by(DEFAULT_LANE).shed, 0);
+    assert_eq!(stats.shed, 3, "global shed must be the lane sum");
+    assert_eq!(sched.service().stats().solves, 1, "shed requests must never reach the solver");
+}
+
+#[test]
+fn deadline_parked_on_full_non_default_lane_times_out_not_starves() {
+    // Lane `tiny` has capacity 1 and Block policy; a long batch window
+    // keeps the occupant parked in the queue, so the second submitter
+    // blocks on a full lane — and must be released by its own deadline,
+    // long before the window drains the lane.
+    let sched = Arc::new(BatchScheduler::new(
+        small_service(),
+        BatchOptions {
+            batch_window: Duration::from_millis(2_000),
+            policy: AdmissionPolicy::Block,
+            lanes: vec![LaneSpec::new("tiny", 2, 1)],
+            ..BatchOptions::default()
+        },
+    ));
+    let occupant = {
+        let sched = sched.clone();
+        std::thread::spawn(move || {
+            sched.deploy_in_lane("occupant", small_graph(), cfg("cluster-only", Strategy::Ftl), Some("tiny"), None)
+        })
+    };
+    let start = std::time::Instant::now();
+    while sched.stats().queue_depth == 0
+        && sched.stats().batched_requests == 0
+        && start.elapsed() < Duration::from_secs(10)
+    {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let t = std::time::Instant::now();
+    let outcome = sched
+        .deploy_in_lane(
+            "deadlined",
+            small_graph(),
+            cfg("cluster-only", Strategy::Ftl),
+            Some("tiny"),
+            Some(Duration::from_millis(50)),
+        )
+        .unwrap();
+    assert!(matches!(outcome, BatchOutcome::TimedOut), "a parked submitter must honour its deadline");
+    assert!(t.elapsed() < Duration::from_millis(1_900), "the timeout must beat the batch window");
+    let stats = sched.stats();
+    let tiny = stats.lanes.iter().find(|l| l.name == "tiny").unwrap();
+    assert!(tiny.timeouts >= 1, "the timeout must be charged to the lane that parked it");
+    assert_eq!(stats.lanes.iter().find(|l| l.name == DEFAULT_LANE).unwrap().timeouts, 0);
+    let first = occupant.join().unwrap().unwrap();
+    assert!(matches!(first, BatchOutcome::Served(_)), "the occupant must still be served");
+}
+
+#[test]
+fn deadline_expiring_while_queued_in_lane_resolves_timeout_at_dispatch() {
+    // The request is *admitted* into a non-default lane, then its
+    // deadline lapses while it waits out the batch window. Dispatch
+    // must resolve it TIMEOUT (and charge the lane), not solve it late
+    // and not strand the submitter.
+    let sched = BatchScheduler::new(
+        small_service(),
+        BatchOptions {
+            batch_window: Duration::from_millis(400),
+            lanes: vec![LaneSpec::new("slow", 1, 8)],
+            ..BatchOptions::default()
+        },
+    );
+    let outcome = sched
+        .deploy_in_lane(
+            "expires-in-queue",
+            small_graph(),
+            cfg("cluster-only", Strategy::Ftl),
+            Some("slow"),
+            Some(Duration::from_millis(30)),
+        )
+        .unwrap();
+    assert!(matches!(outcome, BatchOutcome::TimedOut), "a queued request must time out at dispatch");
+    let stats = sched.stats();
+    let slow = stats.lanes.iter().find(|l| l.name == "slow").unwrap();
+    assert_eq!(slow.timeouts, 1);
+    assert_eq!(slow.batched_requests, 1, "the request was admitted and dispatched, then expired");
+    assert_eq!(sched.service().stats().solves, 0, "an expired request must not consume solver time");
+    assert_eq!(stats.timeouts, 1, "global timeouts must be the lane sum");
+}
+
+#[test]
+fn lane_counter_sums_equal_global_batch_counters_under_mixed_traffic() {
+    // Mixed traffic over three lanes — served, shed (zero-cap lane) and
+    // timed out (zero deadline) — then the invariant the per-lane split
+    // was built around: every `batch.*` total equals its lane sum.
+    let sched = BatchScheduler::new(
+        small_service(),
+        BatchOptions {
+            batch_window: Duration::ZERO,
+            lanes: vec![LaneSpec::new("gold", 3, 16), LaneSpec::new("off", 1, 0)],
+            ..BatchOptions::default()
+        },
+    );
+    let g = small_graph();
+    let served = sched
+        .deploy_in_lane("gold-req", g.clone(), cfg("cluster-only", Strategy::Ftl), Some("gold"), None)
+        .unwrap();
+    assert!(matches!(served, BatchOutcome::Served(_)));
+    let shed = sched
+        .deploy_in_lane("off-req", g.clone(), cfg("cluster-only", Strategy::Ftl), Some("off"), None)
+        .unwrap();
+    assert!(matches!(shed, BatchOutcome::Shed));
+    let late = sched
+        .deploy_in_lane("late", g.clone(), cfg("siracusa", Strategy::Ftl), None, Some(Duration::ZERO))
+        .unwrap();
+    assert!(matches!(late, BatchOutcome::TimedOut));
+    let cold_default = sched.deploy("default-req", g, cfg("siracusa", Strategy::Ftl)).unwrap();
+    assert!(matches!(cold_default, BatchOutcome::Served(_)));
+
+    let stats = sched.stats();
+    assert_eq!(stats.lanes.iter().map(|l| l.batches).sum::<u64>(), stats.batches);
+    assert_eq!(stats.lanes.iter().map(|l| l.batched_requests).sum::<u64>(), stats.batched_requests);
+    assert_eq!(stats.lanes.iter().map(|l| l.shed).sum::<u64>(), stats.shed);
+    assert_eq!(stats.lanes.iter().map(|l| l.timeouts).sum::<u64>(), stats.timeouts);
+    assert_eq!(stats.lanes.iter().map(|l| l.queue_depth).sum::<usize>(), stats.queue_depth);
+    assert_eq!(stats.lanes.iter().map(|l| l.capacity).sum::<usize>(), stats.queue_capacity);
+    assert_eq!(stats.lanes.iter().map(|l| l.max_batch_size).max().unwrap(), stats.max_batch_size);
+    // And the JSON snapshot exposes the same split under batch.lanes.*.
+    let j = sched.stats_json();
+    let lanes_json = j.get("batch").unwrap().get("lanes").unwrap();
+    assert_eq!(lanes_json.get("off").unwrap().get("shed").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(lanes_json.get("gold").unwrap().get("shed").unwrap().as_usize().unwrap(), 0);
+    let global_shed = j.get("batch").unwrap().get("shed").unwrap().as_usize().unwrap();
+    assert_eq!(global_shed, 1);
+
+    // Specific satellite claim: one aggressive tenant's sheds are
+    // distinguishable from its victims' counters.
+    let gold = stats.lanes.iter().find(|l| l.name == "gold").unwrap();
+    let off = stats.lanes.iter().find(|l| l.name == "off").unwrap();
+    assert_eq!((gold.shed, off.shed), (0, 1));
+    assert!(gold.cold_work >= 2 && off.cold_work == 0);
+}
