@@ -7,11 +7,15 @@
 //! ```text
 //! DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>]
 //!                                         e.g. DEPLOY vit-base-stage siracusa ftl 500 lane=gold
-//! STATS                                   plan-cache / single-flight / per-lane counters
+//! STATS                                   plan-cache / single-flight / per-lane / latency counters
+//! METRICS                                 Prometheus-style text exposition
+//! TRACE [n]                               newest n spans from the trace journal (JSON lines)
+//! SLOW [n]                                newest n slowlog spans (JSON lines)
 //! PING
 //! ```
 //!
-//! and the response is one JSON line. Requests are handled by a thread
+//! and the response is one JSON line (`METRICS`/`TRACE`/`SLOW` are
+//! multi-line). Requests are handled by a thread
 //! per connection, but the heavy lifting is shared: every DEPLOY goes
 //! through the [`BatchScheduler`] (admission control + SoC-grouped
 //! batching) into the [`PlanService`], so structurally identical
@@ -34,15 +38,22 @@
 //! with zero solves and zero simulator runs — then run a two-lane 3:1
 //! priority-lane saturation wave (weighted fair queuing must hand the
 //! heavy tenant ~3/4 of the early cold work; greppable
-//! `lane_wave early gold=…/… quanta` shares) — and exit.
+//! `lane_wave early gold=…/… quanta` shares) — then a tracing wave
+//! against a dedicated low-slowlog server, asserting every reply's
+//! trace id is journalled with monotone stage offsets and the
+//! deliberately slow cold deploy through the weight-1 lane lands in
+//! `SLOW` — and exit.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use ftl::serve::{handle_line, BatchOptions, BatchScheduler, PersistOptions, PlanService, ServeOptions, Snapshotter};
+use ftl::serve::{
+    handle_command, handle_line, BatchOptions, BatchScheduler, LaneSpec, PersistOptions, PlanService,
+    ServeOptions, Snapshotter, TraceOptions,
+};
 use ftl::util::json::Json;
 
 fn client(conn: TcpStream, scheduler: Arc<BatchScheduler>) {
@@ -54,9 +65,11 @@ fn client(conn: TcpStream, scheduler: Arc<BatchScheduler>) {
         if line.trim().is_empty() {
             continue;
         }
-        // Protocol handling lives in ftl::serve::handle_line, shared with
-        // the `ftl serve` subcommand.
-        let response = handle_line(&scheduler, line.trim());
+        // Protocol handling lives in ftl::serve::handle_command, shared
+        // with the `ftl serve` subcommand. Multi-line responses
+        // (METRICS/TRACE/SLOW) come back newline-trimmed, so one
+        // writeln! terminates every response uniformly.
+        let response = handle_command(&scheduler, line.trim());
         if writeln!(writer, "{response}").is_err() {
             break;
         }
@@ -75,6 +88,24 @@ fn request(addr: std::net::SocketAddr, req: &str) -> Result<Json> {
         bail!("request '{req}' failed: {}", err.as_str().unwrap_or("?"));
     }
     Ok(v)
+}
+
+/// Fire one request whose response spans multiple lines
+/// (METRICS/TRACE/SLOW): close the write half so the server's line loop
+/// ends, then read to EOF.
+fn request_lines(addr: std::net::SocketAddr, req: &str) -> Result<Vec<String>> {
+    let mut conn = TcpStream::connect(addr)?;
+    writeln!(conn, "{req}")?;
+    conn.shutdown(Shutdown::Write)?;
+    let mut lines = Vec::new();
+    for line in BufReader::new(conn).lines() {
+        let line = line?;
+        if !line.is_empty() {
+            lines.push(line);
+        }
+    }
+    ensure!(!lines.is_empty(), "request '{req}' got no response");
+    Ok(lines)
 }
 
 fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>, cache_dir: Option<String>) -> Result<()> {
@@ -206,6 +237,10 @@ fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>, cache_dir: O
     // scheduler — the waves above exercised the default single lane).
     lane_wave()?;
 
+    // Wave 5: end-to-end tracing over the wire (its own server with a
+    // deliberately low slowlog threshold).
+    trace_wave()?;
+
     println!("[server] stats: {}", scheduler.stats_json());
     println!(
         "[server] served {} plan requests with {} solves / {} sims; self-test OK",
@@ -248,6 +283,90 @@ fn lane_wave() -> Result<()> {
     Ok(())
 }
 
+/// Wave 5: end-to-end tracing over the wire. A dedicated two-lane
+/// server with a 1 ms slowlog threshold serves a mix of cold and warm
+/// deploys; every reply's `"trace"` id must be found in the `TRACE`
+/// journal with monotone stage offsets, the deliberately slow request —
+/// a cold full-size solve routed through the weight-1 "slow" lane —
+/// must cross the threshold and surface in `SLOW`, and `METRICS` must
+/// satisfy the strict exposition parser.
+fn trace_wave() -> Result<()> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let local = listener.local_addr()?;
+    let service = Arc::new(PlanService::new(ServeOptions::default()));
+    let scheduler = Arc::new(BatchScheduler::new(
+        service,
+        BatchOptions {
+            lanes: vec![LaneSpec::new("gold", 3, 64), LaneSpec::new("slow", 1, 64)],
+            trace: TraceOptions { slowlog_ms: 1, ..TraceOptions::default() },
+            ..BatchOptions::default()
+        },
+    ));
+    let accept = scheduler.clone();
+    std::thread::spawn(move || {
+        for conn in listener.incoming().flatten() {
+            let scheduler = accept.clone();
+            std::thread::spawn(move || client(conn, scheduler));
+        }
+    });
+
+    // Cold then warm through gold; the repeat takes the cache fast path.
+    let mut ids = Vec::new();
+    for _ in 0..2 {
+        let v = request(local, "DEPLOY vit-tiny-stage cluster-only ftl lane=gold")?;
+        ids.push(v.get("trace")?.as_u64()?);
+    }
+    // The deliberately slow request: a cold full-size branch-&-bound
+    // solve through the weight-1 lane, far past the 1 ms threshold.
+    let slow_id = request(local, "DEPLOY vit-base-stage siracusa ftl lane=slow")?.get("trace")?.as_u64()?;
+    ids.push(slow_id);
+
+    let dump = request_lines(local, "TRACE 64")?;
+    let header = ftl::util::json::parse(&dump[0])?;
+    ensure!(header.get("spans")?.as_usize()? >= ids.len(), "TRACE must journal every request");
+    let mut seen = Vec::new();
+    for line in &dump[1..] {
+        let span = ftl::util::json::parse(line)?;
+        let id = span.get("id")?.as_u64()?;
+        seen.push(id);
+        let mut prev = 0u64;
+        for key in ["queued_us", "picked_us", "solved_us", "simmed_us", "total_us"] {
+            if let Some(v) = span.get_opt(key) {
+                let v = v.as_u64()?;
+                ensure!(v >= prev, "span {id} stages must be monotone ({key}={v} < {prev})");
+                prev = v;
+            }
+        }
+        if id == slow_id {
+            ensure!(span.get("lane")?.as_str()? == "slow", "slow deploy must be attributed to its lane");
+            ensure!(!span.get("warm")?.as_bool()?, "the slow deploy was cold");
+        }
+    }
+    for id in &ids {
+        ensure!(seen.contains(id), "reply trace id {id} missing from the TRACE journal");
+    }
+
+    let slow_dump = request_lines(local, "SLOW 64")?;
+    let slow_ids: Vec<u64> = slow_dump[1..]
+        .iter()
+        .map(|l| -> Result<u64> { Ok(ftl::util::json::parse(l)?.get("id")?.as_u64()?) })
+        .collect::<Result<_>>()?;
+    ensure!(slow_ids.contains(&slow_id), "the slow cold deploy must land in SLOW (got ids {slow_ids:?})");
+
+    let metrics = request_lines(local, "METRICS")?;
+    let samples = ftl::metrics::expo::parse(&metrics.join("\n"))?;
+    ensure!(
+        samples.iter().any(|s| s.name == "ftl_latency_us_count"),
+        "METRICS must expose per-lane latency histograms"
+    );
+    println!(
+        "[server] trace_wave: {} spans journalled, slow id {slow_id} in SLOW, {} metric samples",
+        seen.len(),
+        samples.len()
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().collect();
     let self_test_mode = argv.iter().any(|a| a == "--self-test");
@@ -265,7 +384,8 @@ fn main() -> Result<()> {
     };
     let scheduler = Arc::new(BatchScheduler::new(service, BatchOptions::default()));
     println!(
-        "[server] listening on {} (protocol: DEPLOY <workload> <soc> <strategy> [deadline-ms] | STATS | PING)",
+        "[server] listening on {} (protocol: DEPLOY <workload> <soc> <strategy> [deadline-ms] \
+         [lane=<name>] | STATS | METRICS | TRACE [n] | SLOW [n] | PING)",
         listener.local_addr()?
     );
 

@@ -1,0 +1,128 @@
+//! Bench: tracing overhead on the warm serve path.
+//!
+//! Paired comparison: the same warm DEPLOY (both caches hot, zero batch
+//! window) through two schedulers — one tracing at the defaults (span
+//! journal + per-lane latency histograms), one built with
+//! `TraceOptions::disabled()` (no tracer allocated at all). Samples
+//! alternate between the two, flipping order every pair, so clock drift
+//! and allocator state can't systematically favour either side.
+//!
+//! Asserts the contract from the serve layer's docs: tracing costs less
+//! than 5% on the warm-path p50 (plus a small absolute jitter floor),
+//! and writes the measured numbers to `BENCH_serve_latency.json`.
+//!
+//! `FTL_BENCH_SMOKE=1` shrinks the workload and sample counts so CI can
+//! execute the harness end-to-end.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::experiments;
+use ftl::ir::Graph;
+use ftl::serve::{
+    AdmissionPolicy, BatchOptions, BatchScheduler, PlanService, ServeOptions, TraceOptions,
+};
+use ftl::tiling::Strategy;
+use ftl::util::json::Json;
+
+fn smoke() -> bool {
+    std::env::var("FTL_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn median(samples: &mut [Duration]) -> Duration {
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
+/// A single-lane scheduler over its own service, pre-warmed so every
+/// bench deploy takes the warm fast path (both caches hit).
+fn warm_scheduler(graph: &Graph, cfg: &DeployConfig, trace: TraceOptions) -> BatchScheduler {
+    let opts = ServeOptions { cache_capacity: 32, cache_shards: 4, workers: 1, ..ServeOptions::default() };
+    let sched = BatchScheduler::new(
+        Arc::new(PlanService::new(opts)),
+        BatchOptions {
+            queue_capacity: 64,
+            batch_window: Duration::ZERO,
+            max_batch: 64,
+            policy: AdmissionPolicy::Block,
+            trace,
+            ..BatchOptions::default()
+        },
+    );
+    let outcome = sched.deploy("warmup", graph.clone(), cfg.clone()).unwrap();
+    assert!(outcome.served().is_some(), "warmup request must be served");
+    sched
+}
+
+fn main() {
+    let smoke = smoke();
+    let graph: Graph = if smoke {
+        experiments::vit_mlp_stage(64, 96, 192)
+    } else {
+        experiments::vit_mlp_stage(197, 768, 3072)
+    };
+    let cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+    let pairs = if smoke { 60 } else { 400 };
+
+    println!("=== serve layer: warm-path tracing overhead ===\n");
+
+    let traced = warm_scheduler(&graph, &cfg, TraceOptions::default());
+    let baseline = warm_scheduler(&graph, &cfg, TraceOptions::disabled());
+    assert!(traced.tracer().is_some(), "default options must trace");
+    assert!(baseline.tracer().is_none(), "disabled() must drop the tracer entirely");
+
+    let deploy = |sched: &BatchScheduler| {
+        let t = Instant::now();
+        let outcome = sched.deploy("warm", graph.clone(), cfg.clone()).unwrap();
+        let elapsed = t.elapsed();
+        let reply = outcome.served().expect("warm request must be served");
+        assert!(reply.cached && reply.sim_cached, "bench path must stay fully warm");
+        elapsed
+    };
+
+    let (mut with, mut without) = (Vec::with_capacity(pairs), Vec::with_capacity(pairs));
+    for i in 0..pairs {
+        if i % 2 == 0 {
+            with.push(deploy(&traced));
+            without.push(deploy(&baseline));
+        } else {
+            without.push(deploy(&baseline));
+            with.push(deploy(&traced));
+        }
+    }
+    let traced_p50 = median(&mut with);
+    let baseline_p50 = median(&mut without);
+    let overhead_pct =
+        (traced_p50.as_nanos() as f64 / baseline_p50.as_nanos().max(1) as f64 - 1.0) * 100.0;
+    println!("warm deploy p50: traced {traced_p50:?} vs untraced {baseline_p50:?} ({overhead_pct:+.2}%)");
+
+    // Cross-check against the tracer's own accounting: every traced
+    // deploy must have landed a span, and the warm histogram's p50 is
+    // the same quantity we just measured (within bucket resolution).
+    let tracer = traced.tracer().unwrap();
+    let hist_p50_us = tracer.warm_hist(0).quantile(0.5);
+    println!("tracer warm-histogram p50: {hist_p50_us} µs over {} spans", tracer.overall().count());
+    assert!(tracer.overall().count() as usize >= pairs, "every traced deploy must record a span");
+
+    // The contract: < 5% overhead on the warm p50. The absolute floor
+    // keeps ns-scale scheduler jitter from flaking short smoke runs.
+    let budget = Duration::from_nanos((baseline_p50.as_nanos() as f64 * 1.05) as u64)
+        + Duration::from_micros(25);
+    assert!(
+        traced_p50 <= budget,
+        "tracing overhead too high: traced p50 {traced_p50:?} vs budget {budget:?} (untraced {baseline_p50:?})"
+    );
+
+    let out = Json::obj(vec![
+        ("name", Json::str("serve_latency")),
+        ("samples_per_path", Json::Num(pairs as f64)),
+        ("baseline_warm_p50_ns", Json::Num(baseline_p50.as_nanos() as f64)),
+        ("traced_warm_p50_ns", Json::Num(traced_p50.as_nanos() as f64)),
+        ("overhead_pct", Json::Num(overhead_pct)),
+        ("tracer_hist_warm_p50_us", Json::Num(hist_p50_us as f64)),
+        ("tracer_spans", Json::Num(tracer.overall().count() as f64)),
+    ]);
+    std::fs::write("BENCH_serve_latency.json", format!("{}\n", out.pretty())).unwrap();
+    println!("wrote BENCH_serve_latency.json");
+}

@@ -5,7 +5,10 @@
 //! ftl serve      [--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64] [--sim-cache-cap 256]
 //!                [--queue-cap 256] [--batch-window-ms 2] [--max-batch 64] [--shed]
 //!                [--lane name:weight:cap[:shed|:block]]...  (repeatable priority lanes, WFQ-scheduled)
-//!                [--cache-dir DIR] [--snapshot-interval-ms 1000] [--cache-max-entries 0] [--self-test]
+//!                [--cache-dir DIR] [--snapshot-interval-ms 1000] [--cache-max-entries 0]
+//!                [--trace-cap 512] [--slowlog-ms 250] [--self-test]
+//!                (line protocol: DEPLOY | STATS | PING | METRICS | TRACE [n] | SLOW [n] — every
+//!                request is traced end to end; `--trace-cap 0` disables tracing entirely)
 //!
 //! Every command also takes `--solver-threads N` (or the
 //! `FTL_SOLVER_THREADS` env var): the branch-and-bound tiling solver's
@@ -36,8 +39,9 @@ use ftl::ir::builder::{attention_head, deep_mlp, vit_mlp_block, vit_mlp_preset};
 use ftl::ir::{graph_from_json, graph_to_json, DType, Graph};
 use ftl::runtime::{KernelBackend, NativeBackend, PjrtBackend};
 use ftl::serve::{
-    checksum, handle_line, normalize_specs, resolve_workload, AdmissionPolicy, BatchOptions, BatchScheduler,
-    LaneSpec, PersistOptions, PlanService, ServeOptions, Snapshotter,
+    checksum, handle_command, handle_line, normalize_specs, resolve_workload, AdmissionPolicy,
+    BatchOptions, BatchScheduler, LaneSpec, PersistOptions, PlanService, ServeOptions, Snapshotter,
+    TraceOptions,
 };
 use ftl::tiling::Strategy;
 use ftl::util::json::Json;
@@ -178,10 +182,13 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// the default lane); `--cache-dir` persists the plan + sim caches across restarts
 /// (write-behind every `--snapshot-interval-ms`, warm start on boot,
 /// `--cache-max-entries` caps the directory via an mtime-LRU sweep);
+/// `--trace-cap`/`--slowlog-ms` size the per-request trace journal and
+/// slowlog (`--trace-cap 0` disables tracing; `METRICS`, `TRACE [n]` and
+/// `SLOW [n]` expose the results over the protocol);
 /// `--self-test` exercises the full service in process (cache hits,
 /// single-flight coalescing, warm-vs-cold speedup, batch fan-out,
-/// shedding, deadlines — or, with `--cache-dir`, the snapshot/warm-start
-/// path) and exits.
+/// shedding, deadlines, latency-histogram invariants — or, with
+/// `--cache-dir`, the snapshot/warm-start path) and exits.
 fn cmd_serve(args: &Args) -> Result<()> {
     let opts = ServeOptions {
         cache_capacity: args.get_usize("cache-cap", 64)?,
@@ -198,12 +205,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         lane_specs.push(LaneSpec::parse(spec)?);
     }
     let lane_specs = normalize_specs(lane_specs, queue_cap)?;
+    // --trace-cap 0 removes the tracer entirely (the zero-overhead
+    // baseline); any other value sizes the TRACE span journal.
+    let trace_cap = args.get_usize("trace-cap", 512)?;
+    let trace = TraceOptions {
+        enabled: trace_cap > 0,
+        journal_cap: trace_cap.max(1),
+        slowlog_ms: args.get_usize("slowlog-ms", 250)? as u64,
+        ..TraceOptions::default()
+    };
     let batch_opts = BatchOptions {
         queue_capacity: queue_cap,
         batch_window: std::time::Duration::from_millis(args.get_usize("batch-window-ms", 2)? as u64),
         max_batch: args.get_usize("max-batch", 64)?,
         policy: if args.has("shed") { AdmissionPolicy::Shed } else { AdmissionPolicy::Block },
         lanes: lane_specs,
+        trace,
     };
     let cache_dir = args.get_opt("cache-dir").map(str::to_string);
     let persist_opts = PersistOptions {
@@ -237,7 +254,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     println!(
         "[ftl-serve] listening on {addr} \
-         (DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>] | STATS | PING)"
+         (DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>] | STATS | METRICS \
+         | TRACE [n] | SLOW [n] | PING)"
     );
     for conn in listener.incoming().flatten() {
         let scheduler = scheduler.clone();
@@ -256,9 +274,11 @@ fn serve_connection(conn: TcpStream, scheduler: &BatchScheduler) {
         if line.is_empty() {
             continue;
         }
-        // Protocol handling lives in ftl::serve::handle_line, shared with
-        // examples/deploy_server.rs.
-        let response = handle_line(scheduler, line);
+        // Protocol handling lives in ftl::serve::handle_command, shared
+        // with examples/deploy_server.rs. METRICS/TRACE/SLOW responses
+        // span multiple lines; each is already newline-free at the end,
+        // so one writeln! terminates every response uniformly.
+        let response = handle_command(scheduler, line);
         if writeln!(writer, "{response}").is_err() {
             break;
         }
@@ -353,6 +373,7 @@ fn serve_self_test(opts: ServeOptions, batch_opts: BatchOptions) -> Result<()> {
         batch_window: batch_opts.batch_window.max(std::time::Duration::from_millis(50)),
         policy: batch_opts.policy,
         lanes: Vec::new(),
+        trace: TraceOptions::default(),
     };
     let scheduler = BatchScheduler::new(burst_service.clone(), burst_opts.clone());
     let mix = [
@@ -472,6 +493,74 @@ fn serve_self_test(opts: ServeOptions, batch_opts: BatchOptions) -> Result<()> {
         "batch.* totals must equal the per-lane sums"
     );
     println!("{}", lane_stats.lanes_table());
+
+    // 11. Observability: a seeded mixed-lane wave over a traced
+    // scheduler, then the tracing invariants — the merge of the per-lane
+    // warm/cold histograms must equal the independently recorded
+    // scheduler-wide histogram bucket-for-bucket, METRICS must
+    // round-trip the strict exposition parser, and TRACE/SLOW must dump
+    // parseable JSON lines with monotone stage offsets.
+    let traced = ftl::serve::wave::mixed_lane_wave(7, 24)?;
+    let tracer = traced.tracer().ok_or_else(|| anyhow!("tracing must be on by default"))?;
+    ensure!(
+        tracer.merged_lanes().snapshot() == tracer.overall().snapshot(),
+        "per-lane latency histograms must merge to the scheduler-wide histogram"
+    );
+    ensure!(tracer.overall().count() == 25, "every served wave request must record a latency sample");
+    let (warm_hist, cold_hist) = (ftl::metrics::Histogram::new(), ftl::metrics::Histogram::new());
+    // Three lanes: the wave's gold/free plus the always-present default.
+    for i in 0..traced.stats().lanes.len() {
+        warm_hist.merge(tracer.warm_hist(i));
+        cold_hist.merge(tracer.cold_hist(i));
+    }
+    println!(
+        "[ftl-serve] latency warm_p50={}us warm_p99={}us cold_p50={}us cold_p99={}us queue_p50={}us n={}",
+        warm_hist.quantile(0.5),
+        warm_hist.quantile(0.99),
+        cold_hist.quantile(0.5),
+        cold_hist.quantile(0.99),
+        tracer.queue_hist().quantile(0.5),
+        tracer.overall().count()
+    );
+    let metrics = traced.metrics_text();
+    let samples = ftl::metrics::expo::parse(&metrics)
+        .map_err(|e| e.context("METRICS must round-trip the exposition parser"))?;
+    ensure!(
+        samples.iter().any(|s| s.name == "ftl_latency_us_count"),
+        "METRICS must expose per-lane latency histograms"
+    );
+    println!("[ftl-serve] metrics lines={}", samples.len());
+    for cmd in ["TRACE 8", "SLOW"] {
+        let dump = handle_command(&traced, cmd);
+        let mut lines = dump.lines();
+        let header = ftl::util::json::parse(lines.next().ok_or_else(|| anyhow!("{cmd}: empty dump"))?)?;
+        let spans = header.get("spans")?.as_usize()?;
+        if cmd.starts_with("TRACE") {
+            ensure!(spans >= 1, "TRACE must hold spans after the wave");
+        }
+        for line in lines {
+            let span = ftl::util::json::parse(line)?;
+            let mut prev = 0u64;
+            for key in ["queued_us", "picked_us", "solved_us", "simmed_us", "total_us"] {
+                if let Some(v) = span.get_opt(key) {
+                    let v = v.as_u64()?;
+                    ensure!(v >= prev, "{cmd}: span stages must be monotone ({key}={v} < {prev})");
+                    prev = v;
+                }
+            }
+        }
+    }
+    let bench = Json::obj(vec![
+        ("name", Json::str("serve_latency_selftest")),
+        ("requests", Json::Num(tracer.overall().count() as f64)),
+        ("warm_p50_us", Json::Num(warm_hist.quantile(0.5) as f64)),
+        ("warm_p99_us", Json::Num(warm_hist.quantile(0.99) as f64)),
+        ("cold_p50_us", Json::Num(cold_hist.quantile(0.5) as f64)),
+        ("cold_p99_us", Json::Num(cold_hist.quantile(0.99) as f64)),
+        ("queue_p50_us", Json::Num(tracer.queue_hist().quantile(0.5) as f64)),
+    ]);
+    std::fs::write("BENCH_serve_latency.json", format!("{}\n", bench.pretty()))?;
+    println!("[ftl-serve] wrote BENCH_serve_latency.json");
 
     let stats = service.stats();
     println!("{}", stats.cache.table());
@@ -696,11 +785,12 @@ USAGE: ftl <command> [flags]
 COMMANDS:
   deploy       plan + simulate one deployment     (--workload --soc --strategy [--double-buffer] [--json])
   serve        batch-aware deployment service     ([--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64]
-               (DEPLOY/STATS/PING line protocol)   [--sim-cache-cap 256] [--cache-shards 8] [--queue-cap 256]
-                                                   [--batch-window-ms 2] [--max-batch 64] [--shed]
+               (DEPLOY/STATS/PING plus METRICS/    [--sim-cache-cap 256] [--cache-shards 8] [--queue-cap 256]
+               TRACE [n]/SLOW [n] line protocol)   [--batch-window-ms 2] [--max-batch 64] [--shed]
                                                    [--lane name:weight:cap[:shed|:block]]... (WFQ lanes)
                                                    [--cache-dir DIR] [--snapshot-interval-ms 1000]
-                                                   [--cache-max-entries 0] [--self-test])
+                                                   [--cache-max-entries 0] [--trace-cap 512] (0 = tracing off)
+                                                   [--slowlog-ms 250] [--self-test])
   fig3         reproduce the paper's Fig. 3       ([--seq --dim --hidden] [--double-buffer] [--json])
   dma          reproduce the -47.1% DMA metric    ([--soc])
   sweep        hidden-dim sweep (Ext-A)           ([--soc])

@@ -1,0 +1,145 @@
+//! Saturating cumulative counters.
+//!
+//! Every long-lived counter in the serving stack (cache hits, lane sheds,
+//! solver node counts, …) is monotone and only ever *reported*, never used
+//! for arithmetic that must round-trip. A bare `fetch_add` wraps on
+//! overflow (and `+=` panics in debug builds), which for a replica that
+//! runs for months means a counter can silently lap `u64::MAX` and report
+//! garbage. [`Counter`] pins such counters at `u64::MAX` instead: once
+//! saturated they stay saturated, which a scraper can at least recognise.
+//!
+//! The hot path stays a single `fetch_add`; saturation is detected from
+//! the returned previous value and repaired with a plain store, so there
+//! is no CAS loop to contend on. A concurrent reader may observe one
+//! wrapped intermediate value in the instant between the wrap and the
+//! repair — acceptable for telemetry, and the counter converges to
+//! `u64::MAX` immediately after.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotone, saturating `u64` counter for telemetry.
+///
+/// Like `AtomicU64` but `add` saturates at `u64::MAX` instead of
+/// wrapping. All operations use relaxed ordering: counters are
+/// independent statistics, not synchronisation edges.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// New counter starting at `value`.
+    pub const fn new(value: u64) -> Self {
+        Self(AtomicU64::new(value))
+    }
+
+    /// Add `n`, saturating at `u64::MAX`.
+    pub fn add(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let prev = self.0.fetch_add(n, Ordering::Relaxed);
+        if prev > u64::MAX - n {
+            // The fetch_add wrapped; pin at the ceiling. Concurrent adds
+            // racing here all store the same value, so the repair is
+            // idempotent.
+            self.0.store(u64::MAX, Ordering::Relaxed);
+        }
+    }
+
+    /// Add one, saturating.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Raise the stored value to at least `v` (for high-water marks).
+    pub fn fetch_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite the value (for counters restored from a snapshot).
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+}
+
+impl From<u64> for Counter {
+    fn from(v: u64) -> Self {
+        Self::new(v)
+    }
+}
+
+impl Clone for Counter {
+    fn clone(&self) -> Self {
+        Self::new(self.get())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_and_inc_accumulate() {
+        let c = Counter::new(0);
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+    }
+
+    #[test]
+    fn add_saturates_at_max() {
+        let c = Counter::new(u64::MAX - 1);
+        c.add(5);
+        assert_eq!(c.get(), u64::MAX, "overflowing add must pin at u64::MAX");
+        c.inc();
+        assert_eq!(c.get(), u64::MAX, "saturated counter must stay saturated");
+        c.add(u64::MAX);
+        assert_eq!(c.get(), u64::MAX);
+    }
+
+    #[test]
+    fn exact_boundary_is_not_saturation() {
+        let c = Counter::new(u64::MAX - 5);
+        c.add(5); // lands exactly on MAX without wrapping
+        assert_eq!(c.get(), u64::MAX);
+    }
+
+    #[test]
+    fn zero_add_is_a_noop() {
+        let c = Counter::new(7);
+        c.add(0);
+        assert_eq!(c.get(), 7);
+    }
+
+    #[test]
+    fn fetch_max_keeps_high_water_mark() {
+        let c = Counter::new(3);
+        c.fetch_max(10);
+        c.fetch_max(4);
+        assert_eq!(c.get(), 10);
+    }
+
+    #[test]
+    fn saturates_under_concurrent_adds() {
+        use std::sync::Arc;
+        let c = Arc::new(Counter::new(u64::MAX - 64));
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..64 {
+                        c.add(3);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), u64::MAX);
+    }
+}

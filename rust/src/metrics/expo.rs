@@ -1,0 +1,295 @@
+//! Prometheus-style text exposition for counters and histograms.
+//!
+//! The `METRICS` protocol command renders every cumulative counter and
+//! latency histogram as one sample per line:
+//!
+//! ```text
+//! ftl_batch_lanes_default_served 42
+//! ftl_latency_us{lane="default",temp="warm",quantile="0.5"} 13
+//! # EOF
+//! ```
+//!
+//! The grammar is the useful subset of the Prometheus text format —
+//! `name{label="value",…} value` with `#` comment lines — terminated by
+//! a `# EOF` marker (OpenMetrics-style) so a line-oriented client knows
+//! when the multi-line response ends. [`parse`] is the matching strict
+//! reader; the serve self-test and CI round-trip every exposition
+//! through it so the format cannot silently drift.
+//!
+//! Counters come out of the nested `stats_json` tree by flattening
+//! object paths with `_` ([`flatten`]); histograms are emitted with
+//! proper labels ([`hist_samples`]) rather than path-mangled names.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+use super::hist::Histogram;
+
+/// One exposition sample: `name{labels} value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    /// Metric name (already sanitised).
+    pub name: String,
+    /// Label pairs, possibly empty.
+    pub labels: Vec<(String, String)>,
+    /// Sample value.
+    pub value: f64,
+}
+
+impl Sample {
+    /// Unlabelled sample.
+    pub fn new(name: impl Into<String>, value: f64) -> Self {
+        Self { name: sanitize(&name.into()), labels: Vec::new(), value }
+    }
+
+    /// Labelled sample.
+    pub fn labelled(name: &str, labels: &[(&str, &str)], value: f64) -> Self {
+        Self {
+            name: sanitize(name),
+            labels: labels.iter().map(|&(k, v)| (sanitize(k), v.to_string())).collect(),
+            value: value_or_zero(value),
+        }
+    }
+
+    /// Render as one exposition line.
+    pub fn line(&self) -> String {
+        let mut s = self.name.clone();
+        if !self.labels.is_empty() {
+            s.push('{');
+            for (i, (k, v)) in self.labels.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                s.push_str(k);
+                s.push_str("=\"");
+                s.push_str(&v.replace('\\', "\\\\").replace('"', "\\\""));
+                s.push('"');
+            }
+            s.push('}');
+        }
+        s.push(' ');
+        if self.value.fract() == 0.0 && self.value.abs() < 2f64.powi(53) {
+            s.push_str(&format!("{}", self.value as i64));
+        } else {
+            s.push_str(&format!("{}", self.value));
+        }
+        s
+    }
+}
+
+fn value_or_zero(v: f64) -> f64 {
+    if v.is_finite() { v } else { 0.0 }
+}
+
+/// Clamp a name to the exposition charset `[a-zA-Z0-9_:]` (leading
+/// digits get a `_` prefix; every other invalid char becomes `_`).
+pub fn sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit());
+        if i == 0 && c.is_ascii_digit() {
+            out.push('_');
+            out.push(c);
+        } else if ok {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Flatten the numeric and boolean leaves of a JSON tree into samples,
+/// joining object paths with `_` under `prefix`. Arrays, strings and
+/// nulls are skipped (they are not scrapeable scalars); so is any
+/// object key listed in `skip_keys` — the caller uses that to keep
+/// histogram subtrees out of the flat namespace and emit them labelled
+/// via [`hist_samples`] instead.
+pub fn flatten(prefix: &str, v: &Json, skip_keys: &[&str]) -> Vec<Sample> {
+    let mut out = Vec::new();
+    flatten_into(prefix, v, skip_keys, &mut out);
+    out
+}
+
+fn flatten_into(path: &str, v: &Json, skip_keys: &[&str], out: &mut Vec<Sample>) {
+    match v {
+        Json::Num(n) => out.push(Sample { name: sanitize(path), labels: Vec::new(), value: value_or_zero(*n) }),
+        Json::Bool(b) => out.push(Sample { name: sanitize(path), labels: Vec::new(), value: f64::from(*b) }),
+        Json::Obj(m) => {
+            for (k, child) in m {
+                if skip_keys.contains(&k.as_str()) {
+                    continue;
+                }
+                flatten_into(&format!("{path}_{k}"), child, skip_keys, out);
+            }
+        }
+        Json::Null | Json::Str(_) | Json::Arr(_) => {}
+    }
+}
+
+/// Samples for one histogram: `<name>_count`, `<name>_sum`, `<name>_min`,
+/// `<name>_max` plus `quantile`-labelled p50/p90/p99 lines, all carrying
+/// `labels`.
+pub fn hist_samples(name: &str, labels: &[(&str, &str)], h: &Histogram) -> Vec<Sample> {
+    let with = |extra: Option<(&str, &str)>, suffix: &str, value: f64| {
+        let mut all: Vec<(&str, &str)> = labels.to_vec();
+        if let Some(kv) = extra {
+            all.push(kv);
+        }
+        Sample::labelled(&format!("{name}{suffix}"), &all, value)
+    };
+    vec![
+        with(None, "_count", h.count() as f64),
+        with(None, "_sum", h.sum() as f64),
+        with(None, "_min", h.min() as f64),
+        with(None, "_max", h.max() as f64),
+        with(Some(("quantile", "0.5")), "", h.quantile(0.50) as f64),
+        with(Some(("quantile", "0.9")), "", h.quantile(0.90) as f64),
+        with(Some(("quantile", "0.99")), "", h.quantile(0.99) as f64),
+    ]
+}
+
+/// Render samples as exposition text, terminated by `# EOF`.
+pub fn render(samples: &[Sample]) -> String {
+    let mut s = String::new();
+    for sample in samples {
+        s.push_str(&sample.line());
+        s.push('\n');
+    }
+    s.push_str("# EOF\n");
+    s
+}
+
+/// Strict parser for the exposition format: every non-comment line must
+/// be `name{label="value",…} value`. Returns the samples, or the first
+/// offending line. This is the round-trip validator used by the serve
+/// self-test and the CI metrics smoke step.
+pub fn parse(text: &str) -> Result<Vec<Sample>> {
+    let mut samples = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        samples.push(parse_line(line).map_err(|e| e.context(format!("line {}: {raw:?}", lineno + 1)))?);
+    }
+    Ok(samples)
+}
+
+fn parse_line(line: &str) -> Result<Sample> {
+    let name_end = line
+        .char_indices()
+        .find(|&(i, c)| {
+            !(c.is_ascii_alphanumeric() || c == '_' || c == ':') || (i == 0 && c.is_ascii_digit())
+        })
+        .map(|(i, _)| i)
+        .unwrap_or(line.len());
+    if name_end == 0 {
+        bail!("metric name must start with [a-zA-Z_:]");
+    }
+    let name = &line[..name_end];
+    let mut rest = &line[name_end..];
+    let mut labels = Vec::new();
+    if let Some(stripped) = rest.strip_prefix('{') {
+        let close = stripped.find('}').ok_or_else(|| anyhow::anyhow!("unterminated label set"))?;
+        let body = &stripped[..close];
+        rest = &stripped[close + 1..];
+        for pair in body.split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = pair.split_once('=').ok_or_else(|| anyhow::anyhow!("label without '='"))?;
+            let v = v
+                .strip_prefix('"')
+                .and_then(|v| v.strip_suffix('"'))
+                .ok_or_else(|| anyhow::anyhow!("label value must be quoted"))?;
+            if k.is_empty() || !k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                bail!("bad label name {k:?}");
+            }
+            labels.push((k.to_string(), v.replace("\\\"", "\"").replace("\\\\", "\\")));
+        }
+    }
+    let value_text = rest.trim();
+    if value_text.is_empty() {
+        bail!("missing sample value");
+    }
+    let value: f64 = value_text.parse().map_err(|_| anyhow::anyhow!("bad sample value {value_text:?}"))?;
+    Ok(Sample { name: name.to_string(), labels, value })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sanitize_clamps_charset() {
+        assert_eq!(sanitize("batch.lanes-default"), "batch_lanes_default");
+        assert_eq!(sanitize("9lives"), "_9lives");
+        assert_eq!(sanitize("ok_name:x9"), "ok_name:x9");
+        assert_eq!(sanitize(""), "_");
+    }
+
+    #[test]
+    fn flatten_walks_objects_and_skips_non_scalars() {
+        let v = crate::util::json::parse(
+            r#"{"cache":{"hits":3,"tags":["a"]},"name":"x","deep":{"latency":{"p50":9},"ok":true}}"#,
+        )
+        .unwrap();
+        let samples = flatten("ftl", &v, &["latency"]);
+        let names: Vec<&str> = samples.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["ftl_cache_hits", "ftl_deep_ok"]);
+        assert_eq!(samples[0].value, 3.0);
+        assert_eq!(samples[1].value, 1.0);
+    }
+
+    #[test]
+    fn sample_line_renders_labels() {
+        let s = Sample::labelled("ftl_latency_us", &[("lane", "gold"), ("temp", "warm")], 12.0);
+        assert_eq!(s.line(), r#"ftl_latency_us{lane="gold",temp="warm"} 12"#);
+        assert_eq!(Sample::new("x", 1.5).line(), "x 1.5");
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 1000] {
+            h.record(v);
+        }
+        let mut samples = flatten(
+            "ftl",
+            &crate::util::json::parse(r#"{"batch":{"served":7}}"#).unwrap(),
+            &[],
+        );
+        samples.extend(hist_samples("ftl_latency_us", &[("lane", "default"), ("temp", "warm")], &h));
+        let text = render(&samples);
+        assert!(text.ends_with("# EOF\n"));
+        let back = parse(&text).unwrap();
+        assert_eq!(back.len(), samples.len());
+        assert_eq!(back[0].name, "ftl_batch_served");
+        assert_eq!(back[0].value, 7.0);
+        let q50 = back
+            .iter()
+            .find(|s| s.labels.iter().any(|(k, v)| k == "quantile" && v == "0.5"))
+            .expect("labelled quantile sample");
+        assert_eq!(q50.name, "ftl_latency_us");
+        assert!(q50.labels.contains(&("lane".to_string(), "default".to_string())));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(parse("ok 1\nbad{x=nope} 2").is_err());
+        assert!(parse("{\"json\": 1}").is_err());
+        assert!(parse("name_only").is_err());
+        assert!(parse("name twelve").is_err());
+        assert!(parse("name{k=\"v\" 3").is_err());
+        assert!(parse("# comment only\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_handles_escaped_label_values() {
+        let s = Sample::labelled("m", &[("k", "a\"b")], 1.0);
+        let back = parse(&s.line()).unwrap();
+        assert_eq!(back[0].labels[0].1, "a\"b");
+    }
+}

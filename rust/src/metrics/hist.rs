@@ -1,0 +1,419 @@
+//! Lock-free, log-bucketed latency histograms (HDR-style).
+//!
+//! A [`Histogram`] covers the full `u64` range (we record microseconds,
+//! but nothing assumes a unit) with a fixed 496-slot bucket table:
+//!
+//! - values `0..8` get one exact bucket each;
+//! - every power-of-two decade `[2^e, 2^(e+1))` above that is split into
+//!   `SUB = 8` equal sub-buckets.
+//!
+//! A bucket at exponent `e` spans `2^(e-3)` values starting at
+//! `(8 + sub) << (e - 3)`, so the half-width of any bucket is at most
+//! `1/16` of its lower bound and the midpoint we report is within
+//! **1/8 relative error** of any value that landed in it (see
+//! [`Histogram::MAX_RELATIVE_ERROR_DEN`]; the bound is exercised by a
+//! property test in `tests/latency.rs`).
+//!
+//! The hot path is integer-only and lock-free: `record` is one
+//! `leading_zeros` + two shifts to find the bucket, then three relaxed
+//! atomic RMWs (bucket slot, count, sum) plus `fetch_max`/`fetch_min`
+//! for the exact extremes. Cumulative fields saturate via
+//! [`Counter`](super::Counter) so a long-lived replica cannot wrap.
+//! Quantile reads walk the table without stopping writers; a snapshot
+//! taken while writers are active is a *consistent-enough* telemetry
+//! view, not a linearisable cut.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::Counter;
+
+/// Sub-bucket bits per power-of-two decade: each decade `[2^e, 2^(e+1))`
+/// splits into `2^SUB_BITS` equal buckets.
+const SUB_BITS: u32 = 3;
+/// Sub-buckets per decade.
+const SUB: u64 = 1 << SUB_BITS;
+/// Total bucket slots: indices 0..=495 cover `0..=u64::MAX`.
+const BUCKETS: usize = ((64 - SUB_BITS as usize) << SUB_BITS as usize) + SUB as usize;
+
+/// Bucket index for a value. Exact for `v < 8`; logarithmic above.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+        let shift = msb - SUB_BITS;
+        let decade = (shift + 1) as usize;
+        (decade << SUB_BITS as usize) | ((v >> shift) as usize & (SUB as usize - 1))
+    }
+}
+
+/// Inclusive lower bound and width of bucket `i` (width 1 for exact
+/// buckets). `lo + width - 1` is the inclusive upper bound.
+#[inline]
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    let sub_mask = SUB as usize - 1;
+    if i < SUB as usize {
+        (i as u64, 1)
+    } else {
+        let decade = (i >> SUB_BITS as usize) as u32; // >= 1
+        let sub = (i & sub_mask) as u64;
+        let shift = decade - 1;
+        ((SUB + sub) << shift, 1u64 << shift)
+    }
+}
+
+/// Representative value reported for bucket `i`: the bucket midpoint,
+/// which halves the worst-case error vs. reporting an edge.
+#[inline]
+fn bucket_mid(i: usize) -> u64 {
+    let (lo, width) = bucket_bounds(i);
+    lo + (width - 1) / 2
+}
+
+/// A lock-free log-bucketed histogram. See the module docs for layout
+/// and error bounds.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: Counter,
+    sum: Counter,
+    max: AtomicU64,
+    min: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Denominator of the documented worst-case relative error: the
+    /// midpoint of the bucket a value lands in differs from the value by
+    /// at most `value / 8`.
+    pub const MAX_RELATIVE_ERROR_DEN: u64 = SUB;
+
+    /// New empty histogram.
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: Counter::new(0),
+            sum: Counter::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Record one value. Integer-only, lock-free, wait-free on every
+    /// architecture with native fetch_add.
+    pub fn record(&self, v: u64) {
+        let i = bucket_index(v);
+        // Bucket slots wrap only after 2^64 samples in ONE bucket; the
+        // aggregate `count`/`sum` saturate via `Counter`.
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.inc();
+        self.sum.add(v);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in whole microseconds (saturating at `u64::MAX`).
+    pub fn record_duration(&self, d: Duration) {
+        self.record(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    /// Fold another histogram's samples into this one.
+    pub fn merge(&self, other: &Histogram) {
+        for (i, b) in other.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                self.buckets[i].fetch_add(n, Ordering::Relaxed);
+            }
+        }
+        self.count.add(other.count.get());
+        self.sum.add(other.sum.get());
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min.fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.get()
+    }
+
+    /// Saturating sum of recorded values.
+    pub fn sum(&self) -> u64 {
+        self.sum.get()
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Exact minimum recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count() == 0 { 0 } else { self.min.load(Ordering::Relaxed) }
+    }
+
+    /// Value at quantile `q` in `[0, 1]`: the midpoint of the bucket
+    /// holding the sample of rank `clamp(ceil(q * count), 1, count)`
+    /// (rank 1 = smallest). Returns 0 for an empty histogram; `q >= 1`
+    /// returns the *bucket* of the largest sample — use [`max`] for the
+    /// exact extreme.
+    ///
+    /// [`max`]: Histogram::max
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen = seen.saturating_add(b.load(Ordering::Relaxed));
+            if seen >= rank {
+                return bucket_mid(i);
+            }
+        }
+        // Racing writers can make `count` run ahead of the bucket walk;
+        // fall back to the exact max.
+        self.max()
+    }
+
+    /// Immutable snapshot of the full bucket table plus aggregates.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count(),
+            sum: self.sum(),
+            max: self.max(),
+            min: self.min(),
+        }
+    }
+
+    /// JSON summary: count/sum/min/max, p50/p90/p99, and the sparse
+    /// non-empty bucket table as `[index, midpoint, count]` triples.
+    /// Values are emitted as `f64` (saturated counters can exceed
+    /// `i64::MAX`, which the strict `Json::int` helper rejects).
+    pub fn to_json(&self) -> Json {
+        let jnum = |v: u64| Json::Num(v as f64);
+        let buckets: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then(|| Json::Arr(vec![jnum(i as u64), jnum(bucket_mid(i)), jnum(n)]))
+            })
+            .collect();
+        Json::obj(vec![
+            ("count", jnum(self.count())),
+            ("sum", jnum(self.sum())),
+            ("min", jnum(self.min())),
+            ("max", jnum(self.max())),
+            ("p50", jnum(self.quantile(0.50))),
+            ("p90", jnum(self.quantile(0.90))),
+            ("p99", jnum(self.quantile(0.99))),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    /// One-line `p50/p90/p99/max` summary for logs, e.g. `p50=12us`.
+    pub fn summary_line(&self, unit: &str) -> String {
+        format!(
+            "p50={}{unit} p90={}{unit} p99={}{unit} max={}{unit} n={}",
+            self.quantile(0.50),
+            self.quantile(0.90),
+            self.quantile(0.99),
+            self.max(),
+            self.count()
+        )
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("p50", &self.quantile(0.5))
+            .field("max", &self.max())
+            .finish()
+    }
+}
+
+/// Plain-data snapshot of a [`Histogram`]; comparable with `==`, which
+/// the per-lane-merge invariant test relies on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket sample counts (dense, `BUCKETS` entries).
+    pub buckets: Vec<u64>,
+    /// Samples recorded.
+    pub count: u64,
+    /// Saturating sum of values.
+    pub sum: u64,
+    /// Exact max (0 when empty).
+    pub max: u64,
+    /// Exact min (0 when empty).
+    pub min: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_exact_below_eight() {
+        for v in 0..8u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            let (lo, width) = bucket_bounds(v as usize);
+            assert_eq!((lo, width), (v, 1));
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_contiguous_and_bounds_cover() {
+        // Walking v upward never skips an index, and every v falls inside
+        // its bucket's [lo, lo+width) range.
+        let mut prev = 0usize;
+        for v in [
+            0u64, 1, 7, 8, 9, 15, 16, 17, 31, 32, 63, 64, 100, 1000, 4096, 65535, 1 << 20,
+            (1 << 40) + 12345, u64::MAX / 2, u64::MAX - 1, u64::MAX,
+        ] {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index must be monotone in v (v={v}, i={i}, prev={prev})");
+            assert!(i < BUCKETS, "index {i} out of table for v={v}");
+            let (lo, width) = bucket_bounds(i);
+            assert!(lo <= v, "v={v} below bucket lo={lo}");
+            assert!(v - lo < width, "v={v} past bucket [{}..{}]", lo, lo + (width - 1));
+            prev = i;
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn exhaustive_small_range_roundtrip() {
+        for v in 0..100_000u64 {
+            let i = bucket_index(v);
+            let (lo, width) = bucket_bounds(i);
+            assert!(lo <= v && v - lo < width, "v={v} i={i} lo={lo} width={width}");
+            let mid = bucket_mid(i);
+            let err = mid.abs_diff(v);
+            assert!(
+                err.saturating_mul(Histogram::MAX_RELATIVE_ERROR_DEN) <= v,
+                "relative error bound broken: v={v} mid={mid}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn single_value_quantiles() {
+        let h = Histogram::new();
+        h.record(42);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 42, "q={q}");
+        }
+        assert_eq!(h.max(), 42);
+        assert_eq!(h.min(), 42);
+        assert_eq!(h.sum(), 42);
+    }
+
+    #[test]
+    fn quantiles_order_and_max_is_exact() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v * 3 + 1);
+        }
+        let (p50, p90, p99) = (h.quantile(0.5), h.quantile(0.9), h.quantile(0.99));
+        assert!(p50 <= p90 && p90 <= p99, "quantiles must be monotone: {p50} {p90} {p99}");
+        assert_eq!(h.max(), 3001, "max is tracked exactly, not bucketed");
+        assert_eq!(h.min(), 4);
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn merge_accumulates_counts_and_extremes() {
+        let (a, b) = (Histogram::new(), Histogram::new());
+        for v in [1u64, 2, 3] {
+            a.record(v);
+        }
+        for v in [1000u64, 2000] {
+            b.record(v);
+        }
+        let c = Histogram::new();
+        c.merge(&a);
+        c.merge(&b);
+        assert_eq!(c.count(), 5);
+        assert_eq!(c.sum(), 3006);
+        assert_eq!(c.max(), 2000);
+        assert_eq!(c.min(), 1);
+        // Merge is bucket-exact: snapshots compose additively.
+        let mut want = a.snapshot();
+        let bs = b.snapshot();
+        for (w, x) in want.buckets.iter_mut().zip(bs.buckets.iter()) {
+            *w += x;
+        }
+        want.count += bs.count;
+        want.sum += bs.sum;
+        want.max = want.max.max(bs.max);
+        want.min = want.min.min(bs.min);
+        assert_eq!(c.snapshot(), want);
+    }
+
+    #[test]
+    fn to_json_has_summary_and_sparse_buckets() {
+        let h = Histogram::new();
+        h.record(5);
+        h.record(5);
+        h.record(100);
+        let j = h.to_json();
+        assert_eq!(j.get("count").unwrap().as_u64().unwrap(), 3);
+        assert_eq!(j.get("max").unwrap().as_u64().unwrap(), 100);
+        assert_eq!(j.get("p50").unwrap().as_u64().unwrap(), 5);
+        let buckets = j.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), 2, "only non-empty buckets are listed");
+    }
+
+    #[test]
+    fn record_duration_uses_micros() {
+        let h = Histogram::new();
+        h.record_duration(Duration::from_millis(2));
+        assert_eq!(h.min(), h.max());
+        let v = h.max();
+        assert_eq!(v, 2000);
+    }
+
+    #[test]
+    fn concurrent_records_all_land() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 8000);
+        assert_eq!(h.max(), 7999);
+        assert_eq!(h.min(), 0);
+    }
+}

@@ -1,6 +1,17 @@
-//! Report formatting: human tables and machine-readable JSON for every
-//! benchmark/deploy run (consumed by EXPERIMENTS.md and the bench
-//! harnesses).
+//! Report formatting and telemetry primitives: human tables,
+//! machine-readable JSON for every benchmark/deploy run (consumed by
+//! EXPERIMENTS.md and the bench harnesses), plus the observability
+//! building blocks of the serving stack — saturating [`Counter`]s,
+//! lock-free log-bucketed [`Histogram`]s ([`hist`]) and the
+//! Prometheus-style text exposition used by the `METRICS` protocol
+//! command ([`expo`]).
+
+pub mod counter;
+pub mod expo;
+pub mod hist;
+
+pub use counter::Counter;
+pub use hist::{Histogram, HistogramSnapshot};
 
 use crate::dma::DmaStats;
 use crate::memory::Level;

@@ -33,6 +33,17 @@
 //!   *identical* fingerprints is solved and simulated **once**, with
 //!   the result fanned out to every waiter in the run.
 //!
+//! Every request is also **traced** (see [`super::trace`]): the
+//! scheduler allocates a monotonic trace id at admission, stamps stage
+//! offsets (queued → picked → solved → simmed) as the request moves
+//! through the pipeline, and records served latency into per-lane ×
+//! warm/cold histograms plus a scheduler-wide one. `STATS` carries the
+//! resulting `latency` and `server` blocks, `METRICS` renders every
+//! counter and histogram as Prometheus-style text, and `TRACE [n]` /
+//! `SLOW [n]` dump recent / over-threshold spans as JSON lines.
+//! Disabling tracing (`--trace-cap 0`) removes the tracer entirely, so
+//! the warm fast path pays nothing for it.
+//!
 //! Batching composes with (rather than replaces) the caches underneath:
 //! a fully warm request short-circuits into the caches without ever
 //! entering any lane (the fast path is lane-agnostic — batching and
@@ -50,21 +61,21 @@
 //! property tests drive the same [`LaneSet`] the dispatcher uses under
 //! a virtual clock and assert exact shares.
 
-use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::DeployConfig;
 use crate::ir::Graph;
-use crate::metrics::{BatchStats, LaneStats};
+use crate::metrics::{expo, BatchStats, LaneStats};
 use crate::util::json::Json;
 
 use super::fingerprint::{fingerprint, soc_fingerprint, Fingerprint};
 use super::lanes::{normalize_specs, LaneCounters, LaneSet, LaneSpec};
 use super::service::{resolve_workload, PlanService, ServeReply};
+use super::trace::{ActiveSpan, TraceOptions, Tracer};
 use super::wfq::SCALE;
 
 /// What admission control does with a new request when the queue is full.
@@ -100,6 +111,10 @@ pub struct BatchOptions {
     /// bit-for-bit. A non-empty set without a `default` lane gets one
     /// prepended (unknown `lane=` names must always land somewhere).
     pub lanes: Vec<LaneSpec>,
+    /// Request tracing (`--trace-cap`, `--slowlog-ms`). Enabled by
+    /// default; `enabled: false` builds the scheduler without a tracer
+    /// at all.
+    pub trace: TraceOptions,
 }
 
 impl Default for BatchOptions {
@@ -110,6 +125,7 @@ impl Default for BatchOptions {
             max_batch: 64,
             policy: AdmissionPolicy::Block,
             lanes: Vec::new(),
+            trace: TraceOptions::default(),
         }
     }
 }
@@ -155,6 +171,10 @@ struct Pending {
     /// Absolute dispatch deadline, if the request carries one.
     deadline: Option<Instant>,
     reply: mpsc::Sender<Result<BatchOutcome>>,
+    /// The request's live trace span, when tracing is enabled. The
+    /// queue and dispatcher mark stage offsets through it; the
+    /// submitting thread finalizes it after the reply arrives.
+    span: Option<Arc<ActiveSpan>>,
 }
 
 /// How admission control resolved an enqueue attempt.
@@ -191,6 +211,14 @@ struct BatchInner {
     /// Per-lane counters; the scheduler-wide `batch.*` stats are sums
     /// over these (see [`LaneCounters`]).
     counters: Vec<LaneCounters>,
+    /// Request tracer; `None` when tracing is disabled, so a disabled
+    /// scheduler carries no per-request bookkeeping at all.
+    tracer: Option<Arc<Tracer>>,
+    /// Construction instant — the `server.uptime_ms` origin.
+    started: Instant,
+    /// Construction wall-clock time (ms since the Unix epoch; 0 if the
+    /// system clock is before the epoch).
+    started_unix_ms: u64,
     queue: Queue,
 }
 
@@ -217,8 +245,14 @@ impl BatchInner {
             if capacity == 0 {
                 // A lane that can never drain must not block (see
                 // `BatchOptions::queue_capacity`).
-                self.counters[lane].shed.fetch_add(1, Ordering::Relaxed);
+                self.counters[lane].shed.inc();
                 return Admit::Shed;
+            }
+            // (Re-)stamp the queued offset right before the push: a
+            // submitter parked by backpressure re-enters the queue now,
+            // not when it first tried.
+            if let Some(s) = &pending.span {
+                s.mark_queued();
             }
             // The LaneSet enforces capacity; a bounced push hands the
             // request back for the policy arm below.
@@ -231,7 +265,7 @@ impl BatchInner {
             };
             match policy {
                 AdmissionPolicy::Shed => {
-                    self.counters[lane].shed.fetch_add(1, Ordering::Relaxed);
+                    self.counters[lane].shed.inc();
                     return Admit::Shed;
                 }
                 AdmissionPolicy::Block => match deadline {
@@ -241,7 +275,7 @@ impl BatchInner {
                     Some(d) => {
                         let now = Instant::now();
                         if d <= now {
-                            self.counters[lane].timeouts.fetch_add(1, Ordering::Relaxed);
+                            self.counters[lane].timeouts.inc();
                             return Admit::Expired;
                         }
                         let (guard, _) = self
@@ -296,9 +330,14 @@ impl BatchInner {
     /// cold work the batch cost (the WFQ accounting step).
     fn dispatch(&self, lane: usize, mut batch: Vec<Pending>) {
         let counters = &self.counters[lane];
-        counters.batches.fetch_add(1, Ordering::Relaxed);
-        counters.batched_requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        counters.max_batch_size.fetch_max(batch.len() as u64, Ordering::Relaxed);
+        counters.batches.inc();
+        counters.batched_requests.add(batch.len() as u64);
+        counters.max_batch_size.fetch_max(batch.len() as u64);
+        for p in &batch {
+            if let Some(s) = &p.span {
+                s.mark_picked();
+            }
+        }
         // SoC-major order keeps the solver's working set warm across
         // consecutive groups; full-fingerprint order inside a SoC makes
         // identical requests adjacent for the run-length walk below.
@@ -353,7 +392,7 @@ impl BatchInner {
         if cost == 0 {
             return;
         }
-        self.counters[lane].cold_work.fetch_add(cost, Ordering::Relaxed);
+        self.counters[lane].cold_work.add(cost);
         let mut st = self.queue.state.lock().expect("batch queue poisoned");
         st.lanes.charge(lane, cost);
     }
@@ -368,15 +407,17 @@ impl BatchInner {
         let (live, expired): (Vec<Pending>, Vec<Pending>) =
             group.into_iter().partition(|p| p.deadline.map_or(true, |d| d > now));
         for p in expired {
-            self.counters[lane].timeouts.fetch_add(1, Ordering::Relaxed);
+            self.counters[lane].timeouts.inc();
             p.reply.send(Ok(BatchOutcome::TimedOut)).ok();
         }
         let mut live = live.into_iter();
         let Some(leader) = live.next() else { return };
         // Panic isolation: a panicking solve must kill neither the
         // dispatcher nor the waiters parked on their reply channels.
+        // The leader's span rides into the service so the solve/sim
+        // stage offsets are stamped where the work actually happens.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.service.deploy(&leader.workload, &leader.graph, &leader.config)
+            self.service.deploy_spanned(&leader.workload, &leader.graph, &leader.config, leader.span.as_deref())
         }))
         .unwrap_or_else(|_| {
             Err(anyhow!("batch dispatcher panicked while deploying '{}'", leader.workload))
@@ -384,9 +425,15 @@ impl BatchInner {
         match result {
             Ok(reply) => {
                 let cost = u64::from(!reply.cached) + u64::from(!reply.sim_cached);
-                self.counters[lane].served.fetch_add(1 + live.len() as u64, Ordering::Relaxed);
+                self.counters[lane].served.add(1 + live.len() as u64);
                 self.charge(lane, cost);
                 for p in live {
+                    // Fan-out waiters got their plan and simulation the
+                    // instant the leader did.
+                    if let Some(s) = &p.span {
+                        s.mark_solved();
+                        s.mark_simmed();
+                    }
                     // Fan-out: share the plan and the simulation, rebuild
                     // only the cheap per-request report wrapper.
                     let report = reply.plan.report_with_sim(&p.workload, &p.config, reply.report.sim.clone());
@@ -440,12 +487,22 @@ impl BatchScheduler {
         opts.lanes = specs.clone();
         let default_lane = specs.iter().position(|s| s.name == super::lanes::DEFAULT_LANE).expect("default");
         let counters = specs.iter().map(|_| LaneCounters::default()).collect();
+        let tracer = opts
+            .trace
+            .enabled
+            .then(|| Arc::new(Tracer::new(opts.trace.clone(), specs.iter().map(|s| s.name.clone()).collect())));
         let inner = Arc::new(BatchInner {
             service,
             opts,
             specs: specs.clone(),
             default_lane,
             counters,
+            tracer,
+            started: Instant::now(),
+            started_unix_ms: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_millis() as u64)
+                .unwrap_or(0),
             queue: Queue {
                 state: Mutex::new(QueueState { lanes: LaneSet::new(specs), open: true }),
                 not_empty: Condvar::new(),
@@ -519,11 +576,38 @@ impl BatchScheduler {
         lane: Option<&str>,
         deadline: Option<Duration>,
     ) -> Result<BatchOutcome> {
+        self.deploy_traced(workload, graph, config, lane, deadline).map(|(outcome, _)| outcome)
+    }
+
+    /// [`deploy_in_lane`](BatchScheduler::deploy_in_lane) plus the
+    /// request's trace id (`None` when tracing is disabled) — what the
+    /// protocol reports back as `"trace"`, so a client can correlate
+    /// its reply with `TRACE`/`SLOW` output. Every admitted request
+    /// produces exactly one finished [`Span`](super::trace::Span): warm
+    /// fast-path hits carry no queue stages, shed/timed-out requests no
+    /// solve stages, and failures finish as `ERROR` before the error
+    /// propagates.
+    pub fn deploy_traced(
+        &self,
+        workload: &str,
+        graph: Graph,
+        config: DeployConfig,
+        lane: Option<&str>,
+        deadline: Option<Duration>,
+    ) -> Result<(BatchOutcome, Option<u64>)> {
         let lane = self.inner.resolve_lane(lane);
+        let active = self.inner.tracer.as_ref().map(|t| t.begin());
+        let trace_id = active.as_ref().map(|a| a.id());
+        let finish = |outcome: &'static str, warm: bool, fp: Option<Fingerprint>| {
+            if let (Some(t), Some(a)) = (&self.inner.tracer, &active) {
+                t.finish(a, workload, lane, outcome, warm, fp);
+            }
+        };
         if let Some(d) = deadline {
             if d.is_zero() {
-                self.inner.counters[lane].timeouts.fetch_add(1, Ordering::Relaxed);
-                return Ok(BatchOutcome::TimedOut);
+                self.inner.counters[lane].timeouts.inc();
+                finish("TIMEOUT", false, None);
+                return Ok((BatchOutcome::TimedOut, trace_id));
             }
         }
         // Warm fast path: a fully cached request skips the lanes and the
@@ -533,7 +617,16 @@ impl BatchScheduler {
         // stay coherent with the dispatcher regardless of which path a
         // request takes.
         if let Some(result) = self.inner.service.deploy_if_warm(workload, &graph, &config) {
-            return result.map(|reply| BatchOutcome::Served(Box::new(reply)));
+            return match result {
+                Ok(reply) => {
+                    finish("OK", true, Some(reply.fingerprint));
+                    Ok((BatchOutcome::Served(Box::new(reply)), trace_id))
+                }
+                Err(e) => {
+                    finish("ERROR", false, None);
+                    Err(e)
+                }
+            };
         }
         let key = fingerprint(&graph, &config);
         let soc_key = soc_fingerprint(&config.soc);
@@ -546,15 +639,33 @@ impl BatchScheduler {
             soc_key,
             deadline: deadline.map(|d| Instant::now() + d),
             reply: tx,
+            span: active.clone(),
         };
         match self.inner.enqueue(lane, pending) {
             Admit::Admitted => {}
-            Admit::Shed => return Ok(BatchOutcome::Shed),
-            Admit::Expired => return Ok(BatchOutcome::TimedOut),
+            Admit::Shed => {
+                finish("SHED", false, None);
+                return Ok((BatchOutcome::Shed, trace_id));
+            }
+            Admit::Expired => {
+                finish("TIMEOUT", false, None);
+                return Ok((BatchOutcome::TimedOut, trace_id));
+            }
             Admit::Closed => bail!("batch scheduler is shut down"),
         }
         match rx.recv() {
-            Ok(outcome) => outcome,
+            Ok(Ok(outcome)) => {
+                let (warm, fp) = match &outcome {
+                    BatchOutcome::Served(reply) => (reply.cached && reply.sim_cached, Some(reply.fingerprint)),
+                    _ => (false, None),
+                };
+                finish(outcome.kind(), warm, fp);
+                Ok((outcome, trace_id))
+            }
+            Ok(Err(e)) => {
+                finish("ERROR", false, None);
+                Err(e)
+            }
             Err(_) => bail!("batch scheduler dropped the request before replying"),
         }
     }
@@ -579,13 +690,13 @@ impl BatchScheduler {
                 weight: spec.weight,
                 capacity: spec.capacity,
                 queue_depth: depths[i],
-                batches: c.batches.load(Ordering::Relaxed),
-                batched_requests: c.batched_requests.load(Ordering::Relaxed),
-                max_batch_size: c.max_batch_size.load(Ordering::Relaxed),
-                shed: c.shed.load(Ordering::Relaxed),
-                timeouts: c.timeouts.load(Ordering::Relaxed),
-                served: c.served.load(Ordering::Relaxed),
-                cold_work: c.cold_work.load(Ordering::Relaxed),
+                batches: c.batches.get(),
+                batched_requests: c.batched_requests.get(),
+                max_batch_size: c.max_batch_size.get(),
+                shed: c.shed.get(),
+                timeouts: c.timeouts.get(),
+                served: c.served.get(),
+                cold_work: c.cold_work.get(),
                 // Virtual finish tag in milli-cost-units (fixed point
                 // rescaled); monotone per lane.
                 vtime_milli: (vtags[i].saturating_mul(1000) / SCALE) as u64,
@@ -603,13 +714,99 @@ impl BatchScheduler {
         }
     }
 
-    /// Combined service + batch stats (the protocol's `STATS` response).
+    /// Combined service + batch + server + latency stats (the
+    /// protocol's `STATS` response). The `latency` block is present
+    /// only when tracing is enabled.
     pub fn stats_json(&self) -> Json {
         let mut j = self.inner.service.stats_json();
         if let Json::Obj(m) = &mut j {
             m.insert("batch".into(), self.stats().to_json());
+            m.insert("server".into(), self.server_json());
+            if let Some(t) = &self.inner.tracer {
+                m.insert("latency".into(), t.latency_json());
+            }
         }
         j
+    }
+
+    /// Server identity + effective configuration (the `STATS`
+    /// response's `server` block): crate version, uptime, start time,
+    /// and the tunables the scheduler actually runs with — normalized
+    /// lanes included, so a client sees the implicit `default` lane.
+    fn server_json(&self) -> Json {
+        let opts = &self.inner.opts;
+        let trace = &opts.trace;
+        let lanes = Json::obj(
+            self.inner
+                .specs
+                .iter()
+                .map(|s| {
+                    (
+                        s.name.as_str(),
+                        Json::obj(vec![("weight", Json::int(s.weight)), ("capacity", Json::int(s.capacity))]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("version", Json::str(env!("CARGO_PKG_VERSION"))),
+            ("uptime_ms", Json::Num(self.inner.started.elapsed().as_millis() as f64)),
+            ("started_at_unix_ms", Json::Num(self.inner.started_unix_ms as f64)),
+            (
+                "config",
+                Json::obj(vec![
+                    ("queue_capacity", Json::int(opts.queue_capacity)),
+                    ("batch_window_ms", Json::Num(opts.batch_window.as_millis() as f64)),
+                    ("max_batch", Json::int(opts.max_batch)),
+                    (
+                        "policy",
+                        Json::str(match opts.policy {
+                            AdmissionPolicy::Shed => "shed",
+                            AdmissionPolicy::Block => "block",
+                        }),
+                    ),
+                    ("workers", Json::int(self.inner.service.stats().workers)),
+                    ("solver_threads", Json::int(crate::tiling::SolverPool::global().threads())),
+                    ("lanes", lanes),
+                    (
+                        "trace",
+                        Json::obj(vec![
+                            ("enabled", Json::Bool(trace.enabled)),
+                            ("trace_cap", Json::int(trace.journal_cap)),
+                            ("slowlog_ms", Json::Num(trace.slowlog_ms as f64)),
+                            ("slowlog_cap", Json::int(trace.slowlog_cap)),
+                        ]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    /// The request tracer — `None` when tracing is disabled
+    /// (`--trace-cap 0`).
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.inner.tracer.as_ref()
+    }
+
+    /// Prometheus-style text exposition (the `METRICS` response): every
+    /// scalar of [`stats_json`](BatchScheduler::stats_json) flattened
+    /// under the `ftl_` prefix, plus the latency histograms emitted
+    /// with `lane`/`temp` labels instead of path-mangled names.
+    /// Terminated by `# EOF`.
+    pub fn metrics_text(&self) -> String {
+        let mut samples = expo::flatten("ftl", &self.stats_json(), &["latency"]);
+        if let Some(t) = &self.inner.tracer {
+            for (i, spec) in self.inner.specs.iter().enumerate() {
+                let lane = spec.name.as_str();
+                let warm = expo::hist_samples("ftl_latency_us", &[("lane", lane), ("temp", "warm")], t.warm_hist(i));
+                let cold = expo::hist_samples("ftl_latency_us", &[("lane", lane), ("temp", "cold")], t.cold_hist(i));
+                samples.extend(warm);
+                samples.extend(cold);
+            }
+            samples.extend(expo::hist_samples("ftl_latency_total_us", &[], t.overall()));
+            samples.extend(expo::hist_samples("ftl_queue_us", &[], t.queue_hist()));
+        }
+        expo::render(&samples)
     }
 
     /// Close the queues, drain what's already admitted, and stop the
@@ -635,26 +832,68 @@ impl Drop for BatchScheduler {
     }
 }
 
-/// Handle one line of the serve protocol — the single implementation
-/// behind both `ftl serve` and `examples/deploy_server.rs`:
+/// Handle one single-JSON-response line of the serve protocol:
 ///
 /// ```text
 /// DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>]
 ///     -> deploy report JSON + "outcome": "OK", "cached", "sim_cached",
-///        "lane", "fingerprint" — or {"outcome": "SHED"|"TIMEOUT",
-///        "lane": ..., "error": ...} when admission control rejects or
+///        "lane", "fingerprint", "trace" (the trace id, when tracing is
+///        enabled) — or {"outcome": "SHED"|"TIMEOUT", "lane": ...,
+///        "trace": ..., "error": ...} when admission control rejects or
 ///        the deadline expires. An unknown lane name falls back to the
 ///        default lane, never an error.
-/// STATS -> service + batch counter snapshot (incl. lanes.<name>.*)
+/// STATS -> service + batch counter snapshot (incl. lanes.<name>.*,
+///          the "server" identity/config block and, when tracing is
+///          enabled, the "latency" histogram block)
 /// PING  -> {"pong": true}
 /// ```
 ///
 /// Errors never escape: they come back as one `{"error": ...}` object so
-/// a bad request can't kill a connection handler.
+/// a bad request can't kill a connection handler. Connection handlers
+/// should speak [`handle_command`], which adds the multi-line
+/// observability commands (`METRICS`, `TRACE`, `SLOW`) on top of this.
 pub fn handle_line(scheduler: &BatchScheduler, line: &str) -> Json {
     match handle_request(scheduler, line) {
         Ok(j) => j,
         Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+    }
+}
+
+/// Handle one protocol command — [`handle_line`] plus the multi-line
+/// observability commands, the single implementation behind both
+/// `ftl serve` and `examples/deploy_server.rs`:
+///
+/// ```text
+/// METRICS   -> Prometheus-style text exposition, "# EOF"-terminated
+/// TRACE [n] -> {"spans": N} header + the n newest journal spans as
+///              JSON lines, newest first (default 16)
+/// SLOW  [n] -> same shape, over-threshold spans from the slowlog
+/// ```
+///
+/// Single-line commands return their JSON object rendered to text;
+/// errors stay one `{"error": ...}` object (`TRACE`/`SLOW` with tracing
+/// disabled included). The response never carries a trailing newline —
+/// connection handlers add their own line termination.
+pub fn handle_command(scheduler: &BatchScheduler, line: &str) -> String {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts.as_slice() {
+        ["METRICS"] => scheduler.metrics_text().trim_end().to_string(),
+        [cmd @ ("TRACE" | "SLOW"), rest @ ..] if rest.len() <= 1 => {
+            let n = match rest {
+                [tok] => tok.parse::<usize>().ok(),
+                _ => Some(16),
+            };
+            let (Some(n), Some(tracer)) = (n, scheduler.tracer()) else {
+                let msg = match n {
+                    None => format!("bad count '{}' in '{line}' (expected a non-negative integer)", rest[0]),
+                    Some(_) => "tracing is disabled (--trace-cap 0)".to_string(),
+                };
+                return Json::obj(vec![("error", Json::str(msg))]).to_string();
+            };
+            let spans = if *cmd == "TRACE" { tracer.recent(n) } else { tracer.slow(n) };
+            tracer.dump(&spans)
+        }
+        _ => handle_line(scheduler, line).to_string(),
     }
 }
 
@@ -684,7 +923,7 @@ fn handle_request(scheduler: &BatchScheduler, line: &str) -> Result<Json> {
         ["PING"] => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
         _ => bail!(
             "bad request: '{line}' (expected: DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>] \
-             | STATS | PING)"
+             | STATS | METRICS | TRACE [n] | SLOW [n] | PING)"
         ),
     }
 }
@@ -703,7 +942,7 @@ fn deploy_request(
     let cfg = DeployConfig::preset(soc, strategy)?;
     let soc_cfg = cfg.soc.clone();
     let lane_name = scheduler.lane_name(lane).to_string();
-    let outcome = scheduler.deploy_in_lane(workload, graph, cfg, lane, deadline)?;
+    let (outcome, trace_id) = scheduler.deploy_traced(workload, graph, cfg, lane, deadline)?;
     match outcome {
         BatchOutcome::Served(reply) => {
             let mut j = reply.report.to_json(&soc_cfg);
@@ -713,19 +952,34 @@ fn deploy_request(
                 m.insert("sim_cached".into(), Json::Bool(reply.sim_cached));
                 m.insert("lane".into(), Json::str(lane_name));
                 m.insert("fingerprint".into(), Json::str(reply.fingerprint.hex()));
+                if let Some(id) = trace_id {
+                    m.insert("trace".into(), Json::Num(id as f64));
+                }
             }
             Ok(j)
         }
-        BatchOutcome::Shed => Ok(Json::obj(vec![
-            ("outcome", Json::str("SHED")),
-            ("lane", Json::str(lane_name)),
-            ("error", Json::str("queue full: request shed by admission control")),
-        ])),
-        BatchOutcome::TimedOut => Ok(Json::obj(vec![
-            ("outcome", Json::str("TIMEOUT")),
-            ("lane", Json::str(lane_name)),
-            ("error", Json::str("deadline expired before the request was dispatched")),
-        ])),
+        BatchOutcome::Shed => {
+            let mut fields = vec![
+                ("outcome", Json::str("SHED")),
+                ("lane", Json::str(lane_name)),
+                ("error", Json::str("queue full: request shed by admission control")),
+            ];
+            if let Some(id) = trace_id {
+                fields.push(("trace", Json::Num(id as f64)));
+            }
+            Ok(Json::obj(fields))
+        }
+        BatchOutcome::TimedOut => {
+            let mut fields = vec![
+                ("outcome", Json::str("TIMEOUT")),
+                ("lane", Json::str(lane_name)),
+                ("error", Json::str("deadline expired before the request was dispatched")),
+            ];
+            if let Some(id) = trace_id {
+                fields.push(("trace", Json::Num(id as f64)));
+            }
+            Ok(Json::obj(fields))
+        }
     }
 }
 
@@ -863,6 +1117,53 @@ mod tests {
         let stats = handle_line(&sched, "STATS");
         assert_eq!(stats.get("solves").unwrap().as_usize().unwrap(), 0);
         assert_eq!(stats.get("batch").unwrap().get("shed").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn metrics_trace_slow_protocol_commands() {
+        let sched = BatchScheduler::new(
+            small_service(),
+            BatchOptions { batch_window: Duration::ZERO, ..BatchOptions::default() },
+        );
+        let j = handle_line(&sched, "DEPLOY vit-tiny-stage cluster-only ftl");
+        assert!(j.get_opt("error").is_none(), "{j}");
+        assert!(j.get("trace").unwrap().as_u64().unwrap() >= 1, "replies must carry the trace id");
+        // METRICS is EOF-terminated and round-trips through the strict
+        // exposition parser, cold latency included.
+        let metrics = handle_command(&sched, "METRICS");
+        assert!(metrics.ends_with("# EOF"), "METRICS must end with the EOF marker");
+        let samples = crate::metrics::expo::parse(&metrics).unwrap();
+        assert!(
+            samples.iter().any(|s| s.name == "ftl_latency_total_us_count" && s.value >= 1.0),
+            "the served request must show up in the overall latency histogram"
+        );
+        // TRACE dumps a {"spans": N} header plus one JSON line per span.
+        let trace = handle_command(&sched, "TRACE 8");
+        let mut lines = trace.lines();
+        let header = crate::util::json::parse(lines.next().unwrap()).unwrap();
+        assert!(header.get("spans").unwrap().as_usize().unwrap() >= 1);
+        let span = crate::util::json::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(span.get("outcome").unwrap().as_str().unwrap(), "OK");
+        // STATS grows the server identity and latency blocks.
+        let stats = handle_line(&sched, "STATS");
+        let server = stats.get("server").unwrap();
+        assert_eq!(server.get("version").unwrap().as_str().unwrap(), env!("CARGO_PKG_VERSION"));
+        assert!(server.get("config").unwrap().get("lanes").unwrap().get("default").is_ok());
+        let overall = stats.get("latency").unwrap().get("overall").unwrap();
+        assert!(overall.get("count").unwrap().as_u64().unwrap() >= 1);
+        // SLOW parses even when empty; a disabled tracer yields an
+        // error object (and no latency block), never a panic.
+        let slow = handle_command(&sched, "SLOW");
+        let slow_header = crate::util::json::parse(slow.lines().next().unwrap()).unwrap();
+        assert!(slow_header.get("spans").is_ok());
+        let off = BatchScheduler::new(
+            small_service(),
+            BatchOptions { trace: TraceOptions::disabled(), ..BatchOptions::default() },
+        );
+        let denied = handle_command(&off, "TRACE");
+        assert!(crate::util::json::parse(&denied).unwrap().get("error").is_ok());
+        assert!(handle_line(&off, "STATS").get_opt("latency").is_none());
+        assert!(handle_command(&off, "TRACE nope").contains("error"));
     }
 
     #[test]

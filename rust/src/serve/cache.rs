@@ -6,13 +6,16 @@
 //! requests for *different* plans never contend on one lock; recency is a
 //! global monotonic tick, cheap to bump and good enough for an
 //! eviction-order LRU. Hit/miss/eviction/insert counters aggregate into a
-//! [`crate::metrics::CacheStats`] snapshot for reports.
+//! [`crate::metrics::CacheStats`] snapshot for reports; they are
+//! saturating [`Counter`]s, so a long-lived replica pins at `u64::MAX`
+//! instead of wrapping. (The recency `tick` stays a plain wrapping
+//! `AtomicU64` on purpose: saturating it would freeze LRU ordering.)
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::metrics::CacheStats;
+use crate::metrics::{CacheStats, Counter};
 
 use super::fingerprint::Fingerprint;
 
@@ -34,10 +37,10 @@ pub struct LruCache<V: Clone> {
     per_shard: usize,
     capacity: usize,
     tick: AtomicU64,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
-    inserts: AtomicU64,
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
+    inserts: Counter,
 }
 
 /// The serve layer's plan cache.
@@ -62,10 +65,10 @@ impl<V: Clone> LruCache<V> {
             per_shard,
             capacity,
             tick: AtomicU64::new(0),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-            inserts: AtomicU64::new(0),
+            hits: Counter::new(0),
+            misses: Counter::new(0),
+            evictions: Counter::new(0),
+            inserts: Counter::new(0),
         }
     }
 
@@ -81,11 +84,11 @@ impl<V: Clone> LruCache<V> {
     pub fn get(&self, key: Fingerprint) -> Option<V> {
         match self.lookup(key) {
             Some(v) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.inc();
                 Some(v)
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses.inc();
                 None
             }
         }
@@ -118,7 +121,7 @@ impl<V: Clone> LruCache<V> {
         // evictions` must keep tracking `entries` or persisted-snapshot
         // accounting drifts.
         if shard.map.insert(key.0, Entry { value, last_used: tick }).is_none() {
-            self.inserts.fetch_add(1, Ordering::Relaxed);
+            self.inserts.inc();
         }
         while shard.map.len() > self.per_shard {
             let oldest = shard
@@ -128,7 +131,7 @@ impl<V: Clone> LruCache<V> {
                 .map(|(&k, _)| k)
                 .expect("non-empty shard has an LRU entry");
             shard.map.remove(&oldest);
-            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.evictions.inc();
         }
     }
 
@@ -166,10 +169,10 @@ impl<V: Clone> LruCache<V> {
     /// Counter snapshot for reports.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
-            inserts: self.inserts.load(Ordering::Relaxed),
+            hits: self.hits.get(),
+            misses: self.misses.get(),
+            evictions: self.evictions.get(),
+            inserts: self.inserts.get(),
             entries: self.len(),
             capacity: self.capacity,
         }

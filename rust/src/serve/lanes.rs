@@ -25,9 +25,10 @@
 //! configuration is pinned by regression tests.
 
 use std::collections::VecDeque;
-use std::sync::atomic::AtomicU64;
 
 use anyhow::{bail, Result};
+
+use crate::metrics::Counter;
 
 use super::batch::AdmissionPolicy;
 use super::wfq::Wfq;
@@ -237,24 +238,26 @@ impl<T> LaneSet<T> {
 /// `batch.*` totals are *derived* as sums over these, so the invariant
 /// `sum(lanes.*.shed) == batch.shed` (and likewise for every counter)
 /// holds by construction — and is still invariant-tested, so it cannot
-/// silently rot if the derivation changes.
+/// silently rot if the derivation changes. All fields are saturating
+/// [`Counter`]s: a long-lived replica pins at `u64::MAX` instead of
+/// wrapping.
 #[derive(Debug, Default)]
 pub struct LaneCounters {
     /// Batches dispatched from this lane (one WFQ quantum each).
-    pub batches: AtomicU64,
+    pub batches: Counter,
     /// Requests dispatched through this lane's batches.
-    pub batched_requests: AtomicU64,
+    pub batched_requests: Counter,
     /// Largest single batch dispatched from this lane.
-    pub max_batch_size: AtomicU64,
+    pub max_batch_size: Counter,
     /// Requests shed by admission control at this lane.
-    pub shed: AtomicU64,
+    pub shed: Counter,
     /// Requests whose deadline expired while owned by this lane.
-    pub timeouts: AtomicU64,
+    pub timeouts: Counter,
     /// Requests answered with a served reply from this lane's batches.
-    pub served: AtomicU64,
+    pub served: Counter,
     /// Cold-work units charged to this lane (cache-miss solves its
     /// batches paid for — the quantity WFQ fairness is defined over).
-    pub cold_work: AtomicU64,
+    pub cold_work: Counter,
 }
 
 #[cfg(test)]

@@ -97,6 +97,23 @@
 //! neither is ever fatal, and the affected request simply re-solves. A
 //! restarted replica pointed at a populated directory serves previously
 //! seen requests with zero solves and zero simulator runs.
+//!
+//! # Observability
+//!
+//! Every request is traced end to end ([`trace`]): a monotonic trace id
+//! (echoed as `"trace"` in `DEPLOY` replies), stage offsets
+//! (queued → picked → solved → simmed, µs since admission), outcome,
+//! lane and warm/cold flag. Completed spans land in a fixed-capacity
+//! ring journal (`TRACE [n]`, `--trace-cap`) and — when the total
+//! latency crosses `--slowlog-ms` — in a bounded slowlog (`SLOW [n]`).
+//! Served latencies feed lock-free log-bucketed histograms
+//! ([`crate::metrics::Histogram`]) per lane × warm/cold plus a
+//! scheduler-wide one; the merge of the per-lane histograms equals the
+//! scheduler-wide one bucket-for-bucket (self-test- and property-test-
+//! asserted). `STATS` reports the summaries under `latency.*` plus a
+//! `server` identity/config block, and `METRICS` renders everything as
+//! Prometheus-style text ([`crate::metrics::expo`]). `--trace-cap 0`
+//! disables tracing entirely — the warm path then pays zero overhead.
 
 mod batch;
 mod cache;
@@ -105,10 +122,13 @@ pub mod lanes;
 pub mod persist;
 mod service;
 mod singleflight;
+pub mod trace;
 pub mod wave;
 pub mod wfq;
 
-pub use batch::{handle_line, AdmissionPolicy, BatchOptions, BatchOutcome, BatchScheduler};
+pub use batch::{
+    handle_command, handle_line, AdmissionPolicy, BatchOptions, BatchOutcome, BatchScheduler,
+};
 pub use cache::{LruCache, PlanCache, SimCache};
 pub use fingerprint::{checksum, fingerprint, soc_fingerprint, Fingerprint};
 pub use lanes::{normalize_specs, DEFAULT_LANE, LaneSet, LaneSpec};
@@ -117,3 +137,4 @@ pub use service::{
     resolve_workload, AsyncReply, PlanOutcome, PlanService, ServeOptions, ServeReply, ServeStats,
 };
 pub use singleflight::{Role, SingleFlight};
+pub use trace::{ActiveSpan, Span, TraceOptions, Tracer};

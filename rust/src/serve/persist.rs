@@ -64,18 +64,19 @@
 //!
 //! Counters surface in `stats_json` under `"persist"`: `loaded`,
 //! `skipped_corrupt`, `skipped_version`, `snapshots`, `entries_written`,
-//! `bytes_written`, `write_errors`, `evicted`.
+//! `bytes_written`, `write_errors`, `evicted`, plus a `write_us`
+//! histogram of per-envelope write wall time.
 
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::Deployment;
+use crate::metrics::{Counter, Histogram};
 use crate::sim::SimReport;
 use crate::util::json::{parse, Json};
 
@@ -118,74 +119,87 @@ impl PersistOptions {
 }
 
 /// Live persistence counters, shared with [`PlanService`] so they appear
-/// in `stats_json` under `"persist"`.
+/// in `stats_json` under `"persist"`. All counters are saturating
+/// ([`Counter`]) — a long-lived replica pins at `u64::MAX` instead of
+/// wrapping — and envelope write wall time feeds a [`Histogram`]
+/// (`write_us`).
 #[derive(Debug, Default)]
 pub struct PersistCounters {
-    loaded: AtomicU64,
-    skipped_corrupt: AtomicU64,
-    skipped_version: AtomicU64,
-    snapshots: AtomicU64,
-    entries_written: AtomicU64,
-    bytes_written: AtomicU64,
-    write_errors: AtomicU64,
-    evicted: AtomicU64,
+    loaded: Counter,
+    skipped_corrupt: Counter,
+    skipped_version: Counter,
+    snapshots: Counter,
+    entries_written: Counter,
+    bytes_written: Counter,
+    write_errors: Counter,
+    evicted: Counter,
+    write_us: Histogram,
 }
 
 impl PersistCounters {
     /// Entries loaded into the caches at attach time.
     pub fn loaded(&self) -> u64 {
-        self.loaded.load(Ordering::Relaxed)
+        self.loaded.get()
     }
 
     /// Entries skipped because they were unreadable, unparseable, failed
     /// their checksum, or failed payload decoding.
     pub fn skipped_corrupt(&self) -> u64 {
-        self.skipped_corrupt.load(Ordering::Relaxed)
+        self.skipped_corrupt.get()
     }
 
     /// Entries skipped because they carry a different format version.
     pub fn skipped_version(&self) -> u64 {
-        self.skipped_version.load(Ordering::Relaxed)
+        self.skipped_version.get()
     }
 
     /// Completed snapshot passes (background + manual + shutdown).
     pub fn snapshots(&self) -> u64 {
-        self.snapshots.load(Ordering::Relaxed)
+        self.snapshots.get()
     }
 
     /// Entries written to disk over the snapshotter's lifetime.
     pub fn entries_written(&self) -> u64 {
-        self.entries_written.load(Ordering::Relaxed)
+        self.entries_written.get()
     }
 
     /// Envelope bytes written to disk over the snapshotter's lifetime.
     pub fn bytes_written(&self) -> u64 {
-        self.bytes_written.load(Ordering::Relaxed)
+        self.bytes_written.get()
     }
 
     /// Entries that failed to write (skipped for the pass, retried on
     /// the next one).
     pub fn write_errors(&self) -> u64 {
-        self.write_errors.load(Ordering::Relaxed)
+        self.write_errors.get()
     }
 
     /// Entries removed by the mtime-LRU size-cap sweep
     /// (`--cache-max-entries`).
     pub fn evicted(&self) -> u64 {
-        self.evicted.load(Ordering::Relaxed)
+        self.evicted.get()
     }
 
-    /// The `stats_json` rendering (`"persist": {...}`).
+    /// Wall-time histogram of successful envelope writes, in µs.
+    pub fn write_us(&self) -> &Histogram {
+        &self.write_us
+    }
+
+    /// The `stats_json` rendering (`"persist": {...}`). `Json::Num`, not
+    /// `Json::int`: a saturated counter must render, not panic on the
+    /// i64 conversion.
     pub fn to_json(&self) -> Json {
+        let n = |v: u64| Json::Num(v as f64);
         Json::obj(vec![
-            ("loaded", Json::int(self.loaded() as usize)),
-            ("skipped_corrupt", Json::int(self.skipped_corrupt() as usize)),
-            ("skipped_version", Json::int(self.skipped_version() as usize)),
-            ("snapshots", Json::int(self.snapshots() as usize)),
-            ("entries_written", Json::int(self.entries_written() as usize)),
-            ("bytes_written", Json::int(self.bytes_written() as usize)),
-            ("write_errors", Json::int(self.write_errors() as usize)),
-            ("evicted", Json::int(self.evicted() as usize)),
+            ("loaded", n(self.loaded())),
+            ("skipped_corrupt", n(self.skipped_corrupt())),
+            ("skipped_version", n(self.skipped_version())),
+            ("snapshots", n(self.snapshots())),
+            ("entries_written", n(self.entries_written())),
+            ("bytes_written", n(self.bytes_written())),
+            ("write_errors", n(self.write_errors())),
+            ("evicted", n(self.evicted())),
+            ("write_us", self.write_us.to_json()),
         ])
     }
 }
@@ -343,9 +357,9 @@ impl SnapInner {
                 written.insert((KIND_SIM, key.0));
             }
         }
-        self.counters.snapshots.fetch_add(1, Ordering::Relaxed);
-        self.counters.entries_written.fetch_add(wrote as u64, Ordering::Relaxed);
-        self.counters.bytes_written.fetch_add(bytes, Ordering::Relaxed);
+        self.counters.snapshots.inc();
+        self.counters.entries_written.add(wrote as u64);
+        self.counters.bytes_written.add(bytes);
         // Only a pass that wrote something can have grown the directory
         // (evicted keys are never re-written), so an idle server must not
         // re-scan it every interval; attach runs one unconditional sweep
@@ -387,21 +401,23 @@ impl SnapInner {
                 evicted += 1;
             }
         }
-        self.counters.evicted.fetch_add(evicted, Ordering::Relaxed);
+        self.counters.evicted.add(evicted);
     }
 
     /// Write one envelope, counting failures instead of propagating them
     /// (a failed entry is retried on the next pass). Returns whether the
     /// entry reached disk.
     fn persist_one(&self, tag: &str, key: Fingerprint, payload: Json, wrote: &mut usize, bytes: &mut u64) -> bool {
+        let write_start = Instant::now();
         match write_entry(&self.dir, tag, key, payload) {
             Ok(b) => {
+                self.counters.write_us.record_duration(write_start.elapsed());
                 *wrote += 1;
                 *bytes += b;
                 true
             }
             Err(e) => {
-                self.counters.write_errors.fetch_add(1, Ordering::Relaxed);
+                self.counters.write_errors.inc();
                 eprintln!("[ftl-serve] snapshot write failed for {tag}-{}: {e:#}", key.hex());
                 false
             }
@@ -483,18 +499,18 @@ fn load_dir(
             Ok(Loaded::Plan(key, plan)) => {
                 service.import_plan(key, Arc::new(plan));
                 written.insert((KIND_PLAN, key.0));
-                counters.loaded.fetch_add(1, Ordering::Relaxed);
+                counters.loaded.inc();
             }
             Ok(Loaded::Sim(key, sim)) => {
                 service.import_sim(key, Arc::new(sim));
                 written.insert((KIND_SIM, key.0));
-                counters.loaded.fetch_add(1, Ordering::Relaxed);
+                counters.loaded.inc();
             }
             Err(Skip::Version) => {
-                counters.skipped_version.fetch_add(1, Ordering::Relaxed);
+                counters.skipped_version.inc();
             }
             Err(Skip::Corrupt) => {
-                counters.skipped_corrupt.fetch_add(1, Ordering::Relaxed);
+                counters.skipped_corrupt.inc();
             }
         }
     }

@@ -11,10 +11,10 @@
 //! warming and async callers. All counters surface in a JSON stats
 //! snapshot.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -22,6 +22,7 @@ use crate::config::DeployConfig;
 use crate::coordinator::{experiments, DeployReport, Deployer, Deployment};
 use crate::ir::builder::vit_mlp_preset;
 use crate::ir::Graph;
+use crate::metrics::{Counter, Histogram};
 use crate::sim::SimReport;
 use crate::util::json::Json;
 
@@ -29,6 +30,7 @@ use super::cache::{PlanCache, SimCache};
 use super::fingerprint::{fingerprint, Fingerprint};
 use super::persist::PersistCounters;
 use super::singleflight::SingleFlight;
+use super::trace::ActiveSpan;
 
 /// Domain tag separating sim-cache keys from plan-cache keys (see
 /// [`Fingerprint::derive`]). Bump when the simulator's output changes
@@ -103,10 +105,15 @@ struct ServiceInner {
     sim_cache: SimCache,
     flight: SingleFlight<Arc<Deployment>>,
     sim_flight: SingleFlight<Arc<SimReport>>,
-    solves: AtomicU64,
-    sims: AtomicU64,
-    requests: AtomicU64,
-    errors: AtomicU64,
+    solves: Counter,
+    sims: Counter,
+    requests: Counter,
+    errors: Counter,
+    /// Wall time of actual branch-and-bound solves (cache hits and
+    /// coalesced waiters record nothing), in µs.
+    solve_us: Histogram,
+    /// Wall time of actual `sim::engine` runs, in µs.
+    sim_us: Histogram,
     workers: usize,
     /// Counters of the attached persistence layer, if any (see
     /// [`crate::serve::persist::Snapshotter::attach`]); surfaced in
@@ -117,7 +124,7 @@ struct ServiceInner {
 impl ServiceInner {
     /// The cache + single-flight path around the solver.
     fn plan(&self, graph: &Graph, config: &DeployConfig) -> Result<PlanOutcome> {
-        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.requests.inc();
         let key = fingerprint(graph, config);
         if let Some(plan) = self.cache.get(key) {
             return Ok(PlanOutcome { plan, fingerprint: key, cached: true });
@@ -135,8 +142,10 @@ impl ServiceInner {
                 return Ok(plan);
             }
             solved_here.set(true);
-            self.solves.fetch_add(1, Ordering::Relaxed);
+            self.solves.inc();
+            let solve_start = Instant::now();
             let deployment = Deployer::new(graph.clone(), config.clone()).plan()?;
+            self.solve_us.record_duration(solve_start.elapsed());
             let plan = Arc::new(deployment);
             // Publish before the flight closes so no request can observe
             // "no flight and no cache entry" for an already-solved key.
@@ -146,7 +155,7 @@ impl ServiceInner {
         let plan = match result {
             Ok(plan) => plan,
             Err(e) => {
-                self.errors.fetch_add(1, Ordering::Relaxed);
+                self.errors.inc();
                 return Err(e);
             }
         };
@@ -175,8 +184,10 @@ impl ServiceInner {
                 return Ok(sim);
             }
             simulated_here.set(true);
-            self.sims.fetch_add(1, Ordering::Relaxed);
+            self.sims.inc();
+            let sim_start = Instant::now();
             let sim = Arc::new(plan.simulate(config)?);
+            self.sim_us.record_duration(sim_start.elapsed());
             self.sim_cache.insert(sim_key, sim.clone());
             Ok(sim)
         });
@@ -188,14 +199,34 @@ impl ServiceInner {
 
     /// Plan (cached) + simulate (cached) + assemble the standard report.
     fn deploy(&self, workload: &str, graph: &Graph, config: &DeployConfig) -> Result<ServeReply> {
+        self.deploy_spanned(workload, graph, config, None)
+    }
+
+    /// [`ServiceInner::deploy`] with an optional request-trace span: the
+    /// solve and simulate stage boundaries are marked on it as they
+    /// complete (warm hits mark immediately — the stage still happened,
+    /// it just cost a cache lookup).
+    fn deploy_spanned(
+        &self,
+        workload: &str,
+        graph: &Graph,
+        config: &DeployConfig,
+        span: Option<&ActiveSpan>,
+    ) -> Result<ServeReply> {
         let outcome = self.plan(graph, config)?;
+        if let Some(s) = span {
+            s.mark_solved();
+        }
         let (sim, sim_cached) = match self.simulate(outcome.fingerprint, &outcome.plan, config) {
             Ok(sim) => sim,
             Err(e) => {
-                self.errors.fetch_add(1, Ordering::Relaxed);
+                self.errors.inc();
                 return Err(e).with_context(|| format!("simulating cached plan for '{workload}'"));
             }
         };
+        if let Some(s) = span {
+            s.mark_simmed();
+        }
         let report = outcome.plan.report_with_sim(workload, config, (*sim).clone());
         Ok(ServeReply {
             plan: outcome.plan,
@@ -222,10 +253,12 @@ impl PlanService {
             sim_cache: SimCache::new(opts.sim_cache_capacity, opts.cache_shards),
             flight: SingleFlight::new(),
             sim_flight: SingleFlight::new(),
-            solves: AtomicU64::new(0),
-            sims: AtomicU64::new(0),
-            requests: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
+            solves: Counter::new(0),
+            sims: Counter::new(0),
+            requests: Counter::new(0),
+            errors: Counter::new(0),
+            solve_us: Histogram::new(),
+            sim_us: Histogram::new(),
             workers: opts.workers,
             persist: Mutex::new(None),
         });
@@ -282,6 +315,20 @@ impl PlanService {
         self.inner.deploy(workload, graph, config)
     }
 
+    /// [`PlanService::deploy`] with an optional request-trace span (see
+    /// [`crate::serve::trace`]): `mark_solved` / `mark_simmed` fire on it
+    /// as the stages complete, so the batch scheduler's per-request spans
+    /// carry real stage boundaries instead of estimates.
+    pub fn deploy_spanned(
+        &self,
+        workload: &str,
+        graph: &Graph,
+        config: &DeployConfig,
+        span: Option<&ActiveSpan>,
+    ) -> Result<ServeReply> {
+        self.inner.deploy_spanned(workload, graph, config, span)
+    }
+
     /// Serve the request only if both caches are warm: `None` (with no
     /// counter side effects) when either the plan or the sim report is
     /// absent. The batch scheduler uses this as a fast path so fully warm
@@ -334,10 +381,10 @@ impl PlanService {
         ServeStats {
             cache: self.inner.cache.stats(),
             sim_cache: self.inner.sim_cache.stats(),
-            solves: self.inner.solves.load(Ordering::Relaxed),
-            sims: self.inner.sims.load(Ordering::Relaxed),
-            requests: self.inner.requests.load(Ordering::Relaxed),
-            errors: self.inner.errors.load(Ordering::Relaxed),
+            solves: self.inner.solves.get(),
+            sims: self.inner.sims.get(),
+            requests: self.inner.requests.get(),
+            errors: self.inner.errors.get(),
             singleflight_leads: self.inner.flight.leads(),
             singleflight_waits: self.inner.flight.waits(),
             workers: self.inner.workers,
@@ -354,6 +401,13 @@ impl PlanService {
         let mut j = self.stats().to_json();
         if let Json::Obj(m) = &mut j {
             m.insert("solver".into(), crate::tiling::SolverPool::global().stats_json());
+            m.insert(
+                "plan_latency".into(),
+                Json::obj(vec![
+                    ("solve_us", self.inner.solve_us.to_json()),
+                    ("sim_us", self.inner.sim_us.to_json()),
+                ]),
+            );
             if let Some(counters) = self.inner.persist.lock().expect("persist counters poisoned").as_ref() {
                 m.insert("persist".into(), counters.to_json());
             }
@@ -434,17 +488,20 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    /// JSON rendering.
+    /// JSON rendering. Counters render via `Json::Num`, not `Json::int`:
+    /// a saturated counter (`u64::MAX`) must serialise, not panic on the
+    /// i64 conversion.
     pub fn to_json(&self) -> Json {
+        let n = |v: u64| Json::Num(v as f64);
         Json::obj(vec![
             ("plan_cache", self.cache.to_json()),
             ("sim_cache", self.sim_cache.to_json()),
-            ("solves", Json::int(self.solves as usize)),
-            ("sims", Json::int(self.sims as usize)),
-            ("requests", Json::int(self.requests as usize)),
-            ("errors", Json::int(self.errors as usize)),
-            ("singleflight_leads", Json::int(self.singleflight_leads as usize)),
-            ("singleflight_waits", Json::int(self.singleflight_waits as usize)),
+            ("solves", n(self.solves)),
+            ("sims", n(self.sims)),
+            ("requests", n(self.requests)),
+            ("errors", n(self.errors)),
+            ("singleflight_leads", n(self.singleflight_leads)),
+            ("singleflight_waits", n(self.singleflight_waits)),
             ("workers", Json::int(self.workers)),
         ])
     }

@@ -1,0 +1,569 @@
+//! Per-request tracing for the serve path.
+//!
+//! Every `DEPLOY` handled by the [`BatchScheduler`](super::BatchScheduler)
+//! gets a monotonic **trace id** and a [`Span`]: stage timestamps
+//! (admitted → queued → batch-picked → solved → simulated → reply) as
+//! microsecond offsets from admission, plus the outcome, lane, warm/cold
+//! flag and plan fingerprint. Completed spans land in two places:
+//!
+//! * a fixed-capacity **journal** (`--trace-cap`) — a ring buffer with a
+//!   lock-free reservation cursor (one `fetch_add` picks the slot;
+//!   individual slots are guarded by tiny mutexes, so writers never
+//!   contend unless they collide on the same slot a full lap apart).
+//!   `TRACE [n]` dumps the newest spans as JSON lines.
+//! * a bounded **slowlog** (`--slowlog-ms`) retaining the full span of
+//!   any request whose total latency exceeded the threshold — `SLOW [n]`
+//!   is the "why was my p99 bad" answer.
+//!
+//! Served latencies are also recorded into per-lane × warm/cold
+//! [`Histogram`]s plus one scheduler-wide histogram. The scheduler-wide
+//! histogram is recorded *independently* at finish time, and the
+//! per-lane-merge invariant — `merge(all lanes) == scheduler-wide`,
+//! checked bucket-for-bucket via [`Histogram::snapshot`] — is asserted by
+//! the serve self-test and a property test, so the per-lane attribution
+//! provably loses no samples.
+//!
+//! The requester thread owns the span lifecycle: it calls
+//! [`Tracer::begin`] at admission and [`Tracer::finish`] after the reply
+//! arrives; the dispatcher and [`PlanService`](super::PlanService) only
+//! `mark_*` stage offsets on the shared [`ActiveSpan`] in between. Stage
+//! marks are clamped monotone at finish, so concurrent marking can never
+//! produce a time-travelling span.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::metrics::Histogram;
+use crate::util::json::Json;
+
+use super::fingerprint::Fingerprint;
+
+/// Stage-offset sentinel: "this stage never happened".
+const UNSET: u64 = u64::MAX;
+
+/// Tracing tunables (`--trace-cap`, `--slowlog-ms`).
+#[derive(Debug, Clone)]
+pub struct TraceOptions {
+    /// Master switch. Disabled means the scheduler carries no tracer at
+    /// all — the warm path pays zero overhead (the bench guard's
+    /// baseline).
+    pub enabled: bool,
+    /// Journal ring-buffer capacity (spans retained for `TRACE`).
+    pub journal_cap: usize,
+    /// Slowlog threshold in milliseconds: a span whose total latency
+    /// meets or exceeds this is retained in full for `SLOW`.
+    pub slowlog_ms: u64,
+    /// Max spans the slowlog retains (oldest evicted first).
+    pub slowlog_cap: usize,
+}
+
+impl Default for TraceOptions {
+    fn default() -> Self {
+        Self { enabled: true, journal_cap: 512, slowlog_ms: 250, slowlog_cap: 64 }
+    }
+}
+
+impl TraceOptions {
+    /// Tracing off — the no-op baseline the overhead bench compares
+    /// against.
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::default() }
+    }
+}
+
+/// A request's in-flight trace: the admission instant plus atomically
+/// written stage offsets (µs since admission). Shared `Arc` between the
+/// requester, the dispatcher and the service; any holder may mark a
+/// stage, the requester finalizes.
+pub struct ActiveSpan {
+    id: u64,
+    start: Instant,
+    queued_us: AtomicU64,
+    picked_us: AtomicU64,
+    solved_us: AtomicU64,
+    simmed_us: AtomicU64,
+}
+
+impl ActiveSpan {
+    fn new(id: u64) -> Self {
+        Self {
+            id,
+            start: Instant::now(),
+            queued_us: AtomicU64::new(UNSET),
+            picked_us: AtomicU64::new(UNSET),
+            solved_us: AtomicU64::new(UNSET),
+            simmed_us: AtomicU64::new(UNSET),
+        }
+    }
+
+    /// The monotonic trace id (also reported in the `DEPLOY` response).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    fn elapsed_us(&self) -> u64 {
+        // UNSET is reserved as the sentinel; a >584-millennium span
+        // saturating into it would be indistinguishable from "never".
+        u64::try_from(self.start.elapsed().as_micros()).unwrap_or(UNSET - 1).min(UNSET - 1)
+    }
+
+    /// The request entered its lane's queue.
+    pub fn mark_queued(&self) {
+        self.queued_us.store(self.elapsed_us(), Ordering::Relaxed);
+    }
+
+    /// The dispatcher drained the request into a batch.
+    pub fn mark_picked(&self) {
+        self.picked_us.store(self.elapsed_us(), Ordering::Relaxed);
+    }
+
+    /// The plan is available (solver run or plan-cache hit).
+    pub fn mark_solved(&self) {
+        self.solved_us.store(self.elapsed_us(), Ordering::Relaxed);
+    }
+
+    /// The simulation report is available (engine run or sim-cache hit).
+    pub fn mark_simmed(&self) {
+        self.simmed_us.store(self.elapsed_us(), Ordering::Relaxed);
+    }
+}
+
+/// A completed request trace. Stage fields are µs offsets from
+/// admission; `None` means the stage never happened (a warm fast-path
+/// hit is never queued, a shed request is never solved). Set stages are
+/// monotone: `queued ≤ picked ≤ solved ≤ simmed ≤ total`.
+#[derive(Debug, Clone)]
+pub struct Span {
+    /// Monotonic trace id.
+    pub id: u64,
+    /// Requested workload name.
+    pub workload: String,
+    /// Lane index (resolve via [`Tracer::lane_name`]).
+    pub lane: u32,
+    /// `OK` / `SHED` / `TIMEOUT` / `ERROR`.
+    pub outcome: &'static str,
+    /// True iff the request was served without solver or simulator work.
+    pub warm: bool,
+    /// Plan fingerprint, when the request got far enough to have one.
+    pub fingerprint: Option<Fingerprint>,
+    /// Entered the lane queue.
+    pub queued_us: Option<u64>,
+    /// Drained into a batch by the dispatcher.
+    pub picked_us: Option<u64>,
+    /// Plan available.
+    pub solved_us: Option<u64>,
+    /// Simulation report available.
+    pub simmed_us: Option<u64>,
+    /// Admission → reply.
+    pub total_us: u64,
+}
+
+impl Span {
+    /// Stage offsets in lifecycle order (set stages only) — what the
+    /// monotonicity assertions walk.
+    pub fn stages(&self) -> Vec<(&'static str, u64)> {
+        let mut out = Vec::with_capacity(5);
+        for (name, v) in [
+            ("queued_us", self.queued_us),
+            ("picked_us", self.picked_us),
+            ("solved_us", self.solved_us),
+            ("simmed_us", self.simmed_us),
+        ] {
+            if let Some(v) = v {
+                out.push((name, v));
+            }
+        }
+        out.push(("total_us", self.total_us));
+        out
+    }
+}
+
+/// Warm/cold served-latency histograms for one lane.
+#[derive(Debug, Default)]
+struct LaneHists {
+    warm: Histogram,
+    cold: Histogram,
+}
+
+/// Fixed-capacity span ring. The cursor is a lock-free reservation
+/// (`fetch_add` picks a slot); each slot is its own mutex so a write
+/// never blocks readers of other slots.
+struct Journal {
+    cursor: AtomicU64,
+    slots: Box<[Mutex<Option<Arc<Span>>>]>,
+}
+
+impl Journal {
+    fn new(cap: usize) -> Self {
+        Self {
+            cursor: AtomicU64::new(0),
+            slots: (0..cap.max(1)).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    fn push(&self, span: Arc<Span>) {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.slots.len() as u64;
+        *self.slots[i as usize].lock().expect("trace journal poisoned") = Some(span);
+    }
+
+    /// Newest-first view of up to `n` retained spans. Taken without
+    /// stopping writers: a concurrent push may replace a slot mid-walk,
+    /// which can surface a newer span in an older position — a telemetry
+    /// view, not a linearisable cut.
+    fn recent(&self, n: usize) -> Vec<Arc<Span>> {
+        let total = self.cursor.load(Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        let take = (n as u64).min(total.min(cap));
+        let mut out = Vec::with_capacity(take as usize);
+        for k in 0..take {
+            let idx = ((total - 1 - k) % cap) as usize;
+            if let Some(span) = self.slots[idx].lock().expect("trace journal poisoned").clone() {
+                out.push(span);
+            }
+        }
+        out
+    }
+}
+
+/// The scheduler's tracing sink: trace-id allocator, span journal,
+/// slowlog, and the served-latency histograms (per-lane × warm/cold plus
+/// the independently recorded scheduler-wide one). See module docs.
+pub struct Tracer {
+    opts: TraceOptions,
+    next_id: AtomicU64,
+    lane_names: Vec<String>,
+    journal: Journal,
+    slowlog: Mutex<VecDeque<Arc<Span>>>,
+    lanes: Vec<LaneHists>,
+    /// All served requests, any lane, any temperature — recorded
+    /// independently so the per-lane-merge invariant is a real check.
+    overall: Histogram,
+    /// Queue residency (`picked - queued`) of batched requests.
+    queue_us: Histogram,
+}
+
+impl Tracer {
+    /// New tracer for a scheduler with the given (normalized) lane names.
+    pub fn new(opts: TraceOptions, lane_names: Vec<String>) -> Self {
+        let journal = Journal::new(opts.journal_cap);
+        let lanes = lane_names.iter().map(|_| LaneHists::default()).collect();
+        Self {
+            opts,
+            next_id: AtomicU64::new(0),
+            lane_names,
+            journal,
+            slowlog: Mutex::new(VecDeque::new()),
+            lanes,
+            overall: Histogram::new(),
+            queue_us: Histogram::new(),
+        }
+    }
+
+    /// The tunables this tracer runs with.
+    pub fn options(&self) -> &TraceOptions {
+        &self.opts
+    }
+
+    /// Start a span: allocates the next trace id and stamps admission.
+    pub fn begin(&self) -> Arc<ActiveSpan> {
+        Arc::new(ActiveSpan::new(self.next_id.fetch_add(1, Ordering::Relaxed) + 1))
+    }
+
+    /// Finalize a span: clamp the stage chain monotone, record served
+    /// latency into the lane/warm histograms and the scheduler-wide one,
+    /// journal the span, and retain it in the slowlog when over
+    /// threshold. Returns the completed span.
+    pub fn finish(
+        &self,
+        active: &ActiveSpan,
+        workload: &str,
+        lane: usize,
+        outcome: &'static str,
+        warm: bool,
+        fingerprint: Option<Fingerprint>,
+    ) -> Arc<Span> {
+        let total_us = active.elapsed_us();
+        // Monotone clamp: stage marks are written by different threads
+        // off the same Instant, but a mark stored after a later stage's
+        // mark could still read lower on a coarse clock.
+        let mut floor = 0u64;
+        let mut clamp = |raw: u64| -> Option<u64> {
+            if raw == UNSET {
+                return None;
+            }
+            floor = raw.max(floor).min(total_us);
+            Some(floor)
+        };
+        let queued_us = clamp(active.queued_us.load(Ordering::Relaxed));
+        let picked_us = clamp(active.picked_us.load(Ordering::Relaxed));
+        let solved_us = clamp(active.solved_us.load(Ordering::Relaxed));
+        let simmed_us = clamp(active.simmed_us.load(Ordering::Relaxed));
+        let span = Arc::new(Span {
+            id: active.id,
+            workload: workload.to_string(),
+            lane: lane as u32,
+            outcome,
+            warm,
+            fingerprint,
+            queued_us,
+            picked_us,
+            solved_us,
+            simmed_us,
+            total_us,
+        });
+        if outcome == "OK" {
+            let hists = &self.lanes[lane];
+            if warm { &hists.warm } else { &hists.cold }.record(total_us);
+            self.overall.record(total_us);
+            if let (Some(q), Some(p)) = (queued_us, picked_us) {
+                self.queue_us.record(p - q);
+            }
+        }
+        self.journal.push(span.clone());
+        if total_us >= self.opts.slowlog_ms.saturating_mul(1000) {
+            let mut slow = self.slowlog.lock().expect("slowlog poisoned");
+            if slow.len() >= self.opts.slowlog_cap.max(1) {
+                slow.pop_front();
+            }
+            slow.push_back(span.clone());
+        }
+        span
+    }
+
+    /// Newest-first journal dump (up to `n` spans).
+    pub fn recent(&self, n: usize) -> Vec<Arc<Span>> {
+        self.journal.recent(n)
+    }
+
+    /// Newest-first slowlog dump (up to `n` spans).
+    pub fn slow(&self, n: usize) -> Vec<Arc<Span>> {
+        let slow = self.slowlog.lock().expect("slowlog poisoned");
+        slow.iter().rev().take(n).cloned().collect()
+    }
+
+    /// The lane name behind a span's lane index.
+    pub fn lane_name(&self, lane: u32) -> &str {
+        self.lane_names.get(lane as usize).map(String::as_str).unwrap_or("?")
+    }
+
+    /// Warm served-latency histogram of one lane.
+    pub fn warm_hist(&self, lane: usize) -> &Histogram {
+        &self.lanes[lane].warm
+    }
+
+    /// Cold served-latency histogram of one lane.
+    pub fn cold_hist(&self, lane: usize) -> &Histogram {
+        &self.lanes[lane].cold
+    }
+
+    /// The independently recorded scheduler-wide served-latency histogram.
+    pub fn overall(&self) -> &Histogram {
+        &self.overall
+    }
+
+    /// Queue-residency histogram (batched requests only).
+    pub fn queue_hist(&self) -> &Histogram {
+        &self.queue_us
+    }
+
+    /// Merge of every per-lane warm + cold histogram — by the invariant,
+    /// snapshot-equal to [`overall`](Tracer::overall) when quiescent.
+    pub fn merged_lanes(&self) -> Histogram {
+        let merged = Histogram::new();
+        for lane in &self.lanes {
+            merged.merge(&lane.warm);
+            merged.merge(&lane.cold);
+        }
+        merged
+    }
+
+    /// The `STATS` response's `latency` block: overall + queue + per-lane
+    /// warm/cold histogram summaries, journal/slowlog depths, spans
+    /// issued.
+    pub fn latency_json(&self) -> Json {
+        let lanes: std::collections::BTreeMap<String, Json> = self
+            .lane_names
+            .iter()
+            .zip(&self.lanes)
+            .map(|(name, h)| {
+                (name.clone(), Json::obj(vec![("warm", h.warm.to_json()), ("cold", h.cold.to_json())]))
+            })
+            .collect();
+        Json::obj(vec![
+            ("overall", self.overall.to_json()),
+            ("queue_us", self.queue_us.to_json()),
+            ("lanes", Json::Obj(lanes)),
+            ("spans", Json::Num(self.next_id.load(Ordering::Relaxed) as f64)),
+            ("journal_cap", Json::int(self.journal.slots.len())),
+            ("slowlog_ms", Json::Num(self.opts.slowlog_ms as f64)),
+            ("slowlog_depth", Json::int(self.slowlog.lock().expect("slowlog poisoned").len())),
+        ])
+    }
+
+    /// One span as a JSON object (a `TRACE`/`SLOW` output line).
+    pub fn span_json(&self, s: &Span) -> Json {
+        let mut fields = vec![
+            ("id", Json::Num(s.id as f64)),
+            ("workload", Json::str(&s.workload)),
+            ("lane", Json::str(self.lane_name(s.lane))),
+            ("outcome", Json::str(s.outcome)),
+            ("warm", Json::Bool(s.warm)),
+        ];
+        if let Some(fp) = s.fingerprint {
+            fields.push(("fingerprint", Json::str(fp.hex())));
+        }
+        for (name, v) in s.stages() {
+            fields.push((name, Json::Num(v as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Protocol rendering for `TRACE [n]` / `SLOW [n]`: a `{"spans": N}`
+    /// header line followed by one JSON object per span, newest first.
+    pub fn dump(&self, spans: &[Arc<Span>]) -> String {
+        let mut out = Json::obj(vec![("spans", Json::int(spans.len()))]).to_string();
+        for s in spans {
+            out.push('\n');
+            out.push_str(&self.span_json(s).to_string());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer(opts: TraceOptions) -> Tracer {
+        Tracer::new(opts, vec!["default".into(), "gold".into()])
+    }
+
+    #[test]
+    fn ids_are_monotonic_and_spans_journal() {
+        let t = tracer(TraceOptions::default());
+        let a = t.begin();
+        let b = t.begin();
+        assert!(b.id() > a.id());
+        t.finish(&a, "w1", 0, "OK", true, None);
+        t.finish(&b, "w2", 1, "OK", false, None);
+        let recent = t.recent(10);
+        assert_eq!(recent.len(), 2);
+        assert_eq!(recent[0].id, b.id(), "journal is newest-first");
+        assert_eq!(recent[0].workload, "w2");
+        assert_eq!(t.lane_name(recent[0].lane), "gold");
+        assert_eq!(t.recent(1).len(), 1);
+    }
+
+    #[test]
+    fn journal_ring_retains_only_cap_spans() {
+        let t = tracer(TraceOptions { journal_cap: 4, ..TraceOptions::default() });
+        for i in 0..10 {
+            let s = t.begin();
+            t.finish(&s, &format!("w{i}"), 0, "OK", true, None);
+        }
+        let recent = t.recent(100);
+        assert_eq!(recent.len(), 4, "ring keeps the newest journal_cap spans");
+        assert_eq!(recent[0].workload, "w9");
+        assert_eq!(recent[3].workload, "w6");
+    }
+
+    #[test]
+    fn slowlog_catches_threshold_and_caps() {
+        // Threshold 0ms: everything is "slow".
+        let t = tracer(TraceOptions { slowlog_ms: 0, slowlog_cap: 2, ..TraceOptions::default() });
+        for i in 0..5 {
+            let s = t.begin();
+            t.finish(&s, &format!("s{i}"), 0, "OK", false, None);
+        }
+        let slow = t.slow(10);
+        assert_eq!(slow.len(), 2, "slowlog is bounded");
+        assert_eq!(slow[0].workload, "s4", "slowlog is newest-first");
+        // A huge threshold catches nothing.
+        let quiet = tracer(TraceOptions { slowlog_ms: u64::MAX, ..TraceOptions::default() });
+        let s = quiet.begin();
+        quiet.finish(&s, "fast", 0, "OK", true, None);
+        assert!(quiet.slow(10).is_empty());
+    }
+
+    #[test]
+    fn only_served_spans_record_latency() {
+        let t = tracer(TraceOptions::default());
+        for (outcome, warm) in [("OK", true), ("OK", false), ("SHED", false), ("TIMEOUT", false)] {
+            let s = t.begin();
+            t.finish(&s, "w", 0, outcome, warm, None);
+        }
+        assert_eq!(t.overall().count(), 2, "only OK spans are latency samples");
+        assert_eq!(t.warm_hist(0).count(), 1);
+        assert_eq!(t.cold_hist(0).count(), 1);
+        assert_eq!(t.recent(10).len(), 4, "every span journals regardless of outcome");
+    }
+
+    #[test]
+    fn merged_lanes_equals_overall() {
+        let t = tracer(TraceOptions::default());
+        for i in 0..50u64 {
+            let s = t.begin();
+            t.finish(&s, "w", (i % 2) as usize, "OK", i % 3 == 0, None);
+        }
+        assert_eq!(t.merged_lanes().snapshot(), t.overall().snapshot());
+        assert_eq!(t.overall().count(), 50);
+    }
+
+    #[test]
+    fn stage_marks_come_back_monotone() {
+        let t = tracer(TraceOptions::default());
+        let s = t.begin();
+        // Mark out of lifecycle order; the finish clamp must restore
+        // queued <= picked <= solved <= simmed <= total.
+        s.mark_simmed();
+        s.mark_solved();
+        s.mark_picked();
+        s.mark_queued();
+        let span = t.finish(&s, "w", 0, "OK", false, None);
+        let stages = span.stages();
+        assert_eq!(stages.len(), 5);
+        for pair in stages.windows(2) {
+            assert!(pair[0].1 <= pair[1].1, "stage {:?} after {:?}", pair[1], pair[0]);
+        }
+    }
+
+    #[test]
+    fn unmarked_stages_are_absent() {
+        let t = tracer(TraceOptions::default());
+        let s = t.begin();
+        let span = t.finish(&s, "warm-fast-path", 0, "OK", true, None);
+        assert!(span.queued_us.is_none() && span.solved_us.is_none());
+        assert_eq!(span.stages().len(), 1, "only total_us remains");
+        let j = t.span_json(&span);
+        assert!(j.get_opt("queued_us").is_none());
+        assert!(j.get("total_us").is_ok());
+        assert_eq!(j.get("lane").unwrap().as_str().unwrap(), "default");
+    }
+
+    #[test]
+    fn dump_has_header_and_one_line_per_span() {
+        let t = tracer(TraceOptions::default());
+        for _ in 0..3 {
+            let s = t.begin();
+            t.finish(&s, "w", 0, "OK", true, None);
+        }
+        let text = t.dump(&t.recent(2));
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let header = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(header.get("spans").unwrap().as_usize().unwrap(), 2);
+        for line in &lines[1..] {
+            let j = crate::util::json::parse(line).unwrap();
+            assert_eq!(j.get("outcome").unwrap().as_str().unwrap(), "OK");
+        }
+    }
+
+    #[test]
+    fn disabled_options_flip_only_the_switch() {
+        let off = TraceOptions::disabled();
+        assert!(!off.enabled);
+        assert_eq!(off.journal_cap, TraceOptions::default().journal_cap);
+    }
+}

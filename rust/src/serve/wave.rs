@@ -13,6 +13,10 @@
 //!   fairness smoke greps it).
 //! * [`two_tenant_wave`] — the threaded 3:1 wave over a real
 //!   [`BatchScheduler`] with distinct cold solves.
+//! * [`mixed_lane_wave`] — a seeded random mix of lanes and warm/cold
+//!   requests over a traced scheduler, drained to quiescence — the
+//!   driver behind the latency-histogram merge-invariant checks
+//!   (property test and self-tests).
 //!
 //! The threaded wave's early-share measurement deliberately reads the
 //! dispatcher's own per-lane `batches` counters (sampled by a monitor
@@ -37,6 +41,7 @@ use crate::tiling::Strategy;
 use super::batch::{AdmissionPolicy, BatchOptions, BatchScheduler};
 use super::lanes::{LaneSet, LaneSpec};
 use super::service::{PlanService, ServeOptions};
+use super::trace::TraceOptions;
 
 /// Saturated run on the deterministic scheduling core: `quanta`
 /// unit-cost quanta over the named `(name, weight)` lanes, every lane
@@ -105,6 +110,7 @@ pub fn two_tenant_wave(per_lane: usize, window: u64) -> Result<WaveReport> {
             max_batch: 1,
             policy: AdmissionPolicy::Block,
             lanes: vec![LaneSpec::new("gold", 3, 64), LaneSpec::new("free", 1, 64)],
+            trace: TraceOptions::default(),
         },
     );
     // Build every request up front: nothing fallible runs between spawn
@@ -193,4 +199,75 @@ pub fn two_tenant_wave(per_lane: usize, window: u64) -> Result<WaveReport> {
         "scheduler totals must equal the per-lane sums"
     );
     Ok(WaveReport { gold_early, total_early, stats })
+}
+
+/// Randomized mixed-lane wave for the latency invariants: `total`
+/// requests split across the `gold`/`free`/`default` lanes by a
+/// deterministic LCG over `seed`, mixing warm fast-path repeats (one
+/// fingerprint is pre-warmed before the wave) with distinct cold
+/// solves, all released at one barrier. Blocks until every request is
+/// served, then returns the (traced, quiescent) scheduler so the caller
+/// can assert tracer invariants — per-lane histogram merge equals the
+/// scheduler-wide histogram, journal/slowlog contents, span counts.
+pub fn mixed_lane_wave(seed: u64, total: usize) -> Result<BatchScheduler> {
+    ensure!(total >= 1, "wave needs at least one request");
+    let cap = 64usize.max(total);
+    let service = Arc::new(PlanService::new(ServeOptions::default()));
+    let sched = BatchScheduler::new(
+        service,
+        BatchOptions {
+            queue_capacity: cap,
+            batch_window: Duration::from_millis(1),
+            max_batch: 4,
+            policy: AdmissionPolicy::Block,
+            lanes: vec![LaneSpec::new("gold", 3, cap), LaneSpec::new("free", 1, cap)],
+            trace: TraceOptions::default(),
+        },
+    );
+    // Pre-warm one fingerprint so the wave mixes true warm fast-path
+    // hits with cold solves in every lane.
+    let warm_cfg = DeployConfig::preset("cluster-only", Strategy::Ftl)?;
+    let outcome = sched.deploy("prewarm", experiments::vit_mlp_stage(16, 24, 48), warm_cfg)?;
+    ensure!(outcome.kind() == "OK", "pre-warm request must be served");
+    // Deterministic LCG: lane and warm/cold draws reproduce per seed.
+    let mut state = seed.wrapping_mul(2).wrapping_add(1);
+    let mut next = move || {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        state >> 33
+    };
+    let lane_names = [Some("gold"), Some("free"), None];
+    let mut requests: Vec<(String, Option<&'static str>, crate::ir::Graph, DeployConfig)> = Vec::new();
+    for i in 0..total {
+        let lane = lane_names[(next() % 3) as usize];
+        // Half the draws (on average) repeat the pre-warmed shape; the
+        // rest are distinct cold solves (24 + 8i never collides with 16).
+        let seq_len = if next() % 2 == 0 { 16 } else { 24 + 8 * i };
+        let graph = experiments::vit_mlp_stage(seq_len, 24, 48);
+        let cfg = DeployConfig::preset("cluster-only", Strategy::Ftl)?;
+        requests.push((format!("mix-{i}"), lane, graph, cfg));
+    }
+    let barrier = Barrier::new(requests.len());
+    let mut first_error: Option<anyhow::Error> = None;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (workload, lane, graph, cfg) in requests {
+            let (sched, barrier) = (&sched, &barrier);
+            handles.push(s.spawn(move || -> Result<()> {
+                barrier.wait();
+                let outcome = sched.deploy_in_lane(&workload, graph, cfg, lane, None)?;
+                ensure!(outcome.kind() == "OK", "wave request {workload} must be served");
+                Ok(())
+            }));
+        }
+        for h in handles {
+            let result = h.join().unwrap_or_else(|_| Err(anyhow!("wave thread panicked")));
+            if let Err(e) = result {
+                first_error.get_or_insert(e);
+            }
+        }
+    });
+    if let Some(e) = first_error {
+        return Err(e.context("mixed-lane wave request failed"));
+    }
+    Ok(sched)
 }

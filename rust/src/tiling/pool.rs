@@ -24,11 +24,16 @@
 //! The pool also aggregates the `solver.*` search counters surfaced in
 //! the serve layer's `stats_json`: per completed solve, how many search
 //! points were actually scored vs pruned away by the capacity bound or
-//! the best-so-far cost bound.
+//! the best-so-far cost bound. Counters are saturating
+//! ([`crate::metrics::Counter`]) so a long-lived replica pins at
+//! `u64::MAX` instead of wrapping; a [`crate::metrics::Histogram`] of
+//! per-group solve wall time (`group_solve_us`) rides along for the
+//! observability layer.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 
+use crate::metrics::{Counter, Histogram};
 use crate::util::json::Json;
 
 /// Snapshot of the search counters (see [`SearchCounters`]).
@@ -58,14 +63,17 @@ impl SearchStats {
     }
 
     /// JSON rendering (embedded in the serve stats snapshot).
+    /// `Json::Num`, not `Json::int`: a saturated counter (`u64::MAX`)
+    /// must render, not panic on the i64 conversion.
     pub fn to_json(&self) -> Json {
+        let n = |v: u64| Json::Num(v as f64);
         Json::obj(vec![
-            ("solves", Json::int(self.solves as usize)),
-            ("space", Json::int(self.space as usize)),
-            ("scored", Json::int(self.scored as usize)),
-            ("capacity_pruned", Json::int(self.capacity_pruned as usize)),
-            ("bound_pruned", Json::int(self.bound_pruned as usize)),
-            ("subtrees_cut", Json::int(self.subtrees_cut as usize)),
+            ("solves", n(self.solves)),
+            ("space", n(self.space)),
+            ("scored", n(self.scored)),
+            ("capacity_pruned", n(self.capacity_pruned)),
+            ("bound_pruned", n(self.bound_pruned)),
+            ("subtrees_cut", n(self.subtrees_cut)),
         ])
     }
 }
@@ -76,34 +84,34 @@ impl SearchStats {
 /// quiesced pool (asserted by the search-space accounting property test).
 #[derive(Debug, Default)]
 pub struct SearchCounters {
-    solves: AtomicU64,
-    space: AtomicU64,
-    scored: AtomicU64,
-    capacity_pruned: AtomicU64,
-    bound_pruned: AtomicU64,
-    subtrees_cut: AtomicU64,
+    solves: Counter,
+    space: Counter,
+    scored: Counter,
+    capacity_pruned: Counter,
+    bound_pruned: Counter,
+    subtrees_cut: Counter,
 }
 
 impl SearchCounters {
     /// Merge one solve's local tally.
     pub fn merge(&self, s: &SearchStats) {
-        self.solves.fetch_add(s.solves, Ordering::Relaxed);
-        self.space.fetch_add(s.space, Ordering::Relaxed);
-        self.scored.fetch_add(s.scored, Ordering::Relaxed);
-        self.capacity_pruned.fetch_add(s.capacity_pruned, Ordering::Relaxed);
-        self.bound_pruned.fetch_add(s.bound_pruned, Ordering::Relaxed);
-        self.subtrees_cut.fetch_add(s.subtrees_cut, Ordering::Relaxed);
+        self.solves.add(s.solves);
+        self.space.add(s.space);
+        self.scored.add(s.scored);
+        self.capacity_pruned.add(s.capacity_pruned);
+        self.bound_pruned.add(s.bound_pruned);
+        self.subtrees_cut.add(s.subtrees_cut);
     }
 
     /// Current totals.
     pub fn snapshot(&self) -> SearchStats {
         SearchStats {
-            solves: self.solves.load(Ordering::Relaxed),
-            space: self.space.load(Ordering::Relaxed),
-            scored: self.scored.load(Ordering::Relaxed),
-            capacity_pruned: self.capacity_pruned.load(Ordering::Relaxed),
-            bound_pruned: self.bound_pruned.load(Ordering::Relaxed),
-            subtrees_cut: self.subtrees_cut.load(Ordering::Relaxed),
+            solves: self.solves.get(),
+            space: self.space.get(),
+            scored: self.scored.get(),
+            capacity_pruned: self.capacity_pruned.get(),
+            bound_pruned: self.bound_pruned.get(),
+            subtrees_cut: self.subtrees_cut.get(),
         }
     }
 }
@@ -116,12 +124,20 @@ pub struct SolverPool {
     /// extras — the calling thread itself is always worker zero).
     extras_in_use: AtomicUsize,
     counters: SearchCounters,
+    /// Wall time per completed group solve, in µs (see
+    /// [`SolverPool::group_solve_us`]).
+    group_solve_us: Histogram,
 }
 
 impl SolverPool {
     /// Pool with an explicit thread cap (`0` = auto-detect).
     pub fn new(threads: usize) -> Self {
-        Self { threads: AtomicUsize::new(threads), extras_in_use: AtomicUsize::new(0), counters: SearchCounters::default() }
+        Self {
+            threads: AtomicUsize::new(threads),
+            extras_in_use: AtomicUsize::new(0),
+            counters: SearchCounters::default(),
+            group_solve_us: Histogram::new(),
+        }
     }
 
     /// The process-wide pool. Auto thread count honours
@@ -154,16 +170,24 @@ impl SolverPool {
         &self.counters
     }
 
+    /// Wall-time histogram of per-group branch-and-bound solves, in µs
+    /// ([`crate::tiling::solve_group_in`] records one sample per solve).
+    pub fn group_solve_us(&self) -> &Histogram {
+        &self.group_solve_us
+    }
+
     /// Counter snapshot.
     pub fn stats(&self) -> SearchStats {
         self.counters.snapshot()
     }
 
-    /// The `stats_json` rendering: thread cap + search counters.
+    /// The `stats_json` rendering: thread cap + search counters + the
+    /// per-group solve-time histogram.
     pub fn stats_json(&self) -> Json {
         let mut j = self.stats().to_json();
         if let Json::Obj(m) = &mut j {
             m.insert("threads".into(), Json::int(self.threads()));
+            m.insert("group_solve_us".into(), self.group_solve_us.to_json());
         }
         j
     }
@@ -332,6 +356,28 @@ mod tests {
         let j = pool.stats_json();
         assert_eq!(j.get("threads").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.get("space").unwrap().as_usize().unwrap(), 100);
+    }
+
+    #[test]
+    fn counters_saturate_instead_of_wrapping() {
+        let pool = SolverPool::new(2);
+        pool.counters().merge(&SearchStats { space: u64::MAX - 1, ..Default::default() });
+        pool.counters().merge(&SearchStats { space: 5, ..Default::default() });
+        assert_eq!(pool.stats().space, u64::MAX, "merge past u64::MAX must pin, not wrap");
+        // A saturated counter must still render (to_json would panic if
+        // it forced the value through i64).
+        let j = pool.stats_json();
+        assert!(j.get("space").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn group_solve_hist_records_and_renders() {
+        let pool = SolverPool::new(1);
+        pool.group_solve_us().record(120);
+        pool.group_solve_us().record(480);
+        let j = pool.stats_json();
+        let h = j.get("group_solve_us").unwrap();
+        assert_eq!(h.get("count").unwrap().as_u64().unwrap(), 2);
     }
 
     #[test]

@@ -34,6 +34,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -205,7 +206,9 @@ pub fn solve_group_in(
     pool: &SolverPool,
 ) -> Result<GroupSolution> {
     let space = GroupSpace::build(graph, soc, group, homes, opts, double_buffer)?;
+    let solve_start = Instant::now();
     let (best, tally) = space.branch_and_bound(pool);
+    pool.group_solve_us().record_duration(solve_start.elapsed());
     pool.counters().merge(&tally);
     space.materialise(graph, group, best)
 }

@@ -1,0 +1,197 @@
+//! Latency-histogram and tracing properties for the serve stack.
+//!
+//! Three layers, mirroring the observability docs in `ftl::serve`:
+//!
+//! * **Histogram properties** — seeded random value sets across the full
+//!   magnitude range assert the documented quantile bound (the reported
+//!   bucket midpoint is within 1/8 relative error of the empirical
+//!   same-rank sample) and that merged histograms answer quantiles
+//!   bounded by their inputs' answers.
+//! * **Wave invariants** — the shared `serve::wave::mixed_lane_wave`
+//!   driver (seeded, multi-threaded, mixed warm/cold traffic across two
+//!   lanes) must leave the tracer with per-lane histograms that merge
+//!   bucket-for-bucket into the independently recorded scheduler-wide
+//!   histogram, at any `FTL_SOLVER_THREADS`.
+//! * **Protocol regressions** — `METRICS` round-trips the strict
+//!   exposition parser with per-lane×temp labelled series, `STATS`
+//!   carries the `server` identity block and `latency` summaries, and
+//!   `TRACE`/`SLOW` dump JSON-lines spans with monotone stage offsets.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::experiments;
+use ftl::metrics::{expo, Histogram};
+use ftl::serve::wave::mixed_lane_wave;
+use ftl::serve::{handle_command, BatchOptions, BatchScheduler, PlanService, ServeOptions, TraceOptions};
+use ftl::tiling::Strategy;
+use ftl::util::json;
+use ftl::util::prop::{cases, Rng};
+
+// ------------------------------------------------------ histogram properties
+
+/// Log-uniform-ish value: a full-width random word right-shifted by a
+/// random amount, hitting every bucket decade the table has.
+fn log_uniform(rng: &mut Rng) -> u64 {
+    rng.next_u64() >> rng.range(0, 63)
+}
+
+const QS: [f64; 9] = [0.0, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0];
+
+#[test]
+fn prop_quantile_is_within_documented_relative_error_of_empirical_rank() {
+    cases(60, |rng| {
+        let n = rng.range(1, 2000);
+        let h = Histogram::new();
+        let mut values = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = log_uniform(rng);
+            h.record(v);
+            values.push(v);
+        }
+        values.sort_unstable();
+        for q in QS {
+            // Same rank the histogram documents: clamp(ceil(q*n), 1, n).
+            let rank = ((q * n as f64).ceil() as u64).clamp(1, n as u64) as usize;
+            let empirical = values[rank - 1];
+            let got = h.quantile(q);
+            assert!(
+                got.abs_diff(empirical).saturating_mul(Histogram::MAX_RELATIVE_ERROR_DEN) <= empirical,
+                "quantile error bound broken: q={q} n={n} empirical={empirical} got={got}"
+            );
+        }
+        assert_eq!(h.count(), n as u64);
+        assert_eq!(h.min(), values[0], "min is exact");
+        assert_eq!(h.max(), values[n - 1], "max is exact");
+    });
+}
+
+#[test]
+fn prop_merged_quantiles_are_bounded_by_the_inputs() {
+    cases(60, |rng| {
+        let (a, b) = (Histogram::new(), Histogram::new());
+        // Different magnitude profiles so the two inputs genuinely
+        // disagree about where the mass sits.
+        for _ in 0..rng.range(1, 400) {
+            a.record(log_uniform(rng) >> 20);
+        }
+        for _ in 0..rng.range(1, 400) {
+            b.record(log_uniform(rng));
+        }
+        let m = Histogram::new();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.count(), a.count() + b.count());
+        for q in QS {
+            let (qa, qb, qm) = (a.quantile(q), b.quantile(q), m.quantile(q));
+            assert!(
+                qa.min(qb) <= qm && qm <= qa.max(qb),
+                "merged quantile must lie between its inputs: q={q} a={qa} b={qb} merged={qm}"
+            );
+        }
+    });
+}
+
+// ----------------------------------------------------------- wave invariants
+
+#[test]
+fn wave_lane_histograms_merge_bucket_exact_into_scheduler_wide() {
+    for (seed, total) in [(1u64, 9usize), (42, 14), (2026, 21)] {
+        let sched = mixed_lane_wave(seed, total).unwrap();
+        let tracer = sched.tracer().expect("wave schedulers trace by default");
+        assert_eq!(
+            tracer.merged_lanes().snapshot(),
+            tracer.overall().snapshot(),
+            "per-lane merge must equal the scheduler-wide histogram (seed {seed})"
+        );
+        // Every wave request (plus the pre-warm) served OK, so each is a
+        // latency sample; the queue histogram only sees batched requests.
+        assert_eq!(tracer.overall().count(), total as u64 + 1, "seed {seed}");
+        assert!(tracer.queue_hist().count() <= tracer.overall().count(), "seed {seed}");
+    }
+}
+
+// -------------------------------------------------------- protocol coverage
+
+#[test]
+fn metrics_exposition_round_trips_with_per_lane_series() {
+    let sched = mixed_lane_wave(7, 10).unwrap();
+    let text = sched.metrics_text();
+    let samples = expo::parse(&text).expect("METRICS must satisfy its own parser");
+    for lane in ["gold", "free"] {
+        for temp in ["warm", "cold"] {
+            assert!(
+                samples.iter().any(|s| s.name == "ftl_latency_us_count"
+                    && s.labels.iter().any(|(k, v)| k == "lane" && v == lane)
+                    && s.labels.iter().any(|(k, v)| k == "temp" && v == temp)),
+                "missing latency series for lane={lane} temp={temp}"
+            );
+        }
+    }
+    for name in ["ftl_latency_total_us_count", "ftl_queue_us_count"] {
+        assert!(samples.iter().any(|s| s.name == name), "missing {name}");
+    }
+    assert!(samples.iter().all(|s| s.name.starts_with("ftl_")), "all series share the ftl prefix");
+    // The protocol entry point serves the same text, newline-trimmed so
+    // the connection loop's writeln! terminates it uniformly.
+    assert_eq!(handle_command(&sched, "METRICS"), text.trim_end());
+}
+
+#[test]
+fn stats_carries_server_identity_and_latency_summaries() {
+    let sched = mixed_lane_wave(11, 6).unwrap();
+    let j = sched.stats_json();
+    let server = j.get("server").unwrap();
+    assert_eq!(server.get("version").unwrap().as_str().unwrap(), env!("CARGO_PKG_VERSION"));
+    assert!(server.get("uptime_ms").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(server.get("started_at_unix_ms").unwrap().as_f64().unwrap() > 0.0);
+    let lanes = server.get("config").unwrap().get("lanes").unwrap();
+    assert!(lanes.get_opt("gold").is_some() && lanes.get_opt("free").is_some());
+    let trace = server.get("config").unwrap().get("trace").unwrap();
+    assert!(trace.get("enabled").unwrap().as_bool().unwrap());
+    let latency = j.get("latency").unwrap();
+    assert_eq!(latency.get("overall").unwrap().get("count").unwrap().as_u64().unwrap(), 7);
+    assert!(latency.get("lanes").unwrap().get_opt("gold").is_some());
+}
+
+#[test]
+fn trace_and_slow_dump_monotone_json_spans() {
+    // slowlog_ms = 0: every completed request crosses the threshold, so
+    // SLOW is populated without needing a genuinely slow solve.
+    let service = Arc::new(PlanService::new(ServeOptions::default()));
+    let sched = BatchScheduler::new(
+        service,
+        BatchOptions {
+            batch_window: Duration::ZERO,
+            trace: TraceOptions { slowlog_ms: 0, ..TraceOptions::default() },
+            ..BatchOptions::default()
+        },
+    );
+    let graph = experiments::vit_mlp_stage(16, 24, 48);
+    let cfg = DeployConfig::preset("cluster-only", Strategy::Ftl).unwrap();
+    sched.deploy("slow-one", graph.clone(), cfg.clone()).unwrap().served().expect("cold serve");
+    sched.deploy("warm-one", graph, cfg).unwrap().served().expect("warm serve");
+
+    for cmd in ["TRACE 8", "SLOW 8"] {
+        let dump = handle_command(&sched, cmd);
+        let mut lines = dump.lines();
+        let header = json::parse(lines.next().expect("dump header")).unwrap();
+        assert!(header.get("spans").unwrap().as_usize().unwrap() >= 2, "{cmd} must hold both spans");
+        let mut saw_ok = false;
+        for line in lines {
+            let span = json::parse(line).unwrap();
+            saw_ok |= span.get("outcome").unwrap().as_str().unwrap() == "OK";
+            assert!(span.get("id").unwrap().as_u64().unwrap() >= 1);
+            let mut prev = 0u64;
+            for key in ["queued_us", "picked_us", "solved_us", "simmed_us", "total_us"] {
+                if let Some(v) = span.get_opt(key) {
+                    let v = v.as_u64().unwrap();
+                    assert!(v >= prev, "{cmd}: stages must be monotone ({key}={v} < {prev})");
+                    prev = v;
+                }
+            }
+        }
+        assert!(saw_ok, "{cmd} must include the served spans");
+    }
+}
