@@ -15,14 +15,17 @@
 //! ```
 //!
 //! and the response is one JSON line (`METRICS`/`TRACE`/`SLOW` are
-//! multi-line). Requests are handled by a thread
-//! per connection, but the heavy lifting is shared: every DEPLOY goes
-//! through the [`BatchScheduler`] (admission control + SoC-grouped
-//! batching) into the [`PlanService`], so structurally identical
-//! requests are served from the sharded plan + sim caches (`"cached"` /
-//! `"sim_cached"` in the response), concurrent misses for the same key
-//! coalesce into a single branch-&-bound solve, and overload sheds
-//! (`"outcome": "SHED"`) instead of stalling the queue.
+//! multi-line). Commands may also be framed `FTL1 <id> <command...>`
+//! for multiplexed ids and streamed partial replies — see PROTOCOL.md.
+//! Connections are served by the async front door
+//! ([`ftl::serve::Frontend`]: one readiness-polled event loop, many
+//! in-flight requests per connection), and the heavy lifting is shared:
+//! every DEPLOY goes through the [`BatchScheduler`] (admission control
+//! + SoC-grouped batching) into the [`PlanService`], so structurally
+//! identical requests are served from the sharded plan + sim caches
+//! (`"cached"` / `"sim_cached"` in the response), concurrent misses for
+//! the same key coalesce into a single branch-&-bound solve, and
+//! overload sheds (`"outcome": "SHED"`) instead of stalling the queue.
 //!
 //! ```text
 //! cargo run --release --example deploy_server &          # listens on 127.0.0.1:7117
@@ -42,7 +45,9 @@
 //! against a dedicated low-slowlog server, asserting every reply's
 //! trace id is journalled with monotone stage offsets and the
 //! deliberately slow cold deploy through the weight-1 lane lands in
-//! `SLOW` — and exit.
+//! `SLOW` — and finally probe the v1 front door itself (streamed
+//! plan/sim/done events, out-of-order ids, legacy v0 ordering;
+//! greppable `stream_wave` / `v0_wave` lines) — and exit.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -51,31 +56,10 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use ftl::serve::{
-    handle_command, handle_line, BatchOptions, BatchScheduler, LaneSpec, PersistOptions, PlanService,
-    ServeOptions, Snapshotter, TraceOptions,
+    handle_line, BatchOptions, BatchScheduler, Frontend, FrontendOptions, LaneSpec, PersistOptions,
+    PlanService, ServeOptions, Snapshotter, TraceOptions,
 };
 use ftl::util::json::Json;
-
-fn client(conn: TcpStream, scheduler: Arc<BatchScheduler>) {
-    let peer = conn.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-    let reader = BufReader::new(conn.try_clone().expect("clone stream"));
-    let mut writer = conn;
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        // Protocol handling lives in ftl::serve::handle_command, shared
-        // with the `ftl serve` subcommand. Multi-line responses
-        // (METRICS/TRACE/SLOW) come back newline-trimmed, so one
-        // writeln! terminates every response uniformly.
-        let response = handle_command(&scheduler, line.trim());
-        if writeln!(writer, "{response}").is_err() {
-            break;
-        }
-    }
-    eprintln!("[server] {peer} disconnected");
-}
 
 /// Fire one request over a fresh connection, return the parsed response.
 fn request(addr: std::net::SocketAddr, req: &str) -> Result<Json> {
@@ -109,14 +93,9 @@ fn request_lines(addr: std::net::SocketAddr, req: &str) -> Result<Vec<String>> {
 }
 
 fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>, cache_dir: Option<String>) -> Result<()> {
-    let local = listener.local_addr()?;
-    let accept_scheduler = scheduler.clone();
-    std::thread::spawn(move || {
-        for conn in listener.incoming().flatten() {
-            let scheduler = accept_scheduler.clone();
-            std::thread::spawn(move || client(conn, scheduler));
-        }
-    });
+    // The same front door as production mode serves the whole self-test.
+    let door = Frontend::new(scheduler.clone(), FrontendOptions::default()).serve(listener)?;
+    let local = door.addr();
 
     // Wave 1: concurrent batch with duplicates — the three duplicates of
     // the siracusa/ftl deploy must coalesce onto one solve.
@@ -241,6 +220,21 @@ fn self_test(listener: TcpListener, scheduler: Arc<BatchScheduler>, cache_dir: O
     // deliberately low slowlog threshold).
     trace_wave()?;
 
+    // Wave 6: the v1 front door contract, over the main server — cold
+    // deploys stream plan → sim* → done, warm ones collapse to a single
+    // frame, ids complete out of order, and bare v0 lines stay ordered
+    // with their legacy reply shape (shared probes in ftl::serve::wave,
+    // also run by `ftl serve --self-test`).
+    let addr_text = local.to_string();
+    let probe = ftl::serve::wave::streaming_probe(&addr_text)?;
+    println!(
+        "[server] stream_wave plan={} sim={} done={} out_of_order={}",
+        probe.plan_events, probe.sim_events, probe.done_events, probe.out_of_order
+    );
+    let v0_replies = ftl::serve::wave::v0_probe(&addr_text)?;
+    println!("[server] v0_wave replies={v0_replies} (legacy lines, ordered)");
+    ensure!(door.counters().protocol_errors.get() == 0, "clean waves must not count protocol errors");
+
     println!("[server] stats: {}", scheduler.stats_json());
     println!(
         "[server] served {} plan requests with {} solves / {} sims; self-test OK",
@@ -302,13 +296,7 @@ fn trace_wave() -> Result<()> {
             ..BatchOptions::default()
         },
     ));
-    let accept = scheduler.clone();
-    std::thread::spawn(move || {
-        for conn in listener.incoming().flatten() {
-            let scheduler = accept.clone();
-            std::thread::spawn(move || client(conn, scheduler));
-        }
-    });
+    let _door = Frontend::new(scheduler.clone(), FrontendOptions::default()).serve(listener)?;
 
     // Cold then warm through gold; the repeat takes the cache fast path.
     let mut ids = Vec::new();
@@ -385,7 +373,8 @@ fn main() -> Result<()> {
     let scheduler = Arc::new(BatchScheduler::new(service, BatchOptions::default()));
     println!(
         "[server] listening on {} (protocol: DEPLOY <workload> <soc> <strategy> [deadline-ms] \
-         [lane=<name>] | STATS | METRICS | TRACE [n] | SLOW [n] | PING)",
+         [lane=<name>] | STATS | METRICS | TRACE [n] | SLOW [n] | PING; \
+         FTL1 <id> framing for multiplexed streaming — see PROTOCOL.md)",
         listener.local_addr()?
     );
 
@@ -393,9 +382,7 @@ fn main() -> Result<()> {
         return self_test(listener, scheduler, cache_dir);
     }
 
-    for conn in listener.incoming().flatten() {
-        let scheduler = scheduler.clone();
-        std::thread::spawn(move || client(conn, scheduler));
-    }
+    let handle = Frontend::new(scheduler, FrontendOptions::default()).serve(listener)?;
+    handle.join();
     Ok(())
 }

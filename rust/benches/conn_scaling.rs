@@ -1,0 +1,239 @@
+//! Bench: front-door connection scaling — many concurrent connections,
+//! many in-flight ids per connection, over real TCP.
+//!
+//! Spins the async front door ([`ftl::serve::Frontend`]) on a loopback
+//! port and drives it with a fleet of client connections in two phases:
+//!
+//! * **Warm phase** — every connection pipelines a burst of id'd v1
+//!   `DEPLOY` frames for one pre-warmed fingerprint and then reads its
+//!   terminal frames back, asserting that exactly the sent id set comes
+//!   back (each id once). This measures the multiplexed front door's
+//!   warm-path throughput (`warm_rps`) with *all* connections open at
+//!   once — the event loop, not a thread per connection, carries them.
+//! * **Cold phase** — a subset of the connections each submit one
+//!   *distinct* cold solve (`stage-<seq>x24x48`) immediately followed
+//!   by a warm request on a second id. The warm terminal must overtake
+//!   the cold one (out-of-order completion on one connection, counted
+//!   in `out_of_order`), and the cold stream must arrive as
+//!   `plan` → `sim`* → `done`. This measures end-to-end cold
+//!   solve throughput (`cold_rps`) under concurrent load.
+//!
+//! Writes `BENCH_conn_scaling.json` and prints a greppable
+//! `conn_scaling conns=… warm_rps=… cold_rps=…` line for CI.
+//! `FTL_BENCH_SMOKE=1` shrinks the fleet so CI can execute the harness
+//! end-to-end; the full run holds ≥ 1000 concurrent connections.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::experiments;
+use ftl::serve::{
+    AdmissionPolicy, BatchOptions, BatchScheduler, Frontend, FrontendOptions, PlanService,
+    ServeOptions, TraceOptions,
+};
+use ftl::tiling::Strategy;
+use ftl::util::json::Json;
+
+fn smoke() -> bool {
+    std::env::var("FTL_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn read_json(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).expect("read reply");
+    assert!(n > 0, "server closed the connection mid-bench");
+    ftl::util::json::parse(line.trim()).expect("parse reply")
+}
+
+fn main() {
+    let smoke = smoke();
+    // Fleet sizing: the full run sustains >= 1000 concurrent
+    // connections; smoke keeps CI fast on small runners.
+    let conns = if smoke { 64 } else { 1000 };
+    let warm_per_conn = if smoke { 4u64 } else { 8u64 };
+    let cold_conns = if smoke { 8 } else { 128 };
+    let threads = if smoke { 8 } else { 16 };
+
+    println!("=== front door: connection scaling ({conns} conns, {warm_per_conn} warm ids each) ===\n");
+
+    let service = Arc::new(PlanService::new(ServeOptions {
+        cache_capacity: 32,
+        sim_cache_capacity: 64,
+        cache_shards: 4,
+        workers: 2,
+    }));
+    let scheduler = Arc::new(BatchScheduler::new(
+        service,
+        BatchOptions {
+            queue_capacity: 4096,
+            batch_window: Duration::ZERO,
+            max_batch: 64,
+            policy: AdmissionPolicy::Block,
+            trace: TraceOptions::disabled(),
+            ..BatchOptions::default()
+        },
+    ));
+    // Pre-warm the shared fingerprint in process so every warm-phase
+    // frame takes the fast path.
+    let warm_graph = experiments::vit_mlp_stage(16, 24, 48);
+    let warm_cfg = DeployConfig::preset("cluster-only", Strategy::Ftl).unwrap();
+    let outcome = scheduler.deploy("prewarm", warm_graph, warm_cfg).unwrap();
+    assert_eq!(outcome.kind(), "OK", "pre-warm deploy must be served");
+
+    let door = Frontend::new(scheduler, FrontendOptions::default())
+        .serve(TcpListener::bind("127.0.0.1:0").expect("bind bench port"))
+        .expect("start front door");
+    let addr = door.addr();
+
+    let mut fleet: Vec<TcpStream> = (0..conns)
+        .map(|i| {
+            let stream = TcpStream::connect(addr).unwrap_or_else(|e| panic!("connect #{i}: {e}"));
+            stream.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+            stream
+        })
+        .collect();
+
+    // ---- Warm phase: pipelined id'd frames on every connection. ----
+    let chunk = fleet.len().div_ceil(threads);
+    let t_warm = Instant::now();
+    let mut warm_replies = 0u64;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for part in fleet.chunks_mut(chunk) {
+            handles.push(s.spawn(move || -> u64 {
+                let mut replies = 0u64;
+                for conn in part.iter_mut() {
+                    let mut payload = String::new();
+                    for k in 0..warm_per_conn {
+                        payload.push_str(&format!(
+                            "FTL1 {} DEPLOY stage-16x24x48 cluster-only ftl\n",
+                            100 + k
+                        ));
+                    }
+                    conn.write_all(payload.as_bytes()).expect("write warm burst");
+                    let mut reader = BufReader::new(conn.try_clone().expect("clone conn"));
+                    let mut seen: HashSet<u64> = HashSet::new();
+                    while (seen.len() as u64) < warm_per_conn {
+                        let j = read_json(&mut reader);
+                        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "done", "warm reply: {j}");
+                        let id = j.get("id").unwrap().as_u64().unwrap();
+                        assert!((100..100 + warm_per_conn).contains(&id), "unexpected id {id}");
+                        assert!(seen.insert(id), "duplicate terminal frame for id {id}");
+                        replies += 1;
+                    }
+                }
+                replies
+            }));
+        }
+        for h in handles {
+            warm_replies += h.join().expect("warm client thread panicked");
+        }
+    });
+    let warm_elapsed = t_warm.elapsed();
+    let warm_rps = warm_replies as f64 / warm_elapsed.as_secs_f64().max(1e-9);
+    assert_eq!(warm_replies, conns as u64 * warm_per_conn, "every sent id must come back exactly once");
+    assert!(
+        door.counters().open() >= conns as u64,
+        "the loop must hold all {conns} connections open (got {})",
+        door.counters().open()
+    );
+    println!(
+        "warm: {warm_replies} replies over {conns} conns in {warm_elapsed:.2?} ({warm_rps:.0} rps)"
+    );
+
+    // ---- Cold phase: distinct cold solve + warm overtake per conn. ----
+    let cold_chunk = cold_conns.div_ceil(threads).max(1);
+    let t_cold = Instant::now();
+    let (mut cold_done, mut out_of_order, mut sim_events) = (0u64, 0u64, 0u64);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (part_idx, part) in fleet[..cold_conns].chunks_mut(cold_chunk).enumerate() {
+            handles.push(s.spawn(move || -> (u64, u64, u64) {
+                let (mut done, mut ooo, mut sims) = (0u64, 0u64, 0u64);
+                for (i, conn) in part.iter_mut().enumerate() {
+                    // Distinct per connection: always a fresh fingerprint.
+                    let seq = 24 + 8 * (part_idx * cold_chunk + i);
+                    conn.write_all(
+                        format!(
+                            "FTL1 1 DEPLOY stage-{seq}x24x48 cluster-only ftl\n\
+                             FTL1 2 DEPLOY stage-16x24x48 cluster-only ftl\n"
+                        )
+                        .as_bytes(),
+                    )
+                    .expect("write cold pair");
+                    let mut reader = BufReader::new(conn.try_clone().expect("clone conn"));
+                    let mut terminals: Vec<u64> = Vec::new();
+                    let mut saw_plan = false;
+                    while terminals.len() < 2 {
+                        let j = read_json(&mut reader);
+                        let id = j.get("id").unwrap().as_u64().unwrap();
+                        match j.get("event").unwrap().as_str().unwrap() {
+                            "done" => terminals.push(id),
+                            "plan" => {
+                                assert_eq!(id, 1, "only the cold deploy streams partials");
+                                assert!(!terminals.contains(&1), "plan must precede done");
+                                saw_plan = true;
+                            }
+                            "sim" => {
+                                assert_eq!(id, 1, "only the cold deploy streams partials");
+                                sims += 1;
+                            }
+                            other => panic!("unexpected event '{other}': {j}"),
+                        }
+                    }
+                    assert!(saw_plan, "cold deploy must stream its plan event");
+                    assert!(terminals.contains(&1) && terminals.contains(&2), "both ids must finish");
+                    if terminals == [2, 1] {
+                        ooo += 1;
+                    }
+                    done += 1;
+                }
+                (done, ooo, sims)
+            }));
+        }
+        for h in handles {
+            let (done, ooo, sims) = h.join().expect("cold client thread panicked");
+            cold_done += done;
+            out_of_order += ooo;
+            sim_events += sims;
+        }
+    });
+    let cold_elapsed = t_cold.elapsed();
+    let cold_rps = cold_done as f64 / cold_elapsed.as_secs_f64().max(1e-9);
+    assert_eq!(cold_done, cold_conns as u64, "every cold connection must finish its pair");
+    assert!(
+        out_of_order == cold_done,
+        "the warm id must overtake the cold solve on every connection ({out_of_order}/{cold_done})"
+    );
+    assert!(sim_events >= cold_done, "every cold solve must stream per-phase sim events");
+    println!(
+        "cold: {cold_done} distinct solves (+{cold_done} warm overtakes) in {cold_elapsed:.2?} \
+         ({cold_rps:.0} solves/s, {sim_events} sim events)"
+    );
+
+    drop(fleet);
+    let counters = door.counters();
+    let out = Json::obj(vec![
+        ("name", Json::str("conn_scaling")),
+        ("conns", Json::Num(conns as f64)),
+        ("warm_requests", Json::Num(warm_replies as f64)),
+        ("warm_rps", Json::Num(warm_rps)),
+        ("cold_solves", Json::Num(cold_done as f64)),
+        ("cold_rps", Json::Num(cold_rps)),
+        ("out_of_order", Json::Num(out_of_order as f64)),
+        ("sim_events", Json::Num(sim_events as f64)),
+        ("frames_in", Json::Num(counters.frames_in.get() as f64)),
+        ("frames_out", Json::Num(counters.frames_out.get() as f64)),
+        ("protocol_errors", Json::Num(counters.protocol_errors.get() as f64)),
+    ]);
+    std::fs::write("BENCH_conn_scaling.json", format!("{}\n", out.pretty())).unwrap();
+    println!(
+        "conn_scaling conns={conns} warm_rps={warm_rps:.0} cold_rps={cold_rps:.0} out_of_order={out_of_order}"
+    );
+    println!("wrote BENCH_conn_scaling.json");
+    door.join();
+}

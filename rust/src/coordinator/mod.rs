@@ -20,7 +20,7 @@ use crate::memory::Level;
 use crate::metrics;
 use crate::runtime::{tile_key, HostTensor, KernelBackend, TileExecutor};
 use crate::schedule::{build_schedule, Schedule};
-use crate::sim::{simulate, SimReport};
+use crate::sim::{simulate, simulate_with, SimReport};
 use crate::tiling::{assign_homes_with, fuse_groups, solve_graph_with, FusionGroup, FusionPolicy, TilingSolution};
 use crate::util::json::Json;
 
@@ -80,6 +80,17 @@ impl Deployment {
     /// fingerprint (see [`crate::serve`]).
     pub fn simulate(&self, config: &DeployConfig) -> Result<SimReport> {
         simulate(&self.schedule, &config.soc)
+    }
+
+    /// [`Self::simulate`], invoking `on_phase(index, total, report)` as
+    /// each phase finishes — the serve layer streams these as partial
+    /// `sim` reply events while the engine is still running.
+    pub fn simulate_streamed(
+        &self,
+        config: &DeployConfig,
+        on_phase: impl FnMut(usize, usize, &crate::sim::PhaseReport),
+    ) -> Result<SimReport> {
+        simulate_with(&self.schedule, &config.soc, on_phase)
     }
 
     /// Canonical JSON encoding of the whole compiled plan — the snapshot

@@ -4,11 +4,14 @@
 //! ftl deploy     --workload vit-base-stage --soc siracusa --strategy ftl [--double-buffer] [--json]
 //! ftl serve      [--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64] [--sim-cache-cap 256]
 //!                [--queue-cap 256] [--batch-window-ms 2] [--max-batch 64] [--shed]
-//!                [--lane name:weight:cap[:shed|:block]]...  (repeatable priority lanes, WFQ-scheduled)
+//!                [--lane name:weight:cap[:shed|:block][:deadline-ms]]...  (repeatable WFQ lanes)
 //!                [--cache-dir DIR] [--snapshot-interval-ms 1000] [--cache-max-entries 0]
 //!                [--trace-cap 512] [--slowlog-ms 250] [--self-test]
-//!                (line protocol: DEPLOY | STATS | PING | METRICS | TRACE [n] | SLOW [n] — every
-//!                request is traced end to end; `--trace-cap 0` disables tracing entirely)
+//!                (line protocol, see PROTOCOL.md: DEPLOY | STATS | PING | METRICS | TRACE [n] |
+//!                SLOW [n], either bare (legacy v0, one JSON reply per line, in order) or framed
+//!                `FTL1 <id> <command...>` — multiplexed ids, streamed plan/sim/done events,
+//!                out-of-order completion; every request is traced end to end, `--trace-cap 0`
+//!                disables tracing entirely)
 //!
 //! Every command also takes `--solver-threads N` (or the
 //! `FTL_SOLVER_THREADS` env var): the branch-and-bound tiling solver's
@@ -25,8 +28,7 @@
 //! Argument parsing is hand-rolled (the build is fully offline — no clap).
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
@@ -40,8 +42,8 @@ use ftl::ir::{graph_from_json, graph_to_json, DType, Graph};
 use ftl::runtime::{KernelBackend, NativeBackend, PjrtBackend};
 use ftl::serve::{
     checksum, handle_command, handle_line, normalize_specs, resolve_workload, AdmissionPolicy,
-    BatchOptions, BatchScheduler, LaneSpec, PersistOptions, PlanService, ServeOptions, Snapshotter,
-    TraceOptions,
+    BatchOptions, BatchScheduler, Frontend, FrontendOptions, LaneSpec, PersistOptions, PlanService,
+    ServeOptions, Snapshotter, TraceOptions,
 };
 use ftl::tiling::Strategy;
 use ftl::util::json::Json;
@@ -175,11 +177,13 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// behind the line protocol `DEPLOY <workload> <soc> <strategy>
 /// [deadline-ms] [lane=<name>]` | `STATS` | `PING` (one JSON response
 /// per line). `--queue-cap`, `--batch-window-ms` and `--shed` tune
-/// admission control; `--lane name:weight:cap[:shed|:block]`
+/// admission control; `--lane name:weight:cap[:shed|:block][:deadline-ms]`
 /// (repeatable) declares weighted-fair priority lanes — saturated lanes
-/// split cold work in proportion to their weights, and requests select
+/// split cold work in proportion to their weights, requests select
 /// a lane with the protocol's `lane=` field (unknown/absent names use
-/// the default lane); `--cache-dir` persists the plan + sim caches across restarts
+/// the default lane), and a lane's trailing `deadline-ms` applies to
+/// every request in it that carries no deadline of its own;
+/// `--cache-dir` persists the plan + sim caches across restarts
 /// (write-behind every `--snapshot-interval-ms`, warm start on boot,
 /// `--cache-max-entries` caps the directory via an mtime-LRU sweep);
 /// `--trace-cap`/`--slowlog-ms` size the per-request trace journal and
@@ -255,34 +259,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "[ftl-serve] listening on {addr} \
          (DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>] | STATS | METRICS \
-         | TRACE [n] | SLOW [n] | PING)"
+         | TRACE [n] | SLOW [n] | PING; multiplexed v1 framing: FTL1 <id> <command...> — see PROTOCOL.md)"
     );
-    for conn in listener.incoming().flatten() {
-        let scheduler = scheduler.clone();
-        std::thread::spawn(move || serve_connection(conn, &scheduler));
-    }
+    // All connections are served by the async front door: one
+    // readiness-polled event loop, many in-flight ids per connection,
+    // streamed partial replies for v1 frames, serialized legacy replies
+    // for bare v0 lines (ftl::serve::Frontend).
+    let handle = Frontend::new(scheduler, FrontendOptions::default()).serve(listener)?;
+    handle.join();
     Ok(())
-}
-
-fn serve_connection(conn: TcpStream, scheduler: &BatchScheduler) {
-    let Ok(read_half) = conn.try_clone() else { return };
-    let reader = BufReader::new(read_half);
-    let mut writer = conn;
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        // Protocol handling lives in ftl::serve::handle_command, shared
-        // with examples/deploy_server.rs. METRICS/TRACE/SLOW responses
-        // span multiple lines; each is already newline-free at the end,
-        // so one writeln! terminates every response uniformly.
-        let response = handle_command(scheduler, line);
-        if writeln!(writer, "{response}").is_err() {
-            break;
-        }
-    }
 }
 
 /// In-process exercise of the serve layer — run by tier-1 via the
@@ -562,6 +547,36 @@ fn serve_self_test(opts: ServeOptions, batch_opts: BatchOptions) -> Result<()> {
     std::fs::write("BENCH_serve_latency.json", format!("{}\n", bench.pretty()))?;
     println!("[ftl-serve] wrote BENCH_serve_latency.json");
 
+    // 12. The async front door over real TCP: a cold v1 deploy streams
+    // plan strictly before done with per-phase sim events between, a
+    // warm repeat collapses to one frame, a cold+warm pair completes
+    // out of order on one connection, and bare v0 lines keep their
+    // legacy single-line replies in request order (shared probes in
+    // ftl::serve::wave, also run by examples/deploy_server.rs).
+    let door_service = Arc::new(PlanService::new(ServeOptions {
+        cache_capacity: 32,
+        sim_cache_capacity: 64,
+        cache_shards: 4,
+        workers: opts.workers,
+    }));
+    let door_sched = Arc::new(BatchScheduler::new(
+        door_service,
+        BatchOptions { batch_window: std::time::Duration::ZERO, ..BatchOptions::default() },
+    ));
+    let door = Frontend::new(door_sched, FrontendOptions::default())
+        .serve(TcpListener::bind("127.0.0.1:0").context("binding the self-test front door")?)?;
+    let door_addr = door.addr().to_string();
+    let probe = ftl::serve::wave::streaming_probe(&door_addr)?;
+    println!(
+        "[ftl-serve] stream_events plan={} sim={} done={} out_of_order={}",
+        probe.plan_events, probe.sim_events, probe.done_events, probe.out_of_order
+    );
+    ensure!(probe.plan_events == 2 && probe.done_events == 4, "front-door probe event counts off");
+    let v0_replies = ftl::serve::wave::v0_probe(&door_addr)?;
+    println!("[ftl-serve] v0_compat replies={v0_replies} (legacy lines, ordered, no v1 fields)");
+    ensure!(door.counters().protocol_errors.get() == 0, "clean probes must not count protocol errors");
+    door.join();
+
     let stats = service.stats();
     println!("{}", stats.cache.table());
     println!("{}", scheduler.stats().table());
@@ -786,9 +801,9 @@ COMMANDS:
   deploy       plan + simulate one deployment     (--workload --soc --strategy [--double-buffer] [--json])
   serve        batch-aware deployment service     ([--addr 127.0.0.1:7117] [--workers 4] [--cache-cap 64]
                (DEPLOY/STATS/PING plus METRICS/    [--sim-cache-cap 256] [--cache-shards 8] [--queue-cap 256]
-               TRACE [n]/SLOW [n] line protocol)   [--batch-window-ms 2] [--max-batch 64] [--shed]
-                                                   [--lane name:weight:cap[:shed|:block]]... (WFQ lanes)
-                                                   [--cache-dir DIR] [--snapshot-interval-ms 1000]
+               TRACE [n]/SLOW [n] line protocol,   [--batch-window-ms 2] [--max-batch 64] [--shed]
+               bare v0 or multiplexed+streaming    [--lane name:weight:cap[:shed|:block][:deadline-ms]]...
+               FTL1 framing — see PROTOCOL.md)     [--cache-dir DIR] [--snapshot-interval-ms 1000]
                                                    [--cache-max-entries 0] [--trace-cap 512] (0 = tracing off)
                                                    [--slowlog-ms 250] [--self-test])
   fig3         reproduce the paper's Fig. 3       ([--seq --dim --hidden] [--double-buffer] [--json])

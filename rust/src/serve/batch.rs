@@ -74,6 +74,7 @@ use crate::util::json::Json;
 
 use super::fingerprint::{fingerprint, soc_fingerprint, Fingerprint};
 use super::lanes::{normalize_specs, LaneCounters, LaneSet, LaneSpec};
+use super::proto::{self, EventSink};
 use super::service::{resolve_workload, PlanService, ServeReply};
 use super::trace::{ActiveSpan, TraceOptions, Tracer};
 use super::wfq::SCALE;
@@ -159,6 +160,66 @@ impl BatchOutcome {
     }
 }
 
+/// One deployment request, builder-style — the consolidated entry
+/// point behind the scheduler's whole deploy surface
+/// ([`BatchScheduler::submit`] blocking,
+/// [`BatchScheduler::submit_async`] completion-callback). Lane,
+/// deadline and streaming sink are optional fields:
+///
+/// ```ignore
+/// let req = DeployRequest::new("w", graph, config)
+///     .lane("gold")
+///     .deadline(Duration::from_millis(250))
+///     .sink(sink);
+/// let (outcome, trace_id) = scheduler.submit(req)?;
+/// ```
+pub struct DeployRequest {
+    workload: String,
+    graph: Graph,
+    config: DeployConfig,
+    lane: Option<String>,
+    deadline: Option<Duration>,
+    sink: Option<Arc<dyn EventSink>>,
+}
+
+impl DeployRequest {
+    /// A request in the default lane, no deadline, no streaming.
+    pub fn new(workload: impl Into<String>, graph: Graph, config: DeployConfig) -> Self {
+        Self { workload: workload.into(), graph, config, lane: None, deadline: None, sink: None }
+    }
+
+    /// Route to a named priority lane (unknown names fall back to the
+    /// default lane, never an error).
+    pub fn lane(mut self, lane: impl Into<String>) -> Self {
+        self.lane = Some(lane.into());
+        self
+    }
+
+    /// Bound the pre-dispatch wait. When absent, the resolved lane's
+    /// configured default deadline (if any) applies.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Stream partial replies (`plan`, per-phase `sim` events) to this
+    /// sink while the request is being served. Only the request that
+    /// actually performs the work streams; fan-out waiters and warm
+    /// fast-path hits collapse to their terminal frame.
+    pub fn sink(mut self, sink: Arc<dyn EventSink>) -> Self {
+        self.sink = Some(sink);
+        self
+    }
+}
+
+/// Completion callback for one scheduled deployment: invoked exactly
+/// once with the terminal outcome (every path, including shed, timeout
+/// and shutdown) plus the request's trace id. Runs on whichever thread
+/// resolves the request — the submitter for fast-path/admission
+/// outcomes, a dispatcher thread otherwise — so implementations must
+/// be quick and must not block on the scheduler.
+pub type DeployCompletion = Box<dyn FnOnce(Result<BatchOutcome>, Option<u64>) + Send + 'static>;
+
 /// One admitted request waiting in its lane.
 struct Pending {
     workload: String,
@@ -170,21 +231,29 @@ struct Pending {
     soc_key: Fingerprint,
     /// Absolute dispatch deadline, if the request carries one.
     deadline: Option<Instant>,
-    reply: mpsc::Sender<Result<BatchOutcome>>,
+    /// Terminal-outcome callback (span finish + caller completion),
+    /// invoked exactly once by whichever thread resolves the request.
+    reply: Box<dyn FnOnce(Result<BatchOutcome>) + Send>,
     /// The request's live trace span, when tracing is enabled. The
     /// queue and dispatcher mark stage offsets through it; the
-    /// submitting thread finalizes it after the reply arrives.
+    /// completion wrapper finalizes it when the outcome lands.
     span: Option<Arc<ActiveSpan>>,
+    /// Streaming partial-reply sink; rides to the dispatch leader so
+    /// `plan`/`sim` events flow while the work happens. Fan-out waiters
+    /// collapse to their terminal frame.
+    sink: Option<Arc<dyn EventSink>>,
 }
 
-/// How admission control resolved an enqueue attempt.
+/// How admission control resolved an enqueue attempt. Non-admitted
+/// requests hand the `Pending` back so the caller can invoke its
+/// completion.
 enum Admit {
     Admitted,
-    Shed,
+    Shed(Pending),
     /// The request's deadline expired while its submitter was parked
     /// waiting for queue space (Block policy only).
-    Expired,
-    Closed,
+    Expired(Pending),
+    Closed(Pending),
 }
 
 struct QueueState {
@@ -233,20 +302,26 @@ impl BatchInner {
     /// full-queue policy. A blocked submitter's deadline keeps ticking:
     /// the park is bounded by it, so a deadlined request can never be
     /// stalled unboundedly by backpressure.
-    fn enqueue(&self, lane: usize, mut pending: Pending) -> Admit {
+    ///
+    /// `may_block` gates the Block policy's park: the async front door
+    /// submits from its event loop and must never park, so a full
+    /// Block-policy lane *sheds* async submissions instead — read
+    /// backpressure (the per-connection in-flight cap) is the async
+    /// path's only blocking mechanism.
+    fn enqueue(&self, lane: usize, mut pending: Pending, may_block: bool) -> Admit {
         let deadline = pending.deadline;
         let capacity = self.specs[lane].capacity;
         let policy = self.specs[lane].policy.unwrap_or(self.opts.policy);
         let mut st = self.queue.state.lock().expect("batch queue poisoned");
         loop {
             if !st.open {
-                return Admit::Closed;
+                return Admit::Closed(pending);
             }
             if capacity == 0 {
                 // A lane that can never drain must not block (see
                 // `BatchOptions::queue_capacity`).
                 self.counters[lane].shed.inc();
-                return Admit::Shed;
+                return Admit::Shed(pending);
             }
             // (Re-)stamp the queued offset right before the push: a
             // submitter parked by backpressure re-enters the queue now,
@@ -263,29 +338,27 @@ impl BatchInner {
                 }
                 Err(p) => p,
             };
-            match policy {
-                AdmissionPolicy::Shed => {
-                    self.counters[lane].shed.inc();
-                    return Admit::Shed;
+            if policy == AdmissionPolicy::Shed || !may_block {
+                self.counters[lane].shed.inc();
+                return Admit::Shed(pending);
+            }
+            match deadline {
+                None => {
+                    st = self.queue.not_full.wait(st).expect("batch queue poisoned");
                 }
-                AdmissionPolicy::Block => match deadline {
-                    None => {
-                        st = self.queue.not_full.wait(st).expect("batch queue poisoned");
+                Some(d) => {
+                    let now = Instant::now();
+                    if d <= now {
+                        self.counters[lane].timeouts.inc();
+                        return Admit::Expired(pending);
                     }
-                    Some(d) => {
-                        let now = Instant::now();
-                        if d <= now {
-                            self.counters[lane].timeouts.inc();
-                            return Admit::Expired;
-                        }
-                        let (guard, _) = self
-                            .queue
-                            .not_full
-                            .wait_timeout(st, d - now)
-                            .expect("batch queue poisoned");
-                        st = guard;
-                    }
-                },
+                    let (guard, _) = self
+                        .queue
+                        .not_full
+                        .wait_timeout(st, d - now)
+                        .expect("batch queue poisoned");
+                    st = guard;
+                }
             }
         }
     }
@@ -408,16 +481,25 @@ impl BatchInner {
             group.into_iter().partition(|p| p.deadline.map_or(true, |d| d > now));
         for p in expired {
             self.counters[lane].timeouts.inc();
-            p.reply.send(Ok(BatchOutcome::TimedOut)).ok();
+            (p.reply)(Ok(BatchOutcome::TimedOut));
         }
         let mut live = live.into_iter();
         let Some(leader) = live.next() else { return };
         // Panic isolation: a panicking solve must kill neither the
-        // dispatcher nor the waiters parked on their reply channels.
-        // The leader's span rides into the service so the solve/sim
-        // stage offsets are stamped where the work actually happens.
+        // dispatcher nor the waiters parked on their completions.
+        // The leader's span and event sink ride into the service so the
+        // solve/sim stage offsets are stamped — and the streamed
+        // `plan`/`sim` partial replies emitted — where the work actually
+        // happens. Only the leader streams: fan-out waiters collapse to
+        // their terminal frame (they never ran the engine).
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.service.deploy_spanned(&leader.workload, &leader.graph, &leader.config, leader.span.as_deref())
+            self.service.deploy_observed(
+                &leader.workload,
+                &leader.graph,
+                &leader.config,
+                leader.span.as_deref(),
+                leader.sink.as_deref(),
+            )
         }))
         .unwrap_or_else(|_| {
             Err(anyhow!("batch dispatcher panicked while deploying '{}'", leader.workload))
@@ -444,9 +526,9 @@ impl BatchInner {
                         cached: true,
                         sim_cached: true,
                     };
-                    p.reply.send(Ok(BatchOutcome::Served(Box::new(fanned)))).ok();
+                    (p.reply)(Ok(BatchOutcome::Served(Box::new(fanned))));
                 }
-                leader.reply.send(Ok(BatchOutcome::Served(Box::new(reply)))).ok();
+                (leader.reply)(Ok(BatchOutcome::Served(Box::new(reply))));
             }
             Err(e) => {
                 // The solver was consulted even though it failed; charge
@@ -456,7 +538,7 @@ impl BatchInner {
                 // anyhow::Error is not Clone; re-render the chain per waiter.
                 let msg = format!("{e:#}");
                 for p in live.chain(std::iter::once(leader)) {
-                    p.reply.send(Err(anyhow!("batched deploy failed: {msg}"))).ok();
+                    (p.reply)(Err(anyhow!("batched deploy failed: {msg}")));
                 }
             }
         }
@@ -582,11 +664,11 @@ impl BatchScheduler {
     /// [`deploy_in_lane`](BatchScheduler::deploy_in_lane) plus the
     /// request's trace id (`None` when tracing is disabled) — what the
     /// protocol reports back as `"trace"`, so a client can correlate
-    /// its reply with `TRACE`/`SLOW` output. Every admitted request
-    /// produces exactly one finished [`Span`](super::trace::Span): warm
-    /// fast-path hits carry no queue stages, shed/timed-out requests no
-    /// solve stages, and failures finish as `ERROR` before the error
-    /// propagates.
+    /// its reply with `TRACE`/`SLOW` output.
+    ///
+    /// `deploy`, `deploy_with_deadline`, `deploy_in_lane` and this are
+    /// thin wrappers over [`submit`](BatchScheduler::submit) — the
+    /// [`DeployRequest`] builder is the single entry point underneath.
     pub fn deploy_traced(
         &self,
         workload: &str,
@@ -595,19 +677,86 @@ impl BatchScheduler {
         lane: Option<&str>,
         deadline: Option<Duration>,
     ) -> Result<(BatchOutcome, Option<u64>)> {
-        let lane = self.inner.resolve_lane(lane);
+        let mut req = DeployRequest::new(workload, graph, config);
+        if let Some(lane) = lane {
+            req = req.lane(lane);
+        }
+        if let Some(deadline) = deadline {
+            req = req.deadline(deadline);
+        }
+        self.submit(req)
+    }
+
+    /// Blocking deployment of a built [`DeployRequest`] — the
+    /// consolidated entry point behind every `deploy*` wrapper. Parks
+    /// the calling thread until the terminal outcome (honouring
+    /// [`AdmissionPolicy::Block`] backpressure) and returns it with the
+    /// request's trace id.
+    pub fn submit(&self, req: DeployRequest) -> Result<(BatchOutcome, Option<u64>)> {
+        let (tx, rx) = mpsc::channel();
+        let done: DeployCompletion = Box::new(move |result, _trace_id| {
+            tx.send(result).ok();
+        });
+        let trace_id = self.do_submit(req, done, true);
+        match rx.recv() {
+            Ok(Ok(outcome)) => Ok((outcome, trace_id)),
+            Ok(Err(e)) => Err(e),
+            Err(_) => bail!("batch scheduler dropped the request before replying"),
+        }
+    }
+
+    /// Nonblocking deployment: the completion fires exactly once with
+    /// the terminal outcome, on whichever thread resolves the request
+    /// (the calling thread for warm hits and admission rejections, a
+    /// dispatcher thread otherwise). Returns the trace id immediately.
+    ///
+    /// The async path **never parks the caller**: a full lane sheds the
+    /// request even under [`AdmissionPolicy::Block`] — the front door's
+    /// per-connection in-flight cap is the async backpressure mechanism
+    /// (see [`super::frontend`]).
+    pub fn submit_async(&self, req: DeployRequest, done: DeployCompletion) -> Option<u64> {
+        self.do_submit(req, done, false)
+    }
+
+    /// The single submission path. Every request produces exactly one
+    /// completion call and (when tracing is enabled) exactly one
+    /// finished [`Span`](super::trace::Span): warm fast-path hits carry
+    /// no queue stages, shed/timed-out requests no solve stages, and
+    /// failures finish as `ERROR` before the error propagates.
+    fn do_submit(&self, req: DeployRequest, done: DeployCompletion, may_block: bool) -> Option<u64> {
+        let DeployRequest { workload, graph, config, lane, deadline, sink } = req;
+        let lane = self.inner.resolve_lane(lane.as_deref());
+        // The effective deadline: an explicit one wins, else the lane's
+        // configured default bounds the request without client
+        // cooperation.
+        let deadline = deadline.or(self.inner.specs[lane].default_deadline);
         let active = self.inner.tracer.as_ref().map(|t| t.begin());
         let trace_id = active.as_ref().map(|a| a.id());
-        let finish = |outcome: &'static str, warm: bool, fp: Option<Fingerprint>| {
-            if let (Some(t), Some(a)) = (&self.inner.tracer, &active) {
-                t.finish(a, workload, lane, outcome, warm, fp);
+        // Wrap the caller's completion with the span finish so every
+        // resolution path — fast path, admission, dispatcher — records
+        // its outcome through one place.
+        let inner = self.inner.clone();
+        let span = active.clone();
+        let traced_workload = workload.clone();
+        let complete = move |result: Result<BatchOutcome>| {
+            if let (Some(t), Some(a)) = (&inner.tracer, &span) {
+                let (outcome, warm, fp) = match &result {
+                    Ok(BatchOutcome::Served(reply)) => {
+                        ("OK", reply.cached && reply.sim_cached, Some(reply.fingerprint))
+                    }
+                    Ok(BatchOutcome::Shed) => ("SHED", false, None),
+                    Ok(BatchOutcome::TimedOut) => ("TIMEOUT", false, None),
+                    Err(_) => ("ERROR", false, None),
+                };
+                t.finish(a, &traced_workload, lane, outcome, warm, fp);
             }
+            done(result, trace_id);
         };
         if let Some(d) = deadline {
             if d.is_zero() {
                 self.inner.counters[lane].timeouts.inc();
-                finish("TIMEOUT", false, None);
-                return Ok((BatchOutcome::TimedOut, trace_id));
+                complete(Ok(BatchOutcome::TimedOut));
+                return trace_id;
             }
         }
         // Warm fast path: a fully cached request skips the lanes and the
@@ -615,59 +764,32 @@ impl BatchScheduler {
         // work (so fairness is over cold work, and warm traffic is
         // lane-agnostic by design), and the caches + single-flight below
         // stay coherent with the dispatcher regardless of which path a
-        // request takes.
-        if let Some(result) = self.inner.service.deploy_if_warm(workload, &graph, &config) {
-            return match result {
-                Ok(reply) => {
-                    finish("OK", true, Some(reply.fingerprint));
-                    Ok((BatchOutcome::Served(Box::new(reply)), trace_id))
-                }
-                Err(e) => {
-                    finish("ERROR", false, None);
-                    Err(e)
-                }
-            };
+        // request takes. Warm hits collapse to the terminal frame: no
+        // partial events are streamed.
+        if let Some(result) = self.inner.service.deploy_if_warm(&workload, &graph, &config) {
+            complete(result.map(|reply| BatchOutcome::Served(Box::new(reply))));
+            return trace_id;
         }
         let key = fingerprint(&graph, &config);
         let soc_key = soc_fingerprint(&config.soc);
-        let (tx, rx) = mpsc::channel();
         let pending = Pending {
-            workload: workload.to_string(),
+            workload,
             graph,
             config,
             key,
             soc_key,
             deadline: deadline.map(|d| Instant::now() + d),
-            reply: tx,
-            span: active.clone(),
+            reply: Box::new(complete),
+            span: active,
+            sink,
         };
-        match self.inner.enqueue(lane, pending) {
+        match self.inner.enqueue(lane, pending, may_block) {
             Admit::Admitted => {}
-            Admit::Shed => {
-                finish("SHED", false, None);
-                return Ok((BatchOutcome::Shed, trace_id));
-            }
-            Admit::Expired => {
-                finish("TIMEOUT", false, None);
-                return Ok((BatchOutcome::TimedOut, trace_id));
-            }
-            Admit::Closed => bail!("batch scheduler is shut down"),
+            Admit::Shed(p) => (p.reply)(Ok(BatchOutcome::Shed)),
+            Admit::Expired(p) => (p.reply)(Ok(BatchOutcome::TimedOut)),
+            Admit::Closed(p) => (p.reply)(Err(anyhow!("batch scheduler is shut down"))),
         }
-        match rx.recv() {
-            Ok(Ok(outcome)) => {
-                let (warm, fp) = match &outcome {
-                    BatchOutcome::Served(reply) => (reply.cached && reply.sim_cached, Some(reply.fingerprint)),
-                    _ => (false, None),
-                };
-                finish(outcome.kind(), warm, fp);
-                Ok((outcome, trace_id))
-            }
-            Ok(Err(e)) => {
-                finish("ERROR", false, None);
-                Err(e)
-            }
-            Err(_) => bail!("batch scheduler dropped the request before replying"),
-        }
+        trace_id
     }
 
     /// Counter snapshot. The scheduler-wide totals are sums over the
@@ -743,7 +865,17 @@ impl BatchScheduler {
                 .map(|s| {
                     (
                         s.name.as_str(),
-                        Json::obj(vec![("weight", Json::int(s.weight)), ("capacity", Json::int(s.capacity))]),
+                        Json::obj(vec![
+                            ("weight", Json::int(s.weight)),
+                            ("capacity", Json::int(s.capacity)),
+                            (
+                                "default_deadline_ms",
+                                match s.default_deadline {
+                                    Some(d) => Json::Num(d.as_millis() as f64),
+                                    None => Json::Null,
+                                },
+                            ),
+                        ]),
                     )
                 })
                 .collect(),
@@ -859,6 +991,96 @@ pub fn handle_line(scheduler: &BatchScheduler, line: &str) -> Json {
     }
 }
 
+/// Handle one typed [`Request`](proto::Request) to its complete
+/// response text — the framing-independent core shared by
+/// [`handle_command`] (v0 lines), the async front door's v1 path
+/// ([`super::frontend`]) and the v1 collapse in [`handle_command`].
+/// Deploys block until their terminal outcome; errors come back as one
+/// `{"error": ...}` object, never a panic or a dropped response.
+pub fn handle_typed(scheduler: &BatchScheduler, request: &proto::Request) -> String {
+    match request {
+        proto::Request::Metrics => scheduler.metrics_text().trim_end().to_string(),
+        proto::Request::Trace { n } | proto::Request::Slow { n } => {
+            let Some(tracer) = scheduler.tracer() else {
+                return Json::obj(vec![("error", Json::str("tracing is disabled (--trace-cap 0)"))]).to_string();
+            };
+            let spans = match request {
+                proto::Request::Trace { .. } => tracer.recent(*n),
+                _ => tracer.slow(*n),
+            };
+            tracer.dump(&spans)
+        }
+        proto::Request::Stats => scheduler.stats_json().to_string(),
+        proto::Request::Ping => Json::obj(vec![("pong", Json::Bool(true))]).to_string(),
+        proto::Request::Deploy(cmd) => match deploy_typed(scheduler, cmd) {
+            Ok(j) => j.to_string(),
+            Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string(),
+        },
+    }
+}
+
+/// Resolve a parsed `DEPLOY` command's workload/SoC/strategy names to
+/// the graph + config the scheduler consumes — shared by the blocking
+/// handlers here and the async front door.
+pub(crate) fn build_deploy(cmd: &proto::DeployCommand) -> Result<(Graph, DeployConfig)> {
+    let strategy = crate::tiling::Strategy::parse(&cmd.strategy)
+        .ok_or_else(|| anyhow!("bad strategy '{}'", cmd.strategy))?;
+    let graph = resolve_workload(&cmd.workload)?;
+    let cfg = DeployConfig::preset(&cmd.soc, strategy)?;
+    Ok((graph, cfg))
+}
+
+/// Render a terminal [`BatchOutcome`] as the protocol's single-line
+/// reply body — `outcome`/`cached`/`sim_cached`/`lane`/`fingerprint`/
+/// `trace` merged into the deploy report for `OK`, or the
+/// `SHED`/`TIMEOUT` error objects. Shared by the blocking line
+/// handlers and the front door's terminal `done` events.
+pub fn outcome_to_json(
+    outcome: &BatchOutcome,
+    lane_name: &str,
+    trace_id: Option<u64>,
+    soc: &crate::soc::SocConfig,
+) -> Json {
+    match outcome {
+        BatchOutcome::Served(reply) => {
+            let mut j = reply.report.to_json(soc);
+            if let Json::Obj(m) = &mut j {
+                m.insert("outcome".into(), Json::str("OK"));
+                m.insert("cached".into(), Json::Bool(reply.cached));
+                m.insert("sim_cached".into(), Json::Bool(reply.sim_cached));
+                m.insert("lane".into(), Json::str(lane_name));
+                m.insert("fingerprint".into(), Json::str(reply.fingerprint.hex()));
+                if let Some(id) = trace_id {
+                    m.insert("trace".into(), Json::Num(id as f64));
+                }
+            }
+            j
+        }
+        BatchOutcome::Shed => {
+            let mut fields = vec![
+                ("outcome", Json::str("SHED")),
+                ("lane", Json::str(lane_name)),
+                ("error", Json::str("queue full: request shed by admission control")),
+            ];
+            if let Some(id) = trace_id {
+                fields.push(("trace", Json::Num(id as f64)));
+            }
+            Json::obj(fields)
+        }
+        BatchOutcome::TimedOut => {
+            let mut fields = vec![
+                ("outcome", Json::str("TIMEOUT")),
+                ("lane", Json::str(lane_name)),
+                ("error", Json::str("deadline expired before the request was dispatched")),
+            ];
+            if let Some(id) = trace_id {
+                fields.push(("trace", Json::Num(id as f64)));
+            }
+            Json::obj(fields)
+        }
+    }
+}
+
 /// Handle one protocol command — [`handle_line`] plus the multi-line
 /// observability commands, the single implementation behind both
 /// `ftl serve` and `examples/deploy_server.rs`:
@@ -875,52 +1097,38 @@ pub fn handle_line(scheduler: &BatchScheduler, line: &str) -> Json {
 /// disabled included). The response never carries a trailing newline —
 /// connection handlers add their own line termination.
 pub fn handle_command(scheduler: &BatchScheduler, line: &str) -> String {
-    let parts: Vec<&str> = line.split_whitespace().collect();
-    match parts.as_slice() {
-        ["METRICS"] => scheduler.metrics_text().trim_end().to_string(),
-        [cmd @ ("TRACE" | "SLOW"), rest @ ..] if rest.len() <= 1 => {
-            let n = match rest {
-                [tok] => tok.parse::<usize>().ok(),
-                _ => Some(16),
-            };
-            let (Some(n), Some(tracer)) = (n, scheduler.tracer()) else {
-                let msg = match n {
-                    None => format!("bad count '{}' in '{line}' (expected a non-negative integer)", rest[0]),
-                    Some(_) => "tracing is disabled (--trace-cap 0)".to_string(),
-                };
-                return Json::obj(vec![("error", Json::str(msg))]).to_string();
-            };
-            let spans = if *cmd == "TRACE" { tracer.recent(n) } else { tracer.slow(n) };
-            tracer.dump(&spans)
+    match proto::Frame::parse(line) {
+        Ok(frame) => match frame.version {
+            proto::Version::V0 => handle_typed(scheduler, &frame.request),
+            // The blocking path may collapse a v1 deploy to its single
+            // terminal frame; the async front door is the streaming
+            // implementation of the same vocabulary.
+            proto::Version::V1 => {
+                proto::wrap_v1(frame.id.unwrap_or(0), &handle_typed(scheduler, &frame.request))
+            }
+        },
+        Err(e) => {
+            let msg = format!("{e:#}");
+            if line.split_whitespace().next() == Some(proto::V1_TAG) {
+                // Malformed v1 frame: answer as an error event on the
+                // recoverable id (0 when even the id is unreadable).
+                proto::Event::Error { message: msg }.render(proto::id_hint(line).unwrap_or(0))
+            } else {
+                Json::obj(vec![("error", Json::str(msg))]).to_string()
+            }
         }
-        _ => handle_line(scheduler, line).to_string(),
     }
 }
 
 fn handle_request(scheduler: &BatchScheduler, line: &str) -> Result<Json> {
-    let parts: Vec<&str> = line.split_whitespace().collect();
-    match parts.as_slice() {
-        ["DEPLOY", workload, soc, strategy, rest @ ..] if rest.len() <= 2 => {
-            let mut deadline: Option<Duration> = None;
-            let mut lane: Option<&str> = None;
-            for tok in rest {
-                if let Some(name) = tok.strip_prefix("lane=") {
-                    if lane.replace(name).is_some() {
-                        bail!("duplicate lane= field in '{line}'");
-                    }
-                } else {
-                    let ms: u64 = tok
-                        .parse()
-                        .map_err(|_| anyhow!("bad deadline '{tok}' (expected milliseconds or lane=<name>)"))?;
-                    if deadline.replace(Duration::from_millis(ms)).is_some() {
-                        bail!("duplicate deadline in '{line}'");
-                    }
-                }
-            }
-            deploy_request(scheduler, workload, soc, strategy, deadline, lane)
-        }
-        ["STATS"] => Ok(scheduler.stats_json()),
-        ["PING"] => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
+    let frame = proto::Frame::parse(line)?;
+    match &frame.request {
+        proto::Request::Deploy(cmd) => deploy_typed(scheduler, cmd),
+        proto::Request::Stats => Ok(scheduler.stats_json()),
+        proto::Request::Ping => Ok(Json::obj(vec![("pong", Json::Bool(true))])),
+        // METRICS/TRACE/SLOW are multi-line: only `handle_command` (and
+        // the front door) serve them. Same diagnostic as an unknown
+        // command, so `handle_line` behavior is unchanged.
         _ => bail!(
             "bad request: '{line}' (expected: DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>] \
              | STATS | METRICS | TRACE [n] | SLOW [n] | PING)"
@@ -928,59 +1136,19 @@ fn handle_request(scheduler: &BatchScheduler, line: &str) -> Result<Json> {
     }
 }
 
-fn deploy_request(
-    scheduler: &BatchScheduler,
-    workload: &str,
-    soc: &str,
-    strategy: &str,
-    deadline: Option<Duration>,
-    lane: Option<&str>,
-) -> Result<Json> {
-    let strategy = crate::tiling::Strategy::parse(strategy)
-        .ok_or_else(|| anyhow!("bad strategy '{strategy}'"))?;
-    let graph = resolve_workload(workload)?;
-    let cfg = DeployConfig::preset(soc, strategy)?;
+fn deploy_typed(scheduler: &BatchScheduler, cmd: &proto::DeployCommand) -> Result<Json> {
+    let (graph, cfg) = build_deploy(cmd)?;
     let soc_cfg = cfg.soc.clone();
-    let lane_name = scheduler.lane_name(lane).to_string();
-    let (outcome, trace_id) = scheduler.deploy_traced(workload, graph, cfg, lane, deadline)?;
-    match outcome {
-        BatchOutcome::Served(reply) => {
-            let mut j = reply.report.to_json(&soc_cfg);
-            if let Json::Obj(m) = &mut j {
-                m.insert("outcome".into(), Json::str("OK"));
-                m.insert("cached".into(), Json::Bool(reply.cached));
-                m.insert("sim_cached".into(), Json::Bool(reply.sim_cached));
-                m.insert("lane".into(), Json::str(lane_name));
-                m.insert("fingerprint".into(), Json::str(reply.fingerprint.hex()));
-                if let Some(id) = trace_id {
-                    m.insert("trace".into(), Json::Num(id as f64));
-                }
-            }
-            Ok(j)
-        }
-        BatchOutcome::Shed => {
-            let mut fields = vec![
-                ("outcome", Json::str("SHED")),
-                ("lane", Json::str(lane_name)),
-                ("error", Json::str("queue full: request shed by admission control")),
-            ];
-            if let Some(id) = trace_id {
-                fields.push(("trace", Json::Num(id as f64)));
-            }
-            Ok(Json::obj(fields))
-        }
-        BatchOutcome::TimedOut => {
-            let mut fields = vec![
-                ("outcome", Json::str("TIMEOUT")),
-                ("lane", Json::str(lane_name)),
-                ("error", Json::str("deadline expired before the request was dispatched")),
-            ];
-            if let Some(id) = trace_id {
-                fields.push(("trace", Json::Num(id as f64)));
-            }
-            Ok(Json::obj(fields))
-        }
+    let lane_name = scheduler.lane_name(cmd.lane.as_deref()).to_string();
+    let mut req = DeployRequest::new(cmd.workload.clone(), graph, cfg);
+    if let Some(lane) = &cmd.lane {
+        req = req.lane(lane.clone());
     }
+    if let Some(deadline) = cmd.deadline() {
+        req = req.deadline(deadline);
+    }
+    let (outcome, trace_id) = scheduler.submit(req)?;
+    Ok(outcome_to_json(&outcome, &lane_name, trace_id, &soc_cfg))
 }
 
 #[cfg(test)]
@@ -1172,5 +1340,70 @@ mod tests {
         sched.shutdown();
         let (g, c) = small();
         assert!(sched.deploy("late", g, c).is_err());
+    }
+
+    #[test]
+    fn submit_async_completes_via_callback() {
+        let sched = BatchScheduler::new(small_service(), BatchOptions::default());
+        let (g, c) = small();
+        let (tx, rx) = mpsc::channel();
+        let id = sched.submit_async(
+            DeployRequest::new("async", g, c),
+            Box::new(move |result, trace_id| {
+                tx.send((result.map(|o| o.kind()), trace_id)).ok();
+            }),
+        );
+        let (kind, cb_id) = rx.recv().unwrap();
+        assert_eq!(kind.unwrap(), "OK");
+        assert_eq!(cb_id, id, "the completion must see the same trace id submit_async returned");
+        assert!(id.unwrap() >= 1);
+    }
+
+    #[test]
+    fn async_submission_sheds_instead_of_parking() {
+        // A zero-capacity Block-policy lane would park a blocking
+        // submitter forever; the async path must shed instead.
+        let sched = BatchScheduler::new(
+            small_service(),
+            BatchOptions { queue_capacity: 0, policy: AdmissionPolicy::Block, ..BatchOptions::default() },
+        );
+        let (g, c) = small();
+        let (tx, rx) = mpsc::channel();
+        sched.submit_async(
+            DeployRequest::new("full", g, c),
+            Box::new(move |result, _| {
+                tx.send(result.map(|o| o.kind())).ok();
+            }),
+        );
+        assert_eq!(rx.recv().unwrap().unwrap(), "SHED");
+        assert_eq!(sched.stats().shed, 1);
+    }
+
+    #[test]
+    fn lane_default_deadline_applies_when_request_has_none() {
+        let mut lane = LaneSpec::new("bounded", 1, 8);
+        lane.default_deadline = Some(Duration::ZERO);
+        let sched = BatchScheduler::new(
+            small_service(),
+            BatchOptions { lanes: vec![lane], ..BatchOptions::default() },
+        );
+        let (g, c) = small();
+        let outcome =
+            sched.deploy_in_lane("defaulted", g.clone(), c.clone(), Some("bounded"), None).unwrap();
+        assert!(matches!(outcome, BatchOutcome::TimedOut), "the lane's zero default deadline must expire it");
+        // An explicit client deadline wins over the lane default.
+        let outcome = sched
+            .deploy_in_lane("explicit", g, c, Some("bounded"), Some(Duration::from_secs(60)))
+            .unwrap();
+        assert!(matches!(outcome, BatchOutcome::Served(_)));
+        // And STATS surfaces the effective default.
+        let stats = handle_line(&sched, "STATS");
+        let lanes = stats.get("server").unwrap().get("config").unwrap().get("lanes").unwrap();
+        let ms = lanes.get("bounded").unwrap().get("default_deadline_ms").unwrap().as_f64().unwrap();
+        assert_eq!(ms, 0.0);
+        assert!(matches!(
+            lanes.get("default").unwrap().get("default_deadline_ms").unwrap(),
+            Json::Null
+        ));
     }
 }

@@ -1,0 +1,950 @@
+//! The async multiplexed front door: one readiness-polled event loop
+//! serving many connections, many in-flight requests per connection.
+//!
+//! The legacy server dedicated a thread per connection and handled one
+//! request at a time — request *k + 1* could not even be parsed until
+//! request *k*'s solve and simulation finished. This module replaces
+//! that with a single nonblocking event-loop thread (`ftl-frontend`):
+//!
+//! * **Multiplexing** — v1 frames (`FTL1 <id> <command...>`, see
+//!   [`super::proto`] and `PROTOCOL.md`) carry a client-chosen request
+//!   id. Deploys are handed to [`BatchScheduler::submit_async`] and the
+//!   loop moves on; responses come back tagged with their id, in
+//!   whatever order the scheduler finishes them.
+//! * **Streaming** — each v1 deploy gets a [`StreamSink`]: the `plan`
+//!   event is pushed the moment the solve lands, per-phase `sim` events
+//!   follow, then the terminal `done`/`error`. Warm requests skip the
+//!   work and collapse to a single terminal frame.
+//! * **v0 compatibility** — bare legacy lines are served in order, one
+//!   JSON line per request, by serializing them per connection (a v0
+//!   deploy in flight parks the line behind it; v1 traffic on other
+//!   connections is unaffected).
+//! * **Backpressure, both directions** — per-connection in-flight
+//!   requests are capped ([`FrontendOptions::max_inflight`]): at the
+//!   cap the loop simply stops reading that socket, so the kernel
+//!   buffer (and eventually the client) absorbs the excess. Output is
+//!   queued per connection up to
+//!   [`FrontendOptions::write_queue_cap`] bytes; a client that stops
+//!   reading long enough to overflow the queue is closed and counted
+//!   (`slow_closed`) instead of wedging the loop.
+//! * **Fault isolation** — malformed or oversized frames cost their
+//!   sender one `error` event (on the recoverable id, 0 otherwise) and
+//!   never the connection.
+//!
+//! On Linux the loop sleeps in `poll(2)` (via a minimal FFI shim — no
+//! external crates) with each socket's read/write interest registered,
+//! so it wakes exactly when a socket or the cross-thread waker is
+//! ready; readiness is then discovered by the normal nonblocking scan,
+//! so the `revents` bits are advisory only. Elsewhere it degrades to a
+//! short fixed sleep. Completions and streamed events land from
+//! scheduler threads through a socketpair waker, never by touching the
+//! sockets themselves — all socket I/O stays on the loop thread.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::batch::{build_deploy, handle_typed, outcome_to_json, BatchScheduler, DeployRequest};
+use super::proto::{self, Event, EventSink, MAX_FRAME_BYTES};
+use crate::metrics::Counter;
+use crate::util::json::Json;
+
+/// Tuning for the front door event loop.
+#[derive(Debug, Clone)]
+pub struct FrontendOptions {
+    /// Per-connection output queue bound, in bytes. A connection whose
+    /// queued-but-unwritten responses exceed this is closed as a slow
+    /// client.
+    pub write_queue_cap: usize,
+    /// Per-connection cap on concurrently in-flight v1 deploys. At the
+    /// cap the loop stops reading the socket until a slot frees.
+    pub max_inflight: usize,
+    /// Upper bound on how long the loop sleeps with nothing ready —
+    /// the worst-case latency for noticing a stop request on platforms
+    /// without the waker fd in the poll set.
+    pub tick: Duration,
+}
+
+impl Default for FrontendOptions {
+    fn default() -> Self {
+        Self { write_queue_cap: 4 * 1024 * 1024, max_inflight: 128, tick: Duration::from_millis(10) }
+    }
+}
+
+/// Cumulative front-door telemetry, reported under `"frontend"` in
+/// `STATS`.
+#[derive(Debug, Default)]
+pub struct FrontendCounters {
+    pub accepted: Counter,
+    pub closed: Counter,
+    /// Connections closed for overflowing their write queue.
+    pub slow_closed: Counter,
+    /// Complete request lines consumed (both framings, errors included).
+    pub frames_in: Counter,
+    /// Response lines written (streamed events included).
+    pub frames_out: Counter,
+    /// Malformed or oversized frames answered with an error event.
+    pub protocol_errors: Counter,
+}
+
+impl FrontendCounters {
+    /// Currently open connections.
+    pub fn open(&self) -> u64 {
+        self.accepted.get().saturating_sub(self.closed.get())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accepted", Json::Num(self.accepted.get() as f64)),
+            ("open", Json::Num(self.open() as f64)),
+            ("closed", Json::Num(self.closed.get() as f64)),
+            ("slow_closed", Json::Num(self.slow_closed.get() as f64)),
+            ("frames_in", Json::Num(self.frames_in.get() as f64)),
+            ("frames_out", Json::Num(self.frames_out.get() as f64)),
+            ("protocol_errors", Json::Num(self.protocol_errors.get() as f64)),
+        ])
+    }
+}
+
+/// Cross-thread wakeup for the event loop: completions and streamed
+/// events write one byte into a nonblocking socketpair, whose read end
+/// sits in the loop's poll set. Writes when the pipe is already full
+/// fail with `WouldBlock` — fine, a wakeup is already pending.
+#[cfg(unix)]
+struct Waker {
+    tx: std::os::unix::net::UnixStream,
+    rx: std::os::unix::net::UnixStream,
+}
+
+#[cfg(unix)]
+impl Waker {
+    fn new() -> std::io::Result<Self> {
+        let (tx, rx) = std::os::unix::net::UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok(Self { tx, rx })
+    }
+
+    fn wake(&self) {
+        // One byte is all-or-nothing; `WouldBlock` on a full pipe means
+        // a wakeup is already pending — both fine to ignore.
+        let _ = (&self.tx).write_all(&[1u8]);
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+
+    #[cfg(target_os = "linux")]
+    fn raw_fd(&self) -> i32 {
+        use std::os::unix::io::AsRawFd;
+        self.rx.as_raw_fd()
+    }
+}
+
+/// Degraded waker for platforms without socketpairs: the loop falls
+/// back to bounded sleeps, so wakeups are only latency hints.
+#[cfg(not(unix))]
+struct Waker;
+
+#[cfg(not(unix))]
+impl Waker {
+    fn new() -> std::io::Result<Self> {
+        Ok(Self)
+    }
+    fn wake(&self) {}
+    fn drain(&self) {}
+}
+
+/// Minimal `poll(2)` shim — interest registration only; the loop
+/// rescans every socket nonblockingly after waking, so `revents` is
+/// never inspected and spurious wakeups are merely a wasted scan.
+#[cfg(target_os = "linux")]
+mod sys {
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+
+    #[repr(C)]
+    #[allow(dead_code)] // written for the kernel, never read back
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: std::ffi::c_ulong, timeout: std::ffi::c_int) -> std::ffi::c_int;
+    }
+
+    /// Sleep until any registered fd is ready or `timeout_ms` elapses.
+    /// Errors (EINTR included) just end the sleep early.
+    pub fn wait(fds: &mut [PollFd], timeout_ms: i32) {
+        unsafe {
+            poll(fds.as_mut_ptr(), fds.len() as std::ffi::c_ulong, timeout_ms);
+        }
+    }
+}
+
+/// The slice of per-connection state shared with scheduler threads:
+/// completions and stream sinks push rendered response lines here and
+/// wake the loop; the loop drains lines to the socket.
+struct ConnShared {
+    state: Mutex<ConnState>,
+    waker: Arc<Waker>,
+    write_queue_cap: usize,
+}
+
+struct ConnState {
+    /// Rendered response lines (no terminator) awaiting the socket.
+    out: VecDeque<String>,
+    /// Bytes queued in `out` (terminators included) — the overflow gauge.
+    out_bytes: usize,
+    /// v1 deploys handed to the scheduler, not yet terminal.
+    inflight: usize,
+    /// A v0 deploy is in flight; later lines on this connection wait.
+    v0_busy: bool,
+    /// Write queue overflowed — the loop closes the connection.
+    overflowed: bool,
+    /// Connection is gone; late completions drop their output.
+    dead: bool,
+}
+
+impl ConnShared {
+    fn new(waker: Arc<Waker>, write_queue_cap: usize) -> Self {
+        Self {
+            state: Mutex::new(ConnState {
+                out: VecDeque::new(),
+                out_bytes: 0,
+                inflight: 0,
+                v0_busy: false,
+                overflowed: false,
+                dead: false,
+            }),
+            waker,
+            write_queue_cap,
+        }
+    }
+
+    fn push_locked(&self, st: &mut ConnState, line: String) {
+        st.out_bytes += line.len() + 1;
+        st.out.push_back(line);
+        if st.out_bytes > self.write_queue_cap {
+            st.overflowed = true;
+        }
+    }
+
+    /// Queue one response line (streamed events, inline replies).
+    fn push(&self, line: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.dead {
+            return;
+        }
+        self.push_locked(&mut st, line);
+        drop(st);
+        self.waker.wake();
+    }
+
+    /// Terminal line for one v1 deploy: queue it and release the slot.
+    fn finish_one(&self, line: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.dead {
+            return;
+        }
+        st.inflight = st.inflight.saturating_sub(1);
+        self.push_locked(&mut st, line);
+        drop(st);
+        self.waker.wake();
+    }
+
+    /// Terminal line for the v0 deploy: queue it and unpark the
+    /// connection's serial lane.
+    fn v0_done(&self, line: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.dead {
+            return;
+        }
+        st.v0_busy = false;
+        self.push_locked(&mut st, line);
+        drop(st);
+        self.waker.wake();
+    }
+}
+
+/// Streams a v1 deploy's partial replies (`plan`, `sim`) onto its
+/// connection, tagged with the request id. Terminal frames come from
+/// the completion callback, not the sink.
+struct StreamSink {
+    shared: Arc<ConnShared>,
+    id: u64,
+}
+
+impl EventSink for StreamSink {
+    fn emit(&self, event: &Event) {
+        self.shared.push(event.render(self.id));
+    }
+}
+
+/// Loop-owned per-connection state (never touched off-thread).
+struct Conn {
+    stream: TcpStream,
+    shared: Arc<ConnShared>,
+    /// Unparsed input bytes.
+    rbuf: Vec<u8>,
+    /// A complete line that could not proceed yet (v1 at the in-flight
+    /// cap, or any line parked behind a v0 deploy). Retried each tick;
+    /// also the read-pause signal.
+    pending_line: Option<String>,
+    /// Swallowing the remainder of an oversized unterminated line.
+    discarding: bool,
+    /// Peer sent EOF; drain and close once quiet.
+    half_closed: bool,
+    /// Unrecoverable socket error.
+    dead: bool,
+    /// The line currently on the wire, and how much of it is written.
+    wbuf: Vec<u8>,
+    wpos: usize,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, shared: Arc<ConnShared>) -> Self {
+        Self {
+            stream,
+            shared,
+            rbuf: Vec::new(),
+            pending_line: None,
+            discarding: false,
+            half_closed: false,
+            dead: false,
+            wbuf: Vec::new(),
+            wpos: 0,
+        }
+    }
+
+    fn wants_read(&self) -> bool {
+        !self.half_closed && !self.dead && self.pending_line.is_none()
+    }
+
+    fn write_idle(&self) -> bool {
+        self.wpos == self.wbuf.len()
+    }
+}
+
+/// The front door itself: construct with a scheduler, then
+/// [`serve`](Frontend::serve) a listener.
+pub struct Frontend {
+    scheduler: Arc<BatchScheduler>,
+    opts: FrontendOptions,
+}
+
+/// A running front door. Dropping (or [`join`](FrontendHandle::join)ing)
+/// stops the event loop; connections are closed, in-flight scheduler
+/// work completes into dead connections and is dropped.
+pub struct FrontendHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    waker: Arc<Waker>,
+    counters: Arc<FrontendCounters>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl FrontendHandle {
+    /// The bound listen address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn counters(&self) -> &FrontendCounters {
+        &self.counters
+    }
+
+    /// Ask the loop to exit. Returns immediately; the loop notices via
+    /// the waker (or within one tick).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.waker.wake();
+    }
+
+    /// Stop the loop and wait for the thread to exit.
+    pub fn join(mut self) {
+        self.shutdown();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for FrontendHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Frontend {
+    pub fn new(scheduler: Arc<BatchScheduler>, opts: FrontendOptions) -> Self {
+        Self { scheduler, opts }
+    }
+
+    /// Start the event loop on its own thread, serving `listener`.
+    pub fn serve(self, listener: TcpListener) -> Result<FrontendHandle> {
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let waker = Arc::new(Waker::new()?);
+        let counters = Arc::new(FrontendCounters::default());
+        let looper = EventLoop {
+            scheduler: self.scheduler,
+            opts: self.opts,
+            counters: Arc::clone(&counters),
+            stop: Arc::clone(&stop),
+            waker: Arc::clone(&waker),
+        };
+        let thread = std::thread::Builder::new()
+            .name("ftl-frontend".into())
+            .spawn(move || looper.run(listener))?;
+        Ok(FrontendHandle { addr, stop, waker, counters, thread: Some(thread) })
+    }
+}
+
+struct EventLoop {
+    scheduler: Arc<BatchScheduler>,
+    opts: FrontendOptions,
+    counters: Arc<FrontendCounters>,
+    stop: Arc<AtomicBool>,
+    waker: Arc<Waker>,
+}
+
+impl EventLoop {
+    fn run(&self, listener: TcpListener) {
+        let mut conns: Vec<Conn> = Vec::new();
+        while !self.stop.load(Ordering::Relaxed) {
+            let mut progressed = self.accept_into(&listener, &mut conns);
+            self.waker.drain();
+            for conn in conns.iter_mut() {
+                // Write first (free queue space), read, process, then
+                // write again so inline replies leave this tick.
+                progressed |= self.flush(conn);
+                progressed |= self.fill(conn);
+                progressed |= self.process(conn);
+                progressed |= self.flush(conn);
+            }
+            let mut i = 0;
+            while i < conns.len() {
+                if self.should_close(&conns[i]) {
+                    let conn = conns.swap_remove(i);
+                    self.retire(conn);
+                    progressed = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if !progressed && !self.stop.load(Ordering::Relaxed) {
+                self.idle_wait(&listener, &conns);
+            }
+        }
+        for conn in conns {
+            self.retire(conn);
+        }
+    }
+
+    fn accept_into(&self, listener: &TcpListener, conns: &mut Vec<Conn>) -> bool {
+        let mut progressed = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let shared =
+                        Arc::new(ConnShared::new(Arc::clone(&self.waker), self.opts.write_queue_cap));
+                    conns.push(Conn::new(stream, shared));
+                    self.counters.accepted.inc();
+                    progressed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        progressed
+    }
+
+    /// Read whatever the socket has, up to a bounded buffer. Reading is
+    /// paused while a line is parked (`pending_line`) — that is the
+    /// in-flight backpressure reaching the peer.
+    fn fill(&self, conn: &mut Conn) -> bool {
+        if !conn.wants_read() {
+            return false;
+        }
+        let mut progressed = false;
+        let mut buf = [0u8; 8192];
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.half_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    progressed = true;
+                    conn.rbuf.extend_from_slice(&buf[..n]);
+                    // An unterminated line past the frame bound is
+                    // handled by `process`; don't buffer past 2× it.
+                    if conn.rbuf.len() > 2 * MAX_FRAME_BYTES {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+
+    /// Consume complete lines from the read buffer. Returns true if
+    /// any line was consumed.
+    fn process(&self, conn: &mut Conn) -> bool {
+        let mut progressed = false;
+        loop {
+            if conn.discarding {
+                match conn.rbuf.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        conn.rbuf.drain(..=pos);
+                        conn.discarding = false;
+                    }
+                    None => {
+                        conn.rbuf.clear();
+                        break;
+                    }
+                }
+            }
+            let line = match conn.pending_line.take() {
+                Some(line) => line,
+                None => match self.next_line(conn) {
+                    Some(line) => line,
+                    None => break,
+                },
+            };
+            if self.handle_line(conn, &line) {
+                self.counters.frames_in.inc();
+                progressed = true;
+            } else {
+                conn.pending_line = Some(line);
+                break;
+            }
+        }
+        progressed
+    }
+
+    /// Extract the next complete line, handling oversize on the spot
+    /// (error event, never a disconnect). `None` means no complete
+    /// line is buffered.
+    fn next_line(&self, conn: &mut Conn) -> Option<String> {
+        loop {
+            match conn.rbuf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    let raw: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                    let line = String::from_utf8_lossy(&raw[..pos]).trim().to_string();
+                    if pos > MAX_FRAME_BYTES {
+                        self.reject_oversized(conn, &line);
+                        continue;
+                    }
+                    if line.is_empty() {
+                        continue;
+                    }
+                    return Some(line);
+                }
+                None => {
+                    if conn.rbuf.len() > MAX_FRAME_BYTES {
+                        // Unterminated oversized line: reject on what
+                        // we can see, swallow the rest as it arrives.
+                        let prefix = String::from_utf8_lossy(&conn.rbuf[..256.min(conn.rbuf.len())]).to_string();
+                        self.reject_oversized(conn, &prefix);
+                        conn.rbuf.clear();
+                        conn.discarding = true;
+                    }
+                    return None;
+                }
+            }
+        }
+    }
+
+    fn reject_oversized(&self, conn: &Conn, seen: &str) {
+        self.counters.protocol_errors.inc();
+        let message = format!("oversized frame: request lines are limited to {MAX_FRAME_BYTES} bytes");
+        let reply = if seen.split_whitespace().next() == Some(proto::V1_TAG) {
+            Event::Error { message }.render(proto::id_hint(seen).unwrap_or(0))
+        } else {
+            Json::obj(vec![("error", Json::str(message))]).to_string()
+        };
+        conn.shared.push(reply);
+    }
+
+    /// Handle one complete request line. Returns false when the line
+    /// cannot proceed yet (in-flight cap, v0 serialization) — the
+    /// caller parks it and stops reading.
+    fn handle_line(&self, conn: &Conn, line: &str) -> bool {
+        let frame = match proto::Frame::parse(line) {
+            Ok(frame) => frame,
+            Err(e) => {
+                self.counters.protocol_errors.inc();
+                let msg = format!("{e:#}");
+                let reply = if line.split_whitespace().next() == Some(proto::V1_TAG) {
+                    Event::Error { message: msg }.render(proto::id_hint(line).unwrap_or(0))
+                } else {
+                    Json::obj(vec![("error", Json::str(msg))]).to_string()
+                };
+                conn.shared.push(reply);
+                return true;
+            }
+        };
+        match frame.version {
+            proto::Version::V1 => {
+                let id = frame.id.unwrap_or(0);
+                match &frame.request {
+                    proto::Request::Deploy(cmd) => self.start_deploy_v1(conn, id, cmd),
+                    request => {
+                        let legacy = self.respond_inline(request);
+                        conn.shared.push(proto::wrap_v1(id, &legacy));
+                        true
+                    }
+                }
+            }
+            proto::Version::V0 => {
+                if conn.shared.state.lock().unwrap().v0_busy {
+                    // Legacy clients expect responses in request order:
+                    // everything behind an in-flight v0 deploy waits.
+                    return false;
+                }
+                match &frame.request {
+                    proto::Request::Deploy(cmd) => self.start_deploy_v0(conn, cmd),
+                    request => {
+                        let legacy = self.respond_inline(request);
+                        conn.shared.push(legacy);
+                        true
+                    }
+                }
+            }
+        }
+    }
+
+    /// Non-deploy commands answer inline on the loop thread (cache and
+    /// counter reads — cheap). `STATS` grows the front door's own block.
+    fn respond_inline(&self, request: &proto::Request) -> String {
+        if matches!(request, proto::Request::Stats) {
+            let mut j = self.scheduler.stats_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("frontend".into(), self.counters.to_json());
+            }
+            return j.to_string();
+        }
+        handle_typed(&self.scheduler, request)
+    }
+
+    fn start_deploy_v1(&self, conn: &Conn, id: u64, cmd: &proto::DeployCommand) -> bool {
+        {
+            let st = conn.shared.state.lock().unwrap();
+            if st.inflight >= self.opts.max_inflight {
+                return false;
+            }
+        }
+        let (graph, cfg) = match build_deploy(cmd) {
+            Ok(built) => built,
+            Err(e) => {
+                conn.shared.push(Event::Error { message: format!("{e:#}") }.render(id));
+                return true;
+            }
+        };
+        let soc = cfg.soc.clone();
+        let lane_name = self.scheduler.lane_name(cmd.lane.as_deref()).to_string();
+        conn.shared.state.lock().unwrap().inflight += 1;
+        let sink: Arc<dyn EventSink> = Arc::new(StreamSink { shared: Arc::clone(&conn.shared), id });
+        let mut req = DeployRequest::new(cmd.workload.clone(), graph, cfg).sink(sink);
+        if let Some(lane) = &cmd.lane {
+            req = req.lane(lane.clone());
+        }
+        if let Some(deadline) = cmd.deadline() {
+            req = req.deadline(deadline);
+        }
+        let shared = Arc::clone(&conn.shared);
+        self.scheduler.submit_async(
+            req,
+            Box::new(move |result, trace_id| {
+                let line = match result {
+                    Ok(outcome) => Event::Done(outcome_to_json(&outcome, &lane_name, trace_id, &soc)).render(id),
+                    Err(e) => Event::Error { message: format!("{e:#}") }.render(id),
+                };
+                shared.finish_one(line);
+            }),
+        );
+        true
+    }
+
+    fn start_deploy_v0(&self, conn: &Conn, cmd: &proto::DeployCommand) -> bool {
+        let (graph, cfg) = match build_deploy(cmd) {
+            Ok(built) => built,
+            Err(e) => {
+                conn.shared
+                    .push(Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string());
+                return true;
+            }
+        };
+        let soc = cfg.soc.clone();
+        let lane_name = self.scheduler.lane_name(cmd.lane.as_deref()).to_string();
+        conn.shared.state.lock().unwrap().v0_busy = true;
+        let mut req = DeployRequest::new(cmd.workload.clone(), graph, cfg);
+        if let Some(lane) = &cmd.lane {
+            req = req.lane(lane.clone());
+        }
+        if let Some(deadline) = cmd.deadline() {
+            req = req.deadline(deadline);
+        }
+        let shared = Arc::clone(&conn.shared);
+        self.scheduler.submit_async(
+            req,
+            Box::new(move |result, trace_id| {
+                let line = match result {
+                    Ok(outcome) => outcome_to_json(&outcome, &lane_name, trace_id, &soc).to_string(),
+                    Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]).to_string(),
+                };
+                shared.v0_done(line);
+            }),
+        );
+        true
+    }
+
+    /// Drain queued response lines to the socket until it would block.
+    fn flush(&self, conn: &mut Conn) -> bool {
+        if conn.dead {
+            return false;
+        }
+        let mut progressed = false;
+        loop {
+            if conn.write_idle() {
+                let next = {
+                    let mut st = conn.shared.state.lock().unwrap();
+                    let line = st.out.pop_front();
+                    if let Some(line) = &line {
+                        st.out_bytes = st.out_bytes.saturating_sub(line.len() + 1);
+                    }
+                    line
+                };
+                match next {
+                    Some(line) => {
+                        conn.wbuf = line.into_bytes();
+                        conn.wbuf.push(b'\n');
+                        conn.wpos = 0;
+                        self.counters.frames_out.inc();
+                    }
+                    None => break,
+                }
+            }
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.wpos += n;
+                    progressed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+
+    fn should_close(&self, conn: &Conn) -> bool {
+        if conn.dead {
+            return true;
+        }
+        let st = conn.shared.state.lock().unwrap();
+        if st.overflowed || st.dead {
+            return true;
+        }
+        // Graceful: peer EOF'd (possibly via shutdown(WR) while still
+        // reading), everything parsed is answered and flushed.
+        conn.half_closed
+            && conn.rbuf.is_empty()
+            && conn.pending_line.is_none()
+            && st.inflight == 0
+            && !st.v0_busy
+            && st.out.is_empty()
+            && conn.write_idle()
+    }
+
+    fn retire(&self, conn: Conn) {
+        let mut st = conn.shared.state.lock().unwrap();
+        st.dead = true;
+        if st.overflowed && !conn.dead {
+            self.counters.slow_closed.inc();
+        }
+        drop(st);
+        self.counters.closed.inc();
+    }
+
+    /// Sleep until something is plausibly ready: any socket's
+    /// registered interest, the waker, or the tick expiring.
+    #[cfg(target_os = "linux")]
+    fn idle_wait(&self, listener: &TcpListener, conns: &[Conn]) {
+        use std::os::unix::io::AsRawFd;
+        let mut fds = Vec::with_capacity(conns.len() + 2);
+        fds.push(sys::PollFd { fd: listener.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+        fds.push(sys::PollFd { fd: self.waker.raw_fd(), events: sys::POLLIN, revents: 0 });
+        for conn in conns {
+            let mut events = 0i16;
+            if conn.wants_read() {
+                events |= sys::POLLIN;
+            }
+            let st = conn.shared.state.lock().unwrap();
+            if !conn.write_idle() || !st.out.is_empty() {
+                events |= sys::POLLOUT;
+            }
+            fds.push(sys::PollFd { fd: conn.stream.as_raw_fd(), events, revents: 0 });
+        }
+        let timeout_ms = self.opts.tick.as_millis().clamp(1, i32::MAX as u128) as i32;
+        sys::wait(&mut fds, timeout_ms);
+    }
+
+    /// Portable fallback: short bounded sleep (wakeups become latency
+    /// hints rather than interrupts).
+    #[cfg(not(target_os = "linux"))]
+    fn idle_wait(&self, _listener: &TcpListener, _conns: &[Conn]) {
+        std::thread::sleep(self.opts.tick.min(Duration::from_millis(2)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{BatchOptions, PlanService, ServeOptions};
+    use std::io::BufRead;
+
+    fn frontend() -> FrontendHandle {
+        let service = Arc::new(PlanService::new(ServeOptions {
+            cache_capacity: 32,
+            cache_shards: 2,
+            workers: 1,
+            ..ServeOptions::default()
+        }));
+        let scheduler = Arc::new(BatchScheduler::new(
+            service,
+            BatchOptions { batch_window: Duration::ZERO, ..BatchOptions::default() },
+        ));
+        Frontend::new(scheduler, FrontendOptions::default())
+            .serve(TcpListener::bind("127.0.0.1:0").unwrap())
+            .unwrap()
+    }
+
+    fn connect(handle: &FrontendHandle) -> (TcpStream, std::io::BufReader<TcpStream>) {
+        let stream = TcpStream::connect(handle.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        (stream, reader)
+    }
+
+    fn read_json(reader: &mut std::io::BufReader<TcpStream>) -> Json {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        crate::util::json::parse(line.trim()).unwrap()
+    }
+
+    fn event_of(j: &Json) -> String {
+        j.get("event").unwrap().as_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn v1_deploy_streams_plan_phases_done_and_warm_collapses() {
+        let handle = frontend();
+        let (mut stream, mut reader) = connect(&handle);
+        stream.write_all(b"FTL1 7 DEPLOY stage-16x24x48 cluster-only ftl\n").unwrap();
+        let mut events = Vec::new();
+        loop {
+            let j = read_json(&mut reader);
+            assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 7);
+            assert_eq!(j.get("v").unwrap().as_u64().unwrap(), 1);
+            let ev = event_of(&j);
+            let done = ev == "done" || ev == "error";
+            events.push((ev, j));
+            if done {
+                break;
+            }
+        }
+        let kinds: Vec<&str> = events.iter().map(|(e, _)| e.as_str()).collect();
+        assert_eq!(kinds.first(), Some(&"plan"), "cold deploy must stream the plan first: {kinds:?}");
+        assert!(kinds[1..kinds.len() - 1].iter().all(|k| *k == "sim"), "between plan and done: {kinds:?}");
+        assert!(kinds.len() >= 3, "expected at least one sim event: {kinds:?}");
+        let (_, done) = events.last().unwrap();
+        assert_eq!(event_of(done), "done");
+        assert_eq!(done.get("outcome").unwrap().as_str().unwrap(), "OK");
+
+        // Warm repeat: single terminal frame, no partials.
+        stream.write_all(b"FTL1 8 DEPLOY stage-16x24x48 cluster-only ftl\n").unwrap();
+        let j = read_json(&mut reader);
+        assert_eq!(event_of(&j), "done");
+        assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 8);
+        assert!(j.get("cached").unwrap().as_bool().unwrap());
+        assert!(j.get("sim_cached").unwrap().as_bool().unwrap());
+        handle.join();
+    }
+
+    #[test]
+    fn malformed_and_oversized_frames_error_without_disconnecting() {
+        let handle = frontend();
+        let (mut stream, mut reader) = connect(&handle);
+        stream.write_all(b"FTL1 11 FROB x\n").unwrap();
+        let j = read_json(&mut reader);
+        assert_eq!(event_of(&j), "error");
+        assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 11, "error must land on the recoverable id");
+
+        let mut big = b"FTL1 12 DEPLOY ".to_vec();
+        big.resize(MAX_FRAME_BYTES + 64, b'x');
+        big.push(b'\n');
+        stream.write_all(&big).unwrap();
+        let j = read_json(&mut reader);
+        assert_eq!(event_of(&j), "error");
+        assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 12);
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("oversized"));
+
+        // The connection survives both: a PING still answers.
+        stream.write_all(b"FTL1 13 PING\n").unwrap();
+        let j = read_json(&mut reader);
+        assert_eq!(event_of(&j), "done");
+        assert!(j.get("pong").unwrap().as_bool().unwrap());
+        assert!(handle.counters().protocol_errors.get() >= 2);
+        handle.join();
+    }
+
+    #[test]
+    fn v0_lines_keep_their_legacy_shape_and_order() {
+        let handle = frontend();
+        let (mut stream, mut reader) = connect(&handle);
+        stream.write_all(b"PING\nDEPLOY stage-16x24x48 cluster-only ftl\nSTATS\n").unwrap();
+        let pong = read_json(&mut reader);
+        assert!(pong.get("pong").unwrap().as_bool().unwrap());
+        assert!(pong.get_opt("v").is_none(), "v0 replies must not grow protocol fields");
+        let deploy = read_json(&mut reader);
+        assert_eq!(deploy.get("outcome").unwrap().as_str().unwrap(), "OK");
+        assert!(deploy.get_opt("event").is_none());
+        let stats = read_json(&mut reader);
+        assert!(stats.get("frontend").unwrap().get("accepted").unwrap().as_u64().unwrap() >= 1);
+        handle.join();
+    }
+}

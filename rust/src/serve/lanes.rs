@@ -51,29 +51,45 @@ pub struct LaneSpec {
     /// Full-queue policy override; `None` inherits the scheduler-wide
     /// policy ([`crate::serve::BatchOptions::policy`]).
     pub policy: Option<AdmissionPolicy>,
+    /// Default deadline applied to requests admitted into this lane
+    /// that carry none of their own; `None` leaves such requests
+    /// unbounded. A client-supplied deadline always wins.
+    pub default_deadline: Option<std::time::Duration>,
 }
 
 impl LaneSpec {
     /// Lane with the scheduler-default admission policy.
     pub fn new(name: impl Into<String>, weight: u64, capacity: usize) -> Self {
-        Self { name: name.into(), weight, capacity, policy: None }
+        Self { name: name.into(), weight, capacity, policy: None, default_deadline: None }
     }
 
-    /// Parse the CLI form `name:weight:capacity[:shed|:block]` (the
-    /// repeatable `ftl serve --lane` flag).
+    /// Parse the CLI form `name:weight:capacity[:shed|:block][:deadline-ms]`
+    /// (the repeatable `ftl serve --lane` flag). The optional fourth
+    /// token is a policy when it says `shed`/`block` and a default
+    /// deadline when it parses as an integer; both may be given, policy
+    /// first.
     pub fn parse(spec: &str) -> Result<Self> {
         let parts: Vec<&str> = spec.split(':').collect();
-        let (name, weight, capacity, policy) = match parts.as_slice() {
-            [name, weight, cap] => (*name, *weight, *cap, None),
-            [name, weight, cap, policy] => {
-                let policy = match *policy {
-                    "shed" => AdmissionPolicy::Shed,
-                    "block" => AdmissionPolicy::Block,
-                    other => bail!("bad lane policy '{other}' in '{spec}' (expected shed|block)"),
-                };
-                (*name, *weight, *cap, Some(policy))
+        let parse_policy = |policy: &str| -> Result<AdmissionPolicy> {
+            match policy {
+                "shed" => Ok(AdmissionPolicy::Shed),
+                "block" => Ok(AdmissionPolicy::Block),
+                other => bail!("bad lane policy '{other}' in '{spec}' (expected shed|block)"),
             }
-            _ => bail!("bad lane spec '{spec}' (expected name:weight:capacity[:shed|:block])"),
+        };
+        let (name, weight, capacity, policy, deadline_ms) = match parts.as_slice() {
+            [name, weight, cap] => (*name, *weight, *cap, None, None),
+            [name, weight, cap, tail] => match tail.parse::<u64>() {
+                Ok(ms) => (*name, *weight, *cap, None, Some(ms)),
+                Err(_) => (*name, *weight, *cap, Some(parse_policy(tail)?), None),
+            },
+            [name, weight, cap, policy, deadline] => {
+                let ms: u64 = deadline
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad lane deadline '{deadline}' in '{spec}' (expected milliseconds)"))?;
+                (*name, *weight, *cap, Some(parse_policy(policy)?), Some(ms))
+            }
+            _ => bail!("bad lane spec '{spec}' (expected name:weight:capacity[:shed|:block][:deadline-ms])"),
         };
         if name.is_empty() || name.contains(char::is_whitespace) {
             bail!("bad lane name in '{spec}' (must be non-empty, no whitespace)");
@@ -83,7 +99,13 @@ impl LaneSpec {
             bail!("lane weight must be >= 1 in '{spec}' (use capacity 0 to disable a lane)");
         }
         let capacity: usize = capacity.parse().map_err(|_| anyhow::anyhow!("bad lane capacity in '{spec}'"))?;
-        Ok(Self { name: name.to_string(), weight, capacity, policy })
+        Ok(Self {
+            name: name.to_string(),
+            weight,
+            capacity,
+            policy,
+            default_deadline: deadline_ms.map(std::time::Duration::from_millis),
+        })
     }
 }
 
@@ -275,6 +297,21 @@ mod tests {
     }
 
     #[test]
+    fn parse_accepts_default_deadlines() {
+        let l = LaneSpec::parse("free:1:16:250").unwrap();
+        assert_eq!(l.policy, None);
+        assert_eq!(l.default_deadline, Some(std::time::Duration::from_millis(250)));
+        let l = LaneSpec::parse("free:1:16:shed:250").unwrap();
+        assert_eq!(l.policy, Some(AdmissionPolicy::Shed));
+        assert_eq!(l.default_deadline, Some(std::time::Duration::from_millis(250)));
+        let l = LaneSpec::parse("gold:3:64").unwrap();
+        assert_eq!(l.default_deadline, None);
+        for bad in ["free:1:16:250:shed", "free:1:16:shed:fast", "free:1:16:shed:250:extra"] {
+            assert!(LaneSpec::parse(bad).is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
     fn parse_rejects_malformed_specs() {
         for bad in ["", "gold", "gold:3", "gold:3:64:fifo", ":3:64", "gold:0:64", "gold:x:64", "gold:3:y", "a b:1:4"] {
             assert!(LaneSpec::parse(bad).is_err(), "'{bad}' must not parse");
@@ -293,7 +330,7 @@ mod tests {
         assert_eq!(specs[0].weight, 2);
 
         assert!(normalize_specs(vec![LaneSpec::new("a", 1, 4), LaneSpec::new("a", 2, 4)], 16).is_err());
-        let zero_weight = LaneSpec { name: "z".into(), weight: 0, capacity: 4, policy: None };
+        let zero_weight = LaneSpec { name: "z".into(), weight: 0, capacity: 4, policy: None, default_deadline: None };
         assert!(normalize_specs(vec![zero_weight], 16).is_err());
     }
 

@@ -114,12 +114,28 @@
 //! `server` identity/config block, and `METRICS` renders everything as
 //! Prometheus-style text ([`crate::metrics::expo`]). `--trace-cap 0`
 //! disables tracing entirely — the warm path then pays zero overhead.
+//!
+//! # Front door
+//!
+//! [`Frontend`] is the network face: a single readiness-polled event
+//! loop multiplexes many in-flight requests per TCP connection. Clients
+//! speak the typed, versioned line protocol in [`proto`] (see
+//! `PROTOCOL.md` at the repo root): v1 frames carry a client-chosen
+//! request id and receive *streamed* partial replies — a `plan` event as
+//! soon as the solve lands, per-phase `sim` events, then a terminal
+//! `done`/`error` — with responses free to interleave out of order
+//! across ids. Bare legacy (v0) lines keep working unchanged and are
+//! answered in order, one JSON line per request. Per-connection write
+//! queues are bounded; clients that stop reading are shed rather than
+//! allowed to wedge the loop.
 
 mod batch;
 mod cache;
 mod fingerprint;
+mod frontend;
 pub mod lanes;
 pub mod persist;
+pub mod proto;
 mod service;
 mod singleflight;
 pub mod trace;
@@ -127,10 +143,12 @@ pub mod wave;
 pub mod wfq;
 
 pub use batch::{
-    handle_command, handle_line, AdmissionPolicy, BatchOptions, BatchOutcome, BatchScheduler,
+    handle_command, handle_line, handle_typed, outcome_to_json, AdmissionPolicy, BatchOptions, BatchOutcome,
+    BatchScheduler, DeployCompletion, DeployRequest,
 };
 pub use cache::{LruCache, PlanCache, SimCache};
 pub use fingerprint::{checksum, fingerprint, soc_fingerprint, Fingerprint};
+pub use frontend::{Frontend, FrontendCounters, FrontendHandle, FrontendOptions};
 pub use lanes::{normalize_specs, DEFAULT_LANE, LaneSet, LaneSpec};
 pub use persist::{PersistCounters, PersistOptions, SNAPSHOT_FORMAT, Snapshotter};
 pub use service::{

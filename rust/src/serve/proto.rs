@@ -1,0 +1,386 @@
+//! Typed wire protocol for the serve front door.
+//!
+//! One frame per line, two framings on the same request vocabulary
+//! (see PROTOCOL.md at the repo root for the full reference):
+//!
+//! ```text
+//! v1:  FTL1 <id> <command...>     id'd frame, responses may interleave
+//! v0:  <command...>               legacy bare line, served in order
+//! ```
+//!
+//! The command vocabulary is shared: `DEPLOY <workload> <soc> <strategy>
+//! [deadline-ms] [lane=<name>]`, `STATS`, `METRICS`, `TRACE [n]`,
+//! `SLOW [n]`, `PING`. [`Frame::parse`] is strict — every accepted
+//! frame renders back ([`Frame::render`]) to an equivalent line — and
+//! malformed input yields an error that the front door answers on the
+//! offending id ([`id_hint`]) instead of dropping the connection.
+//!
+//! v1 responses are [`Event`]s: single-line JSON objects tagged
+//! `{"v":1,"id":N,"event":...}`. A cold `DEPLOY` streams `plan`, then
+//! per-phase `sim` events, then a terminal `done`; warm requests may
+//! collapse to a single `done`. Every other command (and every error)
+//! is a single terminal frame. v0 responses keep the exact legacy
+//! shapes so pre-PR-7 clients never see a `"v"` field.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// Wire protocol version spoken by `FTL1` frames.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Magic first token that marks a v1 frame.
+pub const V1_TAG: &str = "FTL1";
+
+/// Hard cap on one request line. Longer lines are answered with an
+/// `error` event (on the id when it is recoverable) and discarded up
+/// to the next newline — never a disconnect.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024;
+
+/// Default count for bare `TRACE`/`SLOW` (kept identical to the legacy
+/// handler so v0 behavior is unchanged).
+pub const DEFAULT_DUMP_COUNT: usize = 16;
+
+/// Which framing a request arrived in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Version {
+    /// Legacy bare line: no id, responses in request order.
+    V0,
+    /// `FTL1 <id> ...`: id'd, responses may arrive out of order.
+    V1,
+}
+
+/// One parsed request line: framing, optional client-chosen id, and
+/// the typed command.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub version: Version,
+    /// Client-chosen request id — always `Some` for v1, `None` for v0.
+    pub id: Option<u64>,
+    pub request: Request,
+}
+
+/// The typed command vocabulary, shared by both framings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Deploy(DeployCommand),
+    Stats,
+    Ping,
+    Metrics,
+    Trace { n: usize },
+    Slow { n: usize },
+}
+
+/// A parsed `DEPLOY` command, still in wire terms (workload/SoC/strategy
+/// names, not resolved graphs) so parsing stays infallible w.r.t. the
+/// model registry and resolution errors surface per-request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeployCommand {
+    pub workload: String,
+    pub soc: String,
+    pub strategy: String,
+    pub deadline_ms: Option<u64>,
+    pub lane: Option<String>,
+}
+
+impl DeployCommand {
+    /// The client-requested deadline, if any.
+    pub fn deadline(&self) -> Option<Duration> {
+        self.deadline_ms.map(Duration::from_millis)
+    }
+}
+
+impl Frame {
+    /// Parse one request line, strict. `FTL1 <id> <command...>` is v1;
+    /// anything else is tried as a bare v0 command. Error messages for
+    /// v0 lines are byte-identical to the pre-typed handler so legacy
+    /// clients (and the pinned tests) see the same diagnostics.
+    pub fn parse(line: &str) -> Result<Frame> {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.first() == Some(&V1_TAG) {
+            let [_, id, rest @ ..] = parts.as_slice() else {
+                bail!("bad v1 frame '{line}' (expected: FTL1 <id> <command...>)");
+            };
+            let id: u64 =
+                id.parse().map_err(|_| anyhow!("bad request id '{id}' in '{line}' (expected a non-negative integer)"))?;
+            let request = Request::parse_tokens(rest, line)?;
+            Ok(Frame { version: Version::V1, id: Some(id), request })
+        } else {
+            let request = Request::parse_tokens(&parts, line)?;
+            Ok(Frame { version: Version::V0, id: None, request })
+        }
+    }
+
+    /// Render back to a canonical request line. `parse(render(f)) == f`
+    /// for every frame `parse` accepts (bare `TRACE`/`SLOW` normalize
+    /// to an explicit count, which round-trips stably from then on).
+    pub fn render(&self) -> String {
+        match (self.version, self.id) {
+            (Version::V1, Some(id)) => format!("{V1_TAG} {id} {}", self.request.render()),
+            _ => self.request.render(),
+        }
+    }
+}
+
+impl Request {
+    fn parse_tokens(parts: &[&str], line: &str) -> Result<Request> {
+        match parts {
+            ["DEPLOY", workload, soc, strategy, rest @ ..] if rest.len() <= 2 => {
+                let mut deadline_ms: Option<u64> = None;
+                let mut lane: Option<&str> = None;
+                for tok in rest {
+                    if let Some(name) = tok.strip_prefix("lane=") {
+                        if lane.replace(name).is_some() {
+                            bail!("duplicate lane= field in '{line}'");
+                        }
+                    } else {
+                        let ms: u64 = tok
+                            .parse()
+                            .map_err(|_| anyhow!("bad deadline '{tok}' (expected milliseconds or lane=<name>)"))?;
+                        if deadline_ms.replace(ms).is_some() {
+                            bail!("duplicate deadline in '{line}'");
+                        }
+                    }
+                }
+                Ok(Request::Deploy(DeployCommand {
+                    workload: workload.to_string(),
+                    soc: soc.to_string(),
+                    strategy: strategy.to_string(),
+                    deadline_ms,
+                    lane: lane.map(str::to_string),
+                }))
+            }
+            ["STATS"] => Ok(Request::Stats),
+            ["PING"] => Ok(Request::Ping),
+            ["METRICS"] => Ok(Request::Metrics),
+            [cmd @ ("TRACE" | "SLOW"), rest @ ..] if rest.len() <= 1 => {
+                let n = match rest {
+                    [tok] => tok
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("bad count '{tok}' in '{line}' (expected a non-negative integer)"))?,
+                    _ => DEFAULT_DUMP_COUNT,
+                };
+                Ok(if *cmd == "TRACE" { Request::Trace { n } } else { Request::Slow { n } })
+            }
+            _ => bail!(
+                "bad request: '{line}' (expected: DEPLOY <workload> <soc> <strategy> [deadline-ms] [lane=<name>] \
+                 | STATS | METRICS | TRACE [n] | SLOW [n] | PING)"
+            ),
+        }
+    }
+
+    /// Canonical command text (the part after any `FTL1 <id>` prefix).
+    pub fn render(&self) -> String {
+        match self {
+            Request::Deploy(d) => {
+                let mut s = format!("DEPLOY {} {} {}", d.workload, d.soc, d.strategy);
+                if let Some(ms) = d.deadline_ms {
+                    s.push_str(&format!(" {ms}"));
+                }
+                if let Some(lane) = &d.lane {
+                    s.push_str(&format!(" lane={lane}"));
+                }
+                s
+            }
+            Request::Stats => "STATS".to_string(),
+            Request::Ping => "PING".to_string(),
+            Request::Metrics => "METRICS".to_string(),
+            Request::Trace { n } => format!("TRACE {n}"),
+            Request::Slow { n } => format!("SLOW {n}"),
+        }
+    }
+}
+
+/// Best-effort id recovery from a malformed line: if it starts with
+/// `FTL1 <id>`, the error can be delivered on that id; otherwise the
+/// front door answers on id 0 by convention.
+pub fn id_hint(line: &str) -> Option<u64> {
+    let mut it = line.split_whitespace();
+    if it.next() != Some(V1_TAG) {
+        return None;
+    }
+    it.next().and_then(|tok| tok.parse().ok())
+}
+
+/// One v1 response frame. Rendered as a single JSON line tagged with
+/// the protocol version and the request id it answers.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// The solve landed: plan digest + request fingerprint, emitted
+    /// before simulation starts. `cached` is true on a plan-cache hit.
+    Plan { digest: String, fingerprint: String, cached: bool },
+    /// One simulated phase, in schedule order (`index` in `0..total`).
+    SimPhase { index: usize, total: usize, name: String, cycles: u64 },
+    /// Terminal success: the full reply body (same fields as the
+    /// legacy single-line response) merged into the event object.
+    Done(Json),
+    /// Terminal failure on this id. The connection stays open.
+    Error { message: String },
+}
+
+impl Event {
+    /// True for `done`/`error` — the last frame an id will see.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Event::Done(_) | Event::Error { .. })
+    }
+
+    /// Render as the single JSON line the client sees for request `id`.
+    pub fn render(&self, id: u64) -> String {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("v".to_string(), Json::Num(PROTO_VERSION as f64));
+        obj.insert("id".to_string(), Json::Num(id as f64));
+        match self {
+            Event::Plan { digest, fingerprint, cached } => {
+                obj.insert("event".to_string(), Json::str("plan"));
+                obj.insert("digest".to_string(), Json::str(digest));
+                obj.insert("fingerprint".to_string(), Json::str(fingerprint));
+                obj.insert("cached".to_string(), Json::Bool(*cached));
+            }
+            Event::SimPhase { index, total, name, cycles } => {
+                obj.insert("event".to_string(), Json::str("sim"));
+                obj.insert("phase".to_string(), Json::Num(*index as f64));
+                obj.insert("phases".to_string(), Json::Num(*total as f64));
+                obj.insert("name".to_string(), Json::str(name));
+                obj.insert("cycles".to_string(), Json::Num(*cycles as f64));
+            }
+            Event::Done(body) => {
+                obj.insert("event".to_string(), Json::str("done"));
+                if let Json::Obj(m) = body {
+                    for (k, v) in m {
+                        obj.entry(k.clone()).or_insert_with(|| v.clone());
+                    }
+                } else {
+                    obj.insert("body".to_string(), body.clone());
+                }
+            }
+            Event::Error { message } => {
+                obj.insert("event".to_string(), Json::str("error"));
+                obj.insert("error".to_string(), Json::str(message));
+            }
+        }
+        Json::Obj(obj).to_string()
+    }
+}
+
+/// Where streaming partial replies go. Implementations must tolerate
+/// being called from scheduler/worker threads.
+pub trait EventSink: Send + Sync {
+    fn emit(&self, event: &Event);
+}
+
+/// Wrap a legacy single- or multi-line response body as one terminal
+/// v1 frame: `{"error":...}` objects become `error` events, other
+/// objects become `done` events carrying their fields, and non-JSON
+/// text (METRICS/TRACE/SLOW dumps) is carried whole under `"text"`.
+pub fn wrap_v1(id: u64, legacy: &str) -> String {
+    match crate::util::json::parse(legacy) {
+        Ok(Json::Obj(m)) => {
+            if let Some(Json::Str(msg)) = m.get("error") {
+                Event::Error { message: msg.clone() }.render(id)
+            } else {
+                Event::Done(Json::Obj(m)).render(id)
+            }
+        }
+        _ => Event::Done(Json::obj(vec![("text", Json::str(legacy))])).render(id),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v1_frames_parse_and_round_trip() {
+        let f = Frame::parse("FTL1 42 DEPLOY vit-tiny-stage cluster-only ftl 250 lane=gold").unwrap();
+        assert_eq!(f.version, Version::V1);
+        assert_eq!(f.id, Some(42));
+        let Request::Deploy(d) = &f.request else { panic!("expected deploy") };
+        assert_eq!(d.workload, "vit-tiny-stage");
+        assert_eq!(d.deadline_ms, Some(250));
+        assert_eq!(d.deadline(), Some(Duration::from_millis(250)));
+        assert_eq!(d.lane.as_deref(), Some("gold"));
+        assert_eq!(f.render(), "FTL1 42 DEPLOY vit-tiny-stage cluster-only ftl 250 lane=gold");
+        assert_eq!(Frame::parse(&f.render()).unwrap(), f);
+    }
+
+    #[test]
+    fn v0_frames_have_no_id() {
+        let f = Frame::parse("  PING  ").unwrap();
+        assert_eq!(f.version, Version::V0);
+        assert_eq!(f.id, None);
+        assert_eq!(f.request, Request::Ping);
+        assert_eq!(f.render(), "PING");
+    }
+
+    #[test]
+    fn bare_trace_normalizes_to_default_count() {
+        let f = Frame::parse("TRACE").unwrap();
+        assert_eq!(f.request, Request::Trace { n: DEFAULT_DUMP_COUNT });
+        assert_eq!(f.render(), "TRACE 16");
+        assert_eq!(Frame::parse(&f.render()).unwrap().request, f.request);
+        assert_eq!(Frame::parse("SLOW 3").unwrap().request, Request::Slow { n: 3 });
+    }
+
+    #[test]
+    fn malformed_lines_error_with_legacy_messages() {
+        for bad in ["", "DEPLOY", "DEPLOY x", "DEPLOY a b c d e", "NOPE x y z"] {
+            let e = Frame::parse(bad).unwrap_err().to_string();
+            assert!(e.contains("bad request"), "'{bad}' -> {e}");
+        }
+        let e = Frame::parse("DEPLOY a b c nope").unwrap_err().to_string();
+        assert!(e.contains("bad deadline 'nope'"), "{e}");
+        let e = Frame::parse("DEPLOY a b c lane=x lane=y").unwrap_err().to_string();
+        assert!(e.contains("duplicate lane="), "{e}");
+        let e = Frame::parse("FTL1 zero PING").unwrap_err().to_string();
+        assert!(e.contains("bad request id"), "{e}");
+        let e = Frame::parse("FTL1 7 NOPE").unwrap_err().to_string();
+        assert!(e.contains("bad request"), "{e}");
+    }
+
+    #[test]
+    fn id_hint_recovers_ids_from_broken_v1_lines() {
+        assert_eq!(id_hint("FTL1 9 NOPE nope"), Some(9));
+        assert_eq!(id_hint("FTL1 bogus DEPLOY"), None);
+        assert_eq!(id_hint("PING"), None);
+    }
+
+    #[test]
+    fn events_render_as_tagged_json_lines() {
+        let plan = Event::Plan { digest: "d".into(), fingerprint: "f".into(), cached: false };
+        let j = crate::util::json::parse(&plan.render(5)).unwrap();
+        assert_eq!(j.get("v").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("id").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "plan");
+        assert!(!plan.is_terminal());
+
+        let sim = Event::SimPhase { index: 1, total: 3, name: "ph".into(), cycles: 99 };
+        let j = crate::util::json::parse(&sim.render(5)).unwrap();
+        assert_eq!(j.get("phase").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("cycles").unwrap().as_f64().unwrap(), 99.0);
+
+        let done = Event::Done(Json::obj(vec![("outcome", Json::str("OK"))]));
+        let j = crate::util::json::parse(&done.render(5)).unwrap();
+        assert!(done.is_terminal());
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "done");
+        assert_eq!(j.get("outcome").unwrap().as_str().unwrap(), "OK");
+    }
+
+    #[test]
+    fn wrap_v1_maps_legacy_bodies_onto_terminal_events() {
+        let err = wrap_v1(3, "{\"error\":\"nope\"}");
+        let j = crate::util::json::parse(&err).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "error");
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "nope");
+
+        let ok = wrap_v1(4, "{\"pong\":true}");
+        let j = crate::util::json::parse(&ok).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "done");
+        assert!(j.get("pong").unwrap().as_bool().unwrap());
+
+        let text = wrap_v1(5, "# metrics\n# EOF");
+        let j = crate::util::json::parse(&text).unwrap();
+        assert!(j.get("text").unwrap().as_str().unwrap().contains("# EOF"));
+    }
+}

@@ -27,8 +27,9 @@ use crate::sim::SimReport;
 use crate::util::json::Json;
 
 use super::cache::{PlanCache, SimCache};
-use super::fingerprint::{fingerprint, Fingerprint};
+use super::fingerprint::{checksum, fingerprint, Fingerprint};
 use super::persist::PersistCounters;
+use super::proto::{Event, EventSink};
 use super::singleflight::SingleFlight;
 use super::trace::ActiveSpan;
 
@@ -170,6 +171,7 @@ impl ServiceInner {
         key: Fingerprint,
         plan: &Arc<Deployment>,
         config: &DeployConfig,
+        sink: Option<&dyn EventSink>,
     ) -> Result<(Arc<SimReport>, bool)> {
         let sim_key = key.derive(SIM_KEY_TAG);
         if let Some(sim) = self.sim_cache.get(sim_key) {
@@ -186,7 +188,14 @@ impl ServiceInner {
             simulated_here.set(true);
             self.sims.inc();
             let sim_start = Instant::now();
-            let sim = Arc::new(plan.simulate(config)?);
+            // Only the request that actually runs the engine streams
+            // per-phase events; coalesced waiters get a terminal frame.
+            let sim = Arc::new(match sink {
+                Some(s) => plan.simulate_streamed(config, |index, total, rep| {
+                    s.emit(&Event::SimPhase { index, total, name: rep.name.clone(), cycles: rep.cycles });
+                })?,
+                None => plan.simulate(config)?,
+            });
             self.sim_us.record_duration(sim_start.elapsed());
             self.sim_cache.insert(sim_key, sim.clone());
             Ok(sim)
@@ -213,11 +222,38 @@ impl ServiceInner {
         config: &DeployConfig,
         span: Option<&ActiveSpan>,
     ) -> Result<ServeReply> {
+        self.deploy_observed(workload, graph, config, span, None)
+    }
+
+    /// [`ServiceInner::deploy_spanned`] plus an optional [`EventSink`]:
+    /// when present, a `plan` event (plan digest + fingerprint) is
+    /// emitted as soon as the solve lands and per-phase `sim` events
+    /// stream while the engine runs — the partial replies behind the v1
+    /// wire protocol. The terminal frame stays the caller's job.
+    fn deploy_observed(
+        &self,
+        workload: &str,
+        graph: &Graph,
+        config: &DeployConfig,
+        span: Option<&ActiveSpan>,
+        sink: Option<&dyn EventSink>,
+    ) -> Result<ServeReply> {
         let outcome = self.plan(graph, config)?;
         if let Some(s) = span {
             s.mark_solved();
         }
-        let (sim, sim_cached) = match self.simulate(outcome.fingerprint, &outcome.plan, config) {
+        if let Some(sink) = sink {
+            let digest = checksum(outcome.plan.to_json().to_string().as_bytes()).hex();
+            sink.emit(&Event::Plan {
+                digest,
+                fingerprint: outcome.fingerprint.hex(),
+                cached: outcome.cached,
+            });
+            if let Some(s) = span {
+                s.mark_streamed();
+            }
+        }
+        let (sim, sim_cached) = match self.simulate(outcome.fingerprint, &outcome.plan, config, sink) {
             Ok(sim) => sim,
             Err(e) => {
                 self.errors.inc();
@@ -327,6 +363,21 @@ impl PlanService {
         span: Option<&ActiveSpan>,
     ) -> Result<ServeReply> {
         self.inner.deploy_spanned(workload, graph, config, span)
+    }
+
+    /// [`PlanService::deploy_spanned`] with streaming partial replies:
+    /// when `sink` is present, a `plan` event fires as soon as the solve
+    /// lands and per-phase `sim` events stream while the engine runs
+    /// (cache hits skip straight to the caller's terminal frame).
+    pub fn deploy_observed(
+        &self,
+        workload: &str,
+        graph: &Graph,
+        config: &DeployConfig,
+        span: Option<&ActiveSpan>,
+        sink: Option<&dyn EventSink>,
+    ) -> Result<ServeReply> {
+        self.inner.deploy_observed(workload, graph, config, span, sink)
     }
 
     /// Serve the request only if both caches are warm: `None` (with no
@@ -509,17 +560,44 @@ impl ServeStats {
 
 /// Resolve a served workload name to a graph — the vocabulary of the line
 /// protocol spoken by `ftl serve` and `examples/deploy_server.rs`.
+/// Besides the named presets, `stage-<seq>x<dim>x<hidden>` (each
+/// dimension in 1..=4096) builds a parameterized MLP stage, giving wire
+/// clients an unbounded supply of distinct cold fingerprints — the
+/// connection-scaling bench leans on this.
 pub fn resolve_workload(name: &str) -> Result<Graph> {
     match name {
         "vit-base-stage" => Ok(experiments::vit_mlp_stage(197, 768, 3072)),
         "vit-tiny-stage" => Ok(experiments::vit_mlp_stage(197, 192, 768)),
-        other => vit_mlp_preset(other).ok_or_else(|| {
-            anyhow!(
-                "unknown workload '{other}' (try vit-base-stage, vit-tiny-stage, vit-tiny, vit-small, \
-                 vit-base, vit-large)"
-            )
-        }),
+        other => {
+            if let Some(dims) = parse_stage_dims(other) {
+                let (seq, dim, hidden) = dims;
+                return Ok(experiments::vit_mlp_stage(seq, dim, hidden));
+            }
+            vit_mlp_preset(other).ok_or_else(|| {
+                anyhow!(
+                    "unknown workload '{other}' (try vit-base-stage, vit-tiny-stage, \
+                     stage-<seq>x<dim>x<hidden>, vit-tiny, vit-small, vit-base, vit-large)"
+                )
+            })
+        }
     }
+}
+
+fn parse_stage_dims(name: &str) -> Option<(usize, usize, usize)> {
+    let dims = name.strip_prefix("stage-")?;
+    let mut out = [0usize; 3];
+    let mut it = dims.split('x');
+    for slot in &mut out {
+        let v: usize = it.next()?.parse().ok()?;
+        if !(1..=4096).contains(&v) {
+            return None;
+        }
+        *slot = v;
+    }
+    if it.next().is_some() {
+        return None;
+    }
+    Some((out[0], out[1], out[2]))
 }
 
 #[cfg(test)]
@@ -621,5 +699,46 @@ mod tests {
         assert!(resolve_workload("vit-base-stage").is_ok());
         assert!(resolve_workload("vit-tiny-stage").is_ok());
         assert!(resolve_workload("no-such-net").is_err());
+    }
+
+    #[test]
+    fn resolve_workload_parameterized_stages() {
+        assert!(resolve_workload("stage-16x24x48").is_ok());
+        assert!(resolve_workload("stage-4096x1x1").is_ok());
+        for bad in ["stage-", "stage-16x24", "stage-16x24x48x2", "stage-0x24x48", "stage-5000x24x48", "stage-axbxc"] {
+            assert!(resolve_workload(bad).is_err(), "'{bad}' must not resolve");
+        }
+    }
+
+    #[test]
+    fn deploy_observed_streams_plan_then_phases() {
+        use std::sync::Mutex as StdMutex;
+        struct Rec(StdMutex<Vec<String>>);
+        impl EventSink for Rec {
+            fn emit(&self, event: &Event) {
+                let tag = match event {
+                    Event::Plan { .. } => "plan".to_string(),
+                    Event::SimPhase { index, .. } => format!("sim{index}"),
+                    Event::Done(_) => "done".to_string(),
+                    Event::Error { .. } => "error".to_string(),
+                };
+                self.0.lock().unwrap().push(tag);
+            }
+        }
+        let svc = PlanService::new(opts(8, 2, 1));
+        let (g, c) = small();
+        let sink = Rec(StdMutex::new(Vec::new()));
+        let cold = svc.deploy_observed("cold", &g, &c, None, Some(&sink)).unwrap();
+        assert!(!cold.cached && !cold.sim_cached);
+        let events = sink.0.lock().unwrap().clone();
+        assert!(events.len() >= 2, "cold deploy must stream plan + phases, got {events:?}");
+        assert_eq!(events[0], "plan", "plan event must come first: {events:?}");
+        assert!(events[1..].iter().enumerate().all(|(i, t)| t == &format!("sim{i}")), "{events:?}");
+
+        let warm_sink = Rec(StdMutex::new(Vec::new()));
+        let warm = svc.deploy_observed("warm", &g, &c, None, Some(&warm_sink)).unwrap();
+        assert!(warm.cached && warm.sim_cached);
+        let events = warm_sink.0.lock().unwrap().clone();
+        assert_eq!(events, vec!["plan"], "warm deploys must not stream sim phases");
     }
 }

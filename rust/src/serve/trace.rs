@@ -83,6 +83,7 @@ pub struct ActiveSpan {
     queued_us: AtomicU64,
     picked_us: AtomicU64,
     solved_us: AtomicU64,
+    streamed_us: AtomicU64,
     simmed_us: AtomicU64,
 }
 
@@ -94,6 +95,7 @@ impl ActiveSpan {
             queued_us: AtomicU64::new(UNSET),
             picked_us: AtomicU64::new(UNSET),
             solved_us: AtomicU64::new(UNSET),
+            streamed_us: AtomicU64::new(UNSET),
             simmed_us: AtomicU64::new(UNSET),
         }
     }
@@ -124,6 +126,11 @@ impl ActiveSpan {
         self.solved_us.store(self.elapsed_us(), Ordering::Relaxed);
     }
 
+    /// The first partial reply (the `plan` event) left for the client.
+    pub fn mark_streamed(&self) {
+        self.streamed_us.store(self.elapsed_us(), Ordering::Relaxed);
+    }
+
     /// The simulation report is available (engine run or sim-cache hit).
     pub fn mark_simmed(&self) {
         self.simmed_us.store(self.elapsed_us(), Ordering::Relaxed);
@@ -133,7 +140,7 @@ impl ActiveSpan {
 /// A completed request trace. Stage fields are µs offsets from
 /// admission; `None` means the stage never happened (a warm fast-path
 /// hit is never queued, a shed request is never solved). Set stages are
-/// monotone: `queued ≤ picked ≤ solved ≤ simmed ≤ total`.
+/// monotone: `queued ≤ picked ≤ solved ≤ streamed ≤ simmed ≤ total`.
 #[derive(Debug, Clone)]
 pub struct Span {
     /// Monotonic trace id.
@@ -154,6 +161,8 @@ pub struct Span {
     pub picked_us: Option<u64>,
     /// Plan available.
     pub solved_us: Option<u64>,
+    /// First partial reply (the streamed `plan` event) emitted.
+    pub streamed_us: Option<u64>,
     /// Simulation report available.
     pub simmed_us: Option<u64>,
     /// Admission → reply.
@@ -164,11 +173,12 @@ impl Span {
     /// Stage offsets in lifecycle order (set stages only) — what the
     /// monotonicity assertions walk.
     pub fn stages(&self) -> Vec<(&'static str, u64)> {
-        let mut out = Vec::with_capacity(5);
+        let mut out = Vec::with_capacity(6);
         for (name, v) in [
             ("queued_us", self.queued_us),
             ("picked_us", self.picked_us),
             ("solved_us", self.solved_us),
+            ("streamed_us", self.streamed_us),
             ("simmed_us", self.simmed_us),
         ] {
             if let Some(v) = v {
@@ -299,6 +309,7 @@ impl Tracer {
         let queued_us = clamp(active.queued_us.load(Ordering::Relaxed));
         let picked_us = clamp(active.picked_us.load(Ordering::Relaxed));
         let solved_us = clamp(active.solved_us.load(Ordering::Relaxed));
+        let streamed_us = clamp(active.streamed_us.load(Ordering::Relaxed));
         let simmed_us = clamp(active.simmed_us.load(Ordering::Relaxed));
         let span = Arc::new(Span {
             id: active.id,
@@ -310,6 +321,7 @@ impl Tracer {
             queued_us,
             picked_us,
             solved_us,
+            streamed_us,
             simmed_us,
             total_us,
         });

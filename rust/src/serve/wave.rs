@@ -17,6 +17,10 @@
 //!   requests over a traced scheduler, drained to quiescence — the
 //!   driver behind the latency-histogram merge-invariant checks
 //!   (property test and self-tests).
+//! * [`streaming_probe`] / [`v0_probe`] — over-the-wire clients for the
+//!   async front door ([`super::frontend`]): the v1 streaming contract
+//!   (plan strictly before done, out-of-order ids) and bare legacy-line
+//!   compatibility, run against a real TCP address.
 //!
 //! The threaded wave's early-share measurement deliberately reads the
 //! dispatcher's own per-lane `batches` counters (sampled by a monitor
@@ -31,7 +35,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
-use anyhow::{anyhow, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::config::DeployConfig;
 use crate::coordinator::experiments;
@@ -270,4 +274,128 @@ pub fn mixed_lane_wave(seed: u64, total: usize) -> Result<BatchScheduler> {
         return Err(e.context("mixed-lane wave request failed"));
     }
     Ok(sched)
+}
+
+/// Report from [`streaming_probe`] — the shared over-the-wire exercise
+/// of the v1 front door (`ftl serve --self-test` and
+/// `examples/deploy_server.rs` both run it against their own server).
+pub struct StreamProbe {
+    pub plan_events: usize,
+    pub sim_events: usize,
+    pub done_events: usize,
+    /// The interleaved warm request's terminal frame arrived before the
+    /// cold one's — out-of-order completion on one connection.
+    pub out_of_order: bool,
+}
+
+/// Read one newline-terminated JSON reply off the probe connection.
+fn read_reply(reader: &mut std::io::BufReader<std::net::TcpStream>) -> Result<crate::util::json::Json> {
+    use std::io::BufRead;
+    let mut line = String::new();
+    let n = reader.read_line(&mut line)?;
+    ensure!(n > 0, "server closed the connection mid-probe");
+    crate::util::json::parse(line.trim())
+}
+
+/// Drive the async front door at `addr` over real TCP and assert the
+/// streaming contract: a cold v1 `DEPLOY` answers `plan` strictly
+/// before `done` with at least one per-phase `sim` event between, a
+/// warm repeat collapses to a single terminal frame, and a cold + warm
+/// pair written back to back completes out of order (warm terminal
+/// first), each frame tagged with its own request id.
+pub fn streaming_probe(addr: &str) -> Result<StreamProbe> {
+    use std::io::Write;
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    let (mut plan_events, mut sim_events, mut done_events) = (0usize, 0usize, 0usize);
+
+    // Cold deploy on id 1: plan → sim* → done, all on id 1.
+    stream.write_all(b"FTL1 1 DEPLOY stage-16x24x48 cluster-only ftl\n")?;
+    let mut kinds: Vec<String> = Vec::new();
+    loop {
+        let j = read_reply(&mut reader)?;
+        ensure!(j.get("id")?.as_u64()? == 1, "cold deploy events must carry id 1: {j}");
+        ensure!(j.get("v")?.as_u64()? == 1, "v1 events must carry the protocol version: {j}");
+        let kind = j.get("event")?.as_str()?.to_string();
+        let terminal = kind == "done" || kind == "error";
+        kinds.push(kind);
+        if terminal {
+            break;
+        }
+    }
+    ensure!(kinds.first().map(String::as_str) == Some("plan"), "cold deploy must stream plan first ({kinds:?})");
+    ensure!(kinds.last().map(String::as_str) == Some("done"), "cold deploy must end with done ({kinds:?})");
+    let sims = kinds.iter().filter(|k| k.as_str() == "sim").count();
+    ensure!(sims >= 1, "cold deploy must stream at least one sim event ({kinds:?})");
+    ensure!(kinds.len() == sims + 2, "cold deploy stream must be exactly plan, sim*, done ({kinds:?})");
+    plan_events += 1;
+    sim_events += sims;
+    done_events += 1;
+
+    // Warm repeat on id 2: both caches hit, single terminal frame.
+    stream.write_all(b"FTL1 2 DEPLOY stage-16x24x48 cluster-only ftl\n")?;
+    let j = read_reply(&mut reader)?;
+    ensure!(
+        j.get("id")?.as_u64()? == 2 && j.get("event")?.as_str()? == "done",
+        "warm deploy must collapse to one done frame: {j}"
+    );
+    ensure!(j.get("cached")?.as_bool()? && j.get("sim_cached")?.as_bool()?, "warm repeat must hit both caches: {j}");
+    done_events += 1;
+
+    // Interleave: cold id 3 and warm id 4 written back to back. The
+    // warm hit resolves inline while the cold solve is still running,
+    // so its terminal frame must overtake.
+    stream.write_all(
+        b"FTL1 3 DEPLOY stage-24x24x48 cluster-only ftl\nFTL1 4 DEPLOY stage-16x24x48 cluster-only ftl\n",
+    )?;
+    let mut terminal_order: Vec<u64> = Vec::new();
+    while terminal_order.len() < 2 {
+        let j = read_reply(&mut reader)?;
+        let id = j.get("id")?.as_u64()?;
+        match j.get("event")?.as_str()? {
+            "done" => terminal_order.push(id),
+            "error" => bail!("interleaved deploy {id} failed: {j}"),
+            "plan" => {
+                ensure!(id == 3, "only the cold deploy streams partials: {j}");
+                plan_events += 1;
+            }
+            "sim" => {
+                ensure!(id == 3, "only the cold deploy streams partials: {j}");
+                sim_events += 1;
+            }
+            other => bail!("unexpected event '{other}': {j}"),
+        }
+    }
+    done_events += 2;
+    ensure!(
+        terminal_order == [4, 3],
+        "warm id 4 must complete before cold id 3 (terminal order {terminal_order:?})"
+    );
+    Ok(StreamProbe { plan_events, sim_events, done_events, out_of_order: true })
+}
+
+/// Drive the front door at `addr` with bare legacy (v0) lines written
+/// back to back and assert full compatibility: one legacy-shaped JSON
+/// reply per request, in request order, with no v1 protocol fields.
+/// Returns the number of replies verified.
+pub fn v0_probe(addr: &str) -> Result<usize> {
+    use std::io::Write;
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    stream.write_all(b"PING\nDEPLOY stage-16x24x48 cluster-only ftl\nSTATS\n")?;
+    let pong = read_reply(&mut reader)?;
+    ensure!(pong.get("pong")?.as_bool()?, "v0 PING must answer pong first: {pong}");
+    let deploy = read_reply(&mut reader)?;
+    ensure!(deploy.get("outcome")?.as_str()? == "OK", "v0 DEPLOY must be served second: {deploy}");
+    let stats = read_reply(&mut reader)?;
+    ensure!(stats.get_opt("batch").is_some(), "v0 STATS must answer last with the stats object: {stats}");
+    for (name, j) in [("PING", &pong), ("DEPLOY", &deploy), ("STATS", &stats)] {
+        ensure!(
+            j.get_opt("v").is_none() && j.get_opt("event").is_none() && j.get_opt("id").is_none(),
+            "v0 {name} reply must not grow v1 protocol fields: {j}"
+        );
+    }
+    Ok(3)
 }

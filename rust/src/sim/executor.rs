@@ -149,13 +149,27 @@ impl PhaseReport {
 
 /// Simulate a schedule on a SoC.
 pub fn simulate(schedule: &Schedule, soc: &SocConfig) -> Result<SimReport> {
-    let mut phases = Vec::with_capacity(schedule.phases.len());
+    simulate_with(schedule, soc, |_, _, _| {})
+}
+
+/// [`simulate`], reporting each finished phase to `on_phase(index,
+/// total, report)` in schedule order before the full [`SimReport`] is
+/// assembled — the hook behind streamed `sim` events on the serve wire
+/// (one event per phase while the engine is still working).
+pub fn simulate_with(
+    schedule: &Schedule,
+    soc: &SocConfig,
+    mut on_phase: impl FnMut(usize, usize, &PhaseReport),
+) -> Result<SimReport> {
+    let total_phases = schedule.phases.len();
+    let mut phases = Vec::with_capacity(total_phases);
     let mut dma = DmaStats::default();
     let mut total = 0u64;
-    for phase in &schedule.phases {
+    for (i, phase) in schedule.phases.iter().enumerate() {
         let rep = simulate_phase(phase, soc)?;
         total += rep.cycles;
         dma.merge(&rep.dma);
+        on_phase(i, total_phases, &rep);
         phases.push(rep);
     }
     Ok(SimReport { total_cycles: total, phases, dma })

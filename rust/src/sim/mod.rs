@@ -24,4 +24,4 @@ mod engine;
 mod executor;
 
 pub use engine::{Engine, Resource, TaskId, TaskSpec};
-pub use executor::{simulate, Boundedness, PhaseReport, SimReport};
+pub use executor::{simulate, simulate_with, Boundedness, PhaseReport, SimReport};

@@ -1,0 +1,227 @@
+//! Wire-protocol integration tests (PR 7): a generated round-trip
+//! corpus over [`ftl::serve::proto::Frame`], and over-the-wire checks
+//! against a live front door — malformed and oversized lines answered
+//! on the offending id without disconnecting, out-of-order interleaving
+//! of id'd responses on one connection, and strict v0 compatibility
+//! (legacy shapes, strict request order, no v1 fields).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use ftl::serve::proto::{DeployCommand, Frame, Request, Version, DEFAULT_DUMP_COUNT, MAX_FRAME_BYTES};
+use ftl::serve::{
+    AdmissionPolicy, BatchOptions, BatchScheduler, Frontend, FrontendHandle, FrontendOptions, PlanService,
+    ServeOptions, TraceOptions,
+};
+use ftl::util::json::Json;
+
+fn frontend() -> FrontendHandle {
+    let service = Arc::new(PlanService::new(ServeOptions {
+        cache_capacity: 32,
+        sim_cache_capacity: 64,
+        cache_shards: 2,
+        workers: 1,
+    }));
+    let scheduler = Arc::new(BatchScheduler::new(
+        service,
+        BatchOptions {
+            queue_capacity: 64,
+            batch_window: Duration::ZERO,
+            policy: AdmissionPolicy::Block,
+            trace: TraceOptions::disabled(),
+            ..BatchOptions::default()
+        },
+    ));
+    Frontend::new(scheduler, FrontendOptions::default())
+        .serve(TcpListener::bind("127.0.0.1:0").expect("bind test port"))
+        .expect("start front door")
+}
+
+fn connect(door: &FrontendHandle) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(door.addr()).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    (stream, reader)
+}
+
+fn read_json(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).expect("read reply");
+    assert!(n > 0, "server closed the connection");
+    ftl::util::json::parse(line.trim()).expect("parse reply")
+}
+
+/// Deterministic xorshift so the corpus is reproducible run to run.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn pick<'a>(&mut self, xs: &[&'a str]) -> &'a str {
+        xs[(self.next() % xs.len() as u64) as usize]
+    }
+}
+
+#[test]
+fn frame_render_parse_round_trips_over_a_generated_corpus() {
+    let mut rng = Rng(0x5eed_cafe);
+    let workloads = ["vit-tiny-stage", "stage-16x24x48", "mlp", "w_1"];
+    let socs = ["cluster-only", "siracusa"];
+    let strategies = ["ftl", "layer-per-layer", "flat"];
+    let lanes = ["gold", "bulk", "free"];
+    for _ in 0..500 {
+        let request = match rng.next() % 8 {
+            0 => Request::Stats,
+            1 => Request::Ping,
+            2 => Request::Metrics,
+            3 => Request::Trace { n: (rng.next() % 64) as usize },
+            4 => Request::Slow { n: (rng.next() % 64) as usize },
+            _ => Request::Deploy(DeployCommand {
+                workload: rng.pick(&workloads).to_string(),
+                soc: rng.pick(&socs).to_string(),
+                strategy: rng.pick(&strategies).to_string(),
+                deadline_ms: match rng.next() % 3 {
+                    0 => None,
+                    _ => Some(rng.next() % 100_000),
+                },
+                lane: match rng.next() % 3 {
+                    0 => None,
+                    _ => Some(rng.pick(&lanes).to_string()),
+                },
+            }),
+        };
+        let (version, id) = if rng.next() % 2 == 0 { (Version::V1, Some(rng.next())) } else { (Version::V0, None) };
+        let frame = Frame { version, id, request };
+
+        let line = frame.render();
+        assert!(line.len() <= MAX_FRAME_BYTES, "generated frames stay under the cap");
+        let back = Frame::parse(&line).unwrap_or_else(|e| panic!("'{line}' must re-parse: {e}"));
+        assert_eq!(back, frame, "round trip changed '{line}'");
+        assert_eq!(back.render(), line, "render must be canonical for '{line}'");
+    }
+}
+
+#[test]
+fn parse_normalizes_whitespace_and_bare_dump_counts() {
+    let f = Frame::parse("  FTL1   7   STATS  ").unwrap();
+    assert_eq!(f.render(), "FTL1 7 STATS");
+    let f = Frame::parse("TRACE").unwrap();
+    assert_eq!(f.render(), format!("TRACE {DEFAULT_DUMP_COUNT}"));
+    assert_eq!(Frame::parse(&f.render()).unwrap(), f);
+}
+
+#[test]
+fn malformed_and_oversized_lines_never_disconnect() {
+    let door = frontend();
+    let (mut stream, mut reader) = connect(&door);
+
+    // Malformed v1 command: the error is delivered on the frame's id.
+    stream.write_all(b"FTL1 9 NOPE nope\n").unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 9);
+    assert_eq!(j.get("event").unwrap().as_str().unwrap(), "error");
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("bad request"));
+
+    // Malformed v0 line: legacy error object, no v1 fields.
+    stream.write_all(b"NOPE\n").unwrap();
+    let j = read_json(&mut reader);
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("bad request"));
+    assert!(j.get_opt("v").is_none() && j.get_opt("id").is_none());
+
+    // One line far past MAX_FRAME_BYTES, then a PING on the same
+    // connection: the oversized line is rejected (id recovered from its
+    // prefix) and discarded, and the connection must survive.
+    let mut big = String::from("FTL1 11 DEPLOY ");
+    big.push_str(&"x".repeat(MAX_FRAME_BYTES + 1024));
+    big.push('\n');
+    stream.write_all(big.as_bytes()).unwrap();
+    stream.write_all(b"FTL1 12 PING\n").unwrap();
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 11);
+    assert_eq!(j.get("event").unwrap().as_str().unwrap(), "error");
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("oversized"));
+    let j = read_json(&mut reader);
+    assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 12);
+    assert_eq!(j.get("event").unwrap().as_str().unwrap(), "done");
+    assert!(j.get("pong").unwrap().as_bool().unwrap());
+
+    assert!(door.counters().protocol_errors.get() >= 3, "each bad line counts as a protocol error");
+    door.join();
+}
+
+#[test]
+fn responses_interleave_out_of_order_with_their_own_ids() {
+    let door = frontend();
+    let (mut stream, mut reader) = connect(&door);
+
+    // Warm one fingerprint first so id 3 below has a fast path.
+    stream.write_all(b"FTL1 1 DEPLOY stage-16x24x48 cluster-only ftl\n").unwrap();
+    loop {
+        let j = read_json(&mut reader);
+        assert_eq!(j.get("id").unwrap().as_u64().unwrap(), 1);
+        if j.get("event").unwrap().as_str().unwrap() == "done" {
+            break;
+        }
+    }
+
+    // One cold + one warm, pipelined on the same connection. The warm
+    // reply (id 3) must land before the cold solve (id 2) finishes, and
+    // the cold stream keeps plan -> sim* -> done on its own id.
+    stream
+        .write_all(b"FTL1 2 DEPLOY stage-32x24x48 cluster-only ftl\nFTL1 3 DEPLOY stage-16x24x48 cluster-only ftl\n")
+        .unwrap();
+    let mut terminals: Vec<u64> = Vec::new();
+    let mut cold_kinds: Vec<String> = Vec::new();
+    while terminals.len() < 2 {
+        let j = read_json(&mut reader);
+        let id = j.get("id").unwrap().as_u64().unwrap();
+        let event = j.get("event").unwrap().as_str().unwrap().to_string();
+        if event == "done" {
+            terminals.push(id);
+        }
+        if id == 2 {
+            cold_kinds.push(event);
+        } else {
+            assert_eq!(id, 3);
+            assert_eq!(event, "done", "the warm id must not stream partials");
+        }
+    }
+    assert_eq!(terminals, [3, 2], "the warm reply must overtake the cold solve");
+    assert_eq!(cold_kinds.first().map(String::as_str), Some("plan"));
+    assert_eq!(cold_kinds.last().map(String::as_str), Some("done"));
+    assert!(cold_kinds.iter().filter(|k| *k == "sim").count() >= 1, "cold deploys stream per-phase sim events");
+    door.join();
+}
+
+#[test]
+fn v0_lines_are_served_strictly_in_order_without_v1_fields() {
+    let door = frontend();
+    let (mut stream, mut reader) = connect(&door);
+    stream
+        .write_all(
+            b"PING\nDEPLOY stage-16x24x48 cluster-only ftl\nDEPLOY stage-16x24x48 cluster-only ftl\nSTATS\n",
+        )
+        .unwrap();
+    let pong = read_json(&mut reader);
+    assert!(pong.get("pong").unwrap().as_bool().unwrap(), "PING must be answered first");
+    for _ in 0..2 {
+        let dep = read_json(&mut reader);
+        assert_eq!(dep.get("outcome").unwrap().as_str().unwrap(), "OK", "deploys answer in request order");
+    }
+    let stats = read_json(&mut reader);
+    assert!(stats.get_opt("batch").is_some(), "STATS must be answered last");
+    for j in [&pong, &stats] {
+        assert!(
+            j.get_opt("v").is_none() && j.get_opt("id").is_none() && j.get_opt("event").is_none(),
+            "v0 replies keep their legacy shape"
+        );
+    }
+    door.join();
+}
