@@ -65,6 +65,7 @@ fn main() {
         sim_cache_capacity: 64,
         cache_shards: 4,
         workers: 2,
+        ..ServeOptions::default()
     }));
     let scheduler = Arc::new(BatchScheduler::new(
         service,

@@ -49,6 +49,25 @@ fn main() {
         assert!(outcome.cached);
     });
 
+    // Warm with the verification gate on: `check_deployment` runs at cache
+    // insertion only, so a warm hit does byte-for-byte the same work as
+    // without the gate. The counter assert locks the zero-warm-overhead
+    // claim structurally (timing asserts would be flaky); the printed
+    // ratio shows it empirically.
+    let gated_svc = PlanService::new(ServeOptions { verify_plans: true, ..opts });
+    gated_svc.plan(&graph, &cfg).unwrap();
+    let gated = bench("serve/warm_hit_verify_on", secs(2), || {
+        let outcome = gated_svc.plan(&graph, &cfg).unwrap();
+        assert!(outcome.cached);
+    });
+    let checked = gated_svc
+        .stats_json()
+        .get("verify")
+        .and_then(|v| v.get("checked"))
+        .and_then(|c| c.as_usize())
+        .unwrap();
+    assert_eq!(checked, 1, "warm hits must never re-run the verifier (verify.checked grew past the one insertion)");
+
     // Contended: 8 threads race the same cold key; single-flight coalesces
     // them onto one solve, so the wall-clock tracks `cold`, not 8x cold.
     let contended = bench("serve/contended_8x_single_flight", secs(3), || {
@@ -65,7 +84,9 @@ fn main() {
 
     let speedup = cold.median.as_nanos() as f64 / warm.median.as_nanos().max(1) as f64;
     let amortised = contended.median.as_nanos() as f64 / cold.median.as_nanos().max(1) as f64;
+    let gate_ratio = gated.median.as_nanos() as f64 / warm.median.as_nanos().max(1) as f64;
     println!("\nwarm-cache speedup vs cold solve: {speedup:.0}x (acceptance bar: >=10x)");
+    println!("warm hit with --verify-plans vs without: {gate_ratio:.2}x (gate runs at insertion only)");
     println!("contended(8 threads) / cold(1 thread): {amortised:.2}x (single-flight: ~1x, not 8x)");
     assert!(speedup >= 10.0, "warm cache hit must be >=10x faster than a cold solve (got {speedup:.1}x)");
 }

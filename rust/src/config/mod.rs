@@ -2,6 +2,8 @@
 //! [`crate::coordinator::Deployer`], plus JSON (de)serialisation for
 //! config files.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Context, Result};
 
 use crate::dma::DmaCostModel;

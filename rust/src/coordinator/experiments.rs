@@ -4,6 +4,8 @@
 //! DESIGN.md) has a function here returning structured rows; the CLI and
 //! the bench binaries print them. See EXPERIMENTS.md for paper-vs-measured.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::config::DeployConfig;

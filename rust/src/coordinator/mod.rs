@@ -10,6 +10,8 @@
 //! benches; [`experiments`] hosts the paper-reproduction drivers (Fig. 3,
 //! DMA reduction, sweeps).
 
+#![forbid(unsafe_code)]
+
 pub mod experiments;
 
 use anyhow::{anyhow, Context, Result};

@@ -10,6 +10,8 @@
 //! bandwidth-limited streaming, with an extra per-row beat charge for
 //! strided transfers (2-D descriptors re-arm per row).
 
+#![forbid(unsafe_code)]
+
 mod stats;
 mod transfer;
 

@@ -1,6 +1,8 @@
 //! Transfer accounting — the source of the paper's "−47.1 % DMA
 //! transfers" metric.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};

@@ -1,5 +1,7 @@
 //! Transfer descriptors and the DMA cost model.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{anyhow, Result};
 
 use crate::memory::Level;

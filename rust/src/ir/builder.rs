@@ -1,6 +1,8 @@
 //! Ergonomic graph construction, plus the stock workloads used by the
 //! paper's evaluation (ViT MLP variants).
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use super::{ActKind, DType, Graph, Op, Tensor, TensorId, TensorKind};

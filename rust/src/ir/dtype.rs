@@ -1,5 +1,7 @@
 //! Element datatypes.
 
+#![forbid(unsafe_code)]
+
 
 /// Element type of a tensor.
 ///

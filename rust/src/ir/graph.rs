@@ -1,5 +1,7 @@
 //! The graph container: tensors + nodes, topological order, validation.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 
 use anyhow::{bail, ensure, Context, Result};

@@ -11,6 +11,8 @@
 //! }
 //! ```
 
+#![forbid(unsafe_code)]
+
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::{parse, Json};

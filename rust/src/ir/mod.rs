@@ -6,6 +6,8 @@
 //! whole paper builds on), a dtype, and a *home* memory level (weights and
 //! activations start in L3/L2 and are tiled down to L1 by the FTL engine).
 
+#![forbid(unsafe_code)]
+
 pub mod builder;
 mod dtype;
 mod graph;

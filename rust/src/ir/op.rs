@@ -1,5 +1,7 @@
 //! Operator definitions and shape inference.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, ensure, Result};
 
 /// Elementwise activation kind.

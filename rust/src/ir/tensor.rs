@@ -1,5 +1,7 @@
 //! Tensor declarations.
 
+#![forbid(unsafe_code)]
+
 
 use super::DType;
 

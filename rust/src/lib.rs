@@ -61,6 +61,7 @@ pub mod sim;
 pub mod soc;
 pub mod tiling;
 pub mod util;
+pub mod verify;
 
 pub use coordinator::{DeployReport, Deployer, Deployment};
 pub use ir::{Graph, Op, Tensor};

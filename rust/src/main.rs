@@ -6,7 +6,7 @@
 //!                [--queue-cap 256] [--batch-window-ms 2] [--max-batch 64] [--shed]
 //!                [--lane name:weight:cap[:shed|:block][:deadline-ms]]...  (repeatable WFQ lanes)
 //!                [--cache-dir DIR] [--snapshot-interval-ms 1000] [--cache-max-entries 0]
-//!                [--trace-cap 512] [--slowlog-ms 250] [--self-test]
+//!                [--trace-cap 512] [--slowlog-ms 250] [--verify-plans] [--self-test]
 //!                (line protocol, see PROTOCOL.md: DEPLOY | STATS | PING | METRICS | TRACE [n] |
 //!                SLOW [n], either bare (legacy v0, one JSON reply per line, in order) or framed
 //!                `FTL1 <id> <command...>` — multiplexed ids, streamed plan/sim/done events,
@@ -18,6 +18,8 @@
 //! worker budget. Deterministic — any thread count compiles bit-identical
 //! plans (the serve self-test prints a greppable `plan_digest=` line that
 //! CI compares across thread counts).
+//! ftl verify     [<workload>] [--soc siracusa --strategy ftl --double-buffer] [--json]
+//!                [--all | --mutate]   (static plan verification; nonzero exit on errors)
 //! ftl fig3       [--seq 197 --dim 768 --hidden 3072] [--double-buffer]
 //! ftl dma        [--soc cluster-only]
 //! ftl emit-tiles --out artifacts/tiles.json
@@ -26,6 +28,8 @@
 //! ```
 //!
 //! Argument parsing is hand-rolled (the build is fully offline — no clap).
+
+#![forbid(unsafe_code)]
 
 use std::collections::HashMap;
 use std::net::TcpListener;
@@ -50,6 +54,10 @@ use ftl::util::json::Json;
 
 struct Args {
     cmd: String,
+    /// Bare (non-flag) tokens after the command. Only `verify` accepts
+    /// one (the workload name); every other command rejects them in
+    /// [`dispatch`], preserving the old strictness.
+    pos: Vec<String>,
     /// Flag values in arrival order — most flags use the last value,
     /// repeatable flags (`--lane`) consume all of them.
     flags: HashMap<String, Vec<String>>,
@@ -59,12 +67,17 @@ impl Args {
     fn parse() -> Result<Self> {
         let mut it = std::env::args().skip(1);
         let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut pos = Vec::new();
         let mut flags: HashMap<String, Vec<String>> = HashMap::new();
         while let Some(a) = it.next() {
-            let Some(name) = a.strip_prefix("--") else { bail!("unexpected argument '{a}'") };
+            let Some(name) = a.strip_prefix("--") else {
+                pos.push(a);
+                continue;
+            };
             // boolean flags take no value; value flags consume the next token
             match name {
-                "double-buffer" | "json" | "no-perf-constraints" | "verbose" | "self-test" | "shed" => {
+                "double-buffer" | "json" | "no-perf-constraints" | "verbose" | "self-test" | "shed"
+                | "verify-plans" | "all" | "mutate" => {
                     flags.entry(name.to_string()).or_default().push("true".into());
                 }
                 _ => {
@@ -73,7 +86,7 @@ impl Args {
                 }
             }
         }
-        Ok(Self { cmd, flags })
+        Ok(Self { cmd, pos, flags })
     }
 
     fn get_opt(&self, name: &str) -> Option<&str> {
@@ -189,6 +202,9 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// `--trace-cap`/`--slowlog-ms` size the per-request trace journal and
 /// slowlog (`--trace-cap 0` disables tracing; `METRICS`, `TRACE [n]` and
 /// `SLOW [n]` expose the results over the protocol);
+/// `--verify-plans` runs the static plan verifier on every fresh solve
+/// before it enters the cache and on every snapshot-loaded entry at
+/// warm-start (rejections surface as `verify.*` in STATS/METRICS);
 /// `--self-test` exercises the full service in process (cache hits,
 /// single-flight coalescing, warm-vs-cold speedup, batch fan-out,
 /// shedding, deadlines, latency-histogram invariants — or, with
@@ -199,6 +215,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sim_cache_capacity: args.get_usize("sim-cache-cap", 256)?,
         cache_shards: args.get_usize("cache-shards", 8)?,
         workers: args.get_usize("workers", 4)?,
+        verify_plans: args.has("verify-plans"),
     };
     let queue_cap = args.get_usize("queue-cap", 256)?;
     // Repeatable: --lane name:weight:capacity[:shed|:block]. Validated
@@ -350,7 +367,7 @@ fn serve_self_test(opts: ServeOptions, batch_opts: BatchOptions) -> Result<()> {
         cache_capacity: 32,
         sim_cache_capacity: 64,
         cache_shards: 4,
-        workers: opts.workers,
+        ..opts
     }));
     let burst_opts = BatchOptions {
         queue_capacity: 32,
@@ -557,7 +574,7 @@ fn serve_self_test(opts: ServeOptions, batch_opts: BatchOptions) -> Result<()> {
         cache_capacity: 32,
         sim_cache_capacity: 64,
         cache_shards: 4,
-        workers: opts.workers,
+        ..opts
     }));
     let door_sched = Arc::new(BatchScheduler::new(
         door_service,
@@ -651,6 +668,122 @@ fn serve_warm_start_self_test(
         snapshotter.counters().skipped_version()
     );
     println!("[ftl-serve] warm-start self-test OK");
+    Ok(())
+}
+
+/// `ftl verify [<workload>]` — plan a workload and run the static plan
+/// verifier ([`ftl::verify::check_deployment`]) over the result:
+/// arena-overlap/alignment/capacity, DMA-vs-kernel hazards, transfer
+/// bounds, output-tile coverage and structural consistency, re-derived
+/// from the plan artifact alone. Nonzero exit on any error-severity
+/// finding. `--json` prints the machine-readable report; `--all` sweeps
+/// the builtin workloads across SoCs, strategies and buffering modes;
+/// `--mutate` runs the mutation-testing harness (each seeded plan
+/// corruption must be caught by its intended rule).
+fn cmd_verify(args: &Args) -> Result<()> {
+    if args.has("mutate") {
+        return cmd_verify_mutate(args);
+    }
+    if args.has("all") {
+        return cmd_verify_all(args);
+    }
+    let (name, graph) = match args.pos.first() {
+        // Positional names use the serve vocabulary (vit-base-stage,
+        // stage-<seq>x<dim>x<hidden>, ...) so the CLI can verify exactly
+        // what the wire serves.
+        Some(name) => (name.clone(), resolve_workload(name)?),
+        None => load_workload(args)?,
+    };
+    let cfg = make_config(args)?;
+    let dep = Deployer::new(graph, cfg.clone()).plan().with_context(|| format!("planning '{name}'"))?;
+    let report = ftl::verify::check_deployment(&dep, Some(&cfg.soc));
+    if args.has("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    if !report.ok() {
+        bail!("plan verification failed for '{name}': {}", report.summary());
+    }
+    Ok(())
+}
+
+/// `ftl verify --all`: sweep the builtin serve workloads across both SoC
+/// presets, both strategies and both buffering modes; any error-severity
+/// finding (or plan failure) fails the sweep.
+fn cmd_verify_all(args: &Args) -> Result<()> {
+    let workloads = ["vit-base-stage", "vit-tiny-stage", "stage-64x96x192"];
+    let mut rows: Vec<Json> = Vec::new();
+    let mut failed = 0usize;
+    let mut plans = 0usize;
+    for workload in workloads {
+        let graph = resolve_workload(workload)?;
+        for soc in ["siracusa", "cluster-only"] {
+            for strategy in [Strategy::Ftl, Strategy::LayerPerLayer] {
+                for dbuf in [false, true] {
+                    let mut cfg = DeployConfig::preset(soc, strategy)?;
+                    cfg.double_buffer = dbuf;
+                    let dep = Deployer::new(graph.clone(), cfg.clone())
+                        .plan()
+                        .with_context(|| format!("planning {workload} on {soc}/{strategy:?}/dbuf={dbuf}"))?;
+                    let report = ftl::verify::check_deployment(&dep, Some(&cfg.soc));
+                    plans += 1;
+                    if !report.ok() {
+                        failed += 1;
+                    }
+                    if args.has("json") {
+                        rows.push(Json::obj(vec![
+                            ("workload", Json::str(workload)),
+                            ("soc", Json::str(soc)),
+                            ("strategy", Json::str(format!("{strategy:?}"))),
+                            ("double_buffer", Json::Bool(dbuf)),
+                            ("report", report.to_json()),
+                        ]));
+                    } else {
+                        let status = if report.ok() { "ok" } else { "FAIL" };
+                        println!(
+                            "{workload:<18} {soc:<14} {strategy:<14?} dbuf={dbuf:<5} findings={:<3} {status}",
+                            report.findings.len()
+                        );
+                        if !report.ok() {
+                            print!("{}", report.render());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    if args.has("json") {
+        println!("{}", Json::Arr(rows).pretty());
+    } else {
+        println!("verify --all: {plans} plans checked, {failed} failed");
+    }
+    if failed > 0 {
+        bail!("{failed} of {plans} plans failed verification");
+    }
+    Ok(())
+}
+
+/// `ftl verify --mutate`: the verifier's own false-negative test. Seeded
+/// corruptions of a valid double-buffered plan, each of which must be
+/// caught by its intended rule ([`ftl::verify::mutate`]); prints the
+/// mutator → rule table and the `mutations=N caught=N` tally CI asserts.
+fn cmd_verify_mutate(args: &Args) -> Result<()> {
+    // Default to the full ViT-Base MLP: the mutators need a plan with two
+    // phases and refetched double-buffered inputs to have targets.
+    let name = args.pos.first().map(String::as_str).unwrap_or("vit-base");
+    let graph = resolve_workload(name)?;
+    let strategy = Strategy::parse(args.get("strategy", "ftl"))
+        .ok_or_else(|| anyhow!("--strategy must be 'ftl' or 'baseline'"))?;
+    let mut cfg = DeployConfig::preset(args.get("soc", "siracusa"), strategy)?;
+    cfg.double_buffer = true;
+    let dep = Deployer::new(graph, cfg.clone()).plan().with_context(|| format!("planning '{name}'"))?;
+    let outcomes = ftl::verify::mutate::run_mutations(&dep, &cfg.soc)?;
+    print!("{}", ftl::verify::mutate::render_outcomes(&outcomes));
+    let missed = outcomes.iter().filter(|o| !o.caught).count();
+    if missed > 0 {
+        bail!("{missed} mutation(s) escaped the verifier");
+    }
     Ok(())
 }
 
@@ -805,7 +938,11 @@ COMMANDS:
                bare v0 or multiplexed+streaming    [--lane name:weight:cap[:shed|:block][:deadline-ms]]...
                FTL1 framing — see PROTOCOL.md)     [--cache-dir DIR] [--snapshot-interval-ms 1000]
                                                    [--cache-max-entries 0] [--trace-cap 512] (0 = tracing off)
-                                                   [--slowlog-ms 250] [--self-test])
+                                                   [--slowlog-ms 250] [--verify-plans] [--self-test])
+  verify       static plan verification           (verify [<workload>] [--soc --strategy --double-buffer]
+               (arena overlap/align/capacity,      [--json] | verify --all | verify --mutate;
+               DMA hazards, transfer bounds,       nonzero exit on any error-severity finding)
+               tile coverage, structure)
   fig3         reproduce the paper's Fig. 3       ([--seq --dim --hidden] [--double-buffer] [--json])
   dma          reproduce the -47.1% DMA metric    ([--soc])
   sweep        hidden-dim sweep (Ext-A)           ([--soc])
@@ -837,9 +974,15 @@ fn apply_solver_threads(args: &Args) -> Result<()> {
 
 fn dispatch(args: &Args) -> Result<()> {
     apply_solver_threads(args)?;
+    if args.cmd != "verify" {
+        if let Some(extra) = args.pos.first() {
+            bail!("unexpected argument '{extra}'");
+        }
+    }
     match args.cmd.as_str() {
         "deploy" => cmd_deploy(args),
         "serve" => cmd_serve(args),
+        "verify" => cmd_verify(args),
         "fig3" => cmd_fig3(args),
         "dma" => cmd_dma(args),
         "sweep" => cmd_sweep(args),

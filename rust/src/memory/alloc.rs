@@ -6,7 +6,16 @@
 //! (largest first), which is the classic offline strip-packing heuristic
 //! used by TFLM/Deeploy memory planners.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
+
+/// Half-open byte-span intersection test — the one overlap primitive
+/// shared by the placement verifier below and the plan verifier
+/// ([`crate::verify`]).
+pub fn spans_overlap(a: (usize, usize), b: (usize, usize)) -> bool {
+    a.0 < b.1 && b.0 < a.1
+}
 
 /// One allocation request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -178,44 +187,96 @@ impl StaticAllocator {
         Some(offset)
     }
 
+    /// Structured placement check: every violated invariant, in order.
+    ///
+    /// Zero-size allocations follow the allocator's own placement rule
+    /// (pinned, aligned, in-bounds): alignment and capacity are checked
+    /// for them too; only spatial overlap is vacuous at size 0. This is
+    /// the engine behind [`StaticAllocator::verify`] and the arena pass
+    /// of [`crate::verify::check_deployment`].
+    pub fn violations(&self, allocations: &[Allocation]) -> Vec<PlacementViolation> {
+        let mut out = Vec::new();
+        for (i, a) in allocations.iter().enumerate() {
+            if a.offset % self.alignment != 0 {
+                out.push(PlacementViolation::Misaligned { index: i, offset: a.offset, alignment: self.alignment });
+            }
+            if a.end() > self.capacity {
+                out.push(PlacementViolation::OutOfBounds { index: i, end: a.end(), capacity: self.capacity });
+            }
+        }
+        for (i, a) in allocations.iter().enumerate() {
+            if a.request.size == 0 {
+                continue;
+            }
+            for (dj, b) in allocations[i + 1..].iter().enumerate() {
+                if b.request.size == 0 || !a.request.overlaps(&b.request) {
+                    continue;
+                }
+                if spans_overlap((a.offset, a.end()), (b.offset, b.end())) {
+                    out.push(PlacementViolation::Overlap { a: i, b: i + 1 + dj });
+                }
+            }
+        }
+        out
+    }
+
     /// Verify a placement: no two live-range-overlapping buffers overlap in
     /// space, everything aligned and within capacity. Used by tests and the
     /// property-based suite.
     pub fn verify(&self, allocations: &[Allocation]) -> Result<()> {
-        for a in allocations {
-            if a.request.size == 0 {
-                continue;
+        match self.violations(allocations).into_iter().next() {
+            None => Ok(()),
+            Some(PlacementViolation::Misaligned { index, offset, alignment }) => {
+                bail!("allocation id={} offset {offset} not {alignment}-aligned", allocations[index].request.id)
             }
-            if a.offset % self.alignment != 0 {
-                bail!("allocation id={} offset {} not {}-aligned", a.request.id, a.offset, self.alignment);
+            Some(PlacementViolation::OutOfBounds { index, end, capacity }) => {
+                bail!("allocation id={} end {end} exceeds capacity {capacity}", allocations[index].request.id)
             }
-            if a.end() > self.capacity {
-                bail!("allocation id={} end {} exceeds capacity {}", a.request.id, a.end(), self.capacity);
-            }
-        }
-        for (i, a) in allocations.iter().enumerate() {
-            for b in &allocations[i + 1..] {
-                if a.request.size == 0 || b.request.size == 0 {
-                    continue;
-                }
-                if a.request.overlaps(&b.request) {
-                    let disjoint = a.end() <= b.offset || b.end() <= a.offset;
-                    if !disjoint {
-                        bail!(
-                            "allocations id={} [{},{}) and id={} [{},{}) overlap in space and time",
-                            a.request.id,
-                            a.offset,
-                            a.end(),
-                            b.request.id,
-                            b.offset,
-                            b.end()
-                        );
-                    }
-                }
+            Some(PlacementViolation::Overlap { a, b }) => {
+                let (a, b) = (&allocations[a], &allocations[b]);
+                bail!(
+                    "allocations id={} [{},{}) and id={} [{},{}) overlap in space and time",
+                    a.request.id,
+                    a.offset,
+                    a.end(),
+                    b.request.id,
+                    b.offset,
+                    b.end()
+                )
             }
         }
-        Ok(())
     }
+}
+
+/// A violated placement invariant (see [`StaticAllocator::violations`]).
+/// Indices refer to the `allocations` slice passed in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementViolation {
+    /// `allocations[index]` does not respect the pool alignment.
+    Misaligned {
+        /// Offending allocation.
+        index: usize,
+        /// Its offset.
+        offset: usize,
+        /// The required alignment.
+        alignment: usize,
+    },
+    /// `allocations[index]` ends past the pool capacity.
+    OutOfBounds {
+        /// Offending allocation.
+        index: usize,
+        /// One-past-the-end offset.
+        end: usize,
+        /// The pool capacity.
+        capacity: usize,
+    },
+    /// Two allocations live at the same time overlap in space.
+    Overlap {
+        /// First allocation.
+        a: usize,
+        /// Second allocation.
+        b: usize,
+    },
 }
 
 #[cfg(test)]
@@ -302,6 +363,42 @@ mod tests {
         let off = alloc.place_incremental(&mut placed, AllocRequest::new(2, 30, 0, 9)).unwrap();
         assert_eq!(off, 20, "best-fit should use the interior gap");
         alloc.verify(&placed).unwrap();
+    }
+
+    #[test]
+    fn spans_overlap_is_half_open() {
+        assert!(spans_overlap((0, 4), (3, 8)));
+        assert!(spans_overlap((3, 8), (0, 4)));
+        assert!(!spans_overlap((0, 4), (4, 8)));
+        assert!(!spans_overlap((4, 8), (0, 4)));
+    }
+
+    #[test]
+    fn violations_are_structured() {
+        let alloc = StaticAllocator::new(100, 4);
+        let mk = |id, size, off| Allocation { request: AllocRequest::new(id, size, 0, 9), offset: off };
+        let vs = alloc.violations(&[mk(0, 8, 0), mk(1, 8, 4)]);
+        assert_eq!(vs, vec![PlacementViolation::Overlap { a: 0, b: 1 }]);
+        assert!(alloc.verify(&[mk(0, 8, 0), mk(1, 8, 4)]).is_err());
+        assert!(alloc.violations(&[mk(0, 8, 0), mk(1, 8, 8)]).is_empty());
+    }
+
+    #[test]
+    fn zero_size_follows_placement_rule() {
+        // The allocator pins zero-size requests at offset 0 — aligned and
+        // in bounds. The verifier holds zero-size placements to the same
+        // rule (alignment + bounds) while exempting them from overlap.
+        let alloc = StaticAllocator::new(100, 4);
+        let mk = |id, size, off| Allocation { request: AllocRequest::new(id, size, 0, 9), offset: off };
+        let vs = alloc.violations(&[mk(0, 0, 3), mk(1, 0, 200), mk(2, 0, 0), mk(3, 0, 0)]);
+        assert_eq!(
+            vs,
+            vec![
+                PlacementViolation::Misaligned { index: 0, offset: 3, alignment: 4 },
+                PlacementViolation::OutOfBounds { index: 1, end: 200, capacity: 100 },
+            ]
+        );
+        assert!(alloc.verify(&[mk(0, 0, 3)]).is_err());
     }
 
     #[test]

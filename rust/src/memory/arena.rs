@@ -6,6 +6,8 @@
 //! buffer `k`. The [`ArenaPlan`] computes concrete offsets and checks the
 //! L1 capacity constraint that the FTL solver promised to satisfy.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{anyhow, ensure, Result};
 
 use crate::util::json::Json;

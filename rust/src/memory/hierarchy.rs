@@ -1,5 +1,7 @@
 //! The three-level software-managed hierarchy.
 
+#![forbid(unsafe_code)]
+
 
 /// A memory level in the hierarchy. Lower number = closer to compute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]

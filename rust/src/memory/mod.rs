@@ -12,10 +12,12 @@
 //! * [`ArenaPlan`] — the L1 tile-buffer layout for a tiled schedule,
 //!   including ping-pong duplication for double buffering.
 
+#![forbid(unsafe_code)]
+
 mod alloc;
 mod arena;
 mod hierarchy;
 
-pub use alloc::{AllocRequest, Allocation, StaticAllocator};
+pub use alloc::{spans_overlap, AllocRequest, Allocation, PlacementViolation, StaticAllocator};
 pub use arena::{ArenaPlan, BufferRole, TileBuffer};
 pub use hierarchy::{Level, LevelSpec, MemoryHierarchy};

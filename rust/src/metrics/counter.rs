@@ -15,6 +15,8 @@
 //! repair — acceptable for telemetry, and the counter converges to
 //! `u64::MAX` immediately after.
 
+#![forbid(unsafe_code)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// A monotone, saturating `u64` counter for telemetry.

@@ -20,6 +20,8 @@
 //! object paths with `_` ([`flatten`]); histograms are emitted with
 //! proper labels ([`hist_samples`]) rather than path-mangled names.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use crate::util::json::Json;

@@ -23,6 +23,8 @@
 //! taken while writers are active is a *consistent-enough* telemetry
 //! view, not a linearisable cut.
 
+#![forbid(unsafe_code)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 

@@ -6,6 +6,8 @@
 //! Prometheus-style text exposition used by the `METRICS` protocol
 //! command ([`expo`]).
 
+#![forbid(unsafe_code)]
+
 pub mod counter;
 pub mod expo;
 pub mod hist;

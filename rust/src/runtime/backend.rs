@@ -1,5 +1,7 @@
 //! Kernel backend abstraction.
 
+#![forbid(unsafe_code)]
+
 use anyhow::Result;
 
 use crate::ir::Op;

@@ -1,5 +1,7 @@
 //! The tile executor: run a solved tiling on real data, tile by tile.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 
 use anyhow::{ensure, Context, Result};

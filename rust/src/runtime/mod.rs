@@ -18,6 +18,8 @@
 //! hardware behaviour. Comparing the result against the un-tiled oracle
 //! ([`reference::run_graph`]) proves FTL is numerics-preserving.
 
+#![forbid(unsafe_code)]
+
 mod backend;
 mod executor;
 mod pjrt;

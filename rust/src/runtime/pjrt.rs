@@ -5,6 +5,8 @@
 //! which the crate's XLA (xla_extension 0.5.1) rejects; the text parser
 //! reassigns ids and round-trips cleanly.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

@@ -5,6 +5,8 @@
 //! to — so native results, PJRT artifact results and the Python oracle
 //! all agree to float tolerance.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 
 use anyhow::{bail, ensure, Result};

@@ -1,5 +1,7 @@
 //! Host-side tensors and N-D tile gather/scatter.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{ensure, Result};
 
 /// A row-major f32 tensor on the host.

@@ -1,5 +1,7 @@
 //! Schedule construction from a solved tiling.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{anyhow, Result};
 
 use crate::dma::Transfer;

@@ -10,6 +10,8 @@
 //! * [`crate::sim`] — the event-driven SoC simulator (cycles, DMA stats);
 //! * [`crate::runtime`] — the PJRT tile executor (numerics validation).
 
+#![forbid(unsafe_code)]
+
 mod build;
 
 pub use build::{build_schedule, KernelInvocation, Phase, Schedule, TileStep};

@@ -61,6 +61,8 @@
 //! property tests drive the same [`LaneSet`] the dispatcher uses under
 //! a virtual clock and assert exact shares.
 
+#![forbid(unsafe_code)]
+
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};

@@ -11,6 +11,8 @@
 //! instead of wrapping. (The recency `tick` stays a plain wrapping
 //! `AtomicU64` on purpose: saturating it would freeze LRU ordering.)
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;

@@ -15,6 +15,8 @@
 //! section is tagged, so distinct structures cannot collide by
 //! concatenation ambiguity.
 
+#![forbid(unsafe_code)]
+
 use crate::config::DeployConfig;
 use crate::ir::{Graph, Op, TensorKind};
 use crate::soc::SocConfig;

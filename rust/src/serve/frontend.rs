@@ -40,6 +40,10 @@
 //! scheduler threads through a socketpair waker, never by touching the
 //! sockets themselves — all socket I/O stays on the loop thread.
 
+// The poll(2) FFI shim below is the crate's single unsafe block; every
+// other module carries `#![forbid(unsafe_code)]`.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -186,6 +190,11 @@ mod sys {
     /// Sleep until any registered fd is ready or `timeout_ms` elapses.
     /// Errors (EINTR included) just end the sleep early.
     pub fn wait(fds: &mut [PollFd], timeout_ms: i32) {
+        // SAFETY: `fds` is a live, exclusively borrowed slice of
+        // `#[repr(C)]` PollFd, so the pointer/length pair describes
+        // exactly `fds.len()` writable entries for the kernel; poll(2)
+        // writes only the `revents` field within those bounds and the
+        // return value (including errors) is deliberately ignored.
         unsafe {
             poll(fds.as_mut_ptr(), fds.len() as std::ffi::c_ulong, timeout_ms);
         }

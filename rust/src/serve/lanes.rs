@@ -24,6 +24,8 @@
 //! pre-lane single-FIFO scheduler bit-for-bit — that degenerate
 //! configuration is pinned by regression tests.
 
+#![forbid(unsafe_code)]
+
 use std::collections::VecDeque;
 
 use anyhow::{bail, Result};

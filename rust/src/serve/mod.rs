@@ -98,6 +98,21 @@
 //! restarted replica pointed at a populated directory serves previously
 //! seen requests with zero solves and zero simulator runs.
 //!
+//! # Verification gate
+//!
+//! With `ftl serve --verify-plans` ([`ServeOptions::verify_plans`]),
+//! every plan is statically verified ([`crate::verify`]) at the two
+//! points where one enters the cache: a fresh solve is checked before
+//! insertion (a failing plan errors the request instead of poisoning
+//! the cache), and a snapshot-loaded entry is checked at warm-start —
+//! an envelope that passes the checksum above but whose *payload*
+//! violates a safety invariant (overlapping arena spans, a DMA race, a
+//! coverage gap, …) is refused, counted under `verify.rejected`, and
+//! the affected request simply re-solves. Warm hits never re-verify:
+//! the gate adds zero work to the warm path (bench-asserted). The
+//! `verify` counter block (`checked`/`rejected`/`findings`) is always
+//! present in `STATS` and flattens into `METRICS` as `verify.*`.
+//!
 //! # Observability
 //!
 //! Every request is traced end to end ([`trace`]): a monotonic trace id

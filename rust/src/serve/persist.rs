@@ -37,6 +37,11 @@
 //! its checksum, or decodes to garbage is skipped and counted
 //! (`persist.skipped_corrupt`); an entry written by a different format
 //! version is skipped and counted separately (`persist.skipped_version`).
+//! When the service runs with `--verify-plans`, a plan entry that decodes
+//! cleanly (valid checksum, valid codec) may still be refused by the
+//! static plan verifier at import — it is then neither cached nor counted
+//! as `loaded`, and surfaces under the service's `verify.rejected`
+//! instead.
 //! Writing is never fatal either: an entry that cannot be written is
 //! counted (`persist.write_errors`) and retried on the next pass, and
 //! the rest of the pass continues. Only an unreadable/uncreatable
@@ -66,6 +71,8 @@
 //! `skipped_corrupt`, `skipped_version`, `snapshots`, `entries_written`,
 //! `bytes_written`, `write_errors`, `evicted`, plus a `write_us`
 //! histogram of per-envelope write wall time.
+
+#![forbid(unsafe_code)]
 
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
@@ -497,9 +504,15 @@ fn load_dir(
         }
         match load_entry(&path) {
             Ok(Loaded::Plan(key, plan)) => {
-                service.import_plan(key, Arc::new(plan));
-                written.insert((KIND_PLAN, key.0));
-                counters.loaded.inc();
+                // Under `--verify-plans` the service may refuse the entry
+                // (error-severity findings, `verify.rejected`). A refused
+                // entry is neither loaded nor marked written — it is not
+                // in the cache, so flush passes have nothing to re-export
+                // for it and the file is simply left to the size-cap GC.
+                if service.import_plan(key, Arc::new(plan)) {
+                    written.insert((KIND_PLAN, key.0));
+                    counters.loaded.inc();
+                }
             }
             Ok(Loaded::Sim(key, sim)) => {
                 service.import_sim(key, Arc::new(sim));
@@ -599,6 +612,7 @@ mod tests {
             sim_cache_capacity: 8,
             cache_shards: 1,
             workers: 1,
+            ..ServeOptions::default()
         }));
         for k in 0..5u128 {
             service.import_sim(Fingerprint(0x1000 + k), Arc::new(tiny_sim()));

@@ -22,6 +22,8 @@
 //! is a single terminal frame. v0 responses keep the exact legacy
 //! shapes so pre-PR-7 clients never see a `"v"` field.
 
+#![forbid(unsafe_code)]
+
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};

@@ -11,6 +11,8 @@
 //! warming and async callers. All counters surface in a JSON stats
 //! snapshot.
 
+#![forbid(unsafe_code)]
+
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -49,11 +51,43 @@ pub struct ServeOptions {
     pub cache_shards: usize,
     /// Worker threads draining the fire-and-forget queue.
     pub workers: usize,
+    /// Run [`crate::verify::check_deployment`] on every plan before it
+    /// enters the cache (`ftl serve --verify-plans`): fresh solves that
+    /// fail verification error the request instead of being cached, and
+    /// snapshot-loaded entries that fail are rejected at warm-start.
+    /// Checks run only at insertion/import — the warm (cache-hit) path
+    /// never pays for them.
+    pub verify_plans: bool,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { cache_capacity: 128, sim_cache_capacity: 256, cache_shards: 8, workers: 4 }
+        Self { cache_capacity: 128, sim_cache_capacity: 256, cache_shards: 8, workers: 4, verify_plans: false }
+    }
+}
+
+/// `verify.*` counters (the `--verify-plans` gate; all zero when the gate
+/// is off).
+#[derive(Debug, Default)]
+struct VerifyCounters {
+    /// Plans checked (fresh solves + snapshot imports).
+    checked: Counter,
+    /// Plans rejected for error-severity findings (never cached).
+    rejected: Counter,
+    /// Total error-severity findings across rejected plans.
+    findings: Counter,
+}
+
+impl VerifyCounters {
+    /// `stats_json` rendering (`"verify": {...}`). `Json::Num`, not
+    /// `Json::int`: a saturated counter must render, not panic.
+    fn to_json(&self) -> Json {
+        let n = |v: u64| Json::Num(v as f64);
+        Json::obj(vec![
+            ("checked", n(self.checked.get())),
+            ("rejected", n(self.rejected.get())),
+            ("findings", n(self.findings.get())),
+        ])
     }
 }
 
@@ -116,6 +150,10 @@ struct ServiceInner {
     /// Wall time of actual `sim::engine` runs, in µs.
     sim_us: Histogram,
     workers: usize,
+    /// Verify plans before cache insertion/import (see
+    /// [`ServeOptions::verify_plans`]).
+    verify_plans: bool,
+    verify: VerifyCounters,
     /// Counters of the attached persistence layer, if any (see
     /// [`crate::serve::persist::Snapshotter::attach`]); surfaced in
     /// `stats_json` under `"persist"`.
@@ -148,6 +186,18 @@ impl ServiceInner {
             let deployment = Deployer::new(graph.clone(), config.clone()).plan()?;
             self.solve_us.record_duration(solve_start.elapsed());
             let plan = Arc::new(deployment);
+            // Gate the trust boundary: a plan enters the shared cache only
+            // if it verifies. The check runs once per solve, never on the
+            // warm path (cache hits returned above).
+            if self.verify_plans {
+                self.verify.checked.inc();
+                let report = crate::verify::check_deployment(&plan, Some(&config.soc));
+                if !report.ok() {
+                    self.verify.findings.add(report.errors() as u64);
+                    self.verify.rejected.inc();
+                    return Err(anyhow!("plan verification failed: {}", report.summary()));
+                }
+            }
             // Publish before the flight closes so no request can observe
             // "no flight and no cache entry" for an already-solved key.
             self.cache.insert(key, plan.clone());
@@ -296,6 +346,8 @@ impl PlanService {
             solve_us: Histogram::new(),
             sim_us: Histogram::new(),
             workers: opts.workers,
+            verify_plans: opts.verify_plans,
+            verify: VerifyCounters::default(),
             persist: Mutex::new(None),
         });
         let (tx, rx) = mpsc::channel::<Job>();
@@ -443,7 +495,9 @@ impl PlanService {
     }
 
     /// Machine-readable stats snapshot (the protocol's `STATS` response).
-    /// Includes `"persist"` counters when a
+    /// Always includes the `"verify"` block (`checked` / `rejected` /
+    /// `findings` — all zero unless `--verify-plans` is on), and includes
+    /// `"persist"` counters when a
     /// [`crate::serve::persist::Snapshotter`] is attached, and the global
     /// solver pool's `"solver"` search counters (thread cap, points
     /// scored vs capacity-/bound-pruned — see
@@ -452,6 +506,7 @@ impl PlanService {
         let mut j = self.stats().to_json();
         if let Json::Obj(m) = &mut j {
             m.insert("solver".into(), crate::tiling::SolverPool::global().stats_json());
+            m.insert("verify".into(), self.inner.verify.to_json());
             m.insert(
                 "plan_latency".into(),
                 Json::obj(vec![
@@ -480,9 +535,27 @@ impl PlanService {
         self.inner.sim_cache.export()
     }
 
-    /// Seed the plan cache with a snapshot entry (warm start).
-    pub fn import_plan(&self, key: Fingerprint, plan: Arc<Deployment>) {
+    /// Seed the plan cache with a snapshot entry (warm start). Under
+    /// `--verify-plans` the entry is verified first — a snapshot is an
+    /// even less trusted source than the in-process solver — and a plan
+    /// with error-severity findings is rejected (counted as
+    /// `verify.rejected`) instead of cached; returns whether the entry
+    /// was admitted. The SoC-free check runs here (a snapshot key binds
+    /// no SoC) — capacity/cost checks are deferred, overlap, hazard,
+    /// coverage and structural checks still apply.
+    pub fn import_plan(&self, key: Fingerprint, plan: Arc<Deployment>) -> bool {
+        if self.inner.verify_plans {
+            self.inner.verify.checked.inc();
+            let report = crate::verify::check_deployment(&plan, None);
+            if !report.ok() {
+                self.inner.verify.findings.add(report.errors() as u64);
+                self.inner.verify.rejected.inc();
+                eprintln!("[ftl-serve] rejecting snapshot plan {}: {}", key.hex(), report.summary());
+                return false;
+            }
+        }
         self.inner.cache.insert(key, plan);
+        true
     }
 
     /// Seed the sim cache with a snapshot entry; `key` must be the
@@ -666,6 +739,41 @@ mod tests {
         assert_eq!(reply.report.workload, "warm");
         assert_eq!(svc.stats().solves, 1);
         assert_eq!(svc.stats().sims, 1);
+    }
+
+    #[test]
+    fn verify_gate_checks_once_per_solve() {
+        let svc = PlanService::new(ServeOptions { verify_plans: true, workers: 1, ..ServeOptions::default() });
+        let (g, c) = small();
+        assert!(!svc.plan(&g, &c).unwrap().cached);
+        assert!(svc.plan(&g, &c).unwrap().cached);
+        let j = svc.stats_json();
+        let v = j.get("verify").unwrap();
+        assert_eq!(v.get("checked").unwrap().as_usize().unwrap(), 1, "warm hits must never re-verify");
+        assert_eq!(v.get("rejected").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(v.get("findings").unwrap().as_usize().unwrap(), 0);
+    }
+
+    #[test]
+    fn verify_gate_rejects_corrupt_imports() {
+        let svc = PlanService::new(ServeOptions { verify_plans: true, workers: 1, ..ServeOptions::default() });
+        let (g, c) = small();
+        let out = svc.plan(&g, &c).unwrap();
+        // Corrupt a clone of the valid plan: collide two sized arena
+        // offsets so the verifier's overlap rule must fire.
+        let mut bad = (*out.plan).clone();
+        let phase = &mut bad.schedule.phases[0];
+        let sized: Vec<usize> = (0..phase.arena.buffers.len())
+            .filter(|&i| phase.arena.buffers[i].bytes > 0 && !phase.arena.offsets[i].is_empty())
+            .collect();
+        let (i, j) = (sized[0], sized[1]);
+        phase.arena.offsets[j][0] = phase.arena.offsets[i][0];
+        let key = out.fingerprint.derive("unit-import");
+        assert!(!svc.import_plan(key, Arc::new(bad)), "overlapping plan must be refused");
+        assert!(svc.import_plan(key, out.plan.clone()), "valid plan must be admitted");
+        let v = svc.stats_json().get("verify").unwrap().clone();
+        assert_eq!(v.get("rejected").unwrap().as_usize().unwrap(), 1);
+        assert!(v.get("findings").unwrap().as_usize().unwrap() >= 1);
     }
 
     #[test]

@@ -16,6 +16,8 @@
 //! window exists where neither the cache nor the flight table covers the
 //! key.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};

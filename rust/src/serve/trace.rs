@@ -30,6 +30,8 @@
 //! marks are clamped monotone at finish, so concurrent marking can never
 //! produce a time-travelling span.
 
+#![forbid(unsafe_code)]
+
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};

@@ -31,6 +31,8 @@
 //! noise — the scheduler's counters are the serve order as the
 //! scheduler made it.
 
+#![forbid(unsafe_code)]
+
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier};
 use std::time::Duration;

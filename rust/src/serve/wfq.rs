@@ -25,6 +25,8 @@
 //! fairness property tests in `rust/tests/fairness.rs` exact rather
 //! than statistical.
 
+#![forbid(unsafe_code)]
+
 /// Fixed-point scale for virtual time: one cost unit at weight 1
 /// advances a lane's tag by `SCALE`. 2^32 leaves room for
 /// `cost × SCALE` in u128 at any realistic cost, and keeps the

@@ -7,6 +7,8 @@
 //! heap ordered by earliest feasible start, which for serial resources is
 //! equivalent to full event-driven simulation.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BinaryHeap;
 
 use anyhow::{ensure, Result};

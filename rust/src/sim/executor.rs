@@ -1,5 +1,7 @@
 //! Schedule → task graph translation and report collection.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{anyhow, Result};
 
 use crate::dma::DmaStats;

@@ -20,6 +20,8 @@
 //! runs of the same schedule diverge (e.g. randomized tie-breaking or
 //! time-based scheduling) must also invalidate that cache's key scheme.
 
+#![forbid(unsafe_code)]
+
 mod engine;
 mod executor;
 

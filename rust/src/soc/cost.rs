@@ -6,6 +6,8 @@
 //! `presets.rs` and EXPERIMENTS.md); absolute cycle counts are not claims
 //! about 16 nm silicon.
 
+#![forbid(unsafe_code)]
+
 use crate::ir::{ActKind, Op};
 
 use super::{ComputeUnit, SocConfig};

@@ -8,6 +8,8 @@
 //! event simulation does the same — cycle counts come from analytic
 //! kernel models, not RTL).
 
+#![forbid(unsafe_code)]
+
 mod cost;
 mod presets;
 mod units;

@@ -18,6 +18,8 @@
 //! * L2 = 3.25 MiB: holds X + W1 + output (≈2.97 MiB) but *not* also the
 //!   605 KiB intermediate — exactly the paper's overflow condition.
 
+#![forbid(unsafe_code)]
+
 use crate::dma::DmaCostModel;
 use crate::memory::{LevelSpec, MemoryHierarchy};
 

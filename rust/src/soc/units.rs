@@ -1,5 +1,7 @@
 //! Compute-unit specifications.
 
+#![forbid(unsafe_code)]
+
 
 /// Which engine executes a kernel.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -17,6 +17,8 @@
 //!   ([`Constraint::Min`]). These bind only the *steady-state* tile; edge
 //!   (remainder) tiles may be smaller.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{bail, Result};
 
 use crate::ir::{Graph, Node, Op};

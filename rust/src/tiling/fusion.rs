@@ -8,6 +8,8 @@
 //! solver shrinks it from the tail — fusion in FTL is an optimisation, not
 //! an obligation.
 
+#![forbid(unsafe_code)]
+
 
 use crate::ir::{Graph, NodeId, TensorKind};
 

@@ -30,6 +30,8 @@
 //! concrete tile sizes, per-operand L1 buffers and fetch depths — from
 //! which [`crate::schedule`] emits the executable tiled schedule.
 
+#![forbid(unsafe_code)]
+
 mod constraints;
 mod fusion;
 mod pool;
@@ -42,7 +44,7 @@ pub use constraints::{emit_node, Constraint};
 pub use fusion::{fuse_groups, FusionGroup, FusionPolicy};
 pub use pool::{Permits, SearchCounters, SearchStats, SolverPool};
 pub use problem::{GroupProblem, OperandRef, Strategy};
-pub use solution::{FreeVarChoice, GroupBuffer, GroupSolution, NodeTile, TilingSolution};
+pub use solution::{DimSpec, FreeVarChoice, GroupBuffer, GroupSolution, NodeTile, TilingSolution};
 pub use solver::{
     assign_homes, assign_homes_with, dma_legs as solver_dma_legs, estimate_cycles, solve_graph, solve_graph_in,
     solve_graph_with, solve_group, solve_group_exhaustive, solve_group_in, HomesPolicy, SolverOptions,

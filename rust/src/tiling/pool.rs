@@ -30,6 +30,8 @@
 //! per-group solve wall time (`group_solve_us`) rides along for the
 //! observability layer.
 
+#![forbid(unsafe_code)]
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 

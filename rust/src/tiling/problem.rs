@@ -2,6 +2,8 @@
 //! the affine variable resolution that turns the constraint set into a
 //! small number of *free* tile variables.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};

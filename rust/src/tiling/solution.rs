@@ -7,6 +7,8 @@
 //! [`GroupSolution::iterations`] to enumerate concrete (remainder-exact)
 //! tiles.
 
+#![forbid(unsafe_code)]
+
 
 use anyhow::{anyhow, Result};
 

@@ -32,6 +32,8 @@
 //! intermediate), [`solve_graph`] *shrinks the group from the tail* and
 //! re-solves — fusion in FTL is opportunistic.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;

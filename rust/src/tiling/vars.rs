@@ -5,6 +5,8 @@
 //! `full` is the dimension's extent; the solver assigns each variable the
 //! tile size used in L1.
 
+#![forbid(unsafe_code)]
+
 
 /// Handle to a [`DimVar`] inside a [`VarTable`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -4,6 +4,8 @@
 //! one-line summary (median ± IQR). Bench binaries are `harness = false`
 //! and call [`bench`] directly; `cargo bench` runs them all.
 
+#![forbid(unsafe_code)]
+
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark.

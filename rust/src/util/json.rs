@@ -4,6 +4,8 @@
 //! as `f64` (integers round-trip exactly up to 2⁵³ — far beyond any tensor
 //! dimension or cycle count we serialise).
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

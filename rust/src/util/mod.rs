@@ -7,6 +7,8 @@
 //! property-testing harness (xorshift PRNG + shrink-free case generation)
 //! used by the test suite in place of `proptest`.
 
+#![forbid(unsafe_code)]
+
 pub mod bench;
 pub mod json;
 pub mod prop;

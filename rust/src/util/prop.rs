@@ -4,6 +4,8 @@
 //! seeded cases and report the failing seed so a failure reproduces with
 //! `Rng::new(seed)`.
 
+#![forbid(unsafe_code)]
+
 /// xorshift64* PRNG — deterministic, seedable, no dependencies.
 #[derive(Debug, Clone)]
 pub struct Rng(u64);

@@ -1,0 +1,982 @@
+//! Independent static verification of solved plans.
+//!
+//! On a software-managed memory hierarchy there is no MMU and no hardware
+//! coherence: a plan that overlaps two live arena buffers, races a DMA
+//! against the kernel consuming its destination, or leaves a gap in tile
+//! coverage silently corrupts activations. This module is the line of
+//! defense: [`check_deployment`] re-derives every safety invariant of a
+//! [`Deployment`] **from the artifact alone** — it never trusts the
+//! solver's bookkeeping (footprints, byte counts, copy counts are all
+//! recomputed from the tile expressions) — and reports typed findings.
+//!
+//! The pass runs wherever a plan crosses a trust boundary:
+//!
+//! * `ftl verify <workload>` — CLI gate (nonzero exit on error findings);
+//! * `ftl serve --verify-plans` — fresh solves are checked before cache
+//!   insertion, snapshot-loaded entries are checked (and rejected) at
+//!   warm-start ([`crate::serve`], `verify.*` counters);
+//! * the mutation harness ([`mutate`]) — seeded plan corruptions that the
+//!   matching rule must catch, the checker's own false-negative test.
+//!
+//! Rule groups:
+//!
+//! * **arena safety** — no two live L1 spans overlap, placements aligned
+//!   and within L1 capacity, ping/pong copies disjoint, declared arena
+//!   layout consistent with the re-derived tile footprints;
+//! * **schedule hazards** — a happens-before pass over
+//!   [`Phase`]/`TileStep` spans: in a double-buffered phase, step *i*'s
+//!   prefetch DMA overlaps step *i−1*'s kernels, so their byte spans must
+//!   be disjoint (RAW/WAR/WAW);
+//! * **transfer bounds & coverage** — every DMA transfer matches the
+//!   tile expression it was derived from and stays within the tensor
+//!   extent; output tiles exactly tile the tensor domain (no gaps, no
+//!   double-writes; halo'd *reads* may overlap);
+//! * **structural** — phase ordering matches the solution, buffers are
+//!   defined before use, trip counts are consistent with the loop nest.
+//!
+//! A corrupt artifact must never panic the verifier: every index is
+//! validated before use, arithmetic is checked, and absurd magnitudes
+//! are reported as [`Rule::Malformed`] instead of being enumerated.
+
+#![forbid(unsafe_code)]
+
+pub mod mutate;
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::Deployment;
+use crate::dma::Transfer;
+use crate::memory::{AllocRequest, Allocation, BufferRole, Level, PlacementViolation, StaticAllocator};
+use crate::schedule::Phase;
+use crate::soc::{KernelCostModel, SocConfig};
+use crate::tiling::{solver_dma_legs as dma_legs, FusionGroup, GroupSolution};
+use crate::util::json::Json;
+
+/// Finding severity. Only `Error` findings fail a plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    /// Suspicious but not a proven safety violation (e.g. a nest too
+    /// large to enumerate — verified structurally only).
+    Warning,
+    /// A proven invariant violation; the plan must not be executed.
+    Error,
+}
+
+impl Severity {
+    /// Canonical name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+
+    /// Parse a canonical name back.
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "warning" => Severity::Warning,
+            "error" => Severity::Error,
+            _ => return None,
+        })
+    }
+}
+
+/// The invariant a finding violates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Rule {
+    /// Two time-live arena spans overlap in space.
+    ArenaOverlap,
+    /// An arena offset is not aligned to the L1 alignment.
+    ArenaAlign,
+    /// An arena span ends past the L1 capacity.
+    ArenaCapacity,
+    /// The declared arena layout disagrees with the re-derived tile
+    /// buffers (count, bytes, role, or ping/pong copy count).
+    ArenaShape,
+    /// A DMA span and a concurrently running kernel span intersect
+    /// (RAW/WAR/WAW in a double-buffered phase).
+    DmaRace,
+    /// A transfer reaches outside its tensor's extent.
+    TransferBounds,
+    /// A step's transfers disagree with the tile expressions (count,
+    /// legs, or geometry) without leaving the tensor extent.
+    TransferShape,
+    /// Output tiles leave part of the tensor unwritten.
+    CoverageGap,
+    /// Two output tiles write the same region (double-write).
+    CoverageOverlap,
+    /// Phase order/name or group membership disagrees with the solution.
+    PhaseOrder,
+    /// A node reads a buffer no earlier node has produced.
+    DefBeforeUse,
+    /// Step count disagrees with the loop nest's trip counts.
+    TripCount,
+    /// A kernel invocation disagrees with its node (name, unit, shape,
+    /// or cost-model cycles).
+    KernelShape,
+    /// The artifact is structurally invalid (indices out of range,
+    /// absurd magnitudes) — deeper checks were skipped.
+    Malformed,
+}
+
+impl Rule {
+    /// Every rule, in severity-ordering of the catalog.
+    pub const ALL: [Rule; 14] = [
+        Rule::ArenaOverlap,
+        Rule::ArenaAlign,
+        Rule::ArenaCapacity,
+        Rule::ArenaShape,
+        Rule::DmaRace,
+        Rule::TransferBounds,
+        Rule::TransferShape,
+        Rule::CoverageGap,
+        Rule::CoverageOverlap,
+        Rule::PhaseOrder,
+        Rule::DefBeforeUse,
+        Rule::TripCount,
+        Rule::KernelShape,
+        Rule::Malformed,
+    ];
+
+    /// Canonical kebab-case name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Rule::ArenaOverlap => "arena-overlap",
+            Rule::ArenaAlign => "arena-align",
+            Rule::ArenaCapacity => "arena-capacity",
+            Rule::ArenaShape => "arena-shape",
+            Rule::DmaRace => "dma-race",
+            Rule::TransferBounds => "transfer-bounds",
+            Rule::TransferShape => "transfer-shape",
+            Rule::CoverageGap => "coverage-gap",
+            Rule::CoverageOverlap => "coverage-overlap",
+            Rule::PhaseOrder => "phase-order",
+            Rule::DefBeforeUse => "def-before-use",
+            Rule::TripCount => "trip-count",
+            Rule::KernelShape => "kernel-shape",
+            Rule::Malformed => "malformed",
+        }
+    }
+
+    /// Parse a canonical name back.
+    pub fn parse(s: &str) -> Option<Self> {
+        Rule::ALL.iter().copied().find(|r| r.name() == s)
+    }
+}
+
+/// One diagnostic produced by the verifier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Violated invariant.
+    pub rule: Rule,
+    /// Severity (only errors fail the plan).
+    pub severity: Severity,
+    /// Phase (= group) index the finding is anchored to, if any.
+    pub phase: Option<usize>,
+    /// Human-readable specifics.
+    pub detail: String,
+}
+
+impl Finding {
+    /// One-line text rendering, e.g. `[ERROR] arena-overlap phase 0: …`.
+    pub fn render(&self) -> String {
+        let sev = match self.severity {
+            Severity::Warning => "WARN ",
+            Severity::Error => "ERROR",
+        };
+        match self.phase {
+            Some(p) => format!("[{sev}] {} phase {p}: {}", self.rule.name(), self.detail),
+            None => format!("[{sev}] {}: {}", self.rule.name(), self.detail),
+        }
+    }
+
+    /// Canonical JSON encoding.
+    pub fn to_json(&self) -> Json {
+        let phase = match self.phase {
+            None => Json::Null,
+            Some(p) => Json::int(p),
+        };
+        Json::obj(vec![
+            ("rule", Json::str(self.rule.name())),
+            ("severity", Json::str(self.severity.name())),
+            ("phase", phase),
+            ("detail", Json::str(&self.detail)),
+        ])
+    }
+
+    /// Decode the canonical JSON encoding.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let rule = v.get("rule")?.as_str()?;
+        let severity = v.get("severity")?.as_str()?;
+        let phase = match v.get("phase")? {
+            Json::Null => None,
+            other => Some(other.as_usize()?),
+        };
+        Ok(Self {
+            rule: Rule::parse(rule).ok_or_else(|| anyhow!("unknown verify rule '{rule}'"))?,
+            severity: Severity::parse(severity).ok_or_else(|| anyhow!("unknown severity '{severity}'"))?,
+            phase,
+            detail: v.get("detail")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// Outcome of [`check_deployment`]: the findings, worst first.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// All findings (errors sorted before warnings).
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    /// True iff the plan carries no error-severity finding.
+    pub fn ok(&self) -> bool {
+        self.errors() == 0
+    }
+
+    /// Number of error-severity findings.
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).count()
+    }
+
+    /// Number of warning-severity findings.
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning).count()
+    }
+
+    /// The distinct rules violated at error severity.
+    pub fn error_rules(&self) -> BTreeSet<Rule> {
+        self.findings.iter().filter(|f| f.severity == Severity::Error).map(|f| f.rule).collect()
+    }
+
+    /// Short one-line summary (used in serve rejection messages).
+    pub fn summary(&self) -> String {
+        let rules: Vec<&str> = self.error_rules().iter().map(|r| r.name()).collect();
+        format!("{} error(s), {} warning(s) [{}]", self.errors(), self.warnings(), rules.join(", "))
+    }
+
+    /// Multi-line text rendering.
+    pub fn render(&self) -> String {
+        if self.findings.is_empty() {
+            return "verify: ok (0 findings)\n".to_string();
+        }
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&f.render());
+            s.push('\n');
+        }
+        s.push_str(&format!("verify: {}\n", self.summary()));
+        s
+    }
+
+    /// Canonical JSON encoding.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("errors", Json::int(self.errors())),
+            ("warnings", Json::int(self.warnings())),
+            ("findings", Json::Arr(self.findings.iter().map(Finding::to_json).collect())),
+        ])
+    }
+}
+
+/// Scalar sanity cap: any loop extent, tile size, dimension term, offset
+/// or element size beyond this is treated as artifact corruption.
+const SCALAR_CAP: usize = 1 << 31;
+/// Derived per-buffer tile bytes beyond this are implausible for any L1.
+const BYTES_CAP: u128 = 1 << 40;
+/// Nests with more iterations than this get a structural-only check.
+const ITER_CAP: u128 = 1 << 22;
+/// Per-dimension coverage enumeration cap.
+const COVERAGE_TRIP_CAP: usize = 1 << 20;
+/// Findings kept per group before suppression (keeps corrupt artifacts
+/// from producing megabytes of diagnostics).
+const MAX_GROUP_FINDINGS: usize = 24;
+
+/// Statically verify a solved plan.
+///
+/// When `soc` is `None` (e.g. a snapshot loaded before any request bound
+/// a SoC to it), the capacity-, alignment- and cost-model-dependent
+/// checks are skipped; overlap, hazard, coverage and structural checks
+/// still run in full.
+pub fn check_deployment(dep: &Deployment, soc: Option<&SocConfig>) -> Report {
+    let mut findings = Vec::new();
+    let (ng, ns, np) = (dep.groups.len(), dep.solution.groups.len(), dep.schedule.phases.len());
+    if ng != ns || ng != np {
+        findings.push(Finding {
+            rule: Rule::Malformed,
+            severity: Severity::Error,
+            phase: None,
+            detail: format!("{ng} fusion groups, {ns} solved groups, {np} phases — counts must match"),
+        });
+    }
+    for gi in 0..ng.min(ns).min(np) {
+        let mut checker = GroupChecker {
+            gi,
+            group: &dep.groups[gi],
+            sol: &dep.solution.groups[gi],
+            phase: &dep.schedule.phases[gi],
+            soc,
+            findings: Vec::new(),
+            suppressed: false,
+        };
+        checker.run();
+        findings.extend(checker.findings);
+    }
+    findings.sort_by(|a, b| b.severity.cmp(&a.severity).then_with(|| a.phase.cmp(&b.phase)));
+    Report { findings }
+}
+
+/// Per-group verification state.
+struct GroupChecker<'a> {
+    gi: usize,
+    group: &'a FusionGroup,
+    sol: &'a GroupSolution,
+    phase: &'a Phase,
+    soc: Option<&'a SocConfig>,
+    findings: Vec<Finding>,
+    suppressed: bool,
+}
+
+impl GroupChecker<'_> {
+    fn push(&mut self, rule: Rule, severity: Severity, detail: String) {
+        if self.findings.len() >= MAX_GROUP_FINDINGS {
+            if !self.suppressed {
+                self.suppressed = true;
+                self.findings.push(Finding {
+                    rule: Rule::Malformed,
+                    severity: Severity::Warning,
+                    phase: Some(self.gi),
+                    detail: "further findings suppressed".to_string(),
+                });
+            }
+            return;
+        }
+        self.findings.push(Finding { rule, severity, phase: Some(self.gi), detail });
+    }
+
+    fn error(&mut self, rule: Rule, detail: String) {
+        self.push(rule, Severity::Error, detail);
+    }
+
+    fn warn(&mut self, rule: Rule, detail: String) {
+        self.push(rule, Severity::Warning, detail);
+    }
+
+    fn run(&mut self) {
+        if !self.structural() {
+            return;
+        }
+        let Some(bytes) = self.derive_bytes() else { return };
+        self.arena(&bytes);
+        self.ordering();
+        self.coverage();
+        self.steps(&bytes);
+    }
+
+    /// Index/magnitude validation. Returns false (skipping all deeper
+    /// passes) if the artifact cannot be walked safely.
+    fn structural(&mut self) -> bool {
+        let before = self.findings.len();
+        let nl = self.sol.loops.len();
+        for (li, l) in self.sol.loops.iter().enumerate() {
+            if l.tile == 0 || l.full == 0 {
+                self.error(Rule::TripCount, format!("loop {li} ('{}') has zero tile or extent", l.name));
+            } else if l.tile > SCALAR_CAP || l.full > SCALAR_CAP {
+                self.error(Rule::Malformed, format!("loop {li} ('{}') has implausible magnitude", l.name));
+            }
+        }
+        for b in &self.sol.buffers {
+            if b.elem_bytes == 0 || b.elem_bytes > SCALAR_CAP {
+                self.error(Rule::Malformed, format!("buffer '{}' has element size {}", b.name, b.elem_bytes));
+            }
+            if b.fetch_depth > nl {
+                self.error(Rule::Malformed, format!("buffer '{}' fetch depth {} exceeds {nl} loops", b.name, b.fetch_depth));
+            }
+            if b.home.is_some() && b.dims.is_empty() {
+                self.error(Rule::Malformed, format!("streamed buffer '{}' has no dimensions", b.name));
+            }
+            for (di, d) in b.dims.iter().enumerate() {
+                if d.full > SCALAR_CAP || d.a > SCALAR_CAP || d.b > SCALAR_CAP {
+                    self.error(Rule::Malformed, format!("buffer '{}' dim {di} has implausible magnitude", b.name));
+                }
+                if let Some(l) = d.loop_idx {
+                    if l >= nl {
+                        self.error(Rule::Malformed, format!("buffer '{}' dim {di} follows loop {l} of {nl}", b.name));
+                    }
+                }
+            }
+        }
+        let nb = self.sol.buffers.len();
+        for (ni, n) in self.sol.nodes.iter().enumerate() {
+            if n.output_buf >= nb || n.input_bufs.iter().any(|&i| i >= nb) {
+                self.error(Rule::Malformed, format!("node {ni} ('{}') references a buffer out of range", n.name));
+            }
+        }
+        let arena = &self.phase.arena;
+        if arena.offsets.len() != arena.buffers.len() {
+            self.error(
+                Rule::Malformed,
+                format!("arena has {} buffers but {} offset lists", arena.buffers.len(), arena.offsets.len()),
+            );
+        } else {
+            for (i, offs) in arena.offsets.iter().enumerate() {
+                if offs.is_empty() {
+                    self.error(Rule::Malformed, format!("arena buffer {i} has no copies"));
+                } else if offs.iter().any(|&o| o > SCALAR_CAP) {
+                    self.error(Rule::Malformed, format!("arena buffer {i} has an implausible offset"));
+                }
+            }
+            for (i, tb) in arena.buffers.iter().enumerate() {
+                if tb.bytes > SCALAR_CAP {
+                    self.error(Rule::Malformed, format!("arena buffer {i} ('{}') has implausible size", tb.name));
+                }
+            }
+        }
+        self.findings.len() == before
+    }
+
+    /// Re-derive each buffer's steady-state tile bytes from the tile
+    /// expressions (never trusting the arena's declared sizes).
+    fn derive_bytes(&mut self) -> Option<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.sol.buffers.len());
+        for b in &self.sol.buffers {
+            let mut total = b.elem_bytes as u128;
+            for d in &b.dims {
+                total = total.saturating_mul(d.steady(&self.sol.loops) as u128);
+            }
+            if total > BYTES_CAP {
+                self.error(Rule::Malformed, format!("buffer '{}' derives {total} steady tile bytes", b.name));
+                return None;
+            }
+            out.push(total as usize);
+        }
+        Some(out)
+    }
+
+    /// Arena safety: layout consistency, alignment, capacity, overlap.
+    fn arena(&mut self, bytes: &[usize]) {
+        let arena = &self.phase.arena;
+        if arena.buffers.len() != self.sol.buffers.len() {
+            self.error(
+                Rule::ArenaShape,
+                format!("arena holds {} buffers, solution has {}", arena.buffers.len(), self.sol.buffers.len()),
+            );
+        }
+        if self.phase.double_buffered != self.sol.double_buffered
+            || arena.double_buffered != self.sol.double_buffered
+        {
+            self.error(
+                Rule::ArenaShape,
+                format!(
+                    "double-buffer flags disagree (phase={}, arena={}, solution={})",
+                    self.phase.double_buffered, arena.double_buffered, self.sol.double_buffered
+                ),
+            );
+        }
+        let n = arena.buffers.len().min(self.sol.buffers.len());
+        for i in 0..n {
+            let tb = &arena.buffers[i];
+            let b = &self.sol.buffers[i];
+            if tb.role != b.role {
+                self.error(
+                    Rule::ArenaShape,
+                    format!("arena buffer '{}' has role {}, solution says {}", tb.name, tb.role.name(), b.role.name()),
+                );
+            }
+            if tb.bytes != bytes[i] {
+                self.error(
+                    Rule::ArenaShape,
+                    format!("arena buffer '{}' declares {} bytes, tile expressions derive {}", tb.name, tb.bytes, bytes[i]),
+                );
+            }
+            let expected =
+                if self.sol.double_buffered && b.is_streamed() && b.fetch_depth > 0 { 2 } else { 1 };
+            if arena.offsets[i].len() != expected {
+                self.error(
+                    Rule::ArenaShape,
+                    format!("buffer '{}' has {} copies, expected {expected}", tb.name, arena.offsets[i].len()),
+                );
+            }
+        }
+        // Placement check through the shared allocator verifier: one
+        // allocation per (buffer, copy), all simultaneously live — every
+        // copy of every buffer coexists within the phase, so this also
+        // proves ping/pong pair disjointness.
+        let (capacity, alignment) = match self.soc {
+            Some(s) => (s.mem.capacity(Level::L1), s.mem.spec(Level::L1).alignment),
+            None => (usize::MAX, 1),
+        };
+        let mut allocs = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..n {
+            for (ci, &off) in arena.offsets[i].iter().enumerate() {
+                allocs.push(Allocation {
+                    request: AllocRequest::new(allocs.len(), bytes[i], 0, 0),
+                    offset: off,
+                });
+                labels.push(format!("{}[{ci}]", arena.buffers[i].name));
+            }
+        }
+        let allocator = StaticAllocator::new(capacity, alignment);
+        for v in allocator.violations(&allocs) {
+            match v {
+                PlacementViolation::Misaligned { index, offset, alignment } => self.error(
+                    Rule::ArenaAlign,
+                    format!("buffer {} at offset {offset} is not {alignment}-byte aligned", labels[index]),
+                ),
+                PlacementViolation::OutOfBounds { index, end, capacity } => self.error(
+                    Rule::ArenaCapacity,
+                    format!("buffer {} ends at byte {end}, beyond the L1 capacity of {capacity}", labels[index]),
+                ),
+                PlacementViolation::Overlap { a, b } => self.error(
+                    Rule::ArenaOverlap,
+                    format!("buffers {} and {} overlap in L1", labels[a], labels[b]),
+                ),
+            }
+        }
+    }
+
+    /// Phase ordering, group membership, defs-before-uses.
+    fn ordering(&mut self) {
+        let expected = self.sol.nodes.iter().map(|n| n.name.as_str()).collect::<Vec<_>>().join("+");
+        if self.phase.name != expected {
+            self.error(
+                Rule::PhaseOrder,
+                format!("phase named '{}' but schedule position solves '{expected}'", self.phase.name),
+            );
+        }
+        let sol_nodes: Vec<usize> = self.sol.nodes.iter().map(|n| n.node).collect();
+        if self.group.nodes != sol_nodes {
+            self.error(
+                Rule::PhaseOrder,
+                format!("fusion group lists nodes {:?}, solution solves {:?}", self.group.nodes, sol_nodes),
+            );
+        }
+        let mut producers: HashMap<usize, usize> = HashMap::new();
+        for (k, n) in self.sol.nodes.iter().enumerate() {
+            for &ib in &n.input_bufs {
+                let role = self.sol.buffers[ib].role;
+                let ok = match producers.get(&ib) {
+                    Some(&p) => p < k,
+                    None => matches!(role, BufferRole::Input | BufferRole::Weight | BufferRole::Scratch),
+                };
+                if !ok {
+                    self.error(
+                        Rule::DefBeforeUse,
+                        format!("node '{}' reads buffer '{}' before any node produced it", n.name, self.sol.buffers[ib].name),
+                    );
+                }
+            }
+            producers.entry(n.output_buf).or_insert(k);
+        }
+    }
+
+    /// Output tiles must exactly tile the tensor domain, per dimension.
+    fn coverage(&mut self) {
+        for b in &self.sol.buffers {
+            if b.role != BufferRole::Output || b.home.is_none() {
+                continue;
+            }
+            for (di, d) in b.dims.iter().enumerate() {
+                let Some(l) = d.loop_idx else {
+                    let covered = d.b.min(d.full);
+                    if covered != d.full {
+                        self.error(
+                            Rule::CoverageGap,
+                            format!("output '{}' dim {di}: fixed tile writes {covered} of {} elements", b.name, d.full),
+                        );
+                    }
+                    continue;
+                };
+                let lp = &self.sol.loops[l];
+                if lp.trips() > COVERAGE_TRIP_CAP {
+                    self.warn(
+                        Rule::CoverageGap,
+                        format!("output '{}' dim {di}: {} trips, too many to enumerate coverage", b.name, lp.trips()),
+                    );
+                    continue;
+                }
+                let mut intervals: BTreeSet<(usize, usize)> = BTreeSet::new();
+                let mut off = 0usize;
+                while off < lp.full {
+                    let cur = lp.tile.min(lp.full - off);
+                    let o = (d.a * off).min(d.full.saturating_sub(1));
+                    let t = (d.a * cur + d.b).min(d.full - o);
+                    intervals.insert((o, o + t));
+                    off += lp.tile;
+                }
+                let mut cursor = 0usize;
+                let mut flagged = false;
+                for &(s, e) in &intervals {
+                    if s > cursor {
+                        self.error(
+                            Rule::CoverageGap,
+                            format!("output '{}' dim {di}: elements [{cursor}, {s}) are never written", b.name),
+                        );
+                        flagged = true;
+                        break;
+                    }
+                    if s < cursor {
+                        self.error(
+                            Rule::CoverageOverlap,
+                            format!("output '{}' dim {di}: tiles [{s}, {e}) double-write elements below {cursor}", b.name),
+                        );
+                        flagged = true;
+                        break;
+                    }
+                    cursor = e;
+                }
+                if !flagged && cursor != d.full {
+                    self.error(
+                        Rule::CoverageGap,
+                        format!("output '{}' dim {di}: tiles cover [0, {cursor}) of {} elements", b.name, d.full),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Per-iteration pass: trip counts, transfers, kernels, DMA hazards.
+    fn steps(&mut self, bytes: &[usize]) {
+        let total = self.sol.loops.iter().fold(1u128, |acc, l| acc.saturating_mul(l.trips() as u128));
+        if total > ITER_CAP {
+            self.warn(Rule::TripCount, format!("nest has {total} iterations, too many to verify per-iteration"));
+            return;
+        }
+        let total = total as usize;
+        if self.phase.steps.len() != total {
+            self.error(
+                Rule::TripCount,
+                format!("schedule has {} steps, the loop nest implies {total}", self.phase.steps.len()),
+            );
+            return;
+        }
+
+        let loops = &self.sol.loops;
+        let nl = loops.len();
+        let mut state: Vec<(usize, usize)> = loops.iter().map(|l| (0, l.tile.min(l.full))).collect();
+        let mut changed = 0usize;
+        let kernel_reads: Vec<usize> = {
+            let mut s: Vec<usize> = self.sol.nodes.iter().flat_map(|n| n.input_bufs.iter().copied()).collect();
+            s.sort_unstable();
+            s.dedup();
+            s
+        };
+        let kernel_writes: Vec<usize> = {
+            let mut s: Vec<usize> = self.sol.nodes.iter().map(|n| n.output_buf).collect();
+            s.sort_unstable();
+            s.dedup();
+            s
+        };
+        let mut prev_stored: Vec<usize> = Vec::new();
+        let mut race_seen: HashSet<(usize, usize, u8)> = HashSet::new();
+
+        for i in 0..total {
+            let next_pos = (0..nl).rev().find(|&k| state[k].0 + loops[k].tile < loops[k].full);
+            let next_changed = next_pos;
+            let step = &self.phase.steps[i];
+
+            // -------- inbound transfers + the prefetch span set
+            let mut expect_in: Vec<(usize, Transfer)> = Vec::new();
+            let mut fetched: Vec<usize> = Vec::new();
+            for (bi, b) in self.sol.buffers.iter().enumerate() {
+                if !matches!(b.role, BufferRole::Input | BufferRole::Weight) {
+                    continue;
+                }
+                let Some(home) = b.home else { continue };
+                if i == 0 || changed < b.fetch_depth {
+                    fetched.push(bi);
+                    let shape = b.shape_at(&state);
+                    let rows: usize = shape[..shape.len() - 1].iter().product::<usize>().max(1);
+                    let row_bytes = shape.last().copied().unwrap_or(1) * b.elem_bytes;
+                    for leg in dma_legs(home, true, rows, row_bytes) {
+                        expect_in.push((bi, leg));
+                    }
+                }
+            }
+            self.check_transfers(i, "inbound", &step.dma_in, &expect_in);
+
+            // -------- kernels
+            if step.kernels.len() != self.sol.nodes.len() {
+                self.error(
+                    Rule::KernelShape,
+                    format!("step {i}: {} kernels, group has {} nodes", step.kernels.len(), self.sol.nodes.len()),
+                );
+            } else {
+                for (k, n) in step.kernels.iter().zip(&self.sol.nodes) {
+                    let out_shape = self.sol.buffers[n.output_buf].shape_at(&state);
+                    if k.name != n.name || k.unit != n.unit {
+                        self.error(
+                            Rule::KernelShape,
+                            format!("step {i}: kernel '{}' on {} but node is '{}' on {}", k.name, k.unit.name(), n.name, n.unit.name()),
+                        );
+                    } else if k.out_shape != out_shape {
+                        self.error(
+                            Rule::KernelShape,
+                            format!("step {i}: kernel '{}' output {:?} but tile expressions derive {:?}", k.name, k.out_shape, out_shape),
+                        );
+                    } else if let Some(soc) = self.soc {
+                        let in_shapes: Vec<Vec<usize>> =
+                            n.input_bufs.iter().map(|&bi| self.sol.buffers[bi].shape_at(&state)).collect();
+                        let in_refs: Vec<&[usize]> = in_shapes.iter().map(|s| s.as_slice()).collect();
+                        let cycles = KernelCostModel::tile_cycles(soc, &n.op, n.unit, &in_refs, &out_shape);
+                        if k.cycles != cycles {
+                            self.error(
+                                Rule::KernelShape,
+                                format!("step {i}: kernel '{}' claims {} cycles, cost model derives {cycles}", k.name, k.cycles),
+                            );
+                        }
+                    }
+                }
+            }
+
+            // -------- outbound transfers + the store span set
+            let mut expect_out: Vec<(usize, Transfer)> = Vec::new();
+            let mut stored: Vec<usize> = Vec::new();
+            for (bi, b) in self.sol.buffers.iter().enumerate() {
+                if b.role != BufferRole::Output {
+                    continue;
+                }
+                let Some(home) = b.home else { continue };
+                let store_now = match next_changed {
+                    None => true,
+                    Some(nc) => nc < b.fetch_depth,
+                };
+                if store_now {
+                    stored.push(bi);
+                    let shape = b.shape_at(&state);
+                    let rows: usize = shape[..shape.len() - 1].iter().product::<usize>().max(1);
+                    let row_bytes = shape.last().copied().unwrap_or(1) * b.elem_bytes;
+                    for leg in dma_legs(home, false, rows, row_bytes) {
+                        expect_out.push((bi, leg));
+                    }
+                }
+            }
+            self.check_transfers(i, "outbound", &step.dma_out, &expect_out);
+
+            // -------- hazards: in a double-buffered phase step i's DMA
+            // overlaps step i−1's kernels, so their L1 spans must be
+            // disjoint. Single-buffered phases serialize DMA and compute.
+            if self.phase.double_buffered && i > 0 {
+                for &wb in &fetched {
+                    let Some(ws) = self.span(wb, i, bytes) else { continue };
+                    for &rb in &kernel_reads {
+                        if let Some(rs) = self.span(rb, i - 1, bytes) {
+                            if crate::memory::spans_overlap(ws, rs) && race_seen.insert((wb, rb, 0)) {
+                                self.race(i, "WAR", wb, rb, "prefetch into", "kernel read of");
+                            }
+                        }
+                    }
+                    for &ob in &kernel_writes {
+                        if let Some(os) = self.span(ob, i - 1, bytes) {
+                            if crate::memory::spans_overlap(ws, os) && race_seen.insert((wb, ob, 1)) {
+                                self.race(i, "WAW", wb, ob, "prefetch into", "kernel write of");
+                            }
+                        }
+                    }
+                }
+                for &sb in &prev_stored {
+                    let Some(ss) = self.span(sb, i - 1, bytes) else { continue };
+                    for &ob in &kernel_writes {
+                        if let Some(os) = self.span(ob, i, bytes) {
+                            if crate::memory::spans_overlap(os, ss) && race_seen.insert((ob, sb, 2)) {
+                                self.race(i, "RAW", ob, sb, "kernel write to", "in-flight store of");
+                            }
+                        }
+                    }
+                }
+            }
+            prev_stored = stored;
+
+            // -------- advance the odometer
+            if let Some(k) = next_pos {
+                let noff = state[k].0 + loops[k].tile;
+                state[k] = (noff, loops[k].tile.min(loops[k].full - noff));
+                for j in k + 1..nl {
+                    state[j] = (0, loops[j].tile.min(loops[j].full));
+                }
+                changed = k;
+            }
+        }
+    }
+
+    /// L1 byte span of buffer `bi`'s copy used at step `i` (None for
+    /// zero-size buffers or indices the — possibly corrupt — arena lacks).
+    fn span(&self, bi: usize, i: usize, bytes: &[usize]) -> Option<(usize, usize)> {
+        let offs = self.phase.arena.offsets.get(bi)?;
+        let size = *bytes.get(bi)?;
+        if offs.is_empty() || size == 0 {
+            return None;
+        }
+        let o = offs[i % offs.len()];
+        Some((o, o + size))
+    }
+
+    fn race(&mut self, i: usize, kind: &str, a: usize, b: usize, verb_a: &str, verb_b: &str) {
+        let name = |bi: usize| {
+            self.sol.buffers.get(bi).map(|b| b.name.clone()).unwrap_or_else(|| format!("#{bi}"))
+        };
+        let (na, nb) = (name(a), name(b));
+        self.error(
+            Rule::DmaRace,
+            format!("{kind} hazard at step {i}: {verb_a} '{na}' overlaps step {}'s {verb_b} '{nb}'", i - 1),
+        );
+    }
+
+    /// Compare a step's actual transfer list against the re-derived one.
+    fn check_transfers(&mut self, i: usize, dir: &str, actual: &[Transfer], expected: &[(usize, Transfer)]) {
+        if actual.len() != expected.len() {
+            self.error(
+                Rule::TransferShape,
+                format!("step {i}: {} {dir} transfers, tile expressions derive {}", actual.len(), expected.len()),
+            );
+            return;
+        }
+        for (act, (bi, exp)) in actual.iter().zip(expected) {
+            if act == exp {
+                continue;
+            }
+            let b = &self.sol.buffers[*bi];
+            // Out-of-extent geometry is a bounds violation; anything else
+            // (wrong legs, wrong tile geometry within extent) is a shape
+            // disagreement with the tile expressions.
+            let full_last = b.dims.last().map_or(1, |d| d.full) as u128;
+            let other_full: u128 = if b.dims.len() > 1 {
+                b.dims[..b.dims.len() - 1].iter().fold(1u128, |acc, d| acc.saturating_mul(d.full as u128))
+            } else {
+                1
+            };
+            let out_of_extent = (act.row_bytes as u128) > full_last.saturating_mul(b.elem_bytes as u128)
+                || (act.planes as u128).saturating_mul(act.rows as u128) > other_full;
+            if out_of_extent {
+                self.error(
+                    Rule::TransferBounds,
+                    format!(
+                        "step {i}: {dir} transfer for '{}' ({}×{}×{}B) exceeds the tensor extent",
+                        b.name, act.planes, act.rows, act.row_bytes
+                    ),
+                );
+            } else {
+                self.error(
+                    Rule::TransferShape,
+                    format!(
+                        "step {i}: {dir} transfer for '{}' is {}→{} {}×{}×{}B, expected {}→{} {}×{}×{}B",
+                        b.name,
+                        act.from.name(),
+                        act.to.name(),
+                        act.planes,
+                        act.rows,
+                        act.row_bytes,
+                        exp.from.name(),
+                        exp.to.name(),
+                        exp.planes,
+                        exp.rows,
+                        exp.row_bytes
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeployConfig;
+    use crate::coordinator::Deployer;
+    use crate::ir::builder::vit_mlp;
+    use crate::ir::DType;
+    use crate::tiling::Strategy;
+
+    fn plan(soc: &str, strategy: Strategy, dbuf: bool) -> (Deployment, DeployConfig) {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let mut cfg = DeployConfig::preset(soc, strategy).unwrap();
+        cfg.double_buffer = dbuf;
+        (Deployer::new(g, cfg.clone()).plan().unwrap(), cfg)
+    }
+
+    #[test]
+    fn valid_plans_have_zero_findings() {
+        for soc in ["siracusa", "cluster-only"] {
+            for strategy in [Strategy::Ftl, Strategy::LayerPerLayer] {
+                for dbuf in [false, true] {
+                    let (d, cfg) = plan(soc, strategy, dbuf);
+                    let report = check_deployment(&d, Some(&cfg.soc));
+                    assert!(
+                        report.findings.is_empty(),
+                        "{soc}/{strategy:?}/dbuf={dbuf}:\n{}",
+                        report.render()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn soc_free_check_passes_valid_plans() {
+        let (d, _) = plan("siracusa", Strategy::Ftl, true);
+        let report = check_deployment(&d, None);
+        assert!(report.findings.is_empty(), "{}", report.render());
+    }
+
+    #[test]
+    fn group_count_mismatch_is_malformed() {
+        let (mut d, cfg) = plan("siracusa", Strategy::Ftl, false);
+        d.schedule.phases.pop();
+        let report = check_deployment(&d, Some(&cfg.soc));
+        assert!(!report.ok());
+        assert!(report.error_rules().contains(&Rule::Malformed));
+    }
+
+    #[test]
+    fn corrupt_indices_never_panic() {
+        let (mut d, cfg) = plan("siracusa", Strategy::Ftl, true);
+        d.solution.groups[0].nodes[0].output_buf = 999;
+        d.solution.groups[0].buffers[0].fetch_depth = 99;
+        d.solution.groups[0].loops[0].tile = 0;
+        let report = check_deployment(&d, Some(&cfg.soc));
+        assert!(!report.ok());
+    }
+
+    #[test]
+    fn rule_names_roundtrip() {
+        for r in Rule::ALL {
+            assert_eq!(Rule::parse(r.name()), Some(r), "{r:?}");
+        }
+        assert_eq!(Rule::parse("nope"), None);
+        for s in [Severity::Warning, Severity::Error] {
+            assert_eq!(Severity::parse(s.name()), Some(s));
+        }
+    }
+
+    #[test]
+    fn finding_json_roundtrip() {
+        for (rule, severity, phase) in [
+            (Rule::ArenaOverlap, Severity::Error, Some(3)),
+            (Rule::TripCount, Severity::Warning, None),
+        ] {
+            let f = Finding { rule, severity, phase, detail: "details \"quoted\"".to_string() };
+            let back = Finding::from_json(&f.to_json()).unwrap();
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let (mut d, cfg) = plan("siracusa", Strategy::Ftl, true);
+        // Collide two arena offsets.
+        let offs = &mut d.schedule.phases[0].arena.offsets;
+        let o0 = offs[0][0];
+        offs[1][0] = o0;
+        let report = check_deployment(&d, Some(&cfg.soc));
+        assert!(!report.ok());
+        assert!(report.error_rules().contains(&Rule::ArenaOverlap));
+        assert!(report.render().contains("arena-overlap"));
+        let j = report.to_json();
+        assert!(!j.get("ok").unwrap().as_bool().unwrap());
+        assert!(j.get("errors").unwrap().as_usize().unwrap() >= 1);
+    }
+}

@@ -1,0 +1,300 @@
+//! Mutation testing for the plan verifier — the checker's own
+//! false-negative test.
+//!
+//! Each mutator takes a *valid* [`Deployment`], applies one seeded
+//! corruption (shift an arena offset, widen a transfer, swap two phases,
+//! drop a buffer, …) and records which rules the verifier then fires.
+//! A mutation is **caught** iff the intended rule appears among the
+//! error-severity findings; [`run_mutations`] fails fast if the base
+//! plan is not clean or a mutator finds no applicable target — both
+//! would silently weaken the harness.
+
+#![forbid(unsafe_code)]
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Deployment;
+use crate::memory::BufferRole;
+use crate::soc::SocConfig;
+use crate::tiling::DimSpec;
+
+use super::{check_deployment, Rule};
+
+/// One mutator's result.
+#[derive(Debug, Clone)]
+pub struct MutationOutcome {
+    /// Mutator name (stable, used in reports and CI assertions).
+    pub name: &'static str,
+    /// The rule that must catch this corruption.
+    pub intended: Rule,
+    /// Whether the intended rule fired at error severity.
+    pub caught: bool,
+    /// All error-severity rules the verifier fired on the mutant.
+    pub rules_hit: Vec<Rule>,
+}
+
+type Mutator = fn(&mut Deployment) -> Result<()>;
+
+/// The mutator catalog: (name, intended rule, mutation).
+fn catalog() -> Vec<(&'static str, Rule, Mutator)> {
+    vec![
+        ("shift-offset", Rule::ArenaOverlap, shift_offset),
+        ("misalign-offset", Rule::ArenaAlign, misalign_offset),
+        ("blow-capacity", Rule::ArenaCapacity, blow_capacity),
+        ("drop-buffer", Rule::ArenaShape, drop_buffer),
+        ("collapse-copies", Rule::DmaRace, collapse_copies),
+        ("widen-transfer", Rule::TransferBounds, widen_transfer),
+        ("drop-transfer", Rule::TransferShape, drop_transfer),
+        ("shrink-output", Rule::CoverageGap, shrink_output),
+        ("halo-output", Rule::CoverageOverlap, halo_output),
+        ("swap-phases", Rule::PhaseOrder, swap_phases),
+        ("use-before-def", Rule::DefBeforeUse, use_before_def),
+        ("corrupt-trip", Rule::TripCount, corrupt_trip),
+        ("inflate-cycles", Rule::KernelShape, inflate_cycles),
+    ]
+}
+
+/// Apply every mutator to (a clone of) `dep` and verify each mutant.
+///
+/// Errors if the base plan itself fails verification or any mutator has
+/// no applicable target in this plan.
+pub fn run_mutations(dep: &Deployment, soc: &SocConfig) -> Result<Vec<MutationOutcome>> {
+    let base = check_deployment(dep, Some(soc));
+    if !base.findings.is_empty() {
+        bail!("mutation harness needs a clean base plan, got:\n{}", base.render());
+    }
+    let mut out = Vec::new();
+    for (name, intended, mutate) in catalog() {
+        let mut mutant = dep.clone();
+        mutate(&mut mutant)?;
+        let report = check_deployment(&mutant, Some(soc));
+        let rules_hit: Vec<Rule> = report.error_rules().into_iter().collect();
+        let caught = rules_hit.contains(&intended);
+        out.push(MutationOutcome { name, intended, caught, rules_hit });
+    }
+    Ok(out)
+}
+
+/// Render the mutator → rule table plus the tally line CI parses.
+pub fn render_outcomes(outcomes: &[MutationOutcome]) -> String {
+    let mut s = String::new();
+    for o in outcomes {
+        let mark = if o.caught { "caught" } else { "MISSED" };
+        let hits: Vec<&str> = o.rules_hit.iter().map(|r| r.name()).collect();
+        s.push_str(&format!("{:<16} -> {:<17} {mark:<7} (fired: {})\n", o.name, o.intended.name(), hits.join(", ")));
+    }
+    let caught = outcomes.iter().filter(|o| o.caught).count();
+    s.push_str(&format!("mutations={} caught={caught}\n", outcomes.len()));
+    s
+}
+
+// ------------------------------------------------------------- mutators
+
+fn shift_offset(dep: &mut Deployment) -> Result<()> {
+    for phase in &mut dep.schedule.phases {
+        let sized: Vec<usize> = (0..phase.arena.buffers.len())
+            .filter(|&i| phase.arena.buffers[i].bytes > 0 && !phase.arena.offsets[i].is_empty())
+            .collect();
+        if let [i, j, ..] = sized[..] {
+            phase.arena.offsets[j][0] = phase.arena.offsets[i][0];
+            return Ok(());
+        }
+    }
+    bail!("shift-offset: no phase with two sized buffers")
+}
+
+fn misalign_offset(dep: &mut Deployment) -> Result<()> {
+    for phase in &mut dep.schedule.phases {
+        if let Some(offs) = phase.arena.offsets.first_mut() {
+            if let Some(o) = offs.first_mut() {
+                *o += 1;
+                return Ok(());
+            }
+        }
+    }
+    bail!("misalign-offset: no arena offset to perturb")
+}
+
+fn blow_capacity(dep: &mut Deployment) -> Result<()> {
+    // Push a sized buffer far past any plausible L1; the re-derived span
+    // then ends beyond capacity.
+    for phase in &mut dep.schedule.phases {
+        for i in 0..phase.arena.buffers.len() {
+            if phase.arena.buffers[i].bytes > 0 && !phase.arena.offsets[i].is_empty() {
+                phase.arena.offsets[i][0] = 1 << 28;
+                return Ok(());
+            }
+        }
+    }
+    bail!("blow-capacity: no sized buffer")
+}
+
+fn drop_buffer(dep: &mut Deployment) -> Result<()> {
+    for phase in &mut dep.schedule.phases {
+        if !phase.arena.buffers.is_empty() {
+            phase.arena.buffers.pop();
+            phase.arena.offsets.pop();
+            return Ok(());
+        }
+    }
+    bail!("drop-buffer: no arena buffer")
+}
+
+fn collapse_copies(dep: &mut Deployment) -> Result<()> {
+    for (gi, g) in dep.solution.groups.iter().enumerate() {
+        if !g.double_buffered {
+            continue;
+        }
+        for (bi, b) in g.buffers.iter().enumerate() {
+            let inbound = matches!(b.role, BufferRole::Input | BufferRole::Weight);
+            // The buffer must actually be refetched at some step ≥ 1:
+            // some loop above its fetch depth advances at least once.
+            let refetched = g.loops[..b.fetch_depth].iter().any(|l| l.trips() >= 2);
+            let read = g.nodes.iter().any(|n| n.input_bufs.contains(&bi));
+            if inbound && b.home.is_some() && refetched && read {
+                let offs = &mut dep.schedule.phases[gi].arena.offsets[bi];
+                if offs.len() == 2 {
+                    offs.pop();
+                    return Ok(());
+                }
+            }
+        }
+    }
+    bail!("collapse-copies: no refetched double-buffered input")
+}
+
+fn widen_transfer(dep: &mut Deployment) -> Result<()> {
+    for (gi, g) in dep.solution.groups.iter().enumerate() {
+        // Step 0 fetches every streamed input in buffer order, so the
+        // first inbound transfer belongs to the first such buffer.
+        let Some(b) = g
+            .buffers
+            .iter()
+            .find(|b| matches!(b.role, BufferRole::Input | BufferRole::Weight) && b.home.is_some())
+        else {
+            continue;
+        };
+        let full_last = b.dims.last().map_or(1, |d| d.full);
+        let step = &mut dep.schedule.phases[gi].steps[0];
+        if let Some(t) = step.dma_in.first_mut() {
+            t.row_bytes = (full_last + 1) * b.elem_bytes;
+            return Ok(());
+        }
+    }
+    bail!("widen-transfer: no inbound transfer at step 0")
+}
+
+fn drop_transfer(dep: &mut Deployment) -> Result<()> {
+    for phase in &mut dep.schedule.phases {
+        if let Some(step) = phase.steps.first_mut() {
+            if !step.dma_in.is_empty() {
+                step.dma_in.pop();
+                return Ok(());
+            }
+        }
+    }
+    bail!("drop-transfer: no inbound transfer at step 0")
+}
+
+fn shrink_output(dep: &mut Deployment) -> Result<()> {
+    for g in &mut dep.solution.groups {
+        for b in &mut g.buffers {
+            if b.role != BufferRole::Output || b.home.is_none() {
+                continue;
+            }
+            for d in &mut b.dims {
+                if d.loop_idx.is_some() && d.full >= 2 {
+                    *d = DimSpec { full: d.full, loop_idx: None, a: 0, b: d.full - 1 };
+                    return Ok(());
+                }
+            }
+        }
+    }
+    bail!("shrink-output: no looped output dimension")
+}
+
+fn halo_output(dep: &mut Deployment) -> Result<()> {
+    for g in &mut dep.solution.groups {
+        let loops = g.loops.clone();
+        for b in &mut g.buffers {
+            if b.role != BufferRole::Output || b.home.is_none() {
+                continue;
+            }
+            for d in &mut b.dims {
+                let trips = d.loop_idx.map(|l| loops[l].trips()).unwrap_or(0);
+                if trips >= 2 && d.a >= 1 {
+                    d.b += 1;
+                    return Ok(());
+                }
+            }
+        }
+    }
+    bail!("halo-output: no multi-trip output dimension")
+}
+
+fn swap_phases(dep: &mut Deployment) -> Result<()> {
+    if dep.schedule.phases.len() >= 2 && dep.schedule.phases[0].name != dep.schedule.phases[1].name {
+        dep.schedule.phases.swap(0, 1);
+        return Ok(());
+    }
+    bail!("swap-phases: need two distinct phases")
+}
+
+fn use_before_def(dep: &mut Deployment) -> Result<()> {
+    for g in &mut dep.solution.groups {
+        if let Some(n) = g.nodes.first_mut() {
+            if let Some(ib) = n.input_bufs.first_mut() {
+                *ib = n.output_buf;
+                return Ok(());
+            }
+        }
+    }
+    bail!("use-before-def: no node with inputs")
+}
+
+fn corrupt_trip(dep: &mut Deployment) -> Result<()> {
+    for g in &mut dep.solution.groups {
+        if let Some(l) = g.loops.first_mut() {
+            l.full += l.tile;
+            return Ok(());
+        }
+    }
+    bail!("corrupt-trip: no loop to corrupt")
+}
+
+fn inflate_cycles(dep: &mut Deployment) -> Result<()> {
+    for phase in &mut dep.schedule.phases {
+        if let Some(step) = phase.steps.first_mut() {
+            if let Some(k) = step.kernels.first_mut() {
+                k.cycles += 1;
+                return Ok(());
+            }
+        }
+    }
+    bail!("inflate-cycles: no kernel at step 0")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeployConfig;
+    use crate::coordinator::Deployer;
+    use crate::ir::builder::vit_mlp;
+    use crate::ir::DType;
+    use crate::tiling::Strategy;
+
+    #[test]
+    fn all_mutations_caught_by_intended_rule() {
+        let g = vit_mlp(197, 768, 3072, DType::Int8);
+        let mut cfg = DeployConfig::preset("siracusa", Strategy::Ftl).unwrap();
+        cfg.double_buffer = true;
+        let dep = Deployer::new(g, cfg.clone()).plan().unwrap();
+        let outcomes = run_mutations(&dep, &cfg.soc).unwrap();
+        assert_eq!(outcomes.len(), catalog().len());
+        for o in &outcomes {
+            assert!(o.caught, "{} not caught by {} — fired {:?}\n{}", o.name, o.intended.name(), o.rules_hit, render_outcomes(&outcomes));
+        }
+        let text = render_outcomes(&outcomes);
+        assert!(text.contains(&format!("mutations={} caught={}", outcomes.len(), outcomes.len())));
+    }
+}

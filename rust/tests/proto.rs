@@ -23,6 +23,7 @@ fn frontend() -> FrontendHandle {
         sim_cache_capacity: 64,
         cache_shards: 2,
         workers: 1,
+        ..ServeOptions::default()
     }));
     let scheduler = Arc::new(BatchScheduler::new(
         service,

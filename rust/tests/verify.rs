@@ -1,0 +1,209 @@
+//! Integration tests for the static plan verifier (`ftl::verify`).
+//!
+//! Three trust boundaries are exercised end to end:
+//!
+//! * every builtin serve workload × SoC preset × strategy × buffering mode
+//!   plans to a deployment the verifier passes with **zero** findings;
+//! * randomly generated graphs (the PR-4 property generator) verify clean
+//!   regardless of solver thread count, and the `Finding` JSON codec
+//!   round-trips through its own text form;
+//! * a hand-corrupted snapshot entry whose envelope checksum is *valid*
+//!   (only the payload semantics are wrong) is refused at warm-start by
+//!   the verification gate — the integrity check alone cannot catch it.
+
+#![forbid(unsafe_code)]
+
+use std::sync::Arc;
+
+use ftl::config::DeployConfig;
+use ftl::coordinator::{Deployer, Deployment};
+use ftl::ir::{ActKind, DType, Graph, GraphBuilder};
+use ftl::schedule::build_schedule;
+use ftl::serve::{
+    checksum, resolve_workload, PersistOptions, PlanService, ServeOptions, Snapshotter, SNAPSHOT_FORMAT,
+};
+use ftl::soc::SocConfig;
+use ftl::tiling::{
+    assign_homes_with, fuse_groups, solve_graph_in, FusionPolicy, HomesPolicy, SolverOptions, SolverPool, Strategy,
+};
+use ftl::util::json::{parse, Json};
+use ftl::util::prop::{cases, Rng};
+use ftl::verify::{check_deployment, Finding, Rule, Severity};
+
+/// The serve-vocabulary workloads the CLI `verify --all` sweep also uses.
+const WORKLOADS: [&str; 3] = ["vit-base-stage", "vit-tiny-stage", "stage-64x96x192"];
+
+#[test]
+fn builtin_serve_workloads_verify_clean() {
+    for name in WORKLOADS {
+        let graph = resolve_workload(name).expect("builtin workload resolves");
+        for soc in ["siracusa", "cluster-only"] {
+            for strategy in [Strategy::Ftl, Strategy::LayerPerLayer] {
+                for dbuf in [false, true] {
+                    let mut cfg = DeployConfig::preset(soc, strategy).expect("builtin preset");
+                    cfg.double_buffer = dbuf;
+                    let dep = Deployer::new(graph.clone(), cfg.clone()).plan().expect("workload plans");
+                    let report = check_deployment(&dep, Some(&cfg.soc));
+                    assert!(
+                        report.findings.is_empty(),
+                        "{name} on {soc} ({strategy:?}, dbuf={dbuf}) flagged:\n{}",
+                        report.render()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Random small MLP-ish graph (same shape as the PR-4 property suite).
+fn random_graph(rng: &mut Rng) -> ftl::ir::Graph {
+    let seq = rng.range(3, 48);
+    let d = rng.range(3, 48);
+    let mut b = GraphBuilder::new(DType::F32);
+    let mut t = b.input("x", &[seq, d]);
+    let layers = rng.range(1, 3);
+    for i in 0..layers {
+        let n = rng.range(3, 64);
+        t = b.linear(&format!("fc{i}"), t, n, rng.chance(0.7));
+        if rng.chance(0.8) {
+            let kind = *rng.pick(&[ActKind::Gelu, ActKind::Relu, ActKind::Sigmoid]);
+            t = b.act(&format!("act{i}"), kind, t);
+        }
+    }
+    b.finish(t).expect("random graph is valid")
+}
+
+/// Assemble a deployment from the raw pipeline (fuse → solve → homes →
+/// schedule) on an explicit, private solver pool.
+fn plan_with_pool(graph: &Graph, soc: &SocConfig, strategy: Strategy, dbuf: bool, threads: usize) -> Deployment {
+    let pool = SolverPool::new(threads);
+    let opts = SolverOptions::default();
+    let groups = fuse_groups(graph, strategy, FusionPolicy::default());
+    let (groups, solution) =
+        solve_graph_in(graph, soc, groups, &opts, dbuf, HomesPolicy::Resident, &pool).expect("random graph solves");
+    let homes = assign_homes_with(graph, &groups, soc, HomesPolicy::Resident);
+    let schedule = build_schedule(graph, soc, &solution).expect("schedule builds");
+    Deployment { groups, homes, solution, schedule }
+}
+
+/// Plans must verify clean no matter how many solver threads produced
+/// them: the solver is deterministic across thread counts, and the
+/// verifier judges only the artifact.
+#[test]
+fn prop_random_plans_verify_clean_at_any_thread_count() {
+    cases(10, |rng| {
+        let graph = random_graph(rng);
+        let strategy = if rng.chance(0.5) { Strategy::Ftl } else { Strategy::LayerPerLayer };
+        let soc = if rng.chance(0.5) {
+            ftl::soc::siracusa_reduced()
+        } else {
+            ftl::soc::siracusa_reduced_cluster_only()
+        };
+        let dbuf = rng.chance(0.5);
+        for threads in [1, 3] {
+            let dep = plan_with_pool(&graph, &soc, strategy, dbuf, threads);
+            let report = check_deployment(&dep, Some(&soc));
+            assert!(
+                report.findings.is_empty(),
+                "random plan ({strategy:?}, dbuf={dbuf}, threads={threads}) flagged:\n{}",
+                report.render()
+            );
+        }
+    });
+}
+
+#[test]
+fn finding_json_round_trips_through_text() {
+    let samples = [
+        Finding {
+            rule: Rule::DmaRace,
+            severity: Severity::Error,
+            phase: Some(3),
+            detail: "step 7 prefetch of 'x' [0x100, 0x180) overlaps kernel span".into(),
+        },
+        Finding { rule: Rule::TripCount, severity: Severity::Warning, phase: None, detail: "nest too large".into() },
+    ];
+    for finding in samples {
+        let text = finding.to_json().to_string();
+        let back = Finding::from_json(&parse(&text).expect("finding text parses")).expect("finding decodes");
+        assert_eq!(back, finding);
+    }
+    // Every rule name must survive the name round-trip — the JSON codec
+    // depends on it.
+    for rule in Rule::ALL {
+        assert_eq!(Rule::parse(rule.name()), Some(rule));
+    }
+}
+
+/// A snapshot entry that decodes cleanly and carries a *valid* checksum,
+/// but whose payload violates an arena invariant, must be refused by the
+/// verification gate at warm-start — and served traffic must simply
+/// re-solve.
+#[test]
+fn corrupted_snapshot_entry_is_rejected_at_warm_start() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("ftl-verify-snap-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let graph = resolve_workload("vit-tiny-stage")?;
+    let cfg = DeployConfig::preset("cluster-only", Strategy::Ftl)?;
+
+    // 1. Populate the snapshot directory with one valid plan entry.
+    let service = Arc::new(PlanService::new(ServeOptions { workers: 1, ..ServeOptions::default() }));
+    let snap = Snapshotter::attach(service.clone(), dir.clone(), PersistOptions::manual())?;
+    let cold = service.plan(&graph, &cfg)?;
+    assert!(!cold.cached);
+    assert!(snap.flush() >= 1, "the fresh plan must be persisted");
+    drop(snap);
+    drop(service);
+
+    // 2. Hand-corrupt the entry: collide two sized arena offsets, then
+    //    recompute the envelope checksum so the persistence layer's own
+    //    integrity check still passes. Only the verifier can catch this.
+    let key = cold.fingerprint;
+    let path = dir.join(format!("plan-{}.json", key.hex()));
+    let doc = parse(&std::fs::read_to_string(&path)?)?;
+    let mut plan = Deployment::from_json(doc.get("payload")?)?;
+    let phase = &mut plan.schedule.phases[0];
+    let sized: Vec<usize> = (0..phase.arena.buffers.len())
+        .filter(|&i| phase.arena.buffers[i].bytes > 0 && !phase.arena.offsets[i].is_empty())
+        .collect();
+    assert!(sized.len() >= 2, "need two sized buffers to collide");
+    phase.arena.offsets[sized[1]][0] = phase.arena.offsets[sized[0]][0];
+    let payload = plan.to_json();
+    let payload_text = payload.to_string();
+    let sum = checksum(format!("plan\n{}\n{payload_text}", key.hex()).as_bytes());
+    let envelope = Json::obj(vec![
+        ("format", Json::str(SNAPSHOT_FORMAT)),
+        ("kind", Json::str("plan")),
+        ("fingerprint", Json::str(key.hex())),
+        ("checksum", Json::str(sum.hex())),
+        ("payload", payload),
+    ]);
+    std::fs::write(&path, envelope.to_string())?;
+
+    // 3. Warm-start with verification on: the entry must be rejected by
+    //    the gate (verify.rejected), not miscounted as corrupt — its
+    //    checksum is genuinely valid.
+    let service =
+        Arc::new(PlanService::new(ServeOptions { workers: 1, verify_plans: true, ..ServeOptions::default() }));
+    let snap = Snapshotter::attach(service.clone(), dir.clone(), PersistOptions::manual())?;
+    assert_eq!(snap.counters().skipped_corrupt(), 0, "checksum-valid entry must not count as corrupt");
+    assert_eq!(snap.counters().loaded(), 0, "rejected entry must not count as loaded");
+    let v = service.stats_json().get("verify")?.clone();
+    assert_eq!(v.get("checked")?.as_usize()?, 1);
+    assert_eq!(v.get("rejected")?.as_usize()?, 1);
+    assert!(v.get("findings")?.as_usize()? >= 1);
+
+    // 4. Served traffic is unaffected: the same request misses the cache,
+    //    re-solves cleanly, and passes the insertion-time gate.
+    let reply = service.plan(&graph, &cfg)?;
+    assert!(!reply.cached, "rejected snapshot must not warm the cache");
+    assert_eq!(service.stats().solves, 1);
+    let v = service.stats_json().get("verify")?.clone();
+    assert_eq!(v.get("checked")?.as_usize()?, 2, "the fresh solve is checked once at insertion");
+    assert_eq!(v.get("rejected")?.as_usize()?, 1);
+
+    drop(snap);
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
