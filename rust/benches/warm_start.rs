@@ -1,0 +1,224 @@
+//! Bench: restart-to-warm — per-entry JSON snapshots vs binary segments.
+//!
+//! The restart path is the whole point of persistence: a replica that
+//! crashes or redeploys must come back serving warm (zero solves, zero
+//! simulator runs) as fast as the disk allows. This harness populates a
+//! service with thousands of synthetic cache entries (a handful of real
+//! solved `stage-<seq>x<dim>x<hidden>` workloads, replicated under
+//! derived fingerprints with a spread of lane hints), snapshots the
+//! caches in both codecs, then measures the wall-clock of
+//! `Snapshotter::attach` against a fresh service — the restart-to-warm
+//! time — for each.
+//!
+//! The segmented codec wins on every axis the JSON-per-entry layout
+//! loses on: a few sequential file reads instead of thousands of
+//! open/read/close round trips, compact binary decode instead of JSON
+//! parsing, and the decode fanned out across the solver pool. The
+//! acceptance bar (asserted at full scale) is a >=5x restart-to-warm
+//! speedup at 10k entries.
+//!
+//! Writes the measured numbers to `BENCH_warm_start.json` and prints a
+//! greppable `warm_start:` summary line. `FTL_BENCH_SMOKE=1` shrinks
+//! the entry count so CI can execute the harness end-to-end.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ftl::config::DeployConfig;
+use ftl::serve::{resolve_workload, PersistOptions, PlanService, ServeOptions, SnapshotFormat, Snapshotter};
+use ftl::tiling::Strategy;
+use ftl::util::json::Json;
+
+/// `FTL_BENCH_SMOKE=1` shrinks the entry count so CI can execute the
+/// harness end-to-end without paying full bench time.
+fn smoke() -> bool {
+    std::env::var("FTL_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn bench_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ftl-warm-start-bench-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn dir_stats(dir: &Path) -> (usize, u64) {
+    let mut files = 0usize;
+    let mut bytes = 0u64;
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for entry in rd.flatten() {
+            if let Ok(meta) = entry.metadata() {
+                if meta.is_file() {
+                    files += 1;
+                    bytes += meta.len();
+                }
+            }
+        }
+    }
+    (files, bytes)
+}
+
+fn service(entries: usize) -> Arc<PlanService> {
+    // Capacity comfortably above the synthetic population so the load
+    // path never evicts — we are measuring I/O + decode, not LRU churn.
+    let cap = (entries * 2).max(1024);
+    Arc::new(PlanService::new(ServeOptions {
+        cache_capacity: cap,
+        sim_cache_capacity: cap,
+        cache_shards: 16,
+        workers: 1,
+        ..ServeOptions::default()
+    }))
+}
+
+/// One timed restart-to-warm round for `format`: populate, snapshot,
+/// then attach a cold service to the directory and time the attach.
+struct Round {
+    format: SnapshotFormat,
+    entries: usize,
+    flush: Duration,
+    load: Duration,
+    files: usize,
+    bytes: u64,
+}
+
+impl Round {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(self.format.name())),
+            ("entries", Json::Num(self.entries as f64)),
+            ("flush_ms", Json::Num(self.flush.as_secs_f64() * 1e3)),
+            ("load_ms", Json::Num(self.load.as_secs_f64() * 1e3)),
+            ("files", Json::Num(self.files as f64)),
+            ("bytes", Json::Num(self.bytes as f64)),
+        ])
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn run_round(
+    format: SnapshotFormat,
+    plans: &[(ftl::serve::Fingerprint, Arc<ftl::coordinator::Deployment>, u64)],
+    sims: &[(ftl::serve::Fingerprint, Arc<ftl::sim::SimReport>, u64)],
+    replicas: usize,
+) -> Round {
+    let dir = bench_dir(format.name());
+    let total = replicas * 2;
+
+    // Populate: each replica clones one solved plan and one sim report
+    // under a fresh derived fingerprint, with lane hints spread 0..100
+    // so the loader's heaviest-first ordering has real work to do.
+    let svc = service(total);
+    let opts = PersistOptions::manual().with_format(format);
+    let snap = Snapshotter::attach(svc.clone(), &dir, opts).unwrap();
+    for i in 0..replicas {
+        let hint = (i % 100) as u64;
+        let (pk, plan, _) = &plans[i % plans.len()];
+        let key = pk.derive(&format!("warm-start-bench-plan-{i}"));
+        assert!(svc.import_plan_hinted(key, plan.clone(), hint), "synthetic plan import must land");
+        let (sk, sim, _) = &sims[i % sims.len()];
+        svc.import_sim_hinted(sk.derive(&format!("warm-start-bench-sim-{i}")), sim.clone(), hint);
+    }
+    let flush_start = Instant::now();
+    let wrote = snap.flush();
+    let flush = flush_start.elapsed();
+    snap.shutdown();
+    assert_eq!(wrote, total, "every synthetic entry must reach disk");
+    let (files, bytes) = dir_stats(&dir);
+
+    // Restart: a cold service pointed at the populated directory.
+    // `attach` returns only after every entry is decoded and sitting
+    // in the caches — its wall-clock IS the restart-to-warm time.
+    let cold = service(total);
+    let load_start = Instant::now();
+    let warm_snap = Snapshotter::attach(cold.clone(), &dir, PersistOptions::manual().with_format(format)).unwrap();
+    let load = load_start.elapsed();
+    warm_snap.shutdown();
+
+    let stats = cold.stats();
+    assert_eq!(stats.cache.entries, replicas, "every plan entry must be warm after restart");
+    assert_eq!(stats.sim_cache.entries, replicas, "every sim entry must be warm after restart");
+    assert_eq!(stats.solves, 0, "warm start must not solve");
+    assert_eq!(stats.sims, 0, "warm start must not simulate");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Round { format, entries: total, flush, load, files, bytes }
+}
+
+fn main() {
+    let smoke = smoke();
+    // Full scale: 5k plan + 5k sim entries = the issue's 10k-entry bar.
+    let replicas = if smoke { 500 } else { 5000 };
+
+    // A handful of real solved workloads to replicate — distinct shapes
+    // so the payloads are not byte-identical.
+    let shapes = [
+        (16, 16, 32),
+        (16, 24, 48),
+        (24, 16, 64),
+        (32, 24, 48),
+        (16, 32, 32),
+        (24, 24, 96),
+        (32, 16, 48),
+        (48, 16, 32),
+    ];
+    let seed_svc = service(64);
+    let cfg = DeployConfig::preset("cluster-only", Strategy::Ftl).unwrap();
+    for (s, d, h) in shapes {
+        let graph = resolve_workload(&format!("stage-{s}x{d}x{h}")).unwrap();
+        seed_svc.deploy(&format!("stage-{s}x{d}x{h}"), &graph, &cfg).unwrap();
+    }
+    let plans = seed_svc.export_plans_hinted();
+    let sims = seed_svc.export_sims_hinted();
+    assert_eq!(plans.len(), shapes.len());
+    assert_eq!(sims.len(), shapes.len());
+
+    println!("=== restart-to-warm: JSON per-entry vs binary segments ({} entries) ===\n", replicas * 2);
+
+    let json = run_round(SnapshotFormat::Json, &plans, &sims, replicas);
+    let bin = run_round(SnapshotFormat::Bin, &plans, &sims, replicas);
+
+    for r in [&json, &bin] {
+        println!(
+            "{:<28} flush: {:>9.1?}   restart-to-warm: {:>9.1?}   ({} files, {:.1} MiB)",
+            format!("snapshot-format={}", r.format.name()),
+            r.flush,
+            r.load,
+            r.files,
+            r.bytes as f64 / (1024.0 * 1024.0)
+        );
+    }
+
+    let speedup = json.load.as_nanos() as f64 / bin.load.as_nanos().max(1) as f64;
+    let flush_speedup = json.flush.as_nanos() as f64 / bin.flush.as_nanos().max(1) as f64;
+    let compression = json.bytes as f64 / (bin.bytes as f64).max(1.0);
+    println!(
+        "\nwarm_start: entries={} json_load_ms={:.1} bin_load_ms={:.1} speedup={speedup:.1}x \
+         flush_speedup={flush_speedup:.1}x size_ratio={compression:.2}x",
+        json.entries,
+        json.load.as_secs_f64() * 1e3,
+        bin.load.as_secs_f64() * 1e3,
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("warm_start")),
+        ("smoke", Json::Bool(smoke)),
+        ("entries", Json::Num(json.entries as f64)),
+        ("json", json.to_json()),
+        ("bin", bin.to_json()),
+        ("load_speedup", Json::Num(speedup)),
+        ("flush_speedup", Json::Num(flush_speedup)),
+        ("size_ratio", Json::Num(compression)),
+    ]);
+    std::fs::write("BENCH_warm_start.json", format!("{}\n", out.pretty())).unwrap();
+    println!("wrote BENCH_warm_start.json");
+
+    // The acceptance bar only binds at full scale: smoke runs are too
+    // small (and CI machines too noisy) for a meaningful ratio.
+    if !smoke {
+        assert!(
+            speedup >= 5.0,
+            "segmented restart-to-warm must be >=5x faster than JSON at 10k entries (got {speedup:.1}x)"
+        );
+    }
+}

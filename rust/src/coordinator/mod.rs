@@ -24,6 +24,7 @@ use crate::runtime::{tile_key, HostTensor, KernelBackend, TileExecutor};
 use crate::schedule::{build_schedule, Schedule};
 use crate::sim::{simulate, simulate_with, SimReport};
 use crate::tiling::{assign_homes_with, fuse_groups, solve_graph_with, FusionGroup, FusionPolicy, TilingSolution};
+use crate::util::bincode::{BinReader, BinWriter};
 use crate::util::json::Json;
 
 /// A fully planned deployment (before simulation/execution).
@@ -144,6 +145,31 @@ impl Deployment {
             solution: TilingSolution::from_json(v.get("solution")?)?,
             schedule: crate::schedule::Schedule::from_json(v.get("schedule")?)?,
         })
+    }
+
+    /// Canonical binary encoding of the whole compiled plan — the
+    /// `ftl-bin-v1` counterpart of [`Deployment::to_json`], used by the
+    /// segment snapshot format ([`crate::serve::persist`]).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.seq(&self.groups, |w, g| w.usize_seq(&g.nodes));
+        w.seq(&self.homes, |w, h| w.opt(h.as_ref(), |w, l| w.str(l.name())));
+        self.solution.to_bin(w);
+        self.schedule.to_bin(w);
+    }
+
+    /// Decode the canonical binary encoding (inverse of
+    /// [`Deployment::to_bin`]).
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        let groups: Vec<FusionGroup> = r.seq(|r| Ok(FusionGroup { nodes: r.usize_seq()? }))?;
+        let homes: Vec<Option<Level>> = r.seq(|r| {
+            r.opt(|r| {
+                let name = r.str()?;
+                Level::parse(&name).ok_or_else(|| anyhow!("unknown memory level '{name}'"))
+            })
+        })?;
+        let solution = TilingSolution::from_bin(r)?;
+        let schedule = crate::schedule::Schedule::from_bin(r)?;
+        Ok(Self { groups, homes, solution, schedule })
     }
 
     /// Assemble the standard per-request report around an

@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::memory::Level;
+use crate::util::bincode::{BinReader, BinWriter};
 use crate::util::json::Json;
 
 use super::{DmaDirection, Transfer};
@@ -116,6 +117,43 @@ impl DmaStats {
             bytes_out: v.get("bytes_out")?.as_u64()?,
         })
     }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        level_map_to_bin(&self.transfers, w);
+        level_map_to_bin(&self.bytes, w);
+        level_map_to_bin(&self.busy_cycles, w);
+        w.u64(self.bytes_in);
+        w.u64(self.bytes_out);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        Ok(Self {
+            transfers: level_map_from_bin(r)?,
+            bytes: level_map_from_bin(r)?,
+            busy_cycles: level_map_from_bin(r)?,
+            bytes_in: r.u64()?,
+            bytes_out: r.u64()?,
+        })
+    }
+}
+
+fn level_map_to_bin(m: &BTreeMap<Level, u64>, w: &mut BinWriter) {
+    let entries: Vec<(Level, u64)> = m.iter().map(|(l, &v)| (*l, v)).collect();
+    w.seq(&entries, |w, (l, v)| {
+        w.str(l.name());
+        w.u64(*v);
+    });
+}
+
+fn level_map_from_bin(r: &mut BinReader) -> Result<BTreeMap<Level, u64>> {
+    let entries = r.seq(|r| {
+        let name = r.str()?;
+        let level = Level::parse(&name).ok_or_else(|| anyhow!("unknown memory level '{name}'"))?;
+        Ok((level, r.u64()?))
+    })?;
+    Ok(entries.into_iter().collect())
 }
 
 fn level_map_to_json(m: &BTreeMap<Level, u64>) -> Json {

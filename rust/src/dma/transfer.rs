@@ -5,6 +5,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::memory::Level;
+use crate::util::bincode::{BinReader, BinWriter};
 use crate::util::json::Json;
 
 /// Direction of a transfer between two adjacent levels.
@@ -96,6 +97,30 @@ impl Transfer {
             planes: v.get("planes")?.as_usize()?,
             rows: v.get("rows")?.as_usize()?,
             row_bytes: v.get("row_bytes")?.as_usize()?,
+        })
+    }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.str(self.from.name());
+        w.str(self.to.name());
+        w.usize(self.planes);
+        w.usize(self.rows);
+        w.usize(self.row_bytes);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        let level = |r: &mut BinReader| -> Result<Level> {
+            let name = r.str()?;
+            Level::parse(&name).ok_or_else(|| anyhow!("unknown memory level '{name}'"))
+        };
+        Ok(Self {
+            from: level(r)?,
+            to: level(r)?,
+            planes: r.usize()?,
+            rows: r.usize()?,
+            row_bytes: r.usize()?,
         })
     }
 }

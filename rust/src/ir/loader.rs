@@ -15,6 +15,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::util::bincode::{BinReader, BinWriter};
 use crate::util::json::{parse, Json};
 
 use super::{ActKind, DType, Graph, Node, Op, Tensor, TensorKind};
@@ -102,6 +103,74 @@ pub fn op_from_json(v: &Json) -> Result<Op> {
         },
         "requant" => Op::Requant,
         _ => bail!("unknown op '{name}'"),
+    })
+}
+
+// Binary operator tags (`ftl-bin-v1`). Append-only: new operators get new
+// tags; repurposing a released tag requires a format-string bump.
+const OP_GEMM: u8 = 0;
+const OP_ACT: u8 = 1;
+const OP_ADD: u8 = 2;
+const OP_LAYERNORM: u8 = 3;
+const OP_SOFTMAX: u8 = 4;
+const OP_TRANSPOSE: u8 = 5;
+const OP_CONV2D: u8 = 6;
+const OP_REQUANT: u8 = 7;
+
+/// Canonical binary encoding of one operator — the `ftl-bin-v1`
+/// counterpart of [`op_to_json`] (see [`crate::serve::persist`]).
+pub fn op_to_bin(op: &Op, w: &mut BinWriter) {
+    match op {
+        Op::Gemm { transpose_b, has_bias } => {
+            w.u8(OP_GEMM);
+            w.bool(*transpose_b);
+            w.bool(*has_bias);
+        }
+        Op::Act(k) => {
+            w.u8(OP_ACT);
+            w.str(k.name());
+        }
+        Op::Add => w.u8(OP_ADD),
+        Op::LayerNorm { eps } => {
+            w.u8(OP_LAYERNORM);
+            w.f32(*eps);
+        }
+        Op::Softmax => w.u8(OP_SOFTMAX),
+        Op::Transpose => w.u8(OP_TRANSPOSE),
+        Op::Conv2d { kh, kw, stride, pad } => {
+            w.u8(OP_CONV2D);
+            w.usize(*kh);
+            w.usize(*kw);
+            w.usize(*stride);
+            w.usize(*pad);
+        }
+        Op::Requant => w.u8(OP_REQUANT),
+    }
+}
+
+/// Decode the canonical binary operator encoding (inverse of
+/// [`op_to_bin`]).
+pub fn op_from_bin(r: &mut BinReader) -> Result<Op> {
+    Ok(match r.u8()? {
+        OP_GEMM => Op::Gemm { transpose_b: r.bool()?, has_bias: r.bool()? },
+        OP_ACT => {
+            let k = r.str()?;
+            let kind = match k.as_str() {
+                "gelu" => ActKind::Gelu,
+                "relu" => ActKind::Relu,
+                "sigmoid" => ActKind::Sigmoid,
+                "identity" => ActKind::Identity,
+                _ => bail!("unknown activation '{k}'"),
+            };
+            Op::Act(kind)
+        }
+        OP_ADD => Op::Add,
+        OP_LAYERNORM => Op::LayerNorm { eps: r.f32()? },
+        OP_SOFTMAX => Op::Softmax,
+        OP_TRANSPOSE => Op::Transpose,
+        OP_CONV2D => Op::Conv2d { kh: r.usize()?, kw: r.usize()?, stride: r.usize()?, pad: r.usize()? },
+        OP_REQUANT => Op::Requant,
+        t => bail!("unknown binary op tag {t}"),
     })
 }
 

@@ -18,6 +18,6 @@ mod tensor;
 pub use builder::GraphBuilder;
 pub use dtype::DType;
 pub use graph::{Graph, Node, NodeId, TensorId};
-pub use loader::{graph_from_file, graph_from_json, graph_to_json, op_from_json, op_to_json};
+pub use loader::{graph_from_file, graph_from_json, graph_to_json, op_from_bin, op_from_json, op_to_bin, op_to_json};
 pub use op::{ActKind, Op};
 pub use tensor::{Tensor, TensorKind};

@@ -6,7 +6,8 @@
 //!                [--queue-cap 256] [--batch-window-ms 2] [--max-batch 64] [--shed]
 //!                [--lane name:weight:cap[:shed|:block][:deadline-ms]]...  (repeatable WFQ lanes)
 //!                [--cache-dir DIR] [--snapshot-interval-ms 1000] [--cache-max-entries 0]
-//!                [--trace-cap 512] [--slowlog-ms 250] [--verify-plans] [--self-test]
+//!                [--snapshot-format bin|json] [--trace-cap 512] [--slowlog-ms 250]
+//!                [--verify-plans] [--self-test]
 //!                (line protocol, see PROTOCOL.md: DEPLOY | STATS | PING | METRICS | TRACE [n] |
 //!                SLOW [n], either bare (legacy v0, one JSON reply per line, in order) or framed
 //!                `FTL1 <id> <command...>` — multiplexed ids, streamed plan/sim/done events,
@@ -20,6 +21,9 @@
 //! CI compares across thread counts).
 //! ftl verify     [<workload>] [--soc siracusa --strategy ftl --double-buffer] [--json]
 //!                [--all | --mutate]   (static plan verification; nonzero exit on errors)
+//! ftl snapshot   compact|inspect --cache-dir DIR [--cache-max-entries 0] [--json]
+//!                (offline segment compaction / JSON→segment migration, or a read-only
+//!                breakdown of a snapshot directory)
 //! ftl fig3       [--seq 197 --dim 768 --hidden 3072] [--double-buffer]
 //! ftl dma        [--soc cluster-only]
 //! ftl emit-tiles --out artifacts/tiles.json
@@ -47,16 +51,17 @@ use ftl::runtime::{KernelBackend, NativeBackend, PjrtBackend};
 use ftl::serve::{
     checksum, handle_command, handle_line, normalize_specs, resolve_workload, AdmissionPolicy,
     BatchOptions, BatchScheduler, Frontend, FrontendOptions, LaneSpec, PersistOptions, PlanService,
-    ServeOptions, Snapshotter, TraceOptions,
+    ServeOptions, SnapshotFormat, Snapshotter, TraceOptions,
 };
 use ftl::tiling::Strategy;
 use ftl::util::json::Json;
 
 struct Args {
     cmd: String,
-    /// Bare (non-flag) tokens after the command. Only `verify` accepts
-    /// one (the workload name); every other command rejects them in
-    /// [`dispatch`], preserving the old strictness.
+    /// Bare (non-flag) tokens after the command. Only `verify` (the
+    /// workload name) and `snapshot` (the subcommand) accept one; every
+    /// other command rejects them in [`dispatch`], preserving the old
+    /// strictness.
     pos: Vec<String>,
     /// Flag values in arrival order — most flags use the last value,
     /// repeatable flags (`--lane`) consume all of them.
@@ -197,8 +202,13 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 /// the default lane), and a lane's trailing `deadline-ms` applies to
 /// every request in it that carries no deadline of its own;
 /// `--cache-dir` persists the plan + sim caches across restarts
-/// (write-behind every `--snapshot-interval-ms`, warm start on boot,
-/// `--cache-max-entries` caps the directory via an mtime-LRU sweep);
+/// (write-behind every `--snapshot-interval-ms`, lane-ordered warm
+/// start on boot; `--snapshot-format` picks the on-disk codec —
+/// `bin` (default) appends binary segment files, `json` keeps one
+/// envelope per entry; reads always accept both — and
+/// `--cache-max-entries` caps the directory: segment compaction
+/// keeping the heaviest lane hints under `bin`, an mtime-LRU sweep
+/// under `json`);
 /// `--trace-cap`/`--slowlog-ms` size the per-request trace journal and
 /// slowlog (`--trace-cap 0` disables tracing; `METRICS`, `TRACE [n]` and
 /// `SLOW [n]` expose the results over the protocol);
@@ -244,9 +254,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         trace,
     };
     let cache_dir = args.get_opt("cache-dir").map(str::to_string);
+    // `ftl serve` defaults to binary segments (restart-to-warm at memory
+    // speed); `--snapshot-format json` keeps writing per-entry
+    // envelopes. Reading is always format-agnostic, so either setting
+    // loads whatever the directory already holds.
+    let format_arg = args.get("snapshot-format", "bin");
+    let snapshot_format = SnapshotFormat::parse(format_arg)
+        .ok_or_else(|| anyhow!("--snapshot-format must be 'json' or 'bin', got '{format_arg}'"))?;
     let persist_opts = PersistOptions {
         interval: std::time::Duration::from_millis(args.get_usize("snapshot-interval-ms", 1000)? as u64),
         max_entries: args.get_usize("cache-max-entries", 0)?,
+        format: snapshot_format,
     };
     if args.has("self-test") {
         return match cache_dir {
@@ -787,6 +805,56 @@ fn cmd_verify_mutate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ftl snapshot compact|inspect --cache-dir DIR` — offline maintenance
+/// for a snapshot directory, running against the same codec the server
+/// uses. `compact` folds every segment **and** every legacy per-entry
+/// JSON envelope into one freshly fsync'd segment (migrating JSON dirs
+/// in place — source files are removed only after the new segment is
+/// durable), evicting the lightest-lane-hint entries beyond
+/// `--cache-max-entries` (0 = unbounded); `inspect` prints a JSON
+/// breakdown of segments, live/dead bytes and stray JSON entries
+/// without touching anything.
+fn cmd_snapshot(args: &Args) -> Result<()> {
+    let sub = args.pos.first().map(String::as_str).unwrap_or("");
+    if let Some(extra) = args.pos.get(1) {
+        bail!("unexpected argument '{extra}'");
+    }
+    let dir = PathBuf::from(
+        args.get_opt("cache-dir").ok_or_else(|| anyhow!("ftl snapshot {sub} needs --cache-dir DIR"))?,
+    );
+    ensure!(dir.is_dir(), "snapshot directory {} does not exist", dir.display());
+    match sub {
+        "compact" => {
+            let max_entries = args.get_usize("cache-max-entries", 0)?;
+            let report = ftl::serve::compact_dir(&dir, max_entries)?;
+            if args.has("json") {
+                println!("{}", report.to_json().pretty());
+            } else {
+                println!(
+                    "[ftl-snapshot] compacted {}: segments {} -> {} json_migrated={} live={} evicted={} \
+                     skipped_corrupt={} skipped_version={} bytes={}",
+                    dir.display(),
+                    report.segments_before,
+                    report.segments_after,
+                    report.json_migrated,
+                    report.live,
+                    report.evicted,
+                    report.skipped_corrupt,
+                    report.skipped_version,
+                    report.bytes
+                );
+            }
+            Ok(())
+        }
+        "inspect" => {
+            println!("{}", ftl::serve::inspect_dir(&dir)?.pretty());
+            Ok(())
+        }
+        "" => bail!("ftl snapshot needs a subcommand: 'compact' or 'inspect'"),
+        other => bail!("unknown snapshot subcommand '{other}' (expected 'compact' or 'inspect')"),
+    }
+}
+
 fn cmd_fig3(args: &Args) -> Result<()> {
     let seq = args.get_usize("seq", 197)?;
     let d = args.get_usize("dim", 768)?;
@@ -937,8 +1005,12 @@ COMMANDS:
                TRACE [n]/SLOW [n] line protocol,   [--batch-window-ms 2] [--max-batch 64] [--shed]
                bare v0 or multiplexed+streaming    [--lane name:weight:cap[:shed|:block][:deadline-ms]]...
                FTL1 framing — see PROTOCOL.md)     [--cache-dir DIR] [--snapshot-interval-ms 1000]
-                                                   [--cache-max-entries 0] [--trace-cap 512] (0 = tracing off)
+                                                   [--cache-max-entries 0] [--snapshot-format bin|json]
+                                                   [--trace-cap 512] (0 = tracing off)
                                                    [--slowlog-ms 250] [--verify-plans] [--self-test])
+  snapshot     snapshot-dir maintenance           (snapshot compact|inspect --cache-dir DIR
+               (compact segments + migrate JSON    [--cache-max-entries 0] [--json]; compaction keeps
+               entries in place, or inspect)       the heaviest lane hints when over the cap)
   verify       static plan verification           (verify [<workload>] [--soc --strategy --double-buffer]
                (arena overlap/align/capacity,      [--json] | verify --all | verify --mutate;
                DMA hazards, transfer bounds,       nonzero exit on any error-severity finding)
@@ -974,7 +1046,9 @@ fn apply_solver_threads(args: &Args) -> Result<()> {
 
 fn dispatch(args: &Args) -> Result<()> {
     apply_solver_threads(args)?;
-    if args.cmd != "verify" {
+    // `verify` takes a positional workload, `snapshot` a subcommand;
+    // every other command keeps the old strictness.
+    if args.cmd != "verify" && args.cmd != "snapshot" {
         if let Some(extra) = args.pos.first() {
             bail!("unexpected argument '{extra}'");
         }
@@ -982,6 +1056,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.cmd.as_str() {
         "deploy" => cmd_deploy(args),
         "serve" => cmd_serve(args),
+        "snapshot" => cmd_snapshot(args),
         "verify" => cmd_verify(args),
         "fig3" => cmd_fig3(args),
         "dma" => cmd_dma(args),

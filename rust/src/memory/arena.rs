@@ -10,6 +10,7 @@
 
 use anyhow::{anyhow, ensure, Result};
 
+use crate::util::bincode::{BinReader, BinWriter};
 use crate::util::json::Json;
 
 /// Role of a tile buffer inside L1.
@@ -180,6 +181,22 @@ impl ArenaPlan {
             double_buffered: v.get("double_buffered")?.as_bool()?,
         })
     }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.seq(&self.buffers, |w, b| b.to_bin(w));
+        w.seq(&self.offsets, |w, o| w.usize_seq(o));
+        w.usize(self.total);
+        w.bool(self.double_buffered);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        let buffers: Vec<TileBuffer> = r.seq(TileBuffer::from_bin)?;
+        let offsets: Vec<Vec<usize>> = r.seq(|r| r.usize_seq())?;
+        ensure!(offsets.len() == buffers.len(), "arena plan: offsets/buffers length mismatch");
+        Ok(Self { buffers, offsets, total: r.usize()?, double_buffered: r.bool()? })
+    }
 }
 
 impl TileBuffer {
@@ -199,6 +216,24 @@ impl TileBuffer {
             name: v.get("name")?.as_str()?.to_string(),
             role: BufferRole::parse(role).ok_or_else(|| anyhow!("unknown buffer role '{role}'"))?,
             bytes: v.get("bytes")?.as_usize()?,
+        })
+    }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.str(&self.name);
+        w.str(self.role.name());
+        w.usize(self.bytes);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        let name = r.str()?;
+        let role = r.str()?;
+        Ok(Self {
+            name,
+            role: BufferRole::parse(&role).ok_or_else(|| anyhow!("unknown buffer role '{role}'"))?,
+            bytes: r.usize()?,
         })
     }
 }

@@ -10,6 +10,7 @@ use crate::memory::{ArenaPlan, Level, TileBuffer};
 use crate::soc::{ComputeUnit, KernelCostModel, SocConfig};
 use crate::tiling::solver_dma_legs as dma_legs;
 use crate::tiling::{GroupSolution, TilingSolution};
+use crate::util::bincode::{BinReader, BinWriter};
 use crate::util::json::Json;
 
 /// One kernel invocation on a concrete tile.
@@ -106,6 +107,16 @@ impl Schedule {
     pub fn from_json(v: &Json) -> Result<Self> {
         Ok(Self { phases: v.get("phases")?.as_arr()?.iter().map(Phase::from_json).collect::<Result<_>>()? })
     }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.seq(&self.phases, |w, p| p.to_bin(w));
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        Ok(Self { phases: r.seq(Phase::from_bin)? })
+    }
 }
 
 impl Phase {
@@ -128,6 +139,24 @@ impl Phase {
             arena: ArenaPlan::from_json(v.get("arena")?)?,
         })
     }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.str(&self.name);
+        w.seq(&self.steps, |w, s| s.to_bin(w));
+        w.bool(self.double_buffered);
+        self.arena.to_bin(w);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        Ok(Self {
+            name: r.str()?,
+            steps: r.seq(TileStep::from_bin)?,
+            double_buffered: r.bool()?,
+            arena: ArenaPlan::from_bin(r)?,
+        })
+    }
 }
 
 impl TileStep {
@@ -146,6 +175,22 @@ impl TileStep {
             dma_in: v.get("dma_in")?.as_arr()?.iter().map(Transfer::from_json).collect::<Result<_>>()?,
             kernels: v.get("kernels")?.as_arr()?.iter().map(KernelInvocation::from_json).collect::<Result<_>>()?,
             dma_out: v.get("dma_out")?.as_arr()?.iter().map(Transfer::from_json).collect::<Result<_>>()?,
+        })
+    }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.seq(&self.dma_in, |w, t| t.to_bin(w));
+        w.seq(&self.kernels, |w, k| k.to_bin(w));
+        w.seq(&self.dma_out, |w, t| t.to_bin(w));
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        Ok(Self {
+            dma_in: r.seq(Transfer::from_bin)?,
+            kernels: r.seq(KernelInvocation::from_bin)?,
+            dma_out: r.seq(Transfer::from_bin)?,
         })
     }
 }
@@ -169,6 +214,26 @@ impl KernelInvocation {
             unit: ComputeUnit::parse(unit).ok_or_else(|| anyhow!("unknown compute unit '{unit}'"))?,
             cycles: v.get("cycles")?.as_u64()?,
             out_shape: v.get("out_shape")?.as_usize_arr()?,
+        })
+    }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.str(&self.name);
+        w.str(self.unit.name());
+        w.u64(self.cycles);
+        w.usize_seq(&self.out_shape);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        let name = r.str()?;
+        let unit = r.str()?;
+        Ok(Self {
+            name,
+            unit: ComputeUnit::parse(&unit).ok_or_else(|| anyhow!("unknown compute unit '{unit}'"))?,
+            cycles: r.u64()?,
+            out_shape: r.usize_seq()?,
         })
     }
 }

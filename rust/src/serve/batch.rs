@@ -511,6 +511,9 @@ impl BatchInner {
                 let cost = u64::from(!reply.cached) + u64::from(!reply.sim_cached);
                 self.counters[lane].served.add(1 + live.len() as u64);
                 self.charge(lane, cost);
+                // The freshly solved (or refreshed) entries now belong to
+                // this lane's warm-up priority class.
+                self.service.note_lane_hit(reply.fingerprint, self.specs[lane].weight);
                 for p in live {
                     // Fan-out waiters got their plan and simulation the
                     // instant the leader did.
@@ -769,6 +772,11 @@ impl BatchScheduler {
         // request takes. Warm hits collapse to the terminal frame: no
         // partial events are streamed.
         if let Some(result) = self.inner.service.deploy_if_warm(&workload, &graph, &config) {
+            // Tag the hit entries with this lane's weight so warm-start
+            // after a restart loads the heaviest lanes first.
+            if let Ok(reply) = &result {
+                self.inner.service.note_lane_hit(reply.fingerprint, self.inner.specs[lane].weight);
+            }
             complete(result.map(|reply| BatchOutcome::Served(Box::new(reply))));
             return trace_id;
         }

@@ -24,6 +24,11 @@ use super::fingerprint::Fingerprint;
 struct Entry<V> {
     value: V,
     last_used: u64,
+    /// Lane-weight hint: the WFQ weight of the lane that last hit this
+    /// entry (0 = never hit through a lane). Persisted with snapshots so
+    /// warm-start can load premium tenants' plans first — see
+    /// [`crate::serve::persist`].
+    hint: u64,
 }
 
 struct Shard<V> {
@@ -119,10 +124,13 @@ impl<V: Clone> LruCache<V> {
         }
         let tick = self.next_tick();
         let mut shard = self.shard(key).lock().expect("plan-cache shard poisoned");
+        // A refresh keeps the lane hint: re-solving a plan does not
+        // change who is hitting it.
+        let hint = shard.map.get(&key.0).map_or(0, |e| e.hint);
         // A refresh of an existing key is not an insert: `inserts -
         // evictions` must keep tracking `entries` or persisted-snapshot
         // accounting drifts.
-        if shard.map.insert(key.0, Entry { value, last_used: tick }).is_none() {
+        if shard.map.insert(key.0, Entry { value, last_used: tick, hint }).is_none() {
             self.inserts.inc();
         }
         while shard.map.len() > self.per_shard {
@@ -142,6 +150,25 @@ impl<V: Clone> LruCache<V> {
         self.shard(key).lock().expect("plan-cache shard poisoned").map.contains_key(&key.0)
     }
 
+    /// Raise the lane-weight hint of a cached entry (no-op on a miss;
+    /// no recency/counter side effects). Hints only ratchet upward so a
+    /// plan shared by a premium and a bulk lane keeps its premium
+    /// warm-up priority.
+    pub fn raise_hint(&self, key: Fingerprint, hint: u64) {
+        let mut shard = self.shard(key).lock().expect("plan-cache shard poisoned");
+        if let Some(e) = shard.map.get_mut(&key.0) {
+            e.hint = e.hint.max(hint);
+        }
+    }
+
+    /// [`Self::insert`] with an initial lane-weight hint — the snapshot
+    /// loader's import path (the hint from the segment index survives
+    /// the restart). An existing entry keeps the larger hint.
+    pub fn insert_hinted(&self, key: Fingerprint, value: V, hint: u64) {
+        self.insert(key, value);
+        self.raise_hint(key, hint);
+    }
+
     /// Snapshot every cached entry (no recency/counter side effects) —
     /// the export hook of the persistence layer ([`crate::serve::persist`]).
     /// Keys come out sorted so snapshot writes are deterministic.
@@ -155,6 +182,22 @@ impl<V: Clone> LruCache<V> {
             })
             .collect();
         entries.sort_by_key(|(k, _)| *k);
+        entries
+    }
+
+    /// [`Self::export`] including each entry's lane-weight hint — what
+    /// the snapshot writer persists into the segment index so warm-start
+    /// can order loads heaviest-lane-first.
+    pub fn export_hinted(&self) -> Vec<(Fingerprint, V, u64)> {
+        let mut entries: Vec<(Fingerprint, V, u64)> = self
+            .shards
+            .iter()
+            .flat_map(|s| {
+                let shard = s.lock().expect("plan-cache shard poisoned");
+                shard.map.iter().map(|(&k, e)| (Fingerprint(k), e.value.clone(), e.hint)).collect::<Vec<_>>()
+            })
+            .collect();
+        entries.sort_by_key(|(k, _, _)| *k);
         entries
     }
 
@@ -287,6 +330,22 @@ mod tests {
         assert_eq!(exported.iter().map(|&(_, v)| v).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
         let after = c.stats();
         assert_eq!((before.hits, before.misses, before.inserts), (after.hits, after.misses, after.inserts));
+    }
+
+    #[test]
+    fn lane_hints_ratchet_and_survive_refresh() {
+        let c: LruCache<u32> = LruCache::new(4, 1);
+        c.insert(key(1), 10);
+        c.raise_hint(key(1), 8);
+        c.raise_hint(key(1), 3); // lower hint must not clobber
+        c.raise_hint(key(9), 5); // miss: silently ignored
+        c.insert(key(1), 11); // refresh keeps the hint
+        c.insert_hinted(key(2), 20, 2);
+        let hinted = c.export_hinted();
+        assert_eq!(hinted.len(), 2);
+        assert_eq!(hinted.iter().map(|&(k, v, h)| (k.0, v, h)).collect::<Vec<_>>(), vec![(1, 11, 8), (2, 20, 2)]);
+        // Plain export is unchanged by hints.
+        assert_eq!(c.export().len(), 2);
     }
 
     #[test]

@@ -88,10 +88,15 @@
 //! [`PlanService`] at a snapshot directory (`ftl serve --cache-dir`),
 //! loads every valid entry back into the plan + sim caches before the
 //! first request, and write-behinds new entries in the background
-//! (`--snapshot-interval-ms`). The on-disk format is one self-validating
-//! JSON envelope per entry — a format-version tag
-//! ([`persist::SNAPSHOT_FORMAT`]) plus an FNV-1a/128 payload checksum —
-//! written atomically via tmp-file + rename. **Corruption policy:** a
+//! (`--snapshot-interval-ms`). Two on-disk codecs exist behind one
+//! loader ([`persist::SnapshotFormat`]): self-validating per-entry JSON
+//! envelopes ([`persist::SNAPSHOT_FORMAT`]) and batched binary
+//! **segment files** ([`segment`], `ftl serve` default) — `ftl-bin-v1`
+//! entries with per-entry FNV-1a/128 checksums and a footer index
+//! carrying lane-weight hints, so a restart is a few sequential reads
+//! decoded in parallel, heaviest lanes first. Reads always accept both
+//! (`ftl snapshot compact` migrates JSON dirs in place); all writes are
+//! atomic via tmp-file + fsync + rename. **Corruption policy:** a
 //! mangled entry is skipped and counted (`persist.skipped_corrupt`), an
 //! entry from another format version likewise (`persist.skipped_version`);
 //! neither is ever fatal, and the affected request simply re-solves. A
@@ -151,6 +156,7 @@ mod frontend;
 pub mod lanes;
 pub mod persist;
 pub mod proto;
+pub mod segment;
 mod service;
 mod singleflight;
 pub mod trace;
@@ -165,7 +171,10 @@ pub use cache::{LruCache, PlanCache, SimCache};
 pub use fingerprint::{checksum, fingerprint, soc_fingerprint, Fingerprint};
 pub use frontend::{Frontend, FrontendCounters, FrontendHandle, FrontendOptions};
 pub use lanes::{normalize_specs, DEFAULT_LANE, LaneSet, LaneSpec};
-pub use persist::{PersistCounters, PersistOptions, SNAPSHOT_FORMAT, Snapshotter};
+pub use persist::{
+    compact_dir, inspect_dir, CompactReport, PersistCounters, PersistOptions, SNAPSHOT_FORMAT, SnapshotFormat,
+    Snapshotter,
+};
 pub use service::{
     resolve_workload, AsyncReply, PlanOutcome, PlanService, ServeOptions, ServeReply, ServeStats,
 };

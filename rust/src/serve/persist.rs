@@ -11,7 +11,28 @@
 //! traffic — a previously-seen request is then served with **zero**
 //! branch-and-bound solves and **zero** simulator runs.
 //!
-//! # Snapshot format
+//! Two on-disk encodings exist behind one loader ([`SnapshotFormat`]):
+//! per-entry JSON envelopes (the original format, kept readable
+//! forever) and binary **segment files** ([`super::segment`]) — batched
+//! `ftl-bin-v1` entries with a footer index, which turn warm-start from
+//! ~10⁵ `open`+parse calls into a few sequential reads plus in-memory
+//! decodes fanned out across the [`crate::tiling::SolverPool`].
+//! Warm-start always reads *both* from the same directory, newest
+//! segment occurrence first; the configured format only selects what new
+//! flushes write.
+//!
+//! # Lane-ordered warm-start
+//!
+//! Every cache entry carries a lane-weight hint — the WFQ weight of the
+//! heaviest lane that ever hit it ([`PlanService::note_lane_hit`]) —
+//! persisted in the segment index. A restarted replica decodes and
+//! imports entries heaviest-hint-first, so premium tenants' plans are
+//! warm before best-effort traffic's, and entries beyond the cache
+//! capacity are never decoded at all (lightest hints are the ones left
+//! on disk). The hints ratchet and survive round trips, so the priority
+//! ordering compounds across restarts.
+//!
+//! # JSON snapshot format (`ftl-snapshot-v1`)
 //!
 //! One file per cache entry, named `plan-<fingerprint>.json` /
 //! `sim-<fingerprint>.json` (32 lowercase hex digits). Each file is a
@@ -61,20 +82,27 @@
 //!
 //! By default the directory grows with every distinct fingerprint.
 //! [`PersistOptions::max_entries`] (`ftl serve --cache-max-entries`)
-//! bounds it: each snapshot pass ends with an mtime-LRU sweep that
-//! removes the oldest entries beyond the cap (entries are immutable, so
-//! write time is the only recency signal on disk). Evictions are counted
-//! (`persist.evicted`), never re-written within the process, and only
-//! shrink the warm-start set a restart can load.
+//! bounds it, in the format's idiom. JSON: each snapshot pass ends with
+//! an mtime-LRU sweep that removes the oldest entry files beyond the cap
+//! (entries are immutable, so write time is the only recency signal on
+//! disk). Segments: the cap triggers a **compaction** ([`compact_dir`],
+//! also `ftl snapshot compact`) — the live set minus the
+//! lightest-lane-hint overflow is rewritten into one fresh segment and
+//! the sources are removed only after it fsyncs. Compaction doubles as
+//! the in-place JSON→segment migration. Either way evictions are
+//! counted (`persist.evicted`), never re-written within the process, and
+//! only shrink the warm-start set a restart can load.
 //!
 //! Counters surface in `stats_json` under `"persist"`: `loaded`,
 //! `skipped_corrupt`, `skipped_version`, `snapshots`, `entries_written`,
-//! `bytes_written`, `write_errors`, `evicted`, plus a `write_us`
-//! histogram of per-envelope write wall time.
+//! `bytes_written`, `write_errors`, `evicted`, `write_us`/`load_us`
+//! wall-time histograms, and the segment gauges `segments` /
+//! `live_bytes` / `dead_bytes`.
 
 #![forbid(unsafe_code)]
 
-use std::collections::HashSet;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -85,15 +113,51 @@ use anyhow::{Context, Result};
 use crate::coordinator::Deployment;
 use crate::metrics::{Counter, Histogram};
 use crate::sim::SimReport;
+use crate::util::bincode::{BinReader, BinWriter};
 use crate::util::json::{parse, Json};
 
 use super::fingerprint::{checksum, Fingerprint};
+use super::segment::{self, IndexEntry, SegmentEntry, SegmentError, SegmentView};
 use super::service::PlanService;
 
-/// Snapshot format version tag. Bump whenever the canonical encoding of
-/// any persisted type changes incompatibly — old entries are then
-/// skipped (counted as `skipped_version`) instead of mis-decoded.
+/// JSON snapshot format version tag (per-entry envelope files). Bump
+/// whenever the canonical encoding of any persisted type changes
+/// incompatibly — old entries are then skipped (counted as
+/// `skipped_version`) instead of mis-decoded. The binary segment format
+/// carries its own tag ([`segment::SEGMENT_FORMAT`]).
 pub const SNAPSHOT_FORMAT: &str = "ftl-snapshot-v1";
+
+/// On-disk snapshot encoding a [`Snapshotter`] *writes*. Reading is
+/// format-agnostic: warm-start always loads segment files **and**
+/// per-entry JSON envelopes from the same directory, so a JSON cache dir
+/// stays readable forever and `ftl snapshot compact` can migrate it to
+/// segments at leisure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotFormat {
+    /// One self-validating JSON envelope file per entry (`ftl-snapshot-v1`).
+    Json,
+    /// Batched binary segments with a footer index (`ftl-bin-v1`).
+    Bin,
+}
+
+impl SnapshotFormat {
+    /// CLI spelling (`--snapshot-format {json,bin}`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "json" => Some(Self::Json),
+            "bin" => Some(Self::Bin),
+            _ => None,
+        }
+    }
+
+    /// The canonical spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Json => "json",
+            Self::Bin => "bin",
+        }
+    }
+}
 
 /// Tunables for a [`Snapshotter`].
 #[derive(Debug, Clone, Copy)]
@@ -102,26 +166,38 @@ pub struct PersistOptions {
     /// background thread (snapshots then happen only on explicit
     /// [`Snapshotter::flush`] calls and at shutdown).
     pub interval: Duration,
-    /// Snapshot-directory size cap (`ftl serve --cache-max-entries`):
-    /// after each snapshot pass, if the directory holds more than this
-    /// many entries the oldest (by file mtime, ties by name) are removed
-    /// — an mtime-LRU sweep, counted as `persist.evicted`. `0` disables
-    /// garbage collection. Evicted entries are *not* re-written while
-    /// the process lives (entries are immutable; the cap bounds the
-    /// warm-start set a restart can load, nothing else).
+    /// Snapshot-directory size cap (`ftl serve --cache-max-entries`).
+    /// `0` disables garbage collection. In JSON mode each snapshot pass
+    /// ends with an mtime-LRU sweep removing the oldest entries beyond
+    /// the cap; in segment mode the cap triggers a **compaction** that
+    /// rewrites the live set minus the lightest-lane-hint entries
+    /// (lane-aware GC). Either way evictions are counted
+    /// (`persist.evicted`) and evicted entries are *not* re-written
+    /// while the process lives (entries are immutable; the cap bounds
+    /// the warm-start set a restart can load, nothing else).
     pub max_entries: usize,
+    /// Which encoding new snapshot writes use. Defaults to
+    /// [`SnapshotFormat::Json`] for library callers (existing dirs keep
+    /// their shape); `ftl serve` defaults to `bin` (restart-to-warm at
+    /// memory speed).
+    pub format: SnapshotFormat,
 }
 
 impl Default for PersistOptions {
     fn default() -> Self {
-        Self { interval: Duration::from_millis(1000), max_entries: 0 }
+        Self { interval: Duration::from_millis(1000), max_entries: 0, format: SnapshotFormat::Json }
     }
 }
 
 impl PersistOptions {
     /// Manual-flush-only options (no background thread).
     pub fn manual() -> Self {
-        Self { interval: Duration::ZERO, max_entries: 0 }
+        Self { interval: Duration::ZERO, ..Self::default() }
+    }
+
+    /// The same options with a different write format.
+    pub fn with_format(self, format: SnapshotFormat) -> Self {
+        Self { format, ..self }
     }
 }
 
@@ -141,6 +217,12 @@ pub struct PersistCounters {
     write_errors: Counter,
     evicted: Counter,
     write_us: Histogram,
+    load_us: Histogram,
+    /// Gauges (set, not accumulated): segment files on disk, live entry
+    /// bytes inside them, and bytes a compaction could reclaim.
+    segments: Counter,
+    live_bytes: Counter,
+    dead_bytes: Counter,
 }
 
 impl PersistCounters {
@@ -187,9 +269,33 @@ impl PersistCounters {
         self.evicted.get()
     }
 
-    /// Wall-time histogram of successful envelope writes, in µs.
+    /// Wall-time histogram of successful envelope/segment writes, in µs.
     pub fn write_us(&self) -> &Histogram {
         &self.write_us
+    }
+
+    /// Wall-time histogram of warm-start load passes, in µs (one sample
+    /// per attach — the restart-to-warm number the segment format buys
+    /// down).
+    pub fn load_us(&self) -> &Histogram {
+        &self.load_us
+    }
+
+    /// Segment files currently on disk (gauge; 0 when the directory is
+    /// JSON-only).
+    pub fn segments(&self) -> u64 {
+        self.segments.get()
+    }
+
+    /// Bytes of live (newest-occurrence) entries inside segments (gauge).
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes.get()
+    }
+
+    /// Segment bytes a compaction could reclaim — superseded duplicates,
+    /// torn tails and framing for dead entries (gauge).
+    pub fn dead_bytes(&self) -> u64 {
+        self.dead_bytes.get()
     }
 
     /// The `stats_json` rendering (`"persist": {...}`). `Json::Num`, not
@@ -207,6 +313,10 @@ impl PersistCounters {
             ("write_errors", n(self.write_errors())),
             ("evicted", n(self.evicted())),
             ("write_us", self.write_us.to_json()),
+            ("load_us", self.load_us.to_json()),
+            ("segments", n(self.segments())),
+            ("live_bytes", n(self.live_bytes())),
+            ("dead_bytes", n(self.dead_bytes())),
         ])
     }
 }
@@ -233,8 +343,14 @@ struct SnapInner {
     /// it does not mark the entry dirty again (that would make every
     /// pass re-write and re-evict the same overflow).
     written: Mutex<HashSet<(u8, u128)>>,
+    /// Entries believed live on disk (segment live set + JSON files),
+    /// maintained so segment-mode GC only pays for a compaction when the
+    /// cap is actually exceeded.
+    live_on_disk: Mutex<usize>,
     /// Directory size cap (0 = no GC) — see [`PersistOptions::max_entries`].
     max_entries: usize,
+    /// Encoding for new writes (reads are always format-agnostic).
+    format: SnapshotFormat,
     stop: Mutex<bool>,
     wake: Condvar,
 }
@@ -250,20 +366,22 @@ impl Snapshotter {
         let counters = Arc::new(PersistCounters::default());
         service.set_persist_counters(counters.clone());
         let mut written = HashSet::new();
-        load_dir(&service, &dir, &counters, &mut written)?;
+        let live_on_disk = load_dir(&service, &dir, &counters, &mut written)?;
         let inner = Arc::new(SnapInner {
             service,
             dir,
             counters,
             written: Mutex::new(written),
+            live_on_disk: Mutex::new(live_on_disk),
             max_entries: opts.max_entries,
+            format: opts.format,
             stop: Mutex::new(false),
             wake: Condvar::new(),
         });
         if opts.max_entries > 0 {
             // A restart may bring a smaller cap than the directory it
-            // inherits — sweep once up front.
-            inner.gc();
+            // inherits — sweep/compact once up front.
+            inner.enforce_cap();
         }
         let writer = if opts.interval.is_zero() {
             None
@@ -314,7 +432,11 @@ impl Snapshotter {
     }
 
     /// Stop the background thread and run a final flush so every cached
-    /// entry reaches disk (also runs on drop).
+    /// entry reaches disk (also runs on drop). The final flush is the
+    /// last chance an entry has to be persisted, so unlike a periodic
+    /// pass its failures are summarised loudly (they are also counted in
+    /// `persist.write_errors` like any other write failure) instead of
+    /// being silently swallowed by drop.
     pub fn shutdown(&self) {
         {
             let mut stopped = self.inner.stop.lock().expect("snapshotter stop flag poisoned");
@@ -324,7 +446,15 @@ impl Snapshotter {
         if let Some(handle) = self.writer.lock().expect("snapshotter writer poisoned").take() {
             handle.join().ok();
         }
+        let errors_before = self.inner.counters.write_errors();
         self.inner.flush();
+        let failed = self.inner.counters.write_errors().saturating_sub(errors_before);
+        if failed > 0 {
+            eprintln!(
+                "[ftl-serve] final snapshot flush hit {failed} write error(s); \
+                 some cache entries were NOT persisted (see persist.write_errors)"
+            );
+        }
     }
 }
 
@@ -335,14 +465,22 @@ impl Drop for Snapshotter {
 }
 
 impl SnapInner {
-    /// One write-behind pass: persist every cache entry not yet on disk.
-    /// Per-entry write failures are counted and retried next pass — one
-    /// unwritable entry must not starve the rest (mirror of the load
-    /// side's skip-and-count policy). The flush holds the `written` set
-    /// for its whole duration — only snapshotter threads touch it, and
-    /// there is at most one background thread, so this serialises
-    /// concurrent manual flushes.
+    /// One write-behind pass in the configured format. Write failures
+    /// are counted and retried next pass — a failed write must not
+    /// starve the rest (mirror of the load side's skip-and-count
+    /// policy).
     fn flush(&self) -> usize {
+        match self.format {
+            SnapshotFormat::Json => self.flush_json(),
+            SnapshotFormat::Bin => self.flush_bin(),
+        }
+    }
+
+    /// JSON pass: one envelope file per new cache entry. The flush holds
+    /// the `written` set for its whole duration — only snapshotter
+    /// threads touch it, and there is at most one background thread, so
+    /// this serialises concurrent manual flushes.
+    fn flush_json(&self) -> usize {
         let mut written = self.written.lock().expect("snapshotter written-set poisoned");
         let mut wrote = 0usize;
         let mut bytes = 0u64;
@@ -371,10 +509,105 @@ impl SnapInner {
         // (evicted keys are never re-written), so an idle server must not
         // re-scan it every interval; attach runs one unconditional sweep
         // to enforce a lowered cap over a pre-existing directory.
-        if self.max_entries > 0 && wrote > 0 {
-            self.gc();
+        if wrote > 0 {
+            *self.live_on_disk.lock().expect("snapshotter live count poisoned") += wrote;
+            if self.max_entries > 0 {
+                self.gc();
+            }
         }
         wrote
+    }
+
+    /// Segment pass: every new cache entry is encoded through the
+    /// `ftl-bin-v1` codec and the batch is sealed into **one** fresh
+    /// segment file (atomic tmp+fsync+rename). In steady state this is
+    /// a no-op with zero serialisation work, exactly like the JSON path.
+    fn flush_bin(&self) -> usize {
+        let mut written = self.written.lock().expect("snapshotter written-set poisoned");
+        let mut entries: Vec<SegmentEntry> = Vec::new();
+        for (key, plan, hint) in self.service.export_plans_hinted() {
+            if written.contains(&(KIND_PLAN, key.0)) {
+                continue;
+            }
+            let mut w = BinWriter::new();
+            plan.to_bin(&mut w);
+            entries.push(SegmentEntry { kind: KIND_PLAN, key, hint, payload: w.into_bytes() });
+        }
+        for (key, sim, hint) in self.service.export_sims_hinted() {
+            if written.contains(&(KIND_SIM, key.0)) {
+                continue;
+            }
+            let mut w = BinWriter::new();
+            sim.to_bin(&mut w);
+            entries.push(SegmentEntry { kind: KIND_SIM, key, hint, payload: w.into_bytes() });
+        }
+        let mut wrote = 0usize;
+        if !entries.is_empty() {
+            // Heaviest lanes first *inside* the segment too: a reader
+            // that lost the footer and recovers sequentially still sees
+            // premium entries before best-effort ones.
+            entries.sort_by_key(|e| (Reverse(e.hint), e.kind, e.key.0));
+            let write_start = Instant::now();
+            match segment::write_segment(&self.dir, &entries) {
+                Ok((_, bytes)) => {
+                    self.counters.write_us.record_duration(write_start.elapsed());
+                    for e in &entries {
+                        written.insert((e.kind, e.key.0));
+                    }
+                    wrote = entries.len();
+                    self.counters.bytes_written.add(bytes);
+                    self.counters.segments.add(1);
+                    self.counters.live_bytes.add(bytes);
+                    *self.live_on_disk.lock().expect("snapshotter live count poisoned") += wrote;
+                }
+                Err(e) => {
+                    // One failed segment = one error, however many
+                    // entries it carried; all of them stay dirty and are
+                    // retried next pass.
+                    self.counters.write_errors.inc();
+                    eprintln!("[ftl-serve] snapshot segment write failed ({} entries): {e:#}", entries.len());
+                }
+            }
+        }
+        self.counters.snapshots.inc();
+        self.counters.entries_written.add(wrote as u64);
+        if self.max_entries > 0 && wrote > 0 {
+            self.enforce_cap();
+        }
+        wrote
+    }
+
+    /// Apply the `max_entries` cap in the format's idiom: mtime-LRU file
+    /// sweep for JSON, lane-aware compaction for segments (only when the
+    /// live count actually exceeds the cap — compaction rewrites the
+    /// live set, so it must not run on every pass).
+    fn enforce_cap(&self) {
+        match self.format {
+            SnapshotFormat::Json => self.gc(),
+            SnapshotFormat::Bin => {
+                let live = *self.live_on_disk.lock().expect("snapshotter live count poisoned");
+                if live > self.max_entries {
+                    self.compact();
+                }
+            }
+        }
+    }
+
+    /// Segment-mode GC: rewrite the live set (minus the
+    /// lightest-lane-hint overflow) into one fresh segment and drop the
+    /// sources. Failures are logged and left for the next pass — the old
+    /// segments stay valid until the rewrite lands.
+    fn compact(&self) {
+        match compact_dir(&self.dir, self.max_entries) {
+            Ok(report) => {
+                self.counters.evicted.add(report.evicted as u64);
+                self.counters.segments.set(report.segments_after as u64);
+                self.counters.live_bytes.set(report.bytes);
+                self.counters.dead_bytes.set(0);
+                *self.live_on_disk.lock().expect("snapshotter live count poisoned") = report.live;
+            }
+            Err(e) => eprintln!("[ftl-serve] snapshot compaction failed: {e:#}"),
+        }
     }
 
     /// mtime-LRU sweep: when the directory holds more than `max_entries`
@@ -470,14 +703,134 @@ enum Skip {
     Corrupt,
 }
 
-/// Scan `dir` and import every valid entry into the service's caches.
-/// Per-entry failures are counted, never propagated.
+/// Newest-occurrence live set across a directory's segments.
+type SegLive = HashMap<(u8, u128), (Arc<SegmentView>, IndexEntry)>;
+
+/// One unit of warm-start decode work, shipped to a [`SolverPool`]
+/// worker.
+enum Work {
+    /// A live segment entry (shared view + its index record).
+    Seg { view: Arc<SegmentView>, ie: IndexEntry },
+    /// A legacy per-entry JSON envelope file.
+    Json { path: PathBuf },
+}
+
+/// A decoded unit of warm-start work, imported sequentially in lane
+/// order.
+enum DecodeOut {
+    Plan(Fingerprint, u64, Deployment),
+    Sim(Fingerprint, u64, SimReport),
+    SkipVersion,
+    SkipCorrupt,
+}
+
+/// `(kind, fingerprint)` from a well-formed envelope file name
+/// (`plan-<32 hex>.json`) — used to dedup JSON files against the
+/// segment live set *without* reading them. `None` for nonstandard
+/// names, which still load under whatever fingerprint their content
+/// declares (the envelope, not the name, is authoritative).
+fn parse_entry_name(name: &str) -> Option<(u8, u128)> {
+    let rest = name.strip_suffix(".json")?;
+    let (kind, hex) = if let Some(h) = rest.strip_prefix("plan-") {
+        (KIND_PLAN, h)
+    } else if let Some(h) = rest.strip_prefix("sim-") {
+        (KIND_SIM, h)
+    } else {
+        return None;
+    };
+    u128::from_str_radix(hex, 16).ok().map(|v| (kind, v))
+}
+
+/// Decode one unit of warm-start work (runs on a solver-pool worker).
+fn decode_work(work: Work) -> DecodeOut {
+    match work {
+        Work::Seg { view, ie } => match segment::decode_entry(&view.data, &ie) {
+            Ok(payload) => decode_bin_payload(ie.kind, ie.key, ie.hint, payload),
+            Err(_) => DecodeOut::SkipCorrupt,
+        },
+        Work::Json { path } => match load_entry(&path) {
+            Ok(Loaded::Plan(key, plan)) => DecodeOut::Plan(key, 0, plan),
+            Ok(Loaded::Sim(key, sim)) => DecodeOut::Sim(key, 0, sim),
+            Err(Skip::Version) => DecodeOut::SkipVersion,
+            Err(Skip::Corrupt) => DecodeOut::SkipCorrupt,
+        },
+    }
+}
+
+/// Strictly decode a checksum-validated `ftl-bin-v1` payload (trailing
+/// bytes are corruption, same policy as the JSON envelope).
+fn decode_bin_payload(kind: u8, key: Fingerprint, hint: u64, payload: &[u8]) -> DecodeOut {
+    let mut r = BinReader::new(payload);
+    match kind {
+        KIND_PLAN => match Deployment::from_bin(&mut r) {
+            Ok(plan) if r.is_done() => DecodeOut::Plan(key, hint, plan),
+            _ => DecodeOut::SkipCorrupt,
+        },
+        KIND_SIM => match SimReport::from_bin(&mut r) {
+            Ok(sim) if r.is_done() => DecodeOut::Sim(key, hint, sim),
+            _ => DecodeOut::SkipCorrupt,
+        },
+        _ => DecodeOut::SkipCorrupt,
+    }
+}
+
+/// Warm-start `service` from everything `dir` holds — segment files
+/// *and* legacy per-entry JSON envelopes — and return the number of
+/// entries believed live on disk. Per-entry failures are counted, never
+/// propagated.
+///
+/// The load is structured for restart-to-warm speed:
+///
+/// 1. **Sequential reads.** Each segment is read front-to-back once;
+///    its footer index locates every entry without touching payloads.
+/// 2. **Dedup before decode.** Newest segment occurrence wins per
+///    `(kind, fingerprint)`; JSON files already covered by a segment
+///    are skipped by *name*, unread.
+/// 3. **Lane order.** Work is sorted heaviest-lane-hint first, so the
+///    entries premium lanes hit go warm first, and truncated to the
+///    cache capacities (an entry the LRU would immediately evict is not
+///    worth decoding — it stays on disk, unloaded and unmarked).
+/// 4. **Parallel decode.** Payload decoding — the dominant cost — fans
+///    out across the global [`crate::tiling::SolverPool`]; imports then
+///    run sequentially in lane order.
 fn load_dir(
     service: &PlanService,
     dir: &Path,
     counters: &PersistCounters,
     written: &mut HashSet<(u8, u128)>,
-) -> Result<()> {
+) -> Result<usize> {
+    let load_start = Instant::now();
+
+    // ---- segments: sequential read + footer index, newest wins.
+    let mut seg_live: SegLive = HashMap::new();
+    let mut seg_count = 0usize;
+    let mut total_bytes = 0u64;
+    for path in segment::segment_paths(dir) {
+        seg_count += 1;
+        match segment::read_segment(&path) {
+            Ok(view) => {
+                total_bytes += view.data.len() as u64;
+                if view.torn_tail {
+                    // The undecodable tail of a truncated segment is one
+                    // counted skip; everything before the tear loads.
+                    counters.skipped_corrupt.inc();
+                }
+                let view = Arc::new(view);
+                for ie in &view.entries {
+                    seg_live.insert((ie.kind, ie.key.0), (view.clone(), *ie));
+                }
+            }
+            Err(SegmentError::Version) => counters.skipped_version.inc(),
+            Err(SegmentError::Corrupt) => counters.skipped_corrupt.inc(),
+        }
+    }
+    let live_bytes: u64 = seg_live.values().map(|(_, ie)| ie.len as u64).sum();
+    counters.segments.set(seg_count as u64);
+    counters.live_bytes.set(live_bytes);
+    counters.dead_bytes.set(total_bytes.saturating_sub(live_bytes));
+
+    // ---- JSON envelopes (the format-compat path) + stale-tmp reaping.
+    let mut items: Vec<(u8, u128, u64, Work)> = Vec::new();
     let entries = std::fs::read_dir(dir).with_context(|| format!("reading snapshot directory {}", dir.display()))?;
     for entry in entries {
         let Ok(entry) = entry else { continue };
@@ -498,36 +851,73 @@ fn load_dir(
             }
             continue;
         }
-        // Final entries only.
+        // Final JSON entries only (segments were listed above).
         if !name.ends_with(".json") || !(name.starts_with("plan-") || name.starts_with("sim-")) {
             continue;
         }
-        match load_entry(&path) {
-            Ok(Loaded::Plan(key, plan)) => {
+        let named = parse_entry_name(name);
+        if let Some(key) = named {
+            // Entries are immutable per fingerprint: a JSON file already
+            // covered by a segment is the same entry — skip it unread.
+            if seg_live.contains_key(&key) {
+                continue;
+            }
+        }
+        let kind = if name.starts_with("plan-") { KIND_PLAN } else { KIND_SIM };
+        let key = named.map_or(0, |(_, k)| k);
+        items.push((kind, key, 0, Work::Json { path }));
+    }
+    let json_files = items.len();
+
+    for (&(kind, key), (view, ie)) in &seg_live {
+        items.push((kind, key, ie.hint, Work::Seg { view: view.clone(), ie: *ie }));
+    }
+
+    // ---- lane order + capacity cut.
+    items.sort_by_key(|&(kind, key, hint, _)| (Reverse(hint), kind, key));
+    let cap = |c: usize| if c == 0 { usize::MAX } else { c };
+    let (plan_cap, sim_cap) = { (cap(service.stats().cache.capacity), cap(service.stats().sim_cache.capacity)) };
+    let (mut plans_kept, mut sims_kept) = (0usize, 0usize);
+    let work: Vec<Work> = items
+        .into_iter()
+        .filter_map(|(kind, _, _, work)| {
+            let kept = if kind == KIND_PLAN { &mut plans_kept } else { &mut sims_kept };
+            let limit = if kind == KIND_PLAN { plan_cap } else { sim_cap };
+            if *kept >= limit {
+                return None;
+            }
+            *kept += 1;
+            Some(work)
+        })
+        .collect();
+
+    // ---- parallel decode, sequential lane-ordered import.
+    let pool = crate::tiling::SolverPool::global();
+    let decoded = if work.is_empty() { Vec::new() } else { pool.map(work, decode_work) };
+    for out in decoded {
+        match out {
+            DecodeOut::Plan(key, hint, plan) => {
                 // Under `--verify-plans` the service may refuse the entry
                 // (error-severity findings, `verify.rejected`). A refused
                 // entry is neither loaded nor marked written — it is not
                 // in the cache, so flush passes have nothing to re-export
                 // for it and the file is simply left to the size-cap GC.
-                if service.import_plan(key, Arc::new(plan)) {
+                if service.import_plan_hinted(key, Arc::new(plan), hint) {
                     written.insert((KIND_PLAN, key.0));
                     counters.loaded.inc();
                 }
             }
-            Ok(Loaded::Sim(key, sim)) => {
-                service.import_sim(key, Arc::new(sim));
+            DecodeOut::Sim(key, hint, sim) => {
+                service.import_sim_hinted(key, Arc::new(sim), hint);
                 written.insert((KIND_SIM, key.0));
                 counters.loaded.inc();
             }
-            Err(Skip::Version) => {
-                counters.skipped_version.inc();
-            }
-            Err(Skip::Corrupt) => {
-                counters.skipped_corrupt.inc();
-            }
+            DecodeOut::SkipVersion => counters.skipped_version.inc(),
+            DecodeOut::SkipCorrupt => counters.skipped_corrupt.inc(),
         }
     }
-    Ok(())
+    counters.load_us.record_duration(load_start.elapsed());
+    Ok(seg_live.len() + json_files)
 }
 
 /// Validate and decode one envelope file.
@@ -555,6 +945,213 @@ fn load_entry(path: &Path) -> std::result::Result<Loaded, Skip> {
         "sim" => Ok(Loaded::Sim(key, SimReport::from_json(payload).map_err(|_| Skip::Corrupt)?)),
         _ => Err(Skip::Corrupt),
     }
+}
+
+/// What [`compact_dir`] did (also the payload of `ftl snapshot compact`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompactReport {
+    /// Segment files before the rewrite.
+    pub segments_before: usize,
+    /// Segment files after (1, or 0 when nothing was live).
+    pub segments_after: usize,
+    /// Per-entry JSON envelopes migrated into the new segment (their
+    /// files are removed once the segment is durable).
+    pub json_migrated: usize,
+    /// Live entries written to the new segment.
+    pub live: usize,
+    /// Live entries dropped to satisfy the cap (lightest lane hints
+    /// first).
+    pub evicted: usize,
+    /// Unreadable entries/files encountered (left in place when they
+    /// are whole files; torn segment tails are unrecoverable).
+    pub skipped_corrupt: usize,
+    /// Files carrying a different codec version (left in place).
+    pub skipped_version: usize,
+    /// Size of the new segment in bytes.
+    pub bytes: u64,
+}
+
+impl CompactReport {
+    /// JSON rendering (`ftl snapshot compact --json`).
+    pub fn to_json(&self) -> Json {
+        let n = |v: usize| Json::Num(v as f64);
+        Json::obj(vec![
+            ("segments_before", n(self.segments_before)),
+            ("segments_after", n(self.segments_after)),
+            ("json_migrated", n(self.json_migrated)),
+            ("live", n(self.live)),
+            ("evicted", n(self.evicted)),
+            ("skipped_corrupt", n(self.skipped_corrupt)),
+            ("skipped_version", n(self.skipped_version)),
+            ("bytes", Json::Num(self.bytes as f64)),
+        ])
+    }
+}
+
+/// Compact a snapshot directory: fold every live entry — newest segment
+/// occurrence per `(kind, fingerprint)`, plus every legacy JSON envelope
+/// — into **one** fresh segment, then remove the sources. This is both
+/// the segment format's GC (`max_entries > 0` evicts the
+/// lightest-lane-hint overflow — lane-aware, where the JSON sweep was
+/// mtime-LRU) and the in-place JSON→segment migration behind
+/// `ftl snapshot compact` (`max_entries == 0` migrates without
+/// evicting).
+///
+/// Durability contract: the new segment is fsync'd before any source
+/// file is removed, and sources are removed only when they were fully
+/// ingested — a version-mismatched or unreadable file is left in place
+/// for the operator. Safe to re-run; idempotent once the directory is a
+/// single segment.
+pub fn compact_dir(dir: &Path, max_entries: usize) -> Result<CompactReport> {
+    let seg_paths = segment::segment_paths(dir);
+    let mut report = CompactReport { segments_before: seg_paths.len(), ..CompactReport::default() };
+    // (hint, payload) per key; BTreeMap so eviction and output order are
+    // deterministic.
+    let mut live: BTreeMap<(u8, u128), (u64, Vec<u8>)> = BTreeMap::new();
+    let mut ingested: Vec<PathBuf> = Vec::new();
+    for path in seg_paths {
+        match segment::read_segment(&path) {
+            Ok(view) => {
+                if view.torn_tail {
+                    report.skipped_corrupt += 1;
+                }
+                for ie in &view.entries {
+                    match segment::decode_entry(&view.data, ie) {
+                        Ok(payload) => {
+                            let slot = live.entry((ie.kind, ie.key.0)).or_default();
+                            // Hints only ratchet; the payload is
+                            // immutable per key, so newest-wins is a
+                            // formality.
+                            slot.0 = slot.0.max(ie.hint);
+                            slot.1 = payload.to_vec();
+                        }
+                        Err(_) => report.skipped_corrupt += 1,
+                    }
+                }
+                ingested.push(path);
+            }
+            Err(SegmentError::Version) => report.skipped_version += 1,
+            Err(SegmentError::Corrupt) => report.skipped_corrupt += 1,
+        }
+    }
+    // Legacy JSON envelopes: decode, re-encode through the binary codec.
+    let entries = std::fs::read_dir(dir).with_context(|| format!("reading snapshot directory {}", dir.display()))?;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if name.contains(".tmp-")
+            || !name.ends_with(".json")
+            || !(name.starts_with("plan-") || name.starts_with("sim-"))
+        {
+            continue;
+        }
+        let (kind, key, payload) = match load_entry(&path) {
+            Ok(Loaded::Plan(key, plan)) => {
+                let mut w = BinWriter::new();
+                plan.to_bin(&mut w);
+                (KIND_PLAN, key, w.into_bytes())
+            }
+            Ok(Loaded::Sim(key, sim)) => {
+                let mut w = BinWriter::new();
+                sim.to_bin(&mut w);
+                (KIND_SIM, key, w.into_bytes())
+            }
+            Err(Skip::Version) => {
+                report.skipped_version += 1;
+                continue;
+            }
+            Err(Skip::Corrupt) => {
+                report.skipped_corrupt += 1;
+                continue;
+            }
+        };
+        // A segment copy of the same key is the same immutable entry —
+        // the file is migrated (removable) either way.
+        live.entry((kind, key.0)).or_insert((0, payload));
+        report.json_migrated += 1;
+        ingested.push(path);
+    }
+    // Cap: evict the lightest lane hints first (ties by key, so the
+    // sweep is deterministic).
+    if max_entries > 0 && live.len() > max_entries {
+        let mut order: Vec<(u64, (u8, u128))> = live.iter().map(|(&k, &(hint, _))| (hint, k)).collect();
+        order.sort_unstable();
+        let excess = live.len() - max_entries;
+        for (_, k) in order.into_iter().take(excess) {
+            live.remove(&k);
+            report.evicted += 1;
+        }
+    }
+    report.live = live.len();
+    if !live.is_empty() {
+        let mut out: Vec<SegmentEntry> = live
+            .into_iter()
+            .map(|((kind, key), (hint, payload))| SegmentEntry { kind, key: Fingerprint(key), hint, payload })
+            .collect();
+        out.sort_by_key(|e| (Reverse(e.hint), e.kind, e.key.0));
+        let (_, bytes) = segment::write_segment(dir, &out)?;
+        report.bytes = bytes;
+        report.segments_after = 1;
+    }
+    // The new segment is fsync'd and renamed — only now do the sources
+    // go away (best-effort; a leftover is re-ingested next time).
+    for path in ingested {
+        let _ = std::fs::remove_file(&path);
+    }
+    Ok(report)
+}
+
+/// Summarise a snapshot directory without touching the caches
+/// (`ftl snapshot inspect`): per-segment entry counts and health, the
+/// deduped live set, and how many legacy JSON envelopes remain.
+pub fn inspect_dir(dir: &Path) -> Result<Json> {
+    let mut seg_rows: Vec<Json> = Vec::new();
+    let mut live: HashMap<(u8, u128), usize> = HashMap::new();
+    let mut total_bytes = 0u64;
+    for path in segment::segment_paths(dir) {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("?").to_string();
+        let row = match segment::read_segment(&path) {
+            Ok(view) => {
+                total_bytes += view.data.len() as u64;
+                let plans = view.entries.iter().filter(|e| e.kind == KIND_PLAN).count();
+                for ie in &view.entries {
+                    *live.entry((ie.kind, ie.key.0)).or_insert(0) = ie.len;
+                }
+                Json::obj(vec![
+                    ("file", Json::str(name)),
+                    ("bytes", Json::Num(view.data.len() as f64)),
+                    ("entries", Json::Num(view.entries.len() as f64)),
+                    ("plans", Json::Num(plans as f64)),
+                    ("sims", Json::Num((view.entries.len() - plans) as f64)),
+                    ("recovered", Json::Bool(view.recovered)),
+                    ("torn_tail", Json::Bool(view.torn_tail)),
+                ])
+            }
+            Err(e) => Json::obj(vec![
+                ("file", Json::str(name)),
+                ("error", Json::str(if e == SegmentError::Version { "version" } else { "corrupt" })),
+            ]),
+        };
+        seg_rows.push(row);
+    }
+    let live_bytes: u64 = live.values().map(|&len| len as u64).sum();
+    let json_files = std::fs::read_dir(dir)
+        .with_context(|| format!("reading snapshot directory {}", dir.display()))?
+        .flatten()
+        .filter(|e| {
+            e.file_name().to_str().is_some_and(|n| {
+                !n.contains(".tmp-") && n.ends_with(".json") && (n.starts_with("plan-") || n.starts_with("sim-"))
+            })
+        })
+        .count();
+    Ok(Json::obj(vec![
+        ("dir", Json::str(dir.display().to_string())),
+        ("segments", Json::Arr(seg_rows)),
+        ("live_entries", Json::Num(live.len() as f64)),
+        ("live_bytes", Json::Num(live_bytes as f64)),
+        ("dead_bytes", Json::Num(total_bytes.saturating_sub(live_bytes) as f64)),
+        ("json_entries", Json::Num(json_files as f64)),
+    ]))
 }
 
 #[cfg(test)]
@@ -620,7 +1217,7 @@ mod tests {
         let snap = Snapshotter::attach(
             service,
             dir.clone(),
-            PersistOptions { interval: Duration::ZERO, max_entries: 2 },
+            PersistOptions { interval: Duration::ZERO, max_entries: 2, format: SnapshotFormat::Json },
         )
         .unwrap();
         assert_eq!(snap.flush(), 5, "all five entries written before the sweep");
@@ -652,5 +1249,205 @@ mod tests {
             .collect();
         assert!(leftovers.is_empty(), "atomic write must leave no tmp files");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // ------------------------------------------------- segment snapshots
+
+    fn tiny_service() -> Arc<PlanService> {
+        use crate::serve::{PlanService, ServeOptions};
+        Arc::new(PlanService::new(ServeOptions {
+            cache_capacity: 64,
+            sim_cache_capacity: 64,
+            cache_shards: 1,
+            workers: 1,
+            ..ServeOptions::default()
+        }))
+    }
+
+    fn bin_opts() -> PersistOptions {
+        PersistOptions::manual().with_format(SnapshotFormat::Bin)
+    }
+
+    #[test]
+    fn snapshot_format_parses_cli_spellings() {
+        assert_eq!(SnapshotFormat::parse("json"), Some(SnapshotFormat::Json));
+        assert_eq!(SnapshotFormat::parse("bin"), Some(SnapshotFormat::Bin));
+        assert_eq!(SnapshotFormat::parse("yaml"), None);
+        assert_eq!(SnapshotFormat::Bin.name(), "bin");
+    }
+
+    #[test]
+    fn segment_snapshots_round_trip_with_lane_hints() {
+        let dir = tmp_dir("bin-roundtrip");
+        {
+            let svc = tiny_service();
+            let snap = Snapshotter::attach(svc.clone(), dir.clone(), bin_opts()).unwrap();
+            svc.import_sim_hinted(Fingerprint(0xA), Arc::new(tiny_sim()), 7);
+            svc.import_sim_hinted(Fingerprint(0xB), Arc::new(tiny_sim()), 2);
+            assert_eq!(snap.flush(), 2);
+            assert_eq!(snap.counters().write_errors(), 0);
+            assert_eq!(snap.counters().segments(), 1, "one flush seals one segment");
+            assert!(snap.counters().live_bytes() > 0);
+            assert_eq!(snap.flush(), 0, "immutable entries are not rewritten");
+            assert_eq!(snap.counters().segments(), 1, "a no-op pass must not seal an empty segment");
+        }
+        assert_eq!(segment::segment_paths(&dir).len(), 1);
+        let svc = tiny_service();
+        let snap = Snapshotter::attach(svc.clone(), dir.clone(), bin_opts()).unwrap();
+        assert_eq!(snap.counters().loaded(), 2, "restart must load both segment entries");
+        assert_eq!(snap.counters().skipped_corrupt(), 0);
+        assert!(snap.counters().load_us().count() >= 1, "warm-start pass must record load_us");
+        let hints: Vec<(Fingerprint, u64)> =
+            svc.export_sims_hinted().into_iter().map(|(k, _, h)| (k, h)).collect();
+        assert!(hints.contains(&(Fingerprint(0xA), 7)), "lane hints must survive the round trip: {hints:?}");
+        assert!(hints.contains(&(Fingerprint(0xB), 2)));
+        assert_eq!(snap.flush(), 0, "loaded entries are already on disk");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn json_entries_load_alongside_segments() {
+        let dir = tmp_dir("mixed");
+        {
+            // JSON era.
+            let svc = tiny_service();
+            let snap = Snapshotter::attach(svc.clone(), dir.clone(), PersistOptions::manual()).unwrap();
+            svc.import_sim(Fingerprint(1), Arc::new(tiny_sim()));
+            assert_eq!(snap.flush(), 1);
+        }
+        {
+            // Segment era: the JSON entry loads, only the new key is
+            // written — into a segment.
+            let svc = tiny_service();
+            let snap = Snapshotter::attach(svc.clone(), dir.clone(), bin_opts()).unwrap();
+            assert_eq!(snap.counters().loaded(), 1);
+            svc.import_sim(Fingerprint(2), Arc::new(tiny_sim()));
+            assert_eq!(snap.flush(), 1);
+        }
+        assert_eq!(segment::segment_paths(&dir).len(), 1);
+        let svc = tiny_service();
+        let snap = Snapshotter::attach(svc.clone(), dir.clone(), bin_opts()).unwrap();
+        assert_eq!(snap.counters().loaded(), 2, "segment + legacy JSON entries must both load");
+        assert_eq!(snap.counters().skipped_corrupt(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_segment_loads_the_prefix_and_counts_the_tail() {
+        let dir = tmp_dir("bin-torn");
+        {
+            let svc = tiny_service();
+            let snap = Snapshotter::attach(svc.clone(), dir.clone(), bin_opts()).unwrap();
+            for k in 0..6u64 {
+                // Descending hints by key, so the segment's lane order
+                // (heaviest first) is keys 0,1,2,...
+                svc.import_sim_hinted(Fingerprint(u128::from(k)), Arc::new(tiny_sim()), 6 - k);
+            }
+            assert_eq!(snap.flush(), 6);
+        }
+        let path = segment::segment_paths(&dir).pop().unwrap();
+        let view = segment::read_segment(&path).unwrap();
+        assert_eq!(view.entries.len(), 6);
+        // Truncate inside the fourth entry: three entries survive.
+        let cut = view.entries[3];
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..cut.offset + cut.len / 2]).unwrap();
+        let svc = tiny_service();
+        let snap = Snapshotter::attach(svc.clone(), dir.clone(), bin_opts()).unwrap();
+        assert_eq!(snap.counters().loaded(), 3, "entries before the tear must load");
+        assert_eq!(snap.counters().skipped_corrupt(), 1, "the lost tail is one counted skip");
+        let keys: Vec<u128> = svc.export_sims_hinted().into_iter().map(|(k, _, _)| k.0).collect();
+        for k in 0..3u128 {
+            assert!(keys.contains(&k), "heaviest-hint prefix must survive, missing {k}: {keys:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segment_cap_compacts_lightest_hints_first() {
+        let dir = tmp_dir("bin-cap");
+        {
+            let svc = tiny_service();
+            let opts = PersistOptions { max_entries: 2, ..bin_opts() };
+            let snap = Snapshotter::attach(svc.clone(), dir.clone(), opts).unwrap();
+            for k in 1..=5u64 {
+                svc.import_sim_hinted(Fingerprint(u128::from(k)), Arc::new(tiny_sim()), k);
+            }
+            assert_eq!(snap.flush(), 5);
+            assert_eq!(snap.counters().evicted(), 3, "cap must evict the three lightest hints");
+            assert_eq!(snap.counters().segments(), 1, "compaction folds everything into one segment");
+            assert_eq!(snap.counters().dead_bytes(), 0);
+            assert_eq!(snap.flush(), 0, "evicted keys are not dirty — no rewrite thrash");
+            assert_eq!(snap.counters().evicted(), 3);
+        }
+        assert_eq!(segment::segment_paths(&dir).len(), 1);
+        let svc = tiny_service();
+        let snap = Snapshotter::attach(svc.clone(), dir.clone(), bin_opts()).unwrap();
+        assert_eq!(snap.counters().loaded(), 2);
+        let keys: Vec<u128> = svc.export_sims_hinted().into_iter().map(|(k, _, _)| k.0).collect();
+        assert!(keys.contains(&4) && keys.contains(&5), "heaviest lanes must survive the cap: {keys:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_migrates_json_dirs_in_place() {
+        let dir = tmp_dir("migrate");
+        {
+            let svc = tiny_service();
+            let snap = Snapshotter::attach(svc.clone(), dir.clone(), PersistOptions::manual()).unwrap();
+            for k in 0..3u128 {
+                svc.import_sim(Fingerprint(0x100 + k), Arc::new(tiny_sim()));
+            }
+            assert_eq!(snap.flush(), 3);
+        }
+        // A file compaction cannot read stays in place for the operator.
+        std::fs::write(dir.join("sim-00000000000000000000000000000bad.json"), "not json").unwrap();
+        let report = compact_dir(&dir, 0).unwrap();
+        assert_eq!(report.json_migrated, 3);
+        assert_eq!(report.live, 3);
+        assert_eq!(report.evicted, 0);
+        assert_eq!(report.skipped_corrupt, 1);
+        assert_eq!(report.segments_after, 1);
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names.iter().filter(|n| n.ends_with(".json")).count(), 1, "only the corrupt file remains");
+        assert_eq!(names.iter().filter(|n| n.ends_with(".ftlseg")).count(), 1);
+        // Idempotent: a second compaction rewrites the same live set.
+        let again = compact_dir(&dir, 0).unwrap();
+        assert_eq!(again.live, 3);
+        assert_eq!(again.json_migrated, 0);
+        let svc = tiny_service();
+        let snap = Snapshotter::attach(svc.clone(), dir.clone(), bin_opts()).unwrap();
+        assert_eq!(snap.counters().loaded(), 3, "migrated entries must warm-start");
+        assert_eq!(snap.counters().skipped_corrupt(), 1);
+        let j = inspect_dir(&dir).unwrap();
+        assert_eq!(j.get("live_entries").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("json_entries").unwrap().as_usize().unwrap(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn final_flush_failures_are_surfaced_not_swallowed() {
+        for opts in [PersistOptions::manual(), bin_opts()] {
+            let dir = tmp_dir(&format!("drop-flush-{}", opts.format.name()));
+            let svc = tiny_service();
+            let snap = Snapshotter::attach(svc.clone(), dir.clone(), opts).unwrap();
+            svc.import_sim(Fingerprint(0xDEAD), Arc::new(tiny_sim()));
+            // Replace the snapshot dir with a regular file: every write
+            // from here on fails (ENOTDIR), even for root.
+            std::fs::remove_dir_all(&dir).unwrap();
+            std::fs::write(&dir, "not a directory").unwrap();
+            snap.shutdown();
+            assert!(
+                snap.counters().write_errors() >= 1,
+                "{}: final flush failure must land in write_errors",
+                opts.format.name()
+            );
+            drop(snap);
+            let _ = std::fs::remove_file(&dir);
+        }
     }
 }

@@ -1,0 +1,462 @@
+//! Snapshot **segment files** — the on-disk container of the `ftl-bin-v1`
+//! snapshot codec ([`crate::serve::persist`]).
+//!
+//! Instead of one file per cache entry (the `ftl-snapshot-v1` JSON
+//! layout), a segment batches many entries into one append-ably *named*
+//! file (`seg-<seq>.ftlseg`; each flush pass seals a new segment, so the
+//! directory as a whole is the append log) and ends with a **footer
+//! index** mapping `(kind, fingerprint)` to the entry's byte range plus
+//! its lane-weight hint. Warm-start then costs a few sequential file
+//! reads and in-memory decodes instead of 10⁵ `open`+parse calls — and
+//! the hints in the index let the loader order decodes
+//! heaviest-lane-first without touching a single payload.
+//!
+//! # Wire layout
+//!
+//! ```text
+//! segment := "FTLSEG1\n"            8-byte file magic
+//!            format                 length-prefixed str ("ftl-bin-v1")
+//!            entry*                 back-to-back entry records
+//!            index                  footer (see below)
+//!            index_len              fixed 8-byte LE u64
+//!            "FTLIDX1\n"            8-byte trailer magic
+//!
+//! entry   := kind u8                0 = plan, 1 = sim
+//!            fingerprint u128      fixed 16 bytes LE (the cache key)
+//!            checksum u128         FNV-1a/128 over kind‖fingerprint‖payload
+//!            hint varint           lane-weight warm-up hint
+//!            payload               varint byte length + ftl-bin-v1 body
+//!
+//! index   := count varint
+//!            (kind u8, fingerprint u128, hint varint,
+//!             offset varint, len varint)*        range of the whole entry
+//! ```
+//!
+//! The trailer is fixed-width so a reader seeks it from the end of the
+//! file; the per-entry checksum covers the kind and fingerprint as well
+//! as the payload (same property as the JSON envelope: a corrupted key
+//! cannot smuggle a valid payload in under the wrong fingerprint).
+//!
+//! # Failure model
+//!
+//! Segments are written to a `.tmp-<pid>` sibling, fsync'd, then
+//! `rename`d — a crash mid-write never leaves a half-written segment
+//! under a final name. Reading is nonetheless defensive against
+//! truncation and bit rot: a missing or unparseable footer drops the
+//! reader into a **sequential entry scan** from the header, recovering
+//! every record before the tear ([`SegmentView::recovered`]); the
+//! undecodable tail is reported ([`SegmentView::torn_tail`]) so the
+//! loader can count the skip. Entry payloads are *not* validated here —
+//! [`decode_entry`] checks the checksum when the loader (possibly on a
+//! different [`crate::tiling::SolverPool`] worker) actually decodes the
+//! entry.
+
+#![forbid(unsafe_code)]
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::bincode::{BinReader, BinWriter};
+
+use super::fingerprint::{checksum, Fingerprint};
+
+/// Binary snapshot codec version tag, embedded in every segment header.
+/// Bump whenever the binary encoding of any persisted type changes
+/// incompatibly — old segments are then skipped (counted as
+/// `skipped_version`) instead of mis-decoded.
+pub const SEGMENT_FORMAT: &str = "ftl-bin-v1";
+
+/// Segment file extension (`seg-<seq>.ftlseg`).
+pub const SEGMENT_EXT: &str = "ftlseg";
+
+const SEG_MAGIC: &[u8; 8] = b"FTLSEG1\n";
+const IDX_MAGIC: &[u8; 8] = b"FTLIDX1\n";
+/// Fixed trailer: 8-byte LE index length + 8-byte magic.
+const TRAILER_LEN: usize = 16;
+
+/// One entry to be sealed into a segment.
+#[derive(Debug, Clone)]
+pub struct SegmentEntry {
+    /// Entry kind (`persist::KIND_PLAN` / `persist::KIND_SIM`).
+    pub kind: u8,
+    /// Cache key.
+    pub key: Fingerprint,
+    /// Lane-weight warm-up hint (0 = never hit through a lane).
+    pub hint: u64,
+    /// `ftl-bin-v1` payload (e.g. `Deployment::to_bin`).
+    pub payload: Vec<u8>,
+}
+
+/// One footer-index record: where an entry lives inside the segment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexEntry {
+    /// Entry kind.
+    pub kind: u8,
+    /// Cache key.
+    pub key: Fingerprint,
+    /// Lane-weight warm-up hint.
+    pub hint: u64,
+    /// Byte offset of the whole entry record from the file start.
+    pub offset: usize,
+    /// Byte length of the whole entry record.
+    pub len: usize,
+}
+
+/// A read segment: the raw bytes plus the (footer or recovered) index.
+#[derive(Debug)]
+pub struct SegmentView {
+    /// The whole segment file.
+    pub data: Vec<u8>,
+    /// Entry locations, in file order.
+    pub entries: Vec<IndexEntry>,
+    /// True when the footer was unusable and the entries were recovered
+    /// by a sequential scan instead.
+    pub recovered: bool,
+    /// True when a sequential scan hit undecodable bytes before the end
+    /// of the file — a torn/truncated segment whose tail is lost.
+    pub torn_tail: bool,
+}
+
+/// Why a whole segment file was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegmentError {
+    /// Valid segment magic but a different codec version tag.
+    Version,
+    /// Not a segment / unreadable / header too corrupt to scan.
+    Corrupt,
+}
+
+/// All segment files in `dir`, sorted by name — which is write order,
+/// because [`next_segment_path`] allocates monotonically increasing
+/// zero-padded sequence numbers.
+pub fn segment_paths(dir: &Path) -> Vec<PathBuf> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut paths: Vec<PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("seg-") && n.ends_with(&format!(".{SEGMENT_EXT}")))
+        })
+        .collect();
+    paths.sort();
+    paths
+}
+
+/// The next unused `seg-<seq>.ftlseg` path in `dir` (max existing
+/// sequence + 1, zero-padded so lexicographic order is write order).
+pub fn next_segment_path(dir: &Path) -> PathBuf {
+    let next = segment_paths(dir)
+        .iter()
+        .filter_map(|p| p.file_name().and_then(|n| n.to_str()))
+        .filter_map(|n| n.strip_prefix("seg-").and_then(|s| s.strip_suffix(&format!(".{SEGMENT_EXT}"))))
+        .filter_map(|s| s.parse::<u64>().ok())
+        .max()
+        .map_or(1, |m| m.saturating_add(1));
+    dir.join(format!("seg-{next:08}.{SEGMENT_EXT}"))
+}
+
+fn entry_checksum(kind: u8, key: Fingerprint, payload: &[u8]) -> u128 {
+    let mut buf = Vec::with_capacity(1 + 16 + payload.len());
+    buf.push(kind);
+    buf.extend_from_slice(&key.0.to_le_bytes());
+    buf.extend_from_slice(payload);
+    checksum(&buf).0
+}
+
+/// Seal `entries` into a new segment in `dir`. Atomic and durable: the
+/// bytes go to a `.tmp-<pid>` sibling, are fsync'd, and only then
+/// renamed into place (callers migrating per-entry JSON files may
+/// delete them the moment this returns). Returns the final path and the
+/// segment's size in bytes.
+pub fn write_segment(dir: &Path, entries: &[SegmentEntry]) -> Result<(PathBuf, u64)> {
+    let mut w = BinWriter::new();
+    w.raw(SEG_MAGIC);
+    w.str(SEGMENT_FORMAT);
+    let mut index: Vec<IndexEntry> = Vec::with_capacity(entries.len());
+    for e in entries {
+        let offset = w.len();
+        w.u8(e.kind);
+        w.u128(e.key.0);
+        w.u128(entry_checksum(e.kind, e.key, &e.payload));
+        w.u64(e.hint);
+        w.bytes(&e.payload);
+        index.push(IndexEntry { kind: e.kind, key: e.key, hint: e.hint, offset, len: w.len() - offset });
+    }
+    let index_start = w.len();
+    w.seq(&index, |w, ie| {
+        w.u8(ie.kind);
+        w.u128(ie.key.0);
+        w.u64(ie.hint);
+        w.usize(ie.offset);
+        w.usize(ie.len);
+    });
+    let index_len = (w.len() - index_start) as u64;
+    let bytes = {
+        let mut buf = w.into_bytes();
+        buf.extend_from_slice(&index_len.to_le_bytes());
+        buf.extend_from_slice(IDX_MAGIC);
+        buf
+    };
+    let final_path = next_segment_path(dir);
+    let tmp_path = final_path.with_extension(format!("{SEGMENT_EXT}.tmp-{}", std::process::id()));
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp_path)
+            .with_context(|| format!("creating segment {}", tmp_path.display()))?;
+        f.write_all(&bytes).with_context(|| format!("writing segment {}", tmp_path.display()))?;
+        // The durability point the JSON-migration contract rests on: old
+        // per-entry files may be removed once write_segment returns.
+        f.sync_all().with_context(|| format!("fsyncing segment {}", tmp_path.display()))?;
+    }
+    std::fs::rename(&tmp_path, &final_path)
+        .with_context(|| format!("renaming {} into place", tmp_path.display()))?;
+    // Best-effort directory fsync so the rename itself is durable.
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok((final_path, bytes.len() as u64))
+}
+
+/// Read and index one segment file. Never panics: a bad footer falls
+/// back to a sequential entry scan (`recovered`), truncation loses only
+/// the tail (`torn_tail`), and a file that is not a segment at all (or
+/// carries a different codec version) is rejected as a whole.
+pub fn read_segment(path: &Path) -> std::result::Result<SegmentView, SegmentError> {
+    let data = std::fs::read(path).map_err(|_| SegmentError::Corrupt)?;
+    if data.len() < SEG_MAGIC.len() || &data[..SEG_MAGIC.len()] != SEG_MAGIC {
+        return Err(SegmentError::Corrupt);
+    }
+    let mut header = BinReader::new(&data[SEG_MAGIC.len()..]);
+    let format = header.str().map_err(|_| SegmentError::Corrupt)?;
+    if format != SEGMENT_FORMAT {
+        return Err(SegmentError::Version);
+    }
+    let body_start = SEG_MAGIC.len() + header.position();
+    // Fast path: the fixed trailer locates the footer index.
+    if let Some(view) = read_via_footer(&data, body_start) {
+        return Ok(SegmentView { entries: view, data, recovered: false, torn_tail: false });
+    }
+    // Torn/corrupt footer: recover what the entry stream still holds.
+    let (entries, torn_tail) = scan_entries(&data, body_start);
+    Ok(SegmentView { data, entries, recovered: true, torn_tail })
+}
+
+/// Parse the footer index; `None` means "fall back to scanning".
+fn read_via_footer(data: &[u8], body_start: usize) -> Option<Vec<IndexEntry>> {
+    if data.len() < body_start + TRAILER_LEN {
+        return None;
+    }
+    let trailer = &data[data.len() - TRAILER_LEN..];
+    if &trailer[8..] != IDX_MAGIC {
+        return None;
+    }
+    let index_len = u64::from_le_bytes(trailer[..8].try_into().expect("8-byte slice")) as usize;
+    let index_end = data.len() - TRAILER_LEN;
+    let index_start = index_end.checked_sub(index_len)?;
+    if index_start < body_start {
+        return None;
+    }
+    let mut r = BinReader::new(&data[index_start..index_end]);
+    let entries = r
+        .seq(|r| {
+            Ok(IndexEntry {
+                kind: r.u8()?,
+                key: Fingerprint(r.u128()?),
+                hint: r.u64()?,
+                offset: r.usize()?,
+                len: r.usize()?,
+            })
+        })
+        .ok()?;
+    if !r.is_done() {
+        return None;
+    }
+    // Every indexed range must land inside the entry region.
+    let ok = entries.iter().all(|e| {
+        e.offset >= body_start && e.len > 0 && e.offset.checked_add(e.len).is_some_and(|end| end <= index_start)
+    });
+    ok.then_some(entries)
+}
+
+/// Sequentially decode entry records from `body_start`, stopping at the
+/// first undecodable byte. Returns the recovered index and whether a
+/// tail was left behind (the footer of an intact segment also ends the
+/// scan, but then the footer path would have been taken).
+fn scan_entries(data: &[u8], body_start: usize) -> (Vec<IndexEntry>, bool) {
+    let mut entries = Vec::new();
+    let mut r = BinReader::new(&data[body_start..]);
+    while !r.is_done() {
+        let offset = body_start + r.position();
+        match scan_one(&mut r) {
+            Ok((kind, key, hint)) => {
+                let len = body_start + r.position() - offset;
+                entries.push(IndexEntry { kind, key, hint, offset, len });
+            }
+            Err(_) => return (entries, true),
+        }
+    }
+    (entries, false)
+}
+
+/// Decode one entry record's framing (not its payload) at the cursor.
+fn scan_one(r: &mut BinReader) -> Result<(u8, Fingerprint, u64)> {
+    let kind = r.u8()?;
+    if kind > 1 {
+        bail!("bad entry kind {kind}");
+    }
+    let key = Fingerprint(r.u128()?);
+    let _checksum = r.u128()?;
+    let hint = r.u64()?;
+    let _payload = r.bytes()?;
+    Ok((kind, key, hint))
+}
+
+/// Extract and validate one entry's payload. Checks that the record's
+/// own kind/fingerprint agree with the index and that the checksum over
+/// kind‖fingerprint‖payload holds — the binary counterpart of the JSON
+/// envelope validation.
+pub fn decode_entry<'a>(data: &'a [u8], ie: &IndexEntry) -> Result<&'a [u8]> {
+    let end = ie.offset.checked_add(ie.len).filter(|&e| e <= data.len());
+    let Some(end) = end else { bail!("index range out of bounds") };
+    let mut r = BinReader::new(&data[ie.offset..end]);
+    let kind = r.u8()?;
+    let key = Fingerprint(r.u128()?);
+    if kind != ie.kind || key != ie.key {
+        bail!("entry header disagrees with index ({} vs {})", key.hex(), ie.key.hex());
+    }
+    let declared = r.u128()?;
+    let _hint = r.u64()?;
+    let payload = r.bytes()?;
+    if !r.is_done() {
+        bail!("trailing bytes after entry payload");
+    }
+    if entry_checksum(kind, key, payload) != declared {
+        bail!("entry checksum mismatch for {}", key.hex());
+    }
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ftl-segment-unit-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn entry(kind: u8, key: u128, hint: u64, payload: &[u8]) -> SegmentEntry {
+        SegmentEntry { kind, key: Fingerprint(key), hint, payload: payload.to_vec() }
+    }
+
+    #[test]
+    fn seals_and_reads_back_via_footer() {
+        let dir = tmp_dir("roundtrip");
+        let entries =
+            vec![entry(0, 0xaaaa, 8, b"plan payload"), entry(1, 0xbbbb, 0, b"sim payload"), entry(0, 0xcccc, 3, b"")];
+        let (path, bytes) = write_segment(&dir, &entries).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap().starts_with("seg-00000001."));
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        let view = read_segment(&path).unwrap();
+        assert!(!view.recovered && !view.torn_tail);
+        assert_eq!(view.entries.len(), 3);
+        for (ie, e) in view.entries.iter().zip(&entries) {
+            assert_eq!((ie.kind, ie.key, ie.hint), (e.kind, e.key, e.hint));
+            assert_eq!(decode_entry(&view.data, ie).unwrap(), e.payload.as_slice());
+        }
+        // A second segment gets the next sequence number.
+        let (p2, _) = write_segment(&dir, &entries[..1]).unwrap();
+        assert!(p2.file_name().unwrap().to_str().unwrap().starts_with("seg-00000002."));
+        assert_eq!(segment_paths(&dir), vec![path, p2]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncation_recovers_the_prefix_and_reports_the_tear() {
+        let dir = tmp_dir("torn");
+        let entries = vec![entry(0, 1, 5, b"first"), entry(1, 2, 4, b"second"), entry(0, 3, 3, b"third")];
+        let (path, _) = write_segment(&dir, &entries).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let view = read_segment(&path).unwrap();
+        // Cut inside the third entry: the first two must survive.
+        let third = view.entries[2];
+        std::fs::write(&path, &full[..third.offset + third.len / 2]).unwrap();
+        let torn = read_segment(&path).unwrap();
+        assert!(torn.recovered && torn.torn_tail);
+        assert_eq!(torn.entries.len(), 2);
+        assert_eq!(torn.entries[0].key, Fingerprint(1));
+        assert_eq!(decode_entry(&torn.data, &torn.entries[1]).unwrap(), b"second");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_footer_falls_back_to_a_full_scan() {
+        let dir = tmp_dir("footer");
+        let entries = vec![entry(0, 7, 1, b"only")];
+        let (path, _) = write_segment(&dir, &entries).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 4] ^= 0xff; // corrupt the trailer magic
+        std::fs::write(&path, &bytes).unwrap();
+        let view = read_segment(&path).unwrap();
+        assert!(view.recovered);
+        assert_eq!(view.entries.len(), 1);
+        assert_eq!(decode_entry(&view.data, &view.entries[0]).unwrap(), b"only");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_catches_payload_and_key_corruption() {
+        let dir = tmp_dir("checksum");
+        let (path, _) = write_segment(&dir, &[entry(1, 0xfeed, 2, b"sim bytes")]).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let view = read_segment(&path).unwrap();
+        let ie = view.entries[0];
+        // Flip one payload byte (the last byte before the footer index).
+        let mut bytes = clean.clone();
+        bytes[ie.offset + ie.len - 1] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let v = read_segment(&path).unwrap();
+        assert!(decode_entry(&v.data, &v.entries[0]).is_err());
+        // Flip a fingerprint byte: header/index disagreement or checksum
+        // failure, never a mis-keyed import.
+        let mut bytes = clean;
+        bytes[ie.offset + 1] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let v = read_segment(&path).unwrap();
+        assert!(decode_entry(&v.data, &v.entries[0]).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_version_and_non_segments_are_rejected_whole() {
+        let dir = tmp_dir("version");
+        let (path, _) = write_segment(&dir, &[entry(0, 9, 0, b"x")]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // The header is magic (8B) + varint length (1B for a short
+        // format string) + the tag itself; bump its last character so
+        // the tag reads "…v9" with the wire otherwise untouched.
+        let tag_end = 8 + 1 + SEGMENT_FORMAT.len() - 1;
+        assert_eq!(bytes[tag_end], SEGMENT_FORMAT.as_bytes()[SEGMENT_FORMAT.len() - 1]);
+        bytes[tag_end] = b'9';
+        std::fs::write(&path, &bytes).unwrap();
+        assert_eq!(read_segment(&path).unwrap_err(), SegmentError::Version);
+        std::fs::write(&path, b"definitely not a segment").unwrap();
+        assert_eq!(read_segment(&path).unwrap_err(), SegmentError::Corrupt);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_segment_round_trips() {
+        let dir = tmp_dir("empty");
+        let (path, _) = write_segment(&dir, &[]).unwrap();
+        let view = read_segment(&path).unwrap();
+        assert!(view.entries.is_empty() && !view.recovered);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -535,6 +535,30 @@ impl PlanService {
         self.inner.sim_cache.export()
     }
 
+    /// [`Self::export_plans`] including each entry's lane-weight hint
+    /// (the WFQ weight of the heaviest lane that hit it — see
+    /// [`Self::note_lane_hit`]).
+    pub fn export_plans_hinted(&self) -> Vec<(Fingerprint, Arc<Deployment>, u64)> {
+        self.inner.cache.export_hinted()
+    }
+
+    /// [`Self::export_sims`] including lane-weight hints.
+    pub fn export_sims_hinted(&self) -> Vec<(Fingerprint, Arc<SimReport>, u64)> {
+        self.inner.sim_cache.export_hinted()
+    }
+
+    /// Tag the cached plan (and its derived sim entry) with the WFQ
+    /// weight of the lane that just hit it. Hints only ratchet upward;
+    /// they ride along in the snapshot segment index so a restarted
+    /// replica loads the heaviest lanes' entries first. Called by the
+    /// batch scheduler on every served request — misses (entry already
+    /// evicted) are silently ignored, so this is cheap enough for the
+    /// warm path.
+    pub fn note_lane_hit(&self, key: Fingerprint, lane_weight: u64) {
+        self.inner.cache.raise_hint(key, lane_weight);
+        self.inner.sim_cache.raise_hint(key.derive(SIM_KEY_TAG), lane_weight);
+    }
+
     /// Seed the plan cache with a snapshot entry (warm start). Under
     /// `--verify-plans` the entry is verified first — a snapshot is an
     /// even less trusted source than the in-process solver — and a plan
@@ -544,6 +568,13 @@ impl PlanService {
     /// no SoC) — capacity/cost checks are deferred, overlap, hazard,
     /// coverage and structural checks still apply.
     pub fn import_plan(&self, key: Fingerprint, plan: Arc<Deployment>) -> bool {
+        self.import_plan_hinted(key, plan, 0)
+    }
+
+    /// [`Self::import_plan`] carrying the lane-weight hint recovered from
+    /// the segment index, so the restored entry keeps its warm-up
+    /// priority for the *next* restart too.
+    pub fn import_plan_hinted(&self, key: Fingerprint, plan: Arc<Deployment>, hint: u64) -> bool {
         if self.inner.verify_plans {
             self.inner.verify.checked.inc();
             let report = crate::verify::check_deployment(&plan, None);
@@ -554,14 +585,20 @@ impl PlanService {
                 return false;
             }
         }
-        self.inner.cache.insert(key, plan);
+        self.inner.cache.insert_hinted(key, plan, hint);
         true
     }
 
     /// Seed the sim cache with a snapshot entry; `key` must be the
     /// derived sim fingerprint exactly as exported.
     pub fn import_sim(&self, key: Fingerprint, sim: Arc<SimReport>) {
-        self.inner.sim_cache.insert(key, sim);
+        self.import_sim_hinted(key, sim, 0);
+    }
+
+    /// [`Self::import_sim`] carrying the lane-weight hint from the
+    /// segment index.
+    pub fn import_sim_hinted(&self, key: Fingerprint, sim: Arc<SimReport>, hint: u64) {
+        self.inner.sim_cache.insert_hinted(key, sim, hint);
     }
 
     /// Register the persistence layer's counters for `stats_json`.

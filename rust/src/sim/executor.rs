@@ -8,6 +8,7 @@ use crate::dma::DmaStats;
 use crate::memory::Level;
 use crate::schedule::{Phase, Schedule};
 use crate::soc::{ComputeUnit, SocConfig};
+use crate::util::bincode::{BinReader, BinWriter};
 use crate::util::json::Json;
 
 use super::engine::{Engine, Resource, TaskId, TaskSpec};
@@ -116,6 +117,22 @@ impl SimReport {
             dma: DmaStats::from_json(v.get("dma")?)?,
         })
     }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.u64(self.total_cycles);
+        w.seq(&self.phases, |w, p| p.to_bin(w));
+        self.dma.to_bin(w);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        Ok(Self {
+            total_cycles: r.u64()?,
+            phases: r.seq(PhaseReport::from_bin)?,
+            dma: DmaStats::from_bin(r)?,
+        })
+    }
 }
 
 impl PhaseReport {
@@ -146,6 +163,31 @@ impl PhaseReport {
             bound: Boundedness::parse(bound).ok_or_else(|| anyhow!("unknown boundedness '{bound}'"))?,
             dma: DmaStats::from_json(v.get("dma")?)?,
         })
+    }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.str(&self.name);
+        w.u64(self.cycles);
+        w.u64(self.cluster_busy);
+        w.u64(self.npu_busy);
+        w.u64(self.dma_l2_busy);
+        w.u64(self.dma_l3_busy);
+        w.str(self.bound.name());
+        self.dma.to_bin(w);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        let name = r.str()?;
+        let cycles = r.u64()?;
+        let cluster_busy = r.u64()?;
+        let npu_busy = r.u64()?;
+        let dma_l2_busy = r.u64()?;
+        let dma_l3_busy = r.u64()?;
+        let bound = r.str()?;
+        let bound = Boundedness::parse(&bound).ok_or_else(|| anyhow!("unknown boundedness '{bound}'"))?;
+        Ok(Self { name, cycles, cluster_busy, npu_busy, dma_l2_busy, dma_l3_busy, bound, dma: DmaStats::from_bin(r)? })
     }
 }
 

@@ -12,9 +12,10 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::ir::{op_from_json, op_to_json, NodeId, Op, TensorId};
+use crate::ir::{op_from_bin, op_from_json, op_to_bin, op_to_json, NodeId, Op, TensorId};
 use crate::memory::{BufferRole, Level};
 use crate::soc::ComputeUnit;
+use crate::util::bincode::{BinReader, BinWriter};
 use crate::util::json::Json;
 
 /// One free tile variable, placed at a loop level.
@@ -232,6 +233,16 @@ impl TilingSolution {
     pub fn from_json(v: &Json) -> Result<Self> {
         Ok(Self { groups: v.get("groups")?.as_arr()?.iter().map(GroupSolution::from_json).collect::<Result<_>>()? })
     }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.seq(&self.groups, |w, g| g.to_bin(w));
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        Ok(Self { groups: r.seq(GroupSolution::from_bin)? })
+    }
 }
 
 // ---------------------------------------------------------- snapshot codec
@@ -253,6 +264,18 @@ impl FreeVarChoice {
             full: v.get("full")?.as_usize()?,
             tile: v.get("tile")?.as_usize()?,
         })
+    }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.str(&self.name);
+        w.usize(self.full);
+        w.usize(self.tile);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        Ok(Self { name: r.str()?, full: r.usize()?, tile: r.usize()? })
     }
 }
 
@@ -283,6 +306,20 @@ impl DimSpec {
             a: v.get("a")?.as_usize()?,
             b: v.get("b")?.as_usize()?,
         })
+    }
+
+    /// Canonical binary encoding (`ftl-bin-v1`; absent presence byte
+    /// encodes a fixed dim).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.usize(self.full);
+        w.opt(self.loop_idx.as_ref(), |w, &l| w.usize(l));
+        w.usize(self.a);
+        w.usize(self.b);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        Ok(Self { full: r.usize()?, loop_idx: r.opt(|r| r.usize())?, a: r.usize()?, b: r.usize()? })
     }
 }
 
@@ -325,6 +362,32 @@ impl GroupBuffer {
             fetch_depth: v.get("fetch_depth")?.as_usize()?,
         })
     }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.usize(self.tensor);
+        w.str(&self.name);
+        w.str(self.role.name());
+        w.usize(self.elem_bytes);
+        w.seq(&self.dims, |w, d| d.to_bin(w));
+        w.opt(self.home.as_ref(), |w, l| w.str(l.name()));
+        w.usize(self.fetch_depth);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        let tensor = r.usize()?;
+        let name = r.str()?;
+        let role = r.str()?;
+        let role = BufferRole::parse(&role).ok_or_else(|| anyhow!("unknown buffer role '{role}'"))?;
+        let elem_bytes = r.usize()?;
+        let dims = r.seq(DimSpec::from_bin)?;
+        let home = r.opt(|r| {
+            let name = r.str()?;
+            Level::parse(&name).ok_or_else(|| anyhow!("unknown memory level '{name}'"))
+        })?;
+        Ok(Self { tensor, name, role, elem_bytes, dims, home, fetch_depth: r.usize()? })
+    }
 }
 
 impl NodeTile {
@@ -353,6 +416,26 @@ impl NodeTile {
             output_buf: v.get("output_buf")?.as_usize()?,
         })
     }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.usize(self.node);
+        w.str(&self.name);
+        op_to_bin(&self.op, w);
+        w.str(self.unit.name());
+        w.usize_seq(&self.input_bufs);
+        w.usize(self.output_buf);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        let node = r.usize()?;
+        let name = r.str()?;
+        let op = op_from_bin(r)?;
+        let unit = r.str()?;
+        let unit = ComputeUnit::parse(&unit).ok_or_else(|| anyhow!("unknown compute unit '{unit}'"))?;
+        Ok(Self { node, name, op, unit, input_bufs: r.usize_seq()?, output_buf: r.usize()? })
+    }
 }
 
 impl GroupSolution {
@@ -377,6 +460,28 @@ impl GroupSolution {
             footprint: v.get("footprint")?.as_usize()?,
             double_buffered: v.get("double_buffered")?.as_bool()?,
             estimated_cycles: v.get("estimated_cycles")?.as_u64()?,
+        })
+    }
+
+    /// Canonical binary encoding (`ftl-bin-v1`).
+    pub fn to_bin(&self, w: &mut BinWriter) {
+        w.seq(&self.nodes, |w, n| n.to_bin(w));
+        w.seq(&self.loops, |w, l| l.to_bin(w));
+        w.seq(&self.buffers, |w, b| b.to_bin(w));
+        w.usize(self.footprint);
+        w.bool(self.double_buffered);
+        w.u64(self.estimated_cycles);
+    }
+
+    /// Decode the canonical binary encoding.
+    pub fn from_bin(r: &mut BinReader) -> Result<Self> {
+        Ok(Self {
+            nodes: r.seq(NodeTile::from_bin)?,
+            loops: r.seq(FreeVarChoice::from_bin)?,
+            buffers: r.seq(GroupBuffer::from_bin)?,
+            footprint: r.usize()?,
+            double_buffered: r.bool()?,
+            estimated_cycles: r.u64()?,
         })
     }
 }

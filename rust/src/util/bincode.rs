@@ -1,0 +1,371 @@
+//! Minimal length-prefixed binary (de)serialisation — the `ftl-bin-v1`
+//! wire under the snapshot segment format ([`crate::serve::persist`]).
+//!
+//! The same offline constraint that produced [`super::json`] applies
+//! here: no `serde`/`bincode` crates, so this module hand-rolls the two
+//! primitives every compact codec needs — **LEB128 varints** for
+//! unsigned integers (one byte for values < 128, which covers almost
+//! every length, index and dimension in a plan) and **length-prefixed
+//! byte strings**. Everything else is built from those:
+//!
+//! * `bool` — one byte (`0`/`1`, any other value is corruption)
+//! * `u64`/`usize` — varint
+//! * `u128` — fixed 16 bytes little-endian (fingerprints, checksums)
+//! * `f64`/`f32` — IEEE-754 bits, fixed-width little-endian (bit-exact
+//!   round-trip; the JSON codec's float printing is shortest-roundtrip,
+//!   so both codecs preserve values exactly)
+//! * `str` — varint byte length + UTF-8 bytes
+//! * `Option<T>` — presence byte + value
+//! * sequences — varint count + elements ([`BinWriter::seq`] /
+//!   [`BinReader::seq`])
+//!
+//! Decoding is **total**: every read returns `Result`, truncated input
+//! or a malformed varint is an error, never a panic — the snapshot
+//! loader turns any decode error into a counted skip. Sequence counts
+//! are validated against the remaining input length before allocating,
+//! so a corrupted count cannot balloon memory.
+
+#![forbid(unsafe_code)]
+
+use anyhow::{bail, Result};
+
+/// Append-only binary encoder (see module docs for the wire forms).
+#[derive(Debug, Default)]
+pub struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    /// Fresh empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// One raw byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// One presence/flag byte.
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(u8::from(v));
+    }
+
+    /// Unsigned LEB128 varint (7 bits per byte, high bit = continuation).
+    pub fn u64(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    /// `usize` as a varint.
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Fixed 16-byte little-endian `u128` (fingerprints/checksums — the
+    /// fixed width keeps them greppable in hexdumps).
+    pub fn u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// IEEE-754 bits, fixed 8 bytes little-endian.
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// IEEE-754 bits, fixed 4 bytes little-endian.
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// Raw bytes with **no** length prefix — for fixed-width file magics
+    /// whose length is part of the format, not the data.
+    pub fn raw(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed raw bytes.
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    /// Presence byte + value.
+    pub fn opt<T>(&mut self, v: Option<&T>, f: impl FnOnce(&mut Self, &T)) {
+        match v {
+            None => self.bool(false),
+            Some(x) => {
+                self.bool(true);
+                f(self, x);
+            }
+        }
+    }
+
+    /// Varint count + elements.
+    pub fn seq<T>(&mut self, items: &[T], mut f: impl FnMut(&mut Self, &T)) {
+        self.usize(items.len());
+        for item in items {
+            f(self, item);
+        }
+    }
+
+    /// Varint count + varint elements (the common `Vec<usize>` case).
+    pub fn usize_seq(&mut self, items: &[usize]) {
+        self.seq(items, |w, &v| w.usize(v));
+    }
+}
+
+/// Cursor-based binary decoder over a byte slice. Every read validates
+/// the remaining input; errors are `anyhow` (the snapshot loader maps
+/// them to counted skips).
+#[derive(Debug)]
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    /// Reader over `buf`, cursor at the start.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Current cursor offset.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// True when the whole input has been consumed (strict decoders
+    /// check this to reject trailing garbage).
+    pub fn is_done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!("binary input truncated: wanted {n} bytes, {} remain", self.remaining());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// One raw byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// One flag byte; anything but `0`/`1` is corruption.
+    pub fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("bad bool byte {b:#04x}"),
+        }
+    }
+
+    /// Unsigned LEB128 varint (at most 10 bytes for a `u64`).
+    pub fn u64(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let byte = self.u8()?;
+            let bits = u64::from(byte & 0x7f);
+            if shift == 63 && bits > 1 {
+                bail!("varint overflows u64");
+            }
+            v |= bits << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        bail!("varint longer than 10 bytes")
+    }
+
+    /// Varint as `usize`.
+    pub fn usize(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).map_err(|_| anyhow::anyhow!("varint overflows usize"))
+    }
+
+    /// Fixed 16-byte little-endian `u128`.
+    pub fn u128(&mut self) -> Result<u128> {
+        let b: [u8; 16] = self.take(16)?.try_into().expect("take(16) returns 16 bytes");
+        Ok(u128::from_le_bytes(b))
+    }
+
+    /// Fixed 8-byte IEEE-754 bits.
+    pub fn f64(&mut self) -> Result<f64> {
+        let b: [u8; 8] = self.take(8)?.try_into().expect("take(8) returns 8 bytes");
+        Ok(f64::from_bits(u64::from_le_bytes(b)))
+    }
+
+    /// Fixed 4-byte IEEE-754 bits.
+    pub fn f32(&mut self) -> Result<f32> {
+        let b: [u8; 4] = self.take(4)?.try_into().expect("take(4) returns 4 bytes");
+        Ok(f32::from_bits(u32::from_le_bytes(b)))
+    }
+
+    /// Length-prefixed raw bytes (borrowed from the input).
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.usize()?;
+        self.take(n)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        Ok(std::str::from_utf8(b).map_err(|_| anyhow::anyhow!("string is not UTF-8"))?.to_string())
+    }
+
+    /// Presence byte + value.
+    pub fn opt<T>(&mut self, f: impl FnOnce(&mut Self) -> Result<T>) -> Result<Option<T>> {
+        if self.bool()? {
+            Ok(Some(f(self)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Varint count + elements. The count is bounded by the remaining
+    /// input (every element is at least one byte), so a corrupted count
+    /// errors instead of triggering a huge allocation.
+    pub fn seq<T>(&mut self, mut f: impl FnMut(&mut Self) -> Result<T>) -> Result<Vec<T>> {
+        let n = self.usize()?;
+        if n > self.remaining() {
+            bail!("sequence count {n} exceeds {} remaining bytes", self.remaining());
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f(self)?);
+        }
+        Ok(out)
+    }
+
+    /// Varint count + varint elements.
+    pub fn usize_seq(&mut self) -> Result<Vec<usize>> {
+        self.seq(|r| r.usize())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip() {
+        let mut w = BinWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.bool(false);
+        w.u64(0);
+        w.u64(127);
+        w.u64(128);
+        w.u64(u64::MAX);
+        w.u128(0xdead_beef_dead_beef_dead_beef_dead_beef);
+        w.f64(-0.125);
+        w.f32(1e-5);
+        w.str("tile φ");
+        w.opt(Some(&42usize), |w, &v| w.usize(v));
+        w.opt::<usize>(None, |w, &v| w.usize(v));
+        w.usize_seq(&[1, 2, 300]);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.u64().unwrap(), 0);
+        assert_eq!(r.u64().unwrap(), 127);
+        assert_eq!(r.u64().unwrap(), 128);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.u128().unwrap(), 0xdead_beef_dead_beef_dead_beef_dead_beef);
+        assert_eq!(r.f64().unwrap(), -0.125);
+        assert_eq!(r.f32().unwrap(), 1e-5);
+        assert_eq!(r.str().unwrap(), "tile φ");
+        assert_eq!(r.opt(|r| r.usize()).unwrap(), Some(42));
+        assert_eq!(r.opt(|r| r.usize()).unwrap(), None);
+        assert_eq!(r.usize_seq().unwrap(), vec![1, 2, 300]);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn varint_boundaries_are_minimal_and_exact() {
+        for (v, len) in [(0u64, 1), (127, 1), (128, 2), (16383, 2), (16384, 3), (u64::MAX, 10)] {
+            let mut w = BinWriter::new();
+            w.u64(v);
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len(), len, "varint({v}) must be {len} bytes");
+            assert_eq!(BinReader::new(&bytes).u64().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn truncated_input_errors_instead_of_panicking() {
+        let mut w = BinWriter::new();
+        w.str("snapshot");
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = BinReader::new(&bytes[..cut]);
+            assert!(r.str().is_err(), "truncation at {cut} must be a decode error");
+        }
+    }
+
+    #[test]
+    fn corrupt_counts_and_flags_error() {
+        // A sequence count far beyond the remaining bytes must be
+        // rejected before allocation.
+        let mut w = BinWriter::new();
+        w.u64(1 << 40);
+        let bytes = w.into_bytes();
+        assert!(BinReader::new(&bytes).seq(|r| r.u8()).is_err());
+        // A bool byte outside {0,1} is corruption, not "truthy".
+        assert!(BinReader::new(&[2]).bool().is_err());
+        // An 11-byte varint is malformed.
+        let long = [0x80u8; 11];
+        assert!(BinReader::new(&long).u64().is_err());
+    }
+
+    #[test]
+    fn floats_round_trip_bit_exactly() {
+        for v in [0.0f64, -0.0, 1.5e-300, f64::MAX, f64::MIN_POSITIVE] {
+            let mut w = BinWriter::new();
+            w.f64(v);
+            let b = w.into_bytes();
+            assert_eq!(BinReader::new(&b).f64().unwrap().to_bits(), v.to_bits());
+        }
+        let mut w = BinWriter::new();
+        w.f64(f64::NAN);
+        let b = w.into_bytes();
+        assert!(BinReader::new(&b).f64().unwrap().is_nan());
+    }
+}

@@ -10,5 +10,6 @@
 #![forbid(unsafe_code)]
 
 pub mod bench;
+pub mod bincode;
 pub mod json;
 pub mod prop;

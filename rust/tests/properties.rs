@@ -15,6 +15,7 @@ use ftl::tiling::{
     assign_homes, fuse_groups, solve_graph, solve_graph_in, solve_group_exhaustive, solve_group_in, FusionPolicy,
     HomesPolicy, SolverOptions, SolverPool, Strategy,
 };
+use ftl::util::bincode::{BinReader, BinWriter};
 use ftl::util::prop::{cases, Rng};
 
 /// Random small MLP-ish graph.
@@ -336,5 +337,47 @@ fn prop_deep_mlp_group_count() {
         let groups = fuse_groups(&graph, Strategy::Ftl, FusionPolicy::default());
         // Each Linear+GeLU pair fuses → exactly `layers` groups.
         assert_eq!(groups.len(), layers);
+    });
+}
+
+#[test]
+fn prop_binary_and_json_snapshot_codecs_are_equivalent() {
+    // Cross-codec equivalence over random solved plans: the `ftl-bin-v1`
+    // binary round-trip and the `ftl-snapshot-v1` JSON round-trip must
+    // decode to the same object — and both to the original. A divergence
+    // here means a replica warm-started from segments behaves differently
+    // from one warm-started from JSON envelopes, which the migration
+    // path (`ftl snapshot compact`) must never allow.
+    cases(8, |rng| {
+        let graph = random_graph(rng);
+        let soc = *rng.pick(&["siracusa", "cluster-only"]);
+        let strategy = if rng.chance(0.5) { Strategy::Ftl } else { Strategy::LayerPerLayer };
+        let mut cfg = DeployConfig::preset(soc, strategy).unwrap();
+        cfg.double_buffer = rng.chance(0.5);
+        let plan = Deployer::new(graph, cfg.clone()).plan().unwrap();
+
+        let mut w = BinWriter::new();
+        plan.to_bin(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        let plan_bin = ftl::Deployment::from_bin(&mut r).unwrap();
+        assert!(r.is_done(), "binary plan decode must consume every byte");
+        let plan_json = ftl::Deployment::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan_bin, plan_json, "binary and JSON plan codecs must decode identically ({soc}, {strategy:?})");
+        assert_eq!(plan_bin, plan, "binary plan round-trip must be lossless");
+
+        let sim = plan.simulate(&cfg).unwrap();
+        let mut w = BinWriter::new();
+        sim.to_bin(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = BinReader::new(&bytes);
+        let sim_bin = ftl::sim::SimReport::from_bin(&mut r).unwrap();
+        assert!(r.is_done(), "binary sim decode must consume every byte");
+        let sim_json = ftl::sim::SimReport::from_json(&sim.to_json()).unwrap();
+        assert_eq!(sim_bin, sim_json, "binary and JSON sim codecs must decode identically");
+        assert_eq!(sim_bin, sim, "binary sim round-trip must be lossless");
+
+        // The decoded plan is still servable: it re-simulates identically.
+        assert_eq!(plan_bin.simulate(&cfg).unwrap(), sim);
     });
 }

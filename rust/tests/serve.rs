@@ -14,7 +14,7 @@ use ftl::config::DeployConfig;
 use ftl::coordinator::experiments;
 use ftl::serve::{
     checksum, fingerprint, soc_fingerprint, AdmissionPolicy, BatchOptions, BatchOutcome, BatchScheduler, Fingerprint,
-    LruCache, PersistOptions, PlanService, SNAPSHOT_FORMAT, ServeOptions, SingleFlight, Snapshotter,
+    LruCache, PersistOptions, PlanService, SNAPSHOT_FORMAT, ServeOptions, SingleFlight, SnapshotFormat, Snapshotter,
 };
 use ftl::tiling::Strategy;
 use ftl::Graph;
@@ -111,6 +111,79 @@ fn golden_fingerprint_vectors_pin_the_canonical_encoding() {
     // both feed persisted artifacts.
     assert_eq!(siracusa_ftl.derive("ftl-sim-v1").hex(), "0207d4ee386f5c2b99d1a5114b0fcf7c");
     assert_eq!(checksum(b"ftl golden vector").hex(), "573e90f18bb28d20cdf5f7e1002e951f");
+}
+
+#[test]
+fn golden_binary_fixture_pins_the_ftl_bin_v1_codec() {
+    // Byte-for-byte fixture for the `ftl-bin-v1` binary snapshot codec,
+    // hand-assembled from the documented wire layout (LEB128 varints,
+    // length-prefixed strings, canonical field order). Like the
+    // fingerprint vectors above, this pins persisted artifacts: if an
+    // assertion here fires, the binary encoding changed, which
+    // invalidates every written segment — if intentional, bump
+    // `SEGMENT_FORMAT` and re-derive the fixture; never let the wire
+    // format drift unversioned.
+    use ftl::dma::DmaStats;
+    use ftl::memory::Level;
+    use ftl::sim::{Boundedness, PhaseReport, SimReport};
+    use ftl::util::bincode::{BinReader, BinWriter};
+
+    let mut dma = DmaStats::default();
+    dma.transfers.insert(Level::L1, 2);
+    dma.bytes.insert(Level::L3, 300);
+    dma.bytes_in = 128;
+    dma.bytes_out = 64;
+    let report = SimReport {
+        total_cycles: 300,
+        phases: vec![PhaseReport {
+            name: "mlp".into(),
+            cycles: 300,
+            cluster_busy: 200,
+            npu_busy: 0,
+            dma_l2_busy: 150,
+            dma_l3_busy: 1,
+            bound: Boundedness::Dma,
+            dma: dma.clone(),
+        }],
+        dma,
+    };
+
+    // DmaStats: three (level-name, u64) maps, then the in/out byte split.
+    let dma_bytes = |out: &mut Vec<u8>| {
+        out.extend([1, 2]); // transfers: 1 entry, "L1"
+        out.extend(b"L1");
+        out.push(2); // 2 transfers
+        out.extend([1, 2]); // bytes: 1 entry, "L3"
+        out.extend(b"L3");
+        out.extend([0xAC, 0x02]); // 300 (LEB128: 0xAC 0x02)
+        out.push(0); // busy_cycles: empty map
+        out.extend([0x80, 0x01]); // bytes_in 128
+        out.push(64); // bytes_out 64
+    };
+    let mut expect: Vec<u8> = Vec::new();
+    expect.extend([0xAC, 0x02]); // total_cycles 300
+    expect.push(1); // one phase
+    expect.push(3); // name "mlp"
+    expect.extend(b"mlp");
+    expect.extend([0xAC, 0x02]); // cycles 300
+    expect.extend([0xC8, 0x01]); // cluster_busy 200
+    expect.push(0); // npu_busy 0
+    expect.extend([0x96, 0x01]); // dma_l2_busy 150
+    expect.push(1); // dma_l3_busy 1
+    expect.push(9); // bound "dma-bound"
+    expect.extend(b"dma-bound");
+    dma_bytes(&mut expect); // per-phase DMA stats
+    dma_bytes(&mut expect); // whole-run DMA stats
+
+    let mut w = BinWriter::new();
+    report.to_bin(&mut w);
+    let bytes = w.into_bytes();
+    assert_eq!(bytes, expect, "ftl-bin-v1 SimReport encoding drifted from the pinned wire layout");
+
+    let mut r = BinReader::new(&bytes);
+    let back = SimReport::from_bin(&mut r).unwrap();
+    assert!(r.is_done(), "decode must consume the fixture exactly");
+    assert_eq!(back, report, "pinned bytes must decode back to the original report");
 }
 
 // ----------------------------------------------------------------------- LRU
@@ -516,6 +589,60 @@ fn warm_start_restarted_service_serves_with_zero_solves_and_sims() {
 }
 
 #[test]
+fn warm_start_binary_segments_serve_identically_and_pass_the_verify_gate() {
+    // The binary-codec flavour of the acceptance scenario: a replica
+    // snapshotting with `--snapshot-format bin` restarts warm, serves
+    // byte-identical reports, and its loaded entries pass the
+    // `--verify-plans` gate.
+    let dir = temp_dir("warm-start-bin");
+    let g = small_graph();
+    let a = cfg("cluster-only", Strategy::Ftl);
+    let b = cfg("siracusa", Strategy::Ftl);
+    let bin_opts = || PersistOptions::manual().with_format(SnapshotFormat::Bin);
+    let cycles_a = {
+        let svc = Arc::new(PlanService::new(opts(16, 2, 1)));
+        let snap = Snapshotter::attach(svc.clone(), &dir, bin_opts()).unwrap();
+        let ra = svc.deploy("first", &g, &a).unwrap();
+        svc.deploy("second", &g, &b).unwrap();
+        assert_eq!(snap.flush(), 4, "two plans + two sim reports must be snapshotted");
+        assert_eq!(snap.counters().write_errors(), 0);
+        ra.report.sim.total_cycles
+    };
+
+    // The directory holds appended segments, not per-entry JSON files.
+    let names: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_str().unwrap().to_string())
+        .collect();
+    assert!(names.iter().any(|n| n.ends_with(".ftlseg")), "binary snapshots must write segment files: {names:?}");
+    assert!(!names.iter().any(|n| n.ends_with(".json")), "binary snapshots must not write per-entry JSON: {names:?}");
+
+    // Restart with the verify gate on: every loaded plan is checked and
+    // none may be rejected — a snapshot round-trip must not damage plans.
+    let svc = Arc::new(PlanService::new(ServeOptions { verify_plans: true, ..opts(16, 2, 1) }));
+    let snap = Snapshotter::attach(svc.clone(), &dir, bin_opts()).unwrap();
+    assert_eq!(snap.counters().loaded(), 4, "restart must load every segment entry");
+    let reply = svc.deploy("after-restart", &g, &a).unwrap();
+    assert!(reply.cached && reply.sim_cached, "restarted service must hit both loaded caches");
+    assert_eq!(reply.report.sim.total_cycles, cycles_a, "loaded segment must reproduce the original report");
+    assert_eq!(svc.stats().solves, 0, "warm start must perform zero solves");
+    assert_eq!(svc.stats().sims, 0, "warm start must perform zero simulator runs");
+    let j = svc.stats_json();
+    let verify = j.get("verify").unwrap();
+    assert_eq!(verify.get("checked").unwrap().as_usize().unwrap(), 2, "both loaded plans must be verified");
+    assert_eq!(verify.get("rejected").unwrap().as_usize().unwrap(), 0, "loaded plans must pass the verifier");
+
+    // Reads are format-agnostic: a JSON-configured replica pointed at the
+    // same directory loads the segments all the same.
+    let svc = Arc::new(PlanService::new(opts(16, 2, 1)));
+    let snap = Snapshotter::attach(svc.clone(), &dir, PersistOptions::manual()).unwrap();
+    assert_eq!(snap.counters().loaded(), 4, "segment entries must load regardless of the configured format");
+    assert_eq!(svc.stats().cache.entries, 2);
+    assert_eq!(svc.stats().sim_cache.entries, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn corrupt_and_version_mismatched_entries_are_skipped_never_fatal() {
     let dir = temp_dir("corrupt");
     let g = small_graph();
@@ -564,7 +691,12 @@ fn corrupt_and_version_mismatched_entries_are_skipped_never_fatal() {
 fn background_snapshotter_writes_behind_without_explicit_flush() {
     let dir = temp_dir("write-behind");
     let svc = Arc::new(PlanService::new(opts(8, 1, 1)));
-    let snap = Snapshotter::attach(svc.clone(), &dir, PersistOptions { interval: Duration::from_millis(20), max_entries: 0 }).unwrap();
+    let snap = Snapshotter::attach(
+        svc.clone(),
+        &dir,
+        PersistOptions { interval: Duration::from_millis(20), max_entries: 0, format: SnapshotFormat::Json },
+    )
+    .unwrap();
     svc.deploy("bg", &small_graph(), &cfg("cluster-only", Strategy::Ftl)).unwrap();
     let start = std::time::Instant::now();
     while snap.counters().entries_written() < 2 && start.elapsed() < Duration::from_secs(10) {
