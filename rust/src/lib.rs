@@ -58,6 +58,7 @@ pub mod runtime;
 pub mod schedule;
 pub mod serve;
 pub mod sim;
+pub mod soak;
 pub mod soc;
 pub mod tiling;
 pub mod util;

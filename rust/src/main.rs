@@ -7,7 +7,7 @@
 //!                [--lane name:weight:cap[:shed|:block][:deadline-ms]]...  (repeatable WFQ lanes)
 //!                [--cache-dir DIR] [--snapshot-interval-ms 1000] [--cache-max-entries 0]
 //!                [--snapshot-format bin|json] [--trace-cap 512] [--slowlog-ms 250]
-//!                [--verify-plans] [--self-test]
+//!                [--write-queue-cap 4194304] [--verify-plans] [--self-test]
 //!                (line protocol, see PROTOCOL.md: DEPLOY | STATS | PING | METRICS | TRACE [n] |
 //!                SLOW [n], either bare (legacy v0, one JSON reply per line, in order) or framed
 //!                `FTL1 <id> <command...>` — multiplexed ids, streamed plan/sim/done events,
@@ -19,6 +19,11 @@
 //! worker budget. Deterministic — any thread count compiles bit-identical
 //! plans (the serve self-test prints a greppable `plan_digest=` line that
 //! CI compares across thread counts).
+//! ftl soak       [--seed 1] [--waves 4] [--requests 24] [--cache-dir DIR] [--out BENCH_soak.json]
+//!                (seeded soak/chaos run against a live `ftl serve` child it owns: mixed v0/v1
+//!                traffic waves, SIGKILL + warm restarts, snapshot corruption, lane saturation,
+//!                slow readers, oversized frames — asserting the cross-counter invariants over
+//!                the wire after every wave; `FTL_SOAK_SMOKE=1` shrinks volumes for CI)
 //! ftl verify     [<workload>] [--soc siracusa --strategy ftl --double-buffer] [--json]
 //!                [--all | --mutate]   (static plan verification; nonzero exit on errors)
 //! ftl snapshot   compact|inspect --cache-dir DIR [--cache-max-entries 0] [--json]
@@ -265,6 +270,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         interval: std::time::Duration::from_millis(args.get_usize("snapshot-interval-ms", 1000)? as u64),
         max_entries: args.get_usize("cache-max-entries", 0)?,
         format: snapshot_format,
+        ..PersistOptions::default()
     };
     if args.has("self-test") {
         return match cache_dir {
@@ -299,8 +305,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // All connections are served by the async front door: one
     // readiness-polled event loop, many in-flight ids per connection,
     // streamed partial replies for v1 frames, serialized legacy replies
-    // for bare v0 lines (ftl::serve::Frontend).
-    let handle = Frontend::new(scheduler, FrontendOptions::default()).serve(listener)?;
+    // for bare v0 lines (ftl::serve::Frontend). `--write-queue-cap`
+    // bounds each connection's unread-response backlog in bytes — past
+    // it the client is shed as a slow reader.
+    let frontend_opts = FrontendOptions {
+        write_queue_cap: args.get_usize("write-queue-cap", 4 * 1024 * 1024)?,
+        ..FrontendOptions::default()
+    };
+    let handle = Frontend::new(scheduler, frontend_opts).serve(listener)?;
     handle.join();
     Ok(())
 }
@@ -992,6 +1004,36 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `ftl soak` — seeded soak/chaos run against a live `ftl serve` child
+/// ([`ftl::soak`]). `--seed` fixes the traffic/fault schedule, `--waves`
+/// the length (minimum 3: mixed, warm replay, post-corruption replay),
+/// `--requests` the per-wave volume, `--out` the trajectory report
+/// path. `--cache-dir` pins the snapshot directory and keeps it
+/// afterwards; by default a temp directory is used and removed after a
+/// clean run. `FTL_SOAK_SMOKE=1` shrinks volumes for CI smoke.
+fn cmd_soak(args: &Args) -> Result<()> {
+    let smoke = std::env::var("FTL_SOAK_SMOKE").is_ok_and(|v| v == "1");
+    let seed = args.get_usize("seed", 1)? as u64;
+    let (cache_dir, keep_dir) = match args.get_opt("cache-dir") {
+        Some(dir) => (PathBuf::from(dir), true),
+        None => (std::env::temp_dir().join(format!("ftl-soak-{seed}-{}", std::process::id())), false),
+    };
+    let opts = ftl::soak::SoakOptions {
+        seed,
+        waves: args.get_usize("waves", 4)?,
+        requests_per_wave: args.get_usize("requests", if smoke { 8 } else { 24 })?,
+        server_bin: std::env::current_exe().context("locating the ftl binary")?,
+        cache_dir: cache_dir.clone(),
+        out_path: PathBuf::from(args.get("out", "BENCH_soak.json")),
+        smoke,
+    };
+    ftl::soak::run(&opts)?;
+    if !keep_dir {
+        let _ = std::fs::remove_dir_all(&cache_dir);
+    }
+    Ok(())
+}
+
 fn help() {
     println!(
         "ftl — Fused-Tiled Layers deployment framework (paper reproduction)
@@ -1007,7 +1049,13 @@ COMMANDS:
                FTL1 framing — see PROTOCOL.md)     [--cache-dir DIR] [--snapshot-interval-ms 1000]
                                                    [--cache-max-entries 0] [--snapshot-format bin|json]
                                                    [--trace-cap 512] (0 = tracing off)
-                                                   [--slowlog-ms 250] [--verify-plans] [--self-test])
+                                                   [--slowlog-ms 250] [--write-queue-cap 4194304]
+                                                   [--verify-plans] [--self-test])
+  soak         seeded soak/chaos harness          ([--seed 1] [--waves 4] [--requests 24]
+               (owns a live serve child: traffic   [--cache-dir DIR] [--out BENCH_soak.json];
+               waves, SIGKILL + warm restarts,     FTL_SOAK_SMOKE=1 shrinks volumes for CI;
+               snapshot corruption, lane bursts,   wire-level counter invariants asserted
+               slow readers, oversized frames)     after every wave)
   snapshot     snapshot-dir maintenance           (snapshot compact|inspect --cache-dir DIR
                (compact segments + migrate JSON    [--cache-max-entries 0] [--json]; compaction keeps
                entries in place, or inspect)       the heaviest lane hints when over the cap)
@@ -1056,6 +1104,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.cmd.as_str() {
         "deploy" => cmd_deploy(args),
         "serve" => cmd_serve(args),
+        "soak" => cmd_soak(args),
         "snapshot" => cmd_snapshot(args),
         "verify" => cmd_verify(args),
         "fig3" => cmd_fig3(args),

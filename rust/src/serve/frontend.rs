@@ -95,6 +95,12 @@ pub struct FrontendCounters {
     pub frames_out: Counter,
     /// Malformed or oversized frames answered with an error event.
     pub protocol_errors: Counter,
+    /// Terminal scheduler completions that arrived after their
+    /// connection was torn down (shed slow client, socket error) and
+    /// were dropped. The request's slot/serial-lane state is still
+    /// released and its trace span was already finished by the
+    /// scheduler — this only counts the discarded reply line.
+    pub dropped_completions: Counter,
 }
 
 impl FrontendCounters {
@@ -112,6 +118,7 @@ impl FrontendCounters {
             ("frames_in", Json::Num(self.frames_in.get() as f64)),
             ("frames_out", Json::Num(self.frames_out.get() as f64)),
             ("protocol_errors", Json::Num(self.protocol_errors.get() as f64)),
+            ("dropped_completions", Json::Num(self.dropped_completions.get() as f64)),
         ])
     }
 }
@@ -208,6 +215,9 @@ struct ConnShared {
     state: Mutex<ConnState>,
     waker: Arc<Waker>,
     write_queue_cap: usize,
+    /// Front-door counters, shared so completions landing on a dead
+    /// connection can be counted (`dropped_completions`) off-loop.
+    counters: Arc<FrontendCounters>,
 }
 
 struct ConnState {
@@ -226,7 +236,7 @@ struct ConnState {
 }
 
 impl ConnShared {
-    fn new(waker: Arc<Waker>, write_queue_cap: usize) -> Self {
+    fn new(waker: Arc<Waker>, write_queue_cap: usize, counters: Arc<FrontendCounters>) -> Self {
         Self {
             state: Mutex::new(ConnState {
                 out: VecDeque::new(),
@@ -238,6 +248,7 @@ impl ConnShared {
             }),
             waker,
             write_queue_cap,
+            counters,
         }
     }
 
@@ -261,25 +272,33 @@ impl ConnShared {
     }
 
     /// Terminal line for one v1 deploy: queue it and release the slot.
+    /// On a dead connection the slot is still released (no drift in the
+    /// shared state a retry/diagnosis might read) but the reply is
+    /// dropped and counted instead of queued into limbo.
     fn finish_one(&self, line: String) {
         let mut st = self.state.lock().unwrap();
+        st.inflight = st.inflight.saturating_sub(1);
         if st.dead {
+            drop(st);
+            self.counters.dropped_completions.inc();
             return;
         }
-        st.inflight = st.inflight.saturating_sub(1);
         self.push_locked(&mut st, line);
         drop(st);
         self.waker.wake();
     }
 
     /// Terminal line for the v0 deploy: queue it and unpark the
-    /// connection's serial lane.
+    /// connection's serial lane. Dead connections drop-and-count like
+    /// [`ConnShared::finish_one`], still clearing the busy flag.
     fn v0_done(&self, line: String) {
         let mut st = self.state.lock().unwrap();
+        st.v0_busy = false;
         if st.dead {
+            drop(st);
+            self.counters.dropped_completions.inc();
             return;
         }
-        st.v0_busy = false;
         self.push_locked(&mut st, line);
         drop(st);
         self.waker.wake();
@@ -474,8 +493,11 @@ impl EventLoop {
                         continue;
                     }
                     let _ = stream.set_nodelay(true);
-                    let shared =
-                        Arc::new(ConnShared::new(Arc::clone(&self.waker), self.opts.write_queue_cap));
+                    let shared = Arc::new(ConnShared::new(
+                        Arc::clone(&self.waker),
+                        self.opts.write_queue_cap,
+                        Arc::clone(&self.counters),
+                    ));
                     conns.push(Conn::new(stream, shared));
                     self.counters.accepted.inc();
                     progressed = true;
@@ -846,20 +868,26 @@ mod tests {
     use crate::serve::{BatchOptions, PlanService, ServeOptions};
     use std::io::BufRead;
 
-    fn frontend() -> FrontendHandle {
+    fn frontend_with(opts: FrontendOptions, batch: BatchOptions) -> (FrontendHandle, Arc<BatchScheduler>) {
         let service = Arc::new(PlanService::new(ServeOptions {
             cache_capacity: 32,
             cache_shards: 2,
             workers: 1,
             ..ServeOptions::default()
         }));
-        let scheduler = Arc::new(BatchScheduler::new(
-            service,
-            BatchOptions { batch_window: Duration::ZERO, ..BatchOptions::default() },
-        ));
-        Frontend::new(scheduler, FrontendOptions::default())
+        let scheduler = Arc::new(BatchScheduler::new(service, batch));
+        let handle = Frontend::new(Arc::clone(&scheduler), opts)
             .serve(TcpListener::bind("127.0.0.1:0").unwrap())
-            .unwrap()
+            .unwrap();
+        (handle, scheduler)
+    }
+
+    fn frontend() -> FrontendHandle {
+        frontend_with(
+            FrontendOptions::default(),
+            BatchOptions { batch_window: Duration::ZERO, ..BatchOptions::default() },
+        )
+        .0
     }
 
     fn connect(handle: &FrontendHandle) -> (TcpStream, std::io::BufReader<TcpStream>) {
@@ -938,6 +966,61 @@ mod tests {
         assert_eq!(event_of(&j), "done");
         assert!(j.get("pong").unwrap().as_bool().unwrap());
         assert!(handle.counters().protocol_errors.get() >= 2);
+        handle.join();
+    }
+
+    #[test]
+    fn late_completions_on_a_dead_connection_are_counted_not_queued() {
+        let counters = Arc::new(FrontendCounters::default());
+        let shared = ConnShared::new(Arc::new(Waker::new().unwrap()), 1024, Arc::clone(&counters));
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.dead = true;
+            st.inflight = 1;
+            st.v0_busy = true;
+        }
+        shared.finish_one("late v1 done".into());
+        shared.v0_done("late v0 done".into());
+        assert_eq!(counters.dropped_completions.get(), 2, "both late terminals are counted");
+        let st = shared.state.lock().unwrap();
+        assert_eq!(st.inflight, 0, "the v1 slot is still released on a dead connection");
+        assert!(!st.v0_busy, "the v0 serial lane is still unparked on a dead connection");
+        assert!(st.out.is_empty(), "nothing may be queued for a dead socket");
+        assert_eq!(st.out_bytes, 0);
+    }
+
+    #[test]
+    fn shed_with_inflight_tears_down_cleanly() {
+        // A write queue small enough that a single STATS reply
+        // overflows it, and a batch window long enough that a cold
+        // deploy is still in flight when the shed happens.
+        let (handle, scheduler) = frontend_with(
+            FrontendOptions { write_queue_cap: 256, ..FrontendOptions::default() },
+            BatchOptions { batch_window: Duration::from_millis(250), ..BatchOptions::default() },
+        );
+        let (mut stream, _reader) = connect(&handle);
+        stream.write_all(b"FTL1 1 DEPLOY stage-16x24x48 cluster-only ftl\n").unwrap();
+        // Wedge the connection: replies we never read overflow the cap.
+        for id in 2..40u64 {
+            stream.write_all(format!("FTL1 {id} STATS\n").as_bytes()).unwrap();
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while handle.counters().slow_closed.get() == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(handle.counters().slow_closed.get(), 1, "overflow must shed the slow connection");
+        // The deploy, still parked in the batch window at shed time,
+        // completes into the dead connection: dropped and counted.
+        while handle.counters().dropped_completions.get() == 0 && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(handle.counters().dropped_completions.get(), 1);
+        assert_eq!(handle.counters().open(), 0, "accepted/closed must balance after the shed");
+        // The scheduler still finished the span — a shed connection
+        // must not leave permanently-open spans in the journal.
+        let tracer = scheduler.tracer().expect("tracing is on by default");
+        assert!(tracer.spans_started() >= 1);
+        assert_eq!(tracer.spans_started(), tracer.spans_finished(), "no span may stay open");
         handle.join();
     }
 

@@ -181,11 +181,25 @@ pub struct PersistOptions {
     /// their shape); `ftl serve` defaults to `bin` (restart-to-warm at
     /// memory speed).
     pub format: SnapshotFormat,
+    /// How many **deferred** segment compactions one
+    /// [`Snapshotter::flush`] (or one background pass) may run after its
+    /// write pass completes. A cap trip during the write pass only marks
+    /// a compaction pending (counted as `persist.compactions_deferred`);
+    /// the rewrite itself happens outside the write-behind critical
+    /// section, at most this many times per flush. `0` means flushes
+    /// never compact — the cap is then only enforced by
+    /// [`Snapshotter::compact_now`], attach, and shutdown.
+    pub compaction_budget: usize,
 }
 
 impl Default for PersistOptions {
     fn default() -> Self {
-        Self { interval: Duration::from_millis(1000), max_entries: 0, format: SnapshotFormat::Json }
+        Self {
+            interval: Duration::from_millis(1000),
+            max_entries: 0,
+            format: SnapshotFormat::Json,
+            compaction_budget: 1,
+        }
     }
 }
 
@@ -216,6 +230,8 @@ pub struct PersistCounters {
     bytes_written: Counter,
     write_errors: Counter,
     evicted: Counter,
+    compactions: Counter,
+    compactions_deferred: Counter,
     write_us: Histogram,
     load_us: Histogram,
     /// Gauges (set, not accumulated): segment files on disk, live entry
@@ -269,6 +285,20 @@ impl PersistCounters {
         self.evicted.get()
     }
 
+    /// Segment compactions that completed (attach-time sweep, deferred
+    /// post-flush steps, [`Snapshotter::compact_now`]).
+    pub fn compactions(&self) -> u64 {
+        self.compactions.get()
+    }
+
+    /// Write passes that tripped the size cap and *deferred* the
+    /// compaction instead of rewriting the directory inline (the rewrite
+    /// then runs as its own budgeted step — see
+    /// [`PersistOptions::compaction_budget`]).
+    pub fn compactions_deferred(&self) -> u64 {
+        self.compactions_deferred.get()
+    }
+
     /// Wall-time histogram of successful envelope/segment writes, in µs.
     pub fn write_us(&self) -> &Histogram {
         &self.write_us
@@ -312,6 +342,8 @@ impl PersistCounters {
             ("bytes_written", n(self.bytes_written())),
             ("write_errors", n(self.write_errors())),
             ("evicted", n(self.evicted())),
+            ("compactions", n(self.compactions())),
+            ("compactions_deferred", n(self.compactions_deferred())),
             ("write_us", self.write_us.to_json()),
             ("load_us", self.load_us.to_json()),
             ("segments", n(self.segments())),
@@ -351,6 +383,12 @@ struct SnapInner {
     max_entries: usize,
     /// Encoding for new writes (reads are always format-agnostic).
     format: SnapshotFormat,
+    /// Set by a write pass whose cap trip was deferred; consumed by
+    /// [`SnapInner::run_deferred_compactions`] outside the write path.
+    compact_pending: std::sync::atomic::AtomicBool,
+    /// Max deferred compactions run after one flush — see
+    /// [`PersistOptions::compaction_budget`].
+    compaction_budget: usize,
     stop: Mutex<bool>,
     wake: Condvar,
 }
@@ -375,6 +413,8 @@ impl Snapshotter {
             live_on_disk: Mutex::new(live_on_disk),
             max_entries: opts.max_entries,
             format: opts.format,
+            compact_pending: std::sync::atomic::AtomicBool::new(false),
+            compaction_budget: opts.compaction_budget,
             stop: Mutex::new(false),
             wake: Condvar::new(),
         });
@@ -404,6 +444,10 @@ impl Snapshotter {
                         }
                         drop(stopped);
                         worker.flush();
+                        // Compaction is its own step, after the write
+                        // pass has released the `written` lock — a cap
+                        // trip never stalls the write-behind pass.
+                        worker.run_deferred_compactions(worker.compaction_budget);
                         stopped = worker.stop.lock().expect("snapshotter stop flag poisoned");
                     }
                 })
@@ -416,9 +460,19 @@ impl Snapshotter {
     /// Run one write-behind pass now; returns how many new entries were
     /// written. Never fails: an entry that cannot be written is counted
     /// (`write_errors`) and retried on the next pass. Safe to call
-    /// concurrently with the background thread.
+    /// concurrently with the background thread. If the pass tripped the
+    /// size cap, up to [`PersistOptions::compaction_budget`] deferred
+    /// compactions run afterwards, outside the write pass.
     pub fn flush(&self) -> usize {
-        self.inner.flush()
+        let wrote = self.inner.flush();
+        self.inner.run_deferred_compactions(self.inner.compaction_budget);
+        wrote
+    }
+
+    /// Run any pending deferred cap compaction now, ignoring the
+    /// per-flush budget. Returns whether a compaction actually ran.
+    pub fn compact_now(&self) -> bool {
+        self.inner.run_deferred_compactions(usize::MAX) > 0
     }
 
     /// The snapshot directory.
@@ -448,6 +502,9 @@ impl Snapshotter {
         }
         let errors_before = self.inner.counters.write_errors();
         self.inner.flush();
+        // The cap is part of the on-disk contract a restart inherits:
+        // never exit with a deferred compaction still pending.
+        self.inner.run_deferred_compactions(usize::MAX);
         let failed = self.inner.counters.write_errors().saturating_sub(errors_before);
         if failed > 0 {
             eprintln!(
@@ -571,8 +628,19 @@ impl SnapInner {
         }
         self.counters.snapshots.inc();
         self.counters.entries_written.add(wrote as u64);
+        // The write pass never compacts inline: rewriting the whole live
+        // set here would stall the write-behind pass (and every manual
+        // flush serialised behind the `written` lock) for the duration
+        // of a directory rewrite. A cap trip only marks the compaction
+        // pending; it runs as its own budgeted step once this pass has
+        // released the lock (background loop, Snapshotter::flush,
+        // compact_now, shutdown).
         if self.max_entries > 0 && wrote > 0 {
-            self.enforce_cap();
+            let live = *self.live_on_disk.lock().expect("snapshotter live count poisoned");
+            if live > self.max_entries {
+                self.compact_pending.store(true, std::sync::atomic::Ordering::SeqCst);
+                self.counters.compactions_deferred.inc();
+            }
         }
         wrote
     }
@@ -580,7 +648,8 @@ impl SnapInner {
     /// Apply the `max_entries` cap in the format's idiom: mtime-LRU file
     /// sweep for JSON, lane-aware compaction for segments (only when the
     /// live count actually exceeds the cap — compaction rewrites the
-    /// live set, so it must not run on every pass).
+    /// live set, so it must not run on every pass). Only the attach-time
+    /// sweep calls this synchronously; flush passes defer instead.
     fn enforce_cap(&self) {
         match self.format {
             SnapshotFormat::Json => self.gc(),
@@ -593,6 +662,23 @@ impl SnapInner {
         }
     }
 
+    /// Run at most `budget` compactions deferred by earlier write
+    /// passes. Holds neither the `written` lock nor any flush state —
+    /// the write-behind pass proceeds unimpeded while the directory is
+    /// rewritten. Returns how many compactions ran.
+    fn run_deferred_compactions(&self, budget: usize) -> usize {
+        let mut ran = 0usize;
+        while ran < budget && self.compact_pending.swap(false, std::sync::atomic::Ordering::SeqCst) {
+            let live = *self.live_on_disk.lock().expect("snapshotter live count poisoned");
+            if self.max_entries == 0 || live <= self.max_entries {
+                break;
+            }
+            self.compact();
+            ran += 1;
+        }
+        ran
+    }
+
     /// Segment-mode GC: rewrite the live set (minus the
     /// lightest-lane-hint overflow) into one fresh segment and drop the
     /// sources. Failures are logged and left for the next pass — the old
@@ -600,6 +686,7 @@ impl SnapInner {
     fn compact(&self) {
         match compact_dir(&self.dir, self.max_entries) {
             Ok(report) => {
+                self.counters.compactions.inc();
                 self.counters.evicted.add(report.evicted as u64);
                 self.counters.segments.set(report.segments_after as u64);
                 self.counters.live_bytes.set(report.bytes);
@@ -1217,7 +1304,7 @@ mod tests {
         let snap = Snapshotter::attach(
             service,
             dir.clone(),
-            PersistOptions { interval: Duration::ZERO, max_entries: 2, format: SnapshotFormat::Json },
+            PersistOptions { interval: Duration::ZERO, max_entries: 2, ..PersistOptions::default() },
         )
         .unwrap();
         assert_eq!(snap.flush(), 5, "all five entries written before the sweep");
@@ -1377,8 +1464,11 @@ mod tests {
             assert_eq!(snap.counters().evicted(), 3, "cap must evict the three lightest hints");
             assert_eq!(snap.counters().segments(), 1, "compaction folds everything into one segment");
             assert_eq!(snap.counters().dead_bytes(), 0);
+            assert_eq!(snap.counters().compactions_deferred(), 1, "the cap trip was deferred, not inline");
+            assert_eq!(snap.counters().compactions(), 1, "…then ran as flush()'s budgeted step");
             assert_eq!(snap.flush(), 0, "evicted keys are not dirty — no rewrite thrash");
             assert_eq!(snap.counters().evicted(), 3);
+            assert_eq!(snap.counters().compactions(), 1, "an idle pass must not re-compact");
         }
         assert_eq!(segment::segment_paths(&dir).len(), 1);
         let svc = tiny_service();
@@ -1386,6 +1476,40 @@ mod tests {
         assert_eq!(snap.counters().loaded(), 2);
         let keys: Vec<u128> = svc.export_sims_hinted().into_iter().map(|(k, _, _)| k.0).collect();
         assert!(keys.contains(&4) && keys.contains(&5), "heaviest lanes must survive the cap: {keys:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cap_trip_is_deferred_off_the_write_pass() {
+        let dir = tmp_dir("bin-defer");
+        let svc = tiny_service();
+        let opts = PersistOptions { max_entries: 2, ..bin_opts() };
+        let snap = Snapshotter::attach(svc.clone(), dir.clone(), opts).unwrap();
+        for k in 1..=5u64 {
+            svc.import_sim_hinted(Fingerprint(u128::from(k)), Arc::new(tiny_sim()), k);
+        }
+        // The write pass alone (what the background thread's flush and
+        // every manual flush serialise behind): pre-fix it compacted the
+        // directory inline, right there under the `written` lock.
+        assert_eq!(snap.inner.flush(), 5);
+        assert_eq!(snap.counters().evicted(), 0, "the write pass itself must not compact");
+        assert_eq!(snap.counters().compactions(), 0);
+        assert_eq!(snap.counters().compactions_deferred(), 1, "…it only records the deferral");
+        assert_eq!(segment::segment_paths(&dir).len(), 1, "the sealed segment is untouched");
+        // The deferred step — here forced explicitly — does the rewrite.
+        assert!(snap.compact_now());
+        assert_eq!(snap.counters().compactions(), 1);
+        assert_eq!(snap.counters().evicted(), 3);
+        assert!(!snap.compact_now(), "nothing left pending");
+        // A deferral left behind by a bare write pass is drained at
+        // shutdown: a restart must inherit a cap-bounded directory.
+        for k in 6..=8u64 {
+            svc.import_sim_hinted(Fingerprint(u128::from(k)), Arc::new(tiny_sim()), k);
+        }
+        assert_eq!(snap.inner.flush(), 3);
+        assert_eq!(snap.counters().compactions(), 1, "the bare write pass deferred again");
+        snap.shutdown();
+        assert_eq!(snap.counters().compactions(), 2, "shutdown must drain the pending compaction");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -127,9 +127,33 @@ pub enum SegmentError {
     Corrupt,
 }
 
-/// All segment files in `dir`, sorted by name — which is write order,
-/// because [`next_segment_path`] allocates monotonically increasing
-/// zero-padded sequence numbers.
+/// The sequence number a `seg-…` file name claims: the leading digit
+/// run between `seg-` and `.ftlseg`, parsed saturating into a `u128`.
+/// Deliberately forgiving — a hand-restored `seg-00000042.bak.ftlseg`,
+/// a torn file whose *content* is unreadable, or a counter that
+/// overflowed past `u64` all still claim their number. `None` only
+/// when there are no leading digits at all.
+fn segment_seq(name: &str) -> Option<u128> {
+    let body = name.strip_prefix("seg-")?.strip_suffix(&format!(".{SEGMENT_EXT}"))?;
+    let run = body.as_bytes().iter().take_while(|b| b.is_ascii_digit()).count();
+    if run == 0 {
+        return None;
+    }
+    let mut seq: u128 = 0;
+    for b in &body.as_bytes()[..run] {
+        seq = seq.saturating_mul(10).saturating_add(u128::from(b - b'0'));
+    }
+    Some(seq)
+}
+
+/// All segment files in `dir`, sorted by **numeric** sequence number
+/// (name tiebreak) — which is write order, because
+/// [`next_segment_path`] allocates monotonically increasing sequence
+/// numbers. Numeric (not lexicographic) order matters for the
+/// newest-wins merge: a restored or overflowed name longer than the
+/// zero-padded eight digits would otherwise sort out of write order
+/// and silently resurrect stale entries. Files claiming no sequence at
+/// all sort first, i.e. oldest — they can never outrank a fresh append.
 pub fn segment_paths(dir: &Path) -> Vec<PathBuf> {
     let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
     let mut paths: Vec<PathBuf> = entries
@@ -141,21 +165,35 @@ pub fn segment_paths(dir: &Path) -> Vec<PathBuf> {
                 .is_some_and(|n| n.starts_with("seg-") && n.ends_with(&format!(".{SEGMENT_EXT}")))
         })
         .collect();
-    paths.sort();
+    paths.sort_by_cached_key(|p| {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("").to_string();
+        (segment_seq(&name).unwrap_or(0), name)
+    });
     paths
 }
 
-/// The next unused `seg-<seq>.ftlseg` path in `dir` (max existing
-/// sequence + 1, zero-padded so lexicographic order is write order).
+/// The next unused `seg-<seq>.ftlseg` path in `dir`: max claimed
+/// sequence + 1 across **all** segment-named files — including ones
+/// whose content is torn or whose name does not parse as a clean `u64`
+/// (see [`segment_seq`]) — so a recovered directory never re-issues a
+/// sequence number that an existing file, readable or not, already
+/// claims. Zero-padded to eight digits; a final existence check bumps
+/// past any residual collision rather than letting the writer's rename
+/// clobber a live segment.
 pub fn next_segment_path(dir: &Path) -> PathBuf {
-    let next = segment_paths(dir)
+    let max = segment_paths(dir)
         .iter()
         .filter_map(|p| p.file_name().and_then(|n| n.to_str()))
-        .filter_map(|n| n.strip_prefix("seg-").and_then(|s| s.strip_suffix(&format!(".{SEGMENT_EXT}"))))
-        .filter_map(|s| s.parse::<u64>().ok())
+        .filter_map(segment_seq)
         .max()
-        .map_or(1, |m| m.saturating_add(1));
-    dir.join(format!("seg-{next:08}.{SEGMENT_EXT}"))
+        .unwrap_or(0);
+    let mut next = max.saturating_add(1);
+    let mut path = dir.join(format!("seg-{next:08}.{SEGMENT_EXT}"));
+    while path.exists() && next < u128::MAX {
+        next += 1;
+        path = dir.join(format!("seg-{next:08}.{SEGMENT_EXT}"));
+    }
+    path
 }
 
 fn entry_checksum(kind: u8, key: Fingerprint, payload: &[u8]) -> u128 {
@@ -373,6 +411,71 @@ mod tests {
         let (p2, _) = write_segment(&dir, &entries[..1]).unwrap();
         assert!(p2.file_name().unwrap().to_str().unwrap().starts_with("seg-00000002."));
         assert_eq!(segment_paths(&dir), vec![path, p2]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_segment_with_unparseable_seq_never_outranks_new_appends() {
+        let dir = tmp_dir("seq-safety");
+        // Simulate a recovery artifact: a valid old segment restored
+        // under a name whose sequence overflows u64 (2^64). Pre-fix,
+        // the u64 parse silently dropped it from the max-seq scan, so
+        // the next append got seg-00000001 — which sorted *before* the
+        // stale file, letting its entries win every newest-wins merge.
+        let scratch = tmp_dir("seq-safety-scratch");
+        let (old, _) = write_segment(&scratch, &[entry(0, 0xdead, 1, b"stale payload")]).unwrap();
+        let big = dir.join(format!("seg-18446744073709551616.{SEGMENT_EXT}"));
+        std::fs::copy(&old, &big).unwrap();
+        let (fresh, _) = write_segment(&dir, &[entry(0, 0xdead, 1, b"fresh payload")]).unwrap();
+        let fresh_name = fresh.file_name().unwrap().to_str().unwrap().to_string();
+        assert_eq!(fresh_name, format!("seg-18446744073709551617.{SEGMENT_EXT}"));
+        // Write order per segment_paths must put the fresh append last…
+        let paths = segment_paths(&dir);
+        assert_eq!(paths, vec![big, fresh]);
+        // …so a newest-wins replay over the directory sees the fresh payload.
+        let mut live: Option<Vec<u8>> = None;
+        for p in &paths {
+            let view = read_segment(p).unwrap();
+            for ie in &view.entries {
+                if ie.key == Fingerprint(0xdead) {
+                    live = Some(decode_entry(&view.data, ie).unwrap().to_vec());
+                }
+            }
+        }
+        assert_eq!(live.unwrap(), b"fresh payload");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&scratch);
+    }
+
+    #[test]
+    fn unreadable_and_oddly_named_segments_still_reserve_their_seq() {
+        let dir = tmp_dir("seq-reserve");
+        // A torn file whose content is not even a segment still claims
+        // its sequence number — the next append must not reuse it.
+        std::fs::write(dir.join(format!("seg-00000007.{SEGMENT_EXT}")), b"torn garbage").unwrap();
+        assert!(read_segment(&dir.join(format!("seg-00000007.{SEGMENT_EXT}"))).is_err());
+        let (p, _) = write_segment(&dir, &[entry(0, 1, 0, b"x")]).unwrap();
+        assert_eq!(p.file_name().unwrap().to_str().unwrap(), format!("seg-00000008.{SEGMENT_EXT}"));
+        // Trailing junk after the digits (a hand-restored copy) counts too.
+        std::fs::write(dir.join(format!("seg-00000042.restored.{SEGMENT_EXT}")), b"junk").unwrap();
+        let next = next_segment_path(&dir);
+        assert_eq!(next.file_name().unwrap().to_str().unwrap(), format!("seg-00000043.{SEGMENT_EXT}"));
+        assert!(!next.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segment_order_is_numeric_across_the_zero_padding_boundary() {
+        let dir = tmp_dir("seq-order");
+        let a = dir.join(format!("seg-99999999.{SEGMENT_EXT}"));
+        let b = dir.join(format!("seg-100000000.{SEGMENT_EXT}"));
+        std::fs::write(&a, b"x").unwrap();
+        std::fs::write(&b, b"y").unwrap();
+        // Lexicographically "1…" < "9…", which would replay seq 10^8
+        // before seq 10^8-1; the sort must be numeric.
+        assert_eq!(segment_paths(&dir), vec![a, b]);
+        let next = next_segment_path(&dir);
+        assert_eq!(next.file_name().unwrap().to_str().unwrap(), format!("seg-100000001.{SEGMENT_EXT}"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -245,6 +245,12 @@ impl Journal {
 pub struct Tracer {
     opts: TraceOptions,
     next_id: AtomicU64,
+    /// Spans that reached [`Tracer::finish`]. At quiescence this equals
+    /// `next_id` — the scheduler finishes every span it begins, even
+    /// when the requesting connection was shed mid-flight (the front
+    /// door then drops only the rendered reply). The soak harness and
+    /// the shed-teardown regression test assert this end to end.
+    finished: AtomicU64,
     lane_names: Vec<String>,
     journal: Journal,
     slowlog: Mutex<VecDeque<Arc<Span>>>,
@@ -264,6 +270,7 @@ impl Tracer {
         Self {
             opts,
             next_id: AtomicU64::new(0),
+            finished: AtomicU64::new(0),
             lane_names,
             journal,
             slowlog: Mutex::new(VecDeque::new()),
@@ -335,6 +342,7 @@ impl Tracer {
                 self.queue_us.record(p - q);
             }
         }
+        self.finished.fetch_add(1, Ordering::Relaxed);
         self.journal.push(span.clone());
         if total_us >= self.opts.slowlog_ms.saturating_mul(1000) {
             let mut slow = self.slowlog.lock().expect("slowlog poisoned");
@@ -382,6 +390,18 @@ impl Tracer {
         &self.queue_us
     }
 
+    /// Spans begun (trace ids issued) so far.
+    pub fn spans_started(&self) -> u64 {
+        self.next_id.load(Ordering::Relaxed)
+    }
+
+    /// Spans finalized so far. `spans_started == spans_finished` at
+    /// quiescence — a permanently-open span is a scheduler bug (e.g. a
+    /// completion lost when its connection was shed).
+    pub fn spans_finished(&self) -> u64 {
+        self.finished.load(Ordering::Relaxed)
+    }
+
     /// Merge of every per-lane warm + cold histogram — by the invariant,
     /// snapshot-equal to [`overall`](Tracer::overall) when quiescent.
     pub fn merged_lanes(&self) -> Histogram {
@@ -410,6 +430,7 @@ impl Tracer {
             ("queue_us", self.queue_us.to_json()),
             ("lanes", Json::Obj(lanes)),
             ("spans", Json::Num(self.next_id.load(Ordering::Relaxed) as f64)),
+            ("spans_finished", Json::Num(self.finished.load(Ordering::Relaxed) as f64)),
             ("journal_cap", Json::int(self.journal.slots.len())),
             ("slowlog_ms", Json::Num(self.opts.slowlog_ms as f64)),
             ("slowlog_depth", Json::int(self.slowlog.lock().expect("slowlog poisoned").len())),

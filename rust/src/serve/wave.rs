@@ -21,6 +21,10 @@
 //!   async front door ([`super::frontend`]): the v1 streaming contract
 //!   (plan strictly before done, out-of-order ids) and bare legacy-line
 //!   compatibility, run against a real TCP address.
+//! * [`WireClient`] / [`seeded_wire_wave`] — the reusable over-the-wire
+//!   traffic generator behind `ftl soak` ([`crate::soak`]): a seeded
+//!   mix of warm repeats and parametric cold solves across lanes,
+//!   deadlines and both protocol framings, multiplexed on real TCP.
 //!
 //! The threaded wave's early-share measurement deliberately reads the
 //! dispatcher's own per-lane `batches` counters (sampled by a monitor
@@ -35,7 +39,7 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
@@ -46,6 +50,7 @@ use crate::tiling::Strategy;
 
 use super::batch::{AdmissionPolicy, BatchOptions, BatchScheduler};
 use super::lanes::{LaneSet, LaneSpec};
+use super::proto;
 use super::service::{PlanService, ServeOptions};
 use super::trace::TraceOptions;
 
@@ -400,4 +405,271 @@ pub fn v0_probe(addr: &str) -> Result<usize> {
         );
     }
     Ok(3)
+}
+
+/// Thin newline-framed client for the front door: one TCP connection,
+/// command lines out, JSON lines back, with a read timeout so a hung
+/// server surfaces as an error instead of a wedged harness. Speaks both
+/// framings — callers write bare v0 lines or `FTL1 <id> ...` frames
+/// through the same [`send_line`](WireClient::send_line).
+pub struct WireClient {
+    stream: std::net::TcpStream,
+    reader: std::io::BufReader<std::net::TcpStream>,
+}
+
+impl WireClient {
+    /// Connect with a 60 s read timeout — long enough for any cold
+    /// solve, short enough that a dead server fails the harness instead
+    /// of wedging it.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = std::net::TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        stream.set_nodelay(true)?;
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        Ok(WireClient { stream, reader })
+    }
+
+    /// Write one request line; the newline terminator is added here.
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
+        use std::io::Write;
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Read the next newline-framed JSON reply.
+    pub fn read_json(&mut self) -> Result<crate::util::json::Json> {
+        read_reply(&mut self.reader)
+    }
+
+    /// Read raw reply lines up to and including the one equal to
+    /// `marker` — for the multi-line commands (`METRICS` ends with
+    /// `# EOF`).
+    pub fn read_until(&mut self, marker: &str) -> Result<Vec<String>> {
+        use std::io::BufRead;
+        let mut lines = Vec::new();
+        loop {
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            ensure!(n > 0, "server closed the connection mid-reply");
+            let line = line.trim_end().to_string();
+            let done = line == marker;
+            lines.push(line);
+            if done {
+                return Ok(lines);
+            }
+        }
+    }
+
+    /// One serial round trip: write `line`, read its single JSON reply.
+    pub fn roundtrip(&mut self, line: &str) -> Result<crate::util::json::Json> {
+        self.send_line(line)?;
+        self.read_json()
+    }
+}
+
+/// Traffic-mix knobs for [`seeded_wire_wave`]. Each percentage is drawn
+/// independently per request from the caller's rng, so the schedule is
+/// a pure function of the rng state.
+#[derive(Debug, Clone)]
+pub struct WireMix {
+    /// Requests in the wave.
+    pub total: usize,
+    /// Percent of requests repeating an already-pooled workload (warm
+    /// fast-path candidates). Ignored while the pool is empty.
+    pub warm_pct: usize,
+    /// Percent sent as bare v0 lines on a second, serial connection.
+    pub v0_pct: usize,
+    /// Percent of *cold* requests given a 1 ms deadline — queued behind
+    /// a batch window they cannot beat, exercising TIMEOUT.
+    pub tight_deadline_pct: usize,
+}
+
+impl Default for WireMix {
+    fn default() -> Self {
+        WireMix { total: 24, warm_pct: 40, v0_pct: 25, tight_deadline_pct: 8 }
+    }
+}
+
+/// One request's terminal outcome in a [`seeded_wire_wave`].
+#[derive(Debug, Clone)]
+pub struct WireOutcome {
+    /// The `stage-<seq>x<dim>x<hidden>` workload spec.
+    pub workload: String,
+    /// Requested lane (`None` = default).
+    pub lane: Option<String>,
+    /// `OK` | `SHED` | `TIMEOUT`.
+    pub outcome: String,
+    /// Plan-cache hit (meaningful on `OK`; false otherwise).
+    pub cached: bool,
+    /// Sim-cache hit (meaningful on `OK`; false otherwise).
+    pub sim_cached: bool,
+    /// Plan fingerprint hex (`OK` replies only).
+    pub fingerprint: Option<String>,
+    /// Send-to-terminal wall latency.
+    pub latency_us: u64,
+    /// Sent as a bare v0 line (serial) rather than a v1 frame.
+    pub v0: bool,
+}
+
+/// Aggregate result of [`seeded_wire_wave`].
+pub struct WireWaveReport {
+    /// Per-request terminal outcomes, in schedule order.
+    pub outcomes: Vec<WireOutcome>,
+    /// Streamed v1 `plan` partial events observed.
+    pub plan_events: usize,
+    /// Streamed v1 `sim` partial events observed.
+    pub sim_events: usize,
+}
+
+impl WireWaveReport {
+    /// Outcomes matching `kind` (`OK`/`SHED`/`TIMEOUT`).
+    pub fn count(&self, kind: &str) -> usize {
+        self.outcomes.iter().filter(|o| o.outcome == kind).count()
+    }
+}
+
+/// One scheduled request of a seeded wire wave.
+struct WireRequest {
+    workload: String,
+    lane: Option<&'static str>,
+    deadline_ms: Option<u64>,
+    v0: bool,
+}
+
+/// A v1 request in flight: where its outcome lands and when it left.
+struct PendingWire {
+    idx: usize,
+    started: Instant,
+}
+
+/// Decode a terminal reply body into a [`WireOutcome`].
+fn wire_outcome(
+    j: &crate::util::json::Json,
+    workload: &str,
+    lane: Option<&'static str>,
+    latency: Duration,
+    v0: bool,
+) -> Result<WireOutcome> {
+    let outcome = j.get("outcome")?.as_str()?.to_string();
+    let cached = j.get_opt("cached").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
+    let sim_cached = j.get_opt("sim_cached").map(|v| v.as_bool()).transpose()?.unwrap_or(false);
+    let fingerprint = j.get_opt("fingerprint").map(|v| v.as_str().map(str::to_string)).transpose()?;
+    Ok(WireOutcome {
+        workload: workload.to_string(),
+        lane: lane.map(str::to_string),
+        outcome,
+        cached,
+        sim_cached,
+        fingerprint,
+        latency_us: latency.as_micros() as u64,
+        v0,
+    })
+}
+
+/// Drain one v1 frame off `client`; a terminal fills its slot in
+/// `outcomes`, partials are only counted.
+fn drain_wire_event(
+    client: &mut WireClient,
+    pending: &mut std::collections::HashMap<u64, PendingWire>,
+    reqs: &[WireRequest],
+    outcomes: &mut [Option<WireOutcome>],
+    plan_events: &mut usize,
+    sim_events: &mut usize,
+) -> Result<()> {
+    let j = client.read_json()?;
+    let id = j.get("id")?.as_u64()?;
+    match j.get("event")?.as_str()? {
+        "plan" => *plan_events += 1,
+        "sim" => *sim_events += 1,
+        "done" => {
+            let p = pending.remove(&id).ok_or_else(|| anyhow!("terminal for unknown id {id}: {j}"))?;
+            let req = &reqs[p.idx];
+            outcomes[p.idx] = Some(wire_outcome(&j, &req.workload, req.lane, p.started.elapsed(), false)?);
+        }
+        "error" => bail!("v1 request {id} failed: {j}"),
+        other => bail!("unexpected v1 event '{other}': {j}"),
+    }
+    Ok(())
+}
+
+/// Seeded, realistic mixed traffic over the real wire: `mix.total`
+/// deploys against the front door at `addr`, mixing warm repeats from
+/// `pool` with fresh parametric `stage-<seq>x<dim>x<hidden>` cold
+/// solves, random lanes (`gold`/`free`/default), occasional tight
+/// deadlines on cold requests and a v0 fraction on its own serial
+/// connection. v1 requests are multiplexed on one connection with a
+/// bounded in-flight window. Fresh cold specs are pushed onto `pool` as
+/// they are scheduled, so successive waves over the same pool trend
+/// warmer. The request *schedule* is a pure function of the rng;
+/// latencies and cache flags depend on server state. Fails on any
+/// `error` event — the mix only sends well-formed frames.
+pub fn seeded_wire_wave(
+    addr: &str,
+    rng: &mut crate::util::prop::Rng,
+    mix: &WireMix,
+    pool: &mut Vec<String>,
+) -> Result<WireWaveReport> {
+    ensure!(mix.total >= 1, "wave needs at least one request");
+    // Draw the whole schedule first, in a fixed order: determinism
+    // lives here, not in wire timing.
+    let lane_names: [Option<&'static str>; 3] = [None, Some("gold"), Some("free")];
+    let mut reqs: Vec<WireRequest> = Vec::with_capacity(mix.total);
+    for _ in 0..mix.total {
+        let warm = !pool.is_empty() && rng.range(1, 100) <= mix.warm_pct;
+        let workload = if warm {
+            pool[rng.range(0, pool.len() - 1)].clone()
+        } else {
+            let dim = *rng.pick(&[16usize, 24, 32]);
+            let seq = rng.range(2, 64) * 4;
+            let w = format!("stage-{seq}x{dim}x{}", 2 * dim);
+            pool.push(w.clone());
+            w
+        };
+        let lane = *rng.pick(&lane_names);
+        let deadline_ms = if !warm && rng.range(1, 100) <= mix.tight_deadline_pct { Some(1u64) } else { None };
+        let v0 = rng.range(1, 100) <= mix.v0_pct;
+        reqs.push(WireRequest { workload, lane, deadline_ms, v0 });
+    }
+    let mut v1 = WireClient::connect(addr)?;
+    let mut v0 = WireClient::connect(addr)?;
+    let mut outcomes: Vec<Option<WireOutcome>> = reqs.iter().map(|_| None).collect();
+    let mut pending: std::collections::HashMap<u64, PendingWire> = std::collections::HashMap::new();
+    let (mut plan_events, mut sim_events) = (0usize, 0usize);
+    let mut next_id = 1u64;
+    for i in 0..reqs.len() {
+        let req = &reqs[i];
+        let mut cmd = format!("DEPLOY {} cluster-only ftl", req.workload);
+        if let Some(d) = req.deadline_ms {
+            cmd.push_str(&format!(" {d}"));
+        }
+        if let Some(lane) = req.lane {
+            cmd.push_str(&format!(" lane={lane}"));
+        }
+        if req.v0 {
+            // Bare lines have no ids: strictly serial round trips.
+            let started = Instant::now();
+            let j = v0.roundtrip(&cmd)?;
+            outcomes[i] = Some(wire_outcome(&j, &req.workload, req.lane, started.elapsed(), true)?);
+        } else {
+            // Keep in-flight ids well under the front door's
+            // per-connection cap so the loop never stops reading us.
+            while pending.len() >= 64 {
+                drain_wire_event(&mut v1, &mut pending, &reqs, &mut outcomes, &mut plan_events, &mut sim_events)?;
+            }
+            let id = next_id;
+            next_id += 1;
+            v1.send_line(&format!("{} {id} {cmd}", proto::V1_TAG))?;
+            pending.insert(id, PendingWire { idx: i, started: Instant::now() });
+        }
+    }
+    while !pending.is_empty() {
+        drain_wire_event(&mut v1, &mut pending, &reqs, &mut outcomes, &mut plan_events, &mut sim_events)?;
+    }
+    let outcomes: Vec<WireOutcome> = outcomes
+        .into_iter()
+        .enumerate()
+        .map(|(i, o)| o.ok_or_else(|| anyhow!("request {i} never reached a terminal outcome")))
+        .collect::<Result<_>>()?;
+    Ok(WireWaveReport { outcomes, plan_events, sim_events })
 }

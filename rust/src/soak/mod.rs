@@ -1,0 +1,737 @@
+//! `ftl soak` — seeded soak/chaos harness for the serving stack.
+//!
+//! Everything the serving layers promise individually (admission
+//! control, WFQ lanes, streaming v1 + legacy v0 framing, bounded write
+//! queues, write-behind snapshots, torn-tail recovery, counter
+//! invariants) is unit- and property-tested in isolation. This module
+//! is the end-to-end exercise: it owns a real `ftl serve` *process*,
+//! drives seeded mixed traffic at it over real TCP
+//! ([`crate::serve::wave::seeded_wire_wave`]), injects the faults an
+//! operator actually sees — SIGKILL mid-write-behind, flipped snapshot
+//! bytes, garbage envelope files, lane saturation bursts, clients that
+//! stop reading, oversized frames — and after every wave scrapes
+//! `STATS` over the wire and asserts the cross-counter invariants that
+//! must survive all of it:
+//!
+//! * scheduler totals equal the per-lane sums (`batch.* == Σ lanes.*`);
+//! * the solver's search accounting balances
+//!   (`scored + capacity_pruned + bound_pruned == space`);
+//! * the per-lane warm/cold latency histograms merge to the
+//!   scheduler-wide one, and every trace span that starts finishes;
+//! * the front door's connection accounting balances
+//!   (`open == accepted − closed`) and nothing drifts when faults drop
+//!   completions;
+//! * persistence never reports write errors or version skips, a
+//!   SIGKILL never leaves a torn entry behind (atomic tmp+fsync+rename
+//!   writes), a warm restart loads exactly what was settled on disk
+//!   with **zero** solver or simulator work on replay, and an injected
+//!   corruption is *counted and skipped* — exactly one re-solve, never
+//!   a crash or a wrong answer.
+//!
+//! The wave/fault *schedule* — workloads, dims, lanes, deadlines,
+//! protocol mix, which fault fires when, when restarts happen — is a
+//! pure function of `--seed`. Outcomes and latencies are not: admission
+//! control is real, so a request can shed under load and drop out of
+//! the warm pool for later waves. Throughput/latency trajectories land
+//! in `BENCH_soak.json` (`--out`) so future re-anchors see the curve.
+//!
+//! Wave skeleton (`--waves`, minimum 3):
+//!
+//! ```text
+//! wave 1   mixed traffic + gold-lane saturation burst (shed ≥ 1)
+//!   settle snapshots → SIGKILL → respawn (fresh port, same dir)
+//!   assert: loaded == everything settled, zero corrupt entries
+//! wave 2   pure warm replay: all OK, all cached, solves == sims == 0
+//!          + slow-reader shed + oversized-frame fault
+//!   settle → SIGKILL → flip one plan entry byte + drop a garbage
+//!   envelope → respawn
+//!   assert: skipped_corrupt == 2, loaded == settled − 1
+//! wave 3   warm replay with one hole: exactly one re-solve, sims == 0
+//! wave 4+  mixed churn + a seeded fault each; coin-flip kill/restart
+//! ```
+//!
+//! `FTL_SOAK_SMOKE=1` (the CI `soak-smoke` step) shrinks the request
+//! volume without changing the skeleton, so the kill/corrupt/replay
+//! path runs end-to-end on every push.
+
+#![forbid(unsafe_code)]
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::serve::segment;
+use crate::serve::wave::{seeded_wire_wave, WireClient, WireMix, WireWaveReport};
+use crate::util::json::Json;
+use crate::util::prop::Rng;
+
+/// Configuration for one soak run ([`run`]).
+#[derive(Debug, Clone)]
+pub struct SoakOptions {
+    /// Seed for the traffic/fault schedule — the schedule is a pure
+    /// function of it (wire timings and latencies are not).
+    pub seed: u64,
+    /// Total waves (≥ 3: mixed, warm replay, post-corruption replay;
+    /// further waves churn with rotating faults and seeded restarts).
+    pub waves: usize,
+    /// Requests per wave.
+    pub requests_per_wave: usize,
+    /// The `ftl` binary to spawn as the server under test.
+    pub server_bin: PathBuf,
+    /// Snapshot directory shared by every server incarnation.
+    pub cache_dir: PathBuf,
+    /// Where the trajectory report lands.
+    pub out_path: PathBuf,
+    /// Smoke mode (`FTL_SOAK_SMOKE=1`): same skeleton, smaller volumes.
+    pub smoke: bool,
+}
+
+/// Ask the kernel for a free port, then release it for the child. A
+/// fresh port per respawn sidesteps both the bind race and the old
+/// port lingering in TIME_WAIT after a SIGKILL.
+fn free_port() -> Result<u16> {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    Ok(listener.local_addr()?.port())
+}
+
+/// One `ftl serve` incarnation owned by the harness. Dropping it
+/// SIGKILLs the child — the harness never shuts a server down
+/// gracefully, so every generation change exercises the crash path.
+struct Server {
+    child: Child,
+    addr: String,
+}
+
+impl Server {
+    /// Spawn `ftl serve` on a fresh port over the shared cache dir and
+    /// block until it answers `PING`. Small windows and a fast
+    /// snapshot interval keep the soak tight; the raised cache caps
+    /// keep the LRU (and the loader's capacity cut at warm start) from
+    /// evicting the warm set mid-run, which would silently void the
+    /// zero-solve replay asserts.
+    fn spawn(opts: &SoakOptions) -> Result<Server> {
+        let addr = format!("127.0.0.1:{}", free_port()?);
+        let child = Command::new(&opts.server_bin)
+            .arg("serve")
+            .args(["--addr", addr.as_str()])
+            .arg("--cache-dir")
+            .arg(&opts.cache_dir)
+            .args(["--snapshot-interval-ms", "50"])
+            .args(["--batch-window-ms", "5"])
+            .args(["--cache-cap", "512"])
+            .args(["--sim-cache-cap", "1024"])
+            .args(["--write-queue-cap", "1048576"])
+            .args(["--trace-cap", "256"])
+            .args(["--lane", "gold:3:6:shed"])
+            .args(["--lane", "free:1:64"])
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning {} serve", opts.server_bin.display()))?;
+        let mut server = Server { child, addr };
+        server.wait_ready()?;
+        Ok(server)
+    }
+
+    fn wait_ready(&mut self) -> Result<()> {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            if let Some(status) = self.child.try_wait()? {
+                bail!("server exited before becoming ready: {status}");
+            }
+            if let Ok(mut c) = WireClient::connect(&self.addr) {
+                if let Ok(j) = c.roundtrip("PING") {
+                    if j.get_opt("pong").is_some() {
+                        return Ok(());
+                    }
+                }
+            }
+            ensure!(Instant::now() < deadline, "server at {} not ready within 60s", self.addr);
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// SIGKILL + reap: no graceful shutdown, no final flush — exactly
+    /// the crash the atomic snapshot writes must survive.
+    fn kill(mut self) -> Result<()> {
+        self.child.kill().context("killing server")?;
+        self.child.wait().context("reaping server")?;
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// One `STATS` scrape over a fresh connection.
+fn scrape_stats(addr: &str) -> Result<Json> {
+    WireClient::connect(addr)?.roundtrip("STATS")
+}
+
+/// Read a non-negative integer at a nested `STATS` path.
+fn num(j: &Json, path: &[&str]) -> Result<u64> {
+    let mut cur = j;
+    for key in path {
+        cur = cur.get(key).with_context(|| format!("STATS path .{}", path.join(".")))?;
+    }
+    cur.as_u64().with_context(|| format!("STATS path .{}", path.join(".")))
+}
+
+/// Poll `STATS` until the stack is quiescent — empty queues, every
+/// trace span finished, request totals stable across two polls — and
+/// return the final scrape. Counter identities only bind at rest.
+fn quiesce(addr: &str) -> Result<Json> {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut last: Option<u64> = None;
+    loop {
+        let stats = scrape_stats(addr)?;
+        let depth = num(&stats, &["batch", "queue_depth"])?;
+        let spans_balanced = match stats.get_opt("latency") {
+            Some(lat) => num(lat, &["spans"])? == num(lat, &["spans_finished"])?,
+            None => true,
+        };
+        let total = num(&stats, &["batch", "batched_requests"])?;
+        if depth == 0 && spans_balanced && last == Some(total) {
+            return Ok(stats);
+        }
+        last = Some(total);
+        ensure!(Instant::now() < deadline, "server at {addr} failed to quiesce within 60s");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Poll until the write-behind snapshotter has settled — at least one
+/// snapshot pass and `entries_written` stable across two polls — and
+/// return `loaded + entries_written`: the live entry count a clean
+/// reload of the directory must reproduce.
+fn settle_persist(addr: &str) -> Result<u64> {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut last: Option<u64> = None;
+    loop {
+        let stats = scrape_stats(addr)?;
+        let written = num(&stats, &["persist", "entries_written"])?;
+        if num(&stats, &["persist", "snapshots"])? >= 1 && last == Some(written) {
+            return Ok(num(&stats, &["persist", "loaded"])? + written);
+        }
+        last = Some(written);
+        ensure!(Instant::now() < deadline, "snapshotter at {addr} failed to settle within 60s");
+        std::thread::sleep(Duration::from_millis(150));
+    }
+}
+
+/// Assert every cross-counter invariant the serving stack promises
+/// over one *quiesced* `STATS` scrape; returns how many were checked.
+fn check_invariants(stats: &Json) -> Result<u64> {
+    let mut checked = 0u64;
+    // Scheduler totals equal the per-lane sums.
+    let batch = stats.get("batch")?;
+    let lanes = match batch.get("lanes")? {
+        Json::Obj(m) => m,
+        other => bail!("batch.lanes must be an object, got {other}"),
+    };
+    for key in ["batches", "batched_requests", "shed", "timeouts"] {
+        let total = num(batch, &[key])?;
+        let sum = lanes.values().try_fold(0u64, |acc, l| num(l, &[key]).map(|v| acc + v))?;
+        ensure!(total == sum, "batch.{key} {total} != per-lane sum {sum}");
+        checked += 1;
+    }
+    // The branch-and-bound search accounting balances (quiesced).
+    let solver = stats.get("solver")?;
+    let space = num(solver, &["space"])?;
+    let accounted =
+        num(solver, &["scored"])? + num(solver, &["capacity_pruned"])? + num(solver, &["bound_pruned"])?;
+    ensure!(accounted == space, "solver accounting: scored+pruned {accounted} != space {space}");
+    checked += 1;
+    // Per-lane warm/cold latency histograms merge to the overall one,
+    // and every span that started has finished.
+    if let Some(lat) = stats.get_opt("latency") {
+        let overall = num(lat, &["overall", "count"])?;
+        let lat_lanes = match lat.get("lanes")? {
+            Json::Obj(m) => m,
+            other => bail!("latency.lanes must be an object, got {other}"),
+        };
+        let merged = lat_lanes.values().try_fold(0u64, |acc, l| {
+            Ok::<u64, anyhow::Error>(acc + num(l, &["warm", "count"])? + num(l, &["cold", "count"])?)
+        })?;
+        ensure!(merged == overall, "latency merge: lane histograms count {merged} != overall {overall}");
+        checked += 1;
+        let (spans, finished) = (num(lat, &["spans"])?, num(lat, &["spans_finished"])?);
+        ensure!(spans == finished, "span leak: {spans} started, {finished} finished");
+        checked += 1;
+    }
+    // Front-door connection accounting balances.
+    if let Some(fe) = stats.get_opt("frontend") {
+        let (accepted, closed, open) =
+            (num(fe, &["accepted"])?, num(fe, &["closed"])?, num(fe, &["open"])?);
+        ensure!(
+            open == accepted.saturating_sub(closed),
+            "frontend: open {open} != accepted {accepted} - closed {closed}"
+        );
+        checked += 1;
+    }
+    // Service-level sanity: nothing errored, caches within capacity.
+    ensure!(num(stats, &["errors"])? == 0, "service errors must stay zero under well-formed traffic");
+    checked += 1;
+    for cache in ["plan_cache", "sim_cache"] {
+        let (entries, cap) = (num(stats, &[cache, "entries"])?, num(stats, &[cache, "capacity"])?);
+        ensure!(entries <= cap, "{cache}: {entries} entries over capacity {cap}");
+        checked += 1;
+    }
+    // Persistence: no write failures, no foreign-version entries (this
+    // run's own binary wrote everything on disk).
+    if let Some(p) = stats.get_opt("persist") {
+        ensure!(num(p, &["write_errors"])? == 0, "persist.write_errors must stay zero");
+        ensure!(num(p, &["skipped_version"])? == 0, "persist.skipped_version must stay zero");
+        checked += 2;
+    }
+    Ok(checked)
+}
+
+/// Record a wave's OK outcomes: the workload set for future warm draws
+/// and the fingerprint→workload map for corruption targeting.
+fn absorb(rep: &WireWaveReport, warm_ok: &mut BTreeSet<String>, fp_of: &mut BTreeMap<String, String>) {
+    for o in &rep.outcomes {
+        if o.outcome == "OK" {
+            warm_ok.insert(o.workload.clone());
+            if let Some(fp) = &o.fingerprint {
+                fp_of.insert(fp.clone(), o.workload.clone());
+            }
+        }
+    }
+}
+
+/// Saturate the shed-policy `gold` lane (capacity 6) with `n` distinct
+/// cold deploys written back to back on one v1 connection: admission
+/// control must shed the overflow rather than block or wedge. The
+/// burst counter advances monotonically so every burst in a run stays
+/// cold, even across warm restarts over the same snapshot dir.
+fn gold_burst_fault(addr: &str, burst_counter: &mut usize, n: usize) -> Result<(usize, usize)> {
+    let mut c = WireClient::connect(addr)?;
+    let base = *burst_counter;
+    *burst_counter += n;
+    for i in 0..n {
+        // seq 260..3859 never collides with the seeded waves (seq ≤
+        // 256); hidden bumps when seq wraps so bursts stay distinct.
+        let idx = base + i;
+        let seq = 4 * (65 + idx % 900);
+        let hidden = 32 + 4 * (idx / 900);
+        c.send_line(&format!(
+            "FTL1 {} DEPLOY stage-{seq}x16x{hidden} cluster-only ftl lane=gold",
+            9_000_000 + idx
+        ))?;
+    }
+    let (mut ok, mut shed) = (0usize, 0usize);
+    let mut terminals = 0usize;
+    while terminals < n {
+        let j = c.read_json()?;
+        match j.get("event")?.as_str()? {
+            "plan" | "sim" => continue,
+            "done" => {
+                terminals += 1;
+                match j.get("outcome")?.as_str()? {
+                    "OK" => ok += 1,
+                    "SHED" => shed += 1,
+                    other => bail!("unexpected burst outcome '{other}': {j}"),
+                }
+            }
+            "error" => bail!("burst request failed: {j}"),
+            other => bail!("unexpected burst event '{other}': {j}"),
+        }
+    }
+    ensure!(shed >= 1, "a {n}-deep burst into a capacity-6 shed lane must shed something (served {ok})");
+    Ok((ok, shed))
+}
+
+/// A client that floods `STATS` and never reads a byte back: the
+/// per-connection write queue must overflow and the front door must
+/// shed the connection (`frontend.slow_closed`) instead of wedging the
+/// event loop or stalling other clients.
+fn slow_reader_fault(addr: &str) -> Result<()> {
+    use std::io::Write;
+    let before = num(&scrape_stats(addr)?, &["frontend", "slow_closed"])?;
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    // ~1500 STATS replies are several MB against the 1 MiB write-queue
+    // cap the soak server runs with — the queue must trip no matter
+    // what the kernel socket buffers absorb. The server may shed us
+    // while the flood is still going out; only an *early* write
+    // failure is a harness error.
+    for i in 0..1500 {
+        if let Err(e) = stream.write_all(b"STATS\n") {
+            ensure!(i > 50, "slow-reader flood failed after only {i} writes: {e}");
+            break;
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if num(&scrape_stats(addr)?, &["frontend", "slow_closed"])? > before {
+            return Ok(());
+        }
+        ensure!(Instant::now() < deadline, "slow reader was never shed");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// One frame past `proto::MAX_FRAME_BYTES`: the front door must answer
+/// an `error` event on the frame's own id (`frontend.protocol_errors`)
+/// and keep the connection fully usable.
+fn oversized_frame_fault(addr: &str) -> Result<()> {
+    let mut c = WireClient::connect(addr)?;
+    let junk = "x".repeat(crate::serve::proto::MAX_FRAME_BYTES + 1024);
+    c.send_line(&format!("FTL1 4242 DEPLOY {junk} cluster-only ftl"))?;
+    let j = c.read_json()?;
+    ensure!(j.get("event")?.as_str()? == "error", "oversized frame must answer an error event: {j}");
+    ensure!(j.get("id")?.as_u64()? == 4242, "the error event must carry the frame's own id: {j}");
+    let pong = c.roundtrip("PING")?;
+    ensure!(pong.get("pong")?.as_bool()?, "connection must survive an oversized frame: {pong}");
+    Ok(())
+}
+
+/// Byte-flip the last payload byte of one *plan* entry in the segment
+/// files — preferring an entry whose fingerprint is in `warm_fps`, so
+/// the re-solve is observable on replay — and drop one garbage JSON
+/// envelope beside it. Returns the corrupted fingerprint when it was
+/// drawn from `warm_fps` (the loader must skip-and-count both files'
+/// damage either way).
+fn inject_corruption(dir: &Path, warm_fps: &BTreeSet<String>) -> Result<Option<String>> {
+    let paths = segment::segment_paths(dir);
+    ensure!(!paths.is_empty(), "no segment files to corrupt in {}", dir.display());
+    let mut fallback: Option<(PathBuf, segment::IndexEntry)> = None;
+    let mut target: Option<(PathBuf, segment::IndexEntry)> = None;
+    'scan: for path in paths.iter().rev() {
+        let view = segment::read_segment(path).map_err(|e| anyhow!("reading {}: {e:?}", path.display()))?;
+        for ie in &view.entries {
+            if ie.kind != 0 {
+                continue; // plan entries only (persist::KIND_PLAN)
+            }
+            if fallback.is_none() {
+                fallback = Some((path.clone(), *ie));
+            }
+            if warm_fps.contains(&ie.key.hex()) {
+                target = Some((path.clone(), *ie));
+                break 'scan;
+            }
+        }
+    }
+    let (path, ie, fp) = match target {
+        Some((p, ie)) => {
+            let hex = ie.key.hex();
+            (p, ie, Some(hex))
+        }
+        None => {
+            let (p, ie) = fallback.ok_or_else(|| anyhow!("no plan entries found in any segment"))?;
+            (p, ie, None)
+        }
+    };
+    let mut bytes = std::fs::read(&path)?;
+    let at = ie.offset + ie.len - 1;
+    ensure!(at < bytes.len(), "index points past the segment file");
+    // The per-entry checksum covers every payload byte: one flipped bit
+    // must fail exactly this entry, not the file.
+    bytes[at] ^= 0x01;
+    std::fs::write(&path, &bytes)?;
+    // And one well-named envelope with garbage content: the JSON
+    // loader must count it corrupt, not crash on it.
+    std::fs::write(dir.join("plan-ffffffffffffffffffffffffffffffff.json"), b"{ not json")?;
+    Ok(fp)
+}
+
+/// Render one wave's outcome record for `BENCH_soak.json`.
+fn wave_json(
+    wave: usize,
+    kind: &str,
+    rep: &WireWaveReport,
+    wall: Duration,
+    faults: &[&str],
+    checks: u64,
+) -> Json {
+    let mut lat: Vec<u64> =
+        rep.outcomes.iter().filter(|o| o.outcome == "OK").map(|o| o.latency_us).collect();
+    lat.sort_unstable();
+    let pct = |p: f64| -> Json {
+        if lat.is_empty() {
+            return Json::Null;
+        }
+        let idx = ((lat.len() - 1) as f64 * p).round() as usize;
+        Json::int(lat[idx] as usize)
+    };
+    Json::obj(vec![
+        ("wave", Json::int(wave)),
+        ("kind", Json::str(kind)),
+        ("requests", Json::int(rep.outcomes.len())),
+        ("ok", Json::int(rep.count("OK"))),
+        ("shed", Json::int(rep.count("SHED"))),
+        ("timeout", Json::int(rep.count("TIMEOUT"))),
+        ("v0", Json::int(rep.outcomes.iter().filter(|o| o.v0).count())),
+        ("plan_events", Json::int(rep.plan_events)),
+        ("sim_events", Json::int(rep.sim_events)),
+        ("latency_us", Json::obj(vec![("p50", pct(0.50)), ("p90", pct(0.90)), ("max", pct(1.0))])),
+        ("wall_ms", Json::Num(wall.as_secs_f64() * 1e3)),
+        ("throughput_rps", Json::Num(rep.outcomes.len() as f64 / wall.as_secs_f64().max(1e-9))),
+        ("faults", Json::Arr(faults.iter().map(|f| Json::str(*f)).collect())),
+        ("invariant_checks", Json::int(checks as usize)),
+    ])
+}
+
+/// Run the soak: the fixed three-wave skeleton (mixed + burst, warm
+/// replay behind a kill, replay through an injected corruption), then
+/// seeded churn waves, writing the trajectory report to
+/// `opts.out_path`. Returns the report.
+pub fn run(opts: &SoakOptions) -> Result<Json> {
+    ensure!(opts.waves >= 3, "soak needs at least 3 waves (mixed, warm replay, post-corruption replay)");
+    ensure!(opts.requests_per_wave >= 4, "soak waves need at least 4 requests to mix traffic");
+    std::fs::create_dir_all(&opts.cache_dir)
+        .with_context(|| format!("creating {}", opts.cache_dir.display()))?;
+    let run_start = Instant::now();
+    let mut rng = Rng::new(opts.seed);
+    let mut pool: Vec<String> = Vec::new();
+    let mut warm_ok: BTreeSet<String> = BTreeSet::new();
+    let mut fp_of: BTreeMap<String, String> = BTreeMap::new();
+    let mut waves_out: Vec<Json> = Vec::new();
+    let (mut kills, mut corruptions, mut checks) = (0u64, 0u64, 0u64);
+    let mut burst_counter = 0usize;
+    let burst_depth = if opts.smoke { 16 } else { 24 };
+
+    let mut server = Server::spawn(opts)?;
+    println!("[ftl-soak] seed {} · {} waves · server up at {}", opts.seed, opts.waves, server.addr);
+
+    // ---- wave 1: seeded mixed traffic + gold saturation burst ----
+    let mix = WireMix { total: opts.requests_per_wave, warm_pct: 40, v0_pct: 25, tight_deadline_pct: 8 };
+    let t = Instant::now();
+    let checks_before = checks;
+    let rep = seeded_wire_wave(&server.addr, &mut rng, &mix, &mut pool)?;
+    absorb(&rep, &mut warm_ok, &mut fp_of);
+    let (burst_ok, burst_shed) = gold_burst_fault(&server.addr, &mut burst_counter, burst_depth)?;
+    let stats = quiesce(&server.addr)?;
+    checks += check_invariants(&stats)?;
+    ensure!(
+        num(&stats, &["batch", "lanes", "gold", "shed"])? >= burst_shed as u64,
+        "the burst's sheds must be visible in the gold lane counters"
+    );
+    checks += 1;
+    // Exposition sanity: METRICS flattens the same tree, EOF-framed.
+    let mut mc = WireClient::connect(&server.addr)?;
+    mc.send_line("METRICS")?;
+    let metrics = mc.read_until("# EOF")?;
+    ensure!(metrics.len() > 10, "METRICS must expose the counter tree ({} lines)", metrics.len());
+    ensure!(metrics.iter().any(|l| l.contains("batch")), "METRICS must carry the batch counters");
+    checks += 2;
+    println!(
+        "[ftl-soak] wave 1 (mixed): {} ok / {} shed / {} timeout; burst served {burst_ok}, shed {burst_shed}",
+        rep.count("OK"),
+        rep.count("SHED"),
+        rep.count("TIMEOUT")
+    );
+    waves_out.push(wave_json(1, "mixed", &rep, t.elapsed(), &["gold-burst"], checks - checks_before));
+    pool = warm_ok.iter().cloned().collect();
+    ensure!(!pool.is_empty(), "wave 1 must leave at least one warm workload for the replay waves");
+
+    // ---- kill #1: SIGKILL after the write-behind settles ----
+    let settled = settle_persist(&server.addr)?;
+    server.kill()?;
+    kills += 1;
+    server = Server::spawn(opts)?;
+    let boot = scrape_stats(&server.addr)?;
+    ensure!(
+        num(&boot, &["persist", "loaded"])? == settled,
+        "warm start must load every entry settled before the SIGKILL ({} vs {settled})",
+        num(&boot, &["persist", "loaded"])?
+    );
+    ensure!(
+        num(&boot, &["persist", "skipped_corrupt"])? == 0,
+        "atomic segment writes must never leave a torn entry behind a SIGKILL"
+    );
+    checks += 2;
+    println!("[ftl-soak] kill #1 survived: {} entries warm-loaded at {}", settled, server.addr);
+
+    // ---- wave 2: pure warm replay, then client-side faults ----
+    let mix = WireMix { total: opts.requests_per_wave, warm_pct: 100, v0_pct: 25, tight_deadline_pct: 0 };
+    let t = Instant::now();
+    let checks_before = checks;
+    let rep = seeded_wire_wave(&server.addr, &mut rng, &mix, &mut pool)?;
+    for o in &rep.outcomes {
+        ensure!(
+            o.outcome == "OK" && o.cached && o.sim_cached,
+            "fully-warm replay must hit both caches: {} → {} (cached {}, sim_cached {})",
+            o.workload,
+            o.outcome,
+            o.cached,
+            o.sim_cached
+        );
+    }
+    absorb(&rep, &mut warm_ok, &mut fp_of);
+    let stats = quiesce(&server.addr)?;
+    ensure!(
+        num(&stats, &["solves"])? == 0 && num(&stats, &["sims"])? == 0,
+        "fully-warm replay must run zero solves and zero sims (got {} / {})",
+        num(&stats, &["solves"])?,
+        num(&stats, &["sims"])?
+    );
+    checks += 2;
+    slow_reader_fault(&server.addr)?;
+    checks += 1;
+    oversized_frame_fault(&server.addr)?;
+    let stats = scrape_stats(&server.addr)?;
+    ensure!(
+        num(&stats, &["frontend", "protocol_errors"])? >= 1,
+        "the oversized frame must be counted as a protocol error"
+    );
+    checks += 1;
+    checks += check_invariants(&quiesce(&server.addr)?)?;
+    println!(
+        "[ftl-soak] wave 2 (warm replay): {} ok, zero solver work; slow reader shed, oversized frame bounced",
+        rep.count("OK")
+    );
+    waves_out.push(wave_json(
+        2,
+        "warm-replay",
+        &rep,
+        t.elapsed(),
+        &["slow-reader", "oversized-frame"],
+        checks - checks_before,
+    ));
+
+    // ---- kill #2 + corruption injection ----
+    let settled = settle_persist(&server.addr)?;
+    server.kill()?;
+    kills += 1;
+    let warm_fps: BTreeSet<String> = fp_of.keys().cloned().collect();
+    let corrupted_fp = inject_corruption(&opts.cache_dir, &warm_fps)?;
+    corruptions += 1;
+    server = Server::spawn(opts)?;
+    let boot = scrape_stats(&server.addr)?;
+    ensure!(
+        num(&boot, &["persist", "skipped_corrupt"])? == 2,
+        "the flipped segment entry and the garbage envelope must each be counted (got {})",
+        num(&boot, &["persist", "skipped_corrupt"])?
+    );
+    ensure!(
+        num(&boot, &["persist", "loaded"])? == settled - 1,
+        "exactly the corrupted entry may be lost ({} loaded vs {} settled)",
+        num(&boot, &["persist", "loaded"])?,
+        settled
+    );
+    checks += 2;
+    println!(
+        "[ftl-soak] kill #2 + corruption survived: 2 skipped_corrupt, {} of {} entries warm",
+        settled - 1,
+        settled
+    );
+
+    // ---- wave 3: warm replay with exactly one hole ----
+    let t = Instant::now();
+    let checks_before = checks;
+    if let Some(fp) = &corrupted_fp {
+        let workload = fp_of.get(fp).expect("corruption target was drawn from fp_of");
+        let j = WireClient::connect(&server.addr)?
+            .roundtrip(&format!("DEPLOY {workload} cluster-only ftl"))?;
+        ensure!(
+            j.get("outcome")?.as_str()? == "OK" && !j.get("cached")?.as_bool()?,
+            "the corrupted plan must re-solve, not crash or serve stale bytes: {j}"
+        );
+        ensure!(
+            j.get("sim_cached")?.as_bool()?,
+            "the sim entry was not corrupted and must still hit: {j}"
+        );
+        checks += 2;
+    }
+    let mix = WireMix { total: opts.requests_per_wave, warm_pct: 100, v0_pct: 25, tight_deadline_pct: 0 };
+    let rep = seeded_wire_wave(&server.addr, &mut rng, &mix, &mut pool)?;
+    for o in &rep.outcomes {
+        ensure!(o.outcome == "OK", "post-corruption replay must serve everything: {} → {}", o.workload, o.outcome);
+    }
+    absorb(&rep, &mut warm_ok, &mut fp_of);
+    let stats = quiesce(&server.addr)?;
+    let solves = num(&stats, &["solves"])?;
+    match &corrupted_fp {
+        Some(_) => ensure!(solves == 1, "exactly the corrupted plan may re-solve (got {solves})"),
+        None => ensure!(solves <= 1, "at most the corrupted plan may re-solve (got {solves})"),
+    }
+    ensure!(num(&stats, &["sims"])? == 0, "the sim cache must stay fully warm through plan corruption");
+    checks += 2;
+    checks += check_invariants(&stats)?;
+    println!("[ftl-soak] wave 3 (replay through corruption): {} ok, {} re-solve", rep.count("OK"), solves);
+    waves_out.push(wave_json(
+        3,
+        "warm-replay",
+        &rep,
+        t.elapsed(),
+        &["segment-corruption", "json-corruption"],
+        checks - checks_before,
+    ));
+
+    // ---- waves 4..N: seeded churn — traffic + a fault + coin-flip restarts ----
+    for w in 4..=opts.waves {
+        let mix =
+            WireMix { total: opts.requests_per_wave, warm_pct: 50, v0_pct: 25, tight_deadline_pct: 8 };
+        let t = Instant::now();
+        let checks_before = checks;
+        let rep = seeded_wire_wave(&server.addr, &mut rng, &mix, &mut pool)?;
+        absorb(&rep, &mut warm_ok, &mut fp_of);
+        let fault = *rng.pick(&["gold-burst", "oversized-frame", "slow-reader"]);
+        match fault {
+            "gold-burst" => {
+                gold_burst_fault(&server.addr, &mut burst_counter, burst_depth)?;
+            }
+            "oversized-frame" => oversized_frame_fault(&server.addr)?,
+            _ => slow_reader_fault(&server.addr)?,
+        }
+        checks += 1;
+        checks += check_invariants(&quiesce(&server.addr)?)?;
+        println!(
+            "[ftl-soak] wave {w} (mixed churn): {} ok / {} shed / {} timeout; fault {fault}",
+            rep.count("OK"),
+            rep.count("SHED"),
+            rep.count("TIMEOUT")
+        );
+        waves_out.push(wave_json(w, "mixed", &rep, t.elapsed(), &[fault], checks - checks_before));
+        pool = warm_ok.iter().cloned().collect();
+        if w < opts.waves && rng.chance(0.5) {
+            settle_persist(&server.addr)?;
+            server.kill()?;
+            kills += 1;
+            server = Server::spawn(opts)?;
+            let boot = scrape_stats(&server.addr)?;
+            // Post-corruption boots keep re-skipping the damaged
+            // files; the loader must stay count-stable, never fatal.
+            ensure!(num(&boot, &["persist", "loaded"])? >= 1, "churn restart must warm-start");
+            ensure!(num(&boot, &["persist", "skipped_version"])? == 0, "no version skips on churn restart");
+            checks += 2;
+            println!("[ftl-soak] churn restart survived at {}", server.addr);
+        }
+    }
+
+    let final_stats = quiesce(&server.addr)?;
+    checks += check_invariants(&final_stats)?;
+    server.kill()?;
+
+    let report = Json::obj(vec![
+        ("schema", Json::str("ftl-soak-v1")),
+        ("seed", Json::int(opts.seed as usize)),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("requests_per_wave", Json::int(opts.requests_per_wave)),
+        ("kills", Json::int(kills as usize)),
+        ("corruptions", Json::int(corruptions as usize)),
+        ("invariant_checks", Json::int(checks as usize)),
+        ("distinct_workloads", Json::int(warm_ok.len())),
+        ("wall_ms", Json::Num(run_start.elapsed().as_secs_f64() * 1e3)),
+        ("waves", Json::Arr(waves_out)),
+    ]);
+    std::fs::write(&opts.out_path, format!("{}\n", report.pretty()))
+        .with_context(|| format!("writing {}", opts.out_path.display()))?;
+    println!(
+        "soak OK: seed={} waves={} kills={kills} corruptions={corruptions} invariant_checks={checks} → {}",
+        opts.seed,
+        opts.waves,
+        opts.out_path.display()
+    );
+    Ok(report)
+}

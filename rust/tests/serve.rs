@@ -694,7 +694,7 @@ fn background_snapshotter_writes_behind_without_explicit_flush() {
     let snap = Snapshotter::attach(
         svc.clone(),
         &dir,
-        PersistOptions { interval: Duration::from_millis(20), max_entries: 0, format: SnapshotFormat::Json },
+        PersistOptions { interval: Duration::from_millis(20), ..PersistOptions::default() },
     )
     .unwrap();
     svc.deploy("bg", &small_graph(), &cfg("cluster-only", Strategy::Ftl)).unwrap();
